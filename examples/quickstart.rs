@@ -1,0 +1,68 @@
+//! Quickstart: accelerate one diffusion sample with CHORDS.
+//!
+//! Uses the AOT-compiled DiT preset if artifacts are present, otherwise the
+//! analytic Gaussian-mixture model so the example always runs:
+//!
+//! ```sh
+//! cargo run --release --example quickstart            # gauss-mix
+//! make artifacts && cargo run --release --example quickstart -- sd35-sim
+//! ```
+
+use chords::config::preset;
+use chords::coordinator::{
+    discrete_init_sequence, sequential_solve, ChordsConfig, ChordsExecutor, InitStrategy,
+};
+use chords::engine::factory_for;
+use chords::metrics::fidelity;
+use chords::solvers::{Euler, TimeGrid};
+use chords::tensor::Tensor;
+use chords::util::rng::Rng;
+use chords::workers::CorePool;
+use std::sync::Arc;
+
+fn main() -> anyhow::Result<()> {
+    let model = std::env::args().nth(1).unwrap_or_else(|| "gauss-mix".to_string());
+    let cores = 4;
+    let steps = 50;
+
+    let p = preset(&model).expect("unknown preset");
+    println!("model: {} — {}", p.name, p.simulates);
+
+    // One engine per core, built inside its worker thread.
+    let factory = factory_for(p, "artifacts")?;
+    let pool = CorePool::new(cores, factory, Arc::new(Euler))?;
+    let grid = TimeGrid::uniform(steps);
+
+    // The initial latent: pure Gaussian noise (t=0 in the paper's convention).
+    let mut rng = Rng::seeded(42);
+    let x0 = Tensor::randn(&p.latent_dims(), &mut rng);
+
+    // Sequential oracle for comparison.
+    let oracle = sequential_solve(&pool, &grid, &x0);
+    println!("sequential: depth {} NFEs, {:.3}s", oracle.nfe_depth, oracle.wall_s);
+
+    // CHORDS with the paper's calibrated initialization sequence.
+    let seq = discrete_init_sequence(&InitStrategy::Paper, cores, steps);
+    println!("Î = {seq:?}");
+    let exec = ChordsExecutor::new(&pool, ChordsConfig::new(seq, grid));
+    let res = exec.run_streaming(&x0, |out| {
+        println!(
+            "  streamed: core {} at depth {:>2} → {:.2}x speedup",
+            out.core,
+            out.nfe_depth,
+            steps as f64 / out.nfe_depth as f64
+        );
+    });
+
+    let first = &res.outputs[0];
+    let fid = fidelity(&first.output, &oracle.output);
+    println!(
+        "\nfastest output: {:.2}x speedup, latent RMSE {:.4}, cosine {:.4}",
+        steps as f64 / first.nfe_depth as f64,
+        fid.latent_rmse,
+        fid.cosine
+    );
+    assert_eq!(res.final_output, oracle.output, "last output must equal sequential");
+    println!("last output identical to sequential: OK");
+    Ok(())
+}

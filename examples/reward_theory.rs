@@ -1,0 +1,50 @@
+//! Numerically reproduce the §2.3 theory: the reward surrogate, Theorem
+//! 2.5's optimal three-core initialization, and the calibrated-vs-uniform
+//! gap that motivates Table 3.
+//!
+//! ```sh
+//! cargo run --release --example reward_theory
+//! ```
+
+use chords::coordinator::reward::{reward, simulate_exp_final, speedup, theorem_optimal_k3};
+use chords::coordinator::continuous_init_sequence;
+
+fn main() {
+    println!("== Reward surrogate on f(x,t)=x, x0=1 (Def. 2.3/2.4) ==\n");
+
+    println!("Theorem 2.5 optima (K=3):");
+    for s in [2.0, 2.5, 3.0, 3.5, 4.0, 5.0] {
+        let opt = theorem_optimal_k3(s);
+        println!(
+            "  s={s:.1}  I=[0, {:.3}, {:.3}]   R={:.6}  x1={:.6}",
+            opt[1],
+            opt[2],
+            reward(&opt),
+            simulate_exp_final(&opt)
+        );
+    }
+
+    println!("\nOptimal middle-core placement vs alternatives (s=2.5):");
+    let opt = theorem_optimal_k3(2.5);
+    let t3 = opt[2];
+    for frac in [0.2, 0.35, 0.5, 0.65, 0.8] {
+        let alt = vec![0.0, t3 * frac, t3];
+        let marker = if (frac - 0.5f64).abs() < 1e-9 { "  ← Thm 2.5" } else { "" };
+        println!("  t2 = {:.3}·t3 → R = {:.6}{marker}", frac, reward(&alt));
+    }
+
+    println!("\nCalibrated (recursion) vs uniform at matched speedup:");
+    for k in [3usize, 4, 6, 8] {
+        let s = 10.0 / 3.0;
+        let rec = continuous_init_sequence(k, s);
+        let t_last = rec[k - 1];
+        let uni: Vec<f64> =
+            (0..k).map(|i| t_last * i as f64 / (k as f64 - 1.0)).collect();
+        println!(
+            "  K={k}: S={:.2}  R_calibrated={:.6}  R_uniform={:.6}",
+            speedup(&rec),
+            reward(&rec),
+            reward(&uni)
+        );
+    }
+}

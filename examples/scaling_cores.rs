@@ -1,0 +1,15 @@
+//! Fig. 4-style scaling study: how CHORDS behaves as cores are added.
+//!
+//! ```sh
+//! cargo run --release --example scaling_cores [preset]
+//! ```
+
+use chords::harness::{fig4, TableOpts};
+
+fn main() -> anyhow::Result<()> {
+    let model = std::env::args().nth(1).unwrap_or_else(|| "gauss-mix".to_string());
+    let opts = TableOpts { samples: 4, steps: 50, ..Default::default() };
+    let (_, report) = fig4(&opts, &model, &[1, 2, 3, 4, 5, 6, 7, 8])?;
+    println!("{report}");
+    Ok(())
+}

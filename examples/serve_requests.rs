@@ -1,0 +1,82 @@
+//! End-to-end serving driver (DESIGN.md deliverable (b)/E2E): starts the
+//! generation server, fires batched requests at it over TCP from several
+//! client threads, and reports latency/throughput percentiles per model.
+//!
+//! ```sh
+//! cargo run --release --example serve_requests            # analytic models
+//! make artifacts && cargo run --release --example serve_requests -- dit
+//! ```
+
+use chords::server::{Client, Router, Server};
+use chords::util::json::Json;
+use chords::util::stats::Summary;
+use std::sync::Arc;
+
+fn main() -> anyhow::Result<()> {
+    let use_dit = std::env::args().nth(1).as_deref() == Some("dit");
+    let models: Vec<&str> = if use_dit {
+        vec!["sd35-sim", "flux-sim"]
+    } else {
+        vec!["gauss-mix", "exp-ode"]
+    };
+
+    let router = Arc::new(Router::new("artifacts", 8));
+    let server = Server::start("127.0.0.1", 0, router.clone())?;
+    println!("server on {}", server.addr);
+
+    let requests_per_client = 4usize;
+    let clients = 3usize;
+
+    for model in &models {
+        let mut handles = Vec::new();
+        let t0 = std::time::Instant::now();
+        for c in 0..clients {
+            let addr = server.addr;
+            let model = model.to_string();
+            handles.push(std::thread::spawn(move || -> anyhow::Result<Vec<f64>> {
+                let mut client = Client::connect(addr)?;
+                let mut lats = Vec::new();
+                for i in 0..requests_per_client {
+                    let req = Json::obj(vec![
+                        ("op", Json::str("generate")),
+                        ("model", Json::str(&model)),
+                        ("seed", Json::num((c * 100 + i) as f64)),
+                        ("steps", Json::num(50.0)),
+                        ("cores", Json::num(4.0)),
+                        ("stream", Json::Bool(true)),
+                    ]);
+                    let t = std::time::Instant::now();
+                    let resp = client.call(&req)?;
+                    let last = resp.last().unwrap();
+                    anyhow::ensure!(
+                        last.get("type").and_then(|t| t.as_str()) == Some("result"),
+                        "request failed: {last:?}"
+                    );
+                    lats.push(t.elapsed().as_secs_f64());
+                }
+                Ok(lats)
+            }));
+        }
+        let mut lats = Vec::new();
+        for h in handles {
+            lats.extend(h.join().expect("client thread panicked")?);
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        let s = Summary::of(&lats);
+        println!(
+            "{model:<12} {} reqs in {wall:.2}s → {:.2} req/s | latency p50 {:.3}s p90 {:.3}s p99 {:.3}s",
+            lats.len(),
+            lats.len() as f64 / wall,
+            s.median,
+            s.p90,
+            s.p99
+        );
+    }
+
+    // Final server stats.
+    let mut c = Client::connect(server.addr)?;
+    let stats = c.call(&Json::obj(vec![("op", Json::str("stats"))]))?;
+    println!("server stats: {}", stats.last().unwrap().to_string_compact());
+    server.shutdown();
+    Ok(())
+}

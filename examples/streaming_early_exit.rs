@@ -1,0 +1,51 @@
+//! Diffusion streaming (paper §5): consume outputs as they improve and stop
+//! early once consecutive outputs agree — the "user-defined criteria" of
+//! Framework 2.2's termination rule.
+//!
+//! ```sh
+//! cargo run --release --example streaming_early_exit
+//! ```
+
+use chords::config::preset;
+use chords::coordinator::{
+    discrete_init_sequence, sequential_solve, ChordsConfig, ChordsExecutor, InitStrategy,
+};
+use chords::engine::factory_for;
+use chords::metrics::fidelity;
+use chords::solvers::{Euler, TimeGrid};
+use chords::tensor::Tensor;
+use chords::util::rng::Rng;
+use chords::workers::CorePool;
+use std::sync::Arc;
+
+fn main() -> anyhow::Result<()> {
+    let model = std::env::args().nth(1).unwrap_or_else(|| "gauss-mix".to_string());
+    let p = preset(&model).expect("unknown preset");
+    let cores = 8;
+    let steps = 50;
+
+    let factory = factory_for(p, "artifacts")?;
+    let pool = CorePool::new(cores, factory, Arc::new(Euler))?;
+    let grid = TimeGrid::uniform(steps);
+    let mut rng = Rng::seeded(7);
+    let x0 = Tensor::randn(&p.latent_dims(), &mut rng);
+    let oracle = sequential_solve(&pool, &grid, &x0);
+
+    for tol in [1e-4f32, 1e-3, 1e-2] {
+        let seq = discrete_init_sequence(&InitStrategy::Paper, cores, steps);
+        let mut cfg = ChordsConfig::new(seq, grid.clone());
+        cfg.early_exit_tol = Some(tol);
+        let exec = ChordsExecutor::new(&pool, cfg);
+        let res = exec.run(&x0);
+        let fid = fidelity(&res.final_output, &oracle.output);
+        println!(
+            "tol {tol:>7.0e}: exited {} after {} outputs at depth {:>2} → {:.2}x, RMSE {:.5}",
+            if res.early_exited { "EARLY" } else { "never" },
+            res.outputs.len(),
+            res.nfe_depth,
+            steps as f64 / res.nfe_depth as f64,
+            fid.latent_rmse,
+        );
+    }
+    Ok(())
+}

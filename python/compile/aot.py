@@ -1,0 +1,137 @@
+"""AOT compile path: lower each preset's drift to HLO *text* + manifest.
+
+Run as ``python -m compile.aot --out-dir ../artifacts`` (the Makefile's
+`artifacts` target). Per preset this emits:
+
+  artifacts/<preset>/drift.hlo.txt   — HLO text of f_θ(x, t)
+  artifacts/manifest.json            — entry index read by Rust
+  artifacts/golden.json              — seeded input/output vectors per
+                                       preset, cross-checked by the Rust
+                                       integration test (numeric parity
+                                       across the language boundary)
+
+HLO *text*, not ``.serialize()``: jax ≥ 0.5 emits HloModuleProto with
+64-bit instruction ids which xla_extension 0.5.1 (the version behind the
+Rust ``xla`` crate) rejects; the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+"""
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .model import make_drift
+from .presets import PRESETS
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants=True is load-bearing: the default HLO printer
+    # ELIDES large constant literals ("constant({...})"), and the xla 0.5.1
+    # text parser silently reads elided constants as zeros — the baked
+    # network weights would vanish and the denoiser would return ~0 drift.
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def golden_vector(preset, drift, pdir):
+    """Deterministic test vector: seeded input, t=0.5, full drift output.
+
+    The full tensors go to little-endian f32 binaries next to the HLO so the
+    Rust integration test (`rust/tests/hlo_roundtrip.rs`) can assert exact
+    numeric parity across the language boundary; the JSON carries prefixes
+    and norms for quick sanity checks.
+    """
+    key = jax.random.PRNGKey(preset.weight_seed ^ 0xDEAD)
+    x = jax.random.normal(key, (preset.tokens, preset.channels), dtype=jnp.float32)
+    t = jnp.float32(0.5)
+    (f,) = drift(x, t)
+    import numpy as np
+
+    x_np = np.asarray(jax.device_get(x), dtype="<f4")
+    f_np = np.asarray(jax.device_get(f), dtype="<f4")
+    x_np.tofile(os.path.join(pdir, "golden_x.bin"))
+    f_np.tofile(os.path.join(pdir, "golden_f.bin"))
+    return {
+        "t": 0.5,
+        "x_first8": [float(v) for v in x_np.reshape(-1)[:8]],
+        "f_first8": [float(v) for v in f_np.reshape(-1)[:8]],
+        "x_norm": float(jnp.linalg.norm(x)),
+        "f_norm": float(jnp.linalg.norm(f)),
+        "x_seed": preset.weight_seed ^ 0xDEAD,
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--presets", nargs="*", default=None, help="subset of preset names")
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    # Partial builds (--presets) must merge with the existing manifest and
+    # golden records rather than clobber them.
+    manifest_path = os.path.join(args.out_dir, "manifest.json")
+    golden_path = os.path.join(args.out_dir, "golden.json")
+    manifest = {"artifacts": []}
+    golden = {}
+    if args.presets:
+        if os.path.exists(manifest_path):
+            manifest = json.load(open(manifest_path))
+            manifest["artifacts"] = [
+                e for e in manifest["artifacts"] if e["preset"] not in args.presets
+            ]
+        if os.path.exists(golden_path):
+            golden = {
+                k: v for k, v in json.load(open(golden_path)).items() if k not in args.presets
+            }
+
+    for preset in PRESETS:
+        if args.presets and preset.name not in args.presets:
+            continue
+        print(f"[aot] lowering {preset.name} "
+              f"({preset.tokens}x{preset.channels}, depth {preset.depth}, "
+              f"heads {preset.heads}, {preset.param})")
+        drift = make_drift(preset)
+        x_spec = jax.ShapeDtypeStruct((preset.tokens, preset.channels), jnp.float32)
+        t_spec = jax.ShapeDtypeStruct((), jnp.float32)
+        lowered = jax.jit(drift).lower(x_spec, t_spec)
+        hlo = to_hlo_text(lowered)
+
+        pdir = os.path.join(args.out_dir, preset.name)
+        os.makedirs(pdir, exist_ok=True)
+        path = os.path.join(pdir, "drift.hlo.txt")
+        with open(path, "w") as fh:
+            fh.write(hlo)
+        digest = hashlib.sha256(hlo.encode()).hexdigest()[:16]
+        print(f"[aot]   wrote {path} ({len(hlo) / 1024:.0f} KiB, sha {digest})")
+
+        manifest["artifacts"].append(
+            {
+                "preset": preset.name,
+                "entry": "drift",
+                "path": f"{preset.name}/drift.hlo.txt",
+                "dims": [preset.tokens, preset.channels],
+                "param": preset.param,
+                "sha256_16": digest,
+            }
+        )
+        golden[preset.name] = golden_vector(preset, drift, pdir)
+
+    manifest["artifacts"].sort(key=lambda e: e["preset"])
+    with open(manifest_path, "w") as fh:
+        json.dump(manifest, fh, indent=1)
+    with open(golden_path, "w") as fh:
+        json.dump(golden, fh, indent=1)
+    print(f"[aot] manifest with {len(manifest['artifacts'])} entries → {args.out_dir}/manifest.json")
+
+
+if __name__ == "__main__":
+    main()

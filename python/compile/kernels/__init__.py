@@ -1,0 +1,12 @@
+"""L1 Pallas kernels for the DiT denoiser and CHORDS latent ops.
+
+Every kernel has a pure-jnp oracle in :mod:`ref`; pytest sweeps shapes with
+hypothesis and asserts allclose (the correctness contract of the layer).
+"""
+
+from .attention import attention
+from .fused_ln_mod import layernorm_mod
+from .solver_step import rectify, solver_step
+from . import ref
+
+__all__ = ["attention", "layernorm_mod", "rectify", "solver_step", "ref"]

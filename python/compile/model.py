@@ -1,0 +1,173 @@
+"""L2: the DiT denoiser — the simulated stand-in for the paper's
+production diffusion backbones (DESIGN.md §3).
+
+A small adaLN DiT over (tokens, channels) latents: sinusoidal time
+embedding → per-block modulation MLPs; each block is
+``x += gate·attn(LNmod(x)); x += gate·mlp(LNmod(x))`` with the attention
+and LN+modulation running through the L1 Pallas kernels, so they lower
+into the same HLO module that Rust executes.
+
+Weights are *seeded random* (not trained): CHORDS' behaviour depends only
+on ``f_θ`` being a smooth, expensive black box with the right
+parameterization. The output projection is down-scaled so drift magnitudes
+keep trajectories bounded on [0, 1] — mirroring the bounded drifts of real
+denoisers.
+
+The public entry point is :func:`make_drift` which returns the PF-ODE
+drift ``f_θ(x, t)`` under the paper's t=0-noise → t=1-data convention for
+either parameterization. Both heads are built to *transport* like real
+diffusion velocity fields (per-element |f| ≈ 1, strongly time-varying,
+stiffening toward the data end) — a too-tame drift would make every
+parallel solver look exact and erase the paper's comparisons:
+
+  * velocity: ``f = A·tanh(net) + rough(x, t)`` — a bounded flow-matching
+    velocity field whose high-curvature component peaks at early/mid times
+    (where posterior mode-switching concentrates curvature in real
+    diffusion — the same physics behind the paper's calibrated Î giving
+    slower solvers short early intervals) and decays toward t=1;
+  * epsilon: the network predicts noise ``ε̂ = tanh(net) + rough`` and
+    ``f = (x − ε̂) / max(t, t_floor)`` — the velocity implied by
+    ``x_t = t·x₁ + (1−t)·ε`` with a DDIM-style ε head (naturally stiff at
+    the noise end).
+"""
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import attention, layernorm_mod
+from .presets import Preset
+
+# Epsilon-parameterization time floor: keeps the implied velocity bounded
+# near the noise end (t→0) where the conversion is singular.
+T_FLOOR = 0.15
+
+# Predicted-data amplitude (the "dataset scale" of the simulated model).
+DATA_SCALE = 1.5
+
+# Rough component: real denoisers have high-frequency dependence on the
+# latent (posterior mode-switching / texture heads); a smooth drift makes
+# global fixed-point baselines (Picard) unrealistically strong. The sin
+# head injects a controlled Lipschitz boost of ≈ ROUGH_AMP·ROUGH_FREQ per
+# unit latent, gated to peak at t = ROUGH_T0 (early/mid trajectory, where
+# real diffusion curvature concentrates) and vanish toward t = 1.
+ROUGH_AMP = 0.5
+ROUGH_FREQ = 6.0
+ROUGH_T0 = 0.3
+ROUGH_WIDTH = 0.25
+
+
+def time_embedding(t, dim: int):
+    """Sinusoidal embedding of a scalar time (as in DiT/transformers)."""
+    half = dim // 2
+    freqs = jnp.exp(-math.log(10_000.0) * jnp.arange(half, dtype=jnp.float32) / half)
+    ang = t * freqs
+    return jnp.concatenate([jnp.cos(ang), jnp.sin(ang)])
+
+
+def init_params(preset: Preset):
+    """Seeded DiT parameters (deterministic per preset)."""
+    key = jax.random.PRNGKey(preset.weight_seed)
+    d = preset.channels
+    t_dim = 2 * d
+    params = {"blocks": []}
+    key, k1, k2 = jax.random.split(key, 3)
+    params["t_proj_w"] = jax.random.normal(k1, (t_dim, t_dim)) / math.sqrt(t_dim)
+    params["t_proj_b"] = jnp.zeros((t_dim,))
+    for _ in range(preset.depth):
+        keys = jax.random.split(key, 12)
+        key = keys[0]
+        s = 1.0 / math.sqrt(d)
+        block = {
+            # adaLN modulation: t-embedding → 6·d (scale/shift/gate ×2).
+            "mod_w": jax.random.normal(keys[1], (t_dim, 6 * d)) * (0.02 / math.sqrt(t_dim)),
+            "mod_b": jnp.zeros((6 * d,)),
+            "ln1_g": jnp.ones((d,)),
+            "ln1_b": jnp.zeros((d,)),
+            "ln2_g": jnp.ones((d,)),
+            "ln2_b": jnp.zeros((d,)),
+            "wq": jax.random.normal(keys[2], (d, d)) * s,
+            "wk": jax.random.normal(keys[3], (d, d)) * s,
+            "wv": jax.random.normal(keys[4], (d, d)) * s,
+            "wo": jax.random.normal(keys[5], (d, d)) * s,
+            "mlp_w1": jax.random.normal(keys[6], (d, 4 * d)) * s,
+            "mlp_b1": jnp.zeros((4 * d,)),
+            "mlp_w2": jax.random.normal(keys[7], (4 * d, d)) * (s / 2.0),
+            "mlp_b2": jnp.zeros((d,)),
+        }
+        params["blocks"].append(block)
+    key, ko, kr = jax.random.split(key, 3)
+    # Output head at unit scale; the drift heads bound it with tanh.
+    params["out_w"] = jax.random.normal(ko, (d, d)) * (1.0 / math.sqrt(d))
+    params["out_b"] = jnp.zeros((d,))
+    # Rough-detail head (see ROUGH_AMP/ROUGH_FREQ).
+    params["rough_w"] = jax.random.normal(kr, (d, d)) * (1.0 / math.sqrt(d))
+    return params
+
+
+def denoiser(params, preset: Preset, x, t):
+    """Network output (v̂ or ε̂ depending on the preset's head).
+
+    x: (tokens, channels) latent; t: scalar in [0, 1].
+    """
+    d = preset.channels
+    h = preset.heads
+    s = preset.tokens
+    hd = preset.head_dim
+
+    temb = time_embedding(t, 2 * d)
+    temb = jnp.tanh(params["t_proj_w"].T @ temb + params["t_proj_b"])
+
+    for blk in params["blocks"]:
+        mod = blk["mod_w"].T @ temb + blk["mod_b"]
+        sc1, sh1, g1, sc2, sh2, g2 = jnp.split(mod, 6)
+
+        # Attention sub-block (Pallas LN+mod, Pallas attention).
+        xn = layernorm_mod(x, blk["ln1_g"], blk["ln1_b"], sc1, sh1)
+        q = (xn @ blk["wq"]).reshape(s, h, hd).transpose(1, 0, 2)
+        k = (xn @ blk["wk"]).reshape(s, h, hd).transpose(1, 0, 2)
+        v = (xn @ blk["wv"]).reshape(s, h, hd).transpose(1, 0, 2)
+        att = attention(q, k, v)
+        att = att.transpose(1, 0, 2).reshape(s, d) @ blk["wo"]
+        x = x + g1 * att
+
+        # MLP sub-block.
+        xn = layernorm_mod(x, blk["ln2_g"], blk["ln2_b"], sc2, sh2)
+        hmid = jax.nn.gelu(xn @ blk["mlp_w1"] + blk["mlp_b1"], approximate=True)
+        x = x + g2 * (hmid @ blk["mlp_w2"] + blk["mlp_b2"])
+
+    return x @ params["out_w"] + params["out_b"]
+
+
+def make_drift(preset: Preset):
+    """Return ``drift(x, t) -> (f,)`` — the PF-ODE drift for the preset.
+
+    Returns a 1-tuple so the AOT lowering uses ``return_tuple=True``
+    uniformly (the Rust loader unwraps with ``to_tuple1``).
+    """
+    params = init_params(preset)
+
+    def drift(x, t):
+        out = denoiser(params, preset, x, t)
+        # High-curvature component, gated to the early/mid trajectory
+        # (posterior mode-switching happens early in real diffusion; the
+        # field is nearly linear near the data end).
+        gate = jnp.exp(-(((t - ROUGH_T0) / ROUGH_WIDTH) ** 2))
+        rough = ROUGH_AMP * gate * jnp.sin(ROUGH_FREQ * (x @ params["rough_w"]))
+        if preset.param == "velocity":
+            # Bounded flow-matching velocity (transports ~1.5·RMS over [0,1]).
+            f = DATA_SCALE * jnp.tanh(out) + rough
+        else:
+            # ε-prediction → implied velocity under x_t = t·x₁ + (1−t)·ε.
+            # Real ε-predictors are *consistent* at the noise end (x_t ≈ ε,
+            # so ε̂ → x as t → 0); a raw random head would make the implied
+            # velocity (x − ε̂)/t blow up and amplify every upstream error
+            # multiplicatively. The blend models that trained consistency
+            # while keeping genuine DDIM-style mild expansiveness.
+            eps_hat = (1.0 - t) * x + t * (jnp.tanh(out) + rough)
+            t_safe = jnp.maximum(t, T_FLOOR)
+            f = (x - eps_hat) / t_safe
+        return (f,)
+
+    return drift

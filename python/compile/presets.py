@@ -1,0 +1,37 @@
+"""Model presets — MUST mirror ``rust/src/config/presets.rs`` exactly.
+
+The Rust side owns the canonical table; this module re-declares the fields
+the compile path needs (the AOT manifest carries them back to Rust, and
+``python/tests/test_presets.py`` cross-checks this file against the Rust
+source text to prevent drift).
+"""
+
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class Preset:
+    name: str
+    tokens: int
+    channels: int
+    depth: int
+    heads: int
+    param: str  # "velocity" | "epsilon"
+    weight_seed: int
+
+    @property
+    def head_dim(self) -> int:
+        assert self.channels % self.heads == 0
+        return self.channels // self.heads
+
+
+# Order and values mirror rust/src/config/presets.rs (HloDit entries only).
+PRESETS = [
+    Preset("hunyuan-sim", tokens=128, channels=128, depth=4, heads=4, param="velocity", weight_seed=101),
+    Preset("wan-sim", tokens=160, channels=128, depth=4, heads=8, param="velocity", weight_seed=102),
+    Preset("cogvideo-sim", tokens=128, channels=96, depth=3, heads=4, param="epsilon", weight_seed=103),
+    Preset("sd35-sim", tokens=64, channels=128, depth=3, heads=4, param="velocity", weight_seed=104),
+    Preset("flux-sim", tokens=64, channels=96, depth=2, heads=3, param="velocity", weight_seed=105),
+]
+
+BY_NAME = {p.name: p for p in PRESETS}

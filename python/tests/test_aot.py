@@ -1,0 +1,122 @@
+"""AOT pipeline tests: HLO text emission, manifest schema, golden vectors,
+and the preset table's cross-language consistency with the Rust source."""
+
+import json
+import os
+import re
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.aot import to_hlo_text
+from compile.model import make_drift
+from compile.presets import BY_NAME, PRESETS
+
+jax.config.update("jax_platform_name", "cpu")
+
+RUST_PRESETS = os.path.join(os.path.dirname(__file__), "..", "..", "rust", "src", "config", "presets.rs")
+
+
+def test_hlo_text_contains_full_constants():
+    """Regression for the elided-constants bug: the HLO text must print
+    weight literals in full — xla 0.5.1's parser reads elided constants
+    ("...") as zeros, silently destroying the network."""
+    p = BY_NAME["flux-sim"]
+    drift = make_drift(p)
+    lowered = jax.jit(drift).lower(
+        jax.ShapeDtypeStruct((p.tokens, p.channels), jnp.float32),
+        jax.ShapeDtypeStruct((), jnp.float32),
+    )
+    text = to_hlo_text(lowered)
+    assert "f32[" in text and "ENTRY" in text
+    assert "..." not in text, "large constants were elided — rust would read zeros"
+    # The weight matrices are big; full printing means a large module.
+    assert len(text) > 1_000_000
+
+
+def test_presets_match_rust_source():
+    """The Python preset table must mirror rust/src/config/presets.rs."""
+    src = open(RUST_PRESETS).read()
+    blocks = re.findall(r"ModelPreset \{(.*?)\}", src, re.S)
+    rust = {}
+    for b in blocks:
+        if "weight_seed" not in b:
+            continue  # `impl ModelPreset {` block, not a table entry
+        get = lambda key: re.search(rf"\b{key}: ([^,]+),", b).group(1).strip()
+        name = get("name").strip('"')
+        if get("engine").endswith("HloDit"):
+            rust[name] = {
+                "tokens": int(get("tokens")),
+                "channels": int(get("channels")),
+                "depth": int(get("depth")),
+                "heads": int(get("heads")),
+                "param": "velocity" if "Velocity" in get("param") else "epsilon",
+                "weight_seed": int(get("weight_seed")),
+            }
+    assert set(rust) == {p.name for p in PRESETS}
+    for p in PRESETS:
+        r = rust[p.name]
+        assert (p.tokens, p.channels, p.depth, p.heads) == (
+            r["tokens"],
+            r["channels"],
+            r["depth"],
+            r["heads"],
+        ), p.name
+        assert p.param == r["param"], p.name
+        assert p.weight_seed == r["weight_seed"], p.name
+
+
+ARTIFACTS = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(ARTIFACTS, "manifest.json")),
+    reason="run `make artifacts` first",
+)
+def test_manifest_schema_and_files():
+    manifest = json.load(open(os.path.join(ARTIFACTS, "manifest.json")))
+    entries = manifest["artifacts"]
+    assert len(entries) == len(PRESETS)
+    for e in entries:
+        p = BY_NAME[e["preset"]]
+        assert e["entry"] == "drift"
+        assert e["dims"] == [p.tokens, p.channels]
+        assert e["param"] == p.param
+        assert os.path.exists(os.path.join(ARTIFACTS, e["path"]))
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(ARTIFACTS, "golden.json")),
+    reason="run `make artifacts` first",
+)
+def test_golden_vectors_reproducible():
+    """Re-evaluating the drift must reproduce the recorded golden outputs
+    (guards against preset/weight drift between artifact builds)."""
+    golden = json.load(open(os.path.join(ARTIFACTS, "golden.json")))
+    for name, rec in golden.items():
+        p = BY_NAME[name]
+        drift = make_drift(p)
+        key = jax.random.PRNGKey(rec["x_seed"])
+        x = jax.random.normal(key, (p.tokens, p.channels), dtype=jnp.float32)
+        (f,) = drift(x, jnp.float32(rec["t"]))
+        np.testing.assert_allclose(
+            np.asarray(f).reshape(-1)[:8], rec["f_first8"], rtol=1e-4, atol=1e-5
+        )
+        assert abs(float(jnp.linalg.norm(f)) - rec["f_norm"]) < 1e-2 * max(rec["f_norm"], 1.0)
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(ARTIFACTS, "golden.json")),
+    reason="run `make artifacts` first",
+)
+def test_golden_binaries_match_json_prefix():
+    golden = json.load(open(os.path.join(ARTIFACTS, "golden.json")))
+    for name, rec in golden.items():
+        p = BY_NAME[name]
+        x = np.fromfile(os.path.join(ARTIFACTS, name, "golden_x.bin"), dtype="<f4")
+        f = np.fromfile(os.path.join(ARTIFACTS, name, "golden_f.bin"), dtype="<f4")
+        assert x.size == f.size == p.tokens * p.channels
+        np.testing.assert_allclose(x[:8], rec["x_first8"], rtol=1e-6)
+        np.testing.assert_allclose(f[:8], rec["f_first8"], rtol=1e-6)

@@ -1,0 +1,147 @@
+"""L1 correctness: every Pallas kernel vs its pure-jnp oracle, swept over
+shapes/dtypes with hypothesis (the build-time correctness contract)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import attention, layernorm_mod, rectify, solver_step
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+SETTINGS = dict(max_examples=12, deadline=None)
+
+
+def rand(key, shape, dtype=jnp.float32):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, dtype=dtype)
+
+
+# ---------------------------------------------------------------- attention
+@settings(**SETTINGS)
+@given(
+    heads=st.sampled_from([1, 2, 4]),
+    seq=st.sampled_from([16, 32, 64, 96, 128]),
+    dh=st.sampled_from([8, 16, 24, 32]),
+    seed=st.integers(0, 2**16),
+)
+def test_attention_matches_ref(heads, seq, dh, seed):
+    q = rand(seed, (heads, seq, dh))
+    k = rand(seed + 1, (heads, seq, dh))
+    v = rand(seed + 2, (heads, seq, dh))
+    got = attention(q, k, v)
+    want = ref.attention_ref(q, k, v)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+def test_attention_block_sizes_equivalent():
+    q = rand(0, (2, 64, 16))
+    k = rand(1, (2, 64, 16))
+    v = rand(2, (2, 64, 16))
+    a = attention(q, k, v, block_q=64, block_k=64)
+    b = attention(q, k, v, block_q=16, block_k=8)
+    np.testing.assert_allclose(a, b, rtol=2e-5, atol=2e-5)
+
+
+def test_attention_softmax_rows_are_convex_combinations():
+    # Output rows must lie within the convex hull of V rows: max |out| ≤ max |v|.
+    q = rand(3, (1, 32, 8)) * 10.0  # sharp logits
+    k = rand(4, (1, 32, 8))
+    v = rand(5, (1, 32, 8))
+    out = attention(q, k, v)
+    assert float(jnp.max(jnp.abs(out))) <= float(jnp.max(jnp.abs(v))) + 1e-5
+
+
+# ----------------------------------------------------------- layernorm_mod
+@settings(**SETTINGS)
+@given(
+    seq=st.sampled_from([8, 32, 64, 160]),
+    dim=st.sampled_from([16, 96, 128]),
+    seed=st.integers(0, 2**16),
+)
+def test_layernorm_mod_matches_ref(seq, dim, seed):
+    x = rand(seed, (seq, dim))
+    gamma = rand(seed + 1, (dim,)) * 0.1 + 1.0
+    beta = rand(seed + 2, (dim,)) * 0.1
+    scale = rand(seed + 3, (dim,)) * 0.2
+    shift = rand(seed + 4, (dim,)) * 0.2
+    got = layernorm_mod(x, gamma, beta, scale, shift)
+    want = ref.layernorm_mod_ref(x, gamma, beta, scale, shift)
+    np.testing.assert_allclose(got, want, rtol=3e-5, atol=3e-5)
+
+
+def test_layernorm_output_is_normalized_without_modulation():
+    x = rand(9, (32, 64)) * 5.0 + 3.0
+    d = 64
+    out = layernorm_mod(x, jnp.ones((d,)), jnp.zeros((d,)), jnp.zeros((d,)), jnp.zeros((d,)))
+    np.testing.assert_allclose(np.mean(np.asarray(out), axis=-1), 0.0, atol=1e-5)
+    np.testing.assert_allclose(np.std(np.asarray(out), axis=-1), 1.0, atol=1e-3)
+
+
+# ------------------------------------------------------- solver_step/rectify
+@settings(**SETTINGS)
+@given(
+    seq=st.sampled_from([8, 64, 128]),
+    dim=st.sampled_from([16, 96, 128]),
+    dt=st.floats(-0.5, 0.5),
+    seed=st.integers(0, 2**16),
+)
+def test_solver_step_matches_ref(seq, dim, dt, seed):
+    x = rand(seed, (seq, dim))
+    f = rand(seed + 1, (seq, dim))
+    got = solver_step(x, f, jnp.float32(dt))
+    want = ref.solver_step_ref(x, f, jnp.float32(dt))
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+
+
+@settings(**SETTINGS)
+@given(
+    seq=st.sampled_from([8, 64]),
+    dim=st.sampled_from([16, 128]),
+    dt=st.floats(0.0, 0.5),
+    seed=st.integers(0, 2**16),
+)
+def test_rectify_matches_ref(seq, dim, dt, seed):
+    keys = [rand(seed + i, (seq, dim)) for i in range(5)]
+    x, xa, xc, fa, fc = keys
+    got = rectify(x, xa, xc, fa, fc, jnp.float32(dt))
+    want = ref.rectify_ref(x, xa, xc, fa, fc, jnp.float32(dt))
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+
+
+def test_rectify_identical_states_is_noop():
+    x = rand(1, (16, 16))
+    xa = rand(2, (16, 16))
+    got = rectify(x, xa, xa, xa, xa, jnp.float32(0.3))
+    np.testing.assert_allclose(got, x, rtol=1e-6, atol=1e-6)
+
+
+def test_rectify_consistent_with_rust_semantics():
+    # Mirror of rust/src/tensor/ops.rs::tests::rectify_matches_formula.
+    x = jnp.ones((1, 2))
+    fa = jnp.array([[2.0, 0.0]])
+    fc = jnp.array([[1.0, 1.0]])
+    xa = jnp.array([[0.5, 0.5]])
+    xc = jnp.array([[0.0, 1.0]])
+    out = rectify(x, xa, xc, fa, fc, jnp.float32(0.1))
+    np.testing.assert_allclose(
+        out, np.array([[1.0 + 0.1 + 0.5, 1.0 - 0.1 - 0.5]]), rtol=1e-6
+    )
+
+
+# --------------------------------------------------------------- jit parity
+def test_kernels_identical_under_jit():
+    """The AOT path jits everything; eager and jitted must agree."""
+    q = rand(0, (2, 32, 16))
+    np.testing.assert_allclose(
+        attention(q, q, q), jax.jit(attention)(q, q, q), rtol=1e-5, atol=1e-5
+    )
+    x = rand(1, (32, 64))
+    f = rand(2, (32, 64))
+    np.testing.assert_allclose(
+        solver_step(x, f, jnp.float32(0.1)),
+        jax.jit(solver_step)(x, f, jnp.float32(0.1)),
+        rtol=1e-6,
+    )

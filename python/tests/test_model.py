@@ -1,0 +1,121 @@
+"""L2 model tests: DiT denoiser shapes, determinism, smoothness, drift
+parameterizations, and the transport properties the substitution relies on
+(DESIGN.md §3)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.model import denoiser, init_params, make_drift, time_embedding
+from compile.presets import BY_NAME, PRESETS
+
+jax.config.update("jax_platform_name", "cpu")
+
+SMALL = BY_NAME["flux-sim"]
+
+
+def latent(preset, seed=0):
+    return jax.random.normal(jax.random.PRNGKey(seed), (preset.tokens, preset.channels))
+
+
+def test_time_embedding_shape_and_range():
+    emb = time_embedding(jnp.float32(0.3), 128)
+    assert emb.shape == (128,)
+    assert float(jnp.max(jnp.abs(emb))) <= 1.0 + 1e-6
+
+
+def test_time_embedding_distinguishes_times():
+    a = time_embedding(jnp.float32(0.1), 64)
+    b = time_embedding(jnp.float32(0.9), 64)
+    assert float(jnp.linalg.norm(a - b)) > 0.1
+
+
+@pytest.mark.parametrize("name", [p.name for p in PRESETS])
+def test_drift_shapes_all_presets(name):
+    p = BY_NAME[name]
+    drift = make_drift(p)
+    x = latent(p)
+    (f,) = drift(x, jnp.float32(0.5))
+    assert f.shape == (p.tokens, p.channels)
+    assert bool(jnp.all(jnp.isfinite(f)))
+
+
+def test_params_deterministic_per_seed():
+    a = init_params(SMALL)
+    b = init_params(SMALL)
+    np.testing.assert_array_equal(a["out_w"], b["out_w"])
+    np.testing.assert_array_equal(a["blocks"][0]["wq"], b["blocks"][0]["wq"])
+
+
+def test_different_presets_have_different_weights():
+    a = init_params(BY_NAME["sd35-sim"])
+    b = init_params(BY_NAME["hunyuan-sim"])
+    assert a["out_w"].shape == b["out_w"].shape  # both d=128
+    assert float(jnp.linalg.norm(a["out_w"] - b["out_w"])) > 0.1
+
+
+def test_drift_depends_on_time_and_state():
+    drift = make_drift(SMALL)
+    x = latent(SMALL, 1)
+    (f1,) = drift(x, jnp.float32(0.2))
+    (f2,) = drift(x, jnp.float32(0.8))
+    assert float(jnp.linalg.norm(f1 - f2)) > 1e-3, "drift ignores t"
+    (f3,) = drift(latent(SMALL, 2), jnp.float32(0.2))
+    assert float(jnp.linalg.norm(f1 - f3)) > 1e-3, "drift ignores x"
+
+
+def test_drift_magnitude_transports():
+    # Per-element drift RMS ≈ O(1): the flow genuinely transports latents
+    # (the property the method comparison depends on; see model.py docs).
+    drift = make_drift(SMALL)
+    x = latent(SMALL, 3)
+    (f,) = drift(x, jnp.float32(0.5))
+    rms = float(jnp.sqrt(jnp.mean(f**2)))
+    assert 0.3 < rms < 3.0, rms
+
+
+def test_drift_lipschitz_moderate():
+    # Finite-difference smoothness: small input perturbations produce
+    # proportionally bounded drift changes (rectification's Prop 2.1 regime).
+    drift = make_drift(SMALL)
+    x = latent(SMALL, 4)
+    eps = 1e-3
+    dx = jax.random.normal(jax.random.PRNGKey(5), x.shape) * eps
+    (f1,) = drift(x, jnp.float32(0.4))
+    (f2,) = drift(x + dx, jnp.float32(0.4))
+    gain = float(jnp.linalg.norm(f2 - f1) / jnp.linalg.norm(dx))
+    assert gain < 30.0, f"drift too rough: {gain}"
+
+
+def test_trajectories_bounded_over_unit_time():
+    drift = jax.jit(make_drift(SMALL))
+    x = latent(SMALL, 6)
+    n = 50
+    for i in range(n):
+        (f,) = drift(x, jnp.float32(i / n))
+        x = x + f / n
+    rms = float(jnp.sqrt(jnp.mean(x**2)))
+    assert rms < 10.0, f"trajectory blew up: {rms}"
+    assert bool(jnp.all(jnp.isfinite(x)))
+
+
+def test_epsilon_param_uses_conversion():
+    p = BY_NAME["cogvideo-sim"]
+    assert p.param == "epsilon"
+    drift = make_drift(p)
+    x = latent(p, 7)
+    (f,) = drift(x, jnp.float32(0.5))
+    assert bool(jnp.all(jnp.isfinite(f)))
+    # Near t=0 the conversion is floored, not singular.
+    (f0,) = drift(x, jnp.float32(0.0))
+    assert bool(jnp.all(jnp.isfinite(f0)))
+
+
+def test_denoiser_jit_parity():
+    p = SMALL
+    params = init_params(p)
+    x = latent(p, 8)
+    eager = denoiser(params, p, x, jnp.float32(0.3))
+    jitted = jax.jit(lambda x, t: denoiser(params, p, x, t))(x, jnp.float32(0.3))
+    np.testing.assert_allclose(eager, jitted, rtol=5e-5, atol=5e-5)

@@ -1,0 +1,58 @@
+//! Hot-path micro-benchmarks (L3 optimization targets, DESIGN.md §8):
+//! rectification AXPY, solver step arithmetic, worker round-trip, and the
+//! mixture drift evaluation. Run with `cargo bench --bench bench_hotpath`.
+
+use chords::engine::{DriftEngine, ExpOdeFactory, GaussMixture, MixtureSpec};
+use chords::solvers::Euler;
+use chords::tensor::{ops, Tensor};
+use chords::util::bench::bench;
+use chords::util::rng::Rng;
+use chords::workers::{CorePool, Job};
+use std::sync::Arc;
+
+fn main() {
+    println!("== hot-path micro benches ==");
+    let mut rng = Rng::seeded(1);
+
+    // The paper-scale latent: hunyuan-sim is 128×128 = 16384 floats.
+    for numel in [2048usize, 16384, 65536] {
+        let dims = [numel];
+        let x_acc = Tensor::randn(&dims, &mut rng);
+        let x_coarse = Tensor::randn(&dims, &mut rng);
+        let f_acc = Tensor::randn(&dims, &mut rng);
+        let f_coarse = Tensor::randn(&dims, &mut rng);
+        let mut target = Tensor::randn(&dims, &mut rng);
+        bench(&format!("rectify_into/{numel}"), 0.3, || {
+            ops::rectify_into(&mut target, 0.02, &f_acc, &f_coarse, &x_acc, &x_coarse);
+        });
+        let mut x = Tensor::randn(&dims, &mut rng);
+        bench(&format!("axpy_into/{numel}"), 0.3, || {
+            ops::axpy_into(&mut x, 0.02, &f_acc);
+            // keep values bounded
+            if x.data()[0].abs() > 1e3 {
+                x.clear();
+            }
+        });
+        let a = Tensor::randn(&dims, &mut rng);
+        bench(&format!("rmse/{numel}"), 0.3, || {
+            std::hint::black_box(ops::rmse(&a, &x_acc));
+        });
+    }
+
+    // Mixture drift (the analytic engine used across tests/benches).
+    let spec = MixtureSpec::random(vec![16], 8, 3);
+    let mut eng = GaussMixture::new(spec, 0);
+    let x = Tensor::randn(&[16], &mut rng);
+    bench("gauss_mixture_drift/16d8c", 0.3, || {
+        std::hint::black_box(eng.drift(&x, 0.4));
+    });
+
+    // Worker round-trip: the per-step coordination overhead per core.
+    let pool = CorePool::new(1, Arc::new(ExpOdeFactory::new(vec![16384], 0)), Arc::new(Euler))
+        .expect("pool");
+    let x = Tensor::randn(&[16384], &mut rng);
+    bench("worker_roundtrip_step/16384", 0.5, || {
+        let r = pool.run_one(0, Job::Step { x: x.clone(), t: 0.3, t2: 0.32 });
+        std::hint::black_box(r.out);
+    });
+}

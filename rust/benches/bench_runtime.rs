@@ -1,0 +1,40 @@
+//! PJRT runtime benches: artifact compile time and per-NFE execution latency
+//! for every AOT preset present in `artifacts/` (skips cleanly when
+//! artifacts have not been built).
+
+use chords::runtime::{HloEngine, Manifest};
+use chords::tensor::Tensor;
+use chords::util::bench::{bench, bench_n};
+use chords::util::rng::Rng;
+
+fn main() {
+    println!("== PJRT runtime benches ==");
+    let manifest = match Manifest::load("artifacts") {
+        Ok(m) => m,
+        Err(_) => {
+            println!("(artifacts/ not built — run `make artifacts`; skipping runtime benches)");
+            return;
+        }
+    };
+    let mut rng = Rng::seeded(9);
+    for entry in &manifest.entries {
+        if entry.entry != "drift" {
+            continue;
+        }
+        let name = format!("{}/{}", entry.preset, entry.entry);
+        // Compile cost (per worker at pool startup).
+        let text = std::fs::read_to_string(&entry.path).expect("artifact readable");
+        bench_n(&format!("compile/{name}"), 0, 3, || {
+            let e = HloEngine::from_text(&text, entry.dims.clone(), name.clone()).expect("compile");
+            std::hint::black_box(e);
+        });
+        // Per-NFE execution latency.
+        let mut eng =
+            HloEngine::from_text(&text, entry.dims.clone(), name.clone()).expect("compile");
+        let x = Tensor::randn(&entry.dims, &mut rng);
+        use chords::engine::DriftEngine;
+        bench(&format!("drift/{name}"), 1.0, || {
+            std::hint::black_box(eng.drift(&x, 0.5));
+        });
+    }
+}

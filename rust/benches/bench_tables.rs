@@ -1,0 +1,55 @@
+//! End-to-end table benches — one timed entry per paper table/figure
+//! (DESIGN.md §5 maps each to its harness generator). These run the full
+//! multi-core pipelines; `cargo bench --bench bench_tables`.
+//!
+//! Presets: uses the analytic `gauss-mix` engine by default so benches run
+//! without artifacts; set CHORDS_BENCH_DIT=1 (after `make artifacts`) to
+//! bench on the AOT DiT presets the tables actually use.
+
+use chords::harness::{fig4, fig5, table1, table2, table3, table4, TableOpts};
+use chords::util::bench::bench_n;
+
+fn main() {
+    let dit = std::env::var("CHORDS_BENCH_DIT").is_ok();
+    let opts = TableOpts { samples: 2, steps: 50, ..Default::default() };
+
+    println!("== paper-table end-to-end benches (dit={dit}) ==");
+
+    if dit {
+        bench_n("table1/video-presets", 0, 3, || {
+            table1(&opts).expect("table1");
+        });
+        bench_n("table2/image-presets", 0, 3, || {
+            table2(&opts).expect("table2");
+        });
+        bench_n("table3/init-ablation", 0, 3, || {
+            table3(&opts, &["hunyuan-sim", "flux-sim"]).expect("table3");
+        });
+        bench_n("table4/steps-sweep", 0, 3, || {
+            table4(&opts, "hunyuan-sim").expect("table4");
+        });
+        bench_n("fig4/core-scaling", 0, 3, || {
+            fig4(&opts, "hunyuan-sim", &[2, 4, 6, 8]).expect("fig4");
+        });
+        bench_n("fig5/convergence", 0, 3, || {
+            fig5(&opts, "hunyuan-sim", 8).expect("fig5");
+        });
+    } else {
+        bench_n("table3/init-ablation/gauss-mix", 0, 5, || {
+            table3(&opts, &["gauss-mix"]).expect("table3");
+        });
+        bench_n("table4/steps-sweep/gauss-mix", 0, 5, || {
+            table4(&opts, "gauss-mix").expect("table4");
+        });
+        bench_n("fig4/core-scaling/gauss-mix", 0, 5, || {
+            fig4(&opts, "gauss-mix", &[2, 4, 6, 8]).expect("fig4");
+        });
+        bench_n("fig5/convergence/gauss-mix", 0, 5, || {
+            fig5(&opts, "gauss-mix", 8).expect("fig5");
+        });
+        // Method grid (Tables 1–2 structure) on the analytic preset.
+        bench_n("method-grid/gauss-mix", 0, 3, || {
+            chords::harness::run_method_grid(&["gauss-mix"], &opts).expect("grid");
+        });
+    }
+}

@@ -1,0 +1,15 @@
+//! Configuration system: model presets, solver/run configuration, CLI
+//! overrides.
+//!
+//! The paper evaluates five production models (HunyuanVideo, Wan2.1,
+//! CogVideoX1.5, SD3.5-Large, Flux). We mirror them as *simulated presets*
+//! (`*-sim`): DiT denoisers whose depth/width/token-count and noise-schedule
+//! parameterization vary along the same axes (see DESIGN.md §3). Analytic
+//! presets (exp ODE, Gaussian mixture) support the theory experiments and
+//! fast property tests.
+
+mod presets;
+mod run_cfg;
+
+pub use presets::*;
+pub use run_cfg::*;

@@ -1,0 +1,217 @@
+//! Model presets mirroring the paper's evaluation models.
+
+/// How the denoiser output parameterizes the PF-ODE drift.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Parameterization {
+    /// Flow-matching / rectified-flow velocity prediction: `f = v_θ(x,t)`.
+    /// Used by SD3.5 / Flux / Wan-style models (Euler solver).
+    Velocity,
+    /// DDIM-style epsilon prediction converted to drift under a linear
+    /// schedule (paper Eq. 1 with the t=0-is-noise convention).
+    Epsilon,
+}
+
+/// The backing compute for `f_θ`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EngineKind {
+    /// AOT-compiled DiT via PJRT (artifacts/<preset>/drift.hlo.txt).
+    HloDit,
+    /// Closed-form exponential ODE `f(x,t)=x` (theory experiments).
+    AnalyticExp,
+    /// Gaussian-mixture probability-flow velocity field (closed form).
+    GaussMixture,
+}
+
+/// A model preset: everything needed to build engines + run experiments.
+#[derive(Clone, Debug)]
+pub struct ModelPreset {
+    /// Stable identifier, e.g. "hunyuan-sim".
+    pub name: &'static str,
+    /// Which production model this preset simulates (doc only).
+    pub simulates: &'static str,
+    /// Latent shape (tokens, channels) fed to the denoiser.
+    pub tokens: usize,
+    pub channels: usize,
+    /// DiT hyperparameters (ignored by analytic engines).
+    pub depth: usize,
+    pub heads: usize,
+    /// Drift parameterization.
+    pub param: Parameterization,
+    /// Engine backing.
+    pub engine: EngineKind,
+    /// Default diffusion steps N.
+    pub default_steps: usize,
+    /// Simulated extra per-NFE cost in microseconds (0 = none). Models the
+    /// paper's regime where the network forward dominates; lets wall-clock
+    /// ratios on CPU mirror the GPU regime. Applied on top of real compute.
+    pub sim_cost_us: u64,
+    /// Weight seed so the DiT is reproducible across Python & Rust runs.
+    pub weight_seed: u64,
+}
+
+impl ModelPreset {
+    pub fn latent_dims(&self) -> Vec<usize> {
+        vec![self.tokens, self.channels]
+    }
+
+    pub fn numel(&self) -> usize {
+        self.tokens * self.channels
+    }
+
+    /// Whether this preset requires AOT artifacts on disk.
+    pub fn needs_artifacts(&self) -> bool {
+        self.engine == EngineKind::HloDit
+    }
+}
+
+/// All registered presets. Video presets have more tokens (latent frames),
+/// image presets fewer; depth/width ordering follows the real models' sizes.
+pub const PRESETS: &[ModelPreset] = &[
+    // ---- video (Table 1) ----
+    ModelPreset {
+        name: "hunyuan-sim",
+        simulates: "HunyuanVideo (13B, flow-matching video DiT)",
+        tokens: 128,
+        channels: 128,
+        depth: 4,
+        heads: 4,
+        param: Parameterization::Velocity,
+        engine: EngineKind::HloDit,
+        default_steps: 50,
+        sim_cost_us: 0,
+        weight_seed: 101,
+    },
+    ModelPreset {
+        name: "wan-sim",
+        simulates: "Wan2.1 (14B, flow-matching video DiT)",
+        tokens: 160,
+        channels: 128,
+        depth: 4,
+        heads: 8,
+        param: Parameterization::Velocity,
+        engine: EngineKind::HloDit,
+        default_steps: 50,
+        sim_cost_us: 0,
+        weight_seed: 102,
+    },
+    ModelPreset {
+        name: "cogvideo-sim",
+        simulates: "CogVideoX1.5-5B (DDIM video DiT)",
+        tokens: 128,
+        channels: 96,
+        depth: 3,
+        heads: 4,
+        param: Parameterization::Epsilon,
+        engine: EngineKind::HloDit,
+        default_steps: 50,
+        sim_cost_us: 0,
+        weight_seed: 103,
+    },
+    // ---- image (Table 2) ----
+    ModelPreset {
+        name: "sd35-sim",
+        simulates: "Stable Diffusion 3.5 Large (flow-matching image DiT)",
+        tokens: 64,
+        channels: 128,
+        depth: 3,
+        heads: 4,
+        param: Parameterization::Velocity,
+        engine: EngineKind::HloDit,
+        default_steps: 50,
+        sim_cost_us: 0,
+        weight_seed: 104,
+    },
+    ModelPreset {
+        name: "flux-sim",
+        simulates: "Flux.1-dev (flow-matching image DiT)",
+        tokens: 64,
+        channels: 96,
+        depth: 2,
+        heads: 3,
+        param: Parameterization::Velocity,
+        engine: EngineKind::HloDit,
+        default_steps: 50,
+        sim_cost_us: 0,
+        weight_seed: 105,
+    },
+    // ---- analytic (theory / property tests / fast benches) ----
+    ModelPreset {
+        name: "exp-ode",
+        simulates: "Def. 2.4 surrogate: f(x,t)=x, x0=1",
+        tokens: 1,
+        channels: 16,
+        depth: 0,
+        heads: 0,
+        param: Parameterization::Velocity,
+        engine: EngineKind::AnalyticExp,
+        default_steps: 50,
+        sim_cost_us: 0,
+        weight_seed: 0,
+    },
+    ModelPreset {
+        name: "gauss-mix",
+        simulates: "Gaussian-mixture PF-ODE with exact NLL quality metric",
+        tokens: 1,
+        channels: 16,
+        depth: 0,
+        heads: 0,
+        param: Parameterization::Velocity,
+        engine: EngineKind::GaussMixture,
+        default_steps: 50,
+        sim_cost_us: 0,
+        weight_seed: 7,
+    },
+];
+
+/// Look up a preset by name.
+pub fn preset(name: &str) -> Option<&'static ModelPreset> {
+    PRESETS.iter().find(|p| p.name == name)
+}
+
+/// Names of the video presets (Table 1).
+pub fn video_presets() -> Vec<&'static ModelPreset> {
+    PRESETS.iter().filter(|p| p.name.contains("hunyuan") || p.name.contains("wan") || p.name.contains("cogvideo")).collect()
+}
+
+/// Names of the image presets (Table 2).
+pub fn image_presets() -> Vec<&'static ModelPreset> {
+    PRESETS.iter().filter(|p| p.name.contains("sd35") || p.name.contains("flux")).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lookup_by_name() {
+        assert!(preset("hunyuan-sim").is_some());
+        assert!(preset("nope").is_none());
+    }
+
+    #[test]
+    fn preset_partitions() {
+        assert_eq!(video_presets().len(), 3);
+        assert_eq!(image_presets().len(), 2);
+    }
+
+    #[test]
+    fn names_unique() {
+        let mut names: Vec<_> = PRESETS.iter().map(|p| p.name).collect();
+        names.sort();
+        names.dedup();
+        assert_eq!(names.len(), PRESETS.len());
+    }
+
+    #[test]
+    fn hlo_presets_need_artifacts() {
+        assert!(preset("sd35-sim").unwrap().needs_artifacts());
+        assert!(!preset("exp-ode").unwrap().needs_artifacts());
+    }
+
+    #[test]
+    fn latent_dims_match_numel() {
+        for p in PRESETS {
+            assert_eq!(p.latent_dims().iter().product::<usize>(), p.numel());
+        }
+    }
+}

@@ -1,0 +1,469 @@
+//! The CHORDS executor — Algorithm 1 over a worker pool.
+//!
+//! Lockstep execution: every step, all active cores advance one slot in
+//! parallel (phase 1: drifts + step updates on the workers), then
+//! rectification corrections are applied (phase 2: cheap fused AXPY on the
+//! coordinator thread, using drifts cached from phase 1 — zero extra NFEs),
+//! then states commit. Streaming outputs: core K emits first, core 1 last;
+//! core 1's output is bit-identical to the sequential solver.
+
+use super::events::TraceEvent;
+use super::rectify::apply_rectification;
+use super::scheduler::Scheduler;
+use crate::solvers::TimeGrid;
+use crate::tensor::{ops, Tensor};
+use crate::util::timer::Timer;
+use crate::workers::{CorePool, Job};
+
+/// Configuration for one CHORDS run.
+#[derive(Clone, Debug)]
+pub struct ChordsConfig {
+    /// Discrete initialization sequence `Î` (see [`super::init_seq`]).
+    pub seq: Vec<usize>,
+    /// Time grid (N steps).
+    pub grid: TimeGrid,
+    /// Early termination: stop when two consecutive streamed outputs agree
+    /// to this per-element RMSE (§2.2 "user-defined criteria").
+    pub early_exit_tol: Option<f32>,
+    /// Record per-step trace events (Fig. 2 visualization / tests).
+    pub record_trace: bool,
+    /// Ablation switch: skip the Eq. 3 communication entirely, leaving a
+    /// pure hierarchy of independently-bootstrapped solvers. Quantifies
+    /// what rectification buys (the `chords ablate` experiment).
+    pub disable_rectification: bool,
+}
+
+impl ChordsConfig {
+    pub fn new(seq: Vec<usize>, grid: TimeGrid) -> Self {
+        ChordsConfig {
+            seq,
+            grid,
+            early_exit_tol: None,
+            record_trace: false,
+            disable_rectification: false,
+        }
+    }
+}
+
+/// One streamed output (paper §5 "diffusion streaming").
+#[derive(Clone, Debug)]
+pub struct CoreOutput {
+    /// 1-based core id (K first, 1 last).
+    pub core: usize,
+    pub output: Tensor,
+    /// Sequential NFE depth at emission — the paper's speedup denominator.
+    pub nfe_depth: usize,
+    /// Wall-clock seconds since run start at emission.
+    pub wall_s: f64,
+    /// Lockstep step at which the output was produced.
+    pub step: usize,
+}
+
+/// Result of a CHORDS run.
+#[derive(Debug)]
+pub struct ChordsResult {
+    /// Streamed outputs, fastest (core K) first.
+    pub outputs: Vec<CoreOutput>,
+    /// The output the run returned: the last streamed output (core 1 unless
+    /// early exit triggered).
+    pub final_output: Tensor,
+    /// Sequential NFE depth of `final_output`.
+    pub nfe_depth: usize,
+    /// Total NFEs spent across all cores (work, not depth).
+    pub total_nfes: u64,
+    /// Wall-clock duration of the whole run.
+    pub wall_s: f64,
+    /// Whether early exit cut the run short.
+    pub early_exited: bool,
+    /// Number of rectification events applied.
+    pub rectifications: usize,
+    /// Bytes moved core→core by rectifications (x + f per event).
+    pub comm_bytes: u64,
+    /// Optional per-step trace.
+    pub trace: Vec<TraceEvent>,
+}
+
+impl ChordsResult {
+    /// Speedup in sequential NFE depth relative to an `n`-step sequential
+    /// solve (Def. 2.3 discretized).
+    pub fn speedup(&self, n: usize) -> f64 {
+        n as f64 / self.nfe_depth as f64
+    }
+
+    /// Output of a specific core, if it emitted.
+    pub fn output_of(&self, core: usize) -> Option<&CoreOutput> {
+        self.outputs.iter().find(|o| o.core == core)
+    }
+}
+
+/// Per-core mutable state owned by the coordinator thread.
+struct CoreState {
+    /// Committed latent (at grid index `cur` of the upcoming step).
+    x: Tensor,
+    /// Anchor snapshot: the core's latent and drift at its last anchor
+    /// (Algorithm 1's `x^k_prev` plus the cached drift that makes
+    /// rectification free).
+    snap_x: Option<Tensor>,
+    snap_f: Option<Tensor>,
+    active: bool,
+}
+
+/// The Algorithm 1 executor.
+pub struct ChordsExecutor<'a> {
+    pool: &'a CorePool,
+    cfg: ChordsConfig,
+    sched: Scheduler,
+}
+
+impl<'a> ChordsExecutor<'a> {
+    /// `pool.size()` must be ≥ `cfg.seq.len()` (one worker per core).
+    pub fn new(pool: &'a CorePool, cfg: ChordsConfig) -> Self {
+        let k = cfg.seq.len();
+        assert!(pool.size() >= k, "pool has {} workers, need {k}", pool.size());
+        let sched = Scheduler::new(cfg.seq.clone(), cfg.grid.steps());
+        ChordsExecutor { pool, cfg, sched }
+    }
+
+    pub fn scheduler(&self) -> &Scheduler {
+        &self.sched
+    }
+
+    /// Run Algorithm 1 from the initial latent `x0` (the t=0 noise).
+    /// `on_output` is invoked for every streamed output as it is produced.
+    pub fn run_streaming(
+        &self,
+        x0: &Tensor,
+        mut on_output: impl FnMut(&CoreOutput),
+    ) -> ChordsResult {
+        let k = self.sched.cores();
+        let n = self.sched.steps();
+        let grid = &self.cfg.grid;
+        let timer = Timer::start();
+
+        let mut cores: Vec<CoreState> = (0..k)
+            .map(|_| CoreState { x: x0.clone(), snap_x: None, snap_f: None, active: true })
+            .collect();
+        let mut outputs: Vec<CoreOutput> = Vec::with_capacity(k);
+        let mut trace: Vec<TraceEvent> = Vec::new();
+        let mut total_nfes = 0u64;
+        let mut rectifications = 0usize;
+        let mut comm_bytes = 0u64;
+        let mut early_exited = false;
+        let elem_bytes = (x0.numel() * 4) as u64;
+
+        // Phase-1 result slots, indexed by 0-based core.
+        let mut stepped: Vec<Option<(Tensor, Tensor)>> = (0..k).map(|_| None).collect();
+        let mut slots: Vec<Option<(usize, usize)>> = vec![None; k];
+
+        'steps: for step in 1..=n {
+            // ---- Phase 1: all active cores advance in parallel ----
+            let mut submitted = 0usize;
+            for c in 0..k {
+                slots[c] = None;
+                stepped[c] = None;
+                if !cores[c].active {
+                    continue;
+                }
+                let Some((cur, next)) = self.sched.slot(step, c + 1) else {
+                    continue;
+                };
+                slots[c] = Some((cur, next));
+                self.pool.submit(
+                    c,
+                    Job::Step { x: cores[c].x.clone(), t: grid.t(cur), t2: grid.t(next) },
+                );
+                submitted += 1;
+            }
+            if submitted == 0 {
+                break;
+            }
+            for reply in self.pool.collect(submitted) {
+                total_nfes += 1;
+                stepped[reply.worker] = Some((reply.out, reply.drift));
+            }
+
+            // ---- Snapshots: anchor states are the *pre-commit* (x, f) ----
+            for c in 0..k {
+                let Some((cur, _)) = slots[c] else { continue };
+                if self.sched.is_anchor(c + 1, cur) && !self.sched.is_bootstrap(step, c + 1) {
+                    let (_, f) = stepped[c].as_ref().unwrap();
+                    cores[c].snap_x = Some(cores[c].x.clone());
+                    cores[c].snap_f = Some(f.clone());
+                }
+            }
+
+            // ---- Phase 2: rectification (Eq. 3) using cached drifts ----
+            // Applied before any commit so x^{k−1} and f^{k−1} refer to core
+            // k−1's start-of-step state, exactly as Algorithm 1 specifies.
+            let mut rectified_this_step = vec![false; k];
+            for c in (1..k).rev() {
+                if self.cfg.disable_rectification {
+                    break;
+                }
+                if slots[c].is_none() || slots[c - 1].is_none() {
+                    continue;
+                }
+                if !self.sched.communicate(step, c + 1) {
+                    continue;
+                }
+                let (prev_cur, _) = slots[c - 1].unwrap();
+                let (_, next) = slots[c].unwrap();
+                let dt = grid.t(next) - grid.t(prev_cur);
+                // Split borrows: neighbour (read) vs self (write).
+                let (left, right) = cores.split_at_mut(c);
+                let neighbour = &left[c - 1];
+                let me = &mut right[0];
+                let snap_x = me.snap_x.as_ref().expect("anchor snapshot missing");
+                let snap_f = me.snap_f.as_ref().expect("anchor drift missing");
+                let (sleft, sright) = stepped.split_at_mut(c);
+                let f_acc = &sleft[c - 1].as_ref().unwrap().1;
+                let x_new = &mut sright[0].as_mut().unwrap().0;
+                apply_rectification(x_new, &neighbour.x, snap_x, f_acc, snap_f, dt);
+                rectifications += 1;
+                comm_bytes += 2 * elem_bytes;
+                rectified_this_step[c] = true;
+            }
+
+            // ---- Commit + emission ----
+            for c in 0..k {
+                let Some((cur, next)) = slots[c] else { continue };
+                let (x_new, _) = stepped[c].take().unwrap();
+                cores[c].x = x_new;
+                let emitted = next == n;
+                if self.cfg.record_trace {
+                    trace.push(TraceEvent {
+                        step,
+                        core: c + 1,
+                        cur,
+                        next,
+                        bootstrap: self.sched.is_bootstrap(step, c + 1),
+                        rectified: rectified_this_step[c],
+                        emitted,
+                    });
+                }
+                if emitted {
+                    cores[c].active = false;
+                    let out = CoreOutput {
+                        core: c + 1,
+                        output: cores[c].x.clone(),
+                        nfe_depth: step,
+                        wall_s: timer.elapsed_s(),
+                        step,
+                    };
+                    on_output(&out);
+                    outputs.push(out);
+                }
+            }
+
+            // ---- Early exit: consecutive streamed outputs agree ----
+            if let Some(tol) = self.cfg.early_exit_tol {
+                if outputs.len() >= 2 {
+                    let a = &outputs[outputs.len() - 1].output;
+                    let b = &outputs[outputs.len() - 2].output;
+                    if ops::rmse(a, b) <= tol {
+                        early_exited = true;
+                        break 'steps;
+                    }
+                }
+            }
+        }
+
+        let last = outputs.last().expect("no outputs produced");
+        ChordsResult {
+            final_output: last.output.clone(),
+            nfe_depth: last.nfe_depth,
+            outputs,
+            total_nfes,
+            wall_s: timer.elapsed_s(),
+            early_exited,
+            rectifications,
+            comm_bytes,
+            trace,
+        }
+    }
+
+    /// Run without a streaming callback.
+    pub fn run(&self, x0: &Tensor) -> ChordsResult {
+        self.run_streaming(x0, |_| {})
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::sequential::sequential_solve;
+    use crate::engine::{ExpOdeFactory, GaussMixtureFactory};
+    use crate::solvers::Euler;
+    use crate::util::rng::Rng;
+    use std::sync::Arc;
+
+    fn exp_pool(k: usize) -> CorePool {
+        CorePool::new(k, Arc::new(ExpOdeFactory::new(vec![4], 0)), Arc::new(Euler)).unwrap()
+    }
+
+    fn x0() -> Tensor {
+        Tensor::from_vec(&[4], vec![1.0, -0.5, 2.0, 0.25])
+    }
+
+    #[test]
+    fn last_output_identical_to_sequential() {
+        let pool = exp_pool(4);
+        let grid = TimeGrid::uniform(50);
+        let cfg = ChordsConfig::new(vec![0, 8, 16, 32], grid.clone());
+        let exec = ChordsExecutor::new(&pool, cfg);
+        let res = exec.run(&x0());
+        let seq = sequential_solve(&pool, &grid, &x0());
+        // Core 1 is never rectified and runs the exact sequential path.
+        assert_eq!(res.final_output, seq.output, "bitwise identity violated");
+        assert_eq!(res.nfe_depth, 50);
+    }
+
+    #[test]
+    fn emission_order_and_depths_match_scheduler() {
+        let pool = exp_pool(4);
+        let grid = TimeGrid::uniform(50);
+        let cfg = ChordsConfig::new(vec![0, 8, 16, 32], grid);
+        let exec = ChordsExecutor::new(&pool, cfg);
+        let res = exec.run(&x0());
+        let cores: Vec<usize> = res.outputs.iter().map(|o| o.core).collect();
+        assert_eq!(cores, vec![4, 3, 2, 1]);
+        let sched = exec.scheduler();
+        for o in &res.outputs {
+            assert_eq!(o.nfe_depth, sched.nfe_depth(o.core), "core {}", o.core);
+        }
+        // Paper's K=4 headline: depth 21 → ~2.38 theoretical speedup.
+        assert_eq!(res.outputs[0].nfe_depth, 21);
+    }
+
+    #[test]
+    fn streamed_outputs_improve_monotonically() {
+        // Successive outputs must approach the sequential solution.
+        let pool = exp_pool(4);
+        let grid = TimeGrid::uniform(50);
+        let seq = sequential_solve(&pool, &grid, &x0());
+        let cfg = ChordsConfig::new(vec![0, 8, 16, 32], grid);
+        let exec = ChordsExecutor::new(&pool, cfg);
+        let res = exec.run(&x0());
+        let errs: Vec<f32> =
+            res.outputs.iter().map(|o| ops::rmse(&o.output, &seq.output)).collect();
+        for w in errs.windows(2) {
+            assert!(w[1] <= w[0] + 1e-7, "errors not monotone: {errs:?}");
+        }
+        assert!(errs[errs.len() - 1] == 0.0);
+    }
+
+    #[test]
+    fn rectification_improves_fastest_core() {
+        // Compare CHORDS' fastest output against the same hierarchy with
+        // communication disabled (single-core solves from coarse inits).
+        let pool = exp_pool(4);
+        let grid = TimeGrid::uniform(50);
+        let seq = sequential_solve(&pool, &grid, &x0());
+
+        let cfg = ChordsConfig::new(vec![0, 8, 16, 32], grid.clone());
+        let exec = ChordsExecutor::new(&pool, cfg);
+        let res = exec.run(&x0());
+        let chords_err = ops::rmse(&res.outputs[0].output, &seq.output);
+
+        // No-communication reference: bootstrap to i_K by ladder jumps, then
+        // solve forward without rectification.
+        let mut x = x0();
+        let ladder = [0usize, 8, 16, 32];
+        for w in ladder.windows(2) {
+            let r = pool.run_one(0, Job::Step { x, t: grid.t(w[0]), t2: grid.t(w[1]) });
+            x = r.out;
+        }
+        for i in 32..50 {
+            let r = pool.run_one(0, Job::Step { x, t: grid.t(i), t2: grid.t(i + 1) });
+            x = r.out;
+        }
+        let nocomm_err = ops::rmse(&x, &seq.output);
+        assert!(
+            chords_err < nocomm_err * 0.5,
+            "rectification should cut fastest-core error substantially: {chords_err} vs {nocomm_err}"
+        );
+    }
+
+    #[test]
+    fn early_exit_stops_run() {
+        let pool = exp_pool(4);
+        let grid = TimeGrid::uniform(50);
+        let mut cfg = ChordsConfig::new(vec![0, 8, 16, 32], grid);
+        cfg.early_exit_tol = Some(1e9); // absurdly lax: exit after 2nd output
+        let exec = ChordsExecutor::new(&pool, cfg);
+        let res = exec.run(&x0());
+        assert!(res.early_exited);
+        assert_eq!(res.outputs.len(), 2);
+        assert_eq!(res.final_output, res.outputs[1].output);
+    }
+
+    #[test]
+    fn trace_has_no_gaps_and_correct_rectifications() {
+        let pool = exp_pool(4);
+        let grid = TimeGrid::uniform(50);
+        let mut cfg = ChordsConfig::new(vec![0, 8, 16, 32], grid);
+        cfg.record_trace = true;
+        let exec = ChordsExecutor::new(&pool, cfg);
+        let res = exec.run(&x0());
+        let sched = exec.scheduler();
+        // Every core has an event at every step until its end step (no
+        // pipeline bubbles — the §3 claim).
+        for core in 1..=4usize {
+            let steps: Vec<usize> =
+                res.trace.iter().filter(|e| e.core == core).map(|e| e.step).collect();
+            assert_eq!(steps, (1..=sched.end_step(core)).collect::<Vec<_>>(), "core {core}");
+        }
+        // Rectified steps match the scheduler's communication predicate.
+        for core in 2..=4usize {
+            let rect_steps: Vec<usize> = res
+                .trace
+                .iter()
+                .filter(|e| e.core == core && e.rectified)
+                .map(|e| e.step)
+                .collect();
+            assert_eq!(rect_steps, sched.rectification_steps(core), "core {core}");
+        }
+    }
+
+    #[test]
+    fn total_nfes_counts_all_core_steps() {
+        let pool = exp_pool(4);
+        let grid = TimeGrid::uniform(50);
+        let cfg = ChordsConfig::new(vec![0, 8, 16, 32], grid);
+        let exec = ChordsExecutor::new(&pool, cfg);
+        let res = exec.run(&x0());
+        let expect: usize = (1..=4).map(|k| exec.scheduler().end_step(k)).sum();
+        assert_eq!(res.total_nfes, expect as u64);
+    }
+
+    #[test]
+    fn works_on_mixture_engine() {
+        let factory = Arc::new(GaussMixtureFactory::standard(vec![8], 3, 0));
+        let pool = CorePool::new(4, factory, Arc::new(Euler)).unwrap();
+        let grid = TimeGrid::uniform(40);
+        let mut rng = Rng::seeded(1);
+        let x0 = Tensor::randn(&[8], &mut rng);
+        let seq = sequential_solve(&pool, &grid, &x0);
+        let cfg = ChordsConfig::new(vec![0, 6, 12, 26], grid);
+        let exec = ChordsExecutor::new(&pool, cfg);
+        let res = exec.run(&x0);
+        assert_eq!(res.final_output, seq.output);
+        // Fastest output close to sequential (mixture drift is strongly
+        // non-linear near mode boundaries, so the bound is loose).
+        let err = ops::rmse(&res.outputs[0].output, &seq.output);
+        assert!(err < 0.12, "fastest-core rmse too high: {err}");
+    }
+
+    #[test]
+    fn single_core_degenerates_to_sequential() {
+        let pool = exp_pool(1);
+        let grid = TimeGrid::uniform(30);
+        let cfg = ChordsConfig::new(vec![0], grid.clone());
+        let exec = ChordsExecutor::new(&pool, cfg);
+        let res = exec.run(&x0());
+        let seq = sequential_solve(&pool, &grid, &x0());
+        assert_eq!(res.final_output, seq.output);
+        assert_eq!(res.outputs.len(), 1);
+        assert_eq!(res.rectifications, 0);
+    }
+}

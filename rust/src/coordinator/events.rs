@@ -1,0 +1,82 @@
+//! Pipeline trace events and a Fig. 2-style ASCII rendering.
+//!
+//! Every CHORDS step can emit one event per active core; the trace both
+//! powers the `chords trace` CLI visualization and gives integration tests
+//! a way to assert pipeline invariants (no bubbles, correct rectification
+//! points, monotone progress).
+
+/// What a core did during one lockstep step.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TraceEvent {
+    /// 1-based step (Algorithm 1's loop counter).
+    pub step: usize,
+    /// 1-based core id.
+    pub core: usize,
+    /// Grid index the core stepped from / to.
+    pub cur: usize,
+    pub next: usize,
+    /// Whether this was a bootstrap ladder jump.
+    pub bootstrap: bool,
+    /// Whether the step's commit was rectified by core−1.
+    pub rectified: bool,
+    /// Whether the core emitted its output at this step.
+    pub emitted: bool,
+}
+
+/// Render a trace as an ASCII pipeline diagram: one row per core, one column
+/// per step. `·` idle/terminated, `B` bootstrap jump, `s` regular step,
+/// `R` rectified step, `E` emit.
+pub fn render_trace(events: &[TraceEvent], cores: usize) -> String {
+    let max_step = events.iter().map(|e| e.step).max().unwrap_or(0);
+    let mut grid = vec![vec!['·'; max_step]; cores];
+    for e in events {
+        let c = if e.emitted {
+            'E'
+        } else if e.rectified {
+            'R'
+        } else if e.bootstrap {
+            'B'
+        } else {
+            's'
+        };
+        grid[e.core - 1][e.step - 1] = c;
+    }
+    let mut out = String::new();
+    out.push_str("step    ");
+    for s in 1..=max_step {
+        out.push(if s % 10 == 0 { ((s / 10) % 10).to_string().chars().next().unwrap() } else { ' ' });
+    }
+    out.push('\n');
+    for (i, row) in grid.iter().enumerate() {
+        out.push_str(&format!("core {:2} ", i + 1));
+        out.extend(row.iter());
+        out.push('\n');
+    }
+    out.push_str("legend: B bootstrap, s step, R rectified, E emit, · idle\n");
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn render_shapes() {
+        let events = vec![
+            TraceEvent { step: 1, core: 1, cur: 0, next: 1, bootstrap: false, rectified: false, emitted: false },
+            TraceEvent { step: 1, core: 2, cur: 0, next: 5, bootstrap: true, rectified: false, emitted: false },
+            TraceEvent { step: 2, core: 2, cur: 5, next: 6, bootstrap: false, rectified: true, emitted: false },
+            TraceEvent { step: 3, core: 2, cur: 6, next: 7, bootstrap: false, rectified: false, emitted: true },
+        ];
+        let txt = render_trace(&events, 2);
+        let lines: Vec<&str> = txt.lines().collect();
+        assert!(lines[1].contains("core  1 s"));
+        assert!(lines[2].contains("core  2 BRE"));
+    }
+
+    #[test]
+    fn empty_trace_renders() {
+        let txt = render_trace(&[], 3);
+        assert!(txt.contains("core  3"));
+    }
+}

@@ -1,0 +1,276 @@
+//! Initialization-sequence selection (paper §2.3).
+//!
+//! Theorem 2.5 gives the reward-optimal placement for three cores; for
+//! general K the paper fills the sequence right-to-left (fast → slow) with
+//! the recursion
+//!
+//! ```text
+//! t(K) = (s-1)/s,  t(K+1) := 1
+//! t(k) = 2 t(k+1) − t(k+2)   if t(k+1) > (2/3)·t(k+2)
+//!        t(k+1) / 2           otherwise
+//! t(1) = 0 (pinned: the slowest core is the exact sequential solve)
+//! ```
+//!
+//! Discrete sequences `Î` are index subsequences of `[0..N]` obtained by
+//! rounding `t(k)·N` (§3), with the paper's published choices for
+//! K ∈ {4, 6, 8} at N = 50 available as [`InitStrategy::Paper`].
+
+/// How to choose the initialization sequence.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum InitStrategy {
+    /// Theorem 2.5 recursion (the paper's calibrated sequence).
+    Calibrated,
+    /// The exact sequences published in §4.1 for K∈{4,6,8}, N=50; falls back
+    /// to `Calibrated` elsewhere.
+    Paper,
+    /// Uniform spacing (the Table 3 ablation baseline).
+    Uniform,
+    /// Explicit indices (testing / research).
+    Custom(Vec<usize>),
+}
+
+impl InitStrategy {
+    pub fn parse(s: &str) -> Option<InitStrategy> {
+        match s.to_ascii_lowercase().as_str() {
+            "calibrated" | "ours" | "theorem" => Some(InitStrategy::Calibrated),
+            "paper" => Some(InitStrategy::Paper),
+            "uniform" => Some(InitStrategy::Uniform),
+            other if other.starts_with('[') => {
+                let inner = other.trim_start_matches('[').trim_end_matches(']');
+                let mut out = Vec::new();
+                for part in inner.split(',') {
+                    out.push(part.trim().parse().ok()?);
+                }
+                Some(InitStrategy::Custom(out))
+            }
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> String {
+        match self {
+            InitStrategy::Calibrated => "calibrated".into(),
+            InitStrategy::Paper => "paper".into(),
+            InitStrategy::Uniform => "uniform".into(),
+            InitStrategy::Custom(v) => format!("custom{v:?}"),
+        }
+    }
+}
+
+/// Continuous Thm 2.5 sequence for `k` cores and target speedup `s ≥ 1`.
+/// Returns increasing times `[t(1)=0, …, t(K)=(s−1)/s]`.
+pub fn continuous_init_sequence(k: usize, s: f64) -> Vec<f64> {
+    assert!(k >= 1, "need at least one core");
+    assert!(s >= 1.0, "speedup must be ≥ 1");
+    if k == 1 || s <= 1.0 {
+        return vec![0.0; k.max(1)]
+            .iter()
+            .enumerate()
+            .map(|(i, _)| if i == 0 { 0.0 } else { 0.0 })
+            .take(k)
+            .collect();
+    }
+    let mut t = vec![0.0f64; k + 2]; // 1-indexed t[1..=k], t[k+1] = 1 sentinel
+    t[k] = (s - 1.0) / s;
+    t[k + 1] = 1.0;
+    for i in (2..k).rev() {
+        t[i] = if t[i + 1] > 2.0 * t[i + 2] / 3.0 { 2.0 * t[i + 1] - t[i + 2] } else { t[i + 1] / 2.0 };
+        // Guard: keep strictly increasing and positive even for extreme s.
+        if t[i] <= 0.0 {
+            t[i] = t[i + 1] / 2.0;
+        }
+        if t[i] >= t[i + 1] {
+            t[i] = t[i + 1] / 2.0;
+        }
+    }
+    t[1] = 0.0;
+    t[1..=k].to_vec()
+}
+
+/// The published §4.1 sequences for N=50.
+fn paper_sequence(k: usize, n: usize) -> Option<Vec<usize>> {
+    if n != 50 {
+        return None;
+    }
+    match k {
+        4 => Some(vec![0, 8, 16, 32]),
+        6 => Some(vec![0, 3, 6, 12, 24, 36]),
+        8 => Some(vec![0, 2, 4, 8, 16, 24, 32, 40]),
+        _ => None,
+    }
+}
+
+/// Discrete initialization sequence `Î = [i_1=0 < … < i_K ≤ N−1]`.
+///
+/// For `Calibrated`/`Paper` the target speedup is chosen so the fastest core
+/// lands at the paper's default depth ratio (`t(K) ≈ 0.64..0.8` depending on
+/// K, mirroring §4.1); pass a `Custom` sequence for full control.
+pub fn discrete_init_sequence(strategy: &InitStrategy, k: usize, n: usize) -> Vec<usize> {
+    assert!(k >= 1 && n >= 2, "need K ≥ 1 cores, N ≥ 2 steps");
+    assert!(k <= n, "more cores than steps is never useful");
+    let seq = match strategy {
+        InitStrategy::Custom(v) => v.clone(),
+        InitStrategy::Uniform => {
+            // Evenly spaced over [0, N·(K-1)/K] mirroring Table 3's ablation
+            // (e.g. K=8, N=50 → [0,6,12,18,24,30,36,42]).
+            let stride = n / k;
+            (0..k).map(|i| i * stride).collect()
+        }
+        InitStrategy::Paper => {
+            if let Some(v) = paper_sequence(k, n) {
+                v
+            } else {
+                return discrete_init_sequence(&InitStrategy::Calibrated, k, n);
+            }
+        }
+        InitStrategy::Calibrated => {
+            // Match the paper's fastest-core placement: t(K) chosen per §4.1
+            // (≈0.64 for K=4 scaling towards 0.8 for K=8); i.e. target
+            // speedup s = 1/(1 − t(K)).
+            let tk = match k {
+                1 => 0.0,
+                2..=4 => 0.64,
+                5 | 6 => 0.72,
+                _ => 0.80,
+            };
+            let s = 1.0 / (1.0 - tk);
+            let cont = continuous_init_sequence(k, s);
+            cont.iter().map(|t| (t * n as f64).round() as usize).collect()
+        }
+    };
+    sanitize(seq, k, n)
+}
+
+/// Enforce the framework's constraints: i_1 = 0, strictly increasing,
+/// i_K ≤ N−1. Repairs collisions from rounding by forward-bumping.
+fn sanitize(mut seq: Vec<usize>, k: usize, n: usize) -> Vec<usize> {
+    assert_eq!(seq.len(), k, "sequence length must equal K");
+    seq[0] = 0;
+    for i in 1..k {
+        if seq[i] <= seq[i - 1] {
+            seq[i] = seq[i - 1] + 1;
+        }
+    }
+    // Clamp the tail into range, pushing back if we overflow N−1.
+    if seq[k - 1] > n - 1 {
+        seq[k - 1] = n - 1;
+        for i in (1..k - 1).rev() {
+            if seq[i] >= seq[i + 1] {
+                seq[i] = seq[i + 1] - 1;
+            }
+        }
+    }
+    for w in seq.windows(2) {
+        assert!(w[0] < w[1], "init sequence not strictly increasing: {seq:?}");
+    }
+    assert!(seq[k - 1] <= n - 1);
+    seq
+}
+
+/// Theoretical speedup of a discrete sequence (§3):
+/// `N / ((K−1) + (N − i_K))` — bootstrap cost plus the fastest core's solve.
+pub fn theoretical_speedup(seq: &[usize], n: usize) -> f64 {
+    let k = seq.len();
+    let depth = (k - 1) + (n - seq[k - 1]);
+    n as f64 / depth as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn continuous_matches_paper_k4_example() {
+        // §4.1: K=4 N=50 published sequence [0,8,16,32] ⇔ t = [0,.16,.32,.64],
+        // i.e. s = 1/(1−0.64) = 2.777…
+        let t = continuous_init_sequence(4, 1.0 / (1.0 - 0.64));
+        assert!((t[3] - 0.64).abs() < 1e-9);
+        assert!((t[2] - 0.32).abs() < 1e-9);
+        assert!((t[1] - 0.16).abs() < 1e-9);
+        assert_eq!(t[0], 0.0);
+    }
+
+    #[test]
+    fn continuous_fig2_example() {
+        // Fig. 2: K=4, s=10/3 → I=[0, 0.2, 0.4, 0.7]
+        let t = continuous_init_sequence(4, 10.0 / 3.0);
+        assert!((t[3] - 0.7).abs() < 1e-9, "{t:?}");
+        assert!((t[2] - 0.4).abs() < 1e-9, "{t:?}");
+        assert!((t[1] - 0.2).abs() < 1e-9, "{t:?}");
+        assert_eq!(t[0], 0.0);
+    }
+
+    #[test]
+    fn continuous_uses_extrapolation_branch_for_large_s() {
+        // Thm 2.5, s > 3, K=3: t2 = 2·t3 − 1
+        let s = 5.0;
+        let t = continuous_init_sequence(3, s);
+        let t3 = (s - 1.0) / s;
+        assert!((t[2] - t3).abs() < 1e-12);
+        assert!((t[1] - (2.0 * t3 - 1.0)).abs() < 1e-9, "{t:?}");
+    }
+
+    #[test]
+    fn discrete_paper_sequences() {
+        assert_eq!(discrete_init_sequence(&InitStrategy::Paper, 4, 50), vec![0, 8, 16, 32]);
+        assert_eq!(discrete_init_sequence(&InitStrategy::Paper, 6, 50), vec![0, 3, 6, 12, 24, 36]);
+        assert_eq!(
+            discrete_init_sequence(&InitStrategy::Paper, 8, 50),
+            vec![0, 2, 4, 8, 16, 24, 32, 40]
+        );
+    }
+
+    #[test]
+    fn discrete_calibrated_k4_matches_paper() {
+        assert_eq!(discrete_init_sequence(&InitStrategy::Calibrated, 4, 50), vec![0, 8, 16, 32]);
+    }
+
+    #[test]
+    fn uniform_matches_table3_example() {
+        assert_eq!(
+            discrete_init_sequence(&InitStrategy::Uniform, 8, 50),
+            vec![0, 6, 12, 18, 24, 30, 36, 42]
+        );
+    }
+
+    #[test]
+    fn sequences_always_valid() {
+        for strategy in [InitStrategy::Calibrated, InitStrategy::Uniform, InitStrategy::Paper] {
+            for k in 1..=10 {
+                for n in [10usize, 25, 50, 75, 100, 173] {
+                    if k > n {
+                        continue;
+                    }
+                    let seq = discrete_init_sequence(&strategy, k, n);
+                    assert_eq!(seq.len(), k);
+                    assert_eq!(seq[0], 0);
+                    assert!(seq[k - 1] <= n - 1);
+                    for w in seq.windows(2) {
+                        assert!(w[0] < w[1]);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn speedup_formula() {
+        // K=4 N=50 Î=[0,8,16,32]: depth = 3 + 18 = 21 → 50/21 ≈ 2.38
+        let s = theoretical_speedup(&[0, 8, 16, 32], 50);
+        assert!((s - 50.0 / 21.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn strategy_parse() {
+        assert_eq!(InitStrategy::parse("uniform"), Some(InitStrategy::Uniform));
+        assert_eq!(InitStrategy::parse("ours"), Some(InitStrategy::Calibrated));
+        assert_eq!(InitStrategy::parse("[0,5,10]"), Some(InitStrategy::Custom(vec![0, 5, 10])));
+        assert_eq!(InitStrategy::parse("junk"), None);
+    }
+
+    #[test]
+    fn custom_sequences_sanitized() {
+        let seq = discrete_init_sequence(&InitStrategy::Custom(vec![0, 3, 3, 7]), 4, 10);
+        assert_eq!(seq, vec![0, 3, 4, 7]);
+    }
+}

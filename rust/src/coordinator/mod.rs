@@ -1,0 +1,31 @@
+//! The paper's contribution: multi-core hierarchical ODE solving with
+//! inter-core rectification (CHORDS), plus the parallel baselines it is
+//! evaluated against.
+//!
+//! Module map (paper reference in parens):
+//! - [`init_seq`]  — initialization-sequence selection (§2.3, Thm. 2.5)
+//! - [`scheduler`] — discrete per-step core schedule (§3, Eq. 7)
+//! - [`rectify`]   — inter-core rectification rule (§2.1, Eq. 3/4)
+//! - [`chords`]    — Algorithm 1 executor over a worker pool
+//! - [`sequential`]— the N-step oracle solver
+//! - [`paradigms`] — sliding-window Picard baseline (Shih et al.)
+//! - [`srds`]      — pipelined parareal baseline (Selvam et al.)
+//! - [`reward`]    — surrogate reward theory (§2.3, Def. 2.3/2.4)
+//! - [`events`]    — pipeline trace events (Fig. 2-style visualization)
+
+pub mod chords;
+pub mod events;
+pub mod init_seq;
+pub mod paradigms;
+pub mod rectify;
+pub mod reward;
+pub mod scheduler;
+pub mod sequential;
+pub mod srds;
+
+pub use chords::{ChordsConfig, ChordsExecutor, ChordsResult, CoreOutput};
+pub use init_seq::{continuous_init_sequence, discrete_init_sequence, InitStrategy};
+pub use paradigms::{ParaDigms, ParaDigmsResult};
+pub use scheduler::Scheduler;
+pub use sequential::{sequential_solve, SequentialResult};
+pub use srds::{Srds, SrdsResult};

@@ -1,0 +1,172 @@
+//! Inter-core rectification (paper §2.1, Eq. 3/4).
+//!
+//! `r_θ(x, x̃, t, δ) = δ·(f_θ(x,t) − f_θ(x̃,t)) + (x − x̃)` — the multigrid
+//! correction that transplants the slow core's accuracy onto the fast core.
+//! Prop. 2.1: after adding `r` to the fast core's state at `t+δ`, the error
+//! is `o(‖x̃_{t+δ} − x_{t+δ}‖)` as δ→0.
+//!
+//! On the hot path both drifts are *cached* from the cores' own forward
+//! steps (zero extra NFEs); [`rectification`] is the pure-tensor version the
+//! executor uses. [`rectification_fresh`] evaluates drifts through an engine
+//! and exists for the Prop. 2.1 numerical verification and as the reference
+//! for the Pallas `rectify` kernel.
+
+use crate::engine::DriftEngine;
+use crate::tensor::{ops, Tensor};
+
+/// Eq. 4 from cached drifts: returns `r` (allocating).
+pub fn rectification(
+    x_acc: &Tensor,
+    x_coarse: &Tensor,
+    f_acc: &Tensor,
+    f_coarse: &Tensor,
+    dt: f32,
+) -> Tensor {
+    let mut r = ops::sub(f_acc, f_coarse);
+    ops::scale_into(&mut r, dt);
+    let d = ops::sub(x_acc, x_coarse);
+    ops::axpy_into(&mut r, 1.0, &d);
+    r
+}
+
+/// Apply Eq. 3 in place: `x_target += r` with `r` from cached drifts.
+/// This is the executor's hot-path entry (fused single pass).
+pub fn apply_rectification(
+    x_target: &mut Tensor,
+    x_acc: &Tensor,
+    x_coarse: &Tensor,
+    f_acc: &Tensor,
+    f_coarse: &Tensor,
+    dt: f32,
+) {
+    ops::rectify_into(x_target, dt, f_acc, f_coarse, x_acc, x_coarse);
+}
+
+/// Eq. 4 evaluating drifts through `engine` (2 NFEs; test/reference path).
+pub fn rectification_fresh(
+    engine: &mut dyn DriftEngine,
+    x_acc: &Tensor,
+    x_coarse: &Tensor,
+    t: f32,
+    dt: f32,
+) -> Tensor {
+    let f_acc = engine.drift(x_acc, t);
+    let f_coarse = engine.drift(x_coarse, t);
+    rectification(x_acc, x_coarse, &f_acc, &f_coarse, dt)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::{ExactSolution, ExpOde, TrackingOde};
+    use crate::util::stats::ols_slope;
+
+    #[test]
+    fn fused_matches_composed() {
+        let x_acc = Tensor::from_vec(&[3], vec![1.0, 2.0, 3.0]);
+        let x_coarse = Tensor::from_vec(&[3], vec![0.9, 2.2, 2.7]);
+        let f_acc = Tensor::from_vec(&[3], vec![0.5, -0.5, 1.0]);
+        let f_coarse = Tensor::from_vec(&[3], vec![0.4, -0.6, 1.2]);
+        let dt = 0.17;
+        let r = rectification(&x_acc, &x_coarse, &f_acc, &f_coarse, dt);
+        let mut target = Tensor::from_vec(&[3], vec![10.0, 20.0, 30.0]);
+        let mut expect = target.clone();
+        apply_rectification(&mut target, &x_acc, &x_coarse, &f_acc, &f_coarse, dt);
+        ops::axpy_into(&mut expect, 1.0, &r);
+        assert!(ops::max_abs_diff(&target, &expect) < 1e-6);
+    }
+
+    /// Prop. 2.1 on the exponential ODE: rectified error must shrink
+    /// *faster than linearly* relative to the unrectified error as δ → 0.
+    #[test]
+    fn prop21_error_reduction_exp_ode() {
+        let eng = ExpOde::new(vec![1], 0);
+        prop21_check(eng, &[0.4, 0.2, 0.1, 0.05, 0.025], |e, x, t| e.exact(x, t));
+    }
+
+    /// Prop. 2.1 on a stiff tracking ODE (non-autonomous, non-linear in t).
+    /// Prop. 2.1 is asymptotic in δ: on stiff dynamics (λ=3) the correction
+    /// overshoots once λ·δ ≳ 1, so the sweep stays in the λ·δ < 0.5 regime.
+    #[test]
+    fn prop21_error_reduction_tracking_ode() {
+        let eng = TrackingOde::new(vec![1], 3.0, 2.0);
+        prop21_check(eng, &[0.15, 0.1, 0.05, 0.025, 0.0125], |e, x, t| e.exact(x, t));
+    }
+
+    fn prop21_check<E: DriftEngine + ExactSolution>(
+        mut eng: E,
+        deltas: &[f32],
+        exact: impl Fn(&E, &Tensor, f32) -> Tensor,
+    ) {
+        // x_t exact at t=0.1; x̃_t perturbed. Solve both to t+δ exactly
+        // (using the closed form shifted by the perturbation where valid is
+        // messy — instead integrate both with a very fine solver), then
+        // compare rectified vs unrectified error across δ.
+        let t0 = 0.1f32;
+        let x0 = Tensor::from_vec(&[1], vec![1.0]);
+        let x_t = exact(&eng, &x0, t0);
+        let mut x_tilde = x_t.clone();
+        x_tilde.data_mut()[0] += 0.05; // approximation error at time t
+
+        let fine = |eng: &mut E, start: &Tensor, t: f32, dt: f32| -> Tensor {
+            let substeps = 4000;
+            let mut x = start.clone();
+            for i in 0..substeps {
+                let tt = t + dt * i as f32 / substeps as f32;
+                let f = eng.drift(&x, tt);
+                ops::axpy_into(&mut x, dt / substeps as f32, &f);
+            }
+            x
+        };
+
+        let mut log_d = Vec::new();
+        let mut log_ratio = Vec::new();
+        for &dt in deltas {
+            let x_acc = fine(&mut eng, &x_t, t0, dt); // accurate solve
+            let x_coarse = fine(&mut eng, &x_tilde, t0, dt); // from perturbed state
+            let err_before = ops::rmse(&x_coarse, &x_acc);
+            let r = rectification_fresh(&mut eng, &x_t, &x_tilde, t0, dt);
+            let mut x_rect = x_coarse.clone();
+            ops::axpy_into(&mut x_rect, 1.0, &r);
+            let err_after = ops::rmse(&x_rect, &x_acc);
+            assert!(err_after < err_before, "rectification must reduce error (δ={dt})");
+            log_d.push((dt as f64).ln());
+            log_ratio.push(((err_after / err_before) as f64).ln());
+        }
+        // o(·) behaviour: the ratio err_after/err_before must vanish as δ→0,
+        // i.e. positive slope of log-ratio vs log-δ.
+        let slope = ols_slope(&log_d, &log_ratio);
+        assert!(slope > 0.5, "expected ratio → 0 as δ → 0 (slope {slope})");
+    }
+
+    #[test]
+    fn rectification_is_zero_for_identical_states() {
+        let mut eng = ExpOde::new(vec![2], 0);
+        let x = Tensor::from_vec(&[2], vec![1.0, -1.0]);
+        let r = rectification_fresh(&mut eng, &x, &x, 0.3, 0.2);
+        assert_eq!(r.data(), &[0.0, 0.0]);
+    }
+
+    #[test]
+    fn rectification_first_order_restores_difference() {
+        // With f ≡ const (drift independent of x), r = x_acc − x_coarse
+        // exactly: the fast state is shifted onto the slow trajectory.
+        struct Const;
+        impl DriftEngine for Const {
+            fn dims(&self) -> Vec<usize> {
+                vec![1]
+            }
+            fn drift(&mut self, _x: &Tensor, _t: f32) -> Tensor {
+                Tensor::full(&[1], 2.0)
+            }
+            fn name(&self) -> &str {
+                "const"
+            }
+        }
+        let mut eng = Const;
+        let xa = Tensor::from_vec(&[1], vec![1.0]);
+        let xc = Tensor::from_vec(&[1], vec![0.6]);
+        let r = rectification_fresh(&mut eng, &xa, &xc, 0.2, 0.5);
+        assert!((r.data()[0] - 0.4).abs() < 1e-6);
+    }
+}

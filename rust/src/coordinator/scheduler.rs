@@ -1,0 +1,247 @@
+//! The per-step core schedule (paper §3, Eq. 7) and communication predicate.
+//!
+//! Steps are 1-based like Algorithm 1. For core `k` (1-based) at step `s`:
+//!
+//! - bootstrap (`s < k`): the core jumps along the initialization ladder,
+//!   `(cur, next) = (i_s, i_{s+1})` — one coarse Euler jump per step, so core
+//!   k reaches grid index `i_k` after `k−1` steps;
+//! - regular (`s ≥ k`): `(cur, next) = (i_k + s − k, i_k + s − k + 1)`.
+//!
+//! Core k therefore finishes (`next = N`) at step `N − i_k + k − 1`, giving
+//! the discrete speedup `N / (N − i_K + K − 1)` of §3.
+//!
+//! Communication (Eq. 3 triggers): core k is rectified at step `s` iff both
+//! k and k−1 are past bootstrap and core k−1's current index `prev` sits on
+//! core k's *anchor ladder* `{i_k + n·(i_k − i_{k-1})}` — equivalently
+//! `(s − k + 1)` is a positive multiple of `i_k − i_{k−1}`. The rectified
+//! position is `next = prev + (i_k − i_{k−1})`, i.e. exactly the
+//! "`2 i_k − i_{k−1}`" continuation point described in §3.
+
+/// Discrete schedule over an initialization sequence.
+#[derive(Clone, Debug)]
+pub struct Scheduler {
+    /// `Î = [i_1=0 < … < i_K ≤ N−1]`.
+    seq: Vec<usize>,
+    /// Total diffusion steps N.
+    n: usize,
+}
+
+impl Scheduler {
+    pub fn new(seq: Vec<usize>, n: usize) -> Self {
+        assert!(!seq.is_empty());
+        assert_eq!(seq[0], 0, "slowest core must start at 0 (paper §2.2)");
+        for w in seq.windows(2) {
+            assert!(w[0] < w[1], "init sequence must be strictly increasing");
+        }
+        assert!(*seq.last().unwrap() <= n - 1);
+        Scheduler { seq, n }
+    }
+
+    pub fn cores(&self) -> usize {
+        self.seq.len()
+    }
+
+    pub fn steps(&self) -> usize {
+        self.n
+    }
+
+    pub fn seq(&self) -> &[usize] {
+        &self.seq
+    }
+
+    /// Grid gap `δ_k = i_k − i_{k−1}` for core k ≥ 2 (1-based).
+    pub fn gap(&self, k: usize) -> usize {
+        assert!(k >= 2 && k <= self.cores());
+        self.seq[k - 1] - self.seq[k - 2]
+    }
+
+    /// Eq. 7: `(cur, next)` grid indices for core `k` (1-based) at step `s`
+    /// (1-based). Returns `None` once the core has terminated.
+    pub fn slot(&self, step: usize, k: usize) -> Option<(usize, usize)> {
+        assert!(k >= 1 && k <= self.cores());
+        assert!(step >= 1);
+        if step < k {
+            // Bootstrap ladder jump i_step → i_{step+1}.
+            Some((self.seq[step - 1], self.seq[step]))
+        } else {
+            let cur = self.seq[k - 1] + step - k;
+            if cur >= self.n {
+                None
+            } else {
+                Some((cur, cur + 1))
+            }
+        }
+    }
+
+    /// Whether core `k` is still bootstrapping at `step`.
+    pub fn is_bootstrap(&self, step: usize, k: usize) -> bool {
+        step < k
+    }
+
+    /// The step at which core `k` produces its output (`next == N`).
+    pub fn end_step(&self, k: usize) -> usize {
+        self.n - self.seq[k - 1] + k - 1
+    }
+
+    /// Sequential NFE depth of core `k`'s output (the paper's speedup
+    /// denominator): one NFE per lockstep step.
+    pub fn nfe_depth(&self, k: usize) -> usize {
+        self.end_step(k)
+    }
+
+    /// Discrete speedup of core `k`'s output (§3).
+    pub fn speedup(&self, k: usize) -> f64 {
+        self.n as f64 / self.nfe_depth(k) as f64
+    }
+
+    /// Communication predicate: should core `k` be rectified at `step`?
+    /// True iff k > 1, both cores are past bootstrap, neither terminated,
+    /// and core k−1's `cur` lies on core k's anchor ladder.
+    pub fn communicate(&self, step: usize, k: usize) -> bool {
+        if k < 2 || step < k {
+            return false;
+        }
+        // Both cores must still be active.
+        let (Some((_prev_cur, _)), Some((_cur, _))) = (self.slot(step, k - 1), self.slot(step, k))
+        else {
+            return false;
+        };
+        let gap = self.gap(k);
+        let progressed = step - (k - 1); // core k−1's regular-step count
+        progressed >= gap && progressed % gap == 0
+    }
+
+    /// Anchor predicate: core `k` snapshots `(x, f)` at the start of any
+    /// step whose `cur` lies on the ladder `{i_k + n·gap_k}` (n ≥ 0). Core 1
+    /// never snapshots (it is never rectified).
+    pub fn is_anchor(&self, k: usize, cur: usize) -> bool {
+        if k < 2 {
+            return false;
+        }
+        let ik = self.seq[k - 1];
+        if cur < ik {
+            return false;
+        }
+        (cur - ik) % self.gap(k) == 0
+    }
+
+    /// All steps at which core `k` gets rectified (for tests / traces).
+    pub fn rectification_steps(&self, k: usize) -> Vec<usize> {
+        (1..=self.end_step(k)).filter(|&s| self.communicate(s, k)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn paper_k4() -> Scheduler {
+        Scheduler::new(vec![0, 8, 16, 32], 50)
+    }
+
+    #[test]
+    fn core1_is_sequential() {
+        let s = paper_k4();
+        for step in 1..=50 {
+            assert_eq!(s.slot(step, 1), Some((step - 1, step)));
+        }
+        assert_eq!(s.slot(51, 1), None);
+        assert_eq!(s.end_step(1), 50);
+    }
+
+    #[test]
+    fn bootstrap_ladder() {
+        let s = paper_k4();
+        // Core 4 bootstraps over steps 1..3: 0→8, 8→16, 16→32.
+        assert_eq!(s.slot(1, 4), Some((0, 8)));
+        assert_eq!(s.slot(2, 4), Some((8, 16)));
+        assert_eq!(s.slot(3, 4), Some((16, 32)));
+        // then regular:
+        assert_eq!(s.slot(4, 4), Some((32, 33)));
+    }
+
+    #[test]
+    fn end_steps_and_speedup() {
+        let s = paper_k4();
+        assert_eq!(s.end_step(4), 50 - 32 + 3); // 21
+        assert_eq!(s.end_step(3), 50 - 16 + 2); // 36
+        assert_eq!(s.end_step(2), 50 - 8 + 1); // 43
+        assert_eq!(s.end_step(1), 50);
+        assert!((s.speedup(4) - 50.0 / 21.0).abs() < 1e-12);
+        // Later cores are strictly slower (monotone streaming).
+        assert!(s.end_step(4) < s.end_step(3));
+        assert!(s.end_step(3) < s.end_step(2));
+        assert!(s.end_step(2) < s.end_step(1));
+    }
+
+    #[test]
+    fn communicate_matches_anchor_ladder() {
+        let s = paper_k4();
+        // Core 2 (gap 8): rectified when core 1 reaches 8, 16, 24, 32, 40, 48
+        // i.e. at steps 8+1-1? Core 1 cur = step−1, so cur=8 at step 9…
+        // progressed = step−1 must be a positive multiple of 8.
+        let steps = s.rectification_steps(2);
+        assert_eq!(steps, vec![9, 17, 25, 33, 41]);
+        // At each such step, core 1's cur is on core 2's anchor ladder.
+        for &st in &steps {
+            let (prev_cur, _) = s.slot(st, 1).unwrap();
+            assert!(s.is_anchor(2, prev_cur));
+        }
+    }
+
+    #[test]
+    fn rectified_position_is_2ik_minus_ik1() {
+        // §3: first rectification lands core k at index 2 i_k − i_{k−1}.
+        let s = paper_k4();
+        for k in 2..=4 {
+            let first = s.rectification_steps(k)[0];
+            let (_, next) = s.slot(first, k).unwrap();
+            assert_eq!(next, 2 * s.seq()[k - 1] - s.seq()[k - 2], "core {k}");
+        }
+    }
+
+    #[test]
+    fn no_communication_during_bootstrap() {
+        let s = paper_k4();
+        for k in 2..=4 {
+            for step in 1..k {
+                assert!(!s.communicate(step, k));
+            }
+        }
+        // Core 1 never communicates.
+        for step in 1..=50 {
+            assert!(!s.communicate(step, 1));
+        }
+    }
+
+    #[test]
+    fn anchors_only_on_ladder() {
+        let s = paper_k4();
+        assert!(s.is_anchor(4, 32));
+        assert!(s.is_anchor(4, 48));
+        assert!(!s.is_anchor(4, 40)); // gap is 16: 32, 48, …
+        assert!(!s.is_anchor(4, 16)); // before i_4
+        assert!(!s.is_anchor(1, 0));
+    }
+
+    #[test]
+    fn terminated_cores_return_none() {
+        let s = paper_k4();
+        assert!(s.slot(21, 4).is_some());
+        assert!(s.slot(22, 4).is_none());
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_nonzero_start() {
+        Scheduler::new(vec![1, 5], 10);
+    }
+
+    #[test]
+    fn gap_one_neighbours_communicate_every_step() {
+        let s = Scheduler::new(vec![0, 1, 2], 10);
+        // Core 2 (gap 1): rectified at every step ≥ 2 while active.
+        let steps = s.rectification_steps(2);
+        assert_eq!(steps, (2..=s.end_step(2)).collect::<Vec<_>>());
+    }
+}

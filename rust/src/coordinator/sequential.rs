@@ -1,0 +1,82 @@
+//! The N-step sequential solver (paper Eq. 6) — the quality oracle every
+//! parallel method is measured against.
+
+use crate::solvers::TimeGrid;
+use crate::tensor::Tensor;
+use crate::util::timer::Timer;
+use crate::workers::{CorePool, Job};
+
+/// Result of a sequential solve.
+#[derive(Clone, Debug)]
+pub struct SequentialResult {
+    pub output: Tensor,
+    /// Sequential NFE depth == N for Euler.
+    pub nfe_depth: usize,
+    pub wall_s: f64,
+    /// Intermediate latents `x_{t(i)}` (including x0 and the output) if
+    /// trajectory capture was requested.
+    pub trajectory: Option<Vec<Tensor>>,
+}
+
+/// Solve Eq. 6 start-to-finish on worker 0 of `pool`.
+pub fn sequential_solve(pool: &CorePool, grid: &TimeGrid, x0: &Tensor) -> SequentialResult {
+    solve_inner(pool, grid, x0, false)
+}
+
+/// As [`sequential_solve`], capturing the full trajectory (used by the
+/// ParaDIGMS/SRDS convergence analyses and Fig. 5).
+pub fn sequential_solve_with_trajectory(
+    pool: &CorePool,
+    grid: &TimeGrid,
+    x0: &Tensor,
+) -> SequentialResult {
+    solve_inner(pool, grid, x0, true)
+}
+
+fn solve_inner(pool: &CorePool, grid: &TimeGrid, x0: &Tensor, capture: bool) -> SequentialResult {
+    let timer = Timer::start();
+    let n = grid.steps();
+    let mut x = x0.clone();
+    let mut traj = if capture { Some(vec![x0.clone()]) } else { None };
+    for i in 0..n {
+        let r = pool.run_one(0, Job::Step { x, t: grid.t(i), t2: grid.t(i + 1) });
+        x = r.out;
+        if let Some(tr) = traj.as_mut() {
+            tr.push(x.clone());
+        }
+    }
+    SequentialResult { output: x, nfe_depth: n, wall_s: timer.elapsed_s(), trajectory: traj }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::{ExactSolution, ExpOde, ExpOdeFactory};
+    use crate::solvers::Euler;
+    use crate::tensor::ops;
+    use std::sync::Arc;
+
+    #[test]
+    fn converges_to_exact() {
+        let pool =
+            CorePool::new(1, Arc::new(ExpOdeFactory::new(vec![2], 0)), Arc::new(Euler)).unwrap();
+        let x0 = Tensor::from_vec(&[2], vec![1.0, 2.0]);
+        let exact = ExpOde::new(vec![2], 0).exact(&x0, 1.0);
+        let coarse = sequential_solve(&pool, &TimeGrid::uniform(25), &x0);
+        let fine = sequential_solve(&pool, &TimeGrid::uniform(100), &x0);
+        assert!(ops::rmse(&fine.output, &exact) < ops::rmse(&coarse.output, &exact));
+        assert_eq!(fine.nfe_depth, 100);
+    }
+
+    #[test]
+    fn trajectory_has_n_plus_one_states() {
+        let pool =
+            CorePool::new(1, Arc::new(ExpOdeFactory::new(vec![2], 0)), Arc::new(Euler)).unwrap();
+        let x0 = Tensor::from_vec(&[2], vec![1.0, 0.0]);
+        let r = sequential_solve_with_trajectory(&pool, &TimeGrid::uniform(10), &x0);
+        let tr = r.trajectory.unwrap();
+        assert_eq!(tr.len(), 11);
+        assert_eq!(tr[0], x0);
+        assert_eq!(tr[10], r.output);
+    }
+}

@@ -1,0 +1,321 @@
+//! SRDS baseline — self-refining diffusion samplers via parareal iterations
+//! (Selvam et al. 2024), in the "unified pipeline" form the CHORDS paper
+//! uses for fair comparison (§4.1).
+//!
+//! Parareal over `M ≈ √N` segments of `L = ⌈N/M⌉` fine steps:
+//!
+//! - coarse propagator `G`: one Euler jump across a segment (1 NFE);
+//! - fine propagator `F`: `L` sequential fine steps (L NFEs);
+//! - iteration `j`: `U_{m+1}^j = G(U_m^j) + F(U_m^{j-1}) − G(U_m^{j-1})`,
+//!   with the classic invariant that `U_m^j` is exact for `m ≤ j`.
+//!
+//! Numerics run barrier-synchronized on the worker pool (real wall-clock);
+//! the *pipelined* sequential-NFE depth — fine solves of iteration j+1
+//! starting as soon as their inputs exist, the scheduling SRDS used on K
+//! GPUs — is computed by list-scheduling the realized parareal DAG on K
+//! cores ([`crate::workers::execute_on_k_cores`]). Tables report the
+//! pipelined depth, matching how the paper benchmarks SRDS across K.
+
+use crate::solvers::TimeGrid;
+use crate::tensor::{ops, Tensor};
+use crate::util::timer::Timer;
+use crate::workers::{execute_on_k_cores, CorePool, Job, Task};
+use std::collections::HashMap;
+
+/// Configuration for the SRDS sampler.
+#[derive(Clone, Debug)]
+pub struct Srds {
+    /// Number of cores available (affects the pipelined makespan and the
+    /// barrier batching of fine solves).
+    pub cores: usize,
+    /// Convergence tolerance on successive boundary values.
+    pub tol: f32,
+    /// Optional segment count override (defaults to ⌈√N⌉).
+    pub segments: Option<usize>,
+}
+
+impl Srds {
+    pub fn new(cores: usize, tol: f32) -> Self {
+        Srds { cores, tol, segments: None }
+    }
+}
+
+/// Result of an SRDS run.
+#[derive(Debug)]
+pub struct SrdsResult {
+    pub output: Tensor,
+    /// Pipelined sequential NFE depth on `cores` cores (the Speedup metric).
+    pub nfe_depth: usize,
+    /// Barrier-synchronized depth (reference; ≥ `nfe_depth`).
+    pub nfe_depth_barrier: usize,
+    /// Total NFEs (work).
+    pub total_nfes: u64,
+    /// Real wall-clock of the barrier execution.
+    pub wall_s: f64,
+    /// Parareal iterations until convergence.
+    pub iterations: usize,
+    /// Segment count M and fine length L.
+    pub segments: usize,
+    pub fine_len: usize,
+}
+
+impl SrdsResult {
+    pub fn speedup(&self, n: usize) -> f64 {
+        n as f64 / self.nfe_depth as f64
+    }
+}
+
+impl Srds {
+    /// Run SRDS on `pool` (uses up to `cores` workers).
+    pub fn run(&self, pool: &CorePool, grid: &TimeGrid, x0: &Tensor) -> SrdsResult {
+        let n = grid.steps();
+        let m = self.segments.unwrap_or_else(|| (n as f64).sqrt().ceil() as usize).clamp(1, n);
+        let k = self.cores.min(pool.size()).max(1);
+        // Segment boundaries: b[0]=0 ≤ … ≤ b[M]=N (last segment may be short).
+        let l = n.div_ceil(m);
+        let bounds: Vec<usize> = (0..=m).map(|i| (i * l).min(n)).collect();
+        let timer = Timer::start();
+        let mut total_nfes = 0u64;
+        let mut depth_barrier = 0usize;
+
+        // --- Iteration 0: sequential coarse sweep ---
+        // `u_cur` always holds U^{j-1} at the top of the iteration loop.
+        let mut u_cur: Vec<Tensor> = Vec::with_capacity(m + 1);
+        u_cur.push(x0.clone());
+        for seg in 0..m {
+            let r = pool.run_one(
+                0,
+                Job::Step { x: u_cur[seg].clone(), t: grid.t(bounds[seg]), t2: grid.t(bounds[seg + 1]) },
+            );
+            total_nfes += 1;
+            u_cur.push(r.out);
+        }
+        depth_barrier += m;
+        // Cache of coarse jumps from the previous iteration's states:
+        // g_prev[seg] = G(U_seg^{j-1}).
+        let mut g_prev: Vec<Tensor> = u_cur[1..].to_vec();
+
+        let mut iterations = 0usize;
+        // Record per-iteration active ranges for the DAG reconstruction.
+        let mut active_ranges: Vec<usize> = Vec::new();
+
+        for j in 1..=m {
+            iterations = j;
+            let lo = j - 1; // segments before lo are locked (exact)
+            active_ranges.push(lo);
+            // --- Parallel fine solves F(U_seg^{j-1}) for seg = lo..M-1 ---
+            // Segments are batched K at a time; within a batch the fine
+            // steps advance in lockstep across workers (true parallelism).
+            let act = m - lo;
+            let mut fine: Vec<Option<Tensor>> = vec![None; act];
+            let mut batch_start = 0usize;
+            while batch_start < act {
+                let batch = (act - batch_start).min(k);
+                let segs: Vec<usize> = (0..batch).map(|b| lo + batch_start + b).collect();
+                let mut xs: Vec<Tensor> = segs.iter().map(|&s| u_cur[s].clone()).collect();
+                let max_len = segs.iter().map(|&s| bounds[s + 1] - bounds[s]).max().unwrap();
+                for off in 0..max_len {
+                    let mut submitted = 0;
+                    for (b, &seg) in segs.iter().enumerate() {
+                        let i = bounds[seg] + off;
+                        if i >= bounds[seg + 1] {
+                            continue;
+                        }
+                        pool.submit(b, Job::Step { x: xs[b].clone(), t: grid.t(i), t2: grid.t(i + 1) });
+                        submitted += 1;
+                    }
+                    for r in pool.collect(submitted) {
+                        total_nfes += 1;
+                        xs[r.worker] = r.out;
+                    }
+                }
+                for (b, x) in xs.into_iter().enumerate() {
+                    fine[batch_start + b] = Some(x);
+                }
+                batch_start += batch;
+            }
+            depth_barrier += act.div_ceil(k) * l;
+
+            // --- Sequential correction sweep ---
+            // Locked prefix U_seg^j = U_seg^{j-1} for seg ≤ lo is inherited
+            // from the clone.
+            let mut new_u = u_cur.clone();
+            for seg in lo..m {
+                let g_new = pool.run_one(
+                    0,
+                    Job::Step {
+                        x: new_u[seg].clone(),
+                        t: grid.t(bounds[seg]),
+                        t2: grid.t(bounds[seg + 1]),
+                    },
+                );
+                total_nfes += 1;
+                // U_{seg+1}^j = G(U_seg^j) + F(U_seg^{j-1}) − G(U_seg^{j-1})
+                let mut v = g_new.out;
+                ops::axpy_into(&mut v, 1.0, fine[seg - lo].as_ref().unwrap());
+                ops::axpy_into(&mut v, -1.0, &g_prev[seg]);
+                new_u[seg + 1] = v;
+            }
+            depth_barrier += m - lo;
+
+            // Convergence check.
+            let delta = (0..=m)
+                .map(|seg| ops::rmse(&new_u[seg], &u_cur[seg]))
+                .fold(0.0f32, f32::max);
+            u_cur = new_u;
+            // Refresh the coarse-jump cache for the next iteration: j+1's
+            // correction needs G(U_seg^j). Real SRDS reuses the G values
+            // computed during this sweep; we recompute from the committed
+            // states (no extra *depth* counted — the reuse is free on the
+            // pipelined schedule — but the work is counted in total_nfes).
+            for seg in 0..m {
+                let r = pool.run_one(
+                    0,
+                    Job::Step {
+                        x: u_cur[seg].clone(),
+                        t: grid.t(bounds[seg]),
+                        t2: grid.t(bounds[seg + 1]),
+                    },
+                );
+                total_nfes += 1;
+                g_prev[seg] = r.out;
+            }
+
+            if delta <= self.tol {
+                break;
+            }
+        }
+
+        // --- Pipelined NFE depth: list-schedule the realized DAG ---
+        let nfe_depth = pipelined_depth(m, l, &active_ranges, k);
+
+        SrdsResult {
+            output: u_cur[m].clone(),
+            nfe_depth,
+            nfe_depth_barrier: depth_barrier,
+            total_nfes,
+            wall_s: timer.elapsed_s(),
+            iterations,
+            segments: m,
+            fine_len: l,
+        }
+    }
+}
+
+/// Build the parareal DAG for the realized iterations and compute its K-core
+/// makespan. Tasks: coarse-sweep chain (cost 1 each), fine solves (cost L,
+/// dep: producer of U_seg at previous iteration), corrections (cost 1,
+/// deps: previous correction in the sweep + the fine solve).
+fn pipelined_depth(m: usize, l: usize, active_ranges: &[usize], k: usize) -> usize {
+    let mut tasks: Vec<Task> = Vec::new();
+    let mut next_id = 0usize;
+    let mut id = |tasks: &mut Vec<Task>, deps: Vec<usize>, cost: u64| -> usize {
+        let tid = next_id;
+        next_id += 1;
+        tasks.push(Task { id: tid, deps, cost, run: Box::new(|| {}) });
+        tid
+    };
+    // producer[(seg)] = task producing U_seg at the *latest completed* iter.
+    let mut producer: HashMap<usize, usize> = HashMap::new();
+    // Iteration 0 coarse chain.
+    let mut prev_task: Option<usize> = None;
+    for seg in 1..=m {
+        let deps = prev_task.map(|t| vec![t]).unwrap_or_default();
+        let t = id(&mut tasks, deps, 1);
+        producer.insert(seg, t);
+        prev_task = Some(t);
+    }
+    for &lo in active_ranges {
+        // Fine solves read U_seg from the previous iteration.
+        let mut fine_tasks: HashMap<usize, usize> = HashMap::new();
+        for seg in lo..m {
+            let deps = producer.get(&seg).map(|t| vec![*t]).unwrap_or_default();
+            let t = id(&mut tasks, deps, l as u64);
+            fine_tasks.insert(seg, t);
+        }
+        // Correction sweep: sequential chain through segments.
+        let mut chain: Option<usize> = producer.get(&lo).copied();
+        for seg in lo..m {
+            let mut deps = vec![fine_tasks[&seg]];
+            if let Some(cdep) = chain {
+                deps.push(cdep);
+            }
+            let t = id(&mut tasks, deps, 1);
+            producer.insert(seg + 1, t);
+            chain = Some(t);
+        }
+    }
+    let final_task = producer[&m];
+    let report = execute_on_k_cores(tasks, k);
+    report.finish[&final_task] as usize
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::sequential::sequential_solve;
+    use crate::engine::{ExpOdeFactory, GaussMixtureFactory};
+    use crate::solvers::Euler;
+    use crate::util::rng::Rng;
+    use std::sync::Arc;
+
+    fn pool(k: usize) -> CorePool {
+        CorePool::new(k, Arc::new(ExpOdeFactory::new(vec![4], 0)), Arc::new(Euler)).unwrap()
+    }
+
+    fn x0() -> Tensor {
+        Tensor::from_vec(&[4], vec![1.0, -0.5, 2.0, 0.25])
+    }
+
+    #[test]
+    fn converges_to_sequential_with_tight_tol() {
+        let p = pool(8);
+        let grid = TimeGrid::uniform(50);
+        let seq = sequential_solve(&p, &grid, &x0());
+        let res = Srds::new(8, 1e-7).run(&p, &grid, &x0());
+        assert!(ops::rmse(&res.output, &seq.output) < 1e-5, "rmse {}", ops::rmse(&res.output, &seq.output));
+    }
+
+    #[test]
+    fn depth_scales_with_cores() {
+        let p = pool(8);
+        let grid = TimeGrid::uniform(50);
+        let r4 = Srds::new(4, 1e-4).run(&p, &grid, &x0());
+        let r8 = Srds::new(8, 1e-4).run(&p, &grid, &x0());
+        assert!(r8.nfe_depth <= r4.nfe_depth, "{} vs {}", r8.nfe_depth, r4.nfe_depth);
+        // RMSE is K-independent (same iterations) — the paper's observation.
+        assert_eq!(r4.iterations, r8.iterations);
+    }
+
+    #[test]
+    fn pipelined_depth_not_worse_than_barrier() {
+        let p = pool(8);
+        let grid = TimeGrid::uniform(50);
+        let res = Srds::new(8, 1e-4).run(&p, &grid, &x0());
+        assert!(res.nfe_depth <= res.nfe_depth_barrier);
+        assert!(res.speedup(50) > 1.0, "speedup {}", res.speedup(50));
+    }
+
+    #[test]
+    fn exact_after_m_iterations() {
+        // Parareal is exact after M iterations regardless of tolerance.
+        let p = pool(4);
+        let grid = TimeGrid::uniform(16);
+        let seq = sequential_solve(&p, &grid, &x0());
+        let res = Srds { cores: 4, tol: 0.0, segments: Some(4) }.run(&p, &grid, &x0());
+        assert!(ops::rmse(&res.output, &seq.output) < 1e-5);
+        assert!(res.iterations <= 4);
+    }
+
+    #[test]
+    fn runs_on_mixture() {
+        let factory = Arc::new(GaussMixtureFactory::standard(vec![8], 3, 0));
+        let p = CorePool::new(6, factory, Arc::new(Euler)).unwrap();
+        let grid = TimeGrid::uniform(36);
+        let mut rng = Rng::seeded(4);
+        let x0 = Tensor::randn(&[8], &mut rng);
+        let seq = sequential_solve(&p, &grid, &x0);
+        let res = Srds::new(6, 1e-4).run(&p, &grid, &x0);
+        assert!(ops::rmse(&res.output, &seq.output) < 0.05);
+    }
+}

@@ -1,0 +1,171 @@
+//! Analytic drift engines with closed-form solutions.
+//!
+//! `ExpOde` is the paper's own reward surrogate (Def. 2.4): `f(x,t) = x`,
+//! `x_0 = 1`, exact solution `x_t = x_0 e^t`. `TrackingOde` adds a stiff
+//! mean-reverting field used to stress rectification in property tests.
+
+use super::{DriftEngine, EngineFactory, ExactSolution};
+use crate::tensor::Tensor;
+
+/// Busy-wait for `us` microseconds (simulated NFE cost; see preset docs).
+pub(crate) fn spin_us(us: u64) {
+    if us == 0 {
+        return;
+    }
+    let t0 = std::time::Instant::now();
+    while (t0.elapsed().as_micros() as u64) < us {
+        std::hint::spin_loop();
+    }
+}
+
+/// `f(x, t) = x` — the exponential ODE of Def. 2.4.
+pub struct ExpOde {
+    dims: Vec<usize>,
+    sim_cost_us: u64,
+}
+
+impl ExpOde {
+    pub fn new(dims: Vec<usize>, sim_cost_us: u64) -> Self {
+        ExpOde { dims, sim_cost_us }
+    }
+}
+
+impl DriftEngine for ExpOde {
+    fn dims(&self) -> Vec<usize> {
+        self.dims.clone()
+    }
+
+    fn drift(&mut self, x: &Tensor, _t: f32) -> Tensor {
+        spin_us(self.sim_cost_us);
+        x.clone()
+    }
+
+    fn name(&self) -> &str {
+        "exp-ode"
+    }
+}
+
+impl ExactSolution for ExpOde {
+    fn exact(&self, x0: &Tensor, t: f32) -> Tensor {
+        let s = t.exp();
+        Tensor::from_vec(x0.dims(), x0.data().iter().map(|v| v * s).collect())
+    }
+}
+
+/// Factory for [`ExpOde`].
+pub struct ExpOdeFactory {
+    dims: Vec<usize>,
+    sim_cost_us: u64,
+}
+
+impl ExpOdeFactory {
+    pub fn new(dims: Vec<usize>, sim_cost_us: u64) -> Self {
+        ExpOdeFactory { dims, sim_cost_us }
+    }
+}
+
+impl EngineFactory for ExpOdeFactory {
+    fn create(&self) -> anyhow::Result<Box<dyn DriftEngine>> {
+        Ok(Box::new(ExpOde::new(self.dims.clone(), self.sim_cost_us)))
+    }
+
+    fn dims(&self) -> Vec<usize> {
+        self.dims.clone()
+    }
+}
+
+/// Stiff tracking ODE: `f(x,t) = -λ (x - sin(ωt)) + ω cos(ωt)`.
+///
+/// Exact solution from x0 at t=0:
+/// `x(t) = sin(ωt) + (x0 - 0) e^{-λ t}` when x0 is measured relative to the
+/// attractor at t=0 (sin 0 = 0). Large λ makes fast solvers diverge quickly
+/// without rectification — a stress test for Prop. 2.1.
+pub struct TrackingOde {
+    dims: Vec<usize>,
+    pub lambda: f32,
+    pub omega: f32,
+}
+
+impl TrackingOde {
+    pub fn new(dims: Vec<usize>, lambda: f32, omega: f32) -> Self {
+        TrackingOde { dims, lambda, omega }
+    }
+}
+
+impl DriftEngine for TrackingOde {
+    fn dims(&self) -> Vec<usize> {
+        self.dims.clone()
+    }
+
+    fn drift(&mut self, x: &Tensor, t: f32) -> Tensor {
+        let target = (self.omega * t).sin();
+        let dtarget = self.omega * (self.omega * t).cos();
+        let l = self.lambda;
+        Tensor::from_vec(x.dims(), x.data().iter().map(|v| -l * (v - target) + dtarget).collect())
+    }
+
+    fn name(&self) -> &str {
+        "tracking-ode"
+    }
+}
+
+impl ExactSolution for TrackingOde {
+    fn exact(&self, x0: &Tensor, t: f32) -> Tensor {
+        // x(t) = sin(ωt) + (x0 - sin(0)) e^{-λt} = sin(ωt) + x0 e^{-λt}
+        let target = (self.omega * t).sin();
+        let decay = (-self.lambda * t).exp();
+        Tensor::from_vec(x0.dims(), x0.data().iter().map(|v| target + v * decay).collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::ops;
+
+    #[test]
+    fn exp_ode_drift_is_identity() {
+        let mut e = ExpOde::new(vec![4], 0);
+        let x = Tensor::from_vec(&[4], vec![1.0, 2.0, -1.0, 0.5]);
+        assert_eq!(e.drift(&x, 0.3), x);
+    }
+
+    #[test]
+    fn exp_ode_exact_matches_fine_euler() {
+        let mut e = ExpOde::new(vec![2], 0);
+        let x0 = Tensor::from_vec(&[2], vec![1.0, -0.5]);
+        // Euler with tiny steps → e^1 scaling
+        let mut x = x0.clone();
+        let n = 20000;
+        for i in 0..n {
+            let t = i as f32 / n as f32;
+            let f = e.drift(&x, t);
+            ops::axpy_into(&mut x, 1.0 / n as f32, &f);
+        }
+        let exact = e.exact(&x0, 1.0);
+        assert!(ops::rmse(&x, &exact) < 2e-4, "rmse {}", ops::rmse(&x, &exact));
+    }
+
+    #[test]
+    fn tracking_ode_exact_matches_fine_euler() {
+        let mut e = TrackingOde::new(vec![1], 4.0, 3.0);
+        let x0 = Tensor::from_vec(&[1], vec![2.0]);
+        let mut x = x0.clone();
+        let n = 40000;
+        for i in 0..n {
+            let t = i as f32 / n as f32;
+            let f = e.drift(&x, t);
+            ops::axpy_into(&mut x, 1.0 / n as f32, &f);
+        }
+        let exact = e.exact(&x0, 1.0);
+        assert!(ops::rmse(&x, &exact) < 1e-3, "rmse {}", ops::rmse(&x, &exact));
+    }
+
+    #[test]
+    fn factory_builds_consistent_dims() {
+        let f = ExpOdeFactory::new(vec![2, 3], 0);
+        let e = f.create().unwrap();
+        assert_eq!(e.dims(), vec![2, 3]);
+        assert_eq!(f.dims(), vec![2, 3]);
+    }
+}

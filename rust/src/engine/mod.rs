@@ -1,0 +1,37 @@
+//! Drift engines: the black-box `f_θ(x, t)` that solvers integrate.
+//!
+//! A *core* in CHORDS owns exactly one engine instance (its "GPU"). Engines
+//! are `Send` (moved into worker threads) but not shared; factories are the
+//! shared, thread-safe constructors that build one engine per worker — this
+//! mirrors one-model-replica-per-GPU deployment and matches the xla crate's
+//! thread-affinity constraints (raw PJRT pointers are not `Sync`).
+
+mod analytic;
+mod mixture;
+mod traits;
+mod wrappers;
+
+pub use analytic::*;
+pub use mixture::*;
+pub use traits::*;
+pub use wrappers::*;
+
+use crate::config::{EngineKind, ModelPreset};
+use std::sync::Arc;
+
+/// Build the engine factory for a preset. HLO presets load artifacts from
+/// `artifacts_dir` (compiled once per worker thread at pool startup).
+pub fn factory_for(
+    preset: &ModelPreset,
+    artifacts_dir: &str,
+) -> anyhow::Result<Arc<dyn EngineFactory>> {
+    match preset.engine {
+        EngineKind::AnalyticExp => Ok(Arc::new(ExpOdeFactory::new(preset.latent_dims(), preset.sim_cost_us))),
+        EngineKind::GaussMixture => Ok(Arc::new(GaussMixtureFactory::standard(
+            preset.latent_dims(),
+            preset.weight_seed,
+            preset.sim_cost_us,
+        ))),
+        EngineKind::HloDit => crate::runtime::hlo_factory(preset, artifacts_dir),
+    }
+}

@@ -1,0 +1,37 @@
+//! Engine traits.
+
+use crate::tensor::Tensor;
+
+/// The black-box drift `f_θ(x, t)` of the probability-flow ODE (paper Eq. 2),
+/// with the paper's convention t=0 noise → t=1 data.
+///
+/// One evaluation = one NFE (network forward evaluation); NFE depth is the
+/// paper's primary speedup metric. Engines take `&mut self` so they may keep
+/// scratch buffers / PJRT handles without synchronization — each core owns
+/// its engine exclusively.
+pub trait DriftEngine: Send {
+    /// Latent dims this engine accepts.
+    fn dims(&self) -> Vec<usize>;
+
+    /// Evaluate `f_θ(x, t)`.
+    fn drift(&mut self, x: &Tensor, t: f32) -> Tensor;
+
+    /// Human-readable backend name.
+    fn name(&self) -> &str;
+}
+
+/// Thread-safe constructor of per-worker engines.
+pub trait EngineFactory: Send + Sync {
+    /// Construct a fresh engine (called once per worker thread).
+    fn create(&self) -> anyhow::Result<Box<dyn DriftEngine>>;
+
+    /// Latent dims of the engines this factory builds.
+    fn dims(&self) -> Vec<usize>;
+}
+
+/// Engines with a closed-form solution, used by theory experiments and
+/// convergence-order tests.
+pub trait ExactSolution {
+    /// Exact solution `x(t)` of the IVP from `x0` at t=0.
+    fn exact(&self, x0: &Tensor, t: f32) -> Tensor;
+}

@@ -1,0 +1,116 @@
+//! Engine wrappers: NFE counting and simulated per-call latency.
+
+use super::{DriftEngine, EngineFactory};
+use crate::tensor::Tensor;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// Shared NFE ledger — counts *total* drift evaluations across all cores.
+/// (Sequential NFE depth, the paper's speedup denominator, is tracked by the
+/// executors; this wrapper provides an independent cross-check and the
+/// "parallel NFEs" statistic.)
+#[derive(Clone, Default)]
+pub struct NfeLedger(Arc<AtomicU64>);
+
+impl NfeLedger {
+    pub fn new() -> Self {
+        NfeLedger(Arc::new(AtomicU64::new(0)))
+    }
+
+    pub fn bump(&self) {
+        self.0.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn total(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+
+    pub fn reset(&self) {
+        self.0.store(0, Ordering::Relaxed);
+    }
+}
+
+/// Wraps an engine and bumps a shared [`NfeLedger`] per drift call.
+pub struct CountingEngine {
+    inner: Box<dyn DriftEngine>,
+    ledger: NfeLedger,
+}
+
+impl CountingEngine {
+    pub fn new(inner: Box<dyn DriftEngine>, ledger: NfeLedger) -> Self {
+        CountingEngine { inner, ledger }
+    }
+}
+
+impl DriftEngine for CountingEngine {
+    fn dims(&self) -> Vec<usize> {
+        self.inner.dims()
+    }
+
+    fn drift(&mut self, x: &Tensor, t: f32) -> Tensor {
+        self.ledger.bump();
+        self.inner.drift(x, t)
+    }
+
+    fn name(&self) -> &str {
+        self.inner.name()
+    }
+}
+
+/// Factory wrapper that attaches a shared ledger to every created engine.
+pub struct CountingFactory {
+    inner: Arc<dyn EngineFactory>,
+    ledger: NfeLedger,
+}
+
+impl CountingFactory {
+    pub fn new(inner: Arc<dyn EngineFactory>, ledger: NfeLedger) -> Self {
+        CountingFactory { inner, ledger }
+    }
+
+    pub fn ledger(&self) -> NfeLedger {
+        self.ledger.clone()
+    }
+}
+
+impl EngineFactory for CountingFactory {
+    fn create(&self) -> anyhow::Result<Box<dyn DriftEngine>> {
+        Ok(Box::new(CountingEngine::new(self.inner.create()?, self.ledger.clone())))
+    }
+
+    fn dims(&self) -> Vec<usize> {
+        self.inner.dims()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::ExpOdeFactory;
+
+    #[test]
+    fn counting_counts() {
+        let ledger = NfeLedger::new();
+        let f = CountingFactory::new(Arc::new(ExpOdeFactory::new(vec![2], 0)), ledger.clone());
+        let mut e = f.create().unwrap();
+        let x = Tensor::zeros(&[2]);
+        for _ in 0..5 {
+            e.drift(&x, 0.1);
+        }
+        assert_eq!(ledger.total(), 5);
+        ledger.reset();
+        assert_eq!(ledger.total(), 0);
+    }
+
+    #[test]
+    fn ledger_shared_across_engines() {
+        let ledger = NfeLedger::new();
+        let f = CountingFactory::new(Arc::new(ExpOdeFactory::new(vec![2], 0)), ledger.clone());
+        let mut e1 = f.create().unwrap();
+        let mut e2 = f.create().unwrap();
+        let x = Tensor::zeros(&[2]);
+        e1.drift(&x, 0.0);
+        e2.drift(&x, 0.0);
+        assert_eq!(ledger.total(), 2);
+    }
+}

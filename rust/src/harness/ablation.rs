@@ -1,0 +1,156 @@
+//! Design-choice ablations (DESIGN.md §5): what does each piece of CHORDS
+//! buy? Driven by `chords ablate`.
+//!
+//! - **Rectification**: the same hierarchy with communication disabled —
+//!   every core solves independently from its bootstrap state. The gap
+//!   between the two fastest-output errors is Prop. 2.1's payoff in situ.
+//! - **Step rule**: Euler (the paper's default) vs Heun/midpoint under the
+//!   same schedule — CHORDS is solver-agnostic (§3 remark), and second-order
+//!   rules trade 2× NFEs/step for accuracy.
+
+use super::runner::Bench;
+use super::workload::Workload;
+use crate::coordinator::{discrete_init_sequence, sequential_solve, ChordsConfig, ChordsExecutor, InitStrategy};
+use crate::engine::factory_for;
+use crate::solvers::rule_by_name;
+use crate::tensor::{ops, Tensor};
+use crate::util::table::{f2, f4, TableBuilder};
+use crate::workers::CorePool;
+use anyhow::Result;
+use std::sync::Arc;
+
+/// One ablation row.
+#[derive(Clone, Debug)]
+pub struct AblationRow {
+    pub variant: String,
+    pub nfe_depth: usize,
+    pub fastest_rmse: f64,
+    pub rectifications: usize,
+}
+
+/// Rectification on/off at each K.
+pub fn ablate_rectification(
+    bench: &Bench,
+    ks: &[usize],
+    samples: usize,
+    seed: u64,
+) -> Result<Vec<AblationRow>> {
+    let n = bench.grid.steps();
+    let workload = Workload::new(bench.preset.latent_dims(), seed, samples);
+    let latents: Vec<Tensor> = workload.iter().collect();
+    let oracles = bench.oracles(&latents);
+    let mut rows = Vec::new();
+    for &k in ks {
+        for (label, disable) in [("rectified", false), ("no-comm", true)] {
+            let seq = discrete_init_sequence(&InitStrategy::Paper, k, n);
+            let mut rmse_sum = 0.0;
+            let mut depth = 0;
+            let mut rects = 0;
+            for (x0, oracle) in latents.iter().zip(&oracles) {
+                let mut cfg = ChordsConfig::new(seq.clone(), bench.grid.clone());
+                cfg.disable_rectification = disable;
+                let exec = ChordsExecutor::new(&bench.pool, cfg);
+                let res = exec.run(x0);
+                rmse_sum += ops::rmse(&res.outputs[0].output, oracle) as f64;
+                depth = res.outputs[0].nfe_depth;
+                rects = res.rectifications;
+            }
+            rows.push(AblationRow {
+                variant: format!("K={k} {label}"),
+                nfe_depth: depth,
+                fastest_rmse: rmse_sum / latents.len() as f64,
+                rectifications: rects,
+            });
+        }
+    }
+    Ok(rows)
+}
+
+/// Step-rule ablation at fixed K (each rule gets its own pool; second-order
+/// rules double the NFEs per lockstep step).
+pub fn ablate_step_rule(
+    model: &str,
+    steps: usize,
+    k: usize,
+    samples: usize,
+    seed: u64,
+    artifacts_dir: &str,
+) -> Result<Vec<AblationRow>> {
+    let preset = crate::config::preset(model)
+        .ok_or_else(|| anyhow::anyhow!("unknown preset '{model}'"))?;
+    let mut rows = Vec::new();
+    for rule_name in ["euler", "heun", "midpoint"] {
+        let factory = factory_for(preset, artifacts_dir)?;
+        let rule = rule_by_name(rule_name).unwrap();
+        let pool = CorePool::new(k, factory, Arc::from(rule))?;
+        let grid = crate::solvers::TimeGrid::uniform(steps);
+        let workload = Workload::new(preset.latent_dims(), seed, samples);
+        let seq = discrete_init_sequence(&InitStrategy::Paper, k, steps);
+        let mut rmse_sum = 0.0;
+        let mut depth = 0;
+        let mut rects = 0;
+        for x0 in workload.iter() {
+            let oracle = sequential_solve(&pool, &grid, &x0);
+            let exec = ChordsExecutor::new(&pool, ChordsConfig::new(seq.clone(), grid.clone()));
+            let res = exec.run(&x0);
+            rmse_sum += ops::rmse(&res.outputs[0].output, &oracle.output) as f64;
+            depth = res.outputs[0].nfe_depth;
+            rects = res.rectifications;
+        }
+        rows.push(AblationRow {
+            variant: format!("{rule_name} (K={k})"),
+            nfe_depth: depth,
+            fastest_rmse: rmse_sum / samples as f64,
+            rectifications: rects,
+        });
+    }
+    Ok(rows)
+}
+
+/// Render ablation rows.
+pub fn render_ablation(title: &str, rows: &[AblationRow], markdown: bool) -> String {
+    let mut t = TableBuilder::new(&["Variant", "NFE depth", "Speedup vs depth", "Fastest RMSE", "Rectifications"]);
+    for r in rows {
+        t.row(vec![
+            r.variant.clone(),
+            r.nfe_depth.to_string(),
+            f2(50.0 / r.nfe_depth as f64),
+            f4(r.fastest_rmse),
+            r.rectifications.to_string(),
+        ]);
+    }
+    format!("## {title}\n\n{}", if markdown { t.markdown() } else { t.text() })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rectification_ablation_shows_the_gap() {
+        let bench = Bench::new("gauss-mix", 40, 8, "artifacts").unwrap();
+        let rows = ablate_rectification(&bench, &[4, 8], 2, 0).unwrap();
+        assert_eq!(rows.len(), 4);
+        for pair in rows.chunks(2) {
+            let (on, off) = (&pair[0], &pair[1]);
+            assert_eq!(on.nfe_depth, off.nfe_depth, "same schedule");
+            assert!(off.rectifications == 0 && on.rectifications > 0);
+            assert!(
+                on.fastest_rmse < off.fastest_rmse * 0.8,
+                "rectification must materially cut error: {} vs {}",
+                on.fastest_rmse,
+                off.fastest_rmse
+            );
+        }
+    }
+
+    #[test]
+    fn step_rule_ablation_runs_all_rules() {
+        let rows = ablate_step_rule("gauss-mix", 30, 4, 1, 0, "artifacts").unwrap();
+        assert_eq!(rows.len(), 3);
+        for r in &rows {
+            assert!(r.fastest_rmse.is_finite());
+            assert!(r.rectifications > 0);
+        }
+    }
+}

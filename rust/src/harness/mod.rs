@@ -1,0 +1,12 @@
+//! Experiment harness: regenerates every table and figure of the paper's
+//! evaluation (see DESIGN.md §5 for the experiment index).
+
+mod ablation;
+mod runner;
+mod tables;
+mod workload;
+
+pub use ablation::*;
+pub use runner::*;
+pub use tables::*;
+pub use workload::*;

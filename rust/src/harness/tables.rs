@@ -1,0 +1,322 @@
+//! Table/figure generators — one function per paper table or figure.
+//!
+//! Each generator prints the same columns as the paper and returns the raw
+//! cells so tests can assert the *shape* claims (who wins, by what factor,
+//! where crossovers fall — DESIGN.md §5).
+
+use super::runner::{Bench, CellResult};
+use super::workload::Workload;
+use crate::config::{Method, RunConfig};
+use crate::coordinator::{
+    discrete_init_sequence, sequential_solve, ChordsConfig, ChordsExecutor, InitStrategy,
+};
+use crate::metrics::{convergence_auc, convergence_curve, ConvergencePoint};
+use crate::tensor::Tensor;
+use crate::util::table::{f1, f2, f3, pct, TableBuilder};
+use anyhow::Result;
+
+/// Options shared by the table generators.
+#[derive(Clone, Debug)]
+pub struct TableOpts {
+    /// Samples per cell (the paper uses ~1000 prompts; default is smaller
+    /// for CI-speed, configurable via `--samples`).
+    pub samples: usize,
+    pub steps: usize,
+    pub seed: u64,
+    pub artifacts_dir: String,
+    /// Emit markdown instead of aligned text.
+    pub markdown: bool,
+}
+
+impl Default for TableOpts {
+    fn default() -> Self {
+        TableOpts { samples: 4, steps: 50, seed: 0, artifacts_dir: "artifacts".into(), markdown: false }
+    }
+}
+
+const TABLE_CORES: [usize; 3] = [4, 6, 8];
+const METHODS: [Method; 4] = [Method::Sequential, Method::ParaDigms, Method::Srds, Method::Chords];
+
+/// Run the Table 1/2 grid for the given presets. Returns all cells.
+pub fn run_method_grid(presets: &[&str], opts: &TableOpts) -> Result<Vec<CellResult>> {
+    let mut cells = Vec::new();
+    for model in presets {
+        let bench = Bench::new(model, opts.steps, *TABLE_CORES.iter().max().unwrap(), &opts.artifacts_dir)?;
+        let workload = Workload::new(bench.preset.latent_dims(), opts.seed, opts.samples);
+        let latents: Vec<Tensor> = workload.iter().collect();
+        let oracles = bench.oracles(&latents);
+        for &k in &TABLE_CORES {
+            for method in METHODS {
+                let cfg = RunConfig {
+                    model: model.to_string(),
+                    steps: opts.steps,
+                    cores: k,
+                    method,
+                    init: InitStrategy::Paper,
+                    seed: opts.seed,
+                    artifacts_dir: opts.artifacts_dir.clone(),
+                    ..Default::default()
+                };
+                cells.push(bench.cell(&cfg, &latents, &oracles)?);
+                // Sequential is K-independent; run it once per model.
+                if method == Method::Sequential {
+                    continue;
+                }
+            }
+        }
+    }
+    Ok(cells)
+}
+
+/// Render a Table 1/2-style report.
+pub fn render_method_grid(cells: &[CellResult], title: &str, markdown: bool) -> String {
+    let mut out = format!("## {title}\n\n");
+    let mut table = TableBuilder::new(&[
+        "Model", "Method", "K", "Time/sample (s)", "Speedup", "Quality", "Latent RMSE",
+    ]);
+    for c in cells {
+        table.row(vec![
+            c.model.clone(),
+            c.method.name().to_string(),
+            c.cores.to_string(),
+            format!("{:.3}", c.time_per_sample_s),
+            if c.method == Method::Sequential { "-".into() } else { f1(c.speedup) },
+            pct(c.quality),
+            if c.method == Method::Sequential { "-".into() } else { f3(c.latent_rmse) },
+        ]);
+    }
+    out.push_str(&if markdown { table.markdown() } else { table.text() });
+    out
+}
+
+/// Table 1: video presets.
+pub fn table1(opts: &TableOpts) -> Result<(Vec<CellResult>, String)> {
+    let presets: Vec<&str> = crate::config::video_presets().iter().map(|p| p.name).collect();
+    let cells = run_method_grid(&presets, opts)?;
+    let report = render_method_grid(&cells, "Table 1 — video diffusion presets", opts.markdown);
+    Ok((cells, report))
+}
+
+/// Table 2: image presets.
+pub fn table2(opts: &TableOpts) -> Result<(Vec<CellResult>, String)> {
+    let presets: Vec<&str> = crate::config::image_presets().iter().map(|p| p.name).collect();
+    let cells = run_method_grid(&presets, opts)?;
+    let report = render_method_grid(&cells, "Table 2 — image diffusion presets", opts.markdown);
+    Ok((cells, report))
+}
+
+/// Table 3: initialization-sequence ablation (calibrated vs uniform).
+pub fn table3(opts: &TableOpts, presets: &[&str]) -> Result<(Vec<(CellResult, String)>, String)> {
+    let mut rows = Vec::new();
+    for model in presets {
+        let bench = Bench::new(model, opts.steps, 8, &opts.artifacts_dir)?;
+        let workload = Workload::new(bench.preset.latent_dims(), opts.seed, opts.samples);
+        let latents: Vec<Tensor> = workload.iter().collect();
+        let oracles = bench.oracles(&latents);
+        for &k in &TABLE_CORES {
+            for init in [InitStrategy::Paper, InitStrategy::Uniform] {
+                let cfg = RunConfig {
+                    model: model.to_string(),
+                    steps: opts.steps,
+                    cores: k,
+                    method: Method::Chords,
+                    init: init.clone(),
+                    seed: opts.seed,
+                    artifacts_dir: opts.artifacts_dir.clone(),
+                    ..Default::default()
+                };
+                let cell = bench.cell(&cfg, &latents, &oracles)?;
+                let label = if init == InitStrategy::Uniform { "Uniform" } else { "Ours" };
+                rows.push((cell, label.to_string()));
+            }
+        }
+    }
+    let mut table = TableBuilder::new(&["Model", "K", "Init", "Speedup", "Quality", "Latent RMSE"]);
+    for (c, label) in &rows {
+        table.row(vec![
+            c.model.clone(),
+            c.cores.to_string(),
+            label.clone(),
+            f1(c.speedup),
+            pct(c.quality),
+            f3(c.latent_rmse),
+        ]);
+    }
+    let mut report = String::from("## Table 3 — initialization-sequence ablation\n\n");
+    report.push_str(&if opts.markdown { table.markdown() } else { table.text() });
+    Ok((rows, report))
+}
+
+/// Table 4: steps sweep N ∈ {50, 75, 100} at K = 8.
+pub fn table4(opts: &TableOpts, model: &str) -> Result<(Vec<CellResult>, String)> {
+    let mut cells = Vec::new();
+    for steps in [50usize, 75, 100] {
+        let bench = Bench::new(model, steps, 8, &opts.artifacts_dir)?;
+        let workload = Workload::new(bench.preset.latent_dims(), opts.seed, opts.samples);
+        let latents: Vec<Tensor> = workload.iter().collect();
+        let oracles = bench.oracles(&latents);
+        let cfg = RunConfig {
+            model: model.to_string(),
+            steps,
+            cores: 8,
+            method: Method::Chords,
+            init: if steps == 50 { InitStrategy::Paper } else { InitStrategy::Calibrated },
+            seed: opts.seed,
+            artifacts_dir: opts.artifacts_dir.clone(),
+            ..Default::default()
+        };
+        cells.push(bench.cell(&cfg, &latents, &oracles)?);
+    }
+    let mut table =
+        TableBuilder::new(&["Total steps", "Time/sample (s)", "Speedup", "Quality", "Latent RMSE"]);
+    for c in &cells {
+        table.row(vec![
+            c.steps.to_string(),
+            format!("{:.3}", c.time_per_sample_s),
+            f1(c.speedup),
+            pct(c.quality),
+            f3(c.latent_rmse),
+        ]);
+    }
+    let mut report = format!("## Table 4 — steps sweep on {model} (K=8)\n\n");
+    report.push_str(&if opts.markdown { table.markdown() } else { table.text() });
+    Ok((cells, report))
+}
+
+/// One Fig. 4 series: convergence AUC + fastest-output error vs K.
+#[derive(Clone, Debug)]
+pub struct ScalingPoint {
+    pub cores: usize,
+    pub speedup: f64,
+    pub fastest_rmse: f64,
+    pub auc: f64,
+}
+
+/// Fig. 4: scaling with the number of cores.
+pub fn fig4(opts: &TableOpts, model: &str, core_range: &[usize]) -> Result<(Vec<ScalingPoint>, String)> {
+    let max_k = *core_range.iter().max().unwrap();
+    let bench = Bench::new(model, opts.steps, max_k, &opts.artifacts_dir)?;
+    let workload = Workload::new(bench.preset.latent_dims(), opts.seed, opts.samples);
+    let latents: Vec<Tensor> = workload.iter().collect();
+    let oracles = bench.oracles(&latents);
+    let mut pts = Vec::new();
+    for &k in core_range {
+        let seq = discrete_init_sequence(&InitStrategy::Calibrated, k, opts.steps);
+        let mut speedups = 0.0;
+        let mut rmses = 0.0;
+        let mut aucs = 0.0;
+        for (x0, oracle) in latents.iter().zip(&oracles) {
+            let ccfg = ChordsConfig::new(seq.clone(), bench.grid.clone());
+            let exec = ChordsExecutor::new(&bench.pool, ccfg);
+            let r = exec.run(x0);
+            let curve = convergence_curve(&r.outputs, oracle);
+            speedups += opts.steps as f64 / r.outputs[0].nfe_depth as f64;
+            rmses += curve[0].rmse as f64;
+            aucs += convergence_auc(&curve);
+        }
+        let n = latents.len() as f64;
+        pts.push(ScalingPoint {
+            cores: k,
+            speedup: speedups / n,
+            fastest_rmse: rmses / n,
+            auc: aucs / n,
+        });
+    }
+    let mut table = TableBuilder::new(&["K", "Speedup", "Fastest-output RMSE", "Convergence AUC"]);
+    for p in &pts {
+        table.row(vec![p.cores.to_string(), f2(p.speedup), f3(p.fastest_rmse), f3(p.auc)]);
+    }
+    let mut report = format!("## Fig. 4 — scaling with cores on {model}\n\n");
+    report.push_str(&if opts.markdown { table.markdown() } else { table.text() });
+    Ok((pts, report))
+}
+
+/// Fig. 5: convergence curves (L1 of streamed outputs vs final), ours vs
+/// uniform initialization.
+pub fn fig5(
+    opts: &TableOpts,
+    model: &str,
+    k: usize,
+) -> Result<(Vec<(String, Vec<ConvergencePoint>)>, String)> {
+    let bench = Bench::new(model, opts.steps, k, &opts.artifacts_dir)?;
+    let workload = Workload::new(bench.preset.latent_dims(), opts.seed, 1);
+    let x0 = workload.latent(0);
+    let oracle = sequential_solve(&bench.pool, &bench.grid, &x0).output;
+    let mut curves = Vec::new();
+    for (label, init) in
+        [("ours", InitStrategy::Paper), ("uniform", InitStrategy::Uniform)]
+    {
+        let seq = discrete_init_sequence(&init, k, opts.steps);
+        let ccfg = ChordsConfig::new(seq, bench.grid.clone());
+        let exec = ChordsExecutor::new(&bench.pool, ccfg);
+        let r = exec.run(&x0);
+        curves.push((label.to_string(), convergence_curve(&r.outputs, &oracle)));
+    }
+    let mut report = format!("## Fig. 5 — convergence curves on {model} (K={k})\n\n");
+    let mut table = TableBuilder::new(&["Init", "NFE depth", "L1 to final"]);
+    for (label, curve) in &curves {
+        for p in curve {
+            table.row(vec![label.clone(), p.nfe_depth.to_string(), format!("{:.5}", p.l1)]);
+        }
+    }
+    report.push_str(&if opts.markdown { table.markdown() } else { table.text() });
+    Ok((curves, report))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn opts() -> TableOpts {
+        TableOpts { samples: 2, steps: 40, ..Default::default() }
+    }
+
+    /// NOTE: the full paper-shape assertions (CHORDS > SRDS > ParaDIGMS,
+    /// calibrated Î > uniform Î) are checked on the DiT presets in
+    /// `rust/tests/paper_shape.rs` — the smooth analytic engines here make
+    /// Picard/parareal unrealistically strong (tiny drift curvature), so the
+    /// lib tests assert method-independent invariants only.
+    #[test]
+    fn grid_shape_on_analytic_preset() {
+        let cells = run_method_grid(&["gauss-mix"], &opts()).unwrap();
+        // 3 K values × 4 methods.
+        assert_eq!(cells.len(), 12);
+        for &k in &TABLE_CORES {
+            let get = |m: Method| cells.iter().find(|c| c.cores == k && c.method == m).unwrap();
+            let chords = get(Method::Chords);
+            let srds = get(Method::Srds);
+            let seq = get(Method::Sequential);
+            assert!(chords.speedup > 2.0, "K={k} chords speedup {}", chords.speedup);
+            assert!(chords.speedup >= srds.speedup, "K={k}");
+            assert!(chords.quality > 0.95, "K={k} quality {}", chords.quality);
+            assert_eq!(seq.latent_rmse, 0.0);
+            // SRDS stays near the oracle; ParaDIGMS trades quality for
+            // speed at its default (paper-matched) tolerance, so only a
+            // loose floor applies.
+            assert!(get(Method::Srds).quality > 0.9, "K={k} SRDS");
+            assert!(get(Method::ParaDigms).quality > 0.6, "K={k} ParaDIGMS");
+        }
+    }
+
+    #[test]
+    fn fig4_convergence_improves_with_k() {
+        // The paper's Fig. 4 claim: more cores → better empirical
+        // convergence (fastest-output error drops), with speedup maintained.
+        let (pts, _) = fig4(&opts(), "gauss-mix", &[2, 4, 8]).unwrap();
+        assert!(pts[2].fastest_rmse < pts[0].fastest_rmse, "{pts:?}");
+        assert!(pts[2].auc < pts[0].auc, "{pts:?}");
+        assert!(pts[1].speedup > 2.0 && pts[2].speedup > 2.0);
+    }
+
+    #[test]
+    fn fig5_curves_converge_monotonically() {
+        let (curves, _) = fig5(&opts(), "gauss-mix", 8).unwrap();
+        for (label, curve) in &curves {
+            assert!(convergence_auc(curve) >= 0.0);
+            for w in curve.windows(2) {
+                assert!(w[1].l1 <= w[0].l1 + 1e-6, "{label} not monotone");
+            }
+            assert_eq!(curve.last().unwrap().l1, 0.0, "{label} must reach the final output");
+        }
+    }
+}

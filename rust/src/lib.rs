@@ -1,0 +1,22 @@
+//! CHORDS — multi-core hierarchical ODE solvers for diffusion sampling.
+//!
+//! Three-layer architecture (see DESIGN.md):
+//! - L3 (this crate): the Rust coordinator — CHORDS executor, scheduler,
+//!   rectifier, init-sequence selection, baselines, metrics, harness, server.
+//! - L2/L1 (build-time Python): JAX DiT denoiser + Pallas kernels, AOT-lowered
+//!   to HLO text under `artifacts/`, loaded here via the PJRT CPU client.
+//!
+//! Python never runs on the request path.
+
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod engine;
+pub mod harness;
+pub mod metrics;
+pub mod runtime;
+pub mod server;
+pub mod solvers;
+pub mod tensor;
+pub mod util;
+pub mod workers;

@@ -1,0 +1,253 @@
+//! `chords` CLI — leader entrypoint for generation, experiment
+//! reproduction, tracing, and serving. See `chords help`.
+
+use anyhow::{anyhow, Result};
+use chords::cli::{help_text, Args};
+use chords::config::RunConfig;
+use chords::coordinator::{
+    discrete_init_sequence, events::render_trace, reward, sequential_solve, ChordsConfig,
+    ChordsExecutor,
+};
+use chords::harness::{fig4, fig5, table1, table2, table3, table4, Bench, TableOpts, Workload};
+use chords::metrics::fidelity;
+use chords::runtime::Manifest;
+use chords::server::{Router, Server};
+use chords::tensor::Tensor;
+use std::sync::Arc;
+
+fn main() {
+    let args = match Args::from_env() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("argument error: {e}\n\n{}", help_text());
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = dispatch(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run_config(args: &Args) -> Result<RunConfig> {
+    let mut cfg = RunConfig::default();
+    for (k, v) in args.overrides() {
+        cfg.set(k, v).map_err(|e| anyhow!(e))?;
+    }
+    Ok(cfg)
+}
+
+fn table_opts(args: &Args) -> Result<TableOpts> {
+    let mut o = TableOpts {
+        samples: args.flag_parsed("samples", 4usize).map_err(|e| anyhow!(e))?,
+        markdown: args.has_flag("markdown"),
+        ..Default::default()
+    };
+    for (k, v) in args.overrides() {
+        match k.as_str() {
+            "steps" | "n" => o.steps = v.parse()?,
+            "seed" => o.seed = v.parse()?,
+            "artifacts" => o.artifacts_dir = v.clone(),
+            _ => {}
+        }
+    }
+    Ok(o)
+}
+
+fn dispatch(args: &Args) -> Result<()> {
+    match args.command.as_str() {
+        "help" | "--help" | "-h" => {
+            println!("{}", help_text());
+        }
+        "generate" => cmd_generate(args)?,
+        "table1" => {
+            let (_, report) = table1(&table_opts(args)?)?;
+            println!("{report}");
+        }
+        "table2" => {
+            let (_, report) = table2(&table_opts(args)?)?;
+            println!("{report}");
+        }
+        "table3" => {
+            let opts = table_opts(args)?;
+            let models = if args.positional.is_empty() {
+                vec!["hunyuan-sim", "flux-sim"]
+            } else {
+                args.positional.iter().map(|s| s.as_str()).collect()
+            };
+            let (_, report) = table3(&opts, &models)?;
+            println!("{report}");
+        }
+        "table4" => {
+            let opts = table_opts(args)?;
+            let model = args.positional.first().map(|s| s.as_str()).unwrap_or("hunyuan-sim");
+            let (_, report) = table4(&opts, model)?;
+            println!("{report}");
+        }
+        "fig4" => {
+            let opts = table_opts(args)?;
+            let model = args.positional.first().map(|s| s.as_str()).unwrap_or("hunyuan-sim");
+            let (_, report) = fig4(&opts, model, &[2, 3, 4, 5, 6, 7, 8])?;
+            println!("{report}");
+        }
+        "fig5" => {
+            let opts = table_opts(args)?;
+            let model = args.positional.first().map(|s| s.as_str()).unwrap_or("hunyuan-sim");
+            let (_, report) = fig5(&opts, model, 8)?;
+            println!("{report}");
+        }
+        "trace" => cmd_trace(args)?,
+        "ablate" => cmd_ablate(args)?,
+        "reward-sweep" => cmd_reward_sweep()?,
+        "serve" => cmd_serve(args)?,
+        "inspect-artifacts" => cmd_inspect(args)?,
+        other => {
+            eprintln!("unknown command '{other}'\n\n{}", help_text());
+            std::process::exit(2);
+        }
+    }
+    Ok(())
+}
+
+fn cmd_generate(args: &Args) -> Result<()> {
+    let cfg = run_config(args)?;
+    let bench = Bench::new(&cfg.model, cfg.steps, cfg.cores.max(1), &cfg.artifacts_dir)?;
+    let workload = Workload::new(bench.preset.latent_dims(), cfg.seed, 1);
+    let x0 = workload.latent(0);
+    println!(
+        "model={} ({}) steps={} cores={} method={}",
+        cfg.model,
+        bench.preset.simulates,
+        cfg.steps,
+        cfg.cores,
+        cfg.method.name()
+    );
+    let oracle = sequential_solve(&bench.pool, &bench.grid, &x0);
+    println!("sequential oracle: {:.3}s at depth {}", oracle.wall_s, oracle.nfe_depth);
+    let runs = bench.run_method(&cfg, &[x0])?;
+    let run = &runs[0];
+    let fid = fidelity(&run.output, &oracle.output);
+    println!(
+        "{}: {:.3}s, NFE depth {}, speedup {:.2}x, latent RMSE {:.4}, cosine {:.4}",
+        cfg.method.name(),
+        run.wall_s,
+        run.nfe_depth,
+        cfg.steps as f64 / run.nfe_depth as f64,
+        fid.latent_rmse,
+        fid.cosine,
+    );
+    Ok(())
+}
+
+fn cmd_trace(args: &Args) -> Result<()> {
+    let cfg = run_config(args)?;
+    let bench = Bench::new(&cfg.model, cfg.steps, cfg.cores, &cfg.artifacts_dir)?;
+    let seq = discrete_init_sequence(&cfg.init, cfg.cores, cfg.steps);
+    println!("Î = {seq:?} (strategy: {})", cfg.init.name());
+    let mut ccfg = ChordsConfig::new(seq, bench.grid.clone());
+    ccfg.record_trace = true;
+    let exec = ChordsExecutor::new(&bench.pool, ccfg);
+    let workload = Workload::new(bench.preset.latent_dims(), cfg.seed, 1);
+    let res = exec.run(&workload.latent(0));
+    println!("{}", render_trace(&res.trace, cfg.cores));
+    println!(
+        "rectifications: {}, comm bytes: {}, total NFEs: {}",
+        res.rectifications, res.comm_bytes, res.total_nfes
+    );
+    for o in &res.outputs {
+        println!(
+            "core {} emitted at depth {:>3} → speedup {:.2}x",
+            o.core,
+            o.nfe_depth,
+            cfg.steps as f64 / o.nfe_depth as f64
+        );
+    }
+    Ok(())
+}
+
+fn cmd_ablate(args: &Args) -> Result<()> {
+    use chords::harness::{ablate_rectification, ablate_step_rule, render_ablation};
+    let cfg = run_config(args)?;
+    let samples: usize = args.flag_parsed("samples", 2).map_err(|e| anyhow!(e))?;
+    let md = args.has_flag("markdown");
+    let bench = Bench::new(&cfg.model, cfg.steps, 8, &cfg.artifacts_dir)?;
+    let rows = ablate_rectification(&bench, &[4, 6, 8], samples, cfg.seed)?;
+    println!(
+        "{}",
+        render_ablation(&format!("Rectification ablation on {}", cfg.model), &rows, md)
+    );
+    let rows = ablate_step_rule(&cfg.model, cfg.steps, 4, samples, cfg.seed, &cfg.artifacts_dir)?;
+    println!(
+        "{}",
+        render_ablation(&format!("Step-rule ablation on {}", cfg.model), &rows, md)
+    );
+    Ok(())
+}
+
+fn cmd_reward_sweep() -> Result<()> {
+    println!("Reward surrogate R(I) = ln x_1^K on f(x,t)=x, x0=1 (Def. 2.4)\n");
+    println!("Thm 2.5 optimal K=3 sequences:");
+    for s in [2.0f64, 2.5, 3.0, 4.0, 5.0] {
+        let opt = reward::theorem_optimal_k3(s);
+        println!(
+            "  s={s:.1}: I = [{:.3}, {:.3}, {:.3}]  R = {:.6}",
+            opt[0],
+            opt[1],
+            opt[2],
+            reward::reward(&opt)
+        );
+    }
+    println!("\ncalibrated vs uniform (K=4, s=10/3, Fig. 2 setting):");
+    let rec = chords::coordinator::continuous_init_sequence(4, 10.0 / 3.0);
+    let uni: Vec<f64> = (0..4).map(|i| rec[3] * i as f64 / 3.0).collect();
+    println!("  calibrated {rec:?} → R = {:.6}", reward::reward(&rec));
+    println!("  uniform    {uni:?} → R = {:.6}", reward::reward(&uni));
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let port: u16 = args.flag_parsed("port", 7077).map_err(|e| anyhow!(e))?;
+    let cores: usize = args.flag_parsed("cores", 8).map_err(|e| anyhow!(e))?;
+    let artifacts = args.flag("artifacts").unwrap_or("artifacts").to_string();
+    let router = Arc::new(Router::new(&artifacts, cores));
+    let server = Server::start("127.0.0.1", port, router)?;
+    println!("chords server listening on {} (max {cores} cores per request)", server.addr);
+    println!("protocol: JSON lines; ops: ping | stats | generate");
+    // Serve until killed.
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}
+
+fn cmd_inspect(args: &Args) -> Result<()> {
+    let dir = args.flag("artifacts").unwrap_or("artifacts");
+    let manifest = Manifest::load(dir)?;
+    manifest.validate_files()?;
+    println!("manifest at {dir}/manifest.json — {} artifacts", manifest.entries.len());
+    for e in &manifest.entries {
+        let size = std::fs::metadata(&e.path).map(|m| m.len()).unwrap_or(0);
+        println!(
+            "  {:<14} {:<8} dims={:?} param={:<8} {} ({} KiB)",
+            e.preset,
+            e.entry,
+            e.dims,
+            e.param,
+            e.path.display(),
+            size / 1024
+        );
+    }
+    // Smoke-compile the first artifact to prove loadability.
+    if let Some(e) = manifest.entries.first() {
+        let eng = chords::runtime::HloEngine::from_file(&e.path, e.dims.clone(), "inspect".into())?;
+        let mut eng: Box<dyn chords::engine::DriftEngine> = Box::new(eng);
+        let x = Tensor::zeros(&e.dims);
+        let f = eng.drift(&x, 0.5);
+        println!(
+            "smoke-executed {}/{}: |f(0, 0.5)|₂ = {:.4}",
+            e.preset,
+            e.entry,
+            chords::tensor::ops::norm(&f)
+        );
+    }
+    Ok(())
+}

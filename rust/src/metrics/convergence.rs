@@ -1,0 +1,84 @@
+//! Convergence curves (paper Fig. 5 / Fig. 4): distance of each streamed
+//! output from the final (sequential) output, as a function of the
+//! sequential NFE depth at which it was produced.
+
+use crate::coordinator::CoreOutput;
+use crate::tensor::{ops, Tensor};
+
+/// One point on a convergence curve.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ConvergencePoint {
+    /// Sequential NFE depth when the output was produced.
+    pub nfe_depth: usize,
+    /// Core that produced it.
+    pub core: usize,
+    /// L1 distance to the reference output (Fig. 5's y-axis).
+    pub l1: f32,
+    /// RMSE to the reference output.
+    pub rmse: f32,
+}
+
+/// Build a convergence curve from CHORDS streamed outputs against the final
+/// (sequential-identical) output.
+pub fn convergence_curve(outputs: &[CoreOutput], reference: &Tensor) -> Vec<ConvergencePoint> {
+    let mut pts: Vec<ConvergencePoint> = outputs
+        .iter()
+        .map(|o| ConvergencePoint {
+            nfe_depth: o.nfe_depth,
+            core: o.core,
+            l1: ops::l1(&o.output, reference),
+            rmse: ops::rmse(&o.output, reference),
+        })
+        .collect();
+    pts.sort_by_key(|p| p.nfe_depth);
+    pts
+}
+
+/// Area under the L1 convergence curve (trapezoid over NFE depth) —
+/// a single scalar for "how fast does the stream converge", used to compare
+/// initialization strategies (lower is better).
+pub fn convergence_auc(curve: &[ConvergencePoint]) -> f64 {
+    if curve.len() < 2 {
+        return curve.first().map(|p| p.l1 as f64).unwrap_or(0.0);
+    }
+    let mut auc = 0.0;
+    for w in curve.windows(2) {
+        let dx = (w[1].nfe_depth - w[0].nfe_depth) as f64;
+        auc += 0.5 * (w[0].l1 as f64 + w[1].l1 as f64) * dx;
+    }
+    auc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn out(core: usize, depth: usize, val: f32) -> CoreOutput {
+        CoreOutput {
+            core,
+            output: Tensor::full(&[2], val),
+            nfe_depth: depth,
+            wall_s: 0.0,
+            step: depth,
+        }
+    }
+
+    #[test]
+    fn curve_sorted_and_final_zero() {
+        let reference = Tensor::full(&[2], 1.0);
+        let outs = vec![out(2, 30, 1.2), out(1, 50, 1.0)];
+        let c = convergence_curve(&outs, &reference);
+        assert_eq!(c[0].nfe_depth, 30);
+        assert!((c[0].l1 - 0.2).abs() < 1e-6);
+        assert_eq!(c[1].l1, 0.0);
+    }
+
+    #[test]
+    fn auc_trapezoid() {
+        let reference = Tensor::full(&[2], 0.0);
+        let outs = vec![out(2, 10, 1.0), out(1, 20, 0.0)];
+        let c = convergence_curve(&outs, &reference);
+        // trapezoid: (1.0 + 0.0)/2 * 10 = 5
+        assert!((convergence_auc(&c) - 5.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,10 @@
+//! Evaluation metrics mirroring the paper's columns (Tables 1–2):
+//! latent RMSE vs the sequential oracle, quality proxies (cosine/PSNR
+//! against the oracle; exact mixture NLL where the ground-truth distribution
+//! is known), speedup, and convergence curves (Fig. 5).
+
+mod convergence;
+mod quality;
+
+pub use convergence::*;
+pub use quality::*;

@@ -1,0 +1,144 @@
+//! Artifact manifest: `artifacts/manifest.json`, written by the Python AOT
+//! pipeline, describing every compiled entry point (preset, entry name,
+//! HLO file, input/output shapes).
+
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// One compiled entry point.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ArtifactEntry {
+    /// Preset name, e.g. "sd35-sim".
+    pub preset: String,
+    /// Entry point, e.g. "drift".
+    pub entry: String,
+    /// Absolute path to the HLO text file.
+    pub path: PathBuf,
+    /// Latent dims (tokens, channels).
+    pub dims: Vec<usize>,
+    /// Parameterization recorded by the compiler ("velocity" | "epsilon").
+    pub param: String,
+}
+
+/// The parsed manifest.
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    pub entries: Vec<ArtifactEntry>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &str) -> Result<Manifest> {
+        let path = Path::new(dir).join("manifest.json");
+        let text = std::fs::read_to_string(&path).with_context(|| {
+            format!(
+                "cannot read {} — run `make artifacts` to AOT-compile the models",
+                path.display()
+            )
+        })?;
+        Self::parse(&text, dir)
+    }
+
+    /// Parse manifest JSON; `dir` resolves relative artifact paths.
+    pub fn parse(text: &str, dir: &str) -> Result<Manifest> {
+        let root = Json::parse(text).map_err(|e| anyhow!("manifest parse error: {e}"))?;
+        let list = root
+            .get("artifacts")
+            .and_then(|a| a.as_arr())
+            .ok_or_else(|| anyhow!("manifest missing 'artifacts' array"))?;
+        let mut entries = Vec::with_capacity(list.len());
+        for item in list {
+            let get_str = |k: &str| -> Result<String> {
+                Ok(item
+                    .get(k)
+                    .and_then(|v| v.as_str())
+                    .ok_or_else(|| anyhow!("manifest entry missing '{k}'"))?
+                    .to_string())
+            };
+            let preset = get_str("preset")?;
+            let entry = get_str("entry")?;
+            let rel = get_str("path")?;
+            let param = get_str("param").unwrap_or_else(|_| "velocity".to_string());
+            let dims = item
+                .get("dims")
+                .and_then(|v| v.as_arr())
+                .ok_or_else(|| anyhow!("manifest entry missing 'dims'"))?
+                .iter()
+                .map(|d| d.as_usize().ok_or_else(|| anyhow!("bad dim")))
+                .collect::<Result<Vec<_>>>()?;
+            let path = if Path::new(&rel).is_absolute() {
+                PathBuf::from(rel)
+            } else {
+                Path::new(dir).join(rel)
+            };
+            entries.push(ArtifactEntry { preset, entry, path, dims, param });
+        }
+        Ok(Manifest { entries })
+    }
+
+    /// Find an entry by preset + entry-point name.
+    pub fn entry(&self, preset: &str, entry: &str) -> Result<&ArtifactEntry> {
+        self.entries.iter().find(|e| e.preset == preset && e.entry == entry).ok_or_else(|| {
+            anyhow!(
+                "artifact '{entry}' for preset '{preset}' not in manifest — run `make artifacts`"
+            )
+        })
+    }
+
+    /// All presets present in the manifest.
+    pub fn presets(&self) -> Vec<&str> {
+        let mut v: Vec<&str> = self.entries.iter().map(|e| e.preset.as_str()).collect();
+        v.sort();
+        v.dedup();
+        v
+    }
+
+    /// Validate that every referenced file exists.
+    pub fn validate_files(&self) -> Result<()> {
+        for e in &self.entries {
+            if !e.path.exists() {
+                bail!("artifact file missing: {} (run `make artifacts`)", e.path.display());
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+        "artifacts": [
+            {"preset": "sd35-sim", "entry": "drift", "path": "sd35-sim/drift.hlo.txt",
+             "dims": [64, 128], "param": "velocity"},
+            {"preset": "cogvideo-sim", "entry": "drift", "path": "cogvideo-sim/drift.hlo.txt",
+             "dims": [128, 96], "param": "epsilon"}
+        ]
+    }"#;
+
+    #[test]
+    fn parse_and_lookup() {
+        let m = Manifest::parse(SAMPLE, "/tmp/artifacts").unwrap();
+        assert_eq!(m.entries.len(), 2);
+        let e = m.entry("sd35-sim", "drift").unwrap();
+        assert_eq!(e.dims, vec![64, 128]);
+        assert_eq!(e.path, PathBuf::from("/tmp/artifacts/sd35-sim/drift.hlo.txt"));
+        assert_eq!(e.param, "velocity");
+        assert!(m.entry("nope", "drift").is_err());
+    }
+
+    #[test]
+    fn presets_deduped() {
+        let m = Manifest::parse(SAMPLE, ".").unwrap();
+        assert_eq!(m.presets(), vec!["cogvideo-sim", "sd35-sim"]);
+    }
+
+    #[test]
+    fn bad_manifest_errors() {
+        assert!(Manifest::parse("{}", ".").is_err());
+        assert!(Manifest::parse("{\"artifacts\": [{}]}", ".").is_err());
+        assert!(Manifest::parse("not json", ".").is_err());
+    }
+}

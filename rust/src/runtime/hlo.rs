@@ -1,0 +1,144 @@
+//! The PJRT-backed drift engine.
+//!
+//! One engine = one PJRT CPU client + one compiled executable, constructed
+//! *inside the owning worker thread* (see [`crate::workers::CorePool`]).
+//! The HLO text is read once by the factory and shared; each worker compiles
+//! its own executable — mirroring one-model-replica-per-GPU deployment.
+
+use super::artifact::ArtifactEntry;
+use crate::engine::{DriftEngine, EngineFactory};
+use crate::tensor::Tensor;
+use anyhow::{Context, Result};
+use std::sync::Arc;
+
+/// Factory that compiles the artifact once per worker.
+pub struct HloEngineFactory {
+    entry: ArtifactEntry,
+    /// HLO text, read once and shared across workers.
+    hlo_text: Arc<String>,
+}
+
+impl HloEngineFactory {
+    pub fn new(entry: ArtifactEntry) -> Result<Self> {
+        let hlo_text = std::fs::read_to_string(&entry.path)
+            .with_context(|| format!("reading HLO artifact {}", entry.path.display()))?;
+        Ok(HloEngineFactory { entry, hlo_text: Arc::new(hlo_text) })
+    }
+
+    pub fn entry(&self) -> &ArtifactEntry {
+        &self.entry
+    }
+}
+
+impl EngineFactory for HloEngineFactory {
+    fn create(&self) -> Result<Box<dyn DriftEngine>> {
+        Ok(Box::new(HloEngine::from_text(
+            &self.hlo_text,
+            self.entry.dims.clone(),
+            format!("hlo:{}/{}", self.entry.preset, self.entry.entry),
+        )?))
+    }
+
+    fn dims(&self) -> Vec<usize> {
+        self.entry.dims.clone()
+    }
+}
+
+/// A drift engine executing `f_θ(x, t)` through a compiled XLA module.
+pub struct HloEngine {
+    exe: xla::PjRtLoadedExecutable,
+    dims: Vec<usize>,
+    dims_i64: Vec<i64>,
+    name: String,
+}
+
+impl HloEngine {
+    /// Compile from HLO text on a fresh PJRT CPU client.
+    pub fn from_text(hlo_text: &str, dims: Vec<usize>, name: String) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let proto = parse_hlo_text(hlo_text).context("parsing HLO text")?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client.compile(&comp).context("compiling HLO module")?;
+        let dims_i64 = dims.iter().map(|&d| d as i64).collect();
+        Ok(HloEngine { exe, dims, dims_i64, name })
+    }
+
+    /// Load + compile directly from a file path.
+    pub fn from_file(path: &std::path::Path, dims: Vec<usize>, name: String) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::from_text(&text, dims, name)
+    }
+
+    fn execute(&self, x: &Tensor, t: f32) -> Result<Tensor> {
+        let lit_x = xla::Literal::vec1(x.data())
+            .reshape(&self.dims_i64)
+            .context("reshaping input literal")?;
+        let lit_t = xla::Literal::scalar(t);
+        let result = self.exe.execute::<xla::Literal>(&[lit_x, lit_t])?[0][0]
+            .to_literal_sync()
+            .context("fetching result literal")?;
+        // aot.py lowers with return_tuple=True → 1-tuple.
+        let out = result.to_tuple1().context("unwrapping result tuple")?;
+        let data = out.to_vec::<f32>().context("reading f32 output")?;
+        Ok(Tensor::from_vec(&self.dims, data))
+    }
+}
+
+/// Parse HLO text into a module proto via a temp file: the xla crate only
+/// exposes the text parser through `from_text_file`.
+fn parse_hlo_text(text: &str) -> Result<xla::HloModuleProto> {
+    let mut path = std::env::temp_dir();
+    let unique = format!(
+        "chords-hlo-{}-{:x}.txt",
+        std::process::id(),
+        std::time::SystemTime::now().duration_since(std::time::UNIX_EPOCH)?.as_nanos()
+    );
+    path.push(unique);
+    std::fs::write(&path, text)?;
+    let proto = xla::HloModuleProto::from_text_file(&path);
+    let _ = std::fs::remove_file(&path);
+    Ok(proto?)
+}
+
+// SAFETY: `HloEngine` wraps PJRT handles that the xla crate does not mark
+// Send (raw pointers). The engine is constructed inside its worker thread
+// and never leaves it (the CorePool contract); additionally, XLA's PJRT CPU
+// client and loaded executables are documented thread-safe. The marker is
+// required only because `Box<dyn DriftEngine>` carries a `Send` bound.
+unsafe impl Send for HloEngine {}
+
+impl DriftEngine for HloEngine {
+    fn dims(&self) -> Vec<usize> {
+        self.dims.clone()
+    }
+
+    fn drift(&mut self, x: &Tensor, t: f32) -> Tensor {
+        self.execute(x, t).expect("PJRT execution failed")
+    }
+
+    fn name(&self) -> &str {
+        &self.name
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    //! Engine-level tests run against real artifacts when present; the
+    //! numerical cross-check vs the Python reference lives in
+    //! `rust/tests/hlo_roundtrip.rs`.
+    use super::*;
+
+    #[test]
+    fn parse_garbage_hlo_fails() {
+        assert!(HloEngine::from_text("not an hlo module", vec![2, 2], "t".into()).is_err());
+    }
+
+    #[test]
+    fn missing_file_fails_with_context() {
+        match HloEngine::from_file(std::path::Path::new("/nonexistent/x.hlo.txt"), vec![1], "t".into()) {
+            Ok(_) => panic!("expected error"),
+            Err(err) => assert!(format!("{err:#}").contains("/nonexistent/x.hlo.txt")),
+        }
+    }
+}

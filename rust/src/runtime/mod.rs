@@ -1,0 +1,28 @@
+//! PJRT runtime: loads AOT-compiled HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them from the Rust request path.
+//!
+//! Interchange format is HLO *text* (not a serialized `HloModuleProto`):
+//! jax ≥ 0.5 emits protos with 64-bit instruction ids that xla_extension
+//! 0.5.1 rejects; the text parser reassigns ids and round-trips cleanly
+//! (see /opt/xla-example/README.md and DESIGN.md §2).
+
+mod artifact;
+mod hlo;
+
+pub use artifact::*;
+pub use hlo::*;
+
+use crate::config::ModelPreset;
+use crate::engine::EngineFactory;
+use std::sync::Arc;
+
+/// Build the PJRT-backed engine factory for an HLO preset.
+/// Fails fast (with a pointer to `make artifacts`) if artifacts are absent.
+pub fn hlo_factory(
+    preset: &ModelPreset,
+    artifacts_dir: &str,
+) -> anyhow::Result<Arc<dyn EngineFactory>> {
+    let manifest = Manifest::load(artifacts_dir)?;
+    let entry = manifest.entry(preset.name, "drift")?;
+    Ok(Arc::new(HloEngineFactory::new(entry.clone())?))
+}

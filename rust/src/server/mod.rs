@@ -1,0 +1,24 @@
+//! Generation server: JSON-lines over TCP.
+//!
+//! The deployment surface the paper motivates (§1: latency-sensitive,
+//! interactive use): clients submit generation requests; the server routes
+//! each to the requested model's CHORDS pool and *streams* intermediate
+//! outputs back as cores finish — the "diffusion streaming" paradigm of §5.
+//!
+//! Protocol (one JSON object per line):
+//!   → {"op":"generate","model":"sd35-sim","seed":1,"cores":4,
+//!      "steps":50,"stream":true,"early_exit_tol":0.05}
+//!   ← {"type":"partial","core":4,"nfe_depth":21,"speedup":2.38,…}
+//!   ← {"type":"result","nfe_depth":50,"latent_l2":…,"wall_s":…}
+//!   → {"op":"stats"}            ← {"type":"stats",…}
+//!   → {"op":"ping"}             ← {"type":"pong"}
+//!
+//! Built on std::net + threads (no tokio in the offline registry); one
+//! handler thread per connection, one model pool per preset shared behind a
+//! router mutex — mirroring a single-replica-per-model deployment.
+
+mod router;
+mod service;
+
+pub use router::*;
+pub use service::*;

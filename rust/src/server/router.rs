@@ -1,0 +1,148 @@
+//! Request router: lazily builds and caches one worker pool per preset and
+//! serializes runs on it (one sampling job per model at a time — each pool
+//! already uses all granted cores).
+
+use crate::config::preset;
+use crate::coordinator::{discrete_init_sequence, ChordsConfig, ChordsExecutor, ChordsResult, InitStrategy};
+use crate::engine::factory_for;
+use crate::solvers::{Euler, TimeGrid};
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+use crate::workers::CorePool;
+use anyhow::{anyhow, Result};
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// A parsed generation request.
+#[derive(Clone, Debug)]
+pub struct GenRequest {
+    pub model: String,
+    pub seed: u64,
+    pub cores: usize,
+    pub steps: usize,
+    pub init: InitStrategy,
+    pub early_exit_tol: Option<f32>,
+}
+
+impl Default for GenRequest {
+    fn default() -> Self {
+        GenRequest {
+            model: "sd35-sim".into(),
+            seed: 0,
+            cores: 4,
+            steps: 50,
+            init: InitStrategy::Paper,
+            early_exit_tol: None,
+        }
+    }
+}
+
+/// Server-wide counters.
+#[derive(Default)]
+pub struct RouterStats {
+    pub requests: AtomicU64,
+    pub outputs_streamed: AtomicU64,
+    pub total_nfes: AtomicU64,
+}
+
+/// Routes requests to per-model pools.
+pub struct Router {
+    artifacts_dir: String,
+    max_cores: usize,
+    pools: Mutex<HashMap<String, Arc<Mutex<CorePool>>>>,
+    pub stats: RouterStats,
+}
+
+impl Router {
+    pub fn new(artifacts_dir: &str, max_cores: usize) -> Router {
+        Router {
+            artifacts_dir: artifacts_dir.to_string(),
+            max_cores,
+            pools: Mutex::new(HashMap::new()),
+            stats: RouterStats::default(),
+        }
+    }
+
+    /// Get (or build) the pool for a model.
+    fn pool_for(&self, model: &str) -> Result<Arc<Mutex<CorePool>>> {
+        let mut pools = self.pools.lock().unwrap();
+        if let Some(p) = pools.get(model) {
+            return Ok(p.clone());
+        }
+        let p = preset(model).ok_or_else(|| anyhow!("unknown model '{model}'"))?;
+        let factory = factory_for(p, &self.artifacts_dir)?;
+        let pool = Arc::new(Mutex::new(CorePool::new(self.max_cores, factory, Arc::new(Euler))?));
+        pools.insert(model.to_string(), pool.clone());
+        Ok(pool)
+    }
+
+    /// Execute a generation request; `on_partial` fires for every streamed
+    /// output (with its speedup vs sequential).
+    pub fn generate(
+        &self,
+        req: &GenRequest,
+        mut on_partial: impl FnMut(usize, usize, f64),
+    ) -> Result<ChordsResult> {
+        self.stats.requests.fetch_add(1, Ordering::Relaxed);
+        if req.cores > self.max_cores {
+            return Err(anyhow!("requested {} cores, server grants at most {}", req.cores, self.max_cores));
+        }
+        let p = preset(&req.model).ok_or_else(|| anyhow!("unknown model '{}'", req.model))?;
+        let pool = self.pool_for(&req.model)?;
+        let pool = pool.lock().unwrap();
+        let grid = TimeGrid::uniform(req.steps);
+        let seq = discrete_init_sequence(&req.init, req.cores, req.steps);
+        let mut cfg = ChordsConfig::new(seq, grid);
+        cfg.early_exit_tol = req.early_exit_tol;
+        let exec = ChordsExecutor::new(&pool, cfg);
+        let mut rng = Rng::seeded(req.seed);
+        let x0 = Tensor::randn(&p.latent_dims(), &mut rng);
+        let res = exec.run_streaming(&x0, |out| {
+            self.stats.outputs_streamed.fetch_add(1, Ordering::Relaxed);
+            on_partial(out.core, out.nfe_depth, req.steps as f64 / out.nfe_depth as f64);
+        });
+        self.stats.total_nfes.fetch_add(res.total_nfes, Ordering::Relaxed);
+        Ok(res)
+    }
+
+    /// Models currently loaded.
+    pub fn loaded_models(&self) -> Vec<String> {
+        self.pools.lock().unwrap().keys().cloned().collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn routes_and_streams_analytic_model() {
+        let r = Router::new("artifacts", 4);
+        let req = GenRequest { model: "gauss-mix".into(), steps: 30, cores: 4, ..Default::default() };
+        let mut partials = Vec::new();
+        let res = r.generate(&req, |core, depth, s| partials.push((core, depth, s))).unwrap();
+        assert_eq!(partials.len(), 4);
+        assert_eq!(res.outputs.len(), 4);
+        assert_eq!(r.stats.requests.load(Ordering::Relaxed), 1);
+        assert!(r.loaded_models().contains(&"gauss-mix".to_string()));
+    }
+
+    #[test]
+    fn rejects_unknown_model_and_oversubscription() {
+        let r = Router::new("artifacts", 2);
+        assert!(r.generate(&GenRequest { model: "nope".into(), ..Default::default() }, |_, _, _| {}).is_err());
+        let req = GenRequest { model: "gauss-mix".into(), cores: 8, ..Default::default() };
+        assert!(r.generate(&req, |_, _, _| {}).is_err());
+    }
+
+    #[test]
+    fn pool_reused_across_requests() {
+        let r = Router::new("artifacts", 2);
+        let req = GenRequest { model: "exp-ode".into(), steps: 20, cores: 2, ..Default::default() };
+        r.generate(&req, |_, _, _| {}).unwrap();
+        r.generate(&req, |_, _, _| {}).unwrap();
+        assert_eq!(r.loaded_models().len(), 1);
+        assert_eq!(r.stats.requests.load(Ordering::Relaxed), 2);
+    }
+}

@@ -1,0 +1,317 @@
+//! TCP JSON-lines service over the [`Router`].
+
+use super::router::{GenRequest, Router};
+use crate::coordinator::InitStrategy;
+use crate::tensor::ops;
+use crate::util::json::Json;
+use anyhow::Result;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+/// A running server instance.
+pub struct Server {
+    pub addr: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Server {
+    /// Bind on `host:port` (port 0 = ephemeral) and serve in background
+    /// threads until [`Server::shutdown`].
+    pub fn start(host: &str, port: u16, router: Arc<Router>) -> Result<Server> {
+        let listener = TcpListener::bind((host, port))?;
+        let addr = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
+        let handle = std::thread::Builder::new().name("chords-server".into()).spawn(move || {
+            while !stop2.load(Ordering::Relaxed) {
+                match listener.accept() {
+                    Ok((stream, _)) => {
+                        let router = router.clone();
+                        let stop = stop2.clone();
+                        // Handlers are detached: they exit when the client
+                        // disconnects or the stop flag is raised (they poll
+                        // it via a read timeout), so shutdown never blocks
+                        // on an idle connection.
+                        std::thread::Builder::new()
+                            .name("chords-conn".into())
+                            .spawn(move || {
+                                let _ = handle_conn(stream, router, stop);
+                            })
+                            .expect("spawn conn handler");
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        std::thread::sleep(std::time::Duration::from_millis(5));
+                    }
+                    Err(_) => break,
+                }
+            }
+        })?;
+        Ok(Server { addr, stop, handle: Some(handle) })
+    }
+
+    /// Stop accepting and join the accept loop.
+    pub fn shutdown(mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn handle_conn(stream: TcpStream, router: Arc<Router>, stop: Arc<AtomicBool>) -> Result<()> {
+    stream.set_read_timeout(Some(std::time::Duration::from_millis(200)))?;
+    let mut writer = stream.try_clone()?;
+    let mut reader = BufReader::new(stream);
+    // Persistent buffer: a read timeout may land mid-line; bytes already
+    // consumed must survive to the next attempt.
+    let mut buf = String::new();
+    loop {
+        match reader.read_line(&mut buf) {
+            Ok(0) => break, // client disconnected
+            Ok(_) if buf.ends_with('\n') => {}
+            Ok(_) => continue, // partial line, keep reading
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                ) =>
+            {
+                if stop.load(Ordering::Relaxed) {
+                    break;
+                }
+                continue;
+            }
+            Err(_) => break,
+        }
+        let line = std::mem::take(&mut buf);
+        if line.trim().is_empty() {
+            continue;
+        }
+        let line = line.trim().to_string();
+        let response_stream = |w: &mut TcpStream, j: &Json| -> std::io::Result<()> {
+            w.write_all(j.to_string_compact().as_bytes())?;
+            w.write_all(b"\n")
+        };
+        match Json::parse(&line) {
+            Err(e) => {
+                let err = Json::obj(vec![("type", Json::str("error")), ("message", Json::str(&e))]);
+                response_stream(&mut writer, &err)?;
+            }
+            Ok(req) => match req.get("op").and_then(|o| o.as_str()) {
+                Some("ping") => {
+                    response_stream(&mut writer, &Json::obj(vec![("type", Json::str("pong"))]))?;
+                }
+                Some("stats") => {
+                    let s = &router.stats;
+                    let j = Json::obj(vec![
+                        ("type", Json::str("stats")),
+                        ("requests", Json::num(s.requests.load(Ordering::Relaxed) as f64)),
+                        (
+                            "outputs_streamed",
+                            Json::num(s.outputs_streamed.load(Ordering::Relaxed) as f64),
+                        ),
+                        ("total_nfes", Json::num(s.total_nfes.load(Ordering::Relaxed) as f64)),
+                        (
+                            "models",
+                            Json::arr(router.loaded_models().iter().map(|m| Json::str(m))),
+                        ),
+                    ]);
+                    response_stream(&mut writer, &j)?;
+                }
+                Some("generate") => {
+                    let gen = parse_gen_request(&req);
+                    let stream_partials =
+                        req.get("stream").and_then(|v| v.as_bool()).unwrap_or(false);
+                    // Streamed partials are written as they are produced.
+                    let result = {
+                        let mut w2 = writer.try_clone()?;
+                        router.generate(&gen, |core, depth, speedup| {
+                            if stream_partials {
+                                let j = Json::obj(vec![
+                                    ("type", Json::str("partial")),
+                                    ("core", Json::num(core as f64)),
+                                    ("nfe_depth", Json::num(depth as f64)),
+                                    ("speedup", Json::num(speedup)),
+                                ]);
+                                let _ = w2.write_all(j.to_string_compact().as_bytes());
+                                let _ = w2.write_all(b"\n");
+                            }
+                        })
+                    };
+                    match result {
+                        Ok(res) => {
+                            let j = Json::obj(vec![
+                                ("type", Json::str("result")),
+                                ("nfe_depth", Json::num(res.nfe_depth as f64)),
+                                ("total_nfes", Json::num(res.total_nfes as f64)),
+                                ("wall_s", Json::num(res.wall_s)),
+                                ("outputs", Json::num(res.outputs.len() as f64)),
+                                ("early_exited", Json::Bool(res.early_exited)),
+                                (
+                                    "latent_l2",
+                                    Json::num(ops::norm(&res.final_output) as f64),
+                                ),
+                            ]);
+                            response_stream(&mut writer, &j)?;
+                        }
+                        Err(e) => {
+                            let j = Json::obj(vec![
+                                ("type", Json::str("error")),
+                                ("message", Json::str(&format!("{e:#}"))),
+                            ]);
+                            response_stream(&mut writer, &j)?;
+                        }
+                    }
+                }
+                _ => {
+                    let j = Json::obj(vec![
+                        ("type", Json::str("error")),
+                        ("message", Json::str("unknown op (expected ping|stats|generate)")),
+                    ]);
+                    response_stream(&mut writer, &j)?;
+                }
+            },
+        }
+    }
+    Ok(())
+}
+
+fn parse_gen_request(req: &Json) -> GenRequest {
+    let mut g = GenRequest::default();
+    if let Some(m) = req.get("model").and_then(|v| v.as_str()) {
+        g.model = m.to_string();
+    }
+    if let Some(s) = req.get("seed").and_then(|v| v.as_f64()) {
+        g.seed = s as u64;
+    }
+    if let Some(c) = req.get("cores").and_then(|v| v.as_usize()) {
+        g.cores = c.max(1);
+    }
+    if let Some(n) = req.get("steps").and_then(|v| v.as_usize()) {
+        g.steps = n.max(2);
+    }
+    if let Some(i) = req.get("init").and_then(|v| v.as_str()) {
+        if let Some(st) = InitStrategy::parse(i) {
+            g.init = st;
+        }
+    }
+    if let Some(t) = req.get("early_exit_tol").and_then(|v| v.as_f64()) {
+        g.early_exit_tol = Some(t as f32);
+    }
+    g
+}
+
+/// Minimal blocking client for tests/examples.
+pub struct Client {
+    stream: TcpStream,
+    reader: BufReader<TcpStream>,
+}
+
+impl Client {
+    pub fn connect(addr: std::net::SocketAddr) -> Result<Client> {
+        let stream = TcpStream::connect(addr)?;
+        let reader = BufReader::new(stream.try_clone()?);
+        Ok(Client { stream, reader })
+    }
+
+    /// Send one request object and read responses until a terminal type
+    /// (`result`, `error`, `stats`, `pong`) arrives. Returns all responses.
+    pub fn call(&mut self, req: &Json) -> Result<Vec<Json>> {
+        self.stream.write_all(req.to_string_compact().as_bytes())?;
+        self.stream.write_all(b"\n")?;
+        let mut responses = Vec::new();
+        loop {
+            let mut line = String::new();
+            let n = self.reader.read_line(&mut line)?;
+            if n == 0 {
+                anyhow::bail!("server closed connection");
+            }
+            let j = Json::parse(line.trim()).map_err(|e| anyhow::anyhow!(e))?;
+            let ty = j.get("type").and_then(|t| t.as_str()).unwrap_or("").to_string();
+            responses.push(j);
+            if matches!(ty.as_str(), "result" | "error" | "stats" | "pong") {
+                return Ok(responses);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn start() -> (Server, Arc<Router>) {
+        let router = Arc::new(Router::new("artifacts", 4));
+        let server = Server::start("127.0.0.1", 0, router.clone()).unwrap();
+        (server, router)
+    }
+
+    #[test]
+    fn ping_pong() {
+        let (server, _) = start();
+        let mut c = Client::connect(server.addr).unwrap();
+        let r = c.call(&Json::obj(vec![("op", Json::str("ping"))])).unwrap();
+        assert_eq!(r[0].get("type").unwrap().as_str().unwrap(), "pong");
+        server.shutdown();
+    }
+
+    #[test]
+    fn generate_streams_partials() {
+        let (server, _) = start();
+        let mut c = Client::connect(server.addr).unwrap();
+        let req = Json::obj(vec![
+            ("op", Json::str("generate")),
+            ("model", Json::str("gauss-mix")),
+            ("steps", Json::num(30.0)),
+            ("cores", Json::num(4.0)),
+            ("stream", Json::Bool(true)),
+        ]);
+        let r = c.call(&req).unwrap();
+        let partials = r.iter().filter(|j| j.get("type").unwrap().as_str() == Some("partial")).count();
+        assert_eq!(partials, 4);
+        let last = r.last().unwrap();
+        assert_eq!(last.get("type").unwrap().as_str().unwrap(), "result");
+        assert_eq!(last.get("nfe_depth").unwrap().as_usize().unwrap(), 30);
+        server.shutdown();
+    }
+
+    #[test]
+    fn unknown_model_errors() {
+        let (server, _) = start();
+        let mut c = Client::connect(server.addr).unwrap();
+        let req = Json::obj(vec![("op", Json::str("generate")), ("model", Json::str("nope"))]);
+        let r = c.call(&req).unwrap();
+        assert_eq!(r.last().unwrap().get("type").unwrap().as_str().unwrap(), "error");
+        server.shutdown();
+    }
+
+    #[test]
+    fn stats_reflect_requests() {
+        let (server, _) = start();
+        let mut c = Client::connect(server.addr).unwrap();
+        let gen = Json::obj(vec![
+            ("op", Json::str("generate")),
+            ("model", Json::str("exp-ode")),
+            ("steps", Json::num(20.0)),
+            ("cores", Json::num(2.0)),
+        ]);
+        c.call(&gen).unwrap();
+        let r = c.call(&Json::obj(vec![("op", Json::str("stats"))])).unwrap();
+        let stats = r.last().unwrap();
+        assert_eq!(stats.get("requests").unwrap().as_usize().unwrap(), 1);
+        server.shutdown();
+    }
+}

@@ -1,0 +1,95 @@
+//! Time discretization `T = [t(0)=0, …, t(N)=1]` (paper §3).
+
+/// Discretization function family.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum GridKind {
+    /// `t(i) = i/N` — the paper's default.
+    Uniform,
+    /// Shifted grid concentrating steps near the data end (t→1), analogous
+    /// to the timestep shifting used by SD3-style flow models.
+    Shifted,
+    /// Cosine-spaced grid concentrating steps at both ends.
+    Cosine,
+}
+
+/// A realized time grid with N steps (N+1 knots).
+#[derive(Clone, Debug)]
+pub struct TimeGrid {
+    pub kind: GridKind,
+    knots: Vec<f32>,
+}
+
+impl TimeGrid {
+    pub fn new(kind: GridKind, n: usize) -> Self {
+        assert!(n >= 1, "need at least one step");
+        let knots = (0..=n)
+            .map(|i| {
+                let u = i as f32 / n as f32;
+                match kind {
+                    GridKind::Uniform => u,
+                    GridKind::Shifted => {
+                        // shift=3.0 in SD3 convention (more resolution near
+                        // the data end under our t=1-is-data convention).
+                        let shift = 3.0;
+                        u / (u + shift * (1.0 - u))
+                    }
+                    GridKind::Cosine => 0.5 * (1.0 - (std::f32::consts::PI * u).cos()),
+                }
+            })
+            .collect();
+        TimeGrid { kind, knots }
+    }
+
+    pub fn uniform(n: usize) -> Self {
+        Self::new(GridKind::Uniform, n)
+    }
+
+    /// Number of steps N.
+    pub fn steps(&self) -> usize {
+        self.knots.len() - 1
+    }
+
+    /// `t(i)`.
+    pub fn t(&self, i: usize) -> f32 {
+        self.knots[i]
+    }
+
+    pub fn knots(&self) -> &[f32] {
+        &self.knots
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_endpoints_and_spacing() {
+        let g = TimeGrid::uniform(50);
+        assert_eq!(g.steps(), 50);
+        assert_eq!(g.t(0), 0.0);
+        assert_eq!(g.t(50), 1.0);
+        assert!((g.t(25) - 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn all_grids_monotone_in_unit_interval() {
+        for kind in [GridKind::Uniform, GridKind::Shifted, GridKind::Cosine] {
+            let g = TimeGrid::new(kind, 37);
+            assert_eq!(g.t(0), 0.0);
+            assert!((g.t(37) - 1.0).abs() < 1e-6, "{kind:?} end {}", g.t(37));
+            for i in 0..37 {
+                assert!(g.t(i + 1) > g.t(i), "{kind:?} not monotone at {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn shifted_concentrates_near_one() {
+        let g = TimeGrid::new(GridKind::Shifted, 10);
+        // early steps should be smaller than late steps
+        let early = g.t(1) - g.t(0);
+        let late = g.t(10) - g.t(9);
+        assert!(late > early);
+    }
+}

@@ -1,0 +1,12 @@
+//! Single-core solver substrate: time discretization grids and step rules.
+//!
+//! Paper Eq. 6: `x_{t(i+1)} = x_{t(i)} + s_θ(x_{t(i)}, t(i), t(i+1))` where
+//! DDIM/Euler take `s_θ(x,t,t') = (t'−t)·f_θ(x,t)`. CHORDS is agnostic to
+//! the step rule; we ship Euler (the paper's default for both DDIM and
+//! flow matching under the unified drift form), Heun, and midpoint.
+
+mod grid;
+mod rules;
+
+pub use grid::*;
+pub use rules::*;

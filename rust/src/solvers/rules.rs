@@ -1,0 +1,162 @@
+//! Step rules `s_θ(x, t, t')` over a [`DriftEngine`].
+//!
+//! Every rule returns both the advanced state and the drift evaluated at the
+//! step's *start* `(x, t)` — CHORDS caches that drift for the zero-extra-NFE
+//! rectification rule (Eq. 3/4 discussion in DESIGN.md §1).
+
+use crate::engine::DriftEngine;
+use crate::tensor::{ops, Tensor};
+
+/// A single-step update rule (paper Eq. 6).
+pub trait StepRule: Send + Sync {
+    fn name(&self) -> &'static str;
+
+    /// NFEs consumed per step (1 for Euler/DDIM, 2 for Heun/midpoint).
+    fn nfe_per_step(&self) -> usize;
+
+    /// Advance `x` from `t` to `t2`; returns `(x', f_θ(x, t))`.
+    fn step(&self, eng: &mut dyn DriftEngine, x: &Tensor, t: f32, t2: f32) -> (Tensor, Tensor);
+}
+
+/// Euler / DDIM: `x' = x + (t'−t)·f(x,t)`. The paper's default solver for
+/// both DDIM-parameterized diffusion and flow matching (under the unified
+/// drift form of Eq. 2).
+pub struct Euler;
+
+impl StepRule for Euler {
+    fn name(&self) -> &'static str {
+        "euler"
+    }
+
+    fn nfe_per_step(&self) -> usize {
+        1
+    }
+
+    fn step(&self, eng: &mut dyn DriftEngine, x: &Tensor, t: f32, t2: f32) -> (Tensor, Tensor) {
+        let f = eng.drift(x, t);
+        let x2 = ops::axpy(x, t2 - t, &f);
+        (x2, f)
+    }
+}
+
+/// Heun (explicit trapezoid), 2nd order, 2 NFEs/step.
+pub struct Heun;
+
+impl StepRule for Heun {
+    fn name(&self) -> &'static str {
+        "heun"
+    }
+
+    fn nfe_per_step(&self) -> usize {
+        2
+    }
+
+    fn step(&self, eng: &mut dyn DriftEngine, x: &Tensor, t: f32, t2: f32) -> (Tensor, Tensor) {
+        let h = t2 - t;
+        let f1 = eng.drift(x, t);
+        let pred = ops::axpy(x, h, &f1);
+        let f2 = eng.drift(&pred, t2);
+        let mut x2 = x.clone();
+        ops::axpy_into(&mut x2, 0.5 * h, &f1);
+        ops::axpy_into(&mut x2, 0.5 * h, &f2);
+        (x2, f1)
+    }
+}
+
+/// Explicit midpoint, 2nd order, 2 NFEs/step.
+pub struct Midpoint;
+
+impl StepRule for Midpoint {
+    fn name(&self) -> &'static str {
+        "midpoint"
+    }
+
+    fn nfe_per_step(&self) -> usize {
+        2
+    }
+
+    fn step(&self, eng: &mut dyn DriftEngine, x: &Tensor, t: f32, t2: f32) -> (Tensor, Tensor) {
+        let h = t2 - t;
+        let f1 = eng.drift(x, t);
+        let half = ops::axpy(x, 0.5 * h, &f1);
+        let fm = eng.drift(&half, t + 0.5 * h);
+        let x2 = ops::axpy(x, h, &fm);
+        (x2, f1)
+    }
+}
+
+/// Parse a rule by name.
+pub fn rule_by_name(name: &str) -> Option<Box<dyn StepRule>> {
+    match name.to_ascii_lowercase().as_str() {
+        "euler" | "ddim" => Some(Box::new(Euler)),
+        "heun" => Some(Box::new(Heun)),
+        "midpoint" => Some(Box::new(Midpoint)),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::{ExactSolution, ExpOde};
+    use crate::tensor::ops::rmse;
+
+    fn integrate(rule: &dyn StepRule, n: usize) -> f32 {
+        let mut eng = ExpOde::new(vec![1], 0);
+        let x0 = Tensor::from_vec(&[1], vec![1.0]);
+        let mut x = x0.clone();
+        for i in 0..n {
+            let (t, t2) = (i as f32 / n as f32, (i + 1) as f32 / n as f32);
+            let (nx, _) = rule.step(&mut eng, &x, t, t2);
+            x = nx;
+        }
+        rmse(&x, &eng.exact(&x0, 1.0))
+    }
+
+    #[test]
+    fn euler_converges_first_order() {
+        let e1 = integrate(&Euler, 20);
+        let e2 = integrate(&Euler, 40);
+        // halving h should roughly halve the error
+        let ratio = e1 / e2;
+        assert!(ratio > 1.7 && ratio < 2.4, "ratio {ratio}");
+    }
+
+    #[test]
+    fn heun_converges_second_order() {
+        let e1 = integrate(&Heun, 20);
+        let e2 = integrate(&Heun, 40);
+        let ratio = e1 / e2;
+        assert!(ratio > 3.3 && ratio < 4.8, "ratio {ratio}");
+    }
+
+    #[test]
+    fn midpoint_converges_second_order() {
+        let e1 = integrate(&Midpoint, 20);
+        let e2 = integrate(&Midpoint, 40);
+        let ratio = e1 / e2;
+        assert!(ratio > 3.3 && ratio < 4.8, "ratio {ratio}");
+    }
+
+    #[test]
+    fn second_order_beats_euler_at_equal_steps() {
+        assert!(integrate(&Heun, 25) < integrate(&Euler, 25));
+    }
+
+    #[test]
+    fn step_returns_start_drift() {
+        let mut eng = ExpOde::new(vec![1], 0);
+        let x = Tensor::from_vec(&[1], vec![2.0]);
+        for rule in [&Euler as &dyn StepRule, &Heun, &Midpoint] {
+            let (_, f) = rule.step(&mut eng, &x, 0.2, 0.3);
+            assert_eq!(f.data()[0], 2.0, "{} start drift", rule.name());
+        }
+    }
+
+    #[test]
+    fn rule_lookup() {
+        assert!(rule_by_name("ddim").is_some());
+        assert!(rule_by_name("heun").is_some());
+        assert!(rule_by_name("zzz").is_none());
+    }
+}

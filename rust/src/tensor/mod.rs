@@ -1,0 +1,179 @@
+//! Dense f32 tensor substrate.
+//!
+//! Diffusion latents are dense float arrays; every coordinator operation
+//! (solver steps, rectification, metrics) is expressed over [`Tensor`].
+//! The representation is deliberately simple — a contiguous `Vec<f32>` plus a
+//! shape — because the hot path never reshapes: it streams element-wise
+//! kernels (axpy / rectify) over full buffers.
+
+pub mod ops;
+mod shape;
+
+pub use ops::*;
+pub use shape::Shape;
+
+use crate::util::rng::Rng;
+
+/// A dense, contiguous, row-major f32 tensor.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    shape: Shape,
+    data: Vec<f32>,
+}
+
+impl Tensor {
+    /// Create a tensor filled with zeros.
+    pub fn zeros(dims: &[usize]) -> Self {
+        let shape = Shape::new(dims);
+        let n = shape.numel();
+        Tensor { shape, data: vec![0.0; n] }
+    }
+
+    /// Create a tensor filled with a constant.
+    pub fn full(dims: &[usize], v: f32) -> Self {
+        let shape = Shape::new(dims);
+        let n = shape.numel();
+        Tensor { shape, data: vec![v; n] }
+    }
+
+    /// Create a tensor from raw data; panics if the element count mismatches.
+    pub fn from_vec(dims: &[usize], data: Vec<f32>) -> Self {
+        let shape = Shape::new(dims);
+        assert_eq!(
+            shape.numel(),
+            data.len(),
+            "shape {:?} wants {} elements, got {}",
+            dims,
+            shape.numel(),
+            data.len()
+        );
+        Tensor { shape, data }
+    }
+
+    /// Standard-normal tensor from the given seeded RNG (Box–Muller).
+    pub fn randn(dims: &[usize], rng: &mut Rng) -> Self {
+        let shape = Shape::new(dims);
+        let n = shape.numel();
+        let mut data = Vec::with_capacity(n);
+        while data.len() < n {
+            let (a, b) = rng.next_gauss_pair();
+            data.push(a);
+            if data.len() < n {
+                data.push(b);
+            }
+        }
+        Tensor { shape, data }
+    }
+
+    pub fn shape(&self) -> &Shape {
+        &self.shape
+    }
+
+    pub fn dims(&self) -> &[usize] {
+        self.shape.dims()
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_vec(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// Reinterpret the buffer under new dims with the same element count.
+    pub fn reshape(mut self, dims: &[usize]) -> Self {
+        let shape = Shape::new(dims);
+        assert_eq!(shape.numel(), self.data.len(), "reshape element mismatch");
+        self.shape = shape;
+        self
+    }
+
+    /// Fill in place with zeros (reuses the allocation).
+    pub fn clear(&mut self) {
+        for v in &mut self.data {
+            *v = 0.0;
+        }
+    }
+
+    /// Copy the contents of `src` into self. Shapes must match.
+    pub fn copy_from(&mut self, src: &Tensor) {
+        assert_eq!(self.shape, src.shape, "copy_from shape mismatch");
+        self.data.copy_from_slice(&src.data);
+    }
+}
+
+impl std::fmt::Display for Tensor {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Tensor{:?}", self.dims())?;
+        if self.numel() <= 8 {
+            write!(f, " {:?}", self.data)?;
+        } else {
+            write!(f, " [{:.4}, {:.4}, …, {:.4}]", self.data[0], self.data[1], self.data[self.numel() - 1])?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zeros_and_full() {
+        let t = Tensor::zeros(&[2, 3]);
+        assert_eq!(t.numel(), 6);
+        assert!(t.data().iter().all(|&v| v == 0.0));
+        let u = Tensor::full(&[4], 2.5);
+        assert!(u.data().iter().all(|&v| v == 2.5));
+    }
+
+    #[test]
+    fn from_vec_roundtrip() {
+        let t = Tensor::from_vec(&[2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(t.dims(), &[2, 2]);
+        assert_eq!(t.into_vec(), vec![1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn from_vec_mismatch_panics() {
+        Tensor::from_vec(&[2, 2], vec![1.0]);
+    }
+
+    #[test]
+    fn randn_is_deterministic_and_normalish() {
+        let mut r1 = Rng::seeded(7);
+        let mut r2 = Rng::seeded(7);
+        let a = Tensor::randn(&[1024], &mut r1);
+        let b = Tensor::randn(&[1024], &mut r2);
+        assert_eq!(a, b);
+        let mean: f32 = a.data().iter().sum::<f32>() / 1024.0;
+        let var: f32 = a.data().iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / 1024.0;
+        assert!(mean.abs() < 0.15, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.25, "var {var}");
+    }
+
+    #[test]
+    fn reshape_preserves_data() {
+        let t = Tensor::from_vec(&[4], vec![1.0, 2.0, 3.0, 4.0]).reshape(&[2, 2]);
+        assert_eq!(t.dims(), &[2, 2]);
+        assert_eq!(t.data(), &[1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn copy_from_copies() {
+        let src = Tensor::full(&[3], 9.0);
+        let mut dst = Tensor::zeros(&[3]);
+        dst.copy_from(&src);
+        assert_eq!(dst, src);
+    }
+}

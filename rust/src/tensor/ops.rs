@@ -1,0 +1,224 @@
+//! Element-wise and reduction kernels over [`Tensor`].
+//!
+//! These are the L3 hot-path primitives: the CHORDS rectification rule
+//! (Eq. 3/4) and solver steps reduce to fused AXPY-style loops over
+//! contiguous buffers. All in-place variants avoid allocation; callers on
+//! the hot path reuse buffers. The loops are written so LLVM auto-vectorizes
+//! them (plain indexed iteration over equal-length slices).
+
+use super::Tensor;
+
+/// `out = a + s * b` (allocating).
+pub fn axpy(a: &Tensor, s: f32, b: &Tensor) -> Tensor {
+    assert_eq!(a.dims(), b.dims(), "axpy shape mismatch");
+    let mut out = a.clone();
+    axpy_into(&mut out, s, b);
+    out
+}
+
+/// `a += s * b` in place.
+pub fn axpy_into(a: &mut Tensor, s: f32, b: &Tensor) {
+    assert_eq!(a.dims(), b.dims(), "axpy_into shape mismatch");
+    let (ad, bd) = (a.data_mut(), b.data());
+    for i in 0..ad.len() {
+        ad[i] += s * bd[i];
+    }
+}
+
+/// `out = a - b` (allocating).
+pub fn sub(a: &Tensor, b: &Tensor) -> Tensor {
+    assert_eq!(a.dims(), b.dims(), "sub shape mismatch");
+    let data = a.data().iter().zip(b.data()).map(|(x, y)| x - y).collect();
+    Tensor::from_vec(a.dims(), data)
+}
+
+/// `a *= s` in place.
+pub fn scale_into(a: &mut Tensor, s: f32) {
+    for v in a.data_mut() {
+        *v *= s;
+    }
+}
+
+/// Linear interpolation `(1-w)*a + w*b` (allocating).
+pub fn lerp(a: &Tensor, b: &Tensor, w: f32) -> Tensor {
+    assert_eq!(a.dims(), b.dims(), "lerp shape mismatch");
+    let data = a
+        .data()
+        .iter()
+        .zip(b.data())
+        .map(|(x, y)| (1.0 - w) * x + w * y)
+        .collect();
+    Tensor::from_vec(a.dims(), data)
+}
+
+/// Fused CHORDS rectification (Eq. 4), in place on `x`:
+/// `x += dt*(f_acc - f_coarse) + (x_acc - x_coarse)`.
+///
+/// This is THE communication kernel — it runs once per rectification event
+/// on the coordinator hot path, with zero extra network calls (both drifts
+/// are cached from the cores' own forward steps).
+pub fn rectify_into(
+    x: &mut Tensor,
+    dt: f32,
+    f_acc: &Tensor,
+    f_coarse: &Tensor,
+    x_acc: &Tensor,
+    x_coarse: &Tensor,
+) {
+    assert_eq!(x.dims(), f_acc.dims(), "rectify shape mismatch");
+    assert_eq!(x.dims(), f_coarse.dims(), "rectify shape mismatch");
+    assert_eq!(x.dims(), x_acc.dims(), "rectify shape mismatch");
+    assert_eq!(x.dims(), x_coarse.dims(), "rectify shape mismatch");
+    let xd = x.data_mut();
+    let (fa, fc, xa, xc) = (f_acc.data(), f_coarse.data(), x_acc.data(), x_coarse.data());
+    for i in 0..xd.len() {
+        xd[i] += dt * (fa[i] - fc[i]) + (xa[i] - xc[i]);
+    }
+}
+
+/// Root-mean-square error between two tensors.
+pub fn rmse(a: &Tensor, b: &Tensor) -> f32 {
+    assert_eq!(a.dims(), b.dims(), "rmse shape mismatch");
+    let n = a.numel().max(1) as f64;
+    let ss: f64 = a
+        .data()
+        .iter()
+        .zip(b.data())
+        .map(|(x, y)| {
+            let d = (*x - *y) as f64;
+            d * d
+        })
+        .sum();
+    ((ss / n) as f32).sqrt()
+}
+
+/// Mean absolute (L1) distance between two tensors.
+pub fn l1(a: &Tensor, b: &Tensor) -> f32 {
+    assert_eq!(a.dims(), b.dims(), "l1 shape mismatch");
+    let n = a.numel().max(1) as f64;
+    let s: f64 = a.data().iter().zip(b.data()).map(|(x, y)| ((*x - *y) as f64).abs()).sum();
+    (s / n) as f32
+}
+
+/// L2 norm of a tensor.
+pub fn norm(a: &Tensor) -> f32 {
+    let ss: f64 = a.data().iter().map(|&x| (x as f64) * (x as f64)).sum();
+    (ss as f32).sqrt()
+}
+
+/// Cosine similarity between two tensors (0 if either is zero).
+pub fn cosine(a: &Tensor, b: &Tensor) -> f32 {
+    assert_eq!(a.dims(), b.dims(), "cosine shape mismatch");
+    let dot: f64 = a.data().iter().zip(b.data()).map(|(x, y)| (*x as f64) * (*y as f64)).sum();
+    let na = norm(a) as f64;
+    let nb = norm(b) as f64;
+    if na == 0.0 || nb == 0.0 {
+        return 0.0;
+    }
+    (dot / (na * nb)) as f32
+}
+
+/// Peak signal-to-noise ratio treating `b` as the reference, with the
+/// reference's dynamic range as peak. Returns +inf for identical tensors.
+pub fn psnr(a: &Tensor, b: &Tensor) -> f32 {
+    let e = rmse(a, b);
+    if e == 0.0 {
+        return f32::INFINITY;
+    }
+    let lo = b.data().iter().cloned().fold(f32::INFINITY, f32::min);
+    let hi = b.data().iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let peak = (hi - lo).max(1e-12);
+    20.0 * (peak / e).log10()
+}
+
+/// Maximum absolute element difference.
+pub fn max_abs_diff(a: &Tensor, b: &Tensor) -> f32 {
+    assert_eq!(a.dims(), b.dims(), "max_abs_diff shape mismatch");
+    a.data()
+        .iter()
+        .zip(b.data())
+        .map(|(x, y)| (x - y).abs())
+        .fold(0.0, f32::max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t(v: &[f32]) -> Tensor {
+        Tensor::from_vec(&[v.len()], v.to_vec())
+    }
+
+    #[test]
+    fn axpy_basic() {
+        let a = t(&[1.0, 2.0]);
+        let b = t(&[10.0, 20.0]);
+        assert_eq!(axpy(&a, 0.5, &b).data(), &[6.0, 12.0]);
+    }
+
+    #[test]
+    fn axpy_into_matches_axpy() {
+        let a = t(&[3.0, -1.0, 0.5]);
+        let b = t(&[1.0, 1.0, 2.0]);
+        let mut c = a.clone();
+        axpy_into(&mut c, -2.0, &b);
+        assert_eq!(c, axpy(&a, -2.0, &b));
+    }
+
+    #[test]
+    fn sub_and_scale() {
+        let a = t(&[5.0, 7.0]);
+        let b = t(&[2.0, 3.0]);
+        let mut d = sub(&a, &b);
+        assert_eq!(d.data(), &[3.0, 4.0]);
+        scale_into(&mut d, 2.0);
+        assert_eq!(d.data(), &[6.0, 8.0]);
+    }
+
+    #[test]
+    fn rectify_matches_formula() {
+        // x += dt*(fa-fc) + (xa-xc), elementwise
+        let mut x = t(&[1.0, 1.0]);
+        let fa = t(&[2.0, 0.0]);
+        let fc = t(&[1.0, 1.0]);
+        let xa = t(&[0.5, 0.5]);
+        let xc = t(&[0.0, 1.0]);
+        rectify_into(&mut x, 0.1, &fa, &fc, &xa, &xc);
+        assert!((x.data()[0] - (1.0 + 0.1 * 1.0 + 0.5)).abs() < 1e-6);
+        assert!((x.data()[1] - (1.0 + 0.1 * -1.0 - 0.5)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn rmse_l1_zero_for_identical() {
+        let a = t(&[1.0, -2.0, 3.0]);
+        assert_eq!(rmse(&a, &a), 0.0);
+        assert_eq!(l1(&a, &a), 0.0);
+        assert_eq!(psnr(&a, &a), f32::INFINITY);
+    }
+
+    #[test]
+    fn rmse_known_value() {
+        let a = t(&[0.0, 0.0]);
+        let b = t(&[3.0, 4.0]);
+        // sqrt((9+16)/2) = sqrt(12.5)
+        assert!((rmse(&a, &b) - 12.5f32.sqrt()).abs() < 1e-6);
+        assert!((l1(&a, &b) - 3.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn cosine_bounds() {
+        let a = t(&[1.0, 0.0]);
+        let b = t(&[0.0, 1.0]);
+        assert!((cosine(&a, &a) - 1.0).abs() < 1e-6);
+        assert!(cosine(&a, &b).abs() < 1e-6);
+        let z = t(&[0.0, 0.0]);
+        assert_eq!(cosine(&a, &z), 0.0);
+    }
+
+    #[test]
+    fn max_abs_diff_basic() {
+        let a = t(&[1.0, 5.0, -2.0]);
+        let b = t(&[1.0, 2.0, -1.0]);
+        assert_eq!(max_abs_diff(&a, &b), 3.0);
+    }
+}

@@ -1,0 +1,53 @@
+//! Tensor shape: a small wrapper over a dim vector with cached element count.
+
+/// Row-major tensor shape.
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct Shape {
+    dims: Vec<usize>,
+    numel: usize,
+}
+
+impl Shape {
+    pub fn new(dims: &[usize]) -> Self {
+        // A zero-rank (scalar) shape has one element; a shape containing a
+        // zero dim has zero elements.
+        let numel = if dims.is_empty() { 1 } else { dims.iter().product() };
+        Shape { dims: dims.to_vec(), numel }
+    }
+
+    pub fn dims(&self) -> &[usize] {
+        &self.dims
+    }
+
+    pub fn numel(&self) -> usize {
+        self.numel
+    }
+
+    pub fn rank(&self) -> usize {
+        self.dims.len()
+    }
+}
+
+impl std::fmt::Display for Shape {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{:?}", self.dims)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn numel_products() {
+        assert_eq!(Shape::new(&[2, 3, 4]).numel(), 24);
+        assert_eq!(Shape::new(&[]).numel(), 1);
+        assert_eq!(Shape::new(&[5, 0]).numel(), 0);
+    }
+
+    #[test]
+    fn rank() {
+        assert_eq!(Shape::new(&[2, 3]).rank(), 2);
+        assert_eq!(Shape::new(&[]).rank(), 0);
+    }
+}

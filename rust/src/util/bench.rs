@@ -1,0 +1,104 @@
+//! Micro-benchmark harness (the offline registry has no criterion).
+//!
+//! `cargo bench` runs `[[bench]]` targets with `harness = false`; those
+//! binaries call [`bench`] / [`bench_n`] here. Methodology: warmup runs,
+//! then timed iterations reported as median / mean ± std / min, matching
+//! criterion's headline numbers closely enough for regression tracking.
+
+use super::stats::Summary;
+use std::time::Instant;
+
+/// Result of one benchmark.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub median_s: f64,
+    pub mean_s: f64,
+    pub std_s: f64,
+    pub min_s: f64,
+}
+
+impl BenchResult {
+    pub fn report(&self) -> String {
+        format!(
+            "{:<44} {:>10}/iter  (mean {} ± {}, min {}, n={})",
+            self.name,
+            fmt_s(self.median_s),
+            fmt_s(self.mean_s),
+            fmt_s(self.std_s),
+            fmt_s(self.min_s),
+            self.iters
+        )
+    }
+}
+
+/// Human duration formatting.
+pub fn fmt_s(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3}s")
+    } else if s >= 1e-3 {
+        format!("{:.3}ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3}µs", s * 1e6)
+    } else {
+        format!("{:.1}ns", s * 1e9)
+    }
+}
+
+/// Run `f` with `warmup` unmeasured and `iters` measured iterations.
+pub fn bench_n(name: &str, warmup: usize, iters: usize, mut f: impl FnMut()) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut times = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        times.push(t.elapsed().as_secs_f64());
+    }
+    let s = Summary::of(&times);
+    let r = BenchResult {
+        name: name.to_string(),
+        iters,
+        median_s: s.median,
+        mean_s: s.mean,
+        std_s: s.std,
+        min_s: s.min,
+    };
+    println!("{}", r.report());
+    r
+}
+
+/// Auto-select iteration count so a bench takes ≈`budget_s` seconds.
+pub fn bench(name: &str, budget_s: f64, mut f: impl FnMut()) -> BenchResult {
+    // Probe once to size the run.
+    let t = Instant::now();
+    f();
+    let one = t.elapsed().as_secs_f64().max(1e-9);
+    let iters = ((budget_s / one) as usize).clamp(5, 10_000);
+    bench_n(name, (iters / 10).max(1), iters, f)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_n_counts_iters() {
+        let mut calls = 0;
+        let r = bench_n("test", 2, 10, || calls += 1);
+        assert_eq!(calls, 12);
+        assert_eq!(r.iters, 10);
+        assert!(r.median_s >= 0.0);
+        assert!(r.min_s <= r.median_s);
+    }
+
+    #[test]
+    fn fmt_ranges() {
+        assert!(fmt_s(2.0).ends_with('s'));
+        assert!(fmt_s(2e-3).ends_with("ms"));
+        assert!(fmt_s(2e-6).ends_with("µs"));
+        assert!(fmt_s(2e-9).ends_with("ns"));
+    }
+}

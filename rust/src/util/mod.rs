@@ -1,0 +1,13 @@
+//! Small self-contained substrates: seeded RNG, summary statistics, a JSON
+//! writer/parser (for the artifact manifest and result dumps), markdown table
+//! rendering, and a wall-clock timer.
+//!
+//! These exist in-repo because the offline vendored registry ships neither
+//! `serde` nor `rand`; see DESIGN.md §4.
+
+pub mod bench;
+pub mod json;
+pub mod rng;
+pub mod stats;
+pub mod table;
+pub mod timer;

@@ -1,0 +1,131 @@
+//! Markdown / aligned-text table rendering for experiment reports.
+//!
+//! The harness prints rows with the same columns as the paper's tables; this
+//! renderer produces GitHub-flavored markdown (pasted into EXPERIMENTS.md)
+//! and aligned plain text for terminals.
+
+/// A simple table builder.
+#[derive(Clone, Debug, Default)]
+pub struct TableBuilder {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl TableBuilder {
+    pub fn new(header: &[&str]) -> Self {
+        TableBuilder { header: header.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
+        assert_eq!(cells.len(), self.header.len(), "row arity mismatch");
+        self.rows.push(cells);
+        self
+    }
+
+    /// Render as GitHub-flavored markdown.
+    pub fn markdown(&self) -> String {
+        let mut out = String::new();
+        out.push_str("| ");
+        out.push_str(&self.header.join(" | "));
+        out.push_str(" |\n|");
+        for _ in &self.header {
+            out.push_str("---|");
+        }
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str("| ");
+            out.push_str(&row.join(" | "));
+            out.push_str(" |\n");
+        }
+        out
+    }
+
+    /// Render as aligned plain text.
+    pub fn text(&self) -> String {
+        let ncol = self.header.len();
+        let mut widths = vec![0usize; ncol];
+        for (i, h) in self.header.iter().enumerate() {
+            widths[i] = h.chars().count();
+        }
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.chars().count());
+            }
+        }
+        let fmt_row = |cells: &[String]| -> String {
+            let mut line = String::new();
+            for (i, c) in cells.iter().enumerate() {
+                let pad = widths[i] - c.chars().count();
+                line.push_str(c);
+                line.push_str(&" ".repeat(pad));
+                if i + 1 < ncol {
+                    line.push_str("  ");
+                }
+            }
+            line.push('\n');
+            line
+        };
+        let mut out = fmt_row(&self.header);
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (ncol - 1)));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+        }
+        out
+    }
+}
+
+/// Format helpers used by harness rows.
+pub fn f1(v: f64) -> String {
+    format!("{v:.1}")
+}
+pub fn f2(v: f64) -> String {
+    format!("{v:.2}")
+}
+pub fn f3(v: f64) -> String {
+    format!("{v:.3}")
+}
+pub fn f4(v: f64) -> String {
+    format!("{v:.4}")
+}
+pub fn pct(v: f64) -> String {
+    format!("{:.1}%", v * 100.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn markdown_shape() {
+        let mut t = TableBuilder::new(&["a", "b"]);
+        t.row(vec!["1".into(), "2".into()]);
+        let md = t.markdown();
+        assert!(md.starts_with("| a | b |\n|---|---|\n"));
+        assert!(md.contains("| 1 | 2 |"));
+    }
+
+    #[test]
+    fn text_alignment() {
+        let mut t = TableBuilder::new(&["col", "x"]);
+        t.row(vec!["longer".into(), "1".into()]);
+        let txt = t.text();
+        let lines: Vec<&str> = txt.lines().collect();
+        assert_eq!(lines.len(), 3);
+        assert!(lines[0].starts_with("col"));
+    }
+
+    #[test]
+    #[should_panic]
+    fn arity_mismatch_panics() {
+        let mut t = TableBuilder::new(&["a"]);
+        t.row(vec!["1".into(), "2".into()]);
+    }
+
+    #[test]
+    fn format_helpers() {
+        assert_eq!(f2(1.234), "1.23");
+        assert_eq!(pct(0.841), "84.1%");
+        assert_eq!(f3(0.0543), "0.054");
+    }
+}

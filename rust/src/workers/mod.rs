@@ -1,0 +1,10 @@
+//! Worker-thread substrate: one OS thread per compute core, each owning its
+//! private [`DriftEngine`] (its "GPU"). Mirrors the paper's one-model-replica
+//! -per-core deployment and respects the xla crate's thread-affinity (PJRT
+//! handles are created and used on the worker's own thread).
+
+mod pool;
+mod taskgraph;
+
+pub use pool::*;
+pub use taskgraph::*;

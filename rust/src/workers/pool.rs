@@ -1,0 +1,207 @@
+//! A pool of K engine-owning worker threads driven by per-step jobs.
+//!
+//! The coordinator (main thread) owns all latents; workers are stateless
+//! executors of `step`/`drift` jobs. This keeps the CHORDS control flow in
+//! one place (auditable against Algorithm 1) and makes the workers reusable
+//! by every method (CHORDS, ParaDIGMS, SRDS) — only the job schedule differs.
+
+use crate::engine::EngineFactory;
+use crate::solvers::StepRule;
+use crate::tensor::Tensor;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+/// A job executed on a worker's engine.
+pub enum Job {
+    /// Advance `(x, t → t2)` with the pool's step rule; reply `(x', f(x,t))`.
+    Step { x: Tensor, t: f32, t2: f32 },
+    /// Evaluate `f(x, t)` only; reply `(f, f)` (both slots carry the drift).
+    Drift { x: Tensor, t: f32 },
+    /// Shut the worker down.
+    Stop,
+}
+
+/// Reply to a [`Job`], tagged with the worker id.
+pub struct Reply {
+    pub worker: usize,
+    /// Advanced state for `Step`, drift for `Drift`.
+    pub out: Tensor,
+    /// Drift at the job's `(x, t)`.
+    pub drift: Tensor,
+    /// Wall-clock seconds the engine call took (excludes queueing).
+    pub secs: f64,
+}
+
+struct Worker {
+    tx: Sender<Job>,
+    handle: Option<JoinHandle<()>>,
+}
+
+/// Pool of engine-owning workers.
+pub struct CorePool {
+    workers: Vec<Worker>,
+    rx: Receiver<Reply>,
+    dims: Vec<usize>,
+}
+
+impl CorePool {
+    /// Spawn `k` workers. Each constructs its own engine from `factory`
+    /// *inside its thread* (required for PJRT-backed engines) and applies
+    /// `rule` for `Step` jobs. Fails if any engine fails to build.
+    pub fn new(
+        k: usize,
+        factory: Arc<dyn EngineFactory>,
+        rule: Arc<dyn StepRule>,
+    ) -> anyhow::Result<CorePool> {
+        assert!(k >= 1, "need at least one core");
+        let (reply_tx, reply_rx) = channel::<Reply>();
+        let (ready_tx, ready_rx) = channel::<anyhow::Result<()>>();
+        let mut workers = Vec::with_capacity(k);
+        for id in 0..k {
+            let (job_tx, job_rx) = channel::<Job>();
+            let reply_tx = reply_tx.clone();
+            let ready_tx = ready_tx.clone();
+            let factory = factory.clone();
+            let rule = rule.clone();
+            let handle = std::thread::Builder::new()
+                .name(format!("chords-core-{id}"))
+                .spawn(move || worker_main(id, factory, rule, job_rx, reply_tx, ready_tx))
+                .expect("spawn worker");
+            workers.push(Worker { tx: job_tx, handle: Some(handle) });
+        }
+        drop(ready_tx);
+        // Wait for all engines to build (surfacing artifact/compile errors).
+        for _ in 0..k {
+            ready_rx.recv().expect("worker died during init")?;
+        }
+        let dims = factory.dims();
+        Ok(CorePool { workers, rx: reply_rx, dims })
+    }
+
+    pub fn size(&self) -> usize {
+        self.workers.len()
+    }
+
+    pub fn dims(&self) -> Vec<usize> {
+        self.dims.clone()
+    }
+
+    /// Submit a job to worker `id` (non-blocking).
+    pub fn submit(&self, id: usize, job: Job) {
+        self.workers[id].tx.send(job).expect("worker channel closed");
+    }
+
+    /// Collect exactly `n` replies (in completion order).
+    pub fn collect(&self, n: usize) -> Vec<Reply> {
+        (0..n).map(|_| self.rx.recv().expect("worker reply channel closed")).collect()
+    }
+
+    /// Convenience: run one job on one worker and wait.
+    pub fn run_one(&self, id: usize, job: Job) -> Reply {
+        self.submit(id, job);
+        self.rx.recv().expect("worker reply channel closed")
+    }
+}
+
+impl Drop for CorePool {
+    fn drop(&mut self) {
+        for w in &self.workers {
+            let _ = w.tx.send(Job::Stop);
+        }
+        for w in &mut self.workers {
+            if let Some(h) = w.handle.take() {
+                let _ = h.join();
+            }
+        }
+    }
+}
+
+fn worker_main(
+    id: usize,
+    factory: Arc<dyn EngineFactory>,
+    rule: Arc<dyn StepRule>,
+    jobs: Receiver<Job>,
+    replies: Sender<Reply>,
+    ready: Sender<anyhow::Result<()>>,
+) {
+    let mut engine = match factory.create() {
+        Ok(e) => {
+            let _ = ready.send(Ok(()));
+            e
+        }
+        Err(e) => {
+            let _ = ready.send(Err(e));
+            return;
+        }
+    };
+    while let Ok(job) = jobs.recv() {
+        match job {
+            Job::Stop => break,
+            Job::Step { x, t, t2 } => {
+                let t0 = std::time::Instant::now();
+                let (out, drift) = rule.step(engine.as_mut(), &x, t, t2);
+                let secs = t0.elapsed().as_secs_f64();
+                if replies.send(Reply { worker: id, out, drift, secs }).is_err() {
+                    break;
+                }
+            }
+            Job::Drift { x, t } => {
+                let t0 = std::time::Instant::now();
+                let f = engine.drift(&x, t);
+                let secs = t0.elapsed().as_secs_f64();
+                if replies.send(Reply { worker: id, out: f.clone(), drift: f, secs }).is_err() {
+                    break;
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::ExpOdeFactory;
+    use crate::solvers::Euler;
+
+    fn pool(k: usize) -> CorePool {
+        CorePool::new(k, Arc::new(ExpOdeFactory::new(vec![2], 0)), Arc::new(Euler)).unwrap()
+    }
+
+    #[test]
+    fn step_job_advances() {
+        let p = pool(1);
+        let x = Tensor::from_vec(&[2], vec![1.0, 2.0]);
+        let r = p.run_one(0, Job::Step { x, t: 0.0, t2: 0.1 });
+        // Euler on f=x: x' = 1.1*x
+        assert!((r.out.data()[0] - 1.1).abs() < 1e-6);
+        assert!((r.out.data()[1] - 2.2).abs() < 1e-6);
+        assert_eq!(r.drift.data(), &[1.0, 2.0]);
+    }
+
+    #[test]
+    fn parallel_fanout_tags_workers() {
+        let p = pool(4);
+        let x = Tensor::from_vec(&[2], vec![1.0, 1.0]);
+        for id in 0..4 {
+            p.submit(id, Job::Drift { x: x.clone(), t: 0.5 });
+        }
+        let mut seen: Vec<usize> = p.collect(4).into_iter().map(|r| r.worker).collect();
+        seen.sort();
+        assert_eq!(seen, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn drift_job_returns_drift() {
+        let p = pool(2);
+        let x = Tensor::from_vec(&[2], vec![3.0, -1.0]);
+        let r = p.run_one(1, Job::Drift { x: x.clone(), t: 0.2 });
+        assert_eq!(r.out.data(), x.data());
+    }
+
+    #[test]
+    fn pool_shutdown_is_clean() {
+        let p = pool(3);
+        drop(p); // must not hang or panic
+    }
+}

