@@ -9,6 +9,10 @@ use chords::util::rng::Rng;
 
 fn main() {
     println!("== PJRT runtime benches ==");
+    if !chords::runtime::pjrt_available() {
+        println!("(built without the `pjrt` feature — skipping runtime benches)");
+        return;
+    }
     let manifest = match Manifest::load("artifacts") {
         Ok(m) => m,
         Err(_) => {

@@ -1,0 +1,107 @@
+//! Serving benches: offered-load sweep over the elastic scheduler.
+//!
+//! Drives the in-process [`Router`] (no TCP noise) with 1 / 4 / 16
+//! concurrent clients on one model, with and without elastic mid-job core
+//! reclamation, and reports client latency percentiles plus scheduler-side
+//! utilization and lease churn. One JSON object per configuration (the
+//! repo's JSON bench-table convention), preceded by a human-readable line.
+//! Run with `cargo bench --bench bench_serving`.
+//!
+//! Uses the artifact-free `exp-ode-slow` preset (300µs simulated NFE cost)
+//! so each request does paper-shaped work (~50 NFE-depth steps).
+
+use chords::config::ServeConfig;
+use chords::server::{GenRequest, Router};
+use chords::util::json::Json;
+use chords::util::stats::Summary;
+use std::sync::{Arc, Barrier};
+use std::time::Instant;
+
+const TOTAL_CORES: usize = 8;
+const REQS_PER_CLIENT: usize = 3;
+
+fn sweep(concurrent: usize, elastic: bool) -> Json {
+    let router = Arc::new(Router::with_opts(
+        "artifacts",
+        ServeConfig {
+            total_cores: TOTAL_CORES,
+            queue_cap: 256,
+            elastic_reclaim: elastic,
+            ..ServeConfig::default()
+        },
+    ));
+    let barrier = Arc::new(Barrier::new(concurrent));
+    let t0 = Instant::now();
+    let mut handles = Vec::new();
+    for c in 0..concurrent {
+        let router = router.clone();
+        let barrier = barrier.clone();
+        handles.push(std::thread::spawn(move || {
+            barrier.wait();
+            let mut lats = Vec::with_capacity(REQS_PER_CLIENT);
+            for i in 0..REQS_PER_CLIENT {
+                let req = GenRequest {
+                    model: "exp-ode-slow".into(),
+                    steps: 50,
+                    cores: 4,
+                    seed: (c * 97 + i) as u64,
+                    ..Default::default()
+                };
+                let t = Instant::now();
+                router.generate(&req, |_, _, _| {}).expect("bench request failed");
+                lats.push(t.elapsed().as_secs_f64());
+            }
+            lats
+        }));
+    }
+    let mut lats = Vec::new();
+    for h in handles {
+        lats.extend(h.join().expect("client thread panicked"));
+    }
+    let wall_s = t0.elapsed().as_secs_f64();
+    let s = Summary::of(&lats);
+    let stats = router.queue_stats();
+    let stat = |k: &str| stats.get(k).and_then(|v| v.as_f64()).unwrap_or(0.0);
+    println!(
+        "clients={concurrent:<2} elastic={elastic:<5} {:>3} reqs in {wall_s:6.2}s → {:6.2} req/s | p50 {:7.1}ms p99 {:7.1}ms | util {:.2} churn {} peak_jobs {}",
+        lats.len(),
+        lats.len() as f64 / wall_s,
+        s.median * 1e3,
+        s.p99 * 1e3,
+        stat("utilization"),
+        stat("lease_churn"),
+        stat("peak_active_jobs"),
+    );
+    Json::obj(vec![
+        ("bench", Json::str("serving")),
+        ("model", Json::str("exp-ode-slow")),
+        ("total_cores", Json::num(TOTAL_CORES as f64)),
+        ("concurrent", Json::num(concurrent as f64)),
+        ("elastic_reclaim", Json::Bool(elastic)),
+        ("requests", Json::num(lats.len() as f64)),
+        ("wall_s", Json::num(wall_s)),
+        ("throughput_rps", Json::num(lats.len() as f64 / wall_s)),
+        ("p50_ms", Json::num(s.median * 1e3)),
+        ("p90_ms", Json::num(s.p90 * 1e3)),
+        ("p99_ms", Json::num(s.p99 * 1e3)),
+        ("mean_wait_ms", Json::num(stat("mean_wait_ms"))),
+        ("utilization", Json::num(stat("utilization"))),
+        ("lease_churn", Json::num(stat("lease_churn"))),
+        ("peak_active_jobs", Json::num(stat("peak_active_jobs"))),
+        ("peak_cores_in_use", Json::num(stat("peak_cores_in_use"))),
+    ])
+}
+
+fn main() {
+    println!("== serving benches: offered-load sweep over the elastic scheduler ==");
+    let mut rows = Vec::new();
+    for elastic in [true, false] {
+        for concurrent in [1usize, 4, 16] {
+            rows.push(sweep(concurrent, elastic));
+        }
+    }
+    println!("-- JSON bench table --");
+    for row in &rows {
+        println!("{}", row.to_string_compact());
+    }
+}

@@ -26,7 +26,10 @@ impl Args {
                 if let Some((k, v)) = name.split_once('=') {
                     args.flags.insert(k.to_string(), v.to_string());
                 } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false)
-                    && !matches!(name, "trace" | "verbose" | "quiet" | "markdown" | "json")
+                    && !matches!(
+                        name,
+                        "trace" | "verbose" | "quiet" | "markdown" | "json" | "no-reclaim"
+                    )
                 {
                     let v = it.next().unwrap();
                     args.flags.insert(name.to_string(), v);
@@ -83,7 +86,10 @@ pub fn help_text() -> String {
         ("trace", "render the Fig. 2-style pipeline trace for a run"),
         ("ablate", "rectification on/off and step-rule ablations (model=…)"),
         ("reward-sweep", "verify Thm 2.5 / Def 2.4 on the exponential-ODE reward"),
-        ("serve", "start the generation server (--port 7077)"),
+        (
+            "serve",
+            "start the generation server (--port 7077 --total-cores 8 --queue-cap 64 [--no-reclaim])",
+        ),
         ("inspect-artifacts", "list AOT artifacts and validate the manifest"),
         ("help", "this message"),
     ];
@@ -118,6 +124,17 @@ mod tests {
         let a = parse(&["serve", "--port=7077", "--verbose"]);
         assert_eq!(a.flag("port"), Some("7077"));
         assert!(a.has_flag("verbose"));
+        assert_eq!(a.flag_parsed("port", 0u16).unwrap(), 7077);
+    }
+
+    #[test]
+    fn serve_scheduler_flags() {
+        let a = parse(&[
+            "serve", "--total-cores", "16", "--queue-cap", "32", "--no-reclaim", "--port", "7077",
+        ]);
+        assert_eq!(a.flag_parsed("total-cores", 8usize).unwrap(), 16);
+        assert_eq!(a.flag_parsed("queue-cap", 64usize).unwrap(), 32);
+        assert!(a.has_flag("no-reclaim"));
         assert_eq!(a.flag_parsed("port", 0u16).unwrap(), 7077);
     }
 

@@ -47,6 +47,9 @@ pub struct ModelPreset {
     pub sim_cost_us: u64,
     /// Weight seed so the DiT is reproducible across Python & Rust runs.
     pub weight_seed: u64,
+    /// Default cores the serving scheduler grants when a request does not
+    /// ask for a specific K (see `server::GenRequest::cores` = 0).
+    pub serve_cores: usize,
 }
 
 impl ModelPreset {
@@ -80,6 +83,7 @@ pub const PRESETS: &[ModelPreset] = &[
         default_steps: 50,
         sim_cost_us: 0,
         weight_seed: 101,
+        serve_cores: 4,
     },
     ModelPreset {
         name: "wan-sim",
@@ -93,6 +97,7 @@ pub const PRESETS: &[ModelPreset] = &[
         default_steps: 50,
         sim_cost_us: 0,
         weight_seed: 102,
+        serve_cores: 4,
     },
     ModelPreset {
         name: "cogvideo-sim",
@@ -106,6 +111,7 @@ pub const PRESETS: &[ModelPreset] = &[
         default_steps: 50,
         sim_cost_us: 0,
         weight_seed: 103,
+        serve_cores: 4,
     },
     // ---- image (Table 2) ----
     ModelPreset {
@@ -120,6 +126,7 @@ pub const PRESETS: &[ModelPreset] = &[
         default_steps: 50,
         sim_cost_us: 0,
         weight_seed: 104,
+        serve_cores: 4,
     },
     ModelPreset {
         name: "flux-sim",
@@ -133,6 +140,7 @@ pub const PRESETS: &[ModelPreset] = &[
         default_steps: 50,
         sim_cost_us: 0,
         weight_seed: 105,
+        serve_cores: 4,
     },
     // ---- analytic (theory / property tests / fast benches) ----
     ModelPreset {
@@ -147,6 +155,7 @@ pub const PRESETS: &[ModelPreset] = &[
         default_steps: 50,
         sim_cost_us: 0,
         weight_seed: 0,
+        serve_cores: 2,
     },
     ModelPreset {
         name: "gauss-mix",
@@ -160,6 +169,25 @@ pub const PRESETS: &[ModelPreset] = &[
         default_steps: 50,
         sim_cost_us: 0,
         weight_seed: 7,
+        serve_cores: 2,
+    },
+    // Analytic engine with a simulated per-NFE cost: jobs take long enough
+    // (~steps × sim_cost) that scheduler concurrency, queue backpressure,
+    // and mid-job core reclamation are observable in tests and benches
+    // without AOT artifacts.
+    ModelPreset {
+        name: "exp-ode-slow",
+        simulates: "exp ODE with 300µs simulated NFE cost (scheduler tests/benches)",
+        tokens: 1,
+        channels: 16,
+        depth: 0,
+        heads: 0,
+        param: Parameterization::Velocity,
+        engine: EngineKind::AnalyticExp,
+        default_steps: 50,
+        sim_cost_us: 300,
+        weight_seed: 0,
+        serve_cores: 4,
     },
 ];
 
@@ -206,6 +234,14 @@ mod tests {
     fn hlo_presets_need_artifacts() {
         assert!(preset("sd35-sim").unwrap().needs_artifacts());
         assert!(!preset("exp-ode").unwrap().needs_artifacts());
+    }
+
+    #[test]
+    fn serve_cores_within_step_budget() {
+        for p in PRESETS {
+            assert!(p.serve_cores >= 1, "{}", p.name);
+            assert!(p.serve_cores <= p.default_steps, "{}", p.name);
+        }
     }
 
     #[test]

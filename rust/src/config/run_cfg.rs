@@ -104,6 +104,71 @@ impl RunConfig {
     }
 }
 
+/// Serving/scheduler configuration (`chords serve` and [`crate::sched`]).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ServeConfig {
+    /// Global core budget shared by all models and requests.
+    pub total_cores: usize,
+    /// Admission queue capacity (requests beyond it are rejected with the
+    /// structured `overloaded` error).
+    pub queue_cap: usize,
+    /// Return cores to the budget the moment a CHORDS core retires
+    /// (mid-job elastic reclamation).
+    pub elastic_reclaim: bool,
+    /// Default admission deadline applied to requests that set none
+    /// (milliseconds; None = wait indefinitely).
+    pub default_deadline_ms: Option<u64>,
+    /// Detach a model's warm parked workers after this long without lease
+    /// activity (milliseconds).
+    pub idle_ttl_ms: u64,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            total_cores: 8,
+            queue_cap: 64,
+            elastic_reclaim: true,
+            default_deadline_ms: None,
+            idle_ttl_ms: 30_000,
+        }
+    }
+}
+
+impl ServeConfig {
+    /// Apply a `key=value` override (CLI surface). Unknown keys error.
+    pub fn set(&mut self, key: &str, value: &str) -> Result<(), String> {
+        match key {
+            "total_cores" | "total-cores" => {
+                let v: usize = value.parse().map_err(|e| format!("total_cores: {e}"))?;
+                if v == 0 {
+                    return Err("total_cores must be ≥ 1".into());
+                }
+                self.total_cores = v;
+            }
+            "queue_cap" | "queue-cap" => {
+                let v: usize = value.parse().map_err(|e| format!("queue_cap: {e}"))?;
+                if v == 0 {
+                    return Err("queue_cap must be ≥ 1".into());
+                }
+                self.queue_cap = v;
+            }
+            "elastic_reclaim" | "elastic" => {
+                self.elastic_reclaim = value.parse().map_err(|e| format!("elastic_reclaim: {e}"))?
+            }
+            "deadline_ms" => {
+                self.default_deadline_ms =
+                    Some(value.parse().map_err(|e| format!("deadline_ms: {e}"))?)
+            }
+            "idle_ttl_ms" => {
+                self.idle_ttl_ms = value.parse().map_err(|e| format!("idle_ttl_ms: {e}"))?
+            }
+            _ => return Err(format!("unknown serve config key '{key}'")),
+        }
+        Ok(())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -127,5 +192,23 @@ mod tests {
         assert_eq!(c.method, Method::ParaDigms);
         assert!(c.set("bogus", "1").is_err());
         assert!(c.set("steps", "abc").is_err());
+    }
+
+    #[test]
+    fn serve_config_overrides() {
+        let mut s = ServeConfig::default();
+        s.set("total_cores", "16").unwrap();
+        s.set("queue-cap", "128").unwrap();
+        s.set("elastic", "false").unwrap();
+        s.set("deadline_ms", "2500").unwrap();
+        s.set("idle_ttl_ms", "1000").unwrap();
+        assert_eq!(s.total_cores, 16);
+        assert_eq!(s.queue_cap, 128);
+        assert!(!s.elastic_reclaim);
+        assert_eq!(s.default_deadline_ms, Some(2500));
+        assert_eq!(s.idle_ttl_ms, 1000);
+        assert!(s.set("total_cores", "0").is_err());
+        assert!(s.set("queue_cap", "0").is_err());
+        assert!(s.set("bogus", "1").is_err());
     }
 }

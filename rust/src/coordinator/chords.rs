@@ -13,7 +13,7 @@ use super::scheduler::Scheduler;
 use crate::solvers::TimeGrid;
 use crate::tensor::{ops, Tensor};
 use crate::util::timer::Timer;
-use crate::workers::{CorePool, Job};
+use crate::workers::{Job, WorkerSet};
 
 /// Configuration for one CHORDS run.
 #[derive(Clone, Debug)]
@@ -108,16 +108,18 @@ struct CoreState {
     active: bool,
 }
 
-/// The Algorithm 1 executor.
+/// The Algorithm 1 executor. Drives any [`WorkerSet`] — a whole
+/// [`crate::workers::CorePool`] or a leased [`crate::workers::PoolView`]
+/// subset when running under the elastic scheduler ([`crate::sched`]).
 pub struct ChordsExecutor<'a> {
-    pool: &'a CorePool,
+    pool: &'a dyn WorkerSet,
     cfg: ChordsConfig,
     sched: Scheduler,
 }
 
 impl<'a> ChordsExecutor<'a> {
     /// `pool.size()` must be ≥ `cfg.seq.len()` (one worker per core).
-    pub fn new(pool: &'a CorePool, cfg: ChordsConfig) -> Self {
+    pub fn new(pool: &'a dyn WorkerSet, cfg: ChordsConfig) -> Self {
         let k = cfg.seq.len();
         assert!(pool.size() >= k, "pool has {} workers, need {k}", pool.size());
         let sched = Scheduler::new(cfg.seq.clone(), cfg.grid.steps());
@@ -133,7 +135,23 @@ impl<'a> ChordsExecutor<'a> {
     pub fn run_streaming(
         &self,
         x0: &Tensor,
+        on_output: impl FnMut(&CoreOutput),
+    ) -> ChordsResult {
+        self.run_streaming_with_retire(x0, on_output, |_| {})
+    }
+
+    /// Like [`Self::run_streaming`], plus `on_retire` fired (with the
+    /// 0-based core index) the moment a core emits its output and stops
+    /// stepping. From that point the core's worker receives no further jobs
+    /// from this run, so an elastic scheduler can return the core to the
+    /// global budget and re-lease it to a queued job **mid-run** — the
+    /// paper's progressive capacity-release property (§2.2/§5) turned into
+    /// serving throughput.
+    pub fn run_streaming_with_retire(
+        &self,
+        x0: &Tensor,
         mut on_output: impl FnMut(&CoreOutput),
+        mut on_retire: impl FnMut(usize),
     ) -> ChordsResult {
         let k = self.sched.cores();
         let n = self.sched.steps();
@@ -252,6 +270,7 @@ impl<'a> ChordsExecutor<'a> {
                     };
                     on_output(&out);
                     outputs.push(out);
+                    on_retire(c);
                 }
             }
 
@@ -295,6 +314,7 @@ mod tests {
     use crate::engine::{ExpOdeFactory, GaussMixtureFactory};
     use crate::solvers::Euler;
     use crate::util::rng::Rng;
+    use crate::workers::CorePool;
     use std::sync::Arc;
 
     fn exp_pool(k: usize) -> CorePool {
@@ -452,6 +472,48 @@ mod tests {
         // non-linear near mode boundaries, so the bound is loose).
         let err = ops::rmse(&res.outputs[0].output, &seq.output);
         assert!(err < 0.12, "fastest-core rmse too high: {err}");
+    }
+
+    #[test]
+    fn retire_hook_fires_once_per_core_in_emission_order() {
+        let pool = exp_pool(4);
+        let grid = TimeGrid::uniform(50);
+        let cfg = ChordsConfig::new(vec![0, 8, 16, 32], grid);
+        let exec = ChordsExecutor::new(&pool, cfg);
+        let mut retired = Vec::new();
+        let res = exec.run_streaming_with_retire(&x0(), |_| {}, |c| retired.push(c));
+        // Core K (index 3) retires first, core 1 (index 0) last.
+        assert_eq!(retired, vec![3, 2, 1, 0]);
+        assert_eq!(res.outputs.len(), 4);
+    }
+
+    #[test]
+    fn retire_hook_skips_unemitted_cores_on_early_exit() {
+        let pool = exp_pool(4);
+        let grid = TimeGrid::uniform(50);
+        let mut cfg = ChordsConfig::new(vec![0, 8, 16, 32], grid);
+        cfg.early_exit_tol = Some(1e9); // exit after the 2nd output
+        let exec = ChordsExecutor::new(&pool, cfg);
+        let mut retired = Vec::new();
+        let res = exec.run_streaming_with_retire(&x0(), |_| {}, |c| retired.push(c));
+        assert!(res.early_exited);
+        assert_eq!(retired, vec![3, 2], "cores 1-2 never emitted");
+    }
+
+    #[test]
+    fn executor_runs_over_a_pool_view() {
+        // The same run through a leased subset of a larger shared pool must
+        // behave identically to a dedicated pool.
+        let pool = exp_pool(6);
+        let view = pool.view(&[4, 1, 5, 2]);
+        let grid = TimeGrid::uniform(50);
+        let cfg = ChordsConfig::new(vec![0, 8, 16, 32], grid.clone());
+        let exec = ChordsExecutor::new(&view, cfg);
+        let res = exec.run(&x0());
+        let seq = sequential_solve(&pool, &grid, &x0());
+        assert_eq!(res.final_output, seq.output);
+        assert_eq!(res.outputs.len(), 4);
+        assert_eq!(res.outputs[0].nfe_depth, 21);
     }
 
     #[test]

@@ -15,6 +15,7 @@ pub mod engine;
 pub mod harness;
 pub mod metrics;
 pub mod runtime;
+pub mod sched;
 pub mod server;
 pub mod solvers;
 pub mod tensor;

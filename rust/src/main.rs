@@ -207,12 +207,28 @@ fn cmd_reward_sweep() -> Result<()> {
 
 fn cmd_serve(args: &Args) -> Result<()> {
     let port: u16 = args.flag_parsed("port", 7077).map_err(|e| anyhow!(e))?;
-    let cores: usize = args.flag_parsed("cores", 8).map_err(|e| anyhow!(e))?;
+    // All scheduler knobs go through ServeConfig::set so validation (e.g.
+    // total_cores ≥ 1) lives in one place. `--cores` is a legacy alias.
+    let mut cfg = chords::config::ServeConfig::default();
+    for (flag, key) in [
+        ("cores", "total_cores"),
+        ("total-cores", "total_cores"),
+        ("queue-cap", "queue_cap"),
+        ("deadline-ms", "deadline_ms"),
+    ] {
+        if let Some(v) = args.flag(flag) {
+            cfg.set(key, v).map_err(|e| anyhow!("--{flag}: {e}"))?;
+        }
+    }
+    cfg.elastic_reclaim = !args.has_flag("no-reclaim");
     let artifacts = args.flag("artifacts").unwrap_or("artifacts").to_string();
-    let router = Arc::new(Router::new(&artifacts, cores));
+    let router = Arc::new(Router::with_opts(&artifacts, cfg.clone()));
     let server = Server::start("127.0.0.1", port, router)?;
-    println!("chords server listening on {} (max {cores} cores per request)", server.addr);
-    println!("protocol: JSON lines; ops: ping | stats | generate");
+    println!(
+        "chords server listening on {} (budget {} cores, queue cap {}, elastic reclaim {})",
+        server.addr, cfg.total_cores, cfg.queue_cap, cfg.elastic_reclaim
+    );
+    println!("protocol: JSON lines; ops: ping | stats | queue_stats | generate");
     // Serve until killed.
     loop {
         std::thread::sleep(std::time::Duration::from_secs(3600));

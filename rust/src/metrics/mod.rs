@@ -5,6 +5,8 @@
 
 mod convergence;
 mod quality;
+mod serving;
 
 pub use convergence::*;
 pub use quality::*;
+pub use serving::*;

@@ -1,0 +1,224 @@
+//! Serving-path metrics for the elastic scheduler ([`crate::sched`]):
+//! admission queue depth and wait time, lease grants and mid-job core
+//! reclamation (lease churn), concurrency peaks, and a core-utilization
+//! estimate integrated from busy core-time. Exposed over the wire via the
+//! server's `{"op":"queue_stats"}` endpoint.
+
+use crate::util::json::Json;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+/// Shared counters/gauges for the serving path. All methods are lock-free;
+/// gauges are best-effort (exact under the dispatcher's own serialization).
+pub struct ServingMetrics {
+    /// Tickets ever enqueued.
+    pub queued_total: AtomicU64,
+    /// Tickets granted a lease.
+    pub admitted: AtomicU64,
+    /// Tickets rejected because the queue was full.
+    pub rejected_overloaded: AtomicU64,
+    /// Tickets rejected because their deadline passed while queued.
+    pub rejected_deadline: AtomicU64,
+    /// Current queue depth (gauge).
+    pub queue_depth: AtomicU64,
+    /// High-water queue depth.
+    pub peak_queue_depth: AtomicU64,
+    /// Jobs currently holding a lease (gauge).
+    pub active_jobs: AtomicU64,
+    /// High-water concurrent jobs — the "no per-model serialization" proof.
+    pub peak_active_jobs: AtomicU64,
+    /// Cores currently leased (gauge).
+    pub cores_in_use: AtomicU64,
+    /// High-water leased cores.
+    pub peak_cores_in_use: AtomicU64,
+    /// Leases granted (one per admitted job).
+    pub lease_grants: AtomicU64,
+    /// Cores returned to the budget **mid-job** by early-exit/rectification
+    /// retirement and immediately re-leasable — the elastic-reclamation
+    /// counter the acceptance criteria key on.
+    pub lease_churn: AtomicU64,
+    /// Total microseconds tickets spent queued before a grant.
+    pub wait_us_total: AtomicU64,
+    /// Max microseconds a ticket spent queued before a grant.
+    pub wait_us_max: AtomicU64,
+    /// Integrated busy core-time (µs·cores) over all completed leases.
+    pub busy_core_us: AtomicU64,
+    started: Instant,
+}
+
+impl Default for ServingMetrics {
+    fn default() -> Self {
+        ServingMetrics {
+            queued_total: AtomicU64::new(0),
+            admitted: AtomicU64::new(0),
+            rejected_overloaded: AtomicU64::new(0),
+            rejected_deadline: AtomicU64::new(0),
+            queue_depth: AtomicU64::new(0),
+            peak_queue_depth: AtomicU64::new(0),
+            active_jobs: AtomicU64::new(0),
+            peak_active_jobs: AtomicU64::new(0),
+            cores_in_use: AtomicU64::new(0),
+            peak_cores_in_use: AtomicU64::new(0),
+            lease_grants: AtomicU64::new(0),
+            lease_churn: AtomicU64::new(0),
+            wait_us_total: AtomicU64::new(0),
+            wait_us_max: AtomicU64::new(0),
+            busy_core_us: AtomicU64::new(0),
+            started: Instant::now(),
+        }
+    }
+}
+
+/// Raise `peak` to at least `value` (racy-safe compare-exchange loop).
+fn raise_peak(peak: &AtomicU64, value: u64) {
+    let mut cur = peak.load(Ordering::Relaxed);
+    while value > cur {
+        match peak.compare_exchange_weak(cur, value, Ordering::Relaxed, Ordering::Relaxed) {
+            Ok(_) => return,
+            Err(seen) => cur = seen,
+        }
+    }
+}
+
+impl ServingMetrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record a queue-depth change and track its high-water mark.
+    pub fn set_queue_depth(&self, depth: usize) {
+        self.queue_depth.store(depth as u64, Ordering::Relaxed);
+        raise_peak(&self.peak_queue_depth, depth as u64);
+    }
+
+    /// Record a grant of `cores` after `wait_us` microseconds queued.
+    pub fn on_grant(&self, cores: usize, wait_us: u64) {
+        self.admitted.fetch_add(1, Ordering::Relaxed);
+        self.lease_grants.fetch_add(1, Ordering::Relaxed);
+        self.wait_us_total.fetch_add(wait_us, Ordering::Relaxed);
+        raise_peak(&self.wait_us_max, wait_us);
+        let jobs = self.active_jobs.fetch_add(1, Ordering::Relaxed) + 1;
+        raise_peak(&self.peak_active_jobs, jobs);
+        let used = self.cores_in_use.fetch_add(cores as u64, Ordering::Relaxed) + cores as u64;
+        raise_peak(&self.peak_cores_in_use, used);
+    }
+
+    /// Record `cores` released after being busy for `busy_us` microseconds
+    /// each; `mid_job` marks elastic reclamation (lease churn).
+    pub fn on_release(&self, cores: usize, busy_us: u64, mid_job: bool) {
+        self.cores_in_use.fetch_sub(cores as u64, Ordering::Relaxed);
+        self.busy_core_us.fetch_add(cores as u64 * busy_us, Ordering::Relaxed);
+        if mid_job {
+            self.lease_churn.fetch_add(cores as u64, Ordering::Relaxed);
+        }
+    }
+
+    /// Record a job finishing (its lease fully returned).
+    pub fn on_job_end(&self) {
+        self.active_jobs.fetch_sub(1, Ordering::Relaxed);
+    }
+
+    /// Mean core utilization since start-up: busy core-time over
+    /// `total_cores × elapsed`. In [0, 1] up to gauge races.
+    pub fn utilization(&self, total_cores: usize) -> f64 {
+        let elapsed_us = self.started.elapsed().as_micros() as f64;
+        if elapsed_us <= 0.0 || total_cores == 0 {
+            return 0.0;
+        }
+        let busy = self.busy_core_us.load(Ordering::Relaxed) as f64;
+        (busy / (elapsed_us * total_cores as f64)).min(1.0)
+    }
+
+    /// Wire-format snapshot (the `queue_stats` response body).
+    pub fn snapshot(&self, total_cores: usize, queue_cap: usize) -> Json {
+        let admitted = self.admitted.load(Ordering::Relaxed);
+        let wait_total = self.wait_us_total.load(Ordering::Relaxed);
+        let mean_wait_ms = if admitted > 0 {
+            wait_total as f64 / admitted as f64 / 1e3
+        } else {
+            0.0
+        };
+        Json::obj(vec![
+            ("total_cores", Json::num(total_cores as f64)),
+            ("queue_cap", Json::num(queue_cap as f64)),
+            ("queued_total", Json::num(self.queued_total.load(Ordering::Relaxed) as f64)),
+            ("admitted", Json::num(admitted as f64)),
+            (
+                "rejected_overloaded",
+                Json::num(self.rejected_overloaded.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "rejected_deadline",
+                Json::num(self.rejected_deadline.load(Ordering::Relaxed) as f64),
+            ),
+            ("queue_depth", Json::num(self.queue_depth.load(Ordering::Relaxed) as f64)),
+            (
+                "peak_queue_depth",
+                Json::num(self.peak_queue_depth.load(Ordering::Relaxed) as f64),
+            ),
+            ("active_jobs", Json::num(self.active_jobs.load(Ordering::Relaxed) as f64)),
+            (
+                "peak_active_jobs",
+                Json::num(self.peak_active_jobs.load(Ordering::Relaxed) as f64),
+            ),
+            ("cores_in_use", Json::num(self.cores_in_use.load(Ordering::Relaxed) as f64)),
+            (
+                "peak_cores_in_use",
+                Json::num(self.peak_cores_in_use.load(Ordering::Relaxed) as f64),
+            ),
+            ("lease_grants", Json::num(self.lease_grants.load(Ordering::Relaxed) as f64)),
+            ("lease_churn", Json::num(self.lease_churn.load(Ordering::Relaxed) as f64)),
+            ("mean_wait_ms", Json::num(mean_wait_ms)),
+            (
+                "max_wait_ms",
+                Json::num(self.wait_us_max.load(Ordering::Relaxed) as f64 / 1e3),
+            ),
+            ("utilization", Json::num(self.utilization(total_cores))),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grant_release_cycle_balances_gauges() {
+        let m = ServingMetrics::new();
+        m.on_grant(4, 1500);
+        m.on_grant(4, 500);
+        assert_eq!(m.cores_in_use.load(Ordering::Relaxed), 8);
+        assert_eq!(m.peak_cores_in_use.load(Ordering::Relaxed), 8);
+        assert_eq!(m.peak_active_jobs.load(Ordering::Relaxed), 2);
+        m.on_release(1, 1000, true); // early-exit reclaim
+        assert_eq!(m.lease_churn.load(Ordering::Relaxed), 1);
+        m.on_release(3, 2000, false);
+        m.on_job_end();
+        m.on_release(4, 2000, false);
+        m.on_job_end();
+        assert_eq!(m.cores_in_use.load(Ordering::Relaxed), 0);
+        assert_eq!(m.active_jobs.load(Ordering::Relaxed), 0);
+        assert_eq!(m.busy_core_us.load(Ordering::Relaxed), 1000 + 3 * 2000 + 4 * 2000);
+    }
+
+    #[test]
+    fn snapshot_has_wire_fields() {
+        let m = ServingMetrics::new();
+        m.set_queue_depth(3);
+        m.on_grant(2, 2000);
+        let j = m.snapshot(8, 64);
+        assert_eq!(j.get("total_cores").unwrap().as_usize().unwrap(), 8);
+        assert_eq!(j.get("queue_depth").unwrap().as_usize().unwrap(), 3);
+        assert_eq!(j.get("admitted").unwrap().as_usize().unwrap(), 1);
+        assert!((j.get("mean_wait_ms").unwrap().as_f64().unwrap() - 2.0).abs() < 1e-9);
+        assert!(j.get("utilization").unwrap().as_f64().unwrap() >= 0.0);
+    }
+
+    #[test]
+    fn utilization_bounded() {
+        let m = ServingMetrics::new();
+        m.busy_core_us.store(u64::MAX / 2, Ordering::Relaxed);
+        assert!(m.utilization(8) <= 1.0);
+        assert_eq!(m.utilization(0), 0.0);
+    }
+}

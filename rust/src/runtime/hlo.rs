@@ -4,10 +4,15 @@
 //! *inside the owning worker thread* (see [`crate::workers::CorePool`]).
 //! The HLO text is read once by the factory and shared; each worker compiles
 //! its own executable — mirroring one-model-replica-per-GPU deployment.
+//!
+//! The real engine needs the vendored `xla` crate and is gated behind the
+//! `pjrt` cargo feature. Without it (the default offline build) this module
+//! exposes the same API surface but every construction path returns a
+//! descriptive error, so HLO presets fail fast while analytic presets and
+//! the whole serving/scheduling stack stay fully functional.
 
 use super::artifact::ArtifactEntry;
 use crate::engine::{DriftEngine, EngineFactory};
-use crate::tensor::Tensor;
 use anyhow::{Context, Result};
 use std::sync::Arc;
 
@@ -44,89 +49,147 @@ impl EngineFactory for HloEngineFactory {
     }
 }
 
-/// A drift engine executing `f_θ(x, t)` through a compiled XLA module.
-pub struct HloEngine {
-    exe: xla::PjRtLoadedExecutable,
-    dims: Vec<usize>,
-    dims_i64: Vec<i64>,
-    name: String,
+#[cfg(feature = "pjrt")]
+mod engine_impl {
+    use super::*;
+    use crate::tensor::Tensor;
+
+    /// A drift engine executing `f_θ(x, t)` through a compiled XLA module.
+    pub struct HloEngine {
+        exe: xla::PjRtLoadedExecutable,
+        dims: Vec<usize>,
+        dims_i64: Vec<i64>,
+        name: String,
+    }
+
+    impl HloEngine {
+        /// Compile from HLO text on a fresh PJRT CPU client.
+        pub fn from_text(hlo_text: &str, dims: Vec<usize>, name: String) -> Result<Self> {
+            let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+            let proto = parse_hlo_text(hlo_text).context("parsing HLO text")?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client.compile(&comp).context("compiling HLO module")?;
+            let dims_i64 = dims.iter().map(|&d| d as i64).collect();
+            Ok(HloEngine { exe, dims, dims_i64, name })
+        }
+
+        /// Load + compile directly from a file path.
+        pub fn from_file(path: &std::path::Path, dims: Vec<usize>, name: String) -> Result<Self> {
+            let text = std::fs::read_to_string(path)
+                .with_context(|| format!("reading {}", path.display()))?;
+            Self::from_text(&text, dims, name)
+        }
+
+        fn execute(&self, x: &Tensor, t: f32) -> Result<Tensor> {
+            let lit_x = xla::Literal::vec1(x.data())
+                .reshape(&self.dims_i64)
+                .context("reshaping input literal")?;
+            let lit_t = xla::Literal::scalar(t);
+            let result = self.exe.execute::<xla::Literal>(&[lit_x, lit_t])?[0][0]
+                .to_literal_sync()
+                .context("fetching result literal")?;
+            // aot.py lowers with return_tuple=True → 1-tuple.
+            let out = result.to_tuple1().context("unwrapping result tuple")?;
+            let data = out.to_vec::<f32>().context("reading f32 output")?;
+            Ok(Tensor::from_vec(&self.dims, data))
+        }
+    }
+
+    /// Parse HLO text into a module proto via a temp file: the xla crate only
+    /// exposes the text parser through `from_text_file`.
+    fn parse_hlo_text(text: &str) -> Result<xla::HloModuleProto> {
+        let mut path = std::env::temp_dir();
+        let unique = format!(
+            "chords-hlo-{}-{:x}.txt",
+            std::process::id(),
+            std::time::SystemTime::now().duration_since(std::time::UNIX_EPOCH)?.as_nanos()
+        );
+        path.push(unique);
+        std::fs::write(&path, text)?;
+        let proto = xla::HloModuleProto::from_text_file(&path);
+        let _ = std::fs::remove_file(&path);
+        Ok(proto?)
+    }
+
+    // SAFETY: `HloEngine` wraps PJRT handles that the xla crate does not mark
+    // Send (raw pointers). The engine is constructed inside its worker thread
+    // and never leaves it (the CorePool contract); additionally, XLA's PJRT
+    // CPU client and loaded executables are documented thread-safe. The
+    // marker is required only because `Box<dyn DriftEngine>` carries a `Send`
+    // bound.
+    unsafe impl Send for HloEngine {}
+
+    impl DriftEngine for HloEngine {
+        fn dims(&self) -> Vec<usize> {
+            self.dims.clone()
+        }
+
+        fn drift(&mut self, x: &Tensor, t: f32) -> Tensor {
+            self.execute(x, t).expect("PJRT execution failed")
+        }
+
+        fn name(&self) -> &str {
+            &self.name
+        }
+    }
 }
 
-impl HloEngine {
-    /// Compile from HLO text on a fresh PJRT CPU client.
-    pub fn from_text(hlo_text: &str, dims: Vec<usize>, name: String) -> Result<Self> {
-        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-        let proto = parse_hlo_text(hlo_text).context("parsing HLO text")?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = client.compile(&comp).context("compiling HLO module")?;
-        let dims_i64 = dims.iter().map(|&d| d as i64).collect();
-        Ok(HloEngine { exe, dims, dims_i64, name })
+#[cfg(not(feature = "pjrt"))]
+mod engine_impl {
+    use super::*;
+    use crate::tensor::Tensor;
+    use anyhow::anyhow;
+
+    fn pjrt_unavailable() -> anyhow::Error {
+        anyhow!(
+            "built without the `pjrt` feature: HLO/DiT presets need the vendored `xla` \
+             crate (rebuild with --features pjrt); analytic presets remain available"
+        )
     }
 
-    /// Load + compile directly from a file path.
-    pub fn from_file(path: &std::path::Path, dims: Vec<usize>, name: String) -> Result<Self> {
-        let text = std::fs::read_to_string(path)
-            .with_context(|| format!("reading {}", path.display()))?;
-        Self::from_text(&text, dims, name)
+    /// Unconstructible stand-in keeping the `pjrt`-less build API-compatible.
+    pub struct HloEngine {
+        _never: std::convert::Infallible,
     }
 
-    fn execute(&self, x: &Tensor, t: f32) -> Result<Tensor> {
-        let lit_x = xla::Literal::vec1(x.data())
-            .reshape(&self.dims_i64)
-            .context("reshaping input literal")?;
-        let lit_t = xla::Literal::scalar(t);
-        let result = self.exe.execute::<xla::Literal>(&[lit_x, lit_t])?[0][0]
-            .to_literal_sync()
-            .context("fetching result literal")?;
-        // aot.py lowers with return_tuple=True → 1-tuple.
-        let out = result.to_tuple1().context("unwrapping result tuple")?;
-        let data = out.to_vec::<f32>().context("reading f32 output")?;
-        Ok(Tensor::from_vec(&self.dims, data))
-    }
-}
+    impl HloEngine {
+        /// Always fails: the PJRT runtime is compiled out.
+        pub fn from_text(_hlo_text: &str, _dims: Vec<usize>, _name: String) -> Result<Self> {
+            Err(pjrt_unavailable())
+        }
 
-/// Parse HLO text into a module proto via a temp file: the xla crate only
-/// exposes the text parser through `from_text_file`.
-fn parse_hlo_text(text: &str) -> Result<xla::HloModuleProto> {
-    let mut path = std::env::temp_dir();
-    let unique = format!(
-        "chords-hlo-{}-{:x}.txt",
-        std::process::id(),
-        std::time::SystemTime::now().duration_since(std::time::UNIX_EPOCH)?.as_nanos()
-    );
-    path.push(unique);
-    std::fs::write(&path, text)?;
-    let proto = xla::HloModuleProto::from_text_file(&path);
-    let _ = std::fs::remove_file(&path);
-    Ok(proto?)
-}
-
-// SAFETY: `HloEngine` wraps PJRT handles that the xla crate does not mark
-// Send (raw pointers). The engine is constructed inside its worker thread
-// and never leaves it (the CorePool contract); additionally, XLA's PJRT CPU
-// client and loaded executables are documented thread-safe. The marker is
-// required only because `Box<dyn DriftEngine>` carries a `Send` bound.
-unsafe impl Send for HloEngine {}
-
-impl DriftEngine for HloEngine {
-    fn dims(&self) -> Vec<usize> {
-        self.dims.clone()
+        /// Reads the file (so missing-artifact errors still carry the path),
+        /// then fails with the feature-gate error.
+        pub fn from_file(path: &std::path::Path, dims: Vec<usize>, name: String) -> Result<Self> {
+            let text = std::fs::read_to_string(path)
+                .with_context(|| format!("reading {}", path.display()))?;
+            Self::from_text(&text, dims, name)
+        }
     }
 
-    fn drift(&mut self, x: &Tensor, t: f32) -> Tensor {
-        self.execute(x, t).expect("PJRT execution failed")
-    }
+    impl DriftEngine for HloEngine {
+        fn dims(&self) -> Vec<usize> {
+            match self._never {}
+        }
 
-    fn name(&self) -> &str {
-        &self.name
+        fn drift(&mut self, _x: &Tensor, _t: f32) -> Tensor {
+            match self._never {}
+        }
+
+        fn name(&self) -> &str {
+            match self._never {}
+        }
     }
 }
+
+pub use engine_impl::HloEngine;
 
 #[cfg(test)]
 mod tests {
     //! Engine-level tests run against real artifacts when present; the
     //! numerical cross-check vs the Python reference lives in
-    //! `rust/tests/hlo_roundtrip.rs`.
+    //! `rust/tests/hlo_roundtrip.rs`. Both tests hold for the real engine
+    //! and for the feature-gated stub.
     use super::*;
 
     #[test]
@@ -136,7 +199,8 @@ mod tests {
 
     #[test]
     fn missing_file_fails_with_context() {
-        match HloEngine::from_file(std::path::Path::new("/nonexistent/x.hlo.txt"), vec![1], "t".into()) {
+        let missing = std::path::Path::new("/nonexistent/x.hlo.txt");
+        match HloEngine::from_file(missing, vec![1], "t".into()) {
             Ok(_) => panic!("expected error"),
             Err(err) => assert!(format!("{err:#}").contains("/nonexistent/x.hlo.txt")),
         }

@@ -16,6 +16,11 @@ use crate::config::ModelPreset;
 use crate::engine::EngineFactory;
 use std::sync::Arc;
 
+/// Whether this build carries the real PJRT engine (`pjrt` cargo feature).
+pub const fn pjrt_available() -> bool {
+    cfg!(feature = "pjrt")
+}
+
 /// Build the PJRT-backed engine factory for an HLO preset.
 /// Fails fast (with a pointer to `make artifacts`) if artifacts are absent.
 pub fn hlo_factory(

@@ -1,0 +1,234 @@
+//! The global core budget: the single source of truth for how many compute
+//! cores the server may have in flight, across *all* models and jobs.
+//!
+//! CHORDS's economics (paper §2.2/§5) are that a K-core job stops needing
+//! cores progressively — core K retires first, core 1 last — so capacity
+//! frees **mid-job**. The budget turns that into serving throughput: jobs
+//! draw leases from one shared pot instead of pinning a fixed-size pool per
+//! model, and every early retirement goes straight back into the pot via
+//! [`CoreLease::release_one`].
+
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+/// Wakes the dispatcher when capacity or queue state changes. A generation
+/// counter makes waits race-free (no missed notifications).
+pub struct Notify {
+    gen: Mutex<u64>,
+    cv: Condvar,
+}
+
+impl Default for Notify {
+    fn default() -> Self {
+        Notify { gen: Mutex::new(0), cv: Condvar::new() }
+    }
+}
+
+impl Notify {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Signal a state change.
+    pub fn notify(&self) {
+        let mut g = self.gen.lock().unwrap();
+        *g += 1;
+        self.cv.notify_all();
+    }
+
+    /// Block until a notification newer than `*seen` arrives or `timeout`
+    /// elapses; updates `*seen` either way.
+    pub fn wait(&self, seen: &mut u64, timeout: Duration) {
+        let mut g = self.gen.lock().unwrap();
+        let deadline = std::time::Instant::now() + timeout;
+        while *g == *seen {
+            let now = std::time::Instant::now();
+            if now >= deadline {
+                break;
+            }
+            let (guard, _) = self.cv.wait_timeout(g, deadline - now).unwrap();
+            g = guard;
+        }
+        *seen = *g;
+    }
+}
+
+/// A global pot of leasable cores.
+pub struct CoreBudget {
+    total: usize,
+    available: Mutex<usize>,
+    cv: Condvar,
+    /// Optional external wake target (the dispatcher loop) poked on release.
+    notify: Mutex<Option<Arc<Notify>>>,
+}
+
+impl CoreBudget {
+    pub fn new(total: usize) -> Arc<CoreBudget> {
+        assert!(total >= 1, "budget needs at least one core");
+        Arc::new(CoreBudget {
+            total,
+            available: Mutex::new(total),
+            cv: Condvar::new(),
+            notify: Mutex::new(None),
+        })
+    }
+
+    /// Register the dispatcher's wake handle (poked on every release).
+    pub fn set_notify(&self, n: Arc<Notify>) {
+        *self.notify.lock().unwrap() = Some(n);
+    }
+
+    pub fn total(&self) -> usize {
+        self.total
+    }
+
+    /// Cores currently unleased.
+    pub fn available(&self) -> usize {
+        *self.available.lock().unwrap()
+    }
+
+    /// Try to lease between `min` and `want` cores (as many as available).
+    /// Returns `None` when fewer than `min` are free. `min ≥ 1`.
+    pub fn try_lease(self: &Arc<Self>, min: usize, want: usize) -> Option<CoreLease> {
+        assert!((1..=want).contains(&min), "need 1 ≤ min ≤ want");
+        let mut avail = self.available.lock().unwrap();
+        if *avail < min {
+            return None;
+        }
+        let take = want.min(*avail);
+        *avail -= take;
+        drop(avail);
+        Some(CoreLease::new(self.clone(), take))
+    }
+
+    /// Blocking variant of [`Self::try_lease`]: waits up to `timeout` for
+    /// `min` cores to free up. Used by tests and by embedders that bypass
+    /// the admission queue.
+    pub fn lease_timeout(
+        self: &Arc<Self>,
+        min: usize,
+        want: usize,
+        timeout: Duration,
+    ) -> Option<CoreLease> {
+        assert!((1..=want).contains(&min), "need 1 ≤ min ≤ want");
+        let deadline = std::time::Instant::now() + timeout;
+        let mut avail = self.available.lock().unwrap();
+        while *avail < min {
+            let now = std::time::Instant::now();
+            if now >= deadline {
+                return None;
+            }
+            let (guard, _) = self.cv.wait_timeout(avail, deadline - now).unwrap();
+            avail = guard;
+        }
+        let take = want.min(*avail);
+        *avail -= take;
+        drop(avail);
+        Some(CoreLease::new(self.clone(), take))
+    }
+
+    /// Return `n` cores to the pot and wake waiters. (Internal: called by
+    /// [`CoreLease`]; kept `pub(crate)` so the lease type can live in its
+    /// own module.)
+    pub(crate) fn release(&self, n: usize) {
+        if n == 0 {
+            return;
+        }
+        let mut avail = self.available.lock().unwrap();
+        *avail += n;
+        debug_assert!(*avail <= self.total, "over-release: {} > {}", *avail, self.total);
+        drop(avail);
+        self.cv.notify_all();
+        let notify = self.notify.lock().unwrap().clone();
+        if let Some(n) = notify {
+            n.notify();
+        }
+    }
+}
+
+pub use super::lease::CoreLease;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lease_release_accounting() {
+        let b = CoreBudget::new(8);
+        let l1 = b.try_lease(4, 4).unwrap();
+        let l2 = b.try_lease(4, 4).unwrap();
+        assert_eq!(b.available(), 0);
+        assert!(b.try_lease(1, 1).is_none(), "pot is empty");
+        assert_eq!(l1.cores(), 4);
+        drop(l1);
+        assert_eq!(b.available(), 4);
+        drop(l2);
+        assert_eq!(b.available(), 8);
+    }
+
+    #[test]
+    fn elastic_grant_takes_what_is_available() {
+        let b = CoreBudget::new(8);
+        let _l1 = b.try_lease(1, 6).unwrap();
+        let l2 = b.try_lease(1, 6).unwrap();
+        assert_eq!(l2.cores(), 2, "shrunk to the remaining capacity");
+        assert!(b.try_lease(1, 1).is_none());
+    }
+
+    #[test]
+    fn release_one_returns_cores_mid_lease() {
+        let b = CoreBudget::new(4);
+        let l = b.try_lease(4, 4).unwrap();
+        assert_eq!(b.available(), 0);
+        assert!(l.release_one());
+        assert!(l.release_one());
+        assert_eq!(b.available(), 2);
+        assert_eq!(l.remaining(), 2);
+        drop(l);
+        assert_eq!(b.available(), 4, "drop returns only the remainder");
+    }
+
+    #[test]
+    fn release_one_exhausts() {
+        let b = CoreBudget::new(2);
+        let l = b.try_lease(2, 2).unwrap();
+        assert!(l.release_one());
+        assert!(l.release_one());
+        assert!(!l.release_one(), "nothing left to release");
+        assert_eq!(b.available(), 2);
+    }
+
+    #[test]
+    fn lease_timeout_waits_for_release() {
+        let b = CoreBudget::new(2);
+        let l = b.try_lease(2, 2).unwrap();
+        let b2 = b.clone();
+        let t = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(30));
+            drop(l);
+        });
+        let got = b2.lease_timeout(2, 2, Duration::from_secs(5));
+        assert!(got.is_some(), "woken by the concurrent release");
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn lease_timeout_times_out() {
+        let b = CoreBudget::new(2);
+        let _l = b.try_lease(2, 2).unwrap();
+        assert!(b.lease_timeout(1, 1, Duration::from_millis(20)).is_none());
+    }
+
+    #[test]
+    fn notify_generation_counter() {
+        let n = Arc::new(Notify::new());
+        let mut seen = 0u64;
+        // Notification before the wait is not missed.
+        n.notify();
+        n.wait(&mut seen, Duration::from_secs(5));
+        assert_eq!(seen, 1);
+        // Timeout path leaves the counter in sync.
+        n.wait(&mut seen, Duration::from_millis(10));
+        assert_eq!(seen, 1);
+    }
+}

@@ -1,0 +1,657 @@
+//! The dispatch layer: turns admission tickets into running jobs.
+//!
+//! Replaces the old `Router::pool_for` lock-and-run path (one job per model
+//! at a time, cores idle after early exit) with:
+//!
+//! 1. a **global core budget** shared by every model ([`super::budget`]);
+//! 2. a **bounded priority queue** with deadlines ([`super::queue`]);
+//! 3. a scheduler thread that, on every capacity change, grants as many
+//!    queued tickets as fit — so multiple jobs for the *same* model run
+//!    concurrently over disjoint [`crate::workers::PoolView`]s of one
+//!    shared, elastically-grown [`crate::workers::CorePool`], and tickets
+//!    admitted in the same pass (typically same-model requests differing
+//!    only in seed) share one pool-growth critical section (seed batching);
+//! 4. an RAII [`JobGrant`] wiring the CHORDS executor's retire hook to
+//!    [`super::lease::CoreLease::release_one`], so a core freed by the
+//!    early-exit/rectification stopping rule rejoins the budget **mid-job**
+//!    and is immediately re-leasable.
+
+use super::budget::{CoreBudget, Notify};
+use super::lease::CoreLease;
+use super::queue::{AdmissionQueue, Reject, Ticket};
+use crate::config::preset;
+use crate::engine::factory_for;
+use crate::metrics::ServingMetrics;
+use crate::solvers::Euler;
+use crate::util::json::Json;
+use crate::workers::{CorePool, PoolView};
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::channel;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Scheduler-thread wake period: the upper bound on deadline-detection
+/// latency when no notification arrives.
+const PASS_PERIOD: Duration = Duration::from_millis(25);
+
+/// Knobs for the elastic scheduler.
+#[derive(Clone, Debug)]
+pub struct DispatchOpts {
+    /// Global core budget shared by all models and jobs.
+    pub total_cores: usize,
+    /// Admission queue capacity (backpressure beyond this).
+    pub queue_cap: usize,
+    /// Return cores to the budget the moment a CHORDS core retires
+    /// (mid-job). Disabled = cores held until job completion (the old
+    /// behavior; kept as a bench baseline).
+    pub elastic_reclaim: bool,
+    /// Detach a model's warm parked workers after this long without any
+    /// lease activity, so threads/engines track current load instead of
+    /// ratcheting to the historical peak.
+    pub idle_ttl_ms: u64,
+}
+
+impl Default for DispatchOpts {
+    fn default() -> Self {
+        DispatchOpts { total_cores: 8, queue_cap: 64, elastic_reclaim: true, idle_ttl_ms: 30_000 }
+    }
+}
+
+/// An admission request.
+#[derive(Clone, Debug)]
+pub struct JobSpec {
+    pub model: String,
+    /// Cores wanted.
+    pub cores: usize,
+    /// Smallest acceptable grant (0 ⇒ exactly `cores`, i.e. no shrink).
+    pub min_cores: usize,
+    /// Higher is served first. Default 0.
+    pub priority: i32,
+    /// Give up if not admitted within this many milliseconds.
+    pub deadline_ms: Option<u64>,
+}
+
+/// One model's shared worker pool plus the ids currently idle. The pool
+/// grows on demand ([`CorePool::attach`]) up to whatever the budget grants;
+/// retired/finished workers park on `free` as warm replicas.
+struct ModelSlot {
+    pool: Mutex<CorePool>,
+    free: Mutex<Vec<usize>>,
+    /// Last lease/release touching this model; drives idle reaping.
+    last_activity: Mutex<Instant>,
+}
+
+impl ModelSlot {
+    fn touch(&self) {
+        *self.last_activity.lock().unwrap() = Instant::now();
+    }
+}
+
+struct Shared {
+    budget: Arc<CoreBudget>,
+    queue: AdmissionQueue<JobGrant>,
+    models: Mutex<HashMap<String, Arc<ModelSlot>>>,
+    metrics: Arc<ServingMetrics>,
+    notify: Arc<Notify>,
+    stop: AtomicBool,
+    elastic: bool,
+    idle_ttl: Duration,
+    artifacts_dir: String,
+    next_id: AtomicU64,
+}
+
+/// The elastic serving scheduler. Owns the budget, the queue, the per-model
+/// pools, and the scheduler thread (joined on drop).
+pub struct Dispatcher {
+    shared: Arc<Shared>,
+    thread: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Dispatcher {
+    pub fn new(artifacts_dir: &str, opts: DispatchOpts) -> Dispatcher {
+        let metrics = Arc::new(ServingMetrics::new());
+        let notify = Arc::new(Notify::new());
+        let budget = CoreBudget::new(opts.total_cores);
+        budget.set_notify(notify.clone());
+        let shared = Arc::new(Shared {
+            budget,
+            queue: AdmissionQueue::new(opts.queue_cap, metrics.clone()),
+            models: Mutex::new(HashMap::new()),
+            metrics,
+            notify,
+            stop: AtomicBool::new(false),
+            elastic: opts.elastic_reclaim,
+            idle_ttl: Duration::from_millis(opts.idle_ttl_ms),
+            artifacts_dir: artifacts_dir.to_string(),
+            next_id: AtomicU64::new(1),
+        });
+        let shared2 = shared.clone();
+        let thread = std::thread::Builder::new()
+            .name("chords-sched".into())
+            .spawn(move || scheduler_main(shared2))
+            .expect("spawn scheduler thread");
+        Dispatcher { shared, thread: Some(thread) }
+    }
+
+    pub fn total_cores(&self) -> usize {
+        self.shared.budget.total()
+    }
+
+    pub fn queue_cap(&self) -> usize {
+        self.shared.queue.cap()
+    }
+
+    pub fn queue_depth(&self) -> usize {
+        self.shared.queue.depth()
+    }
+
+    pub fn metrics(&self) -> &Arc<ServingMetrics> {
+        &self.shared.metrics
+    }
+
+    /// Models with a live pool (loaded at least once).
+    pub fn loaded_models(&self) -> Vec<String> {
+        self.shared.models.lock().unwrap().keys().cloned().collect()
+    }
+
+    /// Wire-format scheduler state (the `queue_stats` response body).
+    pub fn snapshot(&self) -> Json {
+        self.shared.metrics.snapshot(self.total_cores(), self.queue_cap())
+    }
+
+    /// Admit a job: enqueue, then block until the scheduler grants cores or
+    /// rejects the ticket (queue full, deadline, shutdown, engine failure).
+    pub fn submit(&self, spec: JobSpec) -> Result<JobGrant, Reject> {
+        let shared = &self.shared;
+        if shared.stop.load(Ordering::Relaxed) {
+            return Err(Reject::Shutdown);
+        }
+        // Resolve the model slot up front so unknown models / missing
+        // artifacts fail fast instead of occupying queue capacity.
+        model_slot(shared, &spec.model).map_err(|e| Reject::Failed(format!("{e:#}")))?;
+        let want = spec.cores.max(1).min(shared.budget.total());
+        let min = if spec.min_cores == 0 { want } else { spec.min_cores.clamp(1, want) };
+        let (tx, rx) = channel();
+        let now = Instant::now();
+        let ticket = Ticket {
+            id: shared.next_id.fetch_add(1, Ordering::Relaxed),
+            model: spec.model.clone(),
+            want_cores: want,
+            min_cores: min,
+            priority: spec.priority,
+            enqueued: now,
+            deadline: spec.deadline_ms.map(|ms| now + Duration::from_millis(ms)),
+            outcome: tx,
+        };
+        match shared.queue.push(ticket) {
+            Ok(()) => {}
+            Err(super::queue::PushError::Full(_)) => {
+                shared.metrics.rejected_overloaded.fetch_add(1, Ordering::Relaxed);
+                return Err(Reject::QueueFull { cap: shared.queue.cap() });
+            }
+            Err(super::queue::PushError::Closed(_)) => return Err(Reject::Shutdown),
+        }
+        shared.notify.notify();
+        match rx.recv() {
+            Ok(outcome) => outcome,
+            Err(_) => Err(Reject::Shutdown),
+        }
+    }
+
+    /// Stop admitting: close the queue and bounce everything queued with
+    /// code `shutdown`, while letting in-flight jobs finish. Used by the
+    /// server's drain-on-shutdown path; subsequent `submit`s fail fast.
+    pub fn shutdown_admissions(&self) {
+        self.shared.queue.close();
+        for t in self.shared.queue.drain() {
+            let _ = t.outcome.send(Err(Reject::Shutdown));
+        }
+    }
+}
+
+impl Drop for Dispatcher {
+    fn drop(&mut self) {
+        self.shared.stop.store(true, Ordering::Relaxed);
+        self.shared.notify.notify();
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+/// Get-or-create the model's pool slot.
+fn model_slot(shared: &Shared, model: &str) -> anyhow::Result<Arc<ModelSlot>> {
+    let mut models = shared.models.lock().unwrap();
+    if let Some(s) = models.get(model) {
+        return Ok(s.clone());
+    }
+    let p = preset(model).ok_or_else(|| anyhow::anyhow!("unknown model '{model}'"))?;
+    let factory = factory_for(p, &shared.artifacts_dir)?;
+    let pool = CorePool::new(0, factory, Arc::new(Euler))?;
+    let slot = Arc::new(ModelSlot {
+        pool: Mutex::new(pool),
+        free: Mutex::new(Vec::new()),
+        last_activity: Mutex::new(Instant::now()),
+    });
+    models.insert(model.to_string(), slot.clone());
+    Ok(slot)
+}
+
+fn scheduler_main(shared: Arc<Shared>) {
+    let mut seen = 0u64;
+    while !shared.stop.load(Ordering::Relaxed) {
+        pass(&shared);
+        shared.notify.wait(&mut seen, PASS_PERIOD);
+    }
+    // Shutdown: refuse new tickets, then bounce everything still queued.
+    // close() and push() share the queue lock, so nothing can slip in
+    // between close and drain and leave its submitter blocked.
+    shared.queue.close();
+    for t in shared.queue.drain() {
+        let _ = t.outcome.send(Err(Reject::Shutdown));
+    }
+}
+
+/// One scheduling pass: reject expired tickets, then grant every admissible
+/// ticket in priority order. Multiple grants per pass = batch admission
+/// (same-model tickets share one pool-growth critical section). Budget
+/// accounting happens here on the scheduler thread (cheap, keeps priority
+/// order authoritative); worker assignment — which may build engines, a
+/// seconds-long XLA compile under `pjrt` — runs on a short-lived grant
+/// thread so deadline expiry and other models' admissions are never stalled
+/// behind one model's build.
+fn pass(shared: &Arc<Shared>) {
+    let now = Instant::now();
+    for t in shared.queue.take_expired(now) {
+        shared.metrics.rejected_deadline.fetch_add(1, Ordering::Relaxed);
+        let _ = t.outcome.send(Err(Reject::DeadlineExceeded));
+    }
+    loop {
+        let available = shared.budget.available();
+        if available == 0 {
+            break;
+        }
+        let Some(ticket) = shared.queue.pop_admissible(available) else {
+            break;
+        };
+        let Some(lease) = shared.budget.try_lease(ticket.min_cores, ticket.want_cores) else {
+            // Transient race with an out-of-band lease (CoreBudget is a
+            // public API): the ticket keeps waiting instead of failing.
+            if let Some(t) = shared.queue.requeue(ticket) {
+                let _ = t.outcome.send(Err(Reject::Shutdown));
+            }
+            break;
+        };
+        let wait_us = now.saturating_duration_since(ticket.enqueued).as_micros() as u64;
+        // Fast path: warm parked workers already cover the grant — finish
+        // inline (microseconds). Only pool growth (an engine build) goes to
+        // a grant thread. A racing grant thread may steal warm workers
+        // between this check and the assign; the inline path then attaches
+        // itself — rare, and no worse than the slow path.
+        let warm_covers = match model_slot(shared, &ticket.model) {
+            Ok(slot) => slot.free.lock().unwrap().len() >= lease.cores(),
+            Err(_) => false, // surface the error through the grant path
+        };
+        if warm_covers {
+            finish_grant(shared, ticket, lease, wait_us);
+        } else {
+            let shared2 = shared.clone();
+            std::thread::Builder::new()
+                .name("chords-grant".into())
+                .spawn(move || finish_grant(&shared2, ticket, lease, wait_us))
+                .expect("spawn grant thread");
+        }
+    }
+    reap_idle(shared);
+}
+
+/// Assign workers and deliver the outcome to the submitter. A failed send
+/// means the submitter vanished; the grant's Drop returns everything to
+/// the budget.
+fn finish_grant(shared: &Arc<Shared>, ticket: Ticket<JobGrant>, lease: CoreLease, wait_us: u64) {
+    match assign_workers(shared, &ticket, lease) {
+        Ok(job) => {
+            shared.metrics.on_grant(job.cores(), wait_us);
+            let _ = ticket.outcome.send(Ok(job));
+        }
+        Err(e) => {
+            let _ = ticket.outcome.send(Err(Reject::Failed(format!("{e:#}"))));
+        }
+    }
+}
+
+/// Detach warm workers from models with no lease activity for the idle
+/// TTL, so thread/engine usage follows current load down instead of
+/// ratcheting up to the historical peak forever.
+fn reap_idle(shared: &Arc<Shared>) {
+    let slots: Vec<Arc<ModelSlot>> = shared.models.lock().unwrap().values().cloned().collect();
+    for slot in slots {
+        let idle_for = slot.last_activity.lock().unwrap().elapsed();
+        if idle_for < shared.idle_ttl {
+            continue;
+        }
+        let ids: Vec<usize> = std::mem::take(&mut *slot.free.lock().unwrap());
+        if ids.is_empty() {
+            continue;
+        }
+        let mut pool = slot.pool.lock().unwrap();
+        for id in ids {
+            pool.detach(id);
+        }
+    }
+}
+
+/// Assign workers from the model's elastic pool for an already-leased
+/// ticket. Runs on a grant thread; the lease's RAII drop covers every
+/// error path.
+fn assign_workers(
+    shared: &Arc<Shared>,
+    ticket: &Ticket<JobGrant>,
+    lease: CoreLease,
+) -> anyhow::Result<JobGrant> {
+    let slot = model_slot(shared, &ticket.model)?;
+    slot.touch();
+    let granted = lease.cores();
+    // Grab idle warm workers first; grow the pool for the rest.
+    let mut ids = Vec::with_capacity(granted);
+    {
+        let mut free = slot.free.lock().unwrap();
+        for _ in 0..granted {
+            match free.pop() {
+                Some(id) => ids.push(id),
+                None => break,
+            }
+        }
+    }
+    if ids.len() < granted {
+        let deficit = granted - ids.len();
+        let mut pool = slot.pool.lock().unwrap();
+        match pool.attach(deficit) {
+            Ok(new_ids) => ids.extend(new_ids),
+            Err(e) => {
+                // Return everything; the lease drops with `ids` unneeded.
+                slot.free.lock().unwrap().extend(ids);
+                return Err(e);
+            }
+        }
+    }
+    let view = slot.pool.lock().unwrap().view(&ids);
+    let retired = vec![false; granted];
+    Ok(JobGrant {
+        model: ticket.model.clone(),
+        granted,
+        lease: Some(lease),
+        view: Some(view),
+        ids,
+        retired,
+        slot,
+        metrics: shared.metrics.clone(),
+        elastic: shared.elastic,
+        t_grant: Instant::now(),
+        ended: false,
+    })
+}
+
+/// A granted job: the leased cores, the worker view to run on, and the
+/// bookkeeping that returns both — incrementally via [`JobGrant::retire_core`]
+/// or in full when dropped.
+pub struct JobGrant {
+    pub model: String,
+    granted: usize,
+    lease: Option<CoreLease>,
+    view: Option<PoolView>,
+    /// Local core index → global worker id.
+    ids: Vec<usize>,
+    retired: Vec<bool>,
+    slot: Arc<ModelSlot>,
+    metrics: Arc<ServingMetrics>,
+    elastic: bool,
+    t_grant: Instant,
+    ended: bool,
+}
+
+impl JobGrant {
+    /// Cores granted (may be less than requested if the spec allowed
+    /// elastic shrink via `min_cores`).
+    pub fn cores(&self) -> usize {
+        self.granted
+    }
+
+    /// Move the worker view out (callable once). Separate from the grant so
+    /// the executor can borrow the view while the retire hook mutably
+    /// borrows the grant.
+    pub fn take_view(&mut self) -> PoolView {
+        self.view.take().expect("take_view called twice")
+    }
+
+    /// CHORDS retire hook: local core `idx` finished streaming its output.
+    /// Under elastic reclamation the core returns to the global budget
+    /// immediately and its worker parks on the model's warm list.
+    pub fn retire_core(&mut self, idx: usize) {
+        if !self.elastic || self.retired[idx] {
+            return;
+        }
+        self.retired[idx] = true;
+        self.slot.free.lock().unwrap().push(self.ids[idx]);
+        self.slot.touch();
+        if let Some(l) = &self.lease {
+            l.release_one();
+        }
+        // Churn = cores freed while the job still holds others. The final
+        // core's retirement coincides with job completion and re-leases
+        // nothing, so it must not inflate the mid-job reclamation metric.
+        let mid_job = self.retired.iter().filter(|r| **r).count() < self.granted;
+        self.metrics.on_release(1, self.t_grant.elapsed().as_micros() as u64, mid_job);
+    }
+
+    fn end(&mut self) {
+        if self.ended {
+            return;
+        }
+        self.ended = true;
+        let busy_us = self.t_grant.elapsed().as_micros() as u64;
+        let mut left = 0usize;
+        {
+            let mut free = self.slot.free.lock().unwrap();
+            for (local, &gid) in self.ids.iter().enumerate() {
+                if !self.retired[local] {
+                    free.push(gid);
+                    left += 1;
+                }
+            }
+        }
+        self.slot.touch();
+        self.metrics.on_release(left, busy_us, false);
+        self.lease = None; // drop → remaining cores return to the budget
+        self.metrics.on_job_end();
+    }
+}
+
+impl Drop for JobGrant {
+    fn drop(&mut self) {
+        self.end();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{discrete_init_sequence, ChordsConfig, ChordsExecutor, InitStrategy};
+    use crate::solvers::TimeGrid;
+    use crate::tensor::Tensor;
+    use crate::util::rng::Rng;
+
+    fn spec(model: &str, cores: usize) -> JobSpec {
+        JobSpec { model: model.into(), cores, min_cores: 0, priority: 0, deadline_ms: None }
+    }
+
+    fn dispatcher(total: usize, cap: usize) -> Dispatcher {
+        Dispatcher::new(
+            "artifacts",
+            DispatchOpts { total_cores: total, queue_cap: cap, ..DispatchOpts::default() },
+        )
+    }
+
+    fn run_job(grant: &mut JobGrant, steps: usize, seed: u64) -> usize {
+        let k = grant.cores();
+        let seq = discrete_init_sequence(&InitStrategy::Paper, k, steps);
+        let cfg = ChordsConfig::new(seq, TimeGrid::uniform(steps));
+        let view = grant.take_view();
+        let exec = ChordsExecutor::new(&view, cfg);
+        let mut rng = Rng::seeded(seed);
+        let x0 = Tensor::randn(&[1, 16], &mut rng);
+        let res = exec.run_streaming_with_retire(&x0, |_| {}, |c| grant.retire_core(c));
+        res.outputs.len()
+    }
+
+    #[test]
+    fn submit_grants_runs_and_returns_cores() {
+        let d = dispatcher(4, 8);
+        let mut grant = d.submit(spec("gauss-mix", 2)).unwrap();
+        assert_eq!(grant.cores(), 2);
+        let outputs = run_job(&mut grant, 30, 1);
+        assert_eq!(outputs, 2);
+        drop(grant);
+        assert_eq!(d.shared.budget.available(), 4);
+        assert!(d.loaded_models().contains(&"gauss-mix".to_string()));
+        // Both workers parked warm for the next job.
+        let slot = d.shared.models.lock().unwrap().get("gauss-mix").unwrap().clone();
+        assert_eq!(slot.free.lock().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn mid_job_retirement_refills_budget() {
+        let d = dispatcher(4, 8);
+        let mut grant = d.submit(spec("gauss-mix", 4)).unwrap();
+        assert_eq!(d.shared.budget.available(), 0);
+        grant.retire_core(3);
+        grant.retire_core(2);
+        assert_eq!(d.shared.budget.available(), 2, "mid-job cores rejoined the pot");
+        assert_eq!(d.metrics().lease_churn.load(Ordering::Relaxed), 2);
+        drop(grant);
+        assert_eq!(d.shared.budget.available(), 4);
+    }
+
+    #[test]
+    fn two_jobs_same_model_hold_grants_concurrently() {
+        let d = Arc::new(dispatcher(8, 8));
+        let d2 = d.clone();
+        let (hold_tx, hold_rx) = channel::<()>();
+        let (held_tx, held_rx) = channel::<()>();
+        let t = std::thread::spawn(move || {
+            let mut g = d2.submit(spec("gauss-mix", 4)).unwrap();
+            held_tx.send(()).unwrap();
+            hold_rx.recv().unwrap(); // keep the lease while main submits
+            run_job(&mut g, 30, 2)
+        });
+        held_rx.recv().unwrap();
+        // Second 4-core job for the SAME model must be granted while the
+        // first lease is held — no per-model serialization. The deadline
+        // bounds the test instead of hanging on regression.
+        let mut g2 = d
+            .submit(JobSpec { deadline_ms: Some(5000), ..spec("gauss-mix", 4) })
+            .expect("second same-model job admitted concurrently");
+        assert_eq!(d.metrics().peak_active_jobs.load(Ordering::Relaxed), 2);
+        hold_tx.send(()).unwrap();
+        assert_eq!(run_job(&mut g2, 30, 3), 4);
+        assert_eq!(t.join().unwrap(), 4);
+    }
+
+    #[test]
+    fn full_queue_rejects_with_overloaded() {
+        let d = dispatcher(2, 1);
+        let grant = d.submit(spec("gauss-mix", 2)).unwrap(); // holds all cores
+        let d = Arc::new(d);
+        let d2 = d.clone();
+        // Occupies the single queue slot, waiting for cores.
+        let waiter = std::thread::spawn(move || d2.submit(spec("gauss-mix", 2)));
+        while d.queue_depth() < 1 {
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        let err = d.submit(spec("gauss-mix", 1)).unwrap_err();
+        assert_eq!(err.code(), "overloaded");
+        assert!(matches!(err, Reject::QueueFull { cap: 1 }));
+        assert_eq!(d.metrics().rejected_overloaded.load(Ordering::Relaxed), 1);
+        drop(grant); // frees the budget; the queued ticket gets its grant
+        let mut g2 = waiter.join().unwrap().expect("queued job granted after release");
+        assert_eq!(run_job(&mut g2, 20, 4), 2);
+    }
+
+    #[test]
+    fn queued_deadline_rejects_with_deadline() {
+        let d = dispatcher(2, 4);
+        let _grant = d.submit(spec("gauss-mix", 2)).unwrap();
+        let err = d
+            .submit(JobSpec { deadline_ms: Some(30), ..spec("gauss-mix", 1) })
+            .unwrap_err();
+        assert_eq!(err.code(), "deadline");
+        assert_eq!(d.metrics().rejected_deadline.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn idle_warm_workers_are_reaped_after_ttl() {
+        let d = Dispatcher::new(
+            "artifacts",
+            DispatchOpts {
+                total_cores: 2,
+                queue_cap: 4,
+                idle_ttl_ms: 50,
+                ..DispatchOpts::default()
+            },
+        );
+        let mut g = d.submit(spec("gauss-mix", 2)).unwrap();
+        run_job(&mut g, 20, 1);
+        drop(g);
+        let slot = d.shared.models.lock().unwrap().get("gauss-mix").unwrap().clone();
+        assert_eq!(slot.free.lock().unwrap().len(), 2, "workers park warm after the job");
+        // Scheduler passes run at least every 25ms; past the TTL the warm
+        // workers must be detached.
+        let t0 = Instant::now();
+        loop {
+            let free = slot.free.lock().unwrap().len();
+            let live = slot.pool.lock().unwrap().size();
+            if free == 0 && live == 0 {
+                break;
+            }
+            assert!(t0.elapsed() < Duration::from_secs(5), "warm workers were not reaped");
+            std::thread::sleep(Duration::from_millis(10));
+        }
+    }
+
+    #[test]
+    fn unknown_model_fails_fast() {
+        let d = dispatcher(2, 4);
+        let err = d.submit(spec("nope", 1)).unwrap_err();
+        assert_eq!(err.code(), "internal");
+        assert!(err.to_string().contains("unknown model"));
+    }
+
+    #[test]
+    fn elastic_shrink_grants_partial_cores() {
+        let d = dispatcher(4, 4);
+        let _g1 = d.submit(spec("gauss-mix", 3)).unwrap();
+        // want 4, accept ≥1 → granted the single remaining core.
+        let g2 = d
+            .submit(JobSpec { min_cores: 1, deadline_ms: Some(2000), ..spec("gauss-mix", 4) })
+            .unwrap();
+        assert_eq!(g2.cores(), 1);
+    }
+
+    #[test]
+    fn shutdown_bounces_queued_tickets() {
+        let d = dispatcher(2, 4);
+        let grant = d.submit(spec("gauss-mix", 2)).unwrap();
+        let d = Arc::new(d);
+        let d2 = d.clone();
+        let waiter = std::thread::spawn(move || d2.submit(spec("gauss-mix", 2)));
+        while d.queue_depth() < 1 {
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        d.shared.stop.store(true, Ordering::Relaxed);
+        d.shared.notify.notify();
+        let err = waiter.join().unwrap().unwrap_err();
+        assert_eq!(err.code(), "shutdown");
+        drop(grant);
+    }
+}

@@ -1,0 +1,106 @@
+//! RAII core leases. A [`CoreLease`] is the only way cores leave the
+//! [`super::budget::CoreBudget`], and dropping it is the only way the last
+//! of them come back — so capacity accounting cannot leak across panics,
+//! early exits, or error paths in the dispatch layer.
+
+use super::budget::CoreBudget;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+/// A claim on `granted` cores of the global budget. Cores flow back either
+/// one at a time via [`CoreLease::release_one`] (elastic mid-job
+/// reclamation, fired from the CHORDS executor's retire hook) or all at
+/// once on drop.
+pub struct CoreLease {
+    budget: Arc<CoreBudget>,
+    remaining: AtomicUsize,
+    granted: usize,
+}
+
+impl CoreLease {
+    pub(crate) fn new(budget: Arc<CoreBudget>, granted: usize) -> CoreLease {
+        CoreLease { budget, remaining: AtomicUsize::new(granted), granted }
+    }
+
+    /// Cores originally granted.
+    pub fn cores(&self) -> usize {
+        self.granted
+    }
+
+    /// Cores still held by this lease.
+    pub fn remaining(&self) -> usize {
+        self.remaining.load(Ordering::Relaxed)
+    }
+
+    /// Return one core to the budget immediately (mid-job reclamation).
+    /// Returns false when the lease holds nothing more.
+    pub fn release_one(&self) -> bool {
+        if self
+            .remaining
+            .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |n| n.checked_sub(1))
+            .is_err()
+        {
+            return false;
+        }
+        self.budget.release(1);
+        true
+    }
+
+    /// The budget this lease draws from.
+    pub fn budget(&self) -> &Arc<CoreBudget> {
+        &self.budget
+    }
+}
+
+impl Drop for CoreLease {
+    fn drop(&mut self) {
+        let left = self.remaining.swap(0, Ordering::Relaxed);
+        self.budget.release(left);
+    }
+}
+
+impl std::fmt::Debug for CoreLease {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "CoreLease({}/{} held)", self.remaining(), self.granted)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn drop_after_partial_release_is_exact() {
+        let b = CoreBudget::new(6);
+        let l = b.try_lease(5, 5).unwrap();
+        assert_eq!(l.cores(), 5);
+        assert!(l.release_one());
+        assert_eq!(l.remaining(), 4);
+        assert_eq!(b.available(), 2);
+        drop(l);
+        assert_eq!(b.available(), 6);
+    }
+
+    #[test]
+    fn lease_survives_cross_thread_release() {
+        let b = CoreBudget::new(4);
+        let l = Arc::new(b.try_lease(4, 4).unwrap());
+        let mut handles = Vec::new();
+        for _ in 0..4 {
+            let l = l.clone();
+            handles.push(std::thread::spawn(move || l.release_one()));
+        }
+        let released =
+            handles.into_iter().map(|h| h.join().unwrap()).filter(|&ok| ok).count();
+        assert_eq!(released, 4);
+        assert!(!l.release_one());
+        assert_eq!(b.available(), 4);
+    }
+
+    #[test]
+    fn debug_format_shows_held_count() {
+        let b = CoreBudget::new(3);
+        let l = b.try_lease(2, 2).unwrap();
+        assert_eq!(format!("{l:?}"), "CoreLease(2/2 held)");
+    }
+}

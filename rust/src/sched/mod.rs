@@ -1,0 +1,35 @@
+//! Elastic serving scheduler: a global core budget, admission queues with
+//! backpressure, and mid-job core reclamation.
+//!
+//! CHORDS frames parallel sampling as a core-allocation problem (as do
+//! ParaDIGMS and SRDS): cores are the scarce resource, and the solver
+//! hierarchy *releases* them progressively — core K streams its output and
+//! stops first, core 1 last, and early exit can stop the whole job at any
+//! output. The old serving path threw that structure away by pinning one
+//! fixed-size pool per model behind a mutex (one job per model at a time,
+//! granted cores idle after retirement).
+//!
+//! This subsystem makes core flow first-class:
+//!
+//! - [`budget`] — [`budget::CoreBudget`], the server-wide pot of cores with
+//!   lease/release semantics shared by every model;
+//! - [`lease`] — [`lease::CoreLease`], the RAII claim a job holds; its
+//!   `release_one` is wired to the CHORDS executor's retire hook so cores
+//!   rejoin the pot **mid-job**;
+//! - [`queue`] — [`queue::AdmissionQueue`], bounded and priority-aware,
+//!   with per-request deadlines; a full queue rejects with a structured
+//!   `overloaded` error instead of blocking;
+//! - [`dispatch`] — [`dispatch::Dispatcher`], the scheduler thread that
+//!   grants tickets against the budget, assigns workers from elastically
+//!   grown per-model pools, and supports concurrent same-model jobs over
+//!   disjoint [`crate::workers::PoolView`]s.
+
+pub mod budget;
+pub mod dispatch;
+pub mod lease;
+pub mod queue;
+
+pub use budget::{CoreBudget, Notify};
+pub use dispatch::{DispatchOpts, Dispatcher, JobGrant, JobSpec};
+pub use lease::CoreLease;
+pub use queue::{AdmissionQueue, PushError, Reject, Ticket};

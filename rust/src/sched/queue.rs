@@ -1,0 +1,323 @@
+//! Bounded, priority-aware admission queue with backpressure and deadlines.
+//!
+//! Requests that cannot be granted cores immediately wait here as
+//! [`Ticket`]s. The queue is *bounded*: when it is full, `push` fails and
+//! the server answers `{"type":"error","code":"overloaded"}` instead of
+//! letting work pile up behind a lock (the failure mode of the old
+//! one-job-per-model router). Tickets carry an optional deadline; the
+//! dispatcher rejects expired tickets with code `deadline`.
+//!
+//! Ordering: higher `priority` first, FIFO (arrival id) within a priority.
+
+use crate::metrics::ServingMetrics;
+use std::sync::mpsc::Sender;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+/// Why an enqueued request never got cores.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Reject {
+    /// The queue was at capacity (backpressure).
+    QueueFull { cap: usize },
+    /// The ticket's deadline passed while it was queued.
+    DeadlineExceeded,
+    /// The dispatcher is shutting down.
+    Shutdown,
+    /// Granting failed (e.g. the model's engine could not be built).
+    Failed(String),
+}
+
+impl Reject {
+    /// Stable wire-protocol error code.
+    pub fn code(&self) -> &'static str {
+        match self {
+            Reject::QueueFull { .. } => "overloaded",
+            Reject::DeadlineExceeded => "deadline",
+            Reject::Shutdown => "shutdown",
+            Reject::Failed(_) => "internal",
+        }
+    }
+}
+
+impl std::fmt::Display for Reject {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Reject::QueueFull { cap } => {
+                write!(f, "admission queue full ({cap} waiting); retry with backoff")
+            }
+            Reject::DeadlineExceeded => write!(f, "deadline exceeded while queued"),
+            Reject::Shutdown => write!(f, "server shutting down"),
+            Reject::Failed(m) => write!(f, "admission failed: {m}"),
+        }
+    }
+}
+
+/// A queued admission request. `outcome` is the rendezvous back to the
+/// blocked submitter; the payload type `G` is the dispatcher's grant.
+pub struct Ticket<G> {
+    pub id: u64,
+    pub model: String,
+    /// Cores the request wants.
+    pub want_cores: usize,
+    /// Smallest grant the request will accept (elastic shrink floor).
+    pub min_cores: usize,
+    /// Higher wins. Default 0.
+    pub priority: i32,
+    pub enqueued: Instant,
+    pub deadline: Option<Instant>,
+    pub outcome: Sender<Result<G, Reject>>,
+}
+
+/// Why a `push` bounced, carrying the ticket back to the caller.
+pub enum PushError<G> {
+    /// At capacity — reject with `overloaded`.
+    Full(Ticket<G>),
+    /// The queue was closed for shutdown — reject with `shutdown`.
+    Closed(Ticket<G>),
+}
+
+struct QueueState<G> {
+    items: Vec<Ticket<G>>,
+    closed: bool,
+}
+
+/// The bounded priority queue. `G` is the grant payload delivered to
+/// winning tickets (kept generic so this module stays free of dispatch
+/// internals).
+pub struct AdmissionQueue<G> {
+    cap: usize,
+    inner: Mutex<QueueState<G>>,
+    metrics: Arc<ServingMetrics>,
+}
+
+/// Ordered-insert position keeping (priority desc, id asc): the single
+/// definition of queue order, shared by `push` and `requeue`.
+fn insert_pos<G>(items: &[Ticket<G>], ticket: &Ticket<G>) -> usize {
+    items
+        .iter()
+        .position(|t| {
+            (t.priority, std::cmp::Reverse(t.id)) < (ticket.priority, std::cmp::Reverse(ticket.id))
+        })
+        .unwrap_or(items.len())
+}
+
+impl<G> AdmissionQueue<G> {
+    pub fn new(cap: usize, metrics: Arc<ServingMetrics>) -> AdmissionQueue<G> {
+        assert!(cap >= 1, "queue capacity must be at least 1");
+        AdmissionQueue {
+            cap,
+            inner: Mutex::new(QueueState { items: Vec::new(), closed: false }),
+            metrics,
+        }
+    }
+
+    pub fn cap(&self) -> usize {
+        self.cap
+    }
+
+    pub fn depth(&self) -> usize {
+        self.inner.lock().unwrap().items.len()
+    }
+
+    /// Enqueue a ticket, keeping (priority desc, id asc) order. Fails with
+    /// the ticket when the queue is full or closed so the caller can reject
+    /// it. Close/push share one lock, so every ticket accepted before
+    /// [`Self::close`] is visible to the closing thread's final drain —
+    /// no submitter can be left blocked across shutdown.
+    pub fn push(&self, ticket: Ticket<G>) -> Result<(), PushError<G>> {
+        let mut q = self.inner.lock().unwrap();
+        if q.closed {
+            return Err(PushError::Closed(ticket));
+        }
+        if q.items.len() >= self.cap {
+            return Err(PushError::Full(ticket));
+        }
+        let pos = insert_pos(&q.items, &ticket);
+        q.items.insert(pos, ticket);
+        self.metrics.queued_total.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        self.metrics.set_queue_depth(q.items.len());
+        Ok(())
+    }
+
+    /// Refuse all future pushes (shutdown). Follow with [`Self::drain`].
+    pub fn close(&self) {
+        self.inner.lock().unwrap().closed = true;
+    }
+
+    /// Put a previously-popped ticket back at its priority position (used
+    /// when a grant hits a transient budget race). Ignores the capacity
+    /// bound — the ticket already held a slot. Returns the ticket when the
+    /// queue has closed, so the caller can bounce it as shutdown.
+    pub fn requeue(&self, ticket: Ticket<G>) -> Option<Ticket<G>> {
+        let mut q = self.inner.lock().unwrap();
+        if q.closed {
+            return Some(ticket);
+        }
+        let pos = insert_pos(&q.items, &ticket);
+        q.items.insert(pos, ticket);
+        self.metrics.set_queue_depth(q.items.len());
+        None
+    }
+
+    /// Remove and return every ticket whose deadline has passed.
+    pub fn take_expired(&self, now: Instant) -> Vec<Ticket<G>> {
+        let mut q = self.inner.lock().unwrap();
+        let mut expired = Vec::new();
+        let mut i = 0;
+        while i < q.items.len() {
+            if q.items[i].deadline.is_some_and(|d| d <= now) {
+                expired.push(q.items.remove(i));
+            } else {
+                i += 1;
+            }
+        }
+        if !expired.is_empty() {
+            self.metrics.set_queue_depth(q.items.len());
+        }
+        expired
+    }
+
+    /// Pop the best-priority ticket admissible under `available` cores
+    /// (`min_cores ≤ available`). Strict head-of-line within the order: a
+    /// non-fitting higher-priority ticket is *not* bypassed, so large jobs
+    /// cannot be starved by a stream of small ones.
+    pub fn pop_admissible(&self, available: usize) -> Option<Ticket<G>> {
+        let mut q = self.inner.lock().unwrap();
+        let fits = q.items.first().map(|h| h.min_cores <= available).unwrap_or(false);
+        if !fits {
+            return None;
+        }
+        let t = q.items.remove(0);
+        self.metrics.set_queue_depth(q.items.len());
+        Some(t)
+    }
+
+    /// Drain everything (shutdown path).
+    pub fn drain(&self) -> Vec<Ticket<G>> {
+        let mut q = self.inner.lock().unwrap();
+        let all = std::mem::take(&mut q.items);
+        self.metrics.set_queue_depth(0);
+        all
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc::channel;
+    use std::time::Duration;
+
+    type Outcome = std::sync::mpsc::Receiver<Result<u32, Reject>>;
+
+    fn ticket(id: u64, priority: i32, min: usize) -> (Ticket<u32>, Outcome) {
+        let (tx, rx) = channel();
+        (
+            Ticket {
+                id,
+                model: "gauss-mix".into(),
+                want_cores: 4,
+                min_cores: min,
+                priority,
+                enqueued: Instant::now(),
+                deadline: None,
+                outcome: tx,
+            },
+            rx,
+        )
+    }
+
+    fn queue(cap: usize) -> AdmissionQueue<u32> {
+        AdmissionQueue::new(cap, Arc::new(ServingMetrics::new()))
+    }
+
+    #[test]
+    fn bounded_push_rejects_when_full() {
+        let q = queue(2);
+        assert!(q.push(ticket(1, 0, 1).0).is_ok());
+        assert!(q.push(ticket(2, 0, 1).0).is_ok());
+        match q.push(ticket(3, 0, 1).0) {
+            Err(PushError::Full(t)) => assert_eq!(t.id, 3),
+            _ => panic!("third push must bounce as Full"),
+        }
+        assert_eq!(q.depth(), 2);
+    }
+
+    #[test]
+    fn closed_queue_bounces_as_closed() {
+        let q = queue(2);
+        q.close();
+        match q.push(ticket(1, 0, 1).0) {
+            Err(PushError::Closed(t)) => assert_eq!(t.id, 1),
+            _ => panic!("push after close must bounce as Closed"),
+        }
+        assert_eq!(q.depth(), 0);
+    }
+
+    #[test]
+    fn priority_then_fifo_order() {
+        let q = queue(8);
+        q.push(ticket(1, 0, 1).0).unwrap();
+        q.push(ticket(2, 5, 1).0).unwrap();
+        q.push(ticket(3, 5, 1).0).unwrap();
+        q.push(ticket(4, -1, 1).0).unwrap();
+        let order: Vec<u64> = std::iter::from_fn(|| q.pop_admissible(8).map(|t| t.id)).collect();
+        assert_eq!(order, vec![2, 3, 1, 4]);
+    }
+
+    #[test]
+    fn head_of_line_blocks_until_cores_fit() {
+        let q = queue(8);
+        q.push(ticket(1, 1, 4).0).unwrap(); // big job, high priority
+        q.push(ticket(2, 0, 1).0).unwrap(); // small job behind it
+        assert!(q.pop_admissible(2).is_none(), "small job must not bypass");
+        let t = q.pop_admissible(4).unwrap();
+        assert_eq!(t.id, 1);
+        assert_eq!(q.pop_admissible(2).unwrap().id, 2);
+    }
+
+    #[test]
+    fn expired_tickets_are_taken() {
+        let q = queue(8);
+        let (mut t1, _rx1) = ticket(1, 0, 1);
+        t1.deadline = Some(Instant::now() - Duration::from_millis(1));
+        let (t2, _rx2) = ticket(2, 0, 1);
+        q.push(t1).unwrap();
+        q.push(t2).unwrap();
+        let expired = q.take_expired(Instant::now());
+        assert_eq!(expired.len(), 1);
+        assert_eq!(expired[0].id, 1);
+        assert_eq!(q.depth(), 1);
+    }
+
+    #[test]
+    fn reject_codes_are_stable() {
+        assert_eq!(Reject::QueueFull { cap: 4 }.code(), "overloaded");
+        assert_eq!(Reject::DeadlineExceeded.code(), "deadline");
+        assert_eq!(Reject::Shutdown.code(), "shutdown");
+        assert_eq!(Reject::Failed("x".into()).code(), "internal");
+    }
+
+    #[test]
+    fn requeue_restores_priority_position_even_when_full() {
+        let q = queue(2);
+        q.push(ticket(1, 0, 1).0).unwrap();
+        q.push(ticket(3, 0, 1).0).unwrap();
+        // Ticket 2 was popped earlier; requeue bypasses the cap and lands
+        // back in FIFO position (between 1 and 3).
+        assert!(q.requeue(ticket(2, 0, 1).0).is_none());
+        assert_eq!(q.depth(), 3);
+        let order: Vec<u64> = std::iter::from_fn(|| q.pop_admissible(8).map(|t| t.id)).collect();
+        assert_eq!(order, vec![1, 2, 3]);
+        q.close();
+        assert!(q.requeue(ticket(4, 0, 1).0).is_some(), "closed queue bounces requeues");
+    }
+
+    #[test]
+    fn drain_empties_queue() {
+        let q = queue(4);
+        q.push(ticket(1, 0, 1).0).unwrap();
+        q.push(ticket(2, 0, 1).0).unwrap();
+        assert_eq!(q.drain().len(), 2);
+        assert_eq!(q.depth(), 0);
+    }
+}

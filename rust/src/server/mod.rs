@@ -1,21 +1,42 @@
 //! Generation server: JSON-lines over TCP.
 //!
 //! The deployment surface the paper motivates (§1: latency-sensitive,
-//! interactive use): clients submit generation requests; the server routes
-//! each to the requested model's CHORDS pool and *streams* intermediate
-//! outputs back as cores finish — the "diffusion streaming" paradigm of §5.
+//! interactive use): clients submit generation requests; the server admits
+//! each through the elastic scheduler's global core budget
+//! ([`crate::sched`]), runs it on leased cores of the model's shared pool,
+//! and *streams* intermediate outputs back as cores finish — the
+//! "diffusion streaming" paradigm of §5. Cores freed by early exit /
+//! retirement rejoin the budget mid-job and are immediately re-leased to
+//! queued requests.
 //!
 //! Protocol (one JSON object per line):
 //!   → {"op":"generate","model":"sd35-sim","seed":1,"cores":4,
-//!      "steps":50,"stream":true,"early_exit_tol":0.05}
+//!      "steps":50,"stream":true,"early_exit_tol":0.05,
+//!      "priority":0,"deadline_ms":2000,"min_cores":2}
 //!   ← {"type":"partial","core":4,"nfe_depth":21,"speedup":2.38,…}
 //!   ← {"type":"result","nfe_depth":50,"latent_l2":…,"wall_s":…}
 //!   → {"op":"stats"}            ← {"type":"stats",…}
+//!   → {"op":"queue_stats"}      ← {"type":"queue_stats","queue_depth":…,
+//!                                  "lease_churn":…,"utilization":…,…}
 //!   → {"op":"ping"}             ← {"type":"pong"}
 //!
+//! Generate-request fields beyond the basics:
+//! - `cores` (0 = the preset's serving default) — cores *wanted*;
+//! - `min_cores` — smallest grant accepted; setting it below `cores` opts
+//!   in to elastic shrink when the budget is tight;
+//! - `priority` — higher is admitted first (FIFO within a priority);
+//! - `deadline_ms` — bound on queue wait; exceeded ⇒ error code `deadline`.
+//!
+//! Errors are structured: {"type":"error","code":…,"message":…} with codes
+//! `bad_request` | `overloaded` (admission queue full — backpressure;
+//! retry with backoff) | `deadline` | `shutdown` | `unknown_op` |
+//! `internal`.
+//!
 //! Built on std::net + threads (no tokio in the offline registry); one
-//! handler thread per connection, one model pool per preset shared behind a
-//! router mutex — mirroring a single-replica-per-model deployment.
+//! handler thread per connection (tracked and joined on shutdown), one
+//! *elastic* pool per model drawing workers from the global core budget —
+//! multiple jobs for the same model run concurrently on disjoint worker
+//! views, replacing the old one-job-per-model mutex.
 
 mod router;
 mod service;

@@ -1,28 +1,38 @@
-//! Request router: lazily builds and caches one worker pool per preset and
-//! serializes runs on it (one sampling job per model at a time — each pool
-//! already uses all granted cores).
+//! Request router over the elastic scheduler ([`crate::sched`]).
+//!
+//! Every generation request is admitted through the global core budget: the
+//! dispatcher leases it cores (queueing with backpressure when the pot is
+//! dry), hands it a [`crate::workers::PoolView`] over the model's shared
+//! elastic pool, and reclaims each core the moment its CHORDS core retires.
+//! Concurrent requests — including for the *same* model — run in parallel
+//! whenever the budget allows; nothing serializes on a per-model lock.
 
-use crate::config::preset;
+use crate::config::{preset, ServeConfig};
 use crate::coordinator::{discrete_init_sequence, ChordsConfig, ChordsExecutor, ChordsResult, InitStrategy};
-use crate::engine::factory_for;
-use crate::solvers::{Euler, TimeGrid};
+use crate::sched::{DispatchOpts, Dispatcher, JobSpec, Reject};
+use crate::solvers::TimeGrid;
 use crate::tensor::Tensor;
+use crate::util::json::Json;
 use crate::util::rng::Rng;
-use crate::workers::CorePool;
-use anyhow::{anyhow, Result};
-use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
 
 /// A parsed generation request.
 #[derive(Clone, Debug)]
 pub struct GenRequest {
     pub model: String,
     pub seed: u64,
+    /// Cores wanted (0 = the preset's serving default).
     pub cores: usize,
     pub steps: usize,
     pub init: InitStrategy,
     pub early_exit_tol: Option<f32>,
+    /// Smallest grant accepted (0 = exactly `cores`; lower values opt in to
+    /// elastic shrink under load).
+    pub min_cores: usize,
+    /// Admission priority; higher is served first.
+    pub priority: i32,
+    /// Give up if not admitted within this many milliseconds.
+    pub deadline_ms: Option<u64>,
 }
 
 impl Default for GenRequest {
@@ -34,7 +44,45 @@ impl Default for GenRequest {
             steps: 50,
             init: InitStrategy::Paper,
             early_exit_tol: None,
+            min_cores: 0,
+            priority: 0,
+            deadline_ms: None,
         }
+    }
+}
+
+/// A generate failure with a stable wire-protocol `code`. Scheduler
+/// rejections pass through [`Reject`] verbatim — codes and messages have a
+/// single source of truth in the sched layer.
+#[derive(Debug)]
+pub enum GenError {
+    /// Malformed/unsatisfiable request (unknown model, cores > budget, …).
+    BadRequest(String),
+    /// The scheduler refused the job (overloaded/deadline/shutdown/internal).
+    Sched(Reject),
+}
+
+impl GenError {
+    pub fn code(&self) -> &'static str {
+        match self {
+            GenError::BadRequest(_) => "bad_request",
+            GenError::Sched(r) => r.code(),
+        }
+    }
+}
+
+impl std::fmt::Display for GenError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            GenError::BadRequest(m) => write!(f, "{m}"),
+            GenError::Sched(r) => write!(f, "{r}"),
+        }
+    }
+}
+
+impl From<Reject> for GenError {
+    fn from(r: Reject) -> GenError {
+        GenError::Sched(r)
     }
 }
 
@@ -46,35 +94,39 @@ pub struct RouterStats {
     pub total_nfes: AtomicU64,
 }
 
-/// Routes requests to per-model pools.
+/// Routes requests through the elastic dispatcher. Configured by
+/// [`ServeConfig`] — the single serving-knob struct shared with the CLI.
 pub struct Router {
-    artifacts_dir: String,
-    max_cores: usize,
-    pools: Mutex<HashMap<String, Arc<Mutex<CorePool>>>>,
+    dispatcher: Dispatcher,
+    default_deadline_ms: Option<u64>,
     pub stats: RouterStats,
 }
 
 impl Router {
+    /// `max_cores` becomes the global budget (kept as the legacy signature;
+    /// use [`Router::with_opts`] for the full knob set).
     pub fn new(artifacts_dir: &str, max_cores: usize) -> Router {
-        Router {
-            artifacts_dir: artifacts_dir.to_string(),
-            max_cores,
-            pools: Mutex::new(HashMap::new()),
-            stats: RouterStats::default(),
-        }
+        Router::with_opts(
+            artifacts_dir,
+            ServeConfig { total_cores: max_cores, ..ServeConfig::default() },
+        )
     }
 
-    /// Get (or build) the pool for a model.
-    fn pool_for(&self, model: &str) -> Result<Arc<Mutex<CorePool>>> {
-        let mut pools = self.pools.lock().unwrap();
-        if let Some(p) = pools.get(model) {
-            return Ok(p.clone());
+    pub fn with_opts(artifacts_dir: &str, cfg: ServeConfig) -> Router {
+        let dispatcher = Dispatcher::new(
+            artifacts_dir,
+            DispatchOpts {
+                total_cores: cfg.total_cores,
+                queue_cap: cfg.queue_cap,
+                elastic_reclaim: cfg.elastic_reclaim,
+                idle_ttl_ms: cfg.idle_ttl_ms,
+            },
+        );
+        Router {
+            dispatcher,
+            default_deadline_ms: cfg.default_deadline_ms,
+            stats: RouterStats::default(),
         }
-        let p = preset(model).ok_or_else(|| anyhow!("unknown model '{model}'"))?;
-        let factory = factory_for(p, &self.artifacts_dir)?;
-        let pool = Arc::new(Mutex::new(CorePool::new(self.max_cores, factory, Arc::new(Euler))?));
-        pools.insert(model.to_string(), pool.clone());
-        Ok(pool)
     }
 
     /// Execute a generation request; `on_partial` fires for every streamed
@@ -83,32 +135,70 @@ impl Router {
         &self,
         req: &GenRequest,
         mut on_partial: impl FnMut(usize, usize, f64),
-    ) -> Result<ChordsResult> {
+    ) -> Result<ChordsResult, GenError> {
         self.stats.requests.fetch_add(1, Ordering::Relaxed);
-        if req.cores > self.max_cores {
-            return Err(anyhow!("requested {} cores, server grants at most {}", req.cores, self.max_cores));
+        let p = preset(&req.model)
+            .ok_or_else(|| GenError::BadRequest(format!("unknown model '{}'", req.model)))?;
+        let total = self.dispatcher.total_cores();
+        let want = if req.cores == 0 { p.serve_cores } else { req.cores };
+        if want > total {
+            return Err(GenError::BadRequest(format!(
+                "requested {want} cores, server grants at most {total}"
+            )));
         }
-        let p = preset(&req.model).ok_or_else(|| anyhow!("unknown model '{}'", req.model))?;
-        let pool = self.pool_for(&req.model)?;
-        let pool = pool.lock().unwrap();
+        if want > req.steps {
+            return Err(GenError::BadRequest(format!(
+                "requested {want} cores for only {} steps",
+                req.steps
+            )));
+        }
+        let mut grant = self.dispatcher.submit(JobSpec {
+            model: req.model.clone(),
+            cores: want,
+            min_cores: req.min_cores,
+            priority: req.priority,
+            deadline_ms: req.deadline_ms.or(self.default_deadline_ms),
+        })?;
+        let k = grant.cores();
+        let seq = discrete_init_sequence(&req.init, k, req.steps);
         let grid = TimeGrid::uniform(req.steps);
-        let seq = discrete_init_sequence(&req.init, req.cores, req.steps);
         let mut cfg = ChordsConfig::new(seq, grid);
         cfg.early_exit_tol = req.early_exit_tol;
-        let exec = ChordsExecutor::new(&pool, cfg);
+        let view = grant.take_view();
+        let exec = ChordsExecutor::new(&view, cfg);
         let mut rng = Rng::seeded(req.seed);
         let x0 = Tensor::randn(&p.latent_dims(), &mut rng);
-        let res = exec.run_streaming(&x0, |out| {
-            self.stats.outputs_streamed.fetch_add(1, Ordering::Relaxed);
-            on_partial(out.core, out.nfe_depth, req.steps as f64 / out.nfe_depth as f64);
-        });
+        let res = exec.run_streaming_with_retire(
+            &x0,
+            |out| {
+                self.stats.outputs_streamed.fetch_add(1, Ordering::Relaxed);
+                on_partial(out.core, out.nfe_depth, req.steps as f64 / out.nfe_depth as f64);
+            },
+            |core_idx| grant.retire_core(core_idx),
+        );
         self.stats.total_nfes.fetch_add(res.total_nfes, Ordering::Relaxed);
         Ok(res)
     }
 
     /// Models currently loaded.
     pub fn loaded_models(&self) -> Vec<String> {
-        self.pools.lock().unwrap().keys().cloned().collect()
+        self.dispatcher.loaded_models()
+    }
+
+    /// Scheduler state for the `queue_stats` op.
+    pub fn queue_stats(&self) -> Json {
+        self.dispatcher.snapshot()
+    }
+
+    /// Stop admitting new jobs and bounce the queued backlog with code
+    /// `shutdown` (in-flight jobs finish). The server's drain path.
+    pub fn drain_admissions(&self) {
+        self.dispatcher.shutdown_admissions();
+    }
+
+    /// The underlying dispatcher (benches/tests).
+    pub fn dispatcher(&self) -> &Dispatcher {
+        &self.dispatcher
     }
 }
 
@@ -131,9 +221,13 @@ mod tests {
     #[test]
     fn rejects_unknown_model_and_oversubscription() {
         let r = Router::new("artifacts", 2);
-        assert!(r.generate(&GenRequest { model: "nope".into(), ..Default::default() }, |_, _, _| {}).is_err());
+        let err = r
+            .generate(&GenRequest { model: "nope".into(), ..Default::default() }, |_, _, _| {})
+            .unwrap_err();
+        assert_eq!(err.code(), "bad_request");
         let req = GenRequest { model: "gauss-mix".into(), cores: 8, ..Default::default() };
-        assert!(r.generate(&req, |_, _, _| {}).is_err());
+        let err = r.generate(&req, |_, _, _| {}).unwrap_err();
+        assert_eq!(err.code(), "bad_request");
     }
 
     #[test]
@@ -144,5 +238,57 @@ mod tests {
         r.generate(&req, |_, _, _| {}).unwrap();
         assert_eq!(r.loaded_models().len(), 1);
         assert_eq!(r.stats.requests.load(Ordering::Relaxed), 2);
+    }
+
+    #[test]
+    fn zero_cores_uses_preset_serving_default() {
+        let r = Router::new("artifacts", 8);
+        let req = GenRequest { model: "gauss-mix".into(), steps: 30, cores: 0, ..Default::default() };
+        let mut partials = 0usize;
+        r.generate(&req, |_, _, _| partials += 1).unwrap();
+        let expect = preset("gauss-mix").unwrap().serve_cores;
+        assert_eq!(partials, expect);
+    }
+
+    #[test]
+    fn cores_beyond_steps_is_bad_request() {
+        let r = Router::new("artifacts", 8);
+        let req = GenRequest { model: "gauss-mix".into(), steps: 4, cores: 8, ..Default::default() };
+        assert_eq!(r.generate(&req, |_, _, _| {}).unwrap_err().code(), "bad_request");
+    }
+
+    #[test]
+    fn default_deadline_applies_to_requests_without_one() {
+        use crate::sched::JobSpec;
+        let r = Router::with_opts(
+            "artifacts",
+            ServeConfig { total_cores: 2, default_deadline_ms: Some(30), ..ServeConfig::default() },
+        );
+        // Hold the whole budget so the next request queues.
+        let _hold = r
+            .dispatcher()
+            .submit(JobSpec {
+                model: "gauss-mix".into(),
+                cores: 2,
+                min_cores: 0,
+                priority: 0,
+                deadline_ms: None,
+            })
+            .unwrap();
+        let req = GenRequest { model: "gauss-mix".into(), steps: 20, cores: 2, ..Default::default() };
+        let err = r.generate(&req, |_, _, _| {}).unwrap_err();
+        assert_eq!(err.code(), "deadline", "server-side default deadline enforced");
+    }
+
+    #[test]
+    fn queue_stats_counts_lease_churn() {
+        let r = Router::new("artifacts", 4);
+        let req = GenRequest { model: "gauss-mix".into(), steps: 30, cores: 4, ..Default::default() };
+        r.generate(&req, |_, _, _| {}).unwrap();
+        let j = r.queue_stats();
+        assert_eq!(j.get("admitted").unwrap().as_usize().unwrap(), 1);
+        // Cores 4..2 retire before the job ends → reclaimed mid-job.
+        assert!(j.get("lease_churn").unwrap().as_usize().unwrap() > 0);
+        assert_eq!(j.get("cores_in_use").unwrap().as_usize().unwrap(), 0);
     }
 }

@@ -14,6 +14,7 @@ use std::sync::Arc;
 pub struct Server {
     pub addr: std::net::SocketAddr,
     stop: Arc<AtomicBool>,
+    router: Arc<Router>,
     handle: Option<std::thread::JoinHandle<()>>,
 }
 
@@ -26,22 +27,27 @@ impl Server {
         listener.set_nonblocking(true)?;
         let stop = Arc::new(AtomicBool::new(false));
         let stop2 = stop.clone();
+        let router2 = router.clone();
         let handle = std::thread::Builder::new().name("chords-server".into()).spawn(move || {
+            // Every connection handler is tracked and joined before the
+            // accept loop returns, so `shutdown` drains in-flight requests
+            // instead of abandoning detached threads mid-response. Handlers
+            // poll the stop flag via a read timeout, so the final join is
+            // bounded by one timeout period plus any in-flight generation.
+            let mut handlers: Vec<std::thread::JoinHandle<()>> = Vec::new();
             while !stop2.load(Ordering::Relaxed) {
                 match listener.accept() {
                     Ok((stream, _)) => {
+                        handlers.retain(|h| !h.is_finished());
                         let router = router.clone();
                         let stop = stop2.clone();
-                        // Handlers are detached: they exit when the client
-                        // disconnects or the stop flag is raised (they poll
-                        // it via a read timeout), so shutdown never blocks
-                        // on an idle connection.
-                        std::thread::Builder::new()
+                        let h = std::thread::Builder::new()
                             .name("chords-conn".into())
                             .spawn(move || {
                                 let _ = handle_conn(stream, router, stop);
                             })
                             .expect("spawn conn handler");
+                        handlers.push(h);
                     }
                     Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
                         std::thread::sleep(std::time::Duration::from_millis(5));
@@ -49,13 +55,26 @@ impl Server {
                     Err(_) => break,
                 }
             }
+            for h in handlers {
+                let _ = h.join();
+            }
         })?;
-        Ok(Server { addr, stop, handle: Some(handle) })
+        Ok(Server { addr, stop, router: router2, handle: Some(handle) })
     }
 
-    /// Stop accepting and join the accept loop.
+    /// Stop accepting, drain, and join the accept loop plus every
+    /// connection handler. Queued-but-unstarted requests are bounced with
+    /// code `shutdown`; requests already holding cores run to completion,
+    /// so the join is bounded by the in-flight work, not the queue.
     pub fn shutdown(mut self) {
+        self.stop_and_join();
+    }
+
+    fn stop_and_join(&mut self) {
         self.stop.store(true, Ordering::Relaxed);
+        // Unblock handler threads waiting in the admission queue — without
+        // this, joining them would serialize through the entire backlog.
+        self.router.drain_admissions();
         if let Some(h) = self.handle.take() {
             let _ = h.join();
         }
@@ -64,10 +83,7 @@ impl Server {
 
 impl Drop for Server {
     fn drop(&mut self) {
-        self.stop.store(true, Ordering::Relaxed);
-        if let Some(h) = self.handle.take() {
-            let _ = h.join();
-        }
+        self.stop_and_join();
     }
 }
 
@@ -107,7 +123,11 @@ fn handle_conn(stream: TcpStream, router: Arc<Router>, stop: Arc<AtomicBool>) ->
         };
         match Json::parse(&line) {
             Err(e) => {
-                let err = Json::obj(vec![("type", Json::str("error")), ("message", Json::str(&e))]);
+                let err = Json::obj(vec![
+                    ("type", Json::str("error")),
+                    ("code", Json::str("bad_request")),
+                    ("message", Json::str(&e)),
+                ]);
                 response_stream(&mut writer, &err)?;
             }
             Ok(req) => match req.get("op").and_then(|o| o.as_str()) {
@@ -129,6 +149,15 @@ fn handle_conn(stream: TcpStream, router: Arc<Router>, stop: Arc<AtomicBool>) ->
                             Json::arr(router.loaded_models().iter().map(|m| Json::str(m))),
                         ),
                     ]);
+                    response_stream(&mut writer, &j)?;
+                }
+                Some("queue_stats") => {
+                    // Scheduler state: queue depth/waits, lease churn,
+                    // utilization (see metrics::ServingMetrics::snapshot).
+                    let mut j = router.queue_stats();
+                    if let Json::Obj(map) = &mut j {
+                        map.insert("type".into(), Json::str("queue_stats"));
+                    }
                     response_stream(&mut writer, &j)?;
                 }
                 Some("generate") => {
@@ -170,7 +199,8 @@ fn handle_conn(stream: TcpStream, router: Arc<Router>, stop: Arc<AtomicBool>) ->
                         Err(e) => {
                             let j = Json::obj(vec![
                                 ("type", Json::str("error")),
-                                ("message", Json::str(&format!("{e:#}"))),
+                                ("code", Json::str(e.code())),
+                                ("message", Json::str(&e.to_string())),
                             ]);
                             response_stream(&mut writer, &j)?;
                         }
@@ -179,7 +209,11 @@ fn handle_conn(stream: TcpStream, router: Arc<Router>, stop: Arc<AtomicBool>) ->
                 _ => {
                     let j = Json::obj(vec![
                         ("type", Json::str("error")),
-                        ("message", Json::str("unknown op (expected ping|stats|generate)")),
+                        ("code", Json::str("unknown_op")),
+                        (
+                            "message",
+                            Json::str("unknown op (expected ping|stats|queue_stats|generate)"),
+                        ),
                     ]);
                     response_stream(&mut writer, &j)?;
                 }
@@ -198,7 +232,7 @@ fn parse_gen_request(req: &Json) -> GenRequest {
         g.seed = s as u64;
     }
     if let Some(c) = req.get("cores").and_then(|v| v.as_usize()) {
-        g.cores = c.max(1);
+        g.cores = c; // 0 = use the preset's serving default
     }
     if let Some(n) = req.get("steps").and_then(|v| v.as_usize()) {
         g.steps = n.max(2);
@@ -210,6 +244,15 @@ fn parse_gen_request(req: &Json) -> GenRequest {
     }
     if let Some(t) = req.get("early_exit_tol").and_then(|v| v.as_f64()) {
         g.early_exit_tol = Some(t as f32);
+    }
+    if let Some(m) = req.get("min_cores").and_then(|v| v.as_usize()) {
+        g.min_cores = m;
+    }
+    if let Some(p) = req.get("priority").and_then(|v| v.as_f64()) {
+        g.priority = p as i32;
+    }
+    if let Some(d) = req.get("deadline_ms").and_then(|v| v.as_f64()) {
+        g.deadline_ms = Some(d.max(0.0) as u64);
     }
     g
 }
@@ -228,7 +271,8 @@ impl Client {
     }
 
     /// Send one request object and read responses until a terminal type
-    /// (`result`, `error`, `stats`, `pong`) arrives. Returns all responses.
+    /// (`result`, `error`, `stats`, `queue_stats`, `pong`) arrives.
+    /// Returns all responses.
     pub fn call(&mut self, req: &Json) -> Result<Vec<Json>> {
         self.stream.write_all(req.to_string_compact().as_bytes())?;
         self.stream.write_all(b"\n")?;
@@ -242,7 +286,7 @@ impl Client {
             let j = Json::parse(line.trim()).map_err(|e| anyhow::anyhow!(e))?;
             let ty = j.get("type").and_then(|t| t.as_str()).unwrap_or("").to_string();
             responses.push(j);
-            if matches!(ty.as_str(), "result" | "error" | "stats" | "pong") {
+            if matches!(ty.as_str(), "result" | "error" | "stats" | "queue_stats" | "pong") {
                 return Ok(responses);
             }
         }
@@ -280,7 +324,8 @@ mod tests {
             ("stream", Json::Bool(true)),
         ]);
         let r = c.call(&req).unwrap();
-        let partials = r.iter().filter(|j| j.get("type").unwrap().as_str() == Some("partial")).count();
+        let partials =
+            r.iter().filter(|j| j.get("type").unwrap().as_str() == Some("partial")).count();
         assert_eq!(partials, 4);
         let last = r.last().unwrap();
         assert_eq!(last.get("type").unwrap().as_str().unwrap(), "result");
@@ -295,6 +340,39 @@ mod tests {
         let req = Json::obj(vec![("op", Json::str("generate")), ("model", Json::str("nope"))]);
         let r = c.call(&req).unwrap();
         assert_eq!(r.last().unwrap().get("type").unwrap().as_str().unwrap(), "error");
+        server.shutdown();
+    }
+
+    #[test]
+    fn queue_stats_over_the_wire() {
+        let (server, _) = start();
+        let mut c = Client::connect(server.addr).unwrap();
+        let gen = Json::obj(vec![
+            ("op", Json::str("generate")),
+            ("model", Json::str("exp-ode")),
+            ("steps", Json::num(20.0)),
+            ("cores", Json::num(2.0)),
+        ]);
+        c.call(&gen).unwrap();
+        let r = c.call(&Json::obj(vec![("op", Json::str("queue_stats"))])).unwrap();
+        let j = r.last().unwrap();
+        assert_eq!(j.get("type").unwrap().as_str().unwrap(), "queue_stats");
+        assert_eq!(j.get("admitted").unwrap().as_usize().unwrap(), 1);
+        assert!(j.get("lease_churn").unwrap().as_usize().unwrap() >= 1);
+        assert!(j.get("utilization").unwrap().as_f64().is_some());
+        server.shutdown();
+    }
+
+    #[test]
+    fn error_responses_carry_codes() {
+        let (server, _) = start();
+        let mut c = Client::connect(server.addr).unwrap();
+        let r = c
+            .call(&Json::obj(vec![("op", Json::str("generate")), ("model", Json::str("nope"))]))
+            .unwrap();
+        assert_eq!(r.last().unwrap().get("code").unwrap().as_str().unwrap(), "bad_request");
+        let r = c.call(&Json::obj(vec![("op", Json::str("frobnicate"))])).unwrap();
+        assert_eq!(r.last().unwrap().get("code").unwrap().as_str().unwrap(), "unknown_op");
         server.shutdown();
     }
 

@@ -1,15 +1,25 @@
-//! A pool of K engine-owning worker threads driven by per-step jobs.
+//! A pool of engine-owning worker threads driven by per-step jobs.
 //!
 //! The coordinator (main thread) owns all latents; workers are stateless
 //! executors of `step`/`drift` jobs. This keeps the CHORDS control flow in
 //! one place (auditable against Algorithm 1) and makes the workers reusable
 //! by every method (CHORDS, ParaDIGMS, SRDS) — only the job schedule differs.
+//!
+//! For elastic serving ([`crate::sched`]) the pool additionally supports:
+//! - **dynamic attach/detach** of workers ([`CorePool::attach`] /
+//!   [`CorePool::detach`]), so a model's replica count follows its granted
+//!   core leases instead of being fixed at construction;
+//! - **per-job reply routing** ([`CorePool::view`]): a [`PoolView`] borrows a
+//!   subset of workers and receives *only its own* replies on a private
+//!   channel, letting multiple jobs run concurrently over one shared pool;
+//! - the [`WorkerSet`] trait, the executor-facing abstraction implemented by
+//!   both the whole pool and a view.
 
 use crate::engine::EngineFactory;
 use crate::solvers::StepRule;
 use crate::tensor::Tensor;
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 
 /// A job executed on a worker's engine.
@@ -18,12 +28,16 @@ pub enum Job {
     Step { x: Tensor, t: f32, t2: f32 },
     /// Evaluate `f(x, t)` only; reply `(f, f)` (both slots carry the drift).
     Drift { x: Tensor, t: f32 },
+    /// Route subsequent replies to this sender (per-job reply channels).
+    Route(Sender<Reply>),
     /// Shut the worker down.
     Stop,
 }
 
 /// Reply to a [`Job`], tagged with the worker id.
 pub struct Reply {
+    /// Worker id: global within a [`CorePool`], remapped to the local
+    /// 0-based index by [`PoolView::collect`].
     pub worker: usize,
     /// Advanced state for `Step`, drift for `Drift`.
     pub out: Tensor,
@@ -33,87 +47,260 @@ pub struct Reply {
     pub secs: f64,
 }
 
+/// The executor-facing abstraction over "a set of workers I may drive":
+/// either a whole [`CorePool`] or a leased [`PoolView`] subset. `collect`
+/// returns replies whose `worker` field is the set-local 0-based index.
+pub trait WorkerSet {
+    /// Number of workers in the set.
+    fn size(&self) -> usize;
+    /// Submit a job to set-local worker `idx` (non-blocking).
+    fn submit(&self, idx: usize, job: Job);
+    /// Collect exactly `n` replies (in completion order, local ids).
+    fn collect(&self, n: usize) -> Vec<Reply>;
+}
+
 struct Worker {
     tx: Sender<Job>,
     handle: Option<JoinHandle<()>>,
 }
 
-/// Pool of engine-owning workers.
+/// Pool of engine-owning workers. Worker ids are stable across
+/// attach/detach: detached slots stay `None` and are reused by `attach`.
 pub struct CorePool {
-    workers: Vec<Worker>,
-    rx: Receiver<Reply>,
+    slots: Vec<Option<Worker>>,
+    /// Default reply route (used by whole-pool `collect`/`run_one`). Behind
+    /// a mutex so a shared pool can be polled from any thread.
+    rx: Mutex<Receiver<Reply>>,
+    reply_tx: Sender<Reply>,
+    factory: Arc<dyn EngineFactory>,
+    rule: Arc<dyn StepRule>,
     dims: Vec<usize>,
 }
 
 impl CorePool {
-    /// Spawn `k` workers. Each constructs its own engine from `factory`
-    /// *inside its thread* (required for PJRT-backed engines) and applies
-    /// `rule` for `Step` jobs. Fails if any engine fails to build.
+    /// Spawn `k` workers (`k = 0` builds an empty pool for elastic growth).
+    /// Each constructs its own engine from `factory` *inside its thread*
+    /// (required for PJRT-backed engines) and applies `rule` for `Step`
+    /// jobs. Fails if any engine fails to build.
     pub fn new(
         k: usize,
         factory: Arc<dyn EngineFactory>,
         rule: Arc<dyn StepRule>,
     ) -> anyhow::Result<CorePool> {
-        assert!(k >= 1, "need at least one core");
         let (reply_tx, reply_rx) = channel::<Reply>();
-        let (ready_tx, ready_rx) = channel::<anyhow::Result<()>>();
-        let mut workers = Vec::with_capacity(k);
-        for id in 0..k {
-            let (job_tx, job_rx) = channel::<Job>();
-            let reply_tx = reply_tx.clone();
-            let ready_tx = ready_tx.clone();
-            let factory = factory.clone();
-            let rule = rule.clone();
-            let handle = std::thread::Builder::new()
-                .name(format!("chords-core-{id}"))
-                .spawn(move || worker_main(id, factory, rule, job_rx, reply_tx, ready_tx))
-                .expect("spawn worker");
-            workers.push(Worker { tx: job_tx, handle: Some(handle) });
-        }
-        drop(ready_tx);
-        // Wait for all engines to build (surfacing artifact/compile errors).
-        for _ in 0..k {
-            ready_rx.recv().expect("worker died during init")?;
-        }
         let dims = factory.dims();
-        Ok(CorePool { workers, rx: reply_rx, dims })
+        let mut pool = CorePool {
+            slots: Vec::with_capacity(k),
+            rx: Mutex::new(reply_rx),
+            reply_tx,
+            factory,
+            rule,
+            dims,
+        };
+        pool.attach(k)?;
+        Ok(pool)
     }
 
+    /// Live worker count.
     pub fn size(&self) -> usize {
-        self.workers.len()
+        self.slots.iter().filter(|s| s.is_some()).count()
+    }
+
+    /// Slot count (highest worker id ever used + 1).
+    pub fn capacity(&self) -> usize {
+        self.slots.len()
     }
 
     pub fn dims(&self) -> Vec<usize> {
         self.dims.clone()
     }
 
-    /// Submit a job to worker `id` (non-blocking).
-    pub fn submit(&self, id: usize, job: Job) {
-        self.workers[id].tx.send(job).expect("worker channel closed");
+    /// Spawn `n` additional workers, reusing detached slots first. Returns
+    /// the new worker ids once every new engine has built successfully.
+    pub fn attach(&mut self, n: usize) -> anyhow::Result<Vec<usize>> {
+        let (ready_tx, ready_rx) = channel::<anyhow::Result<()>>();
+        let mut ids = Vec::with_capacity(n);
+        for _ in 0..n {
+            let id = match self.slots.iter().position(|s| s.is_none()) {
+                Some(free) => free,
+                None => {
+                    self.slots.push(None);
+                    self.slots.len() - 1
+                }
+            };
+            let (job_tx, job_rx) = channel::<Job>();
+            let reply_tx = self.reply_tx.clone();
+            let ready_tx = ready_tx.clone();
+            let factory = self.factory.clone();
+            let rule = self.rule.clone();
+            let handle = std::thread::Builder::new()
+                .name(format!("chords-core-{id}"))
+                .spawn(move || worker_main(id, factory, rule, job_rx, reply_tx, ready_tx))
+                .expect("spawn worker");
+            self.slots[id] = Some(Worker { tx: job_tx, handle: Some(handle) });
+            ids.push(id);
+        }
+        drop(ready_tx);
+        // Wait for all new engines to build (surfacing artifact/compile
+        // errors). On failure, reap every worker spawned in this batch.
+        let mut first_err = None;
+        for _ in 0..n {
+            match ready_rx.recv() {
+                Ok(Ok(())) => {}
+                Ok(Err(e)) => first_err = Some(e),
+                Err(_) => first_err = Some(anyhow::anyhow!("worker died during init")),
+            }
+        }
+        if let Some(e) = first_err {
+            for id in ids {
+                self.detach(id);
+            }
+            return Err(e);
+        }
+        Ok(ids)
     }
 
-    /// Collect exactly `n` replies (in completion order).
+    /// Stop and join worker `id`; its slot becomes reusable by `attach`.
+    /// Returns false if the id was already detached.
+    pub fn detach(&mut self, id: usize) -> bool {
+        let Some(slot) = self.slots.get_mut(id) else { return false };
+        let Some(mut w) = slot.take() else { return false };
+        let _ = w.tx.send(Job::Stop);
+        if let Some(h) = w.handle.take() {
+            let _ = h.join();
+        }
+        true
+    }
+
+    /// Submit a job to worker `id` (non-blocking).
+    pub fn submit(&self, id: usize, job: Job) {
+        self.slots[id]
+            .as_ref()
+            .expect("submit to detached worker")
+            .tx
+            .send(job)
+            .expect("worker channel closed");
+    }
+
+    /// Collect exactly `n` replies from the default route (completion order).
     pub fn collect(&self, n: usize) -> Vec<Reply> {
-        (0..n).map(|_| self.rx.recv().expect("worker reply channel closed")).collect()
+        let rx = self.rx.lock().unwrap();
+        (0..n).map(|_| rx.recv().expect("worker reply channel closed")).collect()
     }
 
     /// Convenience: run one job on one worker and wait.
     pub fn run_one(&self, id: usize, job: Job) -> Reply {
         self.submit(id, job);
-        self.rx.recv().expect("worker reply channel closed")
+        self.collect(1).pop().unwrap()
+    }
+
+    /// Borrow the workers in `ids` as an independently-collectable set: each
+    /// is re-routed to the view's private reply channel. The caller (the
+    /// scheduler's dispatch layer) must ensure the workers are idle and not
+    /// part of another live view.
+    pub fn view(&self, ids: &[usize]) -> PoolView {
+        let (tx, rx) = channel::<Reply>();
+        let mut txs = Vec::with_capacity(ids.len());
+        for &id in ids {
+            let w = self.slots[id].as_ref().expect("viewing detached worker");
+            w.tx.send(Job::Route(tx.clone())).expect("worker channel closed");
+            txs.push(w.tx.clone());
+        }
+        PoolView { ids: ids.to_vec(), txs, rx }
+    }
+}
+
+impl CorePool {
+    /// Live worker ids in slot order (identity mapping for dense pools).
+    fn live_ids(&self) -> Vec<usize> {
+        self.slots
+            .iter()
+            .enumerate()
+            .filter_map(|(id, s)| s.as_ref().map(|_| id))
+            .collect()
+    }
+}
+
+// The whole pool as a worker set. Local indices range over *live* workers
+// in slot order, so a pool with interior detached slots still addresses
+// consistently with `size()` (for dense pools this is the identity map).
+impl WorkerSet for CorePool {
+    fn size(&self) -> usize {
+        CorePool::size(self)
+    }
+
+    fn submit(&self, idx: usize, job: Job) {
+        let id = self.live_ids()[idx];
+        CorePool::submit(self, id, job)
+    }
+
+    fn collect(&self, n: usize) -> Vec<Reply> {
+        let ids = self.live_ids();
+        let mut replies = CorePool::collect(self, n);
+        for r in &mut replies {
+            r.worker = ids
+                .iter()
+                .position(|&g| g == r.worker)
+                .expect("reply from detached worker");
+        }
+        replies
     }
 }
 
 impl Drop for CorePool {
     fn drop(&mut self) {
-        for w in &self.workers {
+        for w in self.slots.iter().flatten() {
             let _ = w.tx.send(Job::Stop);
         }
-        for w in &mut self.workers {
+        for w in self.slots.iter_mut().flatten() {
             if let Some(h) = w.handle.take() {
                 let _ = h.join();
             }
         }
+    }
+}
+
+/// A leased subset of a [`CorePool`]'s workers with a private reply channel.
+/// Replies are remapped to view-local 0-based indices, so a
+/// [`crate::coordinator::ChordsExecutor`] can drive a view exactly as it
+/// drives a whole pool. Dropping the view leaves the workers running; they
+/// fall back to the pool's default route on the next reply, and the next
+/// `view` re-routes them.
+pub struct PoolView {
+    /// Global worker ids, in local order (local index i ↔ global ids[i]).
+    ids: Vec<usize>,
+    txs: Vec<Sender<Job>>,
+    rx: Receiver<Reply>,
+}
+
+impl PoolView {
+    /// Global worker ids backing this view, in local order.
+    pub fn worker_ids(&self) -> &[usize] {
+        &self.ids
+    }
+}
+
+impl WorkerSet for PoolView {
+    fn size(&self) -> usize {
+        self.ids.len()
+    }
+
+    fn submit(&self, idx: usize, job: Job) {
+        self.txs[idx].send(job).expect("worker channel closed");
+    }
+
+    fn collect(&self, n: usize) -> Vec<Reply> {
+        (0..n)
+            .map(|_| {
+                let mut r = self.rx.recv().expect("worker reply channel closed");
+                r.worker = self
+                    .ids
+                    .iter()
+                    .position(|&g| g == r.worker)
+                    .expect("reply from worker outside this view");
+                r
+            })
+            .collect()
     }
 }
 
@@ -122,7 +309,7 @@ fn worker_main(
     factory: Arc<dyn EngineFactory>,
     rule: Arc<dyn StepRule>,
     jobs: Receiver<Job>,
-    replies: Sender<Reply>,
+    default_reply: Sender<Reply>,
     ready: Sender<anyhow::Result<()>>,
 ) {
     let mut engine = match factory.create() {
@@ -135,14 +322,30 @@ fn worker_main(
             return;
         }
     };
+    // Replies go to the routed channel when set; if that receiver is gone
+    // (its view was dropped), fall back to the pool's default route.
+    let mut routed: Option<Sender<Reply>> = None;
+    let send_reply = |routed: &mut Option<Sender<Reply>>, reply: Reply| -> bool {
+        if let Some(tx) = routed {
+            match tx.send(reply) {
+                Ok(()) => return true,
+                Err(std::sync::mpsc::SendError(r)) => {
+                    *routed = None;
+                    return default_reply.send(r).is_ok();
+                }
+            }
+        }
+        default_reply.send(reply).is_ok()
+    };
     while let Ok(job) = jobs.recv() {
         match job {
             Job::Stop => break,
+            Job::Route(tx) => routed = Some(tx),
             Job::Step { x, t, t2 } => {
                 let t0 = std::time::Instant::now();
                 let (out, drift) = rule.step(engine.as_mut(), &x, t, t2);
                 let secs = t0.elapsed().as_secs_f64();
-                if replies.send(Reply { worker: id, out, drift, secs }).is_err() {
+                if !send_reply(&mut routed, Reply { worker: id, out, drift, secs }) {
                     break;
                 }
             }
@@ -150,7 +353,7 @@ fn worker_main(
                 let t0 = std::time::Instant::now();
                 let f = engine.drift(&x, t);
                 let secs = t0.elapsed().as_secs_f64();
-                if replies.send(Reply { worker: id, out: f.clone(), drift: f, secs }).is_err() {
+                if !send_reply(&mut routed, Reply { worker: id, out: f.clone(), drift: f, secs }) {
                     break;
                 }
             }
@@ -203,5 +406,94 @@ mod tests {
     fn pool_shutdown_is_clean() {
         let p = pool(3);
         drop(p); // must not hang or panic
+    }
+
+    #[test]
+    fn attach_detach_reuses_slots() {
+        let mut p = pool(2);
+        assert_eq!(p.size(), 2);
+        let new = p.attach(2).unwrap();
+        assert_eq!(new, vec![2, 3]);
+        assert_eq!(p.size(), 4);
+        assert!(p.detach(1));
+        assert!(!p.detach(1), "double detach reports false");
+        assert_eq!(p.size(), 3);
+        assert_eq!(p.capacity(), 4);
+        // Slot 1 is reused before the pool grows.
+        let re = p.attach(1).unwrap();
+        assert_eq!(re, vec![1]);
+        assert_eq!(p.size(), 4);
+        assert_eq!(p.capacity(), 4);
+        // The reattached worker serves jobs.
+        let x = Tensor::from_vec(&[2], vec![2.0, 4.0]);
+        let r = p.run_one(1, Job::Drift { x: x.clone(), t: 0.1 });
+        assert_eq!(r.out.data(), x.data());
+    }
+
+    #[test]
+    fn worker_set_addresses_live_slots_after_detach() {
+        use crate::coordinator::{ChordsConfig, ChordsExecutor};
+        use crate::solvers::TimeGrid;
+        let mut p = pool(3);
+        p.detach(0); // interior hole: live ids are [1, 2]
+        let x0 = Tensor::from_vec(&[2], vec![1.0, -0.5]);
+        let cfg = ChordsConfig::new(vec![0, 8], TimeGrid::uniform(20));
+        let exec = ChordsExecutor::new(&p, cfg);
+        let res = exec.run(&x0);
+        assert_eq!(res.outputs.len(), 2, "k=2 run over the 2 live workers");
+    }
+
+    #[test]
+    fn empty_pool_grows_on_demand() {
+        let mut p = pool(0);
+        assert_eq!(p.size(), 0);
+        let ids = p.attach(2).unwrap();
+        assert_eq!(ids, vec![0, 1]);
+        assert_eq!(p.size(), 2);
+    }
+
+    #[test]
+    fn views_isolate_concurrent_jobs() {
+        let p = pool(4);
+        let va = p.view(&[0, 1]);
+        let vb = p.view(&[2, 3]);
+        let x = Tensor::from_vec(&[2], vec![1.0, 1.0]);
+        // Interleave submissions; each view must only see its own replies,
+        // remapped to local indices.
+        va.submit(0, Job::Drift { x: x.clone(), t: 0.1 });
+        vb.submit(0, Job::Drift { x: x.clone(), t: 0.2 });
+        va.submit(1, Job::Drift { x: x.clone(), t: 0.3 });
+        vb.submit(1, Job::Drift { x: x.clone(), t: 0.4 });
+        let mut a: Vec<usize> = va.collect(2).into_iter().map(|r| r.worker).collect();
+        let mut b: Vec<usize> = vb.collect(2).into_iter().map(|r| r.worker).collect();
+        a.sort();
+        b.sort();
+        assert_eq!(a, vec![0, 1]);
+        assert_eq!(b, vec![0, 1]);
+    }
+
+    #[test]
+    fn dropped_view_falls_back_to_default_route() {
+        let p = pool(1);
+        let x = Tensor::from_vec(&[2], vec![1.0, 1.0]);
+        {
+            let v = p.view(&[0]);
+            v.submit(0, Job::Drift { x: x.clone(), t: 0.1 });
+            assert_eq!(v.collect(1)[0].worker, 0);
+        }
+        // View dropped: the worker's next reply lands on the default route.
+        let r = p.run_one(0, Job::Drift { x, t: 0.2 });
+        assert_eq!(r.worker, 0);
+    }
+
+    #[test]
+    fn view_remaps_to_local_indices() {
+        let p = pool(3);
+        let v = p.view(&[2, 0]);
+        let x = Tensor::from_vec(&[2], vec![1.0, 1.0]);
+        v.submit(0, Job::Drift { x: x.clone(), t: 0.1 }); // global worker 2
+        let r = v.collect(1);
+        assert_eq!(r[0].worker, 0, "global id 2 is local index 0");
+        assert_eq!(v.worker_ids(), &[2, 0]);
     }
 }
