@@ -1,14 +1,24 @@
-//! Serving benches: offered-load sweep over the elastic scheduler.
+//! Serving benches: offered-load sweep over the elastic scheduler, plus a
+//! batch-size sweep over the batched-drift engine bank.
 //!
-//! Drives the in-process [`Router`] (no TCP noise) with 1 / 4 / 16
+//! Part 1 drives the in-process [`Router`] (no TCP noise) with 1 / 4 / 16
 //! concurrent clients on one model, with and without elastic mid-job core
 //! reclamation, and reports client latency percentiles plus scheduler-side
-//! utilization and lease churn. One JSON object per configuration (the
-//! repo's JSON bench-table convention), preceded by a human-readable line.
-//! Run with `cargo bench --bench bench_serving`.
+//! utilization and lease churn.
 //!
-//! Uses the artifact-free `exp-ode-slow` preset (300µs simulated NFE cost)
-//! so each request does paper-shaped work (~50 NFE-depth steps).
+//! Part 2 fixes the offered load (4 concurrent same-model clients) and
+//! sweeps the engine-bank shape on the `gauss-mix-slow` preset (300µs
+//! simulated forward — the fixed per-NFE cost a GPU would charge): one
+//! dedicated engine per worker (classic layout), then 2 shared physical
+//! engines at `max_batch` ∈ {1, 4, 8}. With the fixed forward cost
+//! dominating, fusing a wave of logical-core drifts into one batched
+//! forward multiplies throughput — `max_batch ≥ 4` must beat the unfused
+//! `max_batch = 1` baseline by well over 1.5× on the same two engines.
+//!
+//! One JSON object per configuration (the repo's JSON bench-table
+//! convention), preceded by a human-readable line; the full table is also
+//! written to `BENCH_serving.json` as the perf-trajectory baseline.
+//! Run with `cargo bench --bench bench_serving`.
 
 use chords::config::ServeConfig;
 use chords::server::{GenRequest, Router};
@@ -20,30 +30,30 @@ use std::time::Instant;
 const TOTAL_CORES: usize = 8;
 const REQS_PER_CLIENT: usize = 3;
 
-fn sweep(concurrent: usize, elastic: bool) -> Json {
-    let router = Arc::new(Router::with_opts(
-        "artifacts",
-        ServeConfig {
-            total_cores: TOTAL_CORES,
-            queue_cap: 256,
-            elastic_reclaim: elastic,
-            ..ServeConfig::default()
-        },
-    ));
+/// Drive `concurrent` clients × `REQS_PER_CLIENT` requests for `model`
+/// through an in-process router; returns (latencies, wall, queue_stats).
+fn drive(
+    cfg: ServeConfig,
+    model: &str,
+    concurrent: usize,
+    cores: usize,
+) -> (Vec<f64>, f64, Json) {
+    let router = Arc::new(Router::with_opts("artifacts", cfg));
     let barrier = Arc::new(Barrier::new(concurrent));
     let t0 = Instant::now();
     let mut handles = Vec::new();
     for c in 0..concurrent {
         let router = router.clone();
         let barrier = barrier.clone();
+        let model = model.to_string();
         handles.push(std::thread::spawn(move || {
             barrier.wait();
             let mut lats = Vec::with_capacity(REQS_PER_CLIENT);
             for i in 0..REQS_PER_CLIENT {
                 let req = GenRequest {
-                    model: "exp-ode-slow".into(),
+                    model: model.clone(),
                     steps: 50,
-                    cores: 4,
+                    cores,
                     seed: (c * 97 + i) as u64,
                     ..Default::default()
                 };
@@ -59,18 +69,31 @@ fn sweep(concurrent: usize, elastic: bool) -> Json {
         lats.extend(h.join().expect("client thread panicked"));
     }
     let wall_s = t0.elapsed().as_secs_f64();
+    (lats, wall_s, router.queue_stats())
+}
+
+fn stat(stats: &Json, k: &str) -> f64 {
+    stats.get(k).and_then(|v| v.as_f64()).unwrap_or(0.0)
+}
+
+fn sweep(concurrent: usize, elastic: bool) -> Json {
+    let cfg = ServeConfig {
+        total_cores: TOTAL_CORES,
+        queue_cap: 256,
+        elastic_reclaim: elastic,
+        ..ServeConfig::default()
+    };
+    let (lats, wall_s, stats) = drive(cfg, "exp-ode-slow", concurrent, 4);
     let s = Summary::of(&lats);
-    let stats = router.queue_stats();
-    let stat = |k: &str| stats.get(k).and_then(|v| v.as_f64()).unwrap_or(0.0);
     println!(
         "clients={concurrent:<2} elastic={elastic:<5} {:>3} reqs in {wall_s:6.2}s → {:6.2} req/s | p50 {:7.1}ms p99 {:7.1}ms | util {:.2} churn {} peak_jobs {}",
         lats.len(),
         lats.len() as f64 / wall_s,
         s.median * 1e3,
         s.p99 * 1e3,
-        stat("utilization"),
-        stat("lease_churn"),
-        stat("peak_active_jobs"),
+        stat(&stats, "utilization"),
+        stat(&stats, "lease_churn"),
+        stat(&stats, "peak_active_jobs"),
     );
     Json::obj(vec![
         ("bench", Json::str("serving")),
@@ -84,11 +107,58 @@ fn sweep(concurrent: usize, elastic: bool) -> Json {
         ("p50_ms", Json::num(s.median * 1e3)),
         ("p90_ms", Json::num(s.p90 * 1e3)),
         ("p99_ms", Json::num(s.p99 * 1e3)),
-        ("mean_wait_ms", Json::num(stat("mean_wait_ms"))),
-        ("utilization", Json::num(stat("utilization"))),
-        ("lease_churn", Json::num(stat("lease_churn"))),
-        ("peak_active_jobs", Json::num(stat("peak_active_jobs"))),
-        ("peak_cores_in_use", Json::num(stat("peak_cores_in_use"))),
+        ("mean_wait_ms", Json::num(stat(&stats, "mean_wait_ms"))),
+        ("utilization", Json::num(stat(&stats, "utilization"))),
+        ("lease_churn", Json::num(stat(&stats, "lease_churn"))),
+        ("peak_active_jobs", Json::num(stat(&stats, "peak_active_jobs"))),
+        ("peak_cores_in_use", Json::num(stat(&stats, "peak_cores_in_use"))),
+    ])
+}
+
+/// Batch-size sweep: 4 concurrent same-model clients on `gauss-mix-slow`
+/// (nonzero sim cost), 16-core budget so all jobs run at full width.
+/// `engines = 0` is the classic dedicated-engine layout; otherwise the
+/// model's 16 logical cores multiplex onto `engines` physical engines.
+fn sweep_batching(engines: usize, max_batch: usize) -> Json {
+    let concurrent = 4usize;
+    let cfg = ServeConfig {
+        total_cores: 16,
+        queue_cap: 256,
+        engines_per_model: engines,
+        max_batch,
+        batch_linger_us: 200,
+        ..ServeConfig::default()
+    };
+    let (lats, wall_s, stats) = drive(cfg, "gauss-mix-slow", concurrent, 4);
+    let s = Summary::of(&lats);
+    let mode = if engines == 0 { "dedicated".to_string() } else { format!("batched×{engines}") };
+    println!(
+        "{mode:<10} max_batch={max_batch:<2} {:>3} reqs in {wall_s:6.2}s → {:6.2} req/s | p50 {:7.1}ms | occupancy {:4.2} fill_wait {:6.1}µs batches {}",
+        lats.len(),
+        lats.len() as f64 / wall_s,
+        s.median * 1e3,
+        stat(&stats, "mean_batch_occupancy"),
+        stat(&stats, "mean_fill_wait_us"),
+        stat(&stats, "drift_batches"),
+    );
+    Json::obj(vec![
+        ("bench", Json::str("serving_batching")),
+        ("model", Json::str("gauss-mix-slow")),
+        ("total_cores", Json::num(16.0)),
+        ("concurrent", Json::num(concurrent as f64)),
+        ("engines_per_model", Json::num(engines as f64)),
+        ("max_batch", Json::num(max_batch as f64)),
+        ("batch_linger_us", Json::num(200.0)),
+        ("requests", Json::num(lats.len() as f64)),
+        ("wall_s", Json::num(wall_s)),
+        ("throughput_rps", Json::num(lats.len() as f64 / wall_s)),
+        ("p50_ms", Json::num(s.median * 1e3)),
+        ("p99_ms", Json::num(s.p99 * 1e3)),
+        ("drift_batches", Json::num(stat(&stats, "drift_batches"))),
+        ("batched_drifts", Json::num(stat(&stats, "batched_drifts"))),
+        ("mean_batch_occupancy", Json::num(stat(&stats, "mean_batch_occupancy"))),
+        ("mean_fill_wait_us", Json::num(stat(&stats, "mean_fill_wait_us"))),
+        ("peak_batch", Json::num(stat(&stats, "peak_batch"))),
     ])
 }
 
@@ -100,8 +170,39 @@ fn main() {
             rows.push(sweep(concurrent, elastic));
         }
     }
+
+    println!("\n== batching benches: engine-bank sweep, 4 same-model clients ==");
+    let mut unbatched_rps = 0.0f64;
+    let mut best_batched_rps = 0.0f64;
+    for (engines, max_batch) in [(0usize, 1usize), (2, 1), (2, 4), (2, 8)] {
+        let row = sweep_batching(engines, max_batch);
+        let rps = row.get("throughput_rps").and_then(|v| v.as_f64()).unwrap_or(0.0);
+        if engines > 0 && max_batch == 1 {
+            unbatched_rps = rps;
+        }
+        if engines > 0 && max_batch >= 4 {
+            best_batched_rps = best_batched_rps.max(rps);
+        }
+        rows.push(row);
+    }
+    if unbatched_rps > 0.0 {
+        println!(
+            "batching speedup (max_batch≥4 vs max_batch=1, same 2 engines): {:.2}x",
+            best_batched_rps / unbatched_rps
+        );
+    }
+
     println!("-- JSON bench table --");
     for row in &rows {
         println!("{}", row.to_string_compact());
+    }
+    // Perf-trajectory baseline for future PRs.
+    let table = Json::obj(vec![
+        ("bench", Json::str("serving")),
+        ("rows", Json::arr(rows.iter().cloned())),
+    ]);
+    match std::fs::write("BENCH_serving.json", table.to_string_compact()) {
+        Ok(()) => println!("wrote BENCH_serving.json ({} rows)", rows.len()),
+        Err(e) => eprintln!("could not write BENCH_serving.json: {e}"),
     }
 }

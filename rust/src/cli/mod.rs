@@ -88,7 +88,7 @@ pub fn help_text() -> String {
         ("reward-sweep", "verify Thm 2.5 / Def 2.4 on the exponential-ODE reward"),
         (
             "serve",
-            "start the generation server (--port 7077 --total-cores 8 --queue-cap 64 [--no-reclaim])",
+            "start the generation server (--port 7077 --total-cores 8 --queue-cap 64 [--no-reclaim] [--engines-per-model E --max-batch B --batch-linger-us U])",
         ),
         ("inspect-artifacts", "list AOT artifacts and validate the manifest"),
         ("help", "this message"),

@@ -171,6 +171,24 @@ pub const PRESETS: &[ModelPreset] = &[
         weight_seed: 7,
         serve_cores: 2,
     },
+    // Mixture engine with a simulated per-NFE cost: the batching benches'
+    // model. The fixed 300µs forward dominates the tiny closed-form math,
+    // so fusing logical cores' drifts into one batched forward (one spin
+    // per batch instead of per item) shows GPU-shaped throughput gains.
+    ModelPreset {
+        name: "gauss-mix-slow",
+        simulates: "gauss mixture with 300µs simulated NFE cost (batching benches/tests)",
+        tokens: 1,
+        channels: 16,
+        depth: 0,
+        heads: 0,
+        param: Parameterization::Velocity,
+        engine: EngineKind::GaussMixture,
+        default_steps: 50,
+        sim_cost_us: 300,
+        weight_seed: 7,
+        serve_cores: 4,
+    },
     // Analytic engine with a simulated per-NFE cost: jobs take long enough
     // (~steps × sim_cost) that scheduler concurrency, queue backpressure,
     // and mid-job core reclamation are observable in tests and benches

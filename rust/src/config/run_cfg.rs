@@ -121,6 +121,18 @@ pub struct ServeConfig {
     /// Detach a model's warm parked workers after this long without lease
     /// activity (milliseconds).
     pub idle_ttl_ms: u64,
+    /// Physical engines per model for batched drift evaluation
+    /// (`--engines-per-model`). 0 = one dedicated engine per worker, the
+    /// classic layout with no batching. When > 0, each model's logical
+    /// cores are multiplexed onto this many shared engines and concurrent
+    /// same-model jobs' drift calls fuse into batched forwards.
+    pub engines_per_model: usize,
+    /// Most drift evaluations fused into one engine invocation when
+    /// batching is on (≥ 1).
+    pub max_batch: usize,
+    /// Microseconds a filling batch waits for stragglers after its first
+    /// request (bounded dispatch latency).
+    pub batch_linger_us: u64,
 }
 
 impl Default for ServeConfig {
@@ -131,6 +143,9 @@ impl Default for ServeConfig {
             elastic_reclaim: true,
             default_deadline_ms: None,
             idle_ttl_ms: 30_000,
+            engines_per_model: 0,
+            max_batch: 8,
+            batch_linger_us: 150,
         }
     }
 }
@@ -162,6 +177,21 @@ impl ServeConfig {
             }
             "idle_ttl_ms" => {
                 self.idle_ttl_ms = value.parse().map_err(|e| format!("idle_ttl_ms: {e}"))?
+            }
+            "engines_per_model" | "engines-per-model" => {
+                self.engines_per_model =
+                    value.parse().map_err(|e| format!("engines_per_model: {e}"))?
+            }
+            "max_batch" | "max-batch" => {
+                let v: usize = value.parse().map_err(|e| format!("max_batch: {e}"))?;
+                if v == 0 {
+                    return Err("max_batch must be ≥ 1".into());
+                }
+                self.max_batch = v;
+            }
+            "batch_linger_us" | "batch-linger-us" => {
+                self.batch_linger_us =
+                    value.parse().map_err(|e| format!("batch_linger_us: {e}"))?
             }
             _ => return Err(format!("unknown serve config key '{key}'")),
         }
@@ -210,5 +240,19 @@ mod tests {
         assert!(s.set("total_cores", "0").is_err());
         assert!(s.set("queue_cap", "0").is_err());
         assert!(s.set("bogus", "1").is_err());
+    }
+
+    #[test]
+    fn serve_config_batching_knobs() {
+        let s = ServeConfig::default();
+        assert_eq!(s.engines_per_model, 0, "batching is opt-in");
+        let mut s = ServeConfig::default();
+        s.set("engines-per-model", "2").unwrap();
+        s.set("max_batch", "16").unwrap();
+        s.set("batch-linger-us", "250").unwrap();
+        assert_eq!(s.engines_per_model, 2);
+        assert_eq!(s.max_batch, 16);
+        assert_eq!(s.batch_linger_us, 250);
+        assert!(s.set("max_batch", "0").is_err());
     }
 }

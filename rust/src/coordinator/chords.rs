@@ -175,7 +175,11 @@ impl<'a> ChordsExecutor<'a> {
 
         'steps: for step in 1..=n {
             // ---- Phase 1: all active cores advance in parallel ----
-            let mut submitted = 0usize;
+            // The wave goes out through one submit_batch call so a batched
+            // pool can fuse the K drift evaluations into shared-engine
+            // invocations (workers/batcher.rs); on a dedicated-engine pool
+            // this degenerates to per-worker submits.
+            let mut wave: Vec<(usize, Job)> = Vec::with_capacity(k);
             for c in 0..k {
                 slots[c] = None;
                 stepped[c] = None;
@@ -186,15 +190,16 @@ impl<'a> ChordsExecutor<'a> {
                     continue;
                 };
                 slots[c] = Some((cur, next));
-                self.pool.submit(
+                wave.push((
                     c,
                     Job::Step { x: cores[c].x.clone(), t: grid.t(cur), t2: grid.t(next) },
-                );
-                submitted += 1;
+                ));
             }
+            let submitted = wave.len();
             if submitted == 0 {
                 break;
             }
+            self.pool.submit_batch(wave);
             for reply in self.pool.collect(submitted) {
                 total_nfes += 1;
                 stepped[reply.worker] = Some((reply.out, reply.drift));

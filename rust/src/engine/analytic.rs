@@ -40,6 +40,15 @@ impl DriftEngine for ExpOde {
         x.clone()
     }
 
+    /// Fused evaluation: one simulated forward serves the whole wave
+    /// (modeling a GPU whose batched forward costs the same as batch 1),
+    /// with per-item outputs bit-identical to [`DriftEngine::drift`].
+    fn drift_batch(&mut self, xs: &[Tensor], ts: &[f32]) -> Vec<Tensor> {
+        assert_eq!(xs.len(), ts.len(), "drift_batch length mismatch");
+        spin_us(self.sim_cost_us);
+        xs.to_vec()
+    }
+
     fn name(&self) -> &str {
         "exp-ode"
     }
@@ -128,6 +137,16 @@ mod tests {
         let mut e = ExpOde::new(vec![4], 0);
         let x = Tensor::from_vec(&[4], vec![1.0, 2.0, -1.0, 0.5]);
         assert_eq!(e.drift(&x, 0.3), x);
+    }
+
+    #[test]
+    fn exp_ode_drift_batch_matches_per_item() {
+        let mut e = ExpOde::new(vec![3], 0);
+        let xs = vec![
+            Tensor::from_vec(&[3], vec![1.0, 2.0, 3.0]),
+            Tensor::from_vec(&[3], vec![-1.0, 0.5, 0.0]),
+        ];
+        assert_eq!(e.drift_batch(&xs, &[0.1, 0.9]), xs);
     }
 
     #[test]

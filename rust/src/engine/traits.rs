@@ -16,6 +16,20 @@ pub trait DriftEngine: Send {
     /// Evaluate `f_θ(x, t)`.
     fn drift(&mut self, x: &Tensor, t: f32) -> Tensor;
 
+    /// Evaluate a batch of independent drifts in one engine invocation.
+    ///
+    /// Backends override this with fused math (one forward over stacked
+    /// inputs — the [`crate::workers::EngineBank`] hot path); the default
+    /// falls back to per-item [`DriftEngine::drift`] calls. Contract:
+    /// `drift_batch(xs, ts)[i]` is **bit-identical** to `drift(&xs[i],
+    /// ts[i])` for every i — batching is a throughput lever and must never
+    /// change numerics (core 1 of CHORDS stays exactly the sequential
+    /// solver). `rust/tests/batch_equivalence.rs` pins this invariant.
+    fn drift_batch(&mut self, xs: &[Tensor], ts: &[f32]) -> Vec<Tensor> {
+        assert_eq!(xs.len(), ts.len(), "drift_batch length mismatch");
+        xs.iter().zip(ts).map(|(x, &t)| self.drift(x, t)).collect()
+    }
+
     /// Human-readable backend name.
     fn name(&self) -> &str;
 }

@@ -21,6 +21,11 @@ impl NfeLedger {
         self.0.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// Count `n` NFEs at once (one fused `drift_batch` of n items).
+    pub fn bump_n(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
     pub fn total(&self) -> u64 {
         self.0.load(Ordering::Relaxed)
     }
@@ -50,6 +55,13 @@ impl DriftEngine for CountingEngine {
     fn drift(&mut self, x: &Tensor, t: f32) -> Tensor {
         self.ledger.bump();
         self.inner.drift(x, t)
+    }
+
+    fn drift_batch(&mut self, xs: &[Tensor], ts: &[f32]) -> Vec<Tensor> {
+        // Each batched item is one NFE; forward to the inner engine's fused
+        // path rather than the per-item default.
+        self.ledger.bump_n(xs.len() as u64);
+        self.inner.drift_batch(xs, ts)
     }
 
     fn name(&self) -> &str {
@@ -100,6 +112,17 @@ mod tests {
         assert_eq!(ledger.total(), 5);
         ledger.reset();
         assert_eq!(ledger.total(), 0);
+    }
+
+    #[test]
+    fn counting_counts_batched_items() {
+        let ledger = NfeLedger::new();
+        let f = CountingFactory::new(Arc::new(ExpOdeFactory::new(vec![2], 0)), ledger.clone());
+        let mut e = f.create().unwrap();
+        let xs = vec![Tensor::zeros(&[2]); 3];
+        let ts = vec![0.1, 0.2, 0.3];
+        assert_eq!(e.drift_batch(&xs, &ts).len(), 3);
+        assert_eq!(ledger.total(), 3, "one NFE per batched item");
     }
 
     #[test]

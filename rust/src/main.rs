@@ -215,6 +215,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
         ("total-cores", "total_cores"),
         ("queue-cap", "queue_cap"),
         ("deadline-ms", "deadline_ms"),
+        ("engines-per-model", "engines_per_model"),
+        ("max-batch", "max_batch"),
+        ("batch-linger-us", "batch_linger_us"),
     ] {
         if let Some(v) = args.flag(flag) {
             cfg.set(key, v).map_err(|e| anyhow!("--{flag}: {e}"))?;
@@ -228,6 +231,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
         "chords server listening on {} (budget {} cores, queue cap {}, elastic reclaim {})",
         server.addr, cfg.total_cores, cfg.queue_cap, cfg.elastic_reclaim
     );
+    if cfg.engines_per_model > 0 {
+        println!(
+            "batched drift: {} engines/model, max batch {}, linger {}µs",
+            cfg.engines_per_model, cfg.max_batch, cfg.batch_linger_us
+        );
+    }
     println!("protocol: JSON lines; ops: ping | stats | queue_stats | generate");
     // Serve until killed.
     loop {

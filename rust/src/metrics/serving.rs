@@ -6,7 +6,59 @@
 
 use crate::util::json::Json;
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
 use std::time::Instant;
+
+/// Counters for the batched-drift hot path ([`crate::workers::EngineBank`]):
+/// fused invocations, items per fusion (occupancy), and how long each batch
+/// waited for stragglers before dispatch (fill wait — bounded by the
+/// configured linger). Shared by every physical engine thread of a model,
+/// and across models when the dispatcher wires its own instance through.
+#[derive(Default)]
+pub struct BatchStats {
+    /// Fused engine invocations (calls to `drift_batch`).
+    pub batches: AtomicU64,
+    /// Drift evaluations served through fused invocations.
+    pub batched_drifts: AtomicU64,
+    /// Total microseconds batches spent waiting to fill after their first
+    /// item arrived (dispatch latency added by the linger window).
+    pub fill_wait_us_total: AtomicU64,
+    /// High-water batch occupancy.
+    pub peak_batch: AtomicU64,
+}
+
+impl BatchStats {
+    pub fn new() -> Arc<BatchStats> {
+        Arc::new(BatchStats::default())
+    }
+
+    /// Record one fused invocation of `items` drifts dispatched after
+    /// `fill_wait_us` microseconds of filling.
+    pub fn on_batch(&self, items: usize, fill_wait_us: u64) {
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.batched_drifts.fetch_add(items as u64, Ordering::Relaxed);
+        self.fill_wait_us_total.fetch_add(fill_wait_us, Ordering::Relaxed);
+        raise_peak(&self.peak_batch, items as u64);
+    }
+
+    /// Mean items per fused invocation (0 when none ran).
+    pub fn mean_occupancy(&self) -> f64 {
+        let batches = self.batches.load(Ordering::Relaxed);
+        if batches == 0 {
+            return 0.0;
+        }
+        self.batched_drifts.load(Ordering::Relaxed) as f64 / batches as f64
+    }
+
+    /// Mean microseconds a batch waited to fill (0 when none ran).
+    pub fn mean_fill_wait_us(&self) -> f64 {
+        let batches = self.batches.load(Ordering::Relaxed);
+        if batches == 0 {
+            return 0.0;
+        }
+        self.fill_wait_us_total.load(Ordering::Relaxed) as f64 / batches as f64
+    }
+}
 
 /// Shared counters/gauges for the serving path. All methods are lock-free;
 /// gauges are best-effort (exact under the dispatcher's own serialization).
@@ -43,6 +95,9 @@ pub struct ServingMetrics {
     pub wait_us_max: AtomicU64,
     /// Integrated busy core-time (µs·cores) over all completed leases.
     pub busy_core_us: AtomicU64,
+    /// Batched-drift counters, shared with every model's [`EngineBank`]
+    /// when batching is enabled (`crate::workers::EngineBank`).
+    pub batch: Arc<BatchStats>,
     started: Instant,
 }
 
@@ -64,6 +119,7 @@ impl Default for ServingMetrics {
             wait_us_total: AtomicU64::new(0),
             wait_us_max: AtomicU64::new(0),
             busy_core_us: AtomicU64::new(0),
+            batch: BatchStats::new(),
             started: Instant::now(),
         }
     }
@@ -174,6 +230,14 @@ impl ServingMetrics {
                 Json::num(self.wait_us_max.load(Ordering::Relaxed) as f64 / 1e3),
             ),
             ("utilization", Json::num(self.utilization(total_cores))),
+            ("drift_batches", Json::num(self.batch.batches.load(Ordering::Relaxed) as f64)),
+            (
+                "batched_drifts",
+                Json::num(self.batch.batched_drifts.load(Ordering::Relaxed) as f64),
+            ),
+            ("mean_batch_occupancy", Json::num(self.batch.mean_occupancy())),
+            ("mean_fill_wait_us", Json::num(self.batch.mean_fill_wait_us())),
+            ("peak_batch", Json::num(self.batch.peak_batch.load(Ordering::Relaxed) as f64)),
         ])
     }
 }
@@ -212,6 +276,31 @@ mod tests {
         assert_eq!(j.get("admitted").unwrap().as_usize().unwrap(), 1);
         assert!((j.get("mean_wait_ms").unwrap().as_f64().unwrap() - 2.0).abs() < 1e-9);
         assert!(j.get("utilization").unwrap().as_f64().unwrap() >= 0.0);
+    }
+
+    #[test]
+    fn batch_stats_aggregate() {
+        let b = BatchStats::default();
+        assert_eq!(b.mean_occupancy(), 0.0);
+        assert_eq!(b.mean_fill_wait_us(), 0.0);
+        b.on_batch(4, 100);
+        b.on_batch(2, 60);
+        assert_eq!(b.batches.load(Ordering::Relaxed), 2);
+        assert_eq!(b.batched_drifts.load(Ordering::Relaxed), 6);
+        assert_eq!(b.peak_batch.load(Ordering::Relaxed), 4);
+        assert!((b.mean_occupancy() - 3.0).abs() < 1e-12);
+        assert!((b.mean_fill_wait_us() - 80.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn snapshot_has_batch_fields() {
+        let m = ServingMetrics::new();
+        m.batch.on_batch(3, 90);
+        let j = m.snapshot(8, 64);
+        assert_eq!(j.get("drift_batches").unwrap().as_usize().unwrap(), 1);
+        assert_eq!(j.get("batched_drifts").unwrap().as_usize().unwrap(), 3);
+        assert_eq!(j.get("peak_batch").unwrap().as_usize().unwrap(), 3);
+        assert!((j.get("mean_batch_occupancy").unwrap().as_f64().unwrap() - 3.0).abs() < 1e-9);
     }
 
     #[test]

@@ -128,6 +128,20 @@ mod engine_impl {
             self.execute(x, t).expect("PJRT execution failed")
         }
 
+        /// Batched entry point for the engine bank. The AOT artifacts are
+        /// lowered for a fixed per-sample shape, so the wave executes as
+        /// back-to-back device calls on this engine's client — no
+        /// re-marshalling beyond what per-item `drift` already does. True
+        /// single-call stacked execution needs batch-lowered HLO
+        /// (python/aot.py; ROADMAP "Batch-lowered HLO artifacts").
+        fn drift_batch(&mut self, xs: &[Tensor], ts: &[f32]) -> Vec<Tensor> {
+            assert_eq!(xs.len(), ts.len(), "drift_batch length mismatch");
+            xs.iter()
+                .zip(ts)
+                .map(|(x, &t)| self.execute(x, t).expect("PJRT execution failed"))
+                .collect()
+        }
+
         fn name(&self) -> &str {
             &self.name
         }
@@ -142,8 +156,9 @@ mod engine_impl {
 
     fn pjrt_unavailable() -> anyhow::Error {
         anyhow!(
-            "built without the `pjrt` feature: HLO/DiT presets need the vendored `xla` \
-             crate (rebuild with --features pjrt); analytic presets remain available"
+            "built without the `pjrt` feature: HLO/DiT presets need the PJRT runtime \
+             (rebuild with --features pjrt, swapping rust/vendor/xla for the real \
+             vendored bindings); analytic presets remain available"
         )
     }
 

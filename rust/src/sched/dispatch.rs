@@ -24,7 +24,7 @@ use crate::engine::factory_for;
 use crate::metrics::ServingMetrics;
 use crate::solvers::Euler;
 use crate::util::json::Json;
-use crate::workers::{CorePool, PoolView};
+use crate::workers::{BatchOpts, CorePool, PoolView};
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::channel;
@@ -50,11 +50,43 @@ pub struct DispatchOpts {
     /// lease activity, so threads/engines track current load instead of
     /// ratcheting to the historical peak.
     pub idle_ttl_ms: u64,
+    /// Physical engines per model (batched drift evaluation). 0 = one
+    /// dedicated engine per worker, no batching. When > 0, every model
+    /// pool is built over a shared [`crate::workers::EngineBank`] of this
+    /// many engines, fusing drift calls across that model's logical cores
+    /// — including across *concurrent jobs* granted from the same pool.
+    pub engines_per_model: usize,
+    /// Most drifts fused per engine invocation when batching is on.
+    pub max_batch: usize,
+    /// Microseconds a filling batch waits for stragglers.
+    pub batch_linger_us: u64,
 }
 
 impl Default for DispatchOpts {
     fn default() -> Self {
-        DispatchOpts { total_cores: 8, queue_cap: 64, elastic_reclaim: true, idle_ttl_ms: 30_000 }
+        DispatchOpts {
+            total_cores: 8,
+            queue_cap: 64,
+            elastic_reclaim: true,
+            idle_ttl_ms: 30_000,
+            engines_per_model: 0,
+            max_batch: 8,
+            batch_linger_us: 150,
+        }
+    }
+}
+
+impl DispatchOpts {
+    /// Bank layout for model pools, `None` when batching is disabled.
+    fn batch_opts(&self) -> Option<BatchOpts> {
+        if self.engines_per_model == 0 {
+            return None;
+        }
+        Some(BatchOpts {
+            engines: self.engines_per_model,
+            max_batch: self.max_batch.max(1),
+            linger: Duration::from_micros(self.batch_linger_us),
+        })
     }
 }
 
@@ -97,6 +129,8 @@ struct Shared {
     stop: AtomicBool,
     elastic: bool,
     idle_ttl: Duration,
+    /// Engine-bank layout for model pools (`None` = dedicated engines).
+    batch: Option<BatchOpts>,
     artifacts_dir: String,
     next_id: AtomicU64,
 }
@@ -123,6 +157,7 @@ impl Dispatcher {
             stop: AtomicBool::new(false),
             elastic: opts.elastic_reclaim,
             idle_ttl: Duration::from_millis(opts.idle_ttl_ms),
+            batch: opts.batch_opts(),
             artifacts_dir: artifacts_dir.to_string(),
             next_id: AtomicU64::new(1),
         });
@@ -228,7 +263,18 @@ fn model_slot(shared: &Shared, model: &str) -> anyhow::Result<Arc<ModelSlot>> {
     }
     let p = preset(model).ok_or_else(|| anyhow::anyhow!("unknown model '{model}'"))?;
     let factory = factory_for(p, &shared.artifacts_dir)?;
-    let pool = CorePool::new(0, factory, Arc::new(Euler))?;
+    // Batched mode multiplexes the model's logical cores onto a shared
+    // engine bank whose counters surface through `queue_stats`.
+    let pool = match &shared.batch {
+        Some(opts) => CorePool::new_batched_with_stats(
+            0,
+            factory,
+            Arc::new(Euler),
+            opts.clone(),
+            shared.metrics.batch.clone(),
+        )?,
+        None => CorePool::new(0, factory, Arc::new(Euler))?,
+    };
     let slot = Arc::new(ModelSlot {
         pool: Mutex::new(pool),
         free: Mutex::new(Vec::new()),
@@ -323,21 +369,45 @@ fn finish_grant(shared: &Arc<Shared>, ticket: Ticket<JobGrant>, lease: CoreLease
 
 /// Detach warm workers from models with no lease activity for the idle
 /// TTL, so thread/engine usage follows current load down instead of
-/// ratcheting up to the historical peak forever.
+/// ratcheting up to the historical peak forever. Once a model has no live
+/// workers left, its whole slot is dropped from the registry — releasing
+/// the [`crate::workers::EngineBank`] physical engines too (under batching
+/// they are the expensive resource: real PJRT replicas). In-flight jobs
+/// hold their own `Arc<ModelSlot>`, so an orphaned slot stays functional
+/// until the last grant drops; the next request simply rebuilds the slot.
 fn reap_idle(shared: &Arc<Shared>) {
-    let slots: Vec<Arc<ModelSlot>> = shared.models.lock().unwrap().values().cloned().collect();
-    for slot in slots {
+    let slots: Vec<(String, Arc<ModelSlot>)> = shared
+        .models
+        .lock()
+        .unwrap()
+        .iter()
+        .map(|(name, slot)| (name.clone(), slot.clone()))
+        .collect();
+    for (name, slot) in slots {
         let idle_for = slot.last_activity.lock().unwrap().elapsed();
         if idle_for < shared.idle_ttl {
             continue;
         }
         let ids: Vec<usize> = std::mem::take(&mut *slot.free.lock().unwrap());
-        if ids.is_empty() {
-            continue;
+        {
+            let mut pool = slot.pool.lock().unwrap();
+            for id in ids {
+                pool.detach(id);
+            }
+            if pool.size() > 0 {
+                continue; // leased workers still out — keep the slot
+            }
         }
-        let mut pool = slot.pool.lock().unwrap();
-        for id in ids {
-            pool.detach(id);
+        let mut models = shared.models.lock().unwrap();
+        // Re-check under the registry lock: only drop the exact slot we
+        // inspected, and only if it stayed idle (a racing grant touches
+        // last_activity before attaching workers).
+        if let Some(cur) = models.get(&name) {
+            if Arc::ptr_eq(cur, &slot)
+                && slot.last_activity.lock().unwrap().elapsed() >= shared.idle_ttl
+            {
+                models.remove(&name);
+            }
         }
     }
 }
@@ -617,6 +687,38 @@ mod tests {
             assert!(t0.elapsed() < Duration::from_secs(5), "warm workers were not reaped");
             std::thread::sleep(Duration::from_millis(10));
         }
+        // With no workers left, the whole slot (and under batching its
+        // EngineBank engines) is dropped from the registry.
+        let t0 = Instant::now();
+        while d.loaded_models().contains(&"gauss-mix".to_string()) {
+            assert!(t0.elapsed() < Duration::from_secs(5), "idle model slot was not released");
+            std::thread::sleep(Duration::from_millis(10));
+        }
+    }
+
+    #[test]
+    fn batched_dispatcher_serves_jobs_and_counts_fusion() {
+        let d = Dispatcher::new(
+            "artifacts",
+            DispatchOpts {
+                total_cores: 4,
+                queue_cap: 8,
+                engines_per_model: 2,
+                max_batch: 4,
+                batch_linger_us: 200,
+                ..DispatchOpts::default()
+            },
+        );
+        let mut grant = d.submit(spec("gauss-mix", 4)).unwrap();
+        assert_eq!(run_job(&mut grant, 30, 1), 4);
+        drop(grant);
+        let b = &d.metrics().batch;
+        let batches = b.batches.load(Ordering::Relaxed);
+        let drifts = b.batched_drifts.load(Ordering::Relaxed);
+        assert!(batches > 0, "engine bank executed fused invocations");
+        assert!(drifts >= batches, "every batch carries ≥ 1 drift");
+        // 4 cores × ~30 lockstep steps all flowed through the bank.
+        assert!(drifts > 30, "bank served the job's NFEs, saw {drifts}");
     }
 
     #[test]

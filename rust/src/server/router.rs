@@ -120,6 +120,9 @@ impl Router {
                 queue_cap: cfg.queue_cap,
                 elastic_reclaim: cfg.elastic_reclaim,
                 idle_ttl_ms: cfg.idle_ttl_ms,
+                engines_per_model: cfg.engines_per_model,
+                max_batch: cfg.max_batch,
+                batch_linger_us: cfg.batch_linger_us,
             },
         );
         Router {

@@ -76,6 +76,40 @@ pub fn rectify_into(
     }
 }
 
+/// Stack `n` same-shape tensors into one `[n, …dims]` tensor (allocating).
+///
+/// The batched-drift substrate: logical CHORDS cores' latents are stacked
+/// into one buffer so a physical engine can evaluate `f_θ` once for the
+/// whole wave. Row-major layout means this is a straight concatenation.
+pub fn stack(xs: &[Tensor]) -> Tensor {
+    assert!(!xs.is_empty(), "stack of zero tensors");
+    let dims = xs[0].dims();
+    let mut out_dims = Vec::with_capacity(dims.len() + 1);
+    out_dims.push(xs.len());
+    out_dims.extend_from_slice(dims);
+    let mut data = Vec::with_capacity(xs.len() * xs[0].numel());
+    for x in xs {
+        assert_eq!(x.dims(), dims, "stack shape mismatch");
+        data.extend_from_slice(x.data());
+    }
+    Tensor::from_vec(&out_dims, data)
+}
+
+/// Split a `[n, …dims]` tensor back into `n` tensors of shape `…dims`
+/// (allocating). Inverse of [`stack`]: `unstack(&stack(xs)) == xs`.
+pub fn unstack(x: &Tensor) -> Vec<Tensor> {
+    let dims = x.dims();
+    assert!(!dims.is_empty(), "unstack needs a leading batch dim");
+    let n = dims[0];
+    let inner = &dims[1..];
+    let chunk: usize = inner.iter().product();
+    let mut out = Vec::with_capacity(n);
+    for i in 0..n {
+        out.push(Tensor::from_vec(inner, x.data()[i * chunk..(i + 1) * chunk].to_vec()));
+    }
+    out
+}
+
 /// Root-mean-square error between two tensors.
 pub fn rmse(a: &Tensor, b: &Tensor) -> f32 {
     assert_eq!(a.dims(), b.dims(), "rmse shape mismatch");
@@ -213,6 +247,36 @@ mod tests {
         assert!(cosine(&a, &b).abs() < 1e-6);
         let z = t(&[0.0, 0.0]);
         assert_eq!(cosine(&a, &z), 0.0);
+    }
+
+    #[test]
+    fn stack_concatenates_rowmajor() {
+        let a = t(&[1.0, 2.0]);
+        let b = t(&[3.0, 4.0]);
+        let s = stack(&[a, b]);
+        assert_eq!(s.dims(), &[2, 2]);
+        assert_eq!(s.data(), &[1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn unstack_inverts_stack() {
+        let xs = vec![t(&[1.0, -1.0, 0.5]), t(&[2.0, 0.0, 9.0])];
+        let back = unstack(&stack(&xs));
+        assert_eq!(back, xs);
+    }
+
+    #[test]
+    fn stack_preserves_inner_rank() {
+        let a = Tensor::from_vec(&[2, 3], vec![0.0; 6]);
+        let s = stack(&[a.clone(), a.clone(), a]);
+        assert_eq!(s.dims(), &[3, 2, 3]);
+        assert_eq!(unstack(&s)[2].dims(), &[2, 3]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn stack_shape_mismatch_panics() {
+        stack(&[t(&[1.0]), t(&[1.0, 2.0])]);
     }
 
     #[test]

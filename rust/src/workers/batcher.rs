@@ -1,0 +1,446 @@
+//! Micro-batching layer: multiplex logical CHORDS cores onto shared
+//! physical engines.
+//!
+//! CHORDS' lockstep phase 1 issues K independent `f_θ(x, t)` evaluations per
+//! step — one per logical core — but real backends (one model replica per
+//! GPU) get far better throughput from one batched forward than K serial
+//! ones. An [`EngineBank`] owns a small number of *physical* engines (each
+//! on its own thread, constructed there — the PJRT thread-affinity
+//! contract) fed by a shared request queue. Logical cores hold cheap
+//! [`RemoteEngine`] handles that implement [`DriftEngine`] by round-tripping
+//! a request through the bank, so every existing solver/step-rule/executor
+//! drives batched engines unchanged.
+//!
+//! Fusion: a physical engine takes the first queued request, then drains
+//! stragglers up to `max_batch`, waiting at most `linger` for the rest of a
+//! lockstep wave to arrive, and issues one [`DriftEngine::drift_batch`]
+//! call. Requests from *concurrent same-model jobs* land on the same queue
+//! (the dispatcher shares one bank per model), so cross-job fusion is
+//! automatic. Replies route back on each caller's private channel, tagged
+//! for re-ordering — per-core reply routing is never mixed.
+//!
+//! Numerics: `drift_batch` is bit-identical to per-item `drift` (the
+//! [`DriftEngine`] contract, pinned by `rust/tests/batch_equivalence.rs`),
+//! so batching changes throughput, never outputs — core 1 of CHORDS stays
+//! exactly the sequential solver.
+
+use crate::engine::{DriftEngine, EngineFactory};
+use crate::metrics::BatchStats;
+use crate::tensor::Tensor;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender, TryRecvError};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Idle engines poll the stop flag at this period while waiting for work,
+/// bounding [`EngineBank`] teardown latency regardless of live client
+/// handles.
+const STOP_POLL: Duration = Duration::from_millis(20);
+
+/// Knobs for an [`EngineBank`].
+#[derive(Clone, Debug)]
+pub struct BatchOpts {
+    /// Physical engines sharing the request queue (≥ 1).
+    pub engines: usize,
+    /// Most drifts fused into one engine invocation (≥ 1; 1 = no fusion,
+    /// the queue still serializes logical cores onto the physical engines).
+    pub max_batch: usize,
+    /// How long a filling batch waits for stragglers after its first
+    /// request. Bounded dispatch latency: a lone request never waits longer
+    /// than this.
+    pub linger: Duration,
+}
+
+impl Default for BatchOpts {
+    fn default() -> Self {
+        BatchOpts { engines: 2, max_batch: 8, linger: Duration::from_micros(150) }
+    }
+}
+
+/// One drift evaluation wanted by a logical core.
+struct DriftRequest {
+    x: Tensor,
+    t: f32,
+    /// Caller-side sequence tag, echoed in the reply so a client issuing
+    /// several in-flight requests can restore order.
+    tag: usize,
+    reply: Sender<(usize, Tensor)>,
+}
+
+/// A bank of physical engines behind a shared batching queue.
+pub struct EngineBank {
+    /// Kept for cloning into [`RemoteEngine`] clients; dropped first on
+    /// teardown so engine threads observe disconnect and exit.
+    tx: Option<Sender<DriftRequest>>,
+    handles: Vec<JoinHandle<()>>,
+    stop: Arc<AtomicBool>,
+    stats: Arc<BatchStats>,
+    dims: Vec<usize>,
+    client_name: String,
+    opts: BatchOpts,
+}
+
+impl EngineBank {
+    /// Build `opts.engines` physical engines from `factory`, each inside
+    /// its own thread. Fails (with every thread reaped) if any engine
+    /// fails to build. `stats` receives occupancy/fill-wait counters —
+    /// pass [`crate::metrics::ServingMetrics::batch`] to surface them in
+    /// `queue_stats`, or a fresh [`BatchStats::new`] otherwise.
+    pub fn new(
+        factory: Arc<dyn EngineFactory>,
+        opts: BatchOpts,
+        stats: Arc<BatchStats>,
+    ) -> anyhow::Result<EngineBank> {
+        assert!(opts.engines >= 1, "EngineBank needs at least one physical engine");
+        let opts = BatchOpts { max_batch: opts.max_batch.max(1), ..opts };
+        let (tx, rx) = channel::<DriftRequest>();
+        let rx = Arc::new(Mutex::new(rx));
+        let stop = Arc::new(AtomicBool::new(false));
+        let (ready_tx, ready_rx) = channel::<anyhow::Result<String>>();
+        let mut handles = Vec::with_capacity(opts.engines);
+        for e in 0..opts.engines {
+            let factory = factory.clone();
+            let rx = rx.clone();
+            let stop2 = stop.clone();
+            let opts2 = opts.clone();
+            let stats2 = stats.clone();
+            let ready = ready_tx.clone();
+            let handle = std::thread::Builder::new()
+                .name(format!("chords-engine-{e}"))
+                .spawn(move || engine_main(factory, rx, stop2, opts2, stats2, ready))
+                .expect("spawn engine thread");
+            handles.push(handle);
+        }
+        drop(ready_tx);
+        let mut first_err = None;
+        let mut inner_name = String::new();
+        for _ in 0..opts.engines {
+            match ready_rx.recv() {
+                Ok(Ok(name)) => inner_name = name,
+                Ok(Err(e)) => first_err = Some(e),
+                Err(_) => first_err = Some(anyhow::anyhow!("engine thread died during init")),
+            }
+        }
+        if let Some(e) = first_err {
+            // Tear down: initialized engines observe the stop flag (or the
+            // disconnected queue) and exit.
+            stop.store(true, Ordering::Relaxed);
+            drop(tx);
+            for h in handles {
+                let _ = h.join();
+            }
+            return Err(e);
+        }
+        Ok(EngineBank {
+            tx: Some(tx),
+            handles,
+            stop,
+            stats,
+            dims: factory.dims(),
+            client_name: format!("batched:{inner_name}"),
+            opts,
+        })
+    }
+
+    /// Shared batch counters (occupancy, fill wait).
+    pub fn stats(&self) -> Arc<BatchStats> {
+        self.stats.clone()
+    }
+
+    pub fn opts(&self) -> &BatchOpts {
+        &self.opts
+    }
+
+    /// An [`EngineFactory`] producing cheap [`RemoteEngine`] client handles
+    /// onto this bank — hand it to a [`crate::workers::CorePool`] so every
+    /// logical worker transparently evaluates drifts through the bank.
+    pub fn client_factory(&self) -> Arc<dyn EngineFactory> {
+        Arc::new(RemoteEngineFactory {
+            tx: Mutex::new(self.tx.as_ref().expect("bank already shut down").clone()),
+            dims: self.dims.clone(),
+            name: self.client_name.clone(),
+        })
+    }
+}
+
+impl Drop for EngineBank {
+    fn drop(&mut self) {
+        // The stop flag (polled every STOP_POLL while idle) bounds the
+        // join even if client handles are still alive somewhere; dropping
+        // our sender additionally disconnects the queue once the last
+        // client is gone. In-flight batches finish and reply first.
+        self.stop.store(true, Ordering::Relaxed);
+        drop(self.tx.take());
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Take one batch off the shared queue: block for the first request, then
+/// drain/linger up to `max_batch`. Holding the queue lock through the
+/// linger window is deliberate — arrivals during the window join *this*
+/// batch instead of starting a competing one, and the hold is bounded by
+/// `linger`. Returns the batch plus its fill wait (first arrival →
+/// dispatch), or `None` when the queue has disconnected.
+fn collect_batch(
+    rx: &Mutex<Receiver<DriftRequest>>,
+    stop: &AtomicBool,
+    max_batch: usize,
+    linger: Duration,
+) -> Option<(Vec<DriftRequest>, u64)> {
+    let rx = rx.lock().unwrap();
+    let first = loop {
+        if stop.load(Ordering::Relaxed) {
+            return None;
+        }
+        match rx.recv_timeout(STOP_POLL) {
+            Ok(r) => break r,
+            Err(RecvTimeoutError::Timeout) => continue,
+            Err(RecvTimeoutError::Disconnected) => return None,
+        }
+    };
+    let t0 = Instant::now();
+    let deadline = t0 + linger;
+    let mut batch = vec![first];
+    while batch.len() < max_batch {
+        match rx.try_recv() {
+            Ok(r) => {
+                batch.push(r);
+                continue;
+            }
+            Err(TryRecvError::Disconnected) => break,
+            Err(TryRecvError::Empty) => {}
+        }
+        let now = Instant::now();
+        if now >= deadline {
+            break;
+        }
+        match rx.recv_timeout(deadline - now) {
+            Ok(r) => batch.push(r),
+            Err(_) => break, // linger expired or queue disconnected
+        }
+    }
+    Some((batch, t0.elapsed().as_micros() as u64))
+}
+
+fn engine_main(
+    factory: Arc<dyn EngineFactory>,
+    rx: Arc<Mutex<Receiver<DriftRequest>>>,
+    stop: Arc<AtomicBool>,
+    opts: BatchOpts,
+    stats: Arc<BatchStats>,
+    ready: Sender<anyhow::Result<String>>,
+) {
+    let mut engine = match factory.create() {
+        Ok(e) => {
+            let _ = ready.send(Ok(e.name().to_string()));
+            e
+        }
+        Err(e) => {
+            let _ = ready.send(Err(e));
+            return;
+        }
+    };
+    while let Some((batch, fill_wait_us)) =
+        collect_batch(&rx, &stop, opts.max_batch, opts.linger)
+    {
+        let mut xs = Vec::with_capacity(batch.len());
+        let mut ts = Vec::with_capacity(batch.len());
+        let mut routes = Vec::with_capacity(batch.len());
+        for req in batch {
+            xs.push(req.x);
+            ts.push(req.t);
+            routes.push((req.tag, req.reply));
+        }
+        let outs = engine.drift_batch(&xs, &ts);
+        debug_assert_eq!(outs.len(), routes.len(), "drift_batch must be 1:1");
+        stats.on_batch(routes.len(), fill_wait_us);
+        for ((tag, reply), out) in routes.into_iter().zip(outs) {
+            // A dropped client (its worker detached mid-flight) is fine.
+            let _ = reply.send((tag, out));
+        }
+    }
+}
+
+/// A [`DriftEngine`] client handle onto an [`EngineBank`]: `drift` enqueues
+/// a request and blocks on its private reply channel. One handle per
+/// logical core (handles are cheap; physical engines are shared), so reply
+/// routing is private per core by construction.
+pub struct RemoteEngine {
+    tx: Sender<DriftRequest>,
+    reply_tx: Sender<(usize, Tensor)>,
+    reply_rx: Receiver<(usize, Tensor)>,
+    dims: Vec<usize>,
+    name: String,
+}
+
+impl DriftEngine for RemoteEngine {
+    fn dims(&self) -> Vec<usize> {
+        self.dims.clone()
+    }
+
+    fn drift(&mut self, x: &Tensor, t: f32) -> Tensor {
+        self.tx
+            .send(DriftRequest { x: x.clone(), t, tag: 0, reply: self.reply_tx.clone() })
+            .expect("engine bank closed");
+        self.reply_rx.recv().expect("engine bank dropped in-flight request").1
+    }
+
+    /// Pipelined client-side batch: enqueue everything first (so the bank
+    /// can fuse the whole set), then reassemble replies by tag — the bank
+    /// may split the set across physical engines and answer out of order.
+    fn drift_batch(&mut self, xs: &[Tensor], ts: &[f32]) -> Vec<Tensor> {
+        assert_eq!(xs.len(), ts.len(), "drift_batch length mismatch");
+        for (i, (x, &t)) in xs.iter().zip(ts).enumerate() {
+            self.tx
+                .send(DriftRequest { x: x.clone(), t, tag: i, reply: self.reply_tx.clone() })
+                .expect("engine bank closed");
+        }
+        let mut out: Vec<Option<Tensor>> = (0..xs.len()).map(|_| None).collect();
+        for _ in 0..xs.len() {
+            let (tag, f) = self.reply_rx.recv().expect("engine bank dropped in-flight request");
+            out[tag] = Some(f);
+        }
+        out.into_iter().map(|f| f.expect("missing batched reply")).collect()
+    }
+
+    fn name(&self) -> &str {
+        &self.name
+    }
+}
+
+/// Factory handing out [`RemoteEngine`] clients (one per logical worker).
+struct RemoteEngineFactory {
+    /// `Sender` is wrapped for `Sync` (the `EngineFactory` bound) without
+    /// leaning on newer-toolchain `Sender: Sync` guarantees.
+    tx: Mutex<Sender<DriftRequest>>,
+    dims: Vec<usize>,
+    name: String,
+}
+
+impl EngineFactory for RemoteEngineFactory {
+    fn create(&self) -> anyhow::Result<Box<dyn DriftEngine>> {
+        let tx = self.tx.lock().unwrap().clone();
+        let (reply_tx, reply_rx) = channel();
+        Ok(Box::new(RemoteEngine {
+            tx,
+            reply_tx,
+            reply_rx,
+            dims: self.dims.clone(),
+            name: self.name.clone(),
+        }))
+    }
+
+    fn dims(&self) -> Vec<usize> {
+        self.dims.clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::{ExpOdeFactory, GaussMixture, GaussMixtureFactory};
+    use std::sync::atomic::Ordering;
+    use std::sync::Barrier;
+
+    fn bank(engines: usize, max_batch: usize, linger_us: u64) -> EngineBank {
+        EngineBank::new(
+            Arc::new(GaussMixtureFactory::standard(vec![8], 3, 0)),
+            BatchOpts { engines, max_batch, linger: Duration::from_micros(linger_us) },
+            BatchStats::new(),
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn remote_drift_matches_direct_engine() {
+        let b = bank(2, 4, 100);
+        let mut remote = b.client_factory().create().unwrap();
+        let mut direct = GaussMixture::new(
+            GaussMixtureFactory::standard(vec![8], 3, 0).spec().clone(),
+            0,
+        );
+        let mut rng = crate::util::rng::Rng::seeded(4);
+        for i in 0..10 {
+            let x = Tensor::randn(&[8], &mut rng);
+            let t = i as f32 / 10.0;
+            assert_eq!(remote.drift(&x, t), direct.drift(&x, t), "t={t}");
+        }
+    }
+
+    #[test]
+    fn concurrent_requests_fuse_into_batches() {
+        let b = bank(2, 8, 500_000); // generous linger: one fused wave
+        let stats = b.stats();
+        let factory = b.client_factory();
+        let barrier = Arc::new(Barrier::new(8));
+        let mut handles = Vec::new();
+        for _ in 0..8 {
+            let factory = factory.clone();
+            let barrier = barrier.clone();
+            handles.push(std::thread::spawn(move || {
+                let mut e = factory.create().unwrap();
+                let x = Tensor::full(&[8], 0.5);
+                barrier.wait();
+                e.drift(&x, 0.3)
+            }));
+        }
+        let outs: Vec<Tensor> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        for o in &outs {
+            assert_eq!(o, &outs[0], "same input ⇒ same output across the wave");
+        }
+        assert_eq!(stats.batched_drifts.load(Ordering::Relaxed), 8);
+        assert_eq!(stats.batches.load(Ordering::Relaxed), 1, "wave fused into one forward");
+        assert_eq!(stats.peak_batch.load(Ordering::Relaxed), 8);
+    }
+
+    #[test]
+    fn max_batch_one_serializes_without_fusion() {
+        let b = bank(1, 1, 0);
+        let stats = b.stats();
+        let mut e = b.client_factory().create().unwrap();
+        let x = Tensor::full(&[8], 1.0);
+        for _ in 0..3 {
+            e.drift(&x, 0.5);
+        }
+        assert_eq!(stats.batches.load(Ordering::Relaxed), 3);
+        assert_eq!(stats.batched_drifts.load(Ordering::Relaxed), 3);
+        assert_eq!(stats.peak_batch.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn client_batch_reassembles_in_order() {
+        let b = EngineBank::new(
+            Arc::new(ExpOdeFactory::new(vec![2], 0)),
+            BatchOpts { engines: 2, max_batch: 2, linger: Duration::from_micros(50) },
+            BatchStats::new(),
+        )
+        .unwrap();
+        let mut e = b.client_factory().create().unwrap();
+        // 5 items over max_batch 2 on 2 engines: replies may interleave;
+        // tags must restore order. ExpOde drift = identity ⇒ out[i] == xs[i].
+        let xs: Vec<Tensor> = (0..5).map(|i| Tensor::full(&[2], i as f32)).collect();
+        let ts = vec![0.1f32; 5];
+        let outs = e.drift_batch(&xs, &ts);
+        assert_eq!(outs, xs);
+    }
+
+    #[test]
+    fn bank_shutdown_is_clean() {
+        let b = bank(3, 4, 100);
+        let _client = b.client_factory().create().unwrap();
+        drop(b); // must not hang even with a live (idle) client handle
+    }
+
+    #[test]
+    fn client_factory_reports_inner_dims_and_name() {
+        let b = bank(1, 2, 10);
+        let f = b.client_factory();
+        assert_eq!(f.dims(), vec![8]);
+        let e = f.create().unwrap();
+        assert_eq!(e.name(), "batched:gauss-mixture");
+        assert_eq!(e.dims(), vec![8]);
+    }
+}

@@ -3,8 +3,10 @@
 //! -per-core deployment and respects the xla crate's thread-affinity (PJRT
 //! handles are created and used on the worker's own thread).
 
+mod batcher;
 mod pool;
 mod taskgraph;
 
+pub use batcher::*;
 pub use pool::*;
 pub use taskgraph::*;

@@ -15,7 +15,9 @@
 //! - the [`WorkerSet`] trait, the executor-facing abstraction implemented by
 //!   both the whole pool and a view.
 
+use super::batcher::{BatchOpts, EngineBank};
 use crate::engine::EngineFactory;
+use crate::metrics::BatchStats;
 use crate::solvers::StepRule;
 use crate::tensor::Tensor;
 use std::sync::mpsc::{channel, Receiver, Sender};
@@ -55,6 +57,16 @@ pub trait WorkerSet {
     fn size(&self) -> usize;
     /// Submit a job to set-local worker `idx` (non-blocking).
     fn submit(&self, idx: usize, job: Job);
+    /// Submit one lockstep wave of jobs (non-blocking). Semantically a
+    /// `submit` per entry; issuing the wave in one call keeps the workers'
+    /// drift requests tightly clustered so a batched pool's
+    /// [`EngineBank`] can fuse them within its linger window. Reply
+    /// routing is unchanged — collect as usual.
+    fn submit_batch(&self, jobs: Vec<(usize, Job)>) {
+        for (idx, job) in jobs {
+            self.submit(idx, job);
+        }
+    }
     /// Collect exactly `n` replies (in completion order, local ids).
     fn collect(&self, n: usize) -> Vec<Reply>;
 }
@@ -75,6 +87,10 @@ pub struct CorePool {
     factory: Arc<dyn EngineFactory>,
     rule: Arc<dyn StepRule>,
     dims: Vec<usize>,
+    /// Shared physical engines when the pool is batched; `None` means every
+    /// worker owns a dedicated engine (the classic layout). Dropped after
+    /// `Drop` joins the workers, so the bank always outlives its clients.
+    bank: Option<EngineBank>,
 }
 
 impl CorePool {
@@ -87,6 +103,46 @@ impl CorePool {
         factory: Arc<dyn EngineFactory>,
         rule: Arc<dyn StepRule>,
     ) -> anyhow::Result<CorePool> {
+        Self::build(k, factory, rule, None)
+    }
+
+    /// Like [`CorePool::new`], but the `k` workers are *logical* cores
+    /// multiplexed onto a shared [`EngineBank`] of `opts.engines` physical
+    /// engines: worker drift calls queue into fused `drift_batch`
+    /// invocations (see [`super::batcher`]). Worker count stays fully
+    /// elastic ([`CorePool::attach`]/[`CorePool::detach`] create and drop
+    /// cheap client handles); the physical engine count is fixed at
+    /// construction.
+    pub fn new_batched(
+        k: usize,
+        factory: Arc<dyn EngineFactory>,
+        rule: Arc<dyn StepRule>,
+        opts: BatchOpts,
+    ) -> anyhow::Result<CorePool> {
+        Self::new_batched_with_stats(k, factory, rule, opts, BatchStats::new())
+    }
+
+    /// [`CorePool::new_batched`] with caller-supplied batch counters (the
+    /// dispatcher threads [`crate::metrics::ServingMetrics::batch`] through
+    /// here so `queue_stats` reports occupancy/fill-wait).
+    pub fn new_batched_with_stats(
+        k: usize,
+        factory: Arc<dyn EngineFactory>,
+        rule: Arc<dyn StepRule>,
+        opts: BatchOpts,
+        stats: Arc<BatchStats>,
+    ) -> anyhow::Result<CorePool> {
+        let bank = EngineBank::new(factory, opts, stats)?;
+        let client_factory = bank.client_factory();
+        Self::build(k, client_factory, rule, Some(bank))
+    }
+
+    fn build(
+        k: usize,
+        factory: Arc<dyn EngineFactory>,
+        rule: Arc<dyn StepRule>,
+        bank: Option<EngineBank>,
+    ) -> anyhow::Result<CorePool> {
         let (reply_tx, reply_rx) = channel::<Reply>();
         let dims = factory.dims();
         let mut pool = CorePool {
@@ -96,9 +152,20 @@ impl CorePool {
             factory,
             rule,
             dims,
+            bank,
         };
         pool.attach(k)?;
         Ok(pool)
+    }
+
+    /// Whether workers share an [`EngineBank`] (logical/physical split).
+    pub fn is_batched(&self) -> bool {
+        self.bank.is_some()
+    }
+
+    /// Batch counters of the underlying [`EngineBank`], when batched.
+    pub fn batch_stats(&self) -> Option<Arc<BatchStats>> {
+        self.bank.as_ref().map(|b| b.stats())
     }
 
     /// Live worker count.
@@ -484,6 +551,39 @@ mod tests {
         // View dropped: the worker's next reply lands on the default route.
         let r = p.run_one(0, Job::Drift { x, t: 0.2 });
         assert_eq!(r.worker, 0);
+    }
+
+    #[test]
+    fn batched_pool_matches_dedicated_pool() {
+        use crate::coordinator::{ChordsConfig, ChordsExecutor};
+        use crate::solvers::TimeGrid;
+        use std::time::Duration;
+        let dedicated = pool(4);
+        let batched = CorePool::new_batched(
+            4,
+            Arc::new(ExpOdeFactory::new(vec![2], 0)),
+            Arc::new(Euler),
+            BatchOpts { engines: 2, max_batch: 4, linger: Duration::from_micros(200) },
+        )
+        .unwrap();
+        assert!(batched.is_batched() && !dedicated.is_batched());
+        let x0 = Tensor::from_vec(&[2], vec![1.0, -0.5]);
+        let grid = TimeGrid::uniform(30);
+        let cfg = ChordsConfig::new(vec![0, 6, 12, 20], grid);
+        let a = ChordsExecutor::new(&dedicated, cfg.clone()).run(&x0);
+        let b = ChordsExecutor::new(&batched, cfg).run(&x0);
+        for (oa, ob) in a.outputs.iter().zip(&b.outputs) {
+            assert_eq!(oa.core, ob.core);
+            assert_eq!(oa.output, ob.output, "core {} diverged under batching", oa.core);
+        }
+        let stats = batched.batch_stats().unwrap();
+        use std::sync::atomic::Ordering;
+        assert!(stats.batches.load(Ordering::Relaxed) > 0, "bank saw the waves");
+        assert_eq!(
+            stats.batched_drifts.load(Ordering::Relaxed),
+            b.total_nfes,
+            "every NFE went through the bank"
+        );
     }
 
     #[test]

@@ -1,0 +1,250 @@
+//! Equivalence/property suite for batched drift evaluation: multiplexing
+//! logical CHORDS cores onto shared physical engines must change
+//! throughput, never numerics.
+//!
+//! Invariants pinned here (DESIGN/ISSUE "batching must not change
+//! numerics"):
+//! 1. `DriftEngine::drift_batch` is bit-identical to per-item `drift` for
+//!    every engine kind.
+//! 2. Core 1's output is bit-identical across {sequential solver, CHORDS
+//!    over a dedicated-engine pool, CHORDS over a batched pool} — and in
+//!    fact *every* streamed core output matches, for any engine bank shape
+//!    (engines × max_batch × linger), both engines, several `seq`/grid
+//!    shapes, and higher-order step rules.
+//! 3. Concurrent jobs sharing one batched pool stay isolated: each run is
+//!    identical to the same run on a private dedicated pool.
+//! 4. `stack`/`unstack` round-trip exactly.
+
+use chords::config::ServeConfig;
+use chords::coordinator::{sequential_solve, ChordsConfig, ChordsExecutor};
+use chords::engine::{
+    DriftEngine, ExpOde, ExpOdeFactory, GaussMixture, GaussMixtureFactory, TrackingOde,
+};
+use chords::server::{GenRequest, Router};
+use chords::solvers::{Euler, Heun, TimeGrid};
+use chords::tensor::{ops, Tensor};
+use chords::util::rng::Rng;
+use chords::workers::{BatchOpts, CorePool};
+use std::sync::Arc;
+use std::time::Duration;
+
+fn opts(engines: usize, max_batch: usize, linger_us: u64) -> BatchOpts {
+    BatchOpts { engines, max_batch, linger: Duration::from_micros(linger_us) }
+}
+
+// ---------------------------------------------------------------- engines
+
+/// Invariant 1 at the engine level: batched == per-item, bitwise, for the
+/// overridden engines (exp, mixture) and the trait's default path
+/// (tracking ODE).
+#[test]
+fn drift_batch_bit_identical_per_engine() {
+    let mut rng = Rng::seeded(0xBA7C);
+    let cases: Vec<(Vec<Tensor>, Vec<f32>)> = (0..6)
+        .map(|i| {
+            let b = 1 + i; // batch sizes 1..6
+            let xs: Vec<Tensor> = (0..b).map(|_| Tensor::randn(&[8], &mut rng)).collect();
+            let ts: Vec<f32> = (0..b).map(|_| rng.next_f32()).collect();
+            (xs, ts)
+        })
+        .collect();
+
+    let spec = GaussMixtureFactory::standard(vec![8], 3, 0).spec().clone();
+    let mut engines: Vec<Box<dyn DriftEngine>> = vec![
+        Box::new(ExpOde::new(vec![8], 0)),
+        Box::new(GaussMixture::new(spec.clone(), 0)),
+        Box::new(TrackingOde::new(vec![8], 4.0, 3.0)),
+    ];
+    let mut references: Vec<Box<dyn DriftEngine>> = vec![
+        Box::new(ExpOde::new(vec![8], 0)),
+        Box::new(GaussMixture::new(spec, 0)),
+        Box::new(TrackingOde::new(vec![8], 4.0, 3.0)),
+    ];
+    for (eng, reference) in engines.iter_mut().zip(references.iter_mut()) {
+        for (xs, ts) in &cases {
+            let fused = eng.drift_batch(xs, ts);
+            assert_eq!(fused.len(), xs.len());
+            for (i, f) in fused.iter().enumerate() {
+                let single = reference.drift(&xs[i], ts[i]);
+                assert_eq!(f, &single, "{}: item {i} diverged", eng.name());
+            }
+        }
+    }
+}
+
+// ------------------------------------------------------------- executors
+
+/// Run CHORDS over a pool and return the per-core outputs (core K first).
+fn chords_outputs(pool: &CorePool, seq: &[usize], steps: usize, x0: &Tensor) -> Vec<Tensor> {
+    let cfg = ChordsConfig::new(seq.to_vec(), TimeGrid::uniform(steps));
+    let exec = ChordsExecutor::new(pool, cfg);
+    exec.run(x0).outputs.into_iter().map(|o| o.output).collect()
+}
+
+/// Invariant 2: sequential == unbatched CHORDS core 1 == batched CHORDS
+/// core 1 (bitwise), and every other streamed output matches between the
+/// batched and unbatched runs, across engine kinds, bank shapes, and
+/// seq/grid shapes.
+#[test]
+fn core1_bit_identity_across_sequential_unbatched_batched() {
+    let shapes: &[(&[usize], usize)] = &[
+        (&[0], 20),
+        (&[0, 8, 16, 32], 50),
+        (&[0, 6, 12, 26], 40),
+        (&[0, 3, 7, 19], 25),
+    ];
+    let banks = [opts(1, 1, 0), opts(1, 4, 100), opts(2, 4, 100), opts(3, 8, 500)];
+    for engine in ["exp", "mixture"] {
+        let factory = || -> Arc<dyn chords::engine::EngineFactory> {
+            match engine {
+                "exp" => Arc::new(ExpOdeFactory::new(vec![6], 0)),
+                _ => Arc::new(GaussMixtureFactory::standard(vec![6], 11, 0)),
+            }
+        };
+        let mut rng = Rng::seeded(42);
+        for &(seq, steps) in shapes {
+            let k = seq.len();
+            let x0 = Tensor::randn(&[6], &mut rng);
+            let dedicated = CorePool::new(k, factory(), Arc::new(Euler)).unwrap();
+            let oracle = sequential_solve(&dedicated, &TimeGrid::uniform(steps), &x0);
+            let unbatched = chords_outputs(&dedicated, seq, steps, &x0);
+            assert_eq!(
+                unbatched.last().unwrap(),
+                &oracle.output,
+                "{engine}: unbatched core 1 vs sequential (seq {seq:?})"
+            );
+            for bank in &banks {
+                let batched_pool =
+                    CorePool::new_batched(k, factory(), Arc::new(Euler), bank.clone()).unwrap();
+                let batched = chords_outputs(&batched_pool, seq, steps, &x0);
+                assert_eq!(batched.len(), unbatched.len());
+                for (core_out, (b, u)) in batched.iter().zip(&unbatched).enumerate() {
+                    assert_eq!(
+                        b, u,
+                        "{engine}: output {core_out} diverged under bank {bank:?} (seq {seq:?})"
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Invariant 2 for a 2-NFE-per-step rule: Heun routes two drift calls per
+/// step through the bank; exactness must survive.
+#[test]
+fn heun_rule_exact_through_batched_pool() {
+    let mut rng = Rng::seeded(29);
+    let x0 = Tensor::randn(&[4], &mut rng);
+    let seq = vec![0usize, 5, 11, 21];
+    let dedicated =
+        CorePool::new(4, Arc::new(ExpOdeFactory::new(vec![4], 0)), Arc::new(Heun)).unwrap();
+    let batched = CorePool::new_batched(
+        4,
+        Arc::new(ExpOdeFactory::new(vec![4], 0)),
+        Arc::new(Heun),
+        opts(2, 8, 200),
+    )
+    .unwrap();
+    let oracle = sequential_solve(&dedicated, &TimeGrid::uniform(30), &x0);
+    let a = chords_outputs(&dedicated, &seq, 30, &x0);
+    let b = chords_outputs(&batched, &seq, 30, &x0);
+    assert_eq!(a, b, "streamed outputs diverged under batching with Heun");
+    assert_eq!(b.last().unwrap(), &oracle.output, "core 1 vs sequential with Heun");
+}
+
+/// Invariant 3: two concurrent jobs multiplexed onto one shared batched
+/// pool (disjoint views, fused drift waves) each produce exactly what they
+/// produce on a private dedicated pool — per-core routing never mixes.
+#[test]
+fn concurrent_jobs_on_shared_batched_pool_stay_isolated() {
+    let factory = || Arc::new(GaussMixtureFactory::standard(vec![8], 5, 0));
+    let shared = CorePool::new_batched(8, factory(), Arc::new(Euler), opts(2, 8, 300)).unwrap();
+    let seq = vec![0usize, 8, 16, 32];
+    let mut rng = Rng::seeded(77);
+    let x_a = Tensor::randn(&[8], &mut rng);
+    let x_b = Tensor::randn(&[8], &mut rng);
+
+    // References on private dedicated pools.
+    let private = CorePool::new(4, factory(), Arc::new(Euler)).unwrap();
+    let ref_a = chords_outputs(&private, &seq, 50, &x_a);
+    let ref_b = chords_outputs(&private, &seq, 50, &x_b);
+
+    // Views own their routing state, so each thread takes one by move
+    // (PoolView is Send but deliberately not Sync — private reply channel).
+    let view_a = shared.view(&[0, 1, 2, 3]);
+    let view_b = shared.view(&[4, 5, 6, 7]);
+    let seq_a = seq.clone();
+    let seq_b = seq.clone();
+    let x_a2 = x_a.clone();
+    let x_b2 = x_b.clone();
+    let ha = std::thread::spawn(move || {
+        let cfg = ChordsConfig::new(seq_a, TimeGrid::uniform(50));
+        let exec = ChordsExecutor::new(&view_a, cfg);
+        exec.run(&x_a2).outputs.into_iter().map(|o| o.output).collect::<Vec<_>>()
+    });
+    let hb = std::thread::spawn(move || {
+        let cfg = ChordsConfig::new(seq_b, TimeGrid::uniform(50));
+        let exec = ChordsExecutor::new(&view_b, cfg);
+        exec.run(&x_b2).outputs.into_iter().map(|o| o.output).collect::<Vec<_>>()
+    });
+    let got_a = ha.join().unwrap();
+    let got_b = hb.join().unwrap();
+    assert_eq!(got_a, ref_a, "job A diverged on the shared batched pool");
+    assert_eq!(got_b, ref_b, "job B diverged on the shared batched pool");
+    let stats = shared.batch_stats().unwrap();
+    use std::sync::atomic::Ordering;
+    assert!(
+        stats.batches.load(Ordering::Relaxed)
+            < stats.batched_drifts.load(Ordering::Relaxed),
+        "cross-job waves fused at least once"
+    );
+}
+
+/// Invariant 2 end-to-end through the serving stack: the same request
+/// produces bit-identical latents with batching off and on.
+#[test]
+fn router_outputs_identical_with_and_without_batching() {
+    let run = |engines_per_model: usize| {
+        let router = Router::with_opts(
+            "artifacts",
+            ServeConfig {
+                total_cores: 4,
+                engines_per_model,
+                max_batch: 4,
+                batch_linger_us: 150,
+                ..ServeConfig::default()
+            },
+        );
+        let req = GenRequest {
+            model: "gauss-mix".into(),
+            steps: 40,
+            cores: 4,
+            seed: 9,
+            ..Default::default()
+        };
+        router.generate(&req, |_, _, _| {}).unwrap().final_output
+    };
+    assert_eq!(run(0), run(2), "serving outputs diverged under batching");
+}
+
+// ------------------------------------------------------------ tensor ops
+
+/// Invariant 4: seeded random-shape round-trip property for stack/unstack.
+#[test]
+fn stack_unstack_roundtrip_property() {
+    let mut rng = Rng::seeded(0x57AC);
+    for case in 0..40 {
+        let rank = 1 + rng.next_below(3); // 1..=3
+        let dims: Vec<usize> = (0..rank).map(|_| 1 + rng.next_below(5)).collect();
+        let n = 1 + rng.next_below(6);
+        let xs: Vec<Tensor> = (0..n).map(|_| Tensor::randn(&dims, &mut rng)).collect();
+        let stacked = ops::stack(&xs);
+        let mut want_dims = vec![n];
+        want_dims.extend_from_slice(&dims);
+        assert_eq!(stacked.dims(), want_dims.as_slice(), "case {case}");
+        let back = ops::unstack(&stacked);
+        assert_eq!(back, xs, "case {case}: unstack(stack(xs)) != xs");
+        // And the other direction: stack(unstack(s)) == s.
+        assert_eq!(ops::stack(&back), stacked, "case {case}: stack(unstack(s)) != s");
+    }
+}
