@@ -1,0 +1,99 @@
+//! Adaptive batching under mixed load: two models with different per-model
+//! engine budgets served concurrently, with the controller's decisions
+//! observable through `queue_stats`.
+//!
+//! The heavy model (`gauss-mix-slow`, 300µs simulated forward — the cost a
+//! GPU would charge per NFE) gets a 2-engine bank with deep fusion and the
+//! adaptive controller enabled, deliberately started from the worst linger
+//! setting (0µs). The light model (`exp-ode-slow`) gets a 1-engine,
+//! `max_batch = 1` bank: its requests are never delayed by a linger window,
+//! no matter how hard the heavy model is driven.
+//!
+//! ```sh
+//! cargo run --release --example adaptive_serving
+//! ```
+
+use chords::config::ServeConfig;
+use chords::server::{GenRequest, Router};
+use chords::util::json::Json;
+use std::sync::Arc;
+
+fn main() -> anyhow::Result<()> {
+    let mut cfg = ServeConfig {
+        total_cores: 12,
+        queue_cap: 64,
+        // Global default shape; both models below override it with their
+        // own EngineBudget, exactly like `chords serve --model-budget …`.
+        engines_per_model: 1,
+        max_batch: 4,
+        batch_linger_us: 150,
+        ..ServeConfig::default()
+    };
+    // Heavy model: 2 engines, fuse up to 8 drifts, adaptive — the
+    // controller will grow the linger from 0 as it observes low occupancy
+    // with cheap fill waits (AIMD growth), and would shrink it the moment
+    // fill wait started to dominate the 300µs forward (AIMD shrink).
+    cfg.set("model_budget", "gauss-mix-slow=2:8:0:adaptive").map_err(anyhow::Error::msg)?;
+    // Light model: no fusion, no linger — a latency floor the heavy
+    // model's policy can never touch, because banks are per-model.
+    cfg.set("model_budget", "exp-ode-slow=1:1:0").map_err(anyhow::Error::msg)?;
+
+    let router = Arc::new(Router::with_opts("artifacts", cfg));
+
+    // Mixed load: two 4-core heavy clients and one 2-core light client.
+    let mut handles = Vec::new();
+    for (model, clients, cores, reqs) in
+        [("gauss-mix-slow", 2usize, 4usize, 24usize), ("exp-ode-slow", 1, 2, 24)]
+    {
+        for c in 0..clients {
+            let router = router.clone();
+            let model = model.to_string();
+            handles.push(std::thread::spawn(move || {
+                for i in 0..reqs {
+                    let req = GenRequest {
+                        model: model.clone(),
+                        steps: 50,
+                        cores,
+                        seed: (c * 100 + i) as u64,
+                        ..Default::default()
+                    };
+                    router.generate(&req, |_, _, _| {}).expect("request failed");
+                }
+            }));
+        }
+    }
+    for h in handles {
+        h.join().expect("client thread panicked");
+    }
+
+    // Per-model bank shapes actually resolved by the dispatcher.
+    let d = router.dispatcher();
+    for model in ["gauss-mix-slow", "exp-ode-slow"] {
+        let engines = d.model_bank_engines(model).expect("batched model");
+        let tuning = d.model_tuning(model).expect("batched model");
+        let stats = d.model_batch_stats(model).expect("batched model");
+        println!(
+            "{model:<16} engines={engines} max_batch={:<2} linger={:>4}µs | occupancy {:4.2} fill_wait {:6.1}µs peak {}",
+            tuning.max_batch(),
+            tuning.linger_us(), // the heavy model's linger grew from 0
+            stats.mean_occupancy(),
+            stats.mean_fill_wait_us(),
+            stats.peak_batch.load(std::sync::atomic::Ordering::Relaxed),
+        );
+    }
+
+    // The controller's decisions are counters on the ordinary metrics
+    // surface — over the wire this is `{"op":"queue_stats"}`.
+    let j = router.queue_stats();
+    let g = |k: &str| j.get(k).and_then(Json::as_f64).unwrap_or(0.0);
+    println!(
+        "controller: models={} retunes={} (linger +{} −{}, max_batch +{} −{})",
+        g("adaptive_models"),
+        g("adaptive_retunes"),
+        g("adaptive_linger_grow"),
+        g("adaptive_linger_shrink"),
+        g("adaptive_batch_grow"),
+        g("adaptive_batch_shrink"),
+    );
+    Ok(())
+}

@@ -15,6 +15,12 @@
 //! forward multiplies throughput — `max_batch ≥ 4` must beat the unfused
 //! `max_batch = 1` baseline by well over 1.5× on the same two engines.
 //!
+//! Part 3 keeps part 2's offered load and bank shape but compares *static*
+//! linger settings ({0, 50, 200, 800}µs) against the adaptive batching
+//! controller started from the worst static point (linger 0): adaptive must
+//! land within 5% of the best static throughput with no hand-tuning. Rows
+//! append to the same table with `"bench":"serving_adaptive"`.
+//!
 //! One JSON object per configuration (the repo's JSON bench-table
 //! convention), preceded by a human-readable line; the full table is also
 //! written to `BENCH_serving.json` as the perf-trajectory baseline.
@@ -38,6 +44,18 @@ fn drive(
     concurrent: usize,
     cores: usize,
 ) -> (Vec<f64>, f64, Json) {
+    drive_n(cfg, model, concurrent, cores, REQS_PER_CLIENT)
+}
+
+/// [`drive`] with an explicit request count per client (the adaptive sweep
+/// needs longer runs so the controller's converged regime dominates).
+fn drive_n(
+    cfg: ServeConfig,
+    model: &str,
+    concurrent: usize,
+    cores: usize,
+    reqs_per_client: usize,
+) -> (Vec<f64>, f64, Json) {
     let router = Arc::new(Router::with_opts("artifacts", cfg));
     let barrier = Arc::new(Barrier::new(concurrent));
     let t0 = Instant::now();
@@ -48,8 +66,8 @@ fn drive(
         let model = model.to_string();
         handles.push(std::thread::spawn(move || {
             barrier.wait();
-            let mut lats = Vec::with_capacity(REQS_PER_CLIENT);
-            for i in 0..REQS_PER_CLIENT {
+            let mut lats = Vec::with_capacity(reqs_per_client);
+            for i in 0..reqs_per_client {
                 let req = GenRequest {
                     model: model.clone(),
                     steps: 50,
@@ -162,6 +180,57 @@ fn sweep_batching(engines: usize, max_batch: usize) -> Json {
     ])
 }
 
+/// Adaptive-vs-static sweep: the part-2 offered load (4 concurrent
+/// same-model clients on `gauss-mix-slow`, 2 engines, max_batch 8), but
+/// longer runs, comparing fixed linger settings against the adaptive
+/// controller started from the *worst* static point (linger 0). Rows share
+/// the serving_batching schema plus `adaptive`/`adaptive_retunes` columns.
+fn sweep_adaptive(adaptive: bool, linger_us: u64) -> Json {
+    let concurrent = 4usize;
+    let cfg = ServeConfig {
+        total_cores: 16,
+        queue_cap: 256,
+        engines_per_model: 2,
+        max_batch: 8,
+        batch_linger_us: linger_us,
+        adaptive_batching: adaptive,
+        ..ServeConfig::default()
+    };
+    let (lats, wall_s, stats) = drive_n(cfg, "gauss-mix-slow", concurrent, 4, 12);
+    let s = Summary::of(&lats);
+    let mode = if adaptive { "adaptive".to_string() } else { format!("static@{linger_us}µs") };
+    println!(
+        "{mode:<14} {:>3} reqs in {wall_s:6.2}s → {:6.2} req/s | p50 {:7.1}ms | occupancy {:4.2} fill_wait {:6.1}µs retunes {}",
+        lats.len(),
+        lats.len() as f64 / wall_s,
+        s.median * 1e3,
+        stat(&stats, "mean_batch_occupancy"),
+        stat(&stats, "mean_fill_wait_us"),
+        stat(&stats, "adaptive_retunes"),
+    );
+    Json::obj(vec![
+        ("bench", Json::str("serving_adaptive")),
+        ("model", Json::str("gauss-mix-slow")),
+        ("total_cores", Json::num(16.0)),
+        ("concurrent", Json::num(concurrent as f64)),
+        ("engines_per_model", Json::num(2.0)),
+        ("max_batch", Json::num(8.0)),
+        ("batch_linger_us", Json::num(linger_us as f64)),
+        ("adaptive", Json::Bool(adaptive)),
+        ("requests", Json::num(lats.len() as f64)),
+        ("wall_s", Json::num(wall_s)),
+        ("throughput_rps", Json::num(lats.len() as f64 / wall_s)),
+        ("p50_ms", Json::num(s.median * 1e3)),
+        ("p99_ms", Json::num(s.p99 * 1e3)),
+        ("drift_batches", Json::num(stat(&stats, "drift_batches"))),
+        ("batched_drifts", Json::num(stat(&stats, "batched_drifts"))),
+        ("mean_batch_occupancy", Json::num(stat(&stats, "mean_batch_occupancy"))),
+        ("mean_fill_wait_us", Json::num(stat(&stats, "mean_fill_wait_us"))),
+        ("peak_batch", Json::num(stat(&stats, "peak_batch"))),
+        ("adaptive_retunes", Json::num(stat(&stats, "adaptive_retunes"))),
+    ])
+}
+
 fn main() {
     println!("== serving benches: offered-load sweep over the elastic scheduler ==");
     let mut rows = Vec::new();
@@ -189,6 +258,24 @@ fn main() {
         println!(
             "batching speedup (max_batch≥4 vs max_batch=1, same 2 engines): {:.2}x",
             best_batched_rps / unbatched_rps
+        );
+    }
+
+    println!("\n== adaptive benches: controller vs static linger sweep ==");
+    let mut best_static_rps = 0.0f64;
+    for linger in [0u64, 50, 200, 800] {
+        let row = sweep_adaptive(false, linger);
+        let rps = row.get("throughput_rps").and_then(|v| v.as_f64()).unwrap_or(0.0);
+        best_static_rps = best_static_rps.max(rps);
+        rows.push(row);
+    }
+    let row = sweep_adaptive(true, 0);
+    let adaptive_rps = row.get("throughput_rps").and_then(|v| v.as_f64()).unwrap_or(0.0);
+    rows.push(row);
+    if best_static_rps > 0.0 {
+        println!(
+            "adaptive vs best static throughput: {:.2}x (acceptance: ≥ 0.95x without hand-tuning)",
+            adaptive_rps / best_static_rps
         );
     }
 

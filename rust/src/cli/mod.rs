@@ -4,6 +4,10 @@
 
 use std::collections::BTreeMap;
 
+/// Boolean flags that never consume the following token as a value.
+const BARE_FLAGS: &[&str] =
+    &["trace", "verbose", "quiet", "markdown", "json", "no-reclaim", "adaptive-batching"];
+
 /// Parsed command line: a subcommand, positional args, `--flags`, and
 /// `key=value` overrides.
 #[derive(Clone, Debug, Default)]
@@ -26,10 +30,7 @@ impl Args {
                 if let Some((k, v)) = name.split_once('=') {
                     args.flags.insert(k.to_string(), v.to_string());
                 } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false)
-                    && !matches!(
-                        name,
-                        "trace" | "verbose" | "quiet" | "markdown" | "json" | "no-reclaim"
-                    )
+                    && !BARE_FLAGS.contains(&name)
                 {
                     let v = it.next().unwrap();
                     args.flags.insert(name.to_string(), v);
@@ -88,7 +89,7 @@ pub fn help_text() -> String {
         ("reward-sweep", "verify Thm 2.5 / Def 2.4 on the exponential-ODE reward"),
         (
             "serve",
-            "start the generation server (--port 7077 --total-cores 8 --queue-cap 64 [--no-reclaim] [--engines-per-model E --max-batch B --batch-linger-us U])",
+            "start the generation server (--port 7077 --total-cores 8 --queue-cap 64 [--no-reclaim] [--engines-per-model E --max-batch B --batch-linger-us U] [--adaptive-batching] [--model-budget m=E:B:L[:adaptive]]; see README \"Tuning & adaptive batching\")",
         ),
         ("inspect-artifacts", "list AOT artifacts and validate the manifest"),
         ("help", "this message"),
@@ -136,6 +137,23 @@ mod tests {
         assert_eq!(a.flag_parsed("queue-cap", 64usize).unwrap(), 32);
         assert!(a.has_flag("no-reclaim"));
         assert_eq!(a.flag_parsed("port", 0u16).unwrap(), 7077);
+    }
+
+    #[test]
+    fn adaptive_batching_is_a_bare_flag() {
+        // `--adaptive-batching` must not swallow a following value token.
+        let a = parse(&[
+            "serve",
+            "--adaptive-batching",
+            "--model-budget",
+            "gauss-mix-slow=2:8:200:adaptive",
+        ]);
+        assert!(a.has_flag("adaptive-batching"));
+        assert_eq!(a.flag("adaptive-batching"), Some("true"));
+        assert_eq!(a.flag("model-budget"), Some("gauss-mix-slow=2:8:200:adaptive"));
+        let a = parse(&["serve", "--adaptive-batching", "positional"]);
+        assert!(a.has_flag("adaptive-batching"));
+        assert_eq!(a.positional, vec!["positional".to_string()]);
     }
 
     #[test]

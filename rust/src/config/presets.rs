@@ -1,5 +1,69 @@
 //! Model presets mirroring the paper's evaluation models.
 
+/// A per-model engine-bank budget: how many physical engines the serving
+/// dispatcher builds for this model and the fusion knobs they start with.
+///
+/// Heavy and light models deserve different bank shapes — a 13B video DiT
+/// saturates throughput with few engines and deep fusion, while a small
+/// image model prefers more-but-narrower batching. Budgets can be declared
+/// at preset level ([`ModelPreset::engine_budget`]) or overridden per
+/// deployment via `ServeConfig::model_budgets` (the `--model-budget` serve
+/// flag); see `crate::sched::DispatchOpts` for the precedence rules.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct EngineBudget {
+    /// Physical engines in the model's bank. `0` in an override forces the
+    /// classic dedicated-engine layout (no batching) for this model.
+    pub engines: usize,
+    /// Initial `max_batch` (most drifts fused per engine invocation, ≥ 1).
+    pub max_batch: usize,
+    /// Initial linger window in microseconds (how long a filling batch
+    /// waits for stragglers).
+    pub linger_us: u64,
+    /// Opt this model's bank into the adaptive batching controller (the
+    /// global `--adaptive-batching` flag opts every batched model in).
+    pub adaptive: bool,
+}
+
+impl EngineBudget {
+    /// Parse one `model=engines:max_batch:linger_us[:adaptive|:static]`
+    /// override spec (the `--model-budget` CLI value), e.g.
+    /// `gauss-mix-slow=2:8:200:adaptive`.
+    pub fn parse_spec(spec: &str) -> Result<(String, EngineBudget), String> {
+        let (model, rest) = spec
+            .split_once('=')
+            .ok_or_else(|| format!("model budget '{spec}': expected model=E:B:L[:adaptive]"))?;
+        let model = model.trim();
+        if model.is_empty() {
+            return Err(format!("model budget '{spec}': empty model name"));
+        }
+        let parts: Vec<&str> = rest.split(':').collect();
+        if parts.len() < 3 || parts.len() > 4 {
+            return Err(format!(
+                "model budget '{spec}': expected engines:max_batch:linger_us[:adaptive]"
+            ));
+        }
+        let engines: usize =
+            parts[0].parse().map_err(|e| format!("model budget '{spec}': engines: {e}"))?;
+        let max_batch: usize =
+            parts[1].parse().map_err(|e| format!("model budget '{spec}': max_batch: {e}"))?;
+        if max_batch == 0 {
+            return Err(format!("model budget '{spec}': max_batch must be ≥ 1"));
+        }
+        let linger_us: u64 =
+            parts[2].parse().map_err(|e| format!("model budget '{spec}': linger_us: {e}"))?;
+        let adaptive = match parts.get(3).copied() {
+            None | Some("static") => false,
+            Some("adaptive") => true,
+            Some(other) => {
+                return Err(format!(
+                    "model budget '{spec}': expected 'adaptive' or 'static', got '{other}'"
+                ))
+            }
+        };
+        Ok((model.to_string(), EngineBudget { engines, max_batch, linger_us, adaptive }))
+    }
+}
+
 /// How the denoiser output parameterizes the PF-ODE drift.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Parameterization {
@@ -14,7 +78,7 @@ pub enum Parameterization {
 /// The backing compute for `f_θ`.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum EngineKind {
-    /// AOT-compiled DiT via PJRT (artifacts/<preset>/drift.hlo.txt).
+    /// AOT-compiled DiT via PJRT (`artifacts/<preset>/drift.hlo.txt`).
     HloDit,
     /// Closed-form exponential ODE `f(x,t)=x` (theory experiments).
     AnalyticExp,
@@ -50,6 +114,12 @@ pub struct ModelPreset {
     /// Default cores the serving scheduler grants when a request does not
     /// ask for a specific K (see `server::GenRequest::cores` = 0).
     pub serve_cores: usize,
+    /// Per-model engine-bank shape for batched serving. Applied only when
+    /// serving-wide batching is enabled (`--engines-per-model` > 0 or
+    /// `--adaptive-batching`), where it takes precedence over the global
+    /// knobs; `None` falls back to them. Deployment overrides
+    /// (`--model-budget`) outrank both and apply unconditionally.
+    pub engine_budget: Option<EngineBudget>,
 }
 
 impl ModelPreset {
@@ -84,6 +154,12 @@ pub const PRESETS: &[ModelPreset] = &[
         sim_cost_us: 0,
         weight_seed: 101,
         serve_cores: 4,
+        engine_budget: Some(EngineBudget {
+            engines: 2,
+            max_batch: 8,
+            linger_us: 250,
+            adaptive: true,
+        }),
     },
     ModelPreset {
         name: "wan-sim",
@@ -98,6 +174,12 @@ pub const PRESETS: &[ModelPreset] = &[
         sim_cost_us: 0,
         weight_seed: 102,
         serve_cores: 4,
+        engine_budget: Some(EngineBudget {
+            engines: 2,
+            max_batch: 8,
+            linger_us: 250,
+            adaptive: true,
+        }),
     },
     ModelPreset {
         name: "cogvideo-sim",
@@ -112,6 +194,12 @@ pub const PRESETS: &[ModelPreset] = &[
         sim_cost_us: 0,
         weight_seed: 103,
         serve_cores: 4,
+        engine_budget: Some(EngineBudget {
+            engines: 2,
+            max_batch: 8,
+            linger_us: 250,
+            adaptive: true,
+        }),
     },
     // ---- image (Table 2) ----
     ModelPreset {
@@ -127,6 +215,12 @@ pub const PRESETS: &[ModelPreset] = &[
         sim_cost_us: 0,
         weight_seed: 104,
         serve_cores: 4,
+        engine_budget: Some(EngineBudget {
+            engines: 1,
+            max_batch: 4,
+            linger_us: 100,
+            adaptive: true,
+        }),
     },
     ModelPreset {
         name: "flux-sim",
@@ -141,6 +235,12 @@ pub const PRESETS: &[ModelPreset] = &[
         sim_cost_us: 0,
         weight_seed: 105,
         serve_cores: 4,
+        engine_budget: Some(EngineBudget {
+            engines: 1,
+            max_batch: 4,
+            linger_us: 100,
+            adaptive: true,
+        }),
     },
     // ---- analytic (theory / property tests / fast benches) ----
     ModelPreset {
@@ -156,7 +256,11 @@ pub const PRESETS: &[ModelPreset] = &[
         sim_cost_us: 0,
         weight_seed: 0,
         serve_cores: 2,
+        engine_budget: None,
     },
+    // The preset-level budget here is deliberate: gauss-mix is the cheapest
+    // engine that can exercise the preset-budget path in tests without AOT
+    // artifacts. It is dormant unless serving-wide batching is enabled.
     ModelPreset {
         name: "gauss-mix",
         simulates: "Gaussian-mixture PF-ODE with exact NLL quality metric",
@@ -170,6 +274,12 @@ pub const PRESETS: &[ModelPreset] = &[
         sim_cost_us: 0,
         weight_seed: 7,
         serve_cores: 2,
+        engine_budget: Some(EngineBudget {
+            engines: 2,
+            max_batch: 4,
+            linger_us: 100,
+            adaptive: false,
+        }),
     },
     // Mixture engine with a simulated per-NFE cost: the batching benches'
     // model. The fixed 300µs forward dominates the tiny closed-form math,
@@ -188,6 +298,7 @@ pub const PRESETS: &[ModelPreset] = &[
         sim_cost_us: 300,
         weight_seed: 7,
         serve_cores: 4,
+        engine_budget: None,
     },
     // Analytic engine with a simulated per-NFE cost: jobs take long enough
     // (~steps × sim_cost) that scheduler concurrency, queue backpressure,
@@ -206,6 +317,7 @@ pub const PRESETS: &[ModelPreset] = &[
         sim_cost_us: 300,
         weight_seed: 0,
         serve_cores: 4,
+        engine_budget: None,
     },
 ];
 
@@ -260,6 +372,42 @@ mod tests {
             assert!(p.serve_cores >= 1, "{}", p.name);
             assert!(p.serve_cores <= p.default_steps, "{}", p.name);
         }
+    }
+
+    #[test]
+    fn preset_budgets_are_sane() {
+        for p in PRESETS {
+            if let Some(b) = p.engine_budget {
+                assert!(b.engines >= 1, "{}: preset budgets must declare engines", p.name);
+                assert!(b.max_batch >= 1, "{}", p.name);
+            }
+        }
+        // Heavy video DiTs declare deeper banks than light image DiTs.
+        let heavy = preset("hunyuan-sim").unwrap().engine_budget.unwrap();
+        let light = preset("flux-sim").unwrap().engine_budget.unwrap();
+        assert!(heavy.engines > light.engines);
+        assert!(heavy.max_batch > light.max_batch);
+        // Analytic presets stay on the global knobs (tests/benches sweep
+        // them explicitly and must not be overridden by preset budgets).
+        assert!(preset("gauss-mix-slow").unwrap().engine_budget.is_none());
+        assert!(preset("exp-ode-slow").unwrap().engine_budget.is_none());
+    }
+
+    #[test]
+    fn budget_spec_parses() {
+        let (m, b) = EngineBudget::parse_spec("gauss-mix-slow=2:8:200:adaptive").unwrap();
+        assert_eq!(m, "gauss-mix-slow");
+        assert_eq!(b, EngineBudget { engines: 2, max_batch: 8, linger_us: 200, adaptive: true });
+        let (_, b) = EngineBudget::parse_spec("exp-ode-slow=1:1:0").unwrap();
+        assert!(!b.adaptive);
+        assert_eq!(b.engines, 1);
+        let (_, b) = EngineBudget::parse_spec("m=0:4:50:static").unwrap();
+        assert_eq!(b.engines, 0, "engines=0 forces the dedicated layout");
+        assert!(EngineBudget::parse_spec("no-equals").is_err());
+        assert!(EngineBudget::parse_spec("m=1:0:0").is_err(), "max_batch 0 rejected");
+        assert!(EngineBudget::parse_spec("m=1:2").is_err());
+        assert!(EngineBudget::parse_spec("m=1:2:3:bogus").is_err());
+        assert!(EngineBudget::parse_spec("=1:2:3").is_err());
     }
 
     #[test]

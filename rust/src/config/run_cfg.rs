@@ -1,5 +1,6 @@
 //! Run configuration: solver method, cores, steps, init sequence choice.
 
+use super::presets::EngineBudget;
 use crate::coordinator::init_seq::InitStrategy;
 
 /// Which parallel sampling method to run.
@@ -133,6 +134,16 @@ pub struct ServeConfig {
     /// Microseconds a filling batch waits for stragglers after its first
     /// request (bounded dispatch latency).
     pub batch_linger_us: u64,
+    /// Enable the adaptive batching controller (`--adaptive-batching`):
+    /// every batched model's `max_batch`/linger are retuned online from
+    /// observed occupancy and fill wait instead of staying at the static
+    /// knobs. Individual models can also opt in via
+    /// [`EngineBudget::adaptive`].
+    pub adaptive_batching: bool,
+    /// Per-model [`EngineBudget`] overrides (`--model-budget`), highest
+    /// precedence over preset budgets and the global batching knobs. At
+    /// most one entry per model (later `set` calls replace earlier ones).
+    pub model_budgets: Vec<(String, EngineBudget)>,
 }
 
 impl Default for ServeConfig {
@@ -146,6 +157,8 @@ impl Default for ServeConfig {
             engines_per_model: 0,
             max_batch: 8,
             batch_linger_us: 150,
+            adaptive_batching: false,
+            model_budgets: Vec::new(),
         }
     }
 }
@@ -192,6 +205,19 @@ impl ServeConfig {
             "batch_linger_us" | "batch-linger-us" => {
                 self.batch_linger_us =
                     value.parse().map_err(|e| format!("batch_linger_us: {e}"))?
+            }
+            "adaptive_batching" | "adaptive-batching" => {
+                self.adaptive_batching =
+                    value.parse().map_err(|e| format!("adaptive_batching: {e}"))?
+            }
+            "model_budget" | "model-budget" => {
+                // Comma-separated list of model=E:B:L[:adaptive] specs; a
+                // repeated model replaces its earlier entry.
+                for spec in value.split(',').filter(|s| !s.trim().is_empty()) {
+                    let (model, budget) = EngineBudget::parse_spec(spec.trim())?;
+                    self.model_budgets.retain(|(m, _)| *m != model);
+                    self.model_budgets.push((model, budget));
+                }
             }
             _ => return Err(format!("unknown serve config key '{key}'")),
         }
@@ -240,6 +266,29 @@ mod tests {
         assert!(s.set("total_cores", "0").is_err());
         assert!(s.set("queue_cap", "0").is_err());
         assert!(s.set("bogus", "1").is_err());
+    }
+
+    #[test]
+    fn serve_config_adaptive_and_budget_knobs() {
+        let s = ServeConfig::default();
+        assert!(!s.adaptive_batching, "adaptive is opt-in");
+        assert!(s.model_budgets.is_empty());
+        let mut s = ServeConfig::default();
+        s.set("adaptive-batching", "true").unwrap();
+        s.set("model_budget", "gauss-mix-slow=2:8:200:adaptive,exp-ode-slow=1:1:0").unwrap();
+        assert!(s.adaptive_batching);
+        assert_eq!(s.model_budgets.len(), 2);
+        assert_eq!(s.model_budgets[0].0, "gauss-mix-slow");
+        assert_eq!(s.model_budgets[0].1.engines, 2);
+        assert!(s.model_budgets[0].1.adaptive);
+        // Re-setting a model replaces its earlier entry.
+        s.set("model-budget", "gauss-mix-slow=4:16:300").unwrap();
+        assert_eq!(s.model_budgets.len(), 2);
+        let gm = s.model_budgets.iter().find(|(m, _)| m == "gauss-mix-slow").unwrap();
+        assert_eq!(gm.1.engines, 4);
+        assert!(!gm.1.adaptive);
+        assert!(s.set("model_budget", "broken").is_err());
+        assert!(s.set("adaptive_batching", "maybe").is_err());
     }
 
     #[test]

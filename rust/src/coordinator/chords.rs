@@ -34,6 +34,7 @@ pub struct ChordsConfig {
 }
 
 impl ChordsConfig {
+    /// Config with the given init sequence and grid, defaults elsewhere.
     pub fn new(seq: Vec<usize>, grid: TimeGrid) -> Self {
         ChordsConfig {
             seq,
@@ -50,6 +51,7 @@ impl ChordsConfig {
 pub struct CoreOutput {
     /// 1-based core id (K first, 1 last).
     pub core: usize,
+    /// The streamed latent.
     pub output: Tensor,
     /// Sequential NFE depth at emission — the paper's speedup denominator.
     pub nfe_depth: usize,
@@ -126,6 +128,7 @@ impl<'a> ChordsExecutor<'a> {
         ChordsExecutor { pool, cfg, sched }
     }
 
+    /// The discrete per-step schedule this executor follows.
     pub fn scheduler(&self) -> &Scheduler {
         &self.sched
     }

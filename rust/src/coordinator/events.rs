@@ -12,8 +12,9 @@ pub struct TraceEvent {
     pub step: usize,
     /// 1-based core id.
     pub core: usize,
-    /// Grid index the core stepped from / to.
+    /// Grid index the core stepped from.
     pub cur: usize,
+    /// Grid index the core stepped to.
     pub next: usize,
     /// Whether this was a bootstrap ladder jump.
     pub bootstrap: bool,

@@ -30,6 +30,8 @@ pub enum InitStrategy {
 }
 
 impl InitStrategy {
+    /// Parse a CLI/wire strategy name (`calibrated`, `paper`, `uniform`,
+    /// or an explicit `[i1,i2,…]` index list).
     pub fn parse(s: &str) -> Option<InitStrategy> {
         match s.to_ascii_lowercase().as_str() {
             "calibrated" | "ours" | "theorem" => Some(InitStrategy::Calibrated),
@@ -47,6 +49,7 @@ impl InitStrategy {
         }
     }
 
+    /// Human-readable strategy name (inverse of [`InitStrategy::parse`]).
     pub fn name(&self) -> String {
         match self {
             InitStrategy::Calibrated => "calibrated".into(),

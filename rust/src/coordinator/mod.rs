@@ -13,6 +13,8 @@
 //! - [`reward`]    — surrogate reward theory (§2.3, Def. 2.3/2.4)
 //! - [`events`]    — pipeline trace events (Fig. 2-style visualization)
 
+#![warn(missing_docs)]
+
 pub mod chords;
 pub mod events;
 pub mod init_seq;

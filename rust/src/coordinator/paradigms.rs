@@ -28,6 +28,7 @@ pub struct ParaDigms {
 }
 
 impl ParaDigms {
+    /// Sampler with the given window size and residual tolerance.
     pub fn new(window: usize, tol: f32) -> Self {
         ParaDigms { window, tol, max_sweeps: 10_000 }
     }
@@ -36,18 +37,21 @@ impl ParaDigms {
 /// Result of a ParaDIGMS run.
 #[derive(Debug)]
 pub struct ParaDigmsResult {
+    /// The solved latent at t = 1.
     pub output: Tensor,
     /// Sequential NFE depth: number of parallel sweeps (+ the final point's
     /// step), the wall-clock-equivalent metric used for Speedup.
     pub nfe_depth: usize,
     /// Total drift evaluations across the run (work).
     pub total_nfes: u64,
+    /// Wall-clock seconds of the run.
     pub wall_s: f64,
     /// Number of Picard sweeps executed.
     pub sweeps: usize,
 }
 
 impl ParaDigmsResult {
+    /// Speedup in sequential NFE depth vs an `n`-step sequential solve.
     pub fn speedup(&self, n: usize) -> f64 {
         n as f64 / self.nfe_depth as f64
     }

@@ -27,6 +27,7 @@ pub struct Scheduler {
 }
 
 impl Scheduler {
+    /// Schedule for init sequence `seq` over `n` diffusion steps.
     pub fn new(seq: Vec<usize>, n: usize) -> Self {
         assert!(!seq.is_empty());
         assert_eq!(seq[0], 0, "slowest core must start at 0 (paper §2.2)");
@@ -37,14 +38,17 @@ impl Scheduler {
         Scheduler { seq, n }
     }
 
+    /// Number of cores K.
     pub fn cores(&self) -> usize {
         self.seq.len()
     }
 
+    /// Total diffusion steps N.
     pub fn steps(&self) -> usize {
         self.n
     }
 
+    /// The initialization sequence `Î`.
     pub fn seq(&self) -> &[usize] {
         &self.seq
     }

@@ -9,9 +9,11 @@ use crate::workers::{CorePool, Job};
 /// Result of a sequential solve.
 #[derive(Clone, Debug)]
 pub struct SequentialResult {
+    /// The solved latent at t = 1.
     pub output: Tensor,
     /// Sequential NFE depth == N for Euler.
     pub nfe_depth: usize,
+    /// Wall-clock seconds of the solve.
     pub wall_s: f64,
     /// Intermediate latents `x_{t(i)}` (including x0 and the output) if
     /// trajectory capture was requested.

@@ -35,6 +35,7 @@ pub struct Srds {
 }
 
 impl Srds {
+    /// Sampler for `cores` cores with boundary tolerance `tol`.
     pub fn new(cores: usize, tol: f32) -> Self {
         Srds { cores, tol, segments: None }
     }
@@ -43,6 +44,7 @@ impl Srds {
 /// Result of an SRDS run.
 #[derive(Debug)]
 pub struct SrdsResult {
+    /// The solved latent at t = 1.
     pub output: Tensor,
     /// Pipelined sequential NFE depth on `cores` cores (the Speedup metric).
     pub nfe_depth: usize,
@@ -54,12 +56,14 @@ pub struct SrdsResult {
     pub wall_s: f64,
     /// Parareal iterations until convergence.
     pub iterations: usize,
-    /// Segment count M and fine length L.
+    /// Segment count M.
     pub segments: usize,
+    /// Fine steps per segment L.
     pub fine_len: usize,
 }
 
 impl SrdsResult {
+    /// Speedup in sequential NFE depth vs an `n`-step sequential solve.
     pub fn speedup(&self, n: usize) -> f64 {
         n as f64 / self.nfe_depth as f64
     }

@@ -25,6 +25,7 @@ pub struct ExpOde {
 }
 
 impl ExpOde {
+    /// Engine over `dims`-shaped latents with a simulated per-NFE cost.
     pub fn new(dims: Vec<usize>, sim_cost_us: u64) -> Self {
         ExpOde { dims, sim_cost_us }
     }
@@ -68,6 +69,7 @@ pub struct ExpOdeFactory {
 }
 
 impl ExpOdeFactory {
+    /// Factory for engines over `dims`-shaped latents.
     pub fn new(dims: Vec<usize>, sim_cost_us: u64) -> Self {
         ExpOdeFactory { dims, sim_cost_us }
     }
@@ -91,11 +93,14 @@ impl EngineFactory for ExpOdeFactory {
 /// without rectification — a stress test for Prop. 2.1.
 pub struct TrackingOde {
     dims: Vec<usize>,
+    /// Mean-reversion rate λ (stiffness).
     pub lambda: f32,
+    /// Attractor frequency ω.
     pub omega: f32,
 }
 
 impl TrackingOde {
+    /// Engine over `dims`-shaped latents with rate `lambda`, frequency `omega`.
     pub fn new(dims: Vec<usize>, lambda: f32, omega: f32) -> Self {
         TrackingOde { dims, lambda, omega }
     }

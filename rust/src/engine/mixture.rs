@@ -25,6 +25,7 @@ use crate::util::rng::Rng;
 /// Mixture definition shared by engine instances.
 #[derive(Clone, Debug)]
 pub struct MixtureSpec {
+    /// Latent dims of samples from the mixture.
     pub dims: Vec<usize>,
     /// Component means, each of length `numel(dims)`.
     pub means: Vec<Vec<f32>>,
@@ -55,6 +56,7 @@ impl MixtureSpec {
         MixtureSpec { dims, means, sigmas, weights }
     }
 
+    /// Number of mixture components.
     pub fn ncomp(&self) -> usize {
         self.means.len()
     }
@@ -104,11 +106,13 @@ pub struct GaussMixture {
 }
 
 impl GaussMixture {
+    /// Engine over `spec` with a simulated per-NFE cost.
     pub fn new(spec: MixtureSpec, sim_cost_us: u64) -> Self {
         let n = spec.ncomp();
         GaussMixture { spec, sim_cost_us, scratch: vec![0.0; n] }
     }
 
+    /// The mixture definition (ground truth for the NLL quality metric).
     pub fn spec(&self) -> &MixtureSpec {
         &self.spec
     }
@@ -174,8 +178,8 @@ impl DriftEngine for GaussMixture {
     /// over contiguous rows. The stacked layout is deliberate — it is the
     /// shape a fused/vectorized batch kernel wants, at the cost of one row
     /// copy per item (trivial next to the forward). Outputs are
-    /// bit-identical to per-item `drift` because both paths run
-    /// [`mixture_drift_sample`].
+    /// bit-identical to per-item `drift` because both paths run the same
+    /// `mixture_drift_sample` kernel.
     fn drift_batch(&mut self, xs: &[Tensor], ts: &[f32]) -> Vec<Tensor> {
         assert_eq!(xs.len(), ts.len(), "drift_batch length mismatch");
         if xs.is_empty() {
@@ -211,6 +215,7 @@ pub struct GaussMixtureFactory {
 }
 
 impl GaussMixtureFactory {
+    /// Factory over an explicit mixture spec.
     pub fn new(spec: MixtureSpec, sim_cost_us: u64) -> Self {
         GaussMixtureFactory { spec, sim_cost_us }
     }
@@ -220,6 +225,7 @@ impl GaussMixtureFactory {
         Self::new(MixtureSpec::random(dims, 8, seed), sim_cost_us)
     }
 
+    /// The shared mixture definition.
     pub fn spec(&self) -> &MixtureSpec {
         &self.spec
     }

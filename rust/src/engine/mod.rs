@@ -6,6 +6,8 @@
 //! mirrors one-model-replica-per-GPU deployment and matches the xla crate's
 //! thread-affinity constraints (raw PJRT pointers are not `Sync`).
 
+#![warn(missing_docs)]
+
 mod analytic;
 mod mixture;
 mod traits;

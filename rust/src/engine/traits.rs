@@ -9,6 +9,22 @@ use crate::tensor::Tensor;
 /// paper's primary speedup metric. Engines take `&mut self` so they may keep
 /// scratch buffers / PJRT handles without synchronization — each core owns
 /// its engine exclusively.
+///
+/// # Example
+///
+/// ```
+/// use chords::engine::{DriftEngine, ExpOde};
+/// use chords::tensor::Tensor;
+///
+/// let mut engine = ExpOde::new(vec![4], 0); // f(x, t) = x
+/// let x = Tensor::full(&[4], 2.0);
+/// assert_eq!(engine.drift(&x, 0.5), x);
+/// // drift_batch is bit-identical to per-item drift — the contract the
+/// // batching layer (and every adaptive retune of it) relies on.
+/// let xs = vec![x.clone(), Tensor::full(&[4], -1.0)];
+/// let fused = engine.drift_batch(&xs, &[0.1, 0.9]);
+/// assert_eq!(fused, xs);
+/// ```
 pub trait DriftEngine: Send {
     /// Latent dims this engine accepts.
     fn dims(&self) -> Vec<usize>;

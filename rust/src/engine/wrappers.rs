@@ -13,10 +13,12 @@ use std::sync::Arc;
 pub struct NfeLedger(Arc<AtomicU64>);
 
 impl NfeLedger {
+    /// A ledger starting at zero.
     pub fn new() -> Self {
         NfeLedger(Arc::new(AtomicU64::new(0)))
     }
 
+    /// Count one NFE.
     pub fn bump(&self) {
         self.0.fetch_add(1, Ordering::Relaxed);
     }
@@ -26,10 +28,12 @@ impl NfeLedger {
         self.0.fetch_add(n, Ordering::Relaxed);
     }
 
+    /// Total NFEs counted so far.
     pub fn total(&self) -> u64 {
         self.0.load(Ordering::Relaxed)
     }
 
+    /// Zero the ledger.
     pub fn reset(&self) {
         self.0.store(0, Ordering::Relaxed);
     }
@@ -42,6 +46,7 @@ pub struct CountingEngine {
 }
 
 impl CountingEngine {
+    /// Wrap `inner`, charging every drift to `ledger`.
     pub fn new(inner: Box<dyn DriftEngine>, ledger: NfeLedger) -> Self {
         CountingEngine { inner, ledger }
     }
@@ -76,10 +81,12 @@ pub struct CountingFactory {
 }
 
 impl CountingFactory {
+    /// Wrap `inner`; every engine it builds shares `ledger`.
     pub fn new(inner: Arc<dyn EngineFactory>, ledger: NfeLedger) -> Self {
         CountingFactory { inner, ledger }
     }
 
+    /// The shared ledger handle.
     pub fn ledger(&self) -> NfeLedger {
         self.ledger.clone()
     }

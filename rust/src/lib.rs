@@ -7,6 +7,30 @@
 //!   to HLO text under `artifacts/`, loaded here via the PJRT CPU client.
 //!
 //! Python never runs on the request path.
+//!
+//! # Subsystem map
+//!
+//! A request flows through the crate roughly bottom-up (the full tour with
+//! a request-lifecycle diagram lives in `docs/ARCHITECTURE.md`):
+//!
+//! - [`engine`] — the black-box drift `f_θ(x, t)` (one NFE per call):
+//!   analytic engines, the Gaussian-mixture ground-truth model, and (behind
+//!   the `pjrt` feature, via [`runtime`]) AOT-compiled DiT denoisers.
+//! - [`solvers`] — time grids and step rules (Euler/DDIM, Heun, midpoint).
+//! - [`coordinator`] — the paper's contribution: the CHORDS executor
+//!   (Algorithm 1), per-step core schedule, inter-core rectification,
+//!   init-sequence theory, and the ParaDIGMS/SRDS baselines.
+//! - [`workers`] — worker threads (logical cores), per-job routing views,
+//!   and the [`workers::EngineBank`] multiplexing logical cores onto shared
+//!   physical engines with live-retunable fusion knobs.
+//! - [`sched`] — the elastic serving scheduler: global core budget, RAII
+//!   leases with mid-job reclamation, bounded priority admission queue, the
+//!   dispatcher, and the adaptive batching controller.
+//! - [`server`] — the JSON-lines TCP surface (`generate`, `queue_stats`, …)
+//!   over the scheduler.
+//! - [`config`] / [`metrics`] / [`harness`] / [`cli`] / [`tensor`] /
+//!   [`util`] — presets & budgets, serving/evaluation metrics, the paper's
+//!   table/figure reproduction harness, and self-contained substrates.
 
 pub mod cli;
 pub mod config;

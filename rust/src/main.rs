@@ -218,6 +218,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
         ("engines-per-model", "engines_per_model"),
         ("max-batch", "max_batch"),
         ("batch-linger-us", "batch_linger_us"),
+        ("adaptive-batching", "adaptive_batching"),
+        ("model-budget", "model_budget"),
     ] {
         if let Some(v) = args.flag(flag) {
             cfg.set(key, v).map_err(|e| anyhow!("--{flag}: {e}"))?;
@@ -235,6 +237,20 @@ fn cmd_serve(args: &Args) -> Result<()> {
         println!(
             "batched drift: {} engines/model, max batch {}, linger {}µs",
             cfg.engines_per_model, cfg.max_batch, cfg.batch_linger_us
+        );
+    }
+    if cfg.adaptive_batching {
+        println!(
+            "adaptive batching: controller retunes max_batch/linger per model from occupancy & fill wait (see queue_stats adaptive_* counters)"
+        );
+    }
+    for (model, b) in &cfg.model_budgets {
+        println!(
+            "model budget: {model} → {} engines, max batch {}, linger {}µs{}",
+            b.engines,
+            b.max_batch,
+            b.linger_us,
+            if b.adaptive { ", adaptive" } else { "" }
         );
     }
     println!("protocol: JSON lines; ops: ping | stats | queue_stats | generate");

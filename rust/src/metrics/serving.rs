@@ -10,10 +10,14 @@ use std::sync::Arc;
 use std::time::Instant;
 
 /// Counters for the batched-drift hot path ([`crate::workers::EngineBank`]):
-/// fused invocations, items per fusion (occupancy), and how long each batch
+/// fused invocations, items per fusion (occupancy), how long each batch
 /// waited for stragglers before dispatch (fill wait — bounded by the
-/// configured linger). Shared by every physical engine thread of a model,
-/// and across models when the dispatcher wires its own instance through.
+/// configured linger), and time spent inside the fused engine call (the NFE
+/// cost the fill wait is weighed against). Shared by every physical engine
+/// thread of a model; a per-model instance built with
+/// [`BatchStats::with_parent`] additionally forwards every observation to a
+/// server-wide aggregate, so the dispatcher can feed the adaptive controller
+/// per-model signals while `queue_stats` keeps reporting totals.
 #[derive(Default)]
 pub struct BatchStats {
     /// Fused engine invocations (calls to `drift_batch`).
@@ -23,22 +27,41 @@ pub struct BatchStats {
     /// Total microseconds batches spent waiting to fill after their first
     /// item arrived (dispatch latency added by the linger window).
     pub fill_wait_us_total: AtomicU64,
+    /// Total microseconds spent inside fused `drift_batch` invocations (the
+    /// engine-side NFE cost, excluding fill wait and queueing).
+    pub exec_us_total: AtomicU64,
     /// High-water batch occupancy.
     pub peak_batch: AtomicU64,
+    /// Optional aggregate that every observation is mirrored into (one level
+    /// deep; the dispatcher chains model stats → server totals).
+    parent: Option<Arc<BatchStats>>,
 }
 
 impl BatchStats {
+    /// A fresh, parentless counter set.
     pub fn new() -> Arc<BatchStats> {
         Arc::new(BatchStats::default())
     }
 
+    /// A counter set that also mirrors every [`BatchStats::on_batch`] into
+    /// `parent` — the dispatcher's per-model stats, chained to the
+    /// server-wide [`ServingMetrics::batch`] aggregate.
+    pub fn with_parent(parent: Arc<BatchStats>) -> Arc<BatchStats> {
+        Arc::new(BatchStats { parent: Some(parent), ..BatchStats::default() })
+    }
+
     /// Record one fused invocation of `items` drifts dispatched after
-    /// `fill_wait_us` microseconds of filling.
-    pub fn on_batch(&self, items: usize, fill_wait_us: u64) {
+    /// `fill_wait_us` microseconds of filling and executed in `exec_us`
+    /// microseconds.
+    pub fn on_batch(&self, items: usize, fill_wait_us: u64, exec_us: u64) {
         self.batches.fetch_add(1, Ordering::Relaxed);
         self.batched_drifts.fetch_add(items as u64, Ordering::Relaxed);
         self.fill_wait_us_total.fetch_add(fill_wait_us, Ordering::Relaxed);
+        self.exec_us_total.fetch_add(exec_us, Ordering::Relaxed);
         raise_peak(&self.peak_batch, items as u64);
+        if let Some(p) = &self.parent {
+            p.on_batch(items, fill_wait_us, exec_us);
+        }
     }
 
     /// Mean items per fused invocation (0 when none ran).
@@ -57,6 +80,15 @@ impl BatchStats {
             return 0.0;
         }
         self.fill_wait_us_total.load(Ordering::Relaxed) as f64 / batches as f64
+    }
+
+    /// Mean microseconds per fused engine invocation (0 when none ran).
+    pub fn mean_exec_us(&self) -> f64 {
+        let batches = self.batches.load(Ordering::Relaxed);
+        if batches == 0 {
+            return 0.0;
+        }
+        self.exec_us_total.load(Ordering::Relaxed) as f64 / batches as f64
     }
 }
 
@@ -95,9 +127,22 @@ pub struct ServingMetrics {
     pub wait_us_max: AtomicU64,
     /// Integrated busy core-time (µs·cores) over all completed leases.
     pub busy_core_us: AtomicU64,
-    /// Batched-drift counters, shared with every model's [`EngineBank`]
-    /// when batching is enabled (`crate::workers::EngineBank`).
+    /// Batched-drift counters aggregated across every model's
+    /// [`crate::workers::EngineBank`] when batching is enabled (per-model
+    /// banks chain into this via [`BatchStats::with_parent`]).
     pub batch: Arc<BatchStats>,
+    /// Models currently under adaptive batching control (gauge).
+    pub adaptive_models: AtomicU64,
+    /// Knob changes applied by the adaptive controller (all kinds).
+    pub adaptive_retunes: AtomicU64,
+    /// Adaptive linger increases (AIMD additive growth).
+    pub adaptive_linger_grow: AtomicU64,
+    /// Adaptive linger decreases (multiplicative shrink on fill-wait spikes).
+    pub adaptive_linger_shrink: AtomicU64,
+    /// Adaptive `max_batch` increases (occupancy hit the cap).
+    pub adaptive_batch_grow: AtomicU64,
+    /// Adaptive `max_batch` decreases (persistently idle fusion headroom).
+    pub adaptive_batch_shrink: AtomicU64,
     started: Instant,
 }
 
@@ -120,6 +165,12 @@ impl Default for ServingMetrics {
             wait_us_max: AtomicU64::new(0),
             busy_core_us: AtomicU64::new(0),
             batch: BatchStats::new(),
+            adaptive_models: AtomicU64::new(0),
+            adaptive_retunes: AtomicU64::new(0),
+            adaptive_linger_grow: AtomicU64::new(0),
+            adaptive_linger_shrink: AtomicU64::new(0),
+            adaptive_batch_grow: AtomicU64::new(0),
+            adaptive_batch_shrink: AtomicU64::new(0),
             started: Instant::now(),
         }
     }
@@ -237,7 +288,26 @@ impl ServingMetrics {
             ),
             ("mean_batch_occupancy", Json::num(self.batch.mean_occupancy())),
             ("mean_fill_wait_us", Json::num(self.batch.mean_fill_wait_us())),
+            ("mean_exec_us", Json::num(self.batch.mean_exec_us())),
             ("peak_batch", Json::num(self.batch.peak_batch.load(Ordering::Relaxed) as f64)),
+            ("adaptive_models", Json::num(self.adaptive_models.load(Ordering::Relaxed) as f64)),
+            ("adaptive_retunes", Json::num(self.adaptive_retunes.load(Ordering::Relaxed) as f64)),
+            (
+                "adaptive_linger_grow",
+                Json::num(self.adaptive_linger_grow.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "adaptive_linger_shrink",
+                Json::num(self.adaptive_linger_shrink.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "adaptive_batch_grow",
+                Json::num(self.adaptive_batch_grow.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "adaptive_batch_shrink",
+                Json::num(self.adaptive_batch_shrink.load(Ordering::Relaxed) as f64),
+            ),
         ])
     }
 }
@@ -283,24 +353,44 @@ mod tests {
         let b = BatchStats::default();
         assert_eq!(b.mean_occupancy(), 0.0);
         assert_eq!(b.mean_fill_wait_us(), 0.0);
-        b.on_batch(4, 100);
-        b.on_batch(2, 60);
+        assert_eq!(b.mean_exec_us(), 0.0);
+        b.on_batch(4, 100, 400);
+        b.on_batch(2, 60, 200);
         assert_eq!(b.batches.load(Ordering::Relaxed), 2);
         assert_eq!(b.batched_drifts.load(Ordering::Relaxed), 6);
         assert_eq!(b.peak_batch.load(Ordering::Relaxed), 4);
         assert!((b.mean_occupancy() - 3.0).abs() < 1e-12);
         assert!((b.mean_fill_wait_us() - 80.0).abs() < 1e-12);
+        assert!((b.mean_exec_us() - 300.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn child_stats_mirror_into_parent() {
+        let parent = BatchStats::new();
+        let a = BatchStats::with_parent(parent.clone());
+        let b = BatchStats::with_parent(parent.clone());
+        a.on_batch(4, 100, 400);
+        b.on_batch(2, 60, 200);
+        assert_eq!(a.batches.load(Ordering::Relaxed), 1);
+        assert_eq!(b.batches.load(Ordering::Relaxed), 1);
+        assert_eq!(parent.batches.load(Ordering::Relaxed), 2);
+        assert_eq!(parent.batched_drifts.load(Ordering::Relaxed), 6);
+        assert_eq!(parent.peak_batch.load(Ordering::Relaxed), 4);
+        assert_eq!(parent.exec_us_total.load(Ordering::Relaxed), 600);
     }
 
     #[test]
     fn snapshot_has_batch_fields() {
         let m = ServingMetrics::new();
-        m.batch.on_batch(3, 90);
+        m.batch.on_batch(3, 90, 300);
         let j = m.snapshot(8, 64);
         assert_eq!(j.get("drift_batches").unwrap().as_usize().unwrap(), 1);
         assert_eq!(j.get("batched_drifts").unwrap().as_usize().unwrap(), 3);
         assert_eq!(j.get("peak_batch").unwrap().as_usize().unwrap(), 3);
         assert!((j.get("mean_batch_occupancy").unwrap().as_f64().unwrap() - 3.0).abs() < 1e-9);
+        assert!((j.get("mean_exec_us").unwrap().as_f64().unwrap() - 300.0).abs() < 1e-9);
+        assert_eq!(j.get("adaptive_retunes").unwrap().as_usize().unwrap(), 0);
+        assert_eq!(j.get("adaptive_models").unwrap().as_usize().unwrap(), 0);
     }
 
     #[test]

@@ -1,0 +1,624 @@
+//! Adaptive batching controller: retunes each model's engine-bank fusion
+//! knobs online from observed occupancy, fill wait, and queue depth.
+//!
+//! PR 2's batching layer exposed two static knobs per bank — `max_batch`
+//! and the linger window — plus one global engine count. The right values
+//! depend on offered load: under bursty same-model traffic a longer linger
+//! fuses whole lockstep waves into one forward, while at low tide the same
+//! linger only adds dispatch latency. This controller closes the loop
+//! (SADA-style: adapt acceleration decisions from runtime signals instead
+//! of fixed schedules):
+//!
+//! - **Signals** — per-model [`BatchStats`] deltas over a sampling window
+//!   (mean occupancy, mean fill wait, mean engine exec time) plus the
+//!   model's own admission-queue backlog from the dispatcher.
+//! - **Policy** — AIMD with hysteresis ([`ModelTuner::decide`]): grow the
+//!   linger additively while occupancy is low and fill wait is cheap
+//!   relative to the NFE cost; shrink it multiplicatively the moment fill
+//!   wait starts dominating; double `max_batch` when occupancy pins the
+//!   cap; halve it when fusion headroom stays idle at maximum linger.
+//! - **Safety** — retunes only change how drift requests *group* into
+//!   fused invocations, never what they compute, so the bit-identical
+//!   contract of [`crate::engine::DriftEngine::drift_batch`] (pinned by
+//!   `tests/batch_equivalence.rs`) holds at every setting; writes go
+//!   through [`BatchTuning`]'s hard caps and land on batch boundaries.
+//!
+//! The controller runs on the dispatcher's scheduler thread (one `tick`
+//! per pass, self-rate-limited by [`AdaptiveOpts::interval`]); decisions
+//! surface as `adaptive_*` counters in `queue_stats`
+//! ([`crate::metrics::ServingMetrics`]).
+
+use crate::metrics::{BatchStats, ServingMetrics};
+use crate::workers::BatchTuning;
+use std::collections::HashMap;
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Policy knobs for the adaptive batching controller.
+#[derive(Clone, Debug)]
+pub struct AdaptiveOpts {
+    /// Minimum wall time between retune decisions per model (the sampling
+    /// window).
+    pub interval: Duration,
+    /// Lower bound for retuned linger (µs).
+    pub min_linger_us: u64,
+    /// Upper bound for retuned linger (µs); raised to a model's static
+    /// setting when that is larger.
+    pub max_linger_us: u64,
+    /// Additive linger increment per growth step (µs).
+    pub linger_step_us: u64,
+    /// Lower bound for retuned `max_batch`.
+    pub min_batch: usize,
+    /// Upper bound for retuned `max_batch`; raised to a model's static
+    /// setting when that is larger.
+    pub max_batch: usize,
+    /// Grow the linger while mean occupancy is below this fraction of the
+    /// current `max_batch`.
+    pub low_occupancy: f64,
+    /// Shrink the linger once mean fill wait exceeds this fraction of the
+    /// mean engine exec time (fill wait "dominates" the NFE cost).
+    pub fill_dominates: f64,
+    /// Consecutive qualifying windows required before a growth (or batch
+    /// shrink) step — the anti-flap hysteresis. Fill-wait shrinks act on a
+    /// single window (shrink aggressively, grow carefully).
+    pub grow_hysteresis: u32,
+    /// Minimum fused invocations in a window for it to count as signal;
+    /// quieter windows are ignored and reset hysteresis streaks.
+    pub min_batches: u64,
+}
+
+impl Default for AdaptiveOpts {
+    fn default() -> Self {
+        AdaptiveOpts {
+            interval: Duration::from_millis(50),
+            min_linger_us: 0,
+            max_linger_us: 2_000,
+            linger_step_us: 50,
+            min_batch: 1,
+            max_batch: 32,
+            low_occupancy: 0.5,
+            fill_dominates: 0.5,
+            grow_hysteresis: 2,
+            min_batches: 8,
+        }
+    }
+}
+
+/// One sampling window's aggregated signals for a model's bank
+/// (deltas of [`BatchStats`] counters, plus the queue depth at sample
+/// time).
+#[derive(Clone, Copy, Debug)]
+pub struct WindowSample {
+    /// Fused invocations in the window.
+    pub batches: u64,
+    /// Drift evaluations served in the window.
+    pub drifts: u64,
+    /// Total fill-wait microseconds accumulated in the window.
+    pub fill_wait_us: u64,
+    /// Total in-engine execution microseconds accumulated in the window.
+    pub exec_us: u64,
+    /// Queued admission tickets *for this model* when the window was
+    /// sampled (a standing backlog ⇒ throughput mode: linger growth no
+    /// longer requires cheap fill). Per-model by design — another model's
+    /// flood must not loosen this model's latency policy.
+    pub queue_depth: usize,
+}
+
+impl WindowSample {
+    /// Mean items per fused invocation in this window.
+    pub fn occupancy(&self) -> f64 {
+        if self.batches == 0 {
+            return 0.0;
+        }
+        self.drifts as f64 / self.batches as f64
+    }
+
+    /// Mean fill wait per fused invocation (µs).
+    pub fn mean_fill_us(&self) -> f64 {
+        if self.batches == 0 {
+            return 0.0;
+        }
+        self.fill_wait_us as f64 / self.batches as f64
+    }
+
+    /// Mean engine execution time per fused invocation (µs).
+    pub fn mean_exec_us(&self) -> f64 {
+        if self.batches == 0 {
+            return 0.0;
+        }
+        self.exec_us as f64 / self.batches as f64
+    }
+}
+
+/// A knob change decided by [`ModelTuner::decide`], carrying the new value.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Retune {
+    /// Raise `max_batch` to the value (occupancy pinned the cap).
+    GrowBatch(usize),
+    /// Lower `max_batch` to the value (fusion headroom persistently idle).
+    ShrinkBatch(usize),
+    /// Lengthen the linger window to the value in µs (additive growth).
+    GrowLinger(u64),
+    /// Shorten the linger window to the value in µs (multiplicative shrink
+    /// on fill-wait spikes).
+    ShrinkLinger(u64),
+}
+
+/// Per-model AIMD state machine. Pure decision logic over
+/// [`WindowSample`]s — the [`AdaptiveController`] owns the wiring to real
+/// [`BatchTuning`] handles, which keeps this unit-testable on synthetic
+/// traces.
+///
+/// ```
+/// use chords::sched::{AdaptiveOpts, ModelTuner, Retune, WindowSample};
+///
+/// let opts = AdaptiveOpts::default();
+/// let mut tuner = ModelTuner::new(opts.clone(), 8, 0);
+/// // Low occupancy (2 of 8) with negligible fill wait: after the growth
+/// // hysteresis the tuner lengthens the linger window by one step.
+/// let quiet = WindowSample {
+///     batches: 100,
+///     drifts: 200,
+///     fill_wait_us: 0,
+///     exec_us: 3_000_000,
+///     queue_depth: 0,
+/// };
+/// let mut last = None;
+/// for _ in 0..opts.grow_hysteresis {
+///     last = tuner.decide(&quiet);
+/// }
+/// assert_eq!(last, Some(Retune::GrowLinger(opts.linger_step_us)));
+/// ```
+pub struct ModelTuner {
+    opts: AdaptiveOpts,
+    max_batch: usize,
+    linger_us: u64,
+    grow_streak: u32,
+    shrink_batch_streak: u32,
+    cooldown: bool,
+}
+
+impl ModelTuner {
+    /// A tuner starting from the model's current effective knobs. The
+    /// adaptive bounds are widened to cover the starting point, so a
+    /// per-model budget larger than the controller's defaults is a floor,
+    /// never truncated.
+    pub fn new(opts: AdaptiveOpts, max_batch: usize, linger_us: u64) -> ModelTuner {
+        let opts = AdaptiveOpts {
+            max_batch: opts.max_batch.max(max_batch),
+            max_linger_us: opts.max_linger_us.max(linger_us),
+            ..opts
+        };
+        ModelTuner {
+            opts,
+            max_batch: max_batch.max(1),
+            linger_us,
+            grow_streak: 0,
+            shrink_batch_streak: 0,
+            cooldown: false,
+        }
+    }
+
+    /// The tuner's view of the current `max_batch`.
+    pub fn max_batch(&self) -> usize {
+        self.max_batch
+    }
+
+    /// The tuner's view of the current linger (µs).
+    pub fn linger_us(&self) -> u64 {
+        self.linger_us
+    }
+
+    /// Fold one window of observations and decide whether to retune.
+    /// Mutates internal state (streaks, cooldown, and — when a retune is
+    /// emitted — the tracked knob values).
+    pub fn decide(&mut self, s: &WindowSample) -> Option<Retune> {
+        // Too little signal: don't act on noise, and make streaks span
+        // only consecutive *qualifying* windows.
+        if s.batches < self.opts.min_batches {
+            self.grow_streak = 0;
+            self.shrink_batch_streak = 0;
+            return None;
+        }
+        // First qualifying window after a retune measures the new setting
+        // — acting on a window that straddles the change would double-step.
+        if self.cooldown {
+            self.cooldown = false;
+            return None;
+        }
+        let occ = s.occupancy();
+        let fill = s.mean_fill_us();
+        let exec = s.mean_exec_us();
+
+        // 1. Occupancy pinned at the cap: waves are bigger than the batch
+        //    limit, so fusing deeper is free throughput.
+        if occ >= 0.9 * self.max_batch as f64 && self.max_batch < self.opts.max_batch {
+            let v = (self.max_batch * 2).min(self.opts.max_batch);
+            return Some(self.emit(Retune::GrowBatch(v)));
+        }
+
+        // 2. Fill wait dominates the NFE cost: the linger is buying more
+        //    latency than fusion. Shrink multiplicatively, immediately.
+        if fill > self.opts.fill_dominates * exec && self.linger_us > self.opts.min_linger_us {
+            let v = (self.linger_us / 2).max(self.opts.min_linger_us);
+            return Some(self.emit(Retune::ShrinkLinger(v)));
+        }
+
+        // 3. Low occupancy with cheap fill (or a standing backlog, where
+        //    fusion is pure throughput): lengthen the linger — additively,
+        //    and only after `grow_hysteresis` consecutive windows agree.
+        let fill_cheap = fill <= 0.5 * self.opts.fill_dominates * exec || s.queue_depth > 0;
+        if occ < self.opts.low_occupancy * self.max_batch as f64
+            && fill_cheap
+            && self.linger_us < self.opts.max_linger_us
+        {
+            self.grow_streak += 1;
+            self.shrink_batch_streak = 0;
+            if self.grow_streak >= self.opts.grow_hysteresis {
+                let v = (self.linger_us + self.opts.linger_step_us).min(self.opts.max_linger_us);
+                return Some(self.emit(Retune::GrowLinger(v)));
+            }
+            return None;
+        }
+        self.grow_streak = 0;
+
+        // 4. Fusion headroom persistently idle even at maximum linger:
+        //    narrow the batch limit back toward the floor.
+        if occ < 0.25 * self.max_batch as f64
+            && self.max_batch > self.opts.min_batch
+            && self.linger_us >= self.opts.max_linger_us
+        {
+            self.shrink_batch_streak += 1;
+            if self.shrink_batch_streak >= self.opts.grow_hysteresis {
+                let v = (self.max_batch / 2).max(self.opts.min_batch);
+                return Some(self.emit(Retune::ShrinkBatch(v)));
+            }
+            return None;
+        }
+        self.shrink_batch_streak = 0;
+        None
+    }
+
+    /// Commit a decision to the tuner's tracked state.
+    fn emit(&mut self, r: Retune) -> Retune {
+        match r {
+            Retune::GrowBatch(v) | Retune::ShrinkBatch(v) => self.max_batch = v,
+            Retune::GrowLinger(v) | Retune::ShrinkLinger(v) => self.linger_us = v,
+        }
+        self.grow_streak = 0;
+        self.shrink_batch_streak = 0;
+        self.cooldown = true;
+        r
+    }
+
+    /// Reconcile the tracked linger with what the bank's hard caps actually
+    /// applied; a clamp below the proposal tightens the adaptive bound so
+    /// the unreachable value is never re-proposed.
+    fn sync_linger(&mut self, proposed: u64, applied: u64) {
+        self.linger_us = applied;
+        if applied < proposed {
+            self.opts.max_linger_us = self.opts.max_linger_us.min(applied);
+        }
+    }
+
+    /// As [`ModelTuner::sync_linger`], for `max_batch`.
+    fn sync_batch(&mut self, proposed: usize, applied: usize) {
+        self.max_batch = applied;
+        if applied < proposed {
+            self.opts.max_batch = self.opts.max_batch.min(applied);
+        }
+    }
+}
+
+/// Per-model registration inside the controller.
+struct Entry {
+    tuning: Arc<BatchTuning>,
+    stats: Arc<BatchStats>,
+    tuner: ModelTuner,
+    /// Counter snapshot at the last sample: (batches, drifts, fill, exec).
+    seen: (u64, u64, u64, u64),
+    last: Instant,
+}
+
+/// The feedback loop: owns a [`ModelTuner`] per registered bank, samples
+/// [`BatchStats`] deltas on the dispatcher's scheduler thread, and writes
+/// decisions through [`BatchTuning`] (exporting them as `adaptive_*`
+/// counters on [`ServingMetrics`]).
+pub struct AdaptiveController {
+    opts: AdaptiveOpts,
+    metrics: Arc<ServingMetrics>,
+    models: HashMap<String, Entry>,
+}
+
+impl AdaptiveController {
+    /// An empty controller; banks are added with
+    /// [`AdaptiveController::register`] as models load.
+    pub fn new(opts: AdaptiveOpts, metrics: Arc<ServingMetrics>) -> AdaptiveController {
+        AdaptiveController { opts, metrics, models: HashMap::new() }
+    }
+
+    /// Whether any bank is currently under control.
+    pub fn is_empty(&self) -> bool {
+        self.models.is_empty()
+    }
+
+    /// Put a model's bank under adaptive control (replacing any previous
+    /// registration under the same name — model slots are rebuilt after
+    /// idle reaping). The tuner starts from the bank's current knobs.
+    pub fn register(&mut self, model: &str, tuning: Arc<BatchTuning>, stats: Arc<BatchStats>) {
+        let tuner = ModelTuner::new(self.opts.clone(), tuning.max_batch(), tuning.linger_us());
+        let seen = snapshot(&stats);
+        self.models.insert(
+            model.to_string(),
+            Entry { tuning, stats, tuner, seen, last: Instant::now() },
+        );
+        self.metrics.adaptive_models.store(self.models.len() as u64, Ordering::Relaxed);
+    }
+
+    /// Drop a model's registration (its slot was reaped).
+    pub fn unregister(&mut self, model: &str) {
+        self.models.remove(model);
+        self.metrics.adaptive_models.store(self.models.len() as u64, Ordering::Relaxed);
+    }
+
+    /// One controller pass: for every model whose sampling window has
+    /// elapsed, fold the counter delta into its tuner and apply any
+    /// decision. `queued` is the per-model admission backlog
+    /// ([`crate::sched::AdmissionQueue::depths_by_model`]); absent models
+    /// count as 0. Called from the dispatcher's scheduler loop; cheap when
+    /// nothing is due.
+    pub fn tick(&mut self, queued: &HashMap<String, usize>, now: Instant) {
+        for (name, entry) in self.models.iter_mut() {
+            if now.saturating_duration_since(entry.last) < self.opts.interval {
+                continue;
+            }
+            entry.last = now;
+            let cur = snapshot(&entry.stats);
+            let sample = WindowSample {
+                batches: cur.0 - entry.seen.0,
+                drifts: cur.1 - entry.seen.1,
+                fill_wait_us: cur.2 - entry.seen.2,
+                exec_us: cur.3 - entry.seen.3,
+                queue_depth: queued.get(name).copied().unwrap_or(0),
+            };
+            entry.seen = cur;
+            if let Some(r) = entry.tuner.decide(&sample) {
+                // Apply through the bank's hard caps, reconcile the tuner
+                // with the value that actually landed, and count only
+                // retunes that changed the live setting.
+                let changed = match r {
+                    Retune::GrowLinger(v) | Retune::ShrinkLinger(v) => {
+                        let before = entry.tuning.linger_us();
+                        let applied = entry.tuning.set_linger_us(v);
+                        entry.tuner.sync_linger(v, applied);
+                        applied != before
+                    }
+                    Retune::GrowBatch(v) | Retune::ShrinkBatch(v) => {
+                        let before = entry.tuning.max_batch();
+                        let applied = entry.tuning.set_max_batch(v);
+                        entry.tuner.sync_batch(v, applied);
+                        applied != before
+                    }
+                };
+                if changed {
+                    let m = &self.metrics;
+                    m.adaptive_retunes.fetch_add(1, Ordering::Relaxed);
+                    let counter = match r {
+                        Retune::GrowLinger(_) => &m.adaptive_linger_grow,
+                        Retune::ShrinkLinger(_) => &m.adaptive_linger_shrink,
+                        Retune::GrowBatch(_) => &m.adaptive_batch_grow,
+                        Retune::ShrinkBatch(_) => &m.adaptive_batch_shrink,
+                    };
+                    counter.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+        }
+    }
+}
+
+fn snapshot(stats: &BatchStats) -> (u64, u64, u64, u64) {
+    (
+        stats.batches.load(Ordering::Relaxed),
+        stats.batched_drifts.load(Ordering::Relaxed),
+        stats.fill_wait_us_total.load(Ordering::Relaxed),
+        stats.exec_us_total.load(Ordering::Relaxed),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// exec 30ms total over 100 batches = 300µs mean, mirroring the
+    /// `gauss-mix-slow` regime.
+    fn window(batches: u64, drifts: u64, fill_each_us: u64) -> WindowSample {
+        WindowSample {
+            batches,
+            drifts,
+            fill_wait_us: fill_each_us * batches,
+            exec_us: 300 * batches,
+            queue_depth: 0,
+        }
+    }
+
+    #[test]
+    fn low_occupancy_trace_grows_linger_additively() {
+        let mut t = ModelTuner::new(AdaptiveOpts::default(), 8, 0);
+        let quiet = window(100, 200, 0); // occupancy 2 of 8, free fill
+        assert_eq!(t.decide(&quiet), None, "hysteresis holds the first window");
+        assert_eq!(t.decide(&quiet), Some(Retune::GrowLinger(50)));
+        assert_eq!(t.decide(&quiet), None, "cooldown window after the change");
+        assert_eq!(t.decide(&quiet), None);
+        assert_eq!(t.decide(&quiet), Some(Retune::GrowLinger(100)), "additive steps");
+        assert_eq!(t.linger_us(), 100);
+    }
+
+    #[test]
+    fn fill_wait_spike_shrinks_linger_immediately() {
+        let mut t = ModelTuner::new(AdaptiveOpts::default(), 8, 400);
+        // Mean fill 400µs vs mean exec 300µs: fill dominates (> 0.5×exec).
+        let spiky = window(50, 100, 400);
+        assert_eq!(t.decide(&spiky), Some(Retune::ShrinkLinger(200)), "no hysteresis on shrink");
+        assert_eq!(t.decide(&spiky), None, "cooldown");
+        assert_eq!(t.decide(&spiky), Some(Retune::ShrinkLinger(100)), "multiplicative");
+    }
+
+    #[test]
+    fn hysteresis_does_not_flap_on_alternating_windows() {
+        let mut t = ModelTuner::new(AdaptiveOpts::default(), 8, 0);
+        let quiet = window(100, 200, 0); // would grow, given a streak
+        let busy = window(100, 600, 100); // occupancy 6: no action either way
+        for _ in 0..5 {
+            assert_eq!(t.decide(&quiet), None);
+            assert_eq!(t.decide(&busy), None);
+        }
+        assert_eq!(t.linger_us(), 0, "alternating signal never retunes");
+    }
+
+    #[test]
+    fn sparse_windows_are_ignored_and_reset_streaks() {
+        let mut t = ModelTuner::new(AdaptiveOpts::default(), 8, 0);
+        let quiet = window(100, 200, 0);
+        let sparse = window(2, 2, 0); // below min_batches
+        assert_eq!(t.decide(&quiet), None);
+        assert_eq!(t.decide(&sparse), None, "not enough signal");
+        assert_eq!(t.decide(&quiet), None, "streak restarted");
+        assert_eq!(t.decide(&quiet), Some(Retune::GrowLinger(50)));
+    }
+
+    #[test]
+    fn occupancy_at_cap_doubles_max_batch_up_to_bound() {
+        let mut t = ModelTuner::new(AdaptiveOpts::default(), 8, 100);
+        let pinned = window(10, 78, 10); // occupancy 7.8 ≥ 0.9 × 8
+        assert_eq!(t.decide(&pinned), Some(Retune::GrowBatch(16)));
+        assert_eq!(t.max_batch(), 16);
+        assert_eq!(t.decide(&pinned), None, "cooldown");
+        assert_eq!(t.decide(&pinned), None, "7.8 is far below the new cap of 16");
+        // At the configured ceiling, no further growth.
+        let mut t = ModelTuner::new(AdaptiveOpts::default(), 32, 100);
+        let pinned = window(10, 310, 10);
+        assert_eq!(t.decide(&pinned), None);
+    }
+
+    #[test]
+    fn idle_headroom_at_max_linger_shrinks_batch() {
+        let opts = AdaptiveOpts::default();
+        let mut t = ModelTuner::new(opts.clone(), 8, opts.max_linger_us);
+        let idle = window(100, 150, 0); // occupancy 1.5 < 0.25 × 8
+        assert_eq!(t.decide(&idle), None, "hysteresis");
+        assert_eq!(t.decide(&idle), Some(Retune::ShrinkBatch(4)));
+    }
+
+    #[test]
+    fn backlog_relaxes_the_cheap_fill_requirement() {
+        let mut t = ModelTuner::new(AdaptiveOpts::default(), 8, 0);
+        // Fill 100µs vs exec 300µs: not cheap (> 0.25×exec), but a standing
+        // queue makes fusion pure throughput.
+        let backlogged = WindowSample { queue_depth: 3, ..window(100, 200, 100) };
+        assert_eq!(t.decide(&backlogged), None);
+        assert_eq!(t.decide(&backlogged), Some(Retune::GrowLinger(50)));
+        // Without the backlog the same trace holds.
+        let mut t = ModelTuner::new(AdaptiveOpts::default(), 8, 0);
+        let calm = window(100, 200, 100);
+        for _ in 0..4 {
+            assert_eq!(t.decide(&calm), None);
+        }
+    }
+
+    #[test]
+    fn per_model_budgets_widen_adaptive_bounds() {
+        let opts = AdaptiveOpts::default();
+        // A declared budget above the controller defaults is a floor.
+        let mut t = ModelTuner::new(opts.clone(), 64, 5_000);
+        assert_eq!(t.max_batch(), 64);
+        let pinned = window(10, 630, 10); // occupancy 63 ≥ 0.9 × 64
+        assert_eq!(t.decide(&pinned), None, "cap already at the widened bound");
+        // Linger above max_linger_us is kept, and shrink still works.
+        let spiky = window(50, 100, 400);
+        assert_eq!(t.decide(&spiky), Some(Retune::ShrinkLinger(2_500)));
+    }
+
+    #[test]
+    fn controller_ticks_apply_to_real_tuning_handles() {
+        use crate::engine::GaussMixtureFactory;
+        use crate::workers::{BatchOpts, EngineBank};
+
+        let metrics = Arc::new(ServingMetrics::new());
+        let stats = BatchStats::with_parent(metrics.batch.clone());
+        let bank = EngineBank::new(
+            Arc::new(GaussMixtureFactory::standard(vec![4], 3, 0)),
+            BatchOpts { engines: 1, max_batch: 8, linger: Duration::from_micros(0) },
+            stats.clone(),
+        )
+        .unwrap();
+        let mut ctl = AdaptiveController::new(
+            AdaptiveOpts { interval: Duration::ZERO, ..AdaptiveOpts::default() },
+            metrics.clone(),
+        );
+        assert!(ctl.is_empty());
+        ctl.register("gauss-mix-slow", bank.tuning(), stats.clone());
+        assert!(!ctl.is_empty());
+        assert_eq!(metrics.adaptive_models.load(Ordering::Relaxed), 1);
+        // Synthesize two quiet windows directly on the per-model stats.
+        for _ in 0..2 {
+            for _ in 0..20 {
+                stats.on_batch(2, 0, 600); // occupancy 2, exec 300µs/ batch
+            }
+            ctl.tick(&HashMap::new(), Instant::now());
+        }
+        assert_eq!(bank.tuning().linger_us(), 50, "controller retuned the live bank");
+        assert_eq!(metrics.adaptive_retunes.load(Ordering::Relaxed), 1);
+        assert_eq!(metrics.adaptive_linger_grow.load(Ordering::Relaxed), 1);
+        // Aggregate counters flowed through to the parent for queue_stats.
+        assert_eq!(metrics.batch.batches.load(Ordering::Relaxed), 40);
+        ctl.unregister("gauss-mix-slow");
+        assert!(ctl.is_empty());
+        assert_eq!(metrics.adaptive_models.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn hard_cap_clamps_reconcile_instead_of_respinning() {
+        use crate::engine::GaussMixtureFactory;
+        use crate::workers::{BatchOpts, EngineBank, LINGER_CAP_US};
+
+        let metrics = Arc::new(ServingMetrics::new());
+        let stats = BatchStats::with_parent(metrics.batch.clone());
+        // Bank hard cap: max(initial 0, LINGER_CAP_US) = LINGER_CAP_US.
+        let bank = EngineBank::new(
+            Arc::new(GaussMixtureFactory::standard(vec![4], 3, 0)),
+            BatchOpts { engines: 1, max_batch: 8, linger: Duration::from_micros(0) },
+            stats.clone(),
+        )
+        .unwrap();
+        // Controller configured beyond the bank's hard cap: the first grow
+        // proposal is clamped; the tuner must adopt the applied value and
+        // tighten its bound instead of re-proposing the unreachable one.
+        let mut ctl = AdaptiveController::new(
+            AdaptiveOpts {
+                interval: Duration::ZERO,
+                max_linger_us: 50_000,
+                linger_step_us: 30_000,
+                ..AdaptiveOpts::default()
+            },
+            metrics.clone(),
+        );
+        ctl.register("gauss-mix-slow", bank.tuning(), stats.clone());
+        let quiet_window = |ctl: &mut AdaptiveController| {
+            for _ in 0..20 {
+                stats.on_batch(2, 0, 600);
+            }
+            ctl.tick(&HashMap::new(), Instant::now());
+        };
+        quiet_window(&mut ctl); // hysteresis
+        quiet_window(&mut ctl); // GrowLinger(30_000) → clamped to the cap
+        assert_eq!(bank.tuning().linger_us(), LINGER_CAP_US);
+        assert_eq!(metrics.adaptive_retunes.load(Ordering::Relaxed), 1);
+        // Bound tightened to the cap: no further no-op retunes are counted.
+        for _ in 0..4 {
+            quiet_window(&mut ctl);
+        }
+        assert_eq!(bank.tuning().linger_us(), LINGER_CAP_US);
+        assert_eq!(metrics.adaptive_retunes.load(Ordering::Relaxed), 1);
+    }
+}

@@ -25,6 +25,7 @@ impl Default for Notify {
 }
 
 impl Notify {
+    /// A fresh notifier with no pending generation.
     pub fn new() -> Self {
         Self::default()
     }
@@ -54,6 +55,22 @@ impl Notify {
 }
 
 /// A global pot of leasable cores.
+///
+/// # Example
+///
+/// ```
+/// use chords::sched::CoreBudget;
+///
+/// let budget = CoreBudget::new(8);
+/// let lease = budget.try_lease(4, 4).unwrap();
+/// assert_eq!(budget.available(), 4);
+/// // Early-retired cores rejoin the pot mid-job…
+/// lease.release_one();
+/// assert_eq!(budget.available(), 5);
+/// // …and dropping the lease returns the rest.
+/// drop(lease);
+/// assert_eq!(budget.available(), 8);
+/// ```
 pub struct CoreBudget {
     total: usize,
     available: Mutex<usize>,
@@ -63,6 +80,7 @@ pub struct CoreBudget {
 }
 
 impl CoreBudget {
+    /// A pot of `total` cores, all initially available.
     pub fn new(total: usize) -> Arc<CoreBudget> {
         assert!(total >= 1, "budget needs at least one core");
         Arc::new(CoreBudget {
@@ -78,6 +96,7 @@ impl CoreBudget {
         *self.notify.lock().unwrap() = Some(n);
     }
 
+    /// Size of the pot (fixed at construction).
     pub fn total(&self) -> usize {
         self.total
     }

@@ -16,15 +16,16 @@
 //!    early-exit/rectification stopping rule rejoins the budget **mid-job**
 //!    and is immediately re-leasable.
 
+use super::adaptive::{AdaptiveController, AdaptiveOpts};
 use super::budget::{CoreBudget, Notify};
 use super::lease::CoreLease;
 use super::queue::{AdmissionQueue, Reject, Ticket};
-use crate::config::preset;
+use crate::config::{preset, EngineBudget, ModelPreset};
 use crate::engine::factory_for;
-use crate::metrics::ServingMetrics;
+use crate::metrics::{BatchStats, ServingMetrics};
 use crate::solvers::Euler;
 use crate::util::json::Json;
-use crate::workers::{BatchOpts, CorePool, PoolView};
+use crate::workers::{BatchOpts, BatchTuning, CorePool, PoolView};
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::channel;
@@ -60,6 +61,19 @@ pub struct DispatchOpts {
     pub max_batch: usize,
     /// Microseconds a filling batch waits for stragglers.
     pub batch_linger_us: u64,
+    /// Run the adaptive batching controller over every batched model
+    /// ([`super::adaptive`]); models whose [`EngineBudget::adaptive`] is set
+    /// are controlled even when this is off.
+    pub adaptive: bool,
+    /// Controller policy knobs (sampling interval, bounds, hysteresis).
+    pub adaptive_opts: AdaptiveOpts,
+    /// Per-model bank-shape overrides, keyed by preset name. Precedence for
+    /// a model's effective bank: override here → the preset's
+    /// [`crate::config::ModelPreset::engine_budget`] (only when batching is
+    /// enabled server-wide) → the global
+    /// [`DispatchOpts::engines_per_model`] knobs. An override with
+    /// `engines == 0` forces the dedicated-engine layout.
+    pub model_budgets: HashMap<String, EngineBudget>,
 }
 
 impl Default for DispatchOpts {
@@ -72,12 +86,15 @@ impl Default for DispatchOpts {
             engines_per_model: 0,
             max_batch: 8,
             batch_linger_us: 150,
+            adaptive: false,
+            adaptive_opts: AdaptiveOpts::default(),
+            model_budgets: HashMap::new(),
         }
     }
 }
 
 impl DispatchOpts {
-    /// Bank layout for model pools, `None` when batching is disabled.
+    /// Bank layout from the global knobs, `None` when batching is disabled.
     fn batch_opts(&self) -> Option<BatchOpts> {
         if self.engines_per_model == 0 {
             return None;
@@ -90,9 +107,29 @@ impl DispatchOpts {
     }
 }
 
+/// A model's effective bank layout after precedence resolution.
+struct ResolvedBank {
+    opts: BatchOpts,
+    /// Put the bank under the adaptive controller.
+    adaptive: bool,
+    /// The shape came from an explicit budget (override or preset): idle
+    /// reaping keeps the slot — and with it the bank's physical engines —
+    /// warm instead of dropping it, honouring the model's declared floor.
+    pinned: bool,
+}
+
+fn budget_opts(b: &EngineBudget) -> BatchOpts {
+    BatchOpts {
+        engines: b.engines,
+        max_batch: b.max_batch.max(1),
+        linger: Duration::from_micros(b.linger_us),
+    }
+}
+
 /// An admission request.
 #[derive(Clone, Debug)]
 pub struct JobSpec {
+    /// Preset name of the model to run.
     pub model: String,
     /// Cores wanted.
     pub cores: usize,
@@ -112,6 +149,9 @@ struct ModelSlot {
     free: Mutex<Vec<usize>>,
     /// Last lease/release touching this model; drives idle reaping.
     last_activity: Mutex<Instant>,
+    /// Declared-budget models keep their slot (and engine bank) across idle
+    /// reaping; only their warm logical workers are detached.
+    pinned: bool,
 }
 
 impl ModelSlot {
@@ -129,10 +169,53 @@ struct Shared {
     stop: AtomicBool,
     elastic: bool,
     idle_ttl: Duration,
-    /// Engine-bank layout for model pools (`None` = dedicated engines).
+    /// Engine-bank layout from the global knobs (`None` = dedicated
+    /// engines unless a per-model budget says otherwise).
     batch: Option<BatchOpts>,
+    /// Enable adaptive control for every batched model.
+    adaptive_default: bool,
+    /// Per-model bank overrides (highest precedence).
+    model_budgets: HashMap<String, EngineBudget>,
+    /// The adaptive batching controller; empty (and skipped by the
+    /// scheduler loop) until an adaptive bank registers.
+    controller: Mutex<AdaptiveController>,
     artifacts_dir: String,
     next_id: AtomicU64,
+}
+
+impl Shared {
+    /// Effective bank layout for `p` under the precedence rules documented
+    /// on [`DispatchOpts::model_budgets`]; `None` = dedicated engines.
+    fn resolve_bank(&self, p: &ModelPreset) -> Option<ResolvedBank> {
+        if let Some(b) = self.model_budgets.get(p.name) {
+            if b.engines == 0 {
+                return None;
+            }
+            return Some(ResolvedBank {
+                opts: budget_opts(b),
+                adaptive: b.adaptive || self.adaptive_default,
+                pinned: true,
+            });
+        }
+        // Preset budgets shape banks only once batching is enabled
+        // server-wide, so the default single-process experience (and every
+        // pre-existing test) keeps the dedicated layout.
+        if self.batch.is_none() && !self.adaptive_default {
+            return None;
+        }
+        if let Some(b) = p.engine_budget {
+            return Some(ResolvedBank {
+                opts: budget_opts(&b),
+                adaptive: b.adaptive || self.adaptive_default,
+                pinned: true,
+            });
+        }
+        self.batch.clone().map(|opts| ResolvedBank {
+            opts,
+            adaptive: self.adaptive_default,
+            pinned: false,
+        })
+    }
 }
 
 /// The elastic serving scheduler. Owns the budget, the queue, the per-model
@@ -143,11 +226,15 @@ pub struct Dispatcher {
 }
 
 impl Dispatcher {
+    /// Build the scheduler: budget, queue, per-model pool registry, the
+    /// adaptive controller, and the `chords-sched` thread (joined on drop).
     pub fn new(artifacts_dir: &str, opts: DispatchOpts) -> Dispatcher {
         let metrics = Arc::new(ServingMetrics::new());
         let notify = Arc::new(Notify::new());
         let budget = CoreBudget::new(opts.total_cores);
         budget.set_notify(notify.clone());
+        let controller =
+            Mutex::new(AdaptiveController::new(opts.adaptive_opts.clone(), metrics.clone()));
         let shared = Arc::new(Shared {
             budget,
             queue: AdmissionQueue::new(opts.queue_cap, metrics.clone()),
@@ -158,6 +245,9 @@ impl Dispatcher {
             elastic: opts.elastic_reclaim,
             idle_ttl: Duration::from_millis(opts.idle_ttl_ms),
             batch: opts.batch_opts(),
+            adaptive_default: opts.adaptive,
+            model_budgets: opts.model_budgets,
+            controller,
             artifacts_dir: artifacts_dir.to_string(),
             next_id: AtomicU64::new(1),
         });
@@ -169,20 +259,49 @@ impl Dispatcher {
         Dispatcher { shared, thread: Some(thread) }
     }
 
+    /// Size of the global core budget.
     pub fn total_cores(&self) -> usize {
         self.shared.budget.total()
     }
 
+    /// Admission-queue capacity.
     pub fn queue_cap(&self) -> usize {
         self.shared.queue.cap()
     }
 
+    /// Tickets currently queued.
     pub fn queue_depth(&self) -> usize {
         self.shared.queue.depth()
     }
 
+    /// Serving-path counters and gauges.
     pub fn metrics(&self) -> &Arc<ServingMetrics> {
         &self.shared.metrics
+    }
+
+    /// Per-model batch counters for a loaded, batched model (`None` for
+    /// unloaded models or the dedicated-engine layout). Observability hook
+    /// for tests, benches, and [`crate::sched::AdaptiveController`] users.
+    pub fn model_batch_stats(&self, model: &str) -> Option<Arc<BatchStats>> {
+        let slot = self.shared.models.lock().unwrap().get(model)?.clone();
+        let guard = slot.pool.lock().unwrap();
+        guard.batch_stats()
+    }
+
+    /// Live fusion knobs of a loaded, batched model's bank (`None`
+    /// otherwise). The values reflect any adaptive retuning.
+    pub fn model_tuning(&self, model: &str) -> Option<Arc<BatchTuning>> {
+        let slot = self.shared.models.lock().unwrap().get(model)?.clone();
+        let guard = slot.pool.lock().unwrap();
+        guard.batch_tuning()
+    }
+
+    /// Physical engine count of a loaded, batched model's bank (`None`
+    /// otherwise) — the resolved per-model budget made observable.
+    pub fn model_bank_engines(&self, model: &str) -> Option<usize> {
+        let slot = self.shared.models.lock().unwrap().get(model)?.clone();
+        let guard = slot.pool.lock().unwrap();
+        guard.bank_engines()
     }
 
     /// Models with a live pool (loaded at least once).
@@ -255,7 +374,8 @@ impl Drop for Dispatcher {
     }
 }
 
-/// Get-or-create the model's pool slot.
+/// Get-or-create the model's pool slot, resolving its per-model bank shape
+/// and putting adaptive banks under the controller.
 fn model_slot(shared: &Shared, model: &str) -> anyhow::Result<Arc<ModelSlot>> {
     let mut models = shared.models.lock().unwrap();
     if let Some(s) = models.get(model) {
@@ -264,23 +384,40 @@ fn model_slot(shared: &Shared, model: &str) -> anyhow::Result<Arc<ModelSlot>> {
     let p = preset(model).ok_or_else(|| anyhow::anyhow!("unknown model '{model}'"))?;
     let factory = factory_for(p, &shared.artifacts_dir)?;
     // Batched mode multiplexes the model's logical cores onto a shared
-    // engine bank whose counters surface through `queue_stats`.
-    let pool = match &shared.batch {
-        Some(opts) => CorePool::new_batched_with_stats(
-            0,
-            factory,
-            Arc::new(Euler),
-            opts.clone(),
-            shared.metrics.batch.clone(),
-        )?,
+    // engine bank; its per-model counters chain into the server-wide
+    // aggregate surfaced through `queue_stats`.
+    let resolved = shared.resolve_bank(p);
+    let mut pinned = false;
+    let mut register: Option<(Arc<BatchTuning>, Arc<BatchStats>)> = None;
+    let pool = match &resolved {
+        Some(r) => {
+            let stats = BatchStats::with_parent(shared.metrics.batch.clone());
+            let pool = CorePool::new_batched_with_stats(
+                0,
+                factory,
+                Arc::new(Euler),
+                r.opts.clone(),
+                stats.clone(),
+            )?;
+            pinned = r.pinned;
+            if r.adaptive {
+                register = Some((pool.batch_tuning().expect("batched pool has tuning"), stats));
+            }
+            pool
+        }
         None => CorePool::new(0, factory, Arc::new(Euler))?,
     };
     let slot = Arc::new(ModelSlot {
         pool: Mutex::new(pool),
         free: Mutex::new(Vec::new()),
         last_activity: Mutex::new(Instant::now()),
+        pinned,
     });
     models.insert(model.to_string(), slot.clone());
+    drop(models);
+    if let Some((tuning, stats)) = register {
+        shared.controller.lock().unwrap().register(model, tuning, stats);
+    }
     Ok(slot)
 }
 
@@ -350,6 +487,15 @@ fn pass(shared: &Arc<Shared>) {
         }
     }
     reap_idle(shared);
+    // Adaptive batching: fold the window's batch counters into each
+    // registered model's tuner. Self-rate-limited per model; a no-op when
+    // nothing is under adaptive control.
+    {
+        let mut ctl = shared.controller.lock().unwrap();
+        if !ctl.is_empty() {
+            ctl.tick(&shared.queue.depths_by_model(), Instant::now());
+        }
+    }
 }
 
 /// Assign workers and deliver the outcome to the submitter. A failed send
@@ -372,9 +518,12 @@ fn finish_grant(shared: &Arc<Shared>, ticket: Ticket<JobGrant>, lease: CoreLease
 /// ratcheting up to the historical peak forever. Once a model has no live
 /// workers left, its whole slot is dropped from the registry — releasing
 /// the [`crate::workers::EngineBank`] physical engines too (under batching
-/// they are the expensive resource: real PJRT replicas). In-flight jobs
-/// hold their own `Arc<ModelSlot>`, so an orphaned slot stays functional
-/// until the last grant drops; the next request simply rebuilds the slot.
+/// they are the expensive resource: real PJRT replicas) — *unless* the
+/// model carries a declared [`EngineBudget`] (override or preset): those
+/// banks are the model's floor and stay warm; only the logical workers are
+/// detached. In-flight jobs hold their own `Arc<ModelSlot>`, so an
+/// orphaned slot stays functional until the last grant drops; the next
+/// request simply rebuilds the slot.
 fn reap_idle(shared: &Arc<Shared>) {
     let slots: Vec<(String, Arc<ModelSlot>)> = shared
         .models
@@ -398,6 +547,9 @@ fn reap_idle(shared: &Arc<Shared>) {
                 continue; // leased workers still out — keep the slot
             }
         }
+        if slot.pinned {
+            continue; // declared budget = engine floor; keep the bank warm
+        }
         let mut models = shared.models.lock().unwrap();
         // Re-check under the registry lock: only drop the exact slot we
         // inspected, and only if it stayed idle (a racing grant touches
@@ -407,6 +559,13 @@ fn reap_idle(shared: &Arc<Shared>) {
                 && slot.last_activity.lock().unwrap().elapsed() >= shared.idle_ttl
             {
                 models.remove(&name);
+                // The bank is gone; stop retuning it. Unregistering while
+                // still holding the registry lock keeps this ordered before
+                // any rebuild's insert+register (model_slot serializes its
+                // insert behind this lock and registers afterwards), so a
+                // stale unregister can never tear down a successor slot's
+                // registration.
+                shared.controller.lock().unwrap().unregister(&name);
             }
         }
     }
@@ -467,6 +626,7 @@ fn assign_workers(
 /// bookkeeping that returns both — incrementally via [`JobGrant::retire_core`]
 /// or in full when dropped.
 pub struct JobGrant {
+    /// Preset name the grant's workers serve.
     pub model: String,
     granted: usize,
     lease: Option<CoreLease>,
@@ -719,6 +879,141 @@ mod tests {
         assert!(drifts >= batches, "every batch carries ≥ 1 drift");
         // 4 cores × ~30 lockstep steps all flowed through the bank.
         assert!(drifts > 30, "bank served the job's NFEs, saw {drifts}");
+    }
+
+    #[test]
+    fn model_budget_override_shapes_the_bank() {
+        let mut budgets = HashMap::new();
+        budgets.insert(
+            "gauss-mix".to_string(),
+            EngineBudget { engines: 3, max_batch: 2, linger_us: 75, adaptive: false },
+        );
+        budgets.insert(
+            "exp-ode".to_string(),
+            EngineBudget { engines: 0, max_batch: 1, linger_us: 0, adaptive: false },
+        );
+        let d = Dispatcher::new(
+            "artifacts",
+            DispatchOpts {
+                total_cores: 4,
+                queue_cap: 8,
+                engines_per_model: 1, // global default the overrides beat
+                max_batch: 8,
+                model_budgets: budgets,
+                ..DispatchOpts::default()
+            },
+        );
+        let g = d.submit(spec("gauss-mix", 2)).unwrap();
+        assert_eq!(d.model_bank_engines("gauss-mix"), Some(3), "override engines");
+        let t = d.model_tuning("gauss-mix").unwrap();
+        assert_eq!(t.max_batch(), 2, "override max_batch");
+        assert_eq!(t.linger_us(), 75, "override linger");
+        drop(g);
+        // engines = 0 forces the dedicated layout despite global batching.
+        let g = d.submit(spec("exp-ode", 2)).unwrap();
+        assert_eq!(d.model_bank_engines("exp-ode"), None);
+        assert!(d.model_batch_stats("exp-ode").is_none());
+        drop(g);
+        // A model with neither override nor preset budget uses the globals.
+        let g = d.submit(spec("exp-ode-slow", 2)).unwrap();
+        assert_eq!(d.model_bank_engines("exp-ode-slow"), Some(1));
+        assert_eq!(d.model_tuning("exp-ode-slow").unwrap().max_batch(), 8);
+        drop(g);
+    }
+
+    #[test]
+    fn preset_budgets_apply_only_when_batching_enabled() {
+        // Batching disabled: the gauss-mix preset budget stays dormant and
+        // the classic dedicated layout is used.
+        let d = dispatcher(4, 8);
+        let g = d.submit(spec("gauss-mix", 2)).unwrap();
+        assert_eq!(d.model_bank_engines("gauss-mix"), None);
+        drop(g);
+        // Global batching on: the preset budget (2 engines, max_batch 4,
+        // linger 100µs) outranks the global knobs.
+        let d = Dispatcher::new(
+            "artifacts",
+            DispatchOpts {
+                total_cores: 4,
+                queue_cap: 8,
+                engines_per_model: 1,
+                max_batch: 8,
+                batch_linger_us: 500,
+                ..DispatchOpts::default()
+            },
+        );
+        let g = d.submit(spec("gauss-mix", 2)).unwrap();
+        assert_eq!(d.model_bank_engines("gauss-mix"), Some(2));
+        let t = d.model_tuning("gauss-mix").unwrap();
+        assert_eq!(t.max_batch(), 4);
+        assert_eq!(t.linger_us(), 100);
+        drop(g);
+    }
+
+    #[test]
+    fn adaptive_mode_registers_batched_models() {
+        let d = Dispatcher::new(
+            "artifacts",
+            DispatchOpts {
+                total_cores: 4,
+                queue_cap: 8,
+                engines_per_model: 2,
+                adaptive: true,
+                ..DispatchOpts::default()
+            },
+        );
+        let mut g = d.submit(spec("gauss-mix", 4)).unwrap();
+        assert_eq!(
+            d.metrics().adaptive_models.load(Ordering::Relaxed),
+            1,
+            "bank placed under the controller"
+        );
+        assert_eq!(run_job(&mut g, 30, 1), 4, "adaptive mode serves jobs");
+        drop(g);
+        assert!(!d.shared.controller.lock().unwrap().is_empty());
+    }
+
+    #[test]
+    fn pinned_budget_slot_survives_idle_reaping() {
+        let mut budgets = HashMap::new();
+        budgets.insert(
+            "gauss-mix".to_string(),
+            EngineBudget { engines: 2, max_batch: 4, linger_us: 100, adaptive: true },
+        );
+        let d = Dispatcher::new(
+            "artifacts",
+            DispatchOpts {
+                total_cores: 2,
+                queue_cap: 4,
+                idle_ttl_ms: 50,
+                model_budgets: budgets,
+                ..DispatchOpts::default()
+            },
+        );
+        let mut g = d.submit(spec("gauss-mix", 2)).unwrap();
+        run_job(&mut g, 20, 1);
+        drop(g);
+        let slot = d.shared.models.lock().unwrap().get("gauss-mix").unwrap().clone();
+        // Warm logical workers are still reaped after the TTL…
+        let t0 = Instant::now();
+        loop {
+            let free = slot.free.lock().unwrap().len();
+            let live = slot.pool.lock().unwrap().size();
+            if free == 0 && live == 0 {
+                break;
+            }
+            assert!(t0.elapsed() < Duration::from_secs(5), "warm workers were not reaped");
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        // …but the slot (the model's engine floor) and its controller
+        // registration stay put well past the TTL.
+        std::thread::sleep(Duration::from_millis(200));
+        assert!(
+            d.loaded_models().contains(&"gauss-mix".to_string()),
+            "declared-budget slot must not be reaped"
+        );
+        assert_eq!(d.model_bank_engines("gauss-mix"), Some(2));
+        assert_eq!(d.metrics().adaptive_models.load(Ordering::Relaxed), 1);
     }
 
     #[test]

@@ -1,5 +1,5 @@
 //! Elastic serving scheduler: a global core budget, admission queues with
-//! backpressure, and mid-job core reclamation.
+//! backpressure, mid-job core reclamation, and adaptive batching control.
 //!
 //! CHORDS frames parallel sampling as a core-allocation problem (as do
 //! ParaDIGMS and SRDS): cores are the scarce resource, and the solver
@@ -21,14 +21,22 @@
 //!   `overloaded` error instead of blocking;
 //! - [`dispatch`] — [`dispatch::Dispatcher`], the scheduler thread that
 //!   grants tickets against the budget, assigns workers from elastically
-//!   grown per-model pools, and supports concurrent same-model jobs over
-//!   disjoint [`crate::workers::PoolView`]s.
+//!   grown per-model pools (shaped by per-model
+//!   [`crate::config::EngineBudget`]s under batching), and supports
+//!   concurrent same-model jobs over disjoint [`crate::workers::PoolView`]s;
+//! - [`adaptive`] — [`adaptive::AdaptiveController`], the feedback loop
+//!   that retunes each model's batching knobs online from observed
+//!   occupancy, fill wait, and queue depth.
 
+#![warn(missing_docs)]
+
+pub mod adaptive;
 pub mod budget;
 pub mod dispatch;
 pub mod lease;
 pub mod queue;
 
+pub use adaptive::{AdaptiveController, AdaptiveOpts, ModelTuner, Retune, WindowSample};
 pub use budget::{CoreBudget, Notify};
 pub use dispatch::{DispatchOpts, Dispatcher, JobGrant, JobSpec};
 pub use lease::CoreLease;

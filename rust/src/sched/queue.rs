@@ -18,7 +18,10 @@ use std::time::Instant;
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub enum Reject {
     /// The queue was at capacity (backpressure).
-    QueueFull { cap: usize },
+    QueueFull {
+        /// The queue capacity that was hit.
+        cap: usize,
+    },
     /// The ticket's deadline passed while it was queued.
     DeadlineExceeded,
     /// The dispatcher is shutting down.
@@ -55,7 +58,9 @@ impl std::fmt::Display for Reject {
 /// A queued admission request. `outcome` is the rendezvous back to the
 /// blocked submitter; the payload type `G` is the dispatcher's grant.
 pub struct Ticket<G> {
+    /// Arrival id (FIFO order within a priority).
     pub id: u64,
+    /// Preset name of the model the job wants.
     pub model: String,
     /// Cores the request wants.
     pub want_cores: usize,
@@ -63,8 +68,11 @@ pub struct Ticket<G> {
     pub min_cores: usize,
     /// Higher wins. Default 0.
     pub priority: i32,
+    /// When the ticket entered the queue (wait-time accounting).
     pub enqueued: Instant,
+    /// Reject with code `deadline` if still queued at this instant.
     pub deadline: Option<Instant>,
+    /// Rendezvous back to the blocked submitter.
     pub outcome: Sender<Result<G, Reject>>,
 }
 
@@ -102,6 +110,7 @@ fn insert_pos<G>(items: &[Ticket<G>], ticket: &Ticket<G>) -> usize {
 }
 
 impl<G> AdmissionQueue<G> {
+    /// A bounded queue reporting depth changes to `metrics`.
     pub fn new(cap: usize, metrics: Arc<ServingMetrics>) -> AdmissionQueue<G> {
         assert!(cap >= 1, "queue capacity must be at least 1");
         AdmissionQueue {
@@ -111,12 +120,26 @@ impl<G> AdmissionQueue<G> {
         }
     }
 
+    /// Capacity (backpressure bound).
     pub fn cap(&self) -> usize {
         self.cap
     }
 
+    /// Tickets currently queued.
     pub fn depth(&self) -> usize {
         self.inner.lock().unwrap().items.len()
+    }
+
+    /// Queued-ticket count per model (the adaptive controller's per-model
+    /// backlog signal — one model's flood must not flip another model's
+    /// tuner into throughput mode).
+    pub fn depths_by_model(&self) -> std::collections::HashMap<String, usize> {
+        let q = self.inner.lock().unwrap();
+        let mut depths = std::collections::HashMap::new();
+        for t in &q.items {
+            *depths.entry(t.model.clone()).or_insert(0) += 1;
+        }
+        depths
     }
 
     /// Enqueue a ticket, keeping (priority desc, id asc) order. Fails with
@@ -310,6 +333,20 @@ mod tests {
         assert_eq!(order, vec![1, 2, 3]);
         q.close();
         assert!(q.requeue(ticket(4, 0, 1).0).is_some(), "closed queue bounces requeues");
+    }
+
+    #[test]
+    fn depths_by_model_counts_per_model() {
+        let q = queue(8);
+        q.push(ticket(1, 0, 1).0).unwrap();
+        q.push(ticket(2, 0, 1).0).unwrap();
+        let (mut t3, _rx) = ticket(3, 0, 1);
+        t3.model = "exp-ode".into();
+        q.push(t3).unwrap();
+        let d = q.depths_by_model();
+        assert_eq!(d.get("gauss-mix"), Some(&2));
+        assert_eq!(d.get("exp-ode"), Some(&1));
+        assert_eq!(d.get("nope"), None);
     }
 
     #[test]

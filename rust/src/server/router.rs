@@ -112,6 +112,8 @@ impl Router {
         )
     }
 
+    /// Build a router over a dispatcher configured from `cfg` (including
+    /// per-model engine budgets and the adaptive batching controller).
     pub fn with_opts(artifacts_dir: &str, cfg: ServeConfig) -> Router {
         let dispatcher = Dispatcher::new(
             artifacts_dir,
@@ -123,6 +125,9 @@ impl Router {
                 engines_per_model: cfg.engines_per_model,
                 max_batch: cfg.max_batch,
                 batch_linger_us: cfg.batch_linger_us,
+                adaptive: cfg.adaptive_batching,
+                model_budgets: cfg.model_budgets.iter().cloned().collect(),
+                ..DispatchOpts::default()
             },
         );
         Router {

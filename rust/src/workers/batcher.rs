@@ -27,7 +27,7 @@
 use crate::engine::{DriftEngine, EngineFactory};
 use crate::metrics::BatchStats;
 use crate::tensor::Tensor;
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender, TryRecvError};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
@@ -37,6 +37,75 @@ use std::time::{Duration, Instant};
 /// bounding [`EngineBank`] teardown latency regardless of live client
 /// handles.
 const STOP_POLL: Duration = Duration::from_millis(20);
+
+/// Hard ceiling any retuned `max_batch` is clamped to (a statically
+/// configured value above this raises the ceiling to itself).
+pub const MAX_BATCH_CAP: usize = 64;
+
+/// Hard ceiling (µs) any retuned linger is clamped to (a statically
+/// configured value above this raises the ceiling to itself).
+pub const LINGER_CAP_US: u64 = 10_000;
+
+/// Live-retunable fusion knobs of an [`EngineBank`]: engine threads read
+/// them at the start of every batch; the adaptive controller
+/// ([`crate::sched::AdaptiveController`]) writes them online.
+///
+/// Safety of retuning: the knobs only decide how drift requests *group*
+/// into fused invocations — never what any invocation computes — so the
+/// bit-identical guarantee of [`DriftEngine::drift_batch`] holds at every
+/// setting, and a retune can land between any two batches without a
+/// correctness handshake. Writes are clamped to hard caps fixed at bank
+/// construction ([`MAX_BATCH_CAP`] / [`LINGER_CAP_US`], raised to the
+/// initial static values if those are larger).
+pub struct BatchTuning {
+    max_batch: AtomicUsize,
+    linger_us: AtomicU64,
+    cap_max_batch: usize,
+    cap_linger_us: u64,
+}
+
+impl BatchTuning {
+    fn new(opts: &BatchOpts) -> Arc<BatchTuning> {
+        let linger_us = opts.linger.as_micros() as u64;
+        Arc::new(BatchTuning {
+            max_batch: AtomicUsize::new(opts.max_batch.max(1)),
+            linger_us: AtomicU64::new(linger_us),
+            cap_max_batch: opts.max_batch.max(MAX_BATCH_CAP),
+            cap_linger_us: linger_us.max(LINGER_CAP_US),
+        })
+    }
+
+    /// Current fusion-size limit (≥ 1).
+    pub fn max_batch(&self) -> usize {
+        self.max_batch.load(Ordering::Relaxed)
+    }
+
+    /// Current linger window in microseconds.
+    pub fn linger_us(&self) -> u64 {
+        self.linger_us.load(Ordering::Relaxed)
+    }
+
+    /// Current linger window as a [`Duration`].
+    pub fn linger(&self) -> Duration {
+        Duration::from_micros(self.linger_us())
+    }
+
+    /// Set the fusion-size limit, clamped to `[1, cap]`; returns the value
+    /// actually applied.
+    pub fn set_max_batch(&self, v: usize) -> usize {
+        let v = v.clamp(1, self.cap_max_batch);
+        self.max_batch.store(v, Ordering::Relaxed);
+        v
+    }
+
+    /// Set the linger window (µs), clamped to the hard cap; returns the
+    /// value actually applied.
+    pub fn set_linger_us(&self, v: u64) -> u64 {
+        let v = v.min(self.cap_linger_us);
+        self.linger_us.store(v, Ordering::Relaxed);
+        v
+    }
+}
 
 /// Knobs for an [`EngineBank`].
 #[derive(Clone, Debug)]
@@ -76,6 +145,7 @@ pub struct EngineBank {
     handles: Vec<JoinHandle<()>>,
     stop: Arc<AtomicBool>,
     stats: Arc<BatchStats>,
+    tuning: Arc<BatchTuning>,
     dims: Vec<usize>,
     client_name: String,
     opts: BatchOpts,
@@ -94,6 +164,7 @@ impl EngineBank {
     ) -> anyhow::Result<EngineBank> {
         assert!(opts.engines >= 1, "EngineBank needs at least one physical engine");
         let opts = BatchOpts { max_batch: opts.max_batch.max(1), ..opts };
+        let tuning = BatchTuning::new(&opts);
         let (tx, rx) = channel::<DriftRequest>();
         let rx = Arc::new(Mutex::new(rx));
         let stop = Arc::new(AtomicBool::new(false));
@@ -103,12 +174,12 @@ impl EngineBank {
             let factory = factory.clone();
             let rx = rx.clone();
             let stop2 = stop.clone();
-            let opts2 = opts.clone();
+            let tuning2 = tuning.clone();
             let stats2 = stats.clone();
             let ready = ready_tx.clone();
             let handle = std::thread::Builder::new()
                 .name(format!("chords-engine-{e}"))
-                .spawn(move || engine_main(factory, rx, stop2, opts2, stats2, ready))
+                .spawn(move || engine_main(factory, rx, stop2, tuning2, stats2, ready))
                 .expect("spawn engine thread");
             handles.push(handle);
         }
@@ -137,19 +208,29 @@ impl EngineBank {
             handles,
             stop,
             stats,
+            tuning,
             dims: factory.dims(),
             client_name: format!("batched:{inner_name}"),
             opts,
         })
     }
 
-    /// Shared batch counters (occupancy, fill wait).
+    /// Shared batch counters (occupancy, fill wait, exec time).
     pub fn stats(&self) -> Arc<BatchStats> {
         self.stats.clone()
     }
 
+    /// The bank's construction-time knobs. `max_batch`/`linger` here are
+    /// the *initial* values; the live (possibly retuned) ones are read
+    /// through [`EngineBank::tuning`].
     pub fn opts(&self) -> &BatchOpts {
         &self.opts
+    }
+
+    /// Live fusion knobs — hand to the adaptive controller to retune this
+    /// bank online.
+    pub fn tuning(&self) -> Arc<BatchTuning> {
+        self.tuning.clone()
     }
 
     /// An [`EngineFactory`] producing cheap [`RemoteEngine`] client handles
@@ -184,11 +265,14 @@ impl Drop for EngineBank {
 /// batch instead of starting a competing one, and the hold is bounded by
 /// `linger`. Returns the batch plus its fill wait (first arrival →
 /// dispatch), or `None` when the queue has disconnected.
+///
+/// The live knobs are read from `tuning` once per batch, so every batch
+/// groups under one consistent `(max_batch, linger)` setting and an
+/// adaptive retune takes effect exactly at a batch boundary.
 fn collect_batch(
     rx: &Mutex<Receiver<DriftRequest>>,
     stop: &AtomicBool,
-    max_batch: usize,
-    linger: Duration,
+    tuning: &BatchTuning,
 ) -> Option<(Vec<DriftRequest>, u64)> {
     let rx = rx.lock().unwrap();
     let first = loop {
@@ -201,6 +285,8 @@ fn collect_batch(
             Err(RecvTimeoutError::Disconnected) => return None,
         }
     };
+    let max_batch = tuning.max_batch();
+    let linger = tuning.linger();
     let t0 = Instant::now();
     let deadline = t0 + linger;
     let mut batch = vec![first];
@@ -229,7 +315,7 @@ fn engine_main(
     factory: Arc<dyn EngineFactory>,
     rx: Arc<Mutex<Receiver<DriftRequest>>>,
     stop: Arc<AtomicBool>,
-    opts: BatchOpts,
+    tuning: Arc<BatchTuning>,
     stats: Arc<BatchStats>,
     ready: Sender<anyhow::Result<String>>,
 ) {
@@ -243,9 +329,7 @@ fn engine_main(
             return;
         }
     };
-    while let Some((batch, fill_wait_us)) =
-        collect_batch(&rx, &stop, opts.max_batch, opts.linger)
-    {
+    while let Some((batch, fill_wait_us)) = collect_batch(&rx, &stop, &tuning) {
         let mut xs = Vec::with_capacity(batch.len());
         let mut ts = Vec::with_capacity(batch.len());
         let mut routes = Vec::with_capacity(batch.len());
@@ -254,9 +338,11 @@ fn engine_main(
             ts.push(req.t);
             routes.push((req.tag, req.reply));
         }
+        let t_exec = Instant::now();
         let outs = engine.drift_batch(&xs, &ts);
+        let exec_us = t_exec.elapsed().as_micros() as u64;
         debug_assert_eq!(outs.len(), routes.len(), "drift_batch must be 1:1");
-        stats.on_batch(routes.len(), fill_wait_us);
+        stats.on_batch(routes.len(), fill_wait_us, exec_us);
         for ((tag, reply), out) in routes.into_iter().zip(outs) {
             // A dropped client (its worker detached mid-flight) is fine.
             let _ = reply.send((tag, out));
@@ -425,6 +511,29 @@ mod tests {
         let ts = vec![0.1f32; 5];
         let outs = e.drift_batch(&xs, &ts);
         assert_eq!(outs, xs);
+    }
+
+    #[test]
+    fn tuning_retunes_live_and_clamps_to_caps() {
+        let b = bank(1, 4, 100);
+        let t = b.tuning();
+        assert_eq!(t.max_batch(), 4);
+        assert_eq!(t.linger_us(), 100);
+        assert_eq!(t.set_max_batch(0), 1, "floor of 1");
+        assert_eq!(t.set_max_batch(1000), MAX_BATCH_CAP, "hard cap");
+        assert_eq!(t.set_linger_us(1_000_000), LINGER_CAP_US, "hard cap");
+        // Retune to the no-fusion setting: subsequent sequential drifts
+        // dispatch as singleton batches.
+        t.set_max_batch(1);
+        t.set_linger_us(0);
+        let stats = b.stats();
+        let mut e = b.client_factory().create().unwrap();
+        let x = Tensor::full(&[8], 1.0);
+        for _ in 0..3 {
+            e.drift(&x, 0.5);
+        }
+        assert_eq!(stats.batches.load(Ordering::Relaxed), 3);
+        assert_eq!(stats.peak_batch.load(Ordering::Relaxed), 1);
     }
 
     #[test]

@@ -1,11 +1,22 @@
 //! Worker-thread substrate: one OS thread per compute core, each owning its
-//! private [`DriftEngine`] (its "GPU"). Mirrors the paper's one-model-replica
-//! -per-core deployment and respects the xla crate's thread-affinity (PJRT
-//! handles are created and used on the worker's own thread).
+//! private [`crate::engine::DriftEngine`] (its "GPU"). Mirrors the paper's
+//! one-model-replica-per-core deployment and respects the xla crate's
+//! thread-affinity (PJRT handles are created and used on the worker's own
+//! thread).
+//!
+//! Three layers:
+//! - [`pool`] — [`CorePool`]: elastic worker threads, per-job [`PoolView`]
+//!   routing, and the executor-facing [`WorkerSet`] trait;
+//! - [`batcher`] — [`EngineBank`]: logical cores multiplexed onto shared
+//!   physical engines with live-retunable fusion knobs ([`BatchTuning`]);
+//! - [`taskgraph`] — a K-core list scheduler used by the SRDS baseline's
+//!   pipelined-makespan accounting.
 
-mod batcher;
-mod pool;
-mod taskgraph;
+#![warn(missing_docs)]
+
+pub mod batcher;
+pub mod pool;
+pub mod taskgraph;
 
 pub use batcher::*;
 pub use pool::*;

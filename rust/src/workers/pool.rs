@@ -15,7 +15,7 @@
 //! - the [`WorkerSet`] trait, the executor-facing abstraction implemented by
 //!   both the whole pool and a view.
 
-use super::batcher::{BatchOpts, EngineBank};
+use super::batcher::{BatchOpts, BatchTuning, EngineBank};
 use crate::engine::EngineFactory;
 use crate::metrics::BatchStats;
 use crate::solvers::StepRule;
@@ -27,9 +27,21 @@ use std::thread::JoinHandle;
 /// A job executed on a worker's engine.
 pub enum Job {
     /// Advance `(x, t → t2)` with the pool's step rule; reply `(x', f(x,t))`.
-    Step { x: Tensor, t: f32, t2: f32 },
+    Step {
+        /// State to advance.
+        x: Tensor,
+        /// Start time.
+        t: f32,
+        /// End time.
+        t2: f32,
+    },
     /// Evaluate `f(x, t)` only; reply `(f, f)` (both slots carry the drift).
-    Drift { x: Tensor, t: f32 },
+    Drift {
+        /// State to evaluate at.
+        x: Tensor,
+        /// Evaluation time.
+        t: f32,
+    },
     /// Route subsequent replies to this sender (per-job reply channels).
     Route(Sender<Reply>),
     /// Shut the worker down.
@@ -168,6 +180,17 @@ impl CorePool {
         self.bank.as_ref().map(|b| b.stats())
     }
 
+    /// Live fusion knobs of the underlying [`EngineBank`], when batched —
+    /// the adaptive controller's write handle.
+    pub fn batch_tuning(&self) -> Option<Arc<BatchTuning>> {
+        self.bank.as_ref().map(|b| b.tuning())
+    }
+
+    /// Physical engine count of the underlying [`EngineBank`], when batched.
+    pub fn bank_engines(&self) -> Option<usize> {
+        self.bank.as_ref().map(|b| b.opts().engines)
+    }
+
     /// Live worker count.
     pub fn size(&self) -> usize {
         self.slots.iter().filter(|s| s.is_some()).count()
@@ -178,6 +201,7 @@ impl CorePool {
         self.slots.len()
     }
 
+    /// Latent dims the pool's engines accept.
     pub fn dims(&self) -> Vec<usize> {
         self.dims.clone()
     }

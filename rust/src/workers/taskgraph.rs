@@ -10,8 +10,11 @@ use std::collections::HashMap;
 
 /// A unit of work: `cost` NFEs, executed once all `deps` finished.
 pub struct Task {
+    /// Unique task id referenced by `deps`.
     pub id: usize,
+    /// Ids of the tasks that must finish before this one may start.
     pub deps: Vec<usize>,
+    /// NFEs this task charges against the makespan.
     pub cost: u64,
     /// The actual computation (runs on the scheduling thread in dependency
     /// order for numerical determinism; parallel wall-clock is modelled by

@@ -13,7 +13,7 @@
 
 use chords::config::ServeConfig;
 use chords::sched::JobSpec;
-use chords::server::{Client, Router, Server};
+use chords::server::{Client, GenRequest, Router, Server};
 use chords::util::json::Json;
 use std::sync::atomic::Ordering;
 use std::sync::{Arc, Barrier};
@@ -227,6 +227,168 @@ fn priority_orders_admission() {
     high.join().unwrap();
     low.join().unwrap();
     assert_eq!(first, "high", "high-priority ticket admitted first");
+}
+
+/// Run `clients` threads, each firing `reqs_per_client` in-process
+/// generation requests for `model` at the given core width. Panics on any
+/// request failure.
+fn run_phase(
+    router: &Arc<Router>,
+    model: &str,
+    clients: u64,
+    reqs_per_client: usize,
+    cores: usize,
+) {
+    let barrier = Arc::new(Barrier::new(clients as usize));
+    let mut handles = Vec::new();
+    for c in 0..clients {
+        let router = router.clone();
+        let barrier = barrier.clone();
+        let model = model.to_string();
+        handles.push(std::thread::spawn(move || {
+            barrier.wait();
+            for i in 0..reqs_per_client {
+                let req = GenRequest {
+                    model: model.clone(),
+                    steps: 50,
+                    cores,
+                    seed: c * 1000 + i as u64,
+                    ..Default::default()
+                };
+                router.generate(&req, |_, _, _| {}).unwrap();
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+}
+
+/// Converged-phase fusion occupancy for `gauss-mix-slow` under `cfg`:
+/// drive a warm-up phase (the adaptive controller converges during it),
+/// then measure mean occupancy over a fresh counter window so start-up
+/// transients don't dilute the comparison.
+fn tail_occupancy(cfg: ServeConfig) -> (f64, Arc<Router>) {
+    let router = Arc::new(Router::with_opts("artifacts", cfg));
+    run_phase(&router, "gauss-mix-slow", 2, 16, 4);
+    let stats = router
+        .dispatcher()
+        .model_batch_stats("gauss-mix-slow")
+        .expect("gauss-mix-slow bank loaded");
+    let b0 = stats.batches.load(Ordering::Relaxed);
+    let d0 = stats.batched_drifts.load(Ordering::Relaxed);
+    run_phase(&router, "gauss-mix-slow", 2, 6, 4);
+    let db = stats.batches.load(Ordering::Relaxed) - b0;
+    let dd = stats.batched_drifts.load(Ordering::Relaxed) - d0;
+    (dd as f64 / db.max(1) as f64, router)
+}
+
+/// The adaptive acceptance scenario: starting from the *worst* static
+/// setting (linger 0), adaptive mode must converge to at least the fusion
+/// occupancy of the best static configuration — no hand-tuning.
+#[test]
+fn adaptive_converges_to_best_static_occupancy() {
+    let base = ServeConfig {
+        total_cores: 16,
+        queue_cap: 64,
+        engines_per_model: 2,
+        max_batch: 8,
+        ..ServeConfig::default()
+    };
+    let mut best_static = 0.0f64;
+    for linger in [0u64, 200] {
+        let (occ, _) = tail_occupancy(ServeConfig { batch_linger_us: linger, ..base.clone() });
+        best_static = best_static.max(occ);
+    }
+    let (adaptive_occ, router) = tail_occupancy(ServeConfig {
+        batch_linger_us: 0, // deliberately the bad setting; the controller must recover
+        adaptive_batching: true,
+        ..base
+    });
+    // The controller was live on the model's bank…
+    let j = router.queue_stats();
+    assert_eq!(j.get("adaptive_models").unwrap().as_usize().unwrap(), 1, "{j:?}");
+    // …and converged to (at least) the best static setting's fusion, with a
+    // small margin for scheduling noise on loaded CI machines.
+    assert!(
+        adaptive_occ >= best_static * 0.85,
+        "adaptive occupancy {adaptive_occ:.2} below best static {best_static:.2}"
+    );
+}
+
+/// Adaptive mode never changes numerics: the same requests produce
+/// bit-identical latents with the controller retuning a batched bank and
+/// with the classic dedicated layout. Every retune lands on a batch
+/// boundary and only regroups work, so this holds at every setting.
+#[test]
+fn adaptive_serving_stays_bit_identical() {
+    let run = |adaptive: bool| {
+        let cfg = ServeConfig {
+            total_cores: 4,
+            engines_per_model: if adaptive { 2 } else { 0 },
+            max_batch: 8,
+            batch_linger_us: 0,
+            adaptive_batching: adaptive,
+            ..ServeConfig::default()
+        };
+        let router = Router::with_opts("artifacts", cfg);
+        let req = GenRequest {
+            model: "gauss-mix-slow".into(),
+            steps: 40,
+            cores: 4,
+            seed: 11,
+            ..Default::default()
+        };
+        (0..3)
+            .map(|_| router.generate(&req, |_, _, _| {}).unwrap().final_output)
+            .collect::<Vec<_>>()
+    };
+    assert_eq!(run(false), run(true), "adaptive batching changed outputs");
+}
+
+/// Per-model engine budgets give heavy and light models differently shaped
+/// banks: the heavy model fuses deeply on its own 2-engine bank while the
+/// light model's `max_batch = 1` bank never delays or fuses a request —
+/// concurrent heavy load cannot starve it through a shared linger policy.
+#[test]
+fn per_model_budgets_isolate_heavy_from_light() {
+    let mut cfg = ServeConfig {
+        total_cores: 12,
+        queue_cap: 32,
+        engines_per_model: 2, // global default both budgets override
+        max_batch: 4,
+        batch_linger_us: 150,
+        ..ServeConfig::default()
+    };
+    cfg.set("model_budget", "gauss-mix-slow=2:8:500,exp-ode-slow=1:1:0").unwrap();
+    let router = Arc::new(Router::with_opts("artifacts", cfg));
+    // Two heavy 4-core clients and one light 2-core client, concurrently.
+    let heavy_router = router.clone();
+    let heavy = std::thread::spawn(move || {
+        run_phase(&heavy_router, "gauss-mix-slow", 2, 4, 4);
+    });
+    run_phase(&router, "exp-ode-slow", 1, 4, 2);
+    heavy.join().unwrap();
+    let d = router.dispatcher();
+    assert_eq!(d.model_bank_engines("gauss-mix-slow"), Some(2), "heavy budget applied");
+    assert_eq!(d.model_bank_engines("exp-ode-slow"), Some(1), "light budget applied");
+    let heavy_stats = d.model_batch_stats("gauss-mix-slow").unwrap();
+    let light_stats = d.model_batch_stats("exp-ode-slow").unwrap();
+    assert_eq!(light_stats.peak_batch.load(Ordering::Relaxed), 1, "max_batch 1 must never fuse");
+    assert!(
+        light_stats.mean_fill_wait_us() < 50.0,
+        "light requests must not linger: {:.1}µs",
+        light_stats.mean_fill_wait_us()
+    );
+    assert!(
+        heavy_stats.peak_batch.load(Ordering::Relaxed) >= 2,
+        "heavy waves must fuse on their own bank"
+    );
+    // Both banks chained their counters into the server-wide aggregate.
+    let total = heavy_stats.batches.load(Ordering::Relaxed)
+        + light_stats.batches.load(Ordering::Relaxed);
+    let j = router.queue_stats();
+    assert_eq!(j.get("drift_batches").unwrap().as_usize().unwrap() as u64, total);
 }
 
 /// Batched drift evaluation end-to-end over the wire: concurrent
