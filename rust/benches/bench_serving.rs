@@ -21,13 +21,20 @@
 //! land within 5% of the best static throughput with no hand-tuning. Rows
 //! append to the same table with `"bench":"serving_adaptive"`.
 //!
+//! Part 4 prices multi-host sharding: the same offered load and bank shape
+//! as part 2's best case, but the remote row evaluates every drift on a
+//! `chords engine-serve`-equivalent [`EngineHost`] over real TCP on
+//! 127.0.0.1 — the wire cost of a remote engine bank made visible next to
+//! the in-process baseline. Rows append with `"bench":"serving_remote"`.
+//!
 //! One JSON object per configuration (the repo's JSON bench-table
 //! convention), preceded by a human-readable line; the full table is also
 //! written to `BENCH_serving.json` as the perf-trajectory baseline.
 //! Run with `cargo bench --bench bench_serving`.
 
 use chords::config::ServeConfig;
-use chords::server::{GenRequest, Router};
+use chords::server::{EngineHost, GenRequest, Router};
+use chords::workers::BatchOpts;
 use chords::util::json::Json;
 use chords::util::stats::Summary;
 use std::sync::{Arc, Barrier};
@@ -231,6 +238,87 @@ fn sweep_adaptive(adaptive: bool, linger_us: u64) -> Json {
     ])
 }
 
+/// Local-vs-remote sweep: part 2's offered load on the part-2 bank shape
+/// (2 engines, max_batch 8, linger 200µs), with the engines either
+/// in-process (`remote = false`) or behind an [`EngineHost`] dialed over
+/// real TCP on 127.0.0.1 (`remote = true`, remote-only placement so every
+/// drift crosses the socket). Same row schema as `serving_batching` plus
+/// `remote` / `remote_rtt_us` columns.
+fn sweep_remote(remote: bool) -> Json {
+    let concurrent = 4usize;
+    let mut cfg = ServeConfig {
+        total_cores: 16,
+        queue_cap: 256,
+        engines_per_model: 2,
+        max_batch: 8,
+        batch_linger_us: 200,
+        ..ServeConfig::default()
+    };
+    // Keep the engine host alive for the whole drive.
+    let engine_host = if remote {
+        let p = chords::config::preset("gauss-mix-slow").unwrap();
+        let factory = chords::engine::factory_for(p, "artifacts").unwrap();
+        let mut h = EngineHost::new(
+            factory,
+            "gauss-mix-slow",
+            BatchOpts {
+                engines: 2,
+                max_batch: 8,
+                linger: std::time::Duration::from_micros(200),
+            },
+        )
+        .expect("engine host");
+        let addr = h.serve_tcp("127.0.0.1", 0).expect("bind engine host");
+        cfg.set("remote_bank", &format!("{addr}=gauss-mix-slow")).unwrap();
+        cfg.set("model_budget", "gauss-mix-slow=2:8:200:remote").unwrap();
+        Some(h)
+    } else {
+        None
+    };
+    let (lats, wall_s, stats) = drive(cfg, "gauss-mix-slow", concurrent, 4);
+    drop(engine_host);
+    let s = Summary::of(&lats);
+    let rtt_us = stats
+        .get("banks")
+        .and_then(|b| b.as_arr())
+        .and_then(|a| {
+            a.iter().find(|e| e.get("kind").and_then(|k| k.as_str()) == Some("remote"))
+        })
+        .and_then(|e| e.get("remote_rtt_us"))
+        .and_then(|v| v.as_f64())
+        .unwrap_or(0.0);
+    let mode = if remote { "remote(tcp)" } else { "local" };
+    println!(
+        "{mode:<11} {:>3} reqs in {wall_s:6.2}s → {:6.2} req/s | p50 {:7.1}ms | occupancy {:4.2} rtt {:6.1}µs",
+        lats.len(),
+        lats.len() as f64 / wall_s,
+        s.median * 1e3,
+        stat(&stats, "mean_batch_occupancy"),
+        rtt_us,
+    );
+    Json::obj(vec![
+        ("bench", Json::str("serving_remote")),
+        ("model", Json::str("gauss-mix-slow")),
+        ("total_cores", Json::num(16.0)),
+        ("concurrent", Json::num(concurrent as f64)),
+        ("engines_per_model", Json::num(2.0)),
+        ("max_batch", Json::num(8.0)),
+        ("batch_linger_us", Json::num(200.0)),
+        ("remote", Json::Bool(remote)),
+        ("requests", Json::num(lats.len() as f64)),
+        ("wall_s", Json::num(wall_s)),
+        ("throughput_rps", Json::num(lats.len() as f64 / wall_s)),
+        ("p50_ms", Json::num(s.median * 1e3)),
+        ("p99_ms", Json::num(s.p99 * 1e3)),
+        ("drift_batches", Json::num(stat(&stats, "drift_batches"))),
+        ("batched_drifts", Json::num(stat(&stats, "batched_drifts"))),
+        ("mean_batch_occupancy", Json::num(stat(&stats, "mean_batch_occupancy"))),
+        ("mean_fill_wait_us", Json::num(stat(&stats, "mean_fill_wait_us"))),
+        ("peak_batch", Json::num(stat(&stats, "peak_batch"))),
+        ("remote_rtt_us", Json::num(rtt_us)),
+    ])
+}
+
 fn main() {
     println!("== serving benches: offered-load sweep over the elastic scheduler ==");
     let mut rows = Vec::new();
@@ -276,6 +364,20 @@ fn main() {
         println!(
             "adaptive vs best static throughput: {:.2}x (acceptance: ≥ 0.95x without hand-tuning)",
             adaptive_rps / best_static_rps
+        );
+    }
+
+    println!("\n== remote benches: local vs loopback-remote engine bank ==");
+    let local_row = sweep_remote(false);
+    let local_rps = local_row.get("throughput_rps").and_then(|v| v.as_f64()).unwrap_or(0.0);
+    rows.push(local_row);
+    let remote_row = sweep_remote(true);
+    let remote_rps = remote_row.get("throughput_rps").and_then(|v| v.as_f64()).unwrap_or(0.0);
+    rows.push(remote_row);
+    if local_rps > 0.0 {
+        println!(
+            "loopback-remote vs local throughput: {:.2}x (wire tax of multi-host sharding)",
+            remote_rps / local_rps
         );
     }
 

@@ -22,24 +22,30 @@ pub struct EngineBudget {
     /// Opt this model's bank into the adaptive batching controller (the
     /// global `--adaptive-batching` flag opts every batched model in).
     pub adaptive: bool,
+    /// Serve this model's drifts exclusively from attached remote engine
+    /// banks (`--remote-bank`): the dispatcher builds **no local engines**
+    /// for it — `engines` then describes the expected remote bank shape
+    /// only, while `max_batch`/`linger_us` still govern client-side wave
+    /// fusion. Inert when no remote bank matches the model.
+    pub remote: bool,
 }
 
 impl EngineBudget {
-    /// Parse one `model=engines:max_batch:linger_us[:adaptive|:static]`
+    /// Parse one `model=engines:max_batch:linger_us[:adaptive|:static][:remote]`
     /// override spec (the `--model-budget` CLI value), e.g.
-    /// `gauss-mix-slow=2:8:200:adaptive`.
+    /// `gauss-mix-slow=2:8:200:adaptive` or `wan-sim=2:8:250:remote`.
     pub fn parse_spec(spec: &str) -> Result<(String, EngineBudget), String> {
-        let (model, rest) = spec
-            .split_once('=')
-            .ok_or_else(|| format!("model budget '{spec}': expected model=E:B:L[:adaptive]"))?;
+        let (model, rest) = spec.split_once('=').ok_or_else(|| {
+            format!("model budget '{spec}': expected model=E:B:L[:adaptive][:remote]")
+        })?;
         let model = model.trim();
         if model.is_empty() {
             return Err(format!("model budget '{spec}': empty model name"));
         }
         let parts: Vec<&str> = rest.split(':').collect();
-        if parts.len() < 3 || parts.len() > 4 {
+        if parts.len() < 3 || parts.len() > 5 {
             return Err(format!(
-                "model budget '{spec}': expected engines:max_batch:linger_us[:adaptive]"
+                "model budget '{spec}': expected engines:max_batch:linger_us[:adaptive][:remote]"
             ));
         }
         let engines: usize =
@@ -51,16 +57,21 @@ impl EngineBudget {
         }
         let linger_us: u64 =
             parts[2].parse().map_err(|e| format!("model budget '{spec}': linger_us: {e}"))?;
-        let adaptive = match parts.get(3).copied() {
-            None | Some("static") => false,
-            Some("adaptive") => true,
-            Some(other) => {
-                return Err(format!(
-                    "model budget '{spec}': expected 'adaptive' or 'static', got '{other}'"
-                ))
+        let mut adaptive = false;
+        let mut remote = false;
+        for flag in &parts[3..] {
+            match *flag {
+                "adaptive" => adaptive = true,
+                "static" => adaptive = false,
+                "remote" => remote = true,
+                other => {
+                    return Err(format!(
+                        "model budget '{spec}': expected 'adaptive', 'static', or 'remote', got '{other}'"
+                    ))
+                }
             }
-        };
-        Ok((model.to_string(), EngineBudget { engines, max_batch, linger_us, adaptive }))
+        }
+        Ok((model.to_string(), EngineBudget { engines, max_batch, linger_us, adaptive, remote }))
     }
 }
 
@@ -159,6 +170,7 @@ pub const PRESETS: &[ModelPreset] = &[
             max_batch: 8,
             linger_us: 250,
             adaptive: true,
+            remote: false,
         }),
     },
     ModelPreset {
@@ -179,6 +191,7 @@ pub const PRESETS: &[ModelPreset] = &[
             max_batch: 8,
             linger_us: 250,
             adaptive: true,
+            remote: false,
         }),
     },
     ModelPreset {
@@ -199,6 +212,7 @@ pub const PRESETS: &[ModelPreset] = &[
             max_batch: 8,
             linger_us: 250,
             adaptive: true,
+            remote: false,
         }),
     },
     // ---- image (Table 2) ----
@@ -220,6 +234,7 @@ pub const PRESETS: &[ModelPreset] = &[
             max_batch: 4,
             linger_us: 100,
             adaptive: true,
+            remote: false,
         }),
     },
     ModelPreset {
@@ -240,6 +255,7 @@ pub const PRESETS: &[ModelPreset] = &[
             max_batch: 4,
             linger_us: 100,
             adaptive: true,
+            remote: false,
         }),
     },
     // ---- analytic (theory / property tests / fast benches) ----
@@ -279,6 +295,7 @@ pub const PRESETS: &[ModelPreset] = &[
             max_batch: 4,
             linger_us: 100,
             adaptive: false,
+            remote: false,
         }),
     },
     // Mixture engine with a simulated per-NFE cost: the batching benches'
@@ -397,16 +414,31 @@ mod tests {
     fn budget_spec_parses() {
         let (m, b) = EngineBudget::parse_spec("gauss-mix-slow=2:8:200:adaptive").unwrap();
         assert_eq!(m, "gauss-mix-slow");
-        assert_eq!(b, EngineBudget { engines: 2, max_batch: 8, linger_us: 200, adaptive: true });
+        assert_eq!(
+            b,
+            EngineBudget {
+                engines: 2,
+                max_batch: 8,
+                linger_us: 200,
+                adaptive: true,
+                remote: false,
+            }
+        );
         let (_, b) = EngineBudget::parse_spec("exp-ode-slow=1:1:0").unwrap();
         assert!(!b.adaptive);
+        assert!(!b.remote);
         assert_eq!(b.engines, 1);
         let (_, b) = EngineBudget::parse_spec("m=0:4:50:static").unwrap();
         assert_eq!(b.engines, 0, "engines=0 forces the dedicated layout");
+        let (_, b) = EngineBudget::parse_spec("m=2:8:200:remote").unwrap();
+        assert!(b.remote && !b.adaptive, "remote-only placement flag");
+        let (_, b) = EngineBudget::parse_spec("m=2:8:200:adaptive:remote").unwrap();
+        assert!(b.remote && b.adaptive, "flags compose");
         assert!(EngineBudget::parse_spec("no-equals").is_err());
         assert!(EngineBudget::parse_spec("m=1:0:0").is_err(), "max_batch 0 rejected");
         assert!(EngineBudget::parse_spec("m=1:2").is_err());
         assert!(EngineBudget::parse_spec("m=1:2:3:bogus").is_err());
+        assert!(EngineBudget::parse_spec("m=1:2:3:adaptive:remote:extra").is_err());
         assert!(EngineBudget::parse_spec("=1:2:3").is_err());
     }
 

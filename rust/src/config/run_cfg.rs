@@ -105,6 +105,40 @@ impl RunConfig {
     }
 }
 
+/// One remote engine-bank attachment (`--remote-bank host:port[=model]`):
+/// the address of a `chords engine-serve` process whose physical engines
+/// this serving host farms drift evaluation out to.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct RemoteBankSpec {
+    /// `host:port` of the engine-host process.
+    pub addr: String,
+    /// Restrict the bank to one preset; `None` offers it to every model.
+    /// The `hello` handshake's model/dims check permanently poisons the
+    /// bank for models the host does not serve — those models keep
+    /// running on their local engines.
+    pub model: Option<String>,
+}
+
+impl RemoteBankSpec {
+    /// Parse one `host:port[=model]` spec, e.g. `10.0.0.2:7078=wan-sim`.
+    pub fn parse(spec: &str) -> Result<RemoteBankSpec, String> {
+        let (addr, model) = match spec.split_once('=') {
+            Some((a, m)) => (a.trim(), Some(m.trim())),
+            None => (spec.trim(), None),
+        };
+        let Some((host, port)) = addr.rsplit_once(':') else {
+            return Err(format!("remote bank '{spec}': expected host:port[=model]"));
+        };
+        if host.is_empty() || port.parse::<u16>().is_err() {
+            return Err(format!("remote bank '{spec}': bad address '{addr}'"));
+        }
+        if model == Some("") {
+            return Err(format!("remote bank '{spec}': empty model name"));
+        }
+        Ok(RemoteBankSpec { addr: addr.to_string(), model: model.map(str::to_string) })
+    }
+}
+
 /// Serving/scheduler configuration (`chords serve` and [`crate::sched`]).
 #[derive(Clone, Debug, PartialEq)]
 pub struct ServeConfig {
@@ -144,6 +178,11 @@ pub struct ServeConfig {
     /// precedence over preset budgets and the global batching knobs. At
     /// most one entry per model (later `set` calls replace earlier ones).
     pub model_budgets: Vec<(String, EngineBudget)>,
+    /// Remote engine banks to attach (`--remote-bank host:port[=model]`,
+    /// comma-separated / repeatable). A model-less spec offers the bank to
+    /// every model; the dispatcher mixes matching banks with the model's
+    /// local engines behind a failover set.
+    pub remote_banks: Vec<RemoteBankSpec>,
 }
 
 impl Default for ServeConfig {
@@ -159,6 +198,7 @@ impl Default for ServeConfig {
             batch_linger_us: 150,
             adaptive_batching: false,
             model_budgets: Vec::new(),
+            remote_banks: Vec::new(),
         }
     }
 }
@@ -211,12 +251,23 @@ impl ServeConfig {
                     value.parse().map_err(|e| format!("adaptive_batching: {e}"))?
             }
             "model_budget" | "model-budget" => {
-                // Comma-separated list of model=E:B:L[:adaptive] specs; a
-                // repeated model replaces its earlier entry.
+                // Comma-separated list of model=E:B:L[:adaptive][:remote]
+                // specs; a repeated model replaces its earlier entry.
                 for spec in value.split(',').filter(|s| !s.trim().is_empty()) {
                     let (model, budget) = EngineBudget::parse_spec(spec.trim())?;
                     self.model_budgets.retain(|(m, _)| *m != model);
                     self.model_budgets.push((model, budget));
+                }
+            }
+            "remote_bank" | "remote-bank" => {
+                // Comma-separated list of host:port[=model] specs;
+                // duplicates are ignored (attaching the same bank twice
+                // would double-count its engines).
+                for spec in value.split(',').filter(|s| !s.trim().is_empty()) {
+                    let s = RemoteBankSpec::parse(spec.trim())?;
+                    if !self.remote_banks.contains(&s) {
+                        self.remote_banks.push(s);
+                    }
                 }
             }
             _ => return Err(format!("unknown serve config key '{key}'")),
@@ -289,6 +340,26 @@ mod tests {
         assert!(!gm.1.adaptive);
         assert!(s.set("model_budget", "broken").is_err());
         assert!(s.set("adaptive_batching", "maybe").is_err());
+    }
+
+    #[test]
+    fn serve_config_remote_bank_knob() {
+        let s = ServeConfig::default();
+        assert!(s.remote_banks.is_empty(), "remote banks are opt-in");
+        let mut s = ServeConfig::default();
+        s.set("remote-bank", "10.0.0.2:7078=wan-sim,10.0.0.3:7078").unwrap();
+        assert_eq!(s.remote_banks.len(), 2);
+        assert_eq!(s.remote_banks[0].addr, "10.0.0.2:7078");
+        assert_eq!(s.remote_banks[0].model.as_deref(), Some("wan-sim"));
+        assert_eq!(s.remote_banks[1].addr, "10.0.0.3:7078");
+        assert_eq!(s.remote_banks[1].model, None);
+        // Exact duplicates are ignored.
+        s.set("remote_bank", "10.0.0.3:7078").unwrap();
+        assert_eq!(s.remote_banks.len(), 2);
+        assert!(s.set("remote_bank", "no-port").is_err());
+        assert!(s.set("remote_bank", "host:notaport").is_err());
+        assert!(s.set("remote_bank", "host:7078=").is_err());
+        assert!(RemoteBankSpec::parse("127.0.0.1:0").is_ok(), "ephemeral ports allowed");
     }
 
     #[test]

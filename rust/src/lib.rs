@@ -21,13 +21,18 @@
 //!   (Algorithm 1), per-step core schedule, inter-core rectification,
 //!   init-sequence theory, and the ParaDIGMS/SRDS baselines.
 //! - [`workers`] — worker threads (logical cores), per-job routing views,
-//!   and the [`workers::EngineBank`] multiplexing logical cores onto shared
-//!   physical engines with live-retunable fusion knobs.
+//!   the [`workers::EngineBank`] multiplexing logical cores onto shared
+//!   physical engines with live-retunable fusion knobs, and the remote
+//!   engine banks ([`workers::RemoteBank`]/[`workers::FailoverBank`]) that
+//!   place those engines on other hosts with bit-exact wire transfer and
+//!   failover.
 //! - [`sched`] — the elastic serving scheduler: global core budget, RAII
 //!   leases with mid-job reclamation, bounded priority admission queue, the
-//!   dispatcher, and the adaptive batching controller.
+//!   dispatcher (including per-model remote-bank routing), and the adaptive
+//!   batching controller.
 //! - [`server`] — the JSON-lines TCP surface (`generate`, `queue_stats`, …)
-//!   over the scheduler.
+//!   over the scheduler, plus the [`server::EngineHost`] engine-host
+//!   process (`chords engine-serve`).
 //! - [`config`] / [`metrics`] / [`harness`] / [`cli`] / [`tensor`] /
 //!   [`util`] — presets & budgets, serving/evaluation metrics, the paper's
 //!   table/figure reproduction harness, and self-contained substrates.

@@ -100,6 +100,7 @@ fn dispatch(args: &Args) -> Result<()> {
         "ablate" => cmd_ablate(args)?,
         "reward-sweep" => cmd_reward_sweep()?,
         "serve" => cmd_serve(args)?,
+        "engine-serve" => cmd_engine_serve(args)?,
         "inspect-artifacts" => cmd_inspect(args)?,
         other => {
             eprintln!("unknown command '{other}'\n\n{}", help_text());
@@ -220,6 +221,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         ("batch-linger-us", "batch_linger_us"),
         ("adaptive-batching", "adaptive_batching"),
         ("model-budget", "model_budget"),
+        ("remote-bank", "remote_bank"),
     ] {
         if let Some(v) = args.flag(flag) {
             cfg.set(key, v).map_err(|e| anyhow!("--{flag}: {e}"))?;
@@ -246,14 +248,61 @@ fn cmd_serve(args: &Args) -> Result<()> {
     }
     for (model, b) in &cfg.model_budgets {
         println!(
-            "model budget: {model} → {} engines, max batch {}, linger {}µs{}",
+            "model budget: {model} → {} engines, max batch {}, linger {}µs{}{}",
             b.engines,
             b.max_batch,
             b.linger_us,
-            if b.adaptive { ", adaptive" } else { "" }
+            if b.adaptive { ", adaptive" } else { "" },
+            if b.remote { ", remote-only" } else { "" }
         );
     }
+    for s in &cfg.remote_banks {
+        let scope =
+            s.model.as_deref().map(|m| format!(" → {m}")).unwrap_or_else(|| " → all models".into());
+        println!("remote bank: {}{scope} (health/RTT in queue_stats \"banks\")", s.addr);
+    }
     println!("protocol: JSON lines; ops: ping | stats | queue_stats | generate");
+    // Serve until killed.
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}
+
+/// `chords engine-serve`: stand up a bank of physical engines for one
+/// preset and serve the engine-host protocol over TCP, so a `chords serve`
+/// process on another machine can attach it with `--remote-bank`.
+fn cmd_engine_serve(args: &Args) -> Result<()> {
+    let port: u16 = args.flag_parsed("port", 7078).map_err(|e| anyhow!(e))?;
+    let bind = args.flag("host").unwrap_or("0.0.0.0");
+    let model = args.flag("model").unwrap_or("gauss-mix");
+    let engines: usize = args.flag_parsed("engines", 2usize).map_err(|e| anyhow!(e))?;
+    let max_batch: usize = args.flag_parsed("max-batch", 8usize).map_err(|e| anyhow!(e))?;
+    let linger_us: u64 = args.flag_parsed("linger-us", 150u64).map_err(|e| anyhow!(e))?;
+    let artifacts = args.flag("artifacts").unwrap_or("artifacts");
+    let p = chords::config::preset(model).ok_or_else(|| anyhow!("unknown model '{model}'"))?;
+    let factory = chords::engine::factory_for(p, artifacts)?;
+    let mut host = chords::server::EngineHost::new(
+        factory,
+        model,
+        chords::workers::BatchOpts {
+            engines: engines.max(1),
+            max_batch: max_batch.max(1),
+            linger: std::time::Duration::from_micros(linger_us),
+        },
+    )?;
+    let addr = host.serve_tcp(bind, port)?;
+    println!(
+        "chords engine host serving '{model}' (dims {:?}, {} engines, max batch {}, linger {}µs) on {addr}",
+        p.latent_dims(),
+        engines.max(1),
+        max_batch.max(1),
+        linger_us
+    );
+    println!(
+        "attach from a serving host with: chords serve --remote-bank <this-host>:{}={model}",
+        addr.port()
+    );
+    println!("protocol: JSON lines; ops: hello | ping | bank_stats | drift_batch");
     // Serve until killed.
     loop {
         std::thread::sleep(std::time::Duration::from_secs(3600));

@@ -92,6 +92,83 @@ impl BatchStats {
     }
 }
 
+/// Counters for remote drift execution ([`crate::workers::RemoteBank`] /
+/// [`crate::workers::FailoverBank`]): waves shipped over the wire, their
+/// round-trip and serialization cost, and the failure/recovery events the
+/// failover machinery produces. One instance per remote bank (surfaced
+/// per-bank in `queue_stats`' `banks` array as `remote_rtt_us`,
+/// `bank_healthy`, `waves`, `wave_failures`) plus one per failover set
+/// (whose `failovers` aggregates into `queue_stats.remote_failovers`).
+#[derive(Default)]
+pub struct RemoteBankStats {
+    /// Waves successfully executed on the remote host.
+    pub waves: AtomicU64,
+    /// Drift evaluations carried by successful waves.
+    pub wave_drifts: AtomicU64,
+    /// Total round-trip microseconds (request sent → reply parsed).
+    pub rtt_us_total: AtomicU64,
+    /// Total microseconds spent encoding requests and decoding replies
+    /// (the wire-format tax, included in the RTT).
+    pub ser_us_total: AtomicU64,
+    /// Waves that failed: send error, host error reply, reply timeout, or
+    /// connection death. Each failed wave's requests fail over.
+    pub wave_failures: AtomicU64,
+    /// Successful re-handshakes after a connection died.
+    pub reconnects: AtomicU64,
+    /// Requests requeued onto another bank after a member failure (counted
+    /// on the failover set's instance).
+    pub failovers: AtomicU64,
+}
+
+impl RemoteBankStats {
+    /// A fresh counter set.
+    pub fn new() -> Arc<RemoteBankStats> {
+        Arc::new(RemoteBankStats::default())
+    }
+
+    /// Record one successful wave of `items` drifts: `rtt_us` from send to
+    /// parsed reply, of which `ser_us` was spent in the tensor codec.
+    pub fn on_wave(&self, items: usize, rtt_us: u64, ser_us: u64) {
+        self.waves.fetch_add(1, Ordering::Relaxed);
+        self.wave_drifts.fetch_add(items as u64, Ordering::Relaxed);
+        self.rtt_us_total.fetch_add(rtt_us, Ordering::Relaxed);
+        self.ser_us_total.fetch_add(ser_us, Ordering::Relaxed);
+    }
+
+    /// Record a wave that died (its requests fail over to another bank).
+    pub fn on_wave_failure(&self) {
+        self.wave_failures.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record a successful re-handshake after a connection died.
+    pub fn on_reconnect(&self) {
+        self.reconnects.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record one request requeued onto another member bank.
+    pub fn on_failover(&self) {
+        self.failovers.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Mean round-trip microseconds per successful wave (0 when none ran).
+    pub fn mean_rtt_us(&self) -> f64 {
+        let waves = self.waves.load(Ordering::Relaxed);
+        if waves == 0 {
+            return 0.0;
+        }
+        self.rtt_us_total.load(Ordering::Relaxed) as f64 / waves as f64
+    }
+
+    /// Mean serialization microseconds per successful wave (0 when none).
+    pub fn mean_ser_us(&self) -> f64 {
+        let waves = self.waves.load(Ordering::Relaxed);
+        if waves == 0 {
+            return 0.0;
+        }
+        self.ser_us_total.load(Ordering::Relaxed) as f64 / waves as f64
+    }
+}
+
 /// Shared counters/gauges for the serving path. All methods are lock-free;
 /// gauges are best-effort (exact under the dispatcher's own serialization).
 pub struct ServingMetrics {
@@ -391,6 +468,25 @@ mod tests {
         assert!((j.get("mean_exec_us").unwrap().as_f64().unwrap() - 300.0).abs() < 1e-9);
         assert_eq!(j.get("adaptive_retunes").unwrap().as_usize().unwrap(), 0);
         assert_eq!(j.get("adaptive_models").unwrap().as_usize().unwrap(), 0);
+    }
+
+    #[test]
+    fn remote_bank_stats_means() {
+        let r = RemoteBankStats::default();
+        assert_eq!(r.mean_rtt_us(), 0.0);
+        assert_eq!(r.mean_ser_us(), 0.0);
+        r.on_wave(4, 1000, 100);
+        r.on_wave(2, 500, 50);
+        r.on_wave_failure();
+        r.on_reconnect();
+        r.on_failover();
+        assert_eq!(r.waves.load(Ordering::Relaxed), 2);
+        assert_eq!(r.wave_drifts.load(Ordering::Relaxed), 6);
+        assert!((r.mean_rtt_us() - 750.0).abs() < 1e-12);
+        assert!((r.mean_ser_us() - 75.0).abs() < 1e-12);
+        assert_eq!(r.wave_failures.load(Ordering::Relaxed), 1);
+        assert_eq!(r.reconnects.load(Ordering::Relaxed), 1);
+        assert_eq!(r.failovers.load(Ordering::Relaxed), 1);
     }
 
     #[test]

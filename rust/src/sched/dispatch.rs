@@ -20,12 +20,15 @@ use super::adaptive::{AdaptiveController, AdaptiveOpts};
 use super::budget::{CoreBudget, Notify};
 use super::lease::CoreLease;
 use super::queue::{AdmissionQueue, Reject, Ticket};
-use crate::config::{preset, EngineBudget, ModelPreset};
+use crate::config::{preset, EngineBudget, ModelPreset, RemoteBankSpec};
 use crate::engine::factory_for;
-use crate::metrics::{BatchStats, ServingMetrics};
+use crate::metrics::{BatchStats, RemoteBankStats, ServingMetrics};
 use crate::solvers::Euler;
 use crate::util::json::Json;
-use crate::workers::{BatchOpts, BatchTuning, CorePool, PoolView};
+use crate::workers::{
+    BatchOpts, BatchTuning, CorePool, EngineBank, FailoverBank, PoolView, RemoteBank,
+    RemoteBankOpts, TcpConnector,
+};
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::channel;
@@ -74,6 +77,22 @@ pub struct DispatchOpts {
     /// [`DispatchOpts::engines_per_model`] knobs. An override with
     /// `engines == 0` forces the dedicated-engine layout.
     pub model_budgets: HashMap<String, EngineBudget>,
+    /// Remote engine banks to attach (`--remote-bank`). For every model a
+    /// spec matches (its own name, or a model-less wildcard spec — hosts
+    /// deduplicated by address), the dispatcher composes a
+    /// [`crate::workers::FailoverBank`]: a local
+    /// [`crate::workers::EngineBank`] (always, unless the model's budget
+    /// says [`EngineBudget::remote`]-only — a dead or mismatched host must
+    /// degrade to local serving, never to unservable) plus one
+    /// [`crate::workers::RemoteBank`] client per matching engine host,
+    /// each required to advertise this model at handshake. Workers spread
+    /// across healthy members and requeue failed waves onto survivors;
+    /// dead hosts are redialled with backoff. An explicit `engines = 0`
+    /// budget override opts the model out of remote attachment entirely.
+    /// Caveat: under remote-only placement with *every* host dead past the
+    /// all-dead timeout, in-flight jobs fail by worker panic — keep a
+    /// local member unless the model truly cannot run locally.
+    pub remote_banks: Vec<RemoteBankSpec>,
 }
 
 impl Default for DispatchOpts {
@@ -89,6 +108,7 @@ impl Default for DispatchOpts {
             adaptive: false,
             adaptive_opts: AdaptiveOpts::default(),
             model_budgets: HashMap::new(),
+            remote_banks: Vec::new(),
         }
     }
 }
@@ -116,6 +136,9 @@ struct ResolvedBank {
     /// reaping keeps the slot — and with it the bank's physical engines —
     /// warm instead of dropping it, honouring the model's declared floor.
     pinned: bool,
+    /// The budget declared [`EngineBudget::remote`]: build no local
+    /// engines, serve drifts exclusively from attached remote banks.
+    remote_only: bool,
 }
 
 fn budget_opts(b: &EngineBudget) -> BatchOpts {
@@ -152,6 +175,9 @@ struct ModelSlot {
     /// Declared-budget models keep their slot (and engine bank) across idle
     /// reaping; only their warm logical workers are detached.
     pinned: bool,
+    /// Failover-set counters when the model has remote banks attached
+    /// (`failovers` aggregates into `queue_stats.remote_failovers`).
+    remote: Option<Arc<RemoteBankStats>>,
 }
 
 impl ModelSlot {
@@ -172,6 +198,8 @@ struct Shared {
     /// Engine-bank layout from the global knobs (`None` = dedicated
     /// engines unless a per-model budget says otherwise).
     batch: Option<BatchOpts>,
+    /// Remote engine banks to attach, matched per model at slot build.
+    remote_banks: Vec<RemoteBankSpec>,
     /// Enable adaptive control for every batched model.
     adaptive_default: bool,
     /// Per-model bank overrides (highest precedence).
@@ -188,13 +216,14 @@ impl Shared {
     /// on [`DispatchOpts::model_budgets`]; `None` = dedicated engines.
     fn resolve_bank(&self, p: &ModelPreset) -> Option<ResolvedBank> {
         if let Some(b) = self.model_budgets.get(p.name) {
-            if b.engines == 0 {
+            if b.engines == 0 && !b.remote {
                 return None;
             }
             return Some(ResolvedBank {
                 opts: budget_opts(b),
                 adaptive: b.adaptive || self.adaptive_default,
                 pinned: true,
+                remote_only: b.remote,
             });
         }
         // Preset budgets shape banks only once batching is enabled
@@ -208,12 +237,14 @@ impl Shared {
                 opts: budget_opts(&b),
                 adaptive: b.adaptive || self.adaptive_default,
                 pinned: true,
+                remote_only: b.remote,
             });
         }
         self.batch.clone().map(|opts| ResolvedBank {
             opts,
             adaptive: self.adaptive_default,
             pinned: false,
+            remote_only: false,
         })
     }
 }
@@ -245,6 +276,7 @@ impl Dispatcher {
             elastic: opts.elastic_reclaim,
             idle_ttl: Duration::from_millis(opts.idle_ttl_ms),
             batch: opts.batch_opts(),
+            remote_banks: opts.remote_banks,
             adaptive_default: opts.adaptive,
             model_budgets: opts.model_budgets,
             controller,
@@ -309,9 +341,46 @@ impl Dispatcher {
         self.shared.models.lock().unwrap().keys().cloned().collect()
     }
 
-    /// Wire-format scheduler state (the `queue_stats` response body).
+    /// Failover-set counters of a loaded model with remote banks attached
+    /// (`None` otherwise) — `failovers` counts waves requeued onto another
+    /// bank after a member failure.
+    pub fn model_remote_stats(&self, model: &str) -> Option<Arc<RemoteBankStats>> {
+        self.shared.models.lock().unwrap().get(model)?.remote.clone()
+    }
+
+    /// Wire-format scheduler state (the `queue_stats` response body): the
+    /// [`ServingMetrics`] snapshot plus the per-bank `banks` array (one
+    /// entry per engine-bank member of every loaded model — `model`,
+    /// `bank`, `kind`, `bank_healthy`, `engines`, `remote_rtt_us`, `waves`,
+    /// `wave_failures`) and the `remote_failovers` aggregate.
     pub fn snapshot(&self) -> Json {
-        self.shared.metrics.snapshot(self.total_cores(), self.queue_cap())
+        let mut j = self.shared.metrics.snapshot(self.total_cores(), self.queue_cap());
+        let slots: Vec<(String, Arc<ModelSlot>)> = self
+            .shared
+            .models
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(name, slot)| (name.clone(), slot.clone()))
+            .collect();
+        let mut banks = Vec::new();
+        let mut failovers = 0u64;
+        for (name, slot) in slots {
+            for mut s in slot.pool.lock().unwrap().bank_snapshots() {
+                if let Json::Obj(m) = &mut s {
+                    m.insert("model".into(), Json::str(&name));
+                }
+                banks.push(s);
+            }
+            if let Some(r) = &slot.remote {
+                failovers += r.failovers.load(Ordering::Relaxed);
+            }
+        }
+        if let Json::Obj(m) = &mut j {
+            m.insert("banks".into(), Json::Arr(banks));
+            m.insert("remote_failovers".into(), Json::num(failovers as f64));
+        }
+        j
     }
 
     /// Admit a job: enqueue, then block until the scheduler grants cores or
@@ -387,31 +456,132 @@ fn model_slot(shared: &Shared, model: &str) -> anyhow::Result<Arc<ModelSlot>> {
     // engine bank; its per-model counters chain into the server-wide
     // aggregate surfaced through `queue_stats`.
     let resolved = shared.resolve_bank(p);
+    // An explicit `engines = 0` override (forced dedicated layout) opts the
+    // model out of remote attachment too — its operator pinned the classic
+    // layout, and remote placement implies a bank.
+    let forced_dedicated = shared
+        .model_budgets
+        .get(model)
+        .map(|b| b.engines == 0 && !b.remote)
+        .unwrap_or(false);
+    // Matching engine hosts, deduplicated by address: a wildcard spec plus
+    // a model-scoped spec for the same host must not attach (and count)
+    // the host twice.
+    let mut remotes: Vec<String> = Vec::new();
+    if !forced_dedicated {
+        for s in &shared.remote_banks {
+            let matches = s.model.is_none() || s.model.as_deref() == Some(model);
+            if matches && !remotes.contains(&s.addr) {
+                remotes.push(s.addr.clone());
+            }
+        }
+    }
     let mut pinned = false;
     let mut register: Option<(Arc<BatchTuning>, Arc<BatchStats>)> = None;
-    let pool = match &resolved {
-        Some(r) => {
-            let stats = BatchStats::with_parent(shared.metrics.batch.clone());
-            let pool = CorePool::new_batched_with_stats(
-                0,
-                factory,
-                Arc::new(Euler),
-                r.opts.clone(),
-                stats.clone(),
-            )?;
-            pinned = r.pinned;
-            if r.adaptive {
-                register = Some((pool.batch_tuning().expect("batched pool has tuning"), stats));
-            }
-            pool
+    let mut remote_stats = None;
+    let pool = if remotes.is_empty() {
+        if resolved.as_ref().map(|r| r.remote_only).unwrap_or(false) {
+            anyhow::bail!(
+                "model '{model}' budget is remote-only but no --remote-bank matches it"
+            );
         }
-        None => CorePool::new(0, factory, Arc::new(Euler))?,
+        match &resolved {
+            Some(r) => {
+                let stats = BatchStats::with_parent(shared.metrics.batch.clone());
+                let pool = CorePool::new_batched_with_stats(
+                    0,
+                    factory,
+                    Arc::new(Euler),
+                    r.opts.clone(),
+                    stats.clone(),
+                )?;
+                pinned = r.pinned;
+                if r.adaptive {
+                    register =
+                        Some((pool.batch_tuning().expect("batched pool has tuning"), stats));
+                }
+                pool
+            }
+            None => CorePool::new(0, factory, Arc::new(Euler))?,
+        }
+    } else {
+        // Remote capacity configured for this model: compose a failover
+        // bank — the local engine bank (when one resolves and the budget
+        // does not demand remote-only placement) plus one RemoteBank
+        // client per matching engine host. Construction never blocks on
+        // the network; unreachable hosts just report unhealthy while
+        // their pumps redial with backoff.
+        let stats = BatchStats::with_parent(shared.metrics.batch.clone());
+        let fuse = resolved
+            .as_ref()
+            .map(|r| r.opts.clone())
+            .or_else(|| shared.batch.clone())
+            .unwrap_or_default();
+        // One live tuning shared by every member (local engines and remote
+        // wave pumps alike), so an adaptive retune regroups work on all of
+        // them; each member gets its own child stats chained into the
+        // model aggregate so `queue_stats` reports per-member activity.
+        let tuning = BatchTuning::new(&BatchOpts {
+            engines: 1,
+            max_batch: fuse.max_batch.max(1),
+            linger: fuse.linger,
+        });
+        // Local capacity is kept unless the budget *explicitly* demands
+        // remote-only placement: a dead or model-mismatched host must
+        // degrade the model to local serving, never to unservable. With no
+        // resolved bank the local member takes the fuse shape (global
+        // knobs or defaults) — still bit-identical, per the batching
+        // contract.
+        let remote_only = resolved.as_ref().map(|r| r.remote_only).unwrap_or(false);
+        let local = if remote_only {
+            None
+        } else {
+            Some(EngineBank::with_tuning(
+                factory,
+                fuse.clone(),
+                BatchStats::with_parent(stats.clone()),
+                tuning.clone(),
+            )?)
+        };
+        let ropts = RemoteBankOpts {
+            max_batch: fuse.max_batch,
+            linger: fuse.linger,
+            expect_model: Some(model.to_string()),
+            ..RemoteBankOpts::default()
+        };
+        let banks: Vec<Arc<RemoteBank>> = remotes
+            .iter()
+            .map(|addr| {
+                Arc::new(RemoteBank::connect_with_tuning(
+                    Arc::new(TcpConnector::new(addr)),
+                    p.latent_dims(),
+                    ropts.clone(),
+                    tuning.clone(),
+                    BatchStats::with_parent(stats.clone()),
+                    RemoteBankStats::new(),
+                ))
+            })
+            .collect();
+        let set_rstats = RemoteBankStats::new();
+        let fb = FailoverBank::new(banks, local, stats.clone(), set_rstats.clone())?;
+        let pool = CorePool::new_with_bank(0, Box::new(fb), Arc::new(Euler))?;
+        // Remote connections are the model's expensive floor: pin the slot
+        // so idle reaping detaches warm workers but keeps the banks warm.
+        pinned = true;
+        if resolved.as_ref().map(|r| r.adaptive).unwrap_or(shared.adaptive_default) {
+            if let Some(t) = pool.batch_tuning() {
+                register = Some((t, stats));
+            }
+        }
+        remote_stats = Some(set_rstats);
+        pool
     };
     let slot = Arc::new(ModelSlot {
         pool: Mutex::new(pool),
         free: Mutex::new(Vec::new()),
         last_activity: Mutex::new(Instant::now()),
         pinned,
+        remote: remote_stats,
     });
     models.insert(model.to_string(), slot.clone());
     drop(models);
@@ -886,11 +1056,17 @@ mod tests {
         let mut budgets = HashMap::new();
         budgets.insert(
             "gauss-mix".to_string(),
-            EngineBudget { engines: 3, max_batch: 2, linger_us: 75, adaptive: false },
+            EngineBudget {
+                engines: 3,
+                max_batch: 2,
+                linger_us: 75,
+                adaptive: false,
+                remote: false,
+            },
         );
         budgets.insert(
             "exp-ode".to_string(),
-            EngineBudget { engines: 0, max_batch: 1, linger_us: 0, adaptive: false },
+            EngineBudget { engines: 0, max_batch: 1, linger_us: 0, adaptive: false, remote: false },
         );
         let d = Dispatcher::new(
             "artifacts",
@@ -978,7 +1154,13 @@ mod tests {
         let mut budgets = HashMap::new();
         budgets.insert(
             "gauss-mix".to_string(),
-            EngineBudget { engines: 2, max_batch: 4, linger_us: 100, adaptive: true },
+            EngineBudget {
+                engines: 2,
+                max_batch: 4,
+                linger_us: 100,
+                adaptive: true,
+                remote: false,
+            },
         );
         let d = Dispatcher::new(
             "artifacts",

@@ -1,0 +1,364 @@
+//! The engine-host process: a bank of physical engines exposed over the
+//! engine-host protocol (`chords engine-serve`).
+//!
+//! CHORDS decouples logical solver cores from the engines that evaluate
+//! `f_θ`; this module decouples the engines from the *serving host*. An
+//! [`EngineHost`] owns an [`EngineBank`] of physical engines and answers
+//! `hello` / `ping` / `bank_stats` / `drift_batch` requests
+//! ([`crate::workers::wire`]) over any [`Transport`] — real TCP in
+//! production, in-process loopback in tests (via [`EngineHost::connector`]),
+//! so every client behavior is exercised hermetically and only one smoke
+//! test needs a socket.
+//!
+//! Placement never changes numerics: a wave is decoded with the bit-exact
+//! tensor codec, executed through the same `drift_batch` contract as a
+//! local bank (each connection holds one client engine onto the bank, so
+//! concurrent connections' waves fuse exactly like concurrent local cores),
+//! and encoded back bit-exactly. `rust/tests/remote_bank.rs` pins
+//! remote == local across engines, bank shapes, and step rules.
+
+use crate::engine::{DriftEngine, EngineFactory};
+use crate::metrics::BatchStats;
+use crate::util::json::Json;
+use crate::workers::wire;
+use crate::workers::{loopback_pair, BatchOpts, Connector, EngineBank, TcpTransport, Transport};
+use anyhow::Result;
+use std::net::{SocketAddr, TcpListener};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// Connection handlers and the accept loop poll the stop flag at this
+/// period, bounding shutdown latency.
+const HOST_TICK: Duration = Duration::from_millis(100);
+
+/// Everything a connection handler needs — deliberately *not* the bank
+/// itself (handlers only hold cheap client engines onto it), so the shared
+/// state is `Sync` without leaning on `Sender: Sync`.
+struct HostShared {
+    /// The bank's client factory: one engine handle per connection.
+    factory: Arc<dyn EngineFactory>,
+    dims: Vec<usize>,
+    /// Engine name advertised in the `hello` handshake.
+    name: String,
+    /// Preset the host serves (advertised in `hello`).
+    model: String,
+    engines: usize,
+    stats: Arc<BatchStats>,
+    stop: AtomicBool,
+    conns: Mutex<Vec<JoinHandle<()>>>,
+}
+
+/// A bank of physical engines served over the engine-host protocol. Build
+/// with [`EngineHost::new`], then either [`EngineHost::serve_tcp`] (the
+/// `chords engine-serve` path) or hand connections in directly with
+/// [`EngineHost::serve_transport`] / [`EngineHost::connector`] (tests).
+pub struct EngineHost {
+    shared: Arc<HostShared>,
+    accept: Option<JoinHandle<()>>,
+    addr: Option<SocketAddr>,
+    /// Owns the physical engines. Declared after `shared` and dropped after
+    /// the [`Drop`] body joins every handler, so in-flight waves finish
+    /// against a live bank.
+    _bank: EngineBank,
+}
+
+impl EngineHost {
+    /// Build the host's engine bank (`opts.engines` physical engines from
+    /// `factory`, fused with the bank's `max_batch`/linger discipline).
+    /// `model` is the preset name advertised to clients.
+    pub fn new(
+        factory: Arc<dyn EngineFactory>,
+        model: &str,
+        opts: BatchOpts,
+    ) -> Result<EngineHost> {
+        let stats = BatchStats::new();
+        let bank = EngineBank::new(factory, opts.clone(), stats.clone())?;
+        let shared = Arc::new(HostShared {
+            factory: bank.client_factory(),
+            dims: bank.dims(),
+            name: bank.client_name().to_string(),
+            model: model.to_string(),
+            engines: opts.engines,
+            stats,
+            stop: AtomicBool::new(false),
+            conns: Mutex::new(Vec::new()),
+        });
+        Ok(EngineHost { shared, accept: None, addr: None, _bank: bank })
+    }
+
+    /// Host-side fusion counters (what `bank_stats` reports).
+    pub fn stats(&self) -> Arc<BatchStats> {
+        self.shared.stats.clone()
+    }
+
+    /// Preset this host serves.
+    pub fn model(&self) -> &str {
+        &self.shared.model
+    }
+
+    /// Bound TCP address once [`EngineHost::serve_tcp`] has been called.
+    pub fn addr(&self) -> Option<SocketAddr> {
+        self.addr
+    }
+
+    /// Bind `host:port` (port 0 = ephemeral) and serve connections until
+    /// drop. Returns the bound address.
+    pub fn serve_tcp(&mut self, host: &str, port: u16) -> Result<SocketAddr> {
+        assert!(self.accept.is_none(), "serve_tcp called twice");
+        let listener = TcpListener::bind((host, port))?;
+        let addr = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let shared = self.shared.clone();
+        let accept = std::thread::Builder::new()
+            .name("chords-engine-accept".into())
+            .spawn(move || {
+                while !shared.stop.load(Ordering::Relaxed) {
+                    match listener.accept() {
+                        Ok((stream, _)) => {
+                            if let Ok(t) = TcpTransport::from_stream(stream) {
+                                spawn_handler(&shared, Arc::new(t));
+                            }
+                        }
+                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                            std::thread::sleep(Duration::from_millis(5));
+                        }
+                        // A client that resets before accept (ECONNABORTED)
+                        // or a signal must not kill the listener for good.
+                        Err(e)
+                            if matches!(
+                                e.kind(),
+                                std::io::ErrorKind::ConnectionAborted
+                                    | std::io::ErrorKind::ConnectionReset
+                                    | std::io::ErrorKind::Interrupted
+                            ) => {}
+                        Err(_) => break,
+                    }
+                }
+            })?;
+        self.accept = Some(accept);
+        self.addr = Some(addr);
+        Ok(addr)
+    }
+
+    /// Serve one already-established connection (the loopback test path).
+    pub fn serve_transport(&self, t: Arc<dyn Transport>) {
+        spawn_handler(&self.shared, t);
+    }
+
+    /// An in-process [`Connector`] onto this host: each `connect` builds a
+    /// loopback pair and a handler thread for the host side — the hermetic
+    /// equivalent of dialing the TCP listener. Refuses once the host is
+    /// shutting down (connection-death semantics for tests).
+    pub fn connector(&self) -> Arc<dyn Connector> {
+        Arc::new(LoopbackConnector { shared: self.shared.clone() })
+    }
+}
+
+impl Drop for EngineHost {
+    fn drop(&mut self) {
+        self.shared.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        let conns: Vec<JoinHandle<()>> = std::mem::take(&mut *self.shared.conns.lock().unwrap());
+        for h in conns {
+            let _ = h.join();
+        }
+        // `_bank` drops after this body: handlers are gone, so the bank's
+        // engine threads tear down with no in-flight waves.
+    }
+}
+
+/// In-process [`Connector`] produced by [`EngineHost::connector`].
+struct LoopbackConnector {
+    shared: Arc<HostShared>,
+}
+
+impl Connector for LoopbackConnector {
+    fn connect(&self) -> Result<Arc<dyn Transport>> {
+        if self.shared.stop.load(Ordering::Relaxed) {
+            anyhow::bail!("engine host '{}' is shut down", self.shared.model);
+        }
+        let (client, host_side) = loopback_pair();
+        spawn_handler(&self.shared, host_side as Arc<dyn Transport>);
+        Ok(client)
+    }
+
+    fn label(&self) -> String {
+        format!("loopback:{}", self.shared.model)
+    }
+}
+
+fn spawn_handler(shared: &Arc<HostShared>, t: Arc<dyn Transport>) {
+    let shared2 = shared.clone();
+    let h = std::thread::Builder::new()
+        .name("chords-engine-conn".into())
+        .spawn(move || {
+            handle_conn(&shared2, &*t);
+            t.close();
+        })
+        .expect("spawn engine-host conn handler");
+    let mut conns = shared.conns.lock().unwrap();
+    // Reap finished handlers as we go: a long-lived host with flapping
+    // clients must not accumulate one JoinHandle per reconnect forever.
+    conns.retain(|h| !h.is_finished());
+    conns.push(h);
+}
+
+/// One connection: serve protocol ops until the peer hangs up or the host
+/// stops. The client engine is built lazily on this thread (the PJRT
+/// thread-affinity contract) and reused across waves.
+fn handle_conn(shared: &HostShared, t: &dyn Transport) {
+    let mut engine: Option<Box<dyn DriftEngine>> = None;
+    loop {
+        if shared.stop.load(Ordering::Relaxed) {
+            return;
+        }
+        let msg = match t.recv_timeout(HOST_TICK) {
+            Ok(Some(m)) => m,
+            Ok(None) => continue,
+            Err(_) => return, // peer hung up
+        };
+        let reply = match msg.get("op").and_then(|o| o.as_str()) {
+            Some("hello") => {
+                wire::hello_response(&shared.name, &shared.dims, shared.engines, &shared.model)
+            }
+            Some("ping") => Json::obj(vec![("type", Json::str("pong"))]),
+            Some("bank_stats") => bank_stats(shared),
+            Some("drift_batch") => run_wave(shared, &mut engine, &msg),
+            _ => wire::error_response(
+                None,
+                "unknown op (expected hello|ping|bank_stats|drift_batch)",
+            ),
+        };
+        if t.send(&reply).is_err() {
+            return;
+        }
+    }
+}
+
+fn bank_stats(shared: &HostShared) -> Json {
+    let s = &shared.stats;
+    Json::obj(vec![
+        ("type", Json::str("bank_stats")),
+        ("model", Json::str(&shared.model)),
+        ("engines", Json::num(shared.engines as f64)),
+        ("batches", Json::num(s.batches.load(Ordering::Relaxed) as f64)),
+        ("batched_drifts", Json::num(s.batched_drifts.load(Ordering::Relaxed) as f64)),
+        ("mean_occupancy", Json::num(s.mean_occupancy())),
+        ("mean_exec_us", Json::num(s.mean_exec_us())),
+        ("peak_batch", Json::num(s.peak_batch.load(Ordering::Relaxed) as f64)),
+    ])
+}
+
+/// Execute one `drift_batch` wave. Every failure answers a structured
+/// error carrying the wave id when it could be parsed, so the client fails
+/// exactly the wave that died instead of the whole connection.
+fn run_wave(shared: &HostShared, engine: &mut Option<Box<dyn DriftEngine>>, msg: &Json) -> Json {
+    let id = msg.get("id").and_then(|v| v.as_f64()).map(|v| v as u64);
+    let wave = match wire::parse_drift_batch_request(msg) {
+        Ok(w) => w,
+        Err(e) => return wire::error_response(id, &e),
+    };
+    if wave.dims != shared.dims {
+        return wire::error_response(
+            Some(wave.id),
+            &format!("wave dims {:?} do not match host dims {:?}", wave.dims, shared.dims),
+        );
+    }
+    if engine.is_none() {
+        match shared.factory.create() {
+            Ok(e) => *engine = Some(e),
+            Err(e) => {
+                return wire::error_response(Some(wave.id), &format!("engine build failed: {e:#}"))
+            }
+        }
+    }
+    let outs = engine.as_mut().expect("engine built above").drift_batch(&wave.xs, &wave.ts);
+    wire::drift_batch_response(wave.id, &outs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::GaussMixtureFactory;
+    use crate::tensor::Tensor;
+
+    fn host(engines: usize) -> EngineHost {
+        EngineHost::new(
+            Arc::new(GaussMixtureFactory::standard(vec![8], 3, 0)),
+            "gm-test",
+            BatchOpts { engines, max_batch: 4, linger: Duration::from_micros(50) },
+        )
+        .unwrap()
+    }
+
+    fn call(t: &dyn Transport, req: &Json) -> Json {
+        t.send(req).unwrap();
+        loop {
+            if let Some(m) = t.recv_timeout(Duration::from_secs(5)).unwrap() {
+                return m;
+            }
+        }
+    }
+
+    #[test]
+    fn hello_advertises_bank_shape() {
+        let h = host(2);
+        let (client, server_side) = loopback_pair();
+        h.serve_transport(server_side);
+        let r = call(&*client, &wire::hello_request());
+        assert_eq!(r.get("type").unwrap().as_str().unwrap(), "hello");
+        assert_eq!(r.get("model").unwrap().as_str().unwrap(), "gm-test");
+        assert_eq!(r.get("engines").unwrap().as_usize().unwrap(), 2);
+        assert_eq!(r.get("name").unwrap().as_str().unwrap(), "batched:gauss-mixture");
+    }
+
+    #[test]
+    fn wave_execution_is_bitwise_exact() {
+        let h = host(1);
+        let (client, server_side) = loopback_pair();
+        h.serve_transport(server_side);
+        let mut direct = GaussMixtureFactory::standard(vec![8], 3, 0).create().unwrap();
+        let xs = vec![Tensor::full(&[8], 0.5), Tensor::full(&[8], -1.25)];
+        let ts = vec![0.3f32, 0.8];
+        let r = call(&*client, &wire::drift_batch_request(11, &[8], &xs, &ts));
+        let (id, outs) = wire::parse_drift_batch_response(&r, &[8]).unwrap();
+        assert_eq!(id, 11);
+        for ((x, &t), out) in xs.iter().zip(&ts).zip(&outs) {
+            assert_eq!(out, &direct.drift(x, t));
+        }
+        let stats = call(&*client, &Json::obj(vec![("op", Json::str("bank_stats"))]));
+        assert_eq!(stats.get("type").unwrap().as_str().unwrap(), "bank_stats");
+        assert!(stats.get("batched_drifts").unwrap().as_usize().unwrap() >= 2);
+    }
+
+    #[test]
+    fn bad_waves_answer_structured_errors() {
+        let h = host(1);
+        let (client, server_side) = loopback_pair();
+        h.serve_transport(server_side);
+        // Dims mismatch carries the wave id.
+        let r = call(
+            &*client,
+            &wire::drift_batch_request(9, &[4], &[Tensor::full(&[4], 1.0)], &[0.1]),
+        );
+        assert_eq!(r.get("type").unwrap().as_str().unwrap(), "error");
+        assert_eq!(r.get("id").unwrap().as_usize().unwrap(), 9);
+        // Unknown op errors without one.
+        let r = call(&*client, &Json::obj(vec![("op", Json::str("frobnicate"))]));
+        assert_eq!(r.get("type").unwrap().as_str().unwrap(), "error");
+        assert!(r.get("id").is_none());
+    }
+
+    #[test]
+    fn shutdown_refuses_new_loopback_connections() {
+        let h = host(1);
+        let c = h.connector();
+        assert!(c.connect().is_ok());
+        drop(h);
+        assert!(c.connect().is_err(), "a dropped host models host death");
+    }
+}

@@ -38,8 +38,19 @@
 //! multiple jobs for the same model run concurrently on disjoint worker
 //! views, replacing the old one-job-per-model mutex.
 
+//! Multi-host serving: the serving host above can also farm drift
+//! evaluation out to **engine hosts** — separate processes (started with
+//! `chords engine-serve`, [`EngineHost`]) that expose a bank of physical
+//! engines over the same JSON-lines framing (`hello` / `ping` /
+//! `bank_stats` / `drift_batch` ops, see [`crate::workers::wire`]). The
+//! dispatcher attaches them via `--remote-bank host:port[=model]` and mixes
+//! them with local engines behind a failover bank
+//! ([`crate::workers::FailoverBank`]); placement never changes numerics.
+
+mod engine_host;
 mod router;
 mod service;
 
+pub use engine_host::*;
 pub use router::*;
 pub use service::*;

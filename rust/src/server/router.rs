@@ -127,6 +127,7 @@ impl Router {
                 batch_linger_us: cfg.batch_linger_us,
                 adaptive: cfg.adaptive_batching,
                 model_budgets: cfg.model_budgets.iter().cloned().collect(),
+                remote_banks: cfg.remote_banks.clone(),
                 ..DispatchOpts::default()
             },
         );

@@ -27,6 +27,7 @@
 use crate::engine::{DriftEngine, EngineFactory};
 use crate::metrics::BatchStats;
 use crate::tensor::Tensor;
+use crate::util::json::Json;
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender, TryRecvError};
 use std::sync::{Arc, Mutex};
@@ -65,7 +66,7 @@ pub struct BatchTuning {
 }
 
 impl BatchTuning {
-    fn new(opts: &BatchOpts) -> Arc<BatchTuning> {
+    pub(crate) fn new(opts: &BatchOpts) -> Arc<BatchTuning> {
         let linger_us = opts.linger.as_micros() as u64;
         Arc::new(BatchTuning {
             max_batch: AtomicUsize::new(opts.max_batch.max(1)),
@@ -127,14 +128,40 @@ impl Default for BatchOpts {
     }
 }
 
-/// One drift evaluation wanted by a logical core.
-struct DriftRequest {
-    x: Tensor,
-    t: f32,
+/// One drift evaluation wanted by a logical core. Shared with the
+/// remote-bank client ([`super::remote`]), whose pump thread batches the
+/// same requests into wire waves instead of local engine invocations.
+pub(crate) struct DriftRequest {
+    pub(crate) x: Tensor,
+    pub(crate) t: f32,
     /// Caller-side sequence tag, echoed in the reply so a client issuing
     /// several in-flight requests can restore order.
-    tag: usize,
-    reply: Sender<(usize, Tensor)>,
+    pub(crate) tag: usize,
+    pub(crate) reply: Sender<(usize, Tensor)>,
+}
+
+/// The pool-facing abstraction over "a bank of engines my workers evaluate
+/// drifts through": the in-process [`EngineBank`], or the serving layer's
+/// [`super::remote::FailoverBank`] mixing local engines with remote
+/// engine-host banks. [`super::CorePool`] holds a `DriftBank` so the
+/// executor, solvers, and step rules are oblivious to engine placement.
+pub trait DriftBank: Send {
+    /// Factory producing cheap per-worker client engines onto this bank.
+    fn client_factory(&self) -> Arc<dyn EngineFactory>;
+
+    /// Shared fusion counters (occupancy, fill wait, exec/RTT time).
+    fn stats(&self) -> Arc<BatchStats>;
+
+    /// Live fusion knobs, when this bank supports online retuning.
+    fn tuning(&self) -> Option<Arc<BatchTuning>>;
+
+    /// Physical engines behind the bank (for remote banks: the engine
+    /// counts the hosts reported at handshake).
+    fn engines(&self) -> usize;
+
+    /// Per-member wire-format health/latency entries for `queue_stats`
+    /// (`bank`, `kind`, `bank_healthy`, `engines`, `remote_rtt_us`, …).
+    fn snapshots(&self) -> Vec<Json>;
 }
 
 /// A bank of physical engines behind a shared batching queue.
@@ -162,9 +189,22 @@ impl EngineBank {
         opts: BatchOpts,
         stats: Arc<BatchStats>,
     ) -> anyhow::Result<EngineBank> {
-        assert!(opts.engines >= 1, "EngineBank needs at least one physical engine");
         let opts = BatchOpts { max_batch: opts.max_batch.max(1), ..opts };
         let tuning = BatchTuning::new(&opts);
+        Self::with_tuning(factory, opts, stats, tuning)
+    }
+
+    /// [`EngineBank::new`] with a caller-supplied [`BatchTuning`]: the
+    /// dispatcher shares one tuning across every member of a failover set
+    /// (local and remote), so an adaptive retune reaches all of them.
+    pub(crate) fn with_tuning(
+        factory: Arc<dyn EngineFactory>,
+        opts: BatchOpts,
+        stats: Arc<BatchStats>,
+        tuning: Arc<BatchTuning>,
+    ) -> anyhow::Result<EngineBank> {
+        assert!(opts.engines >= 1, "EngineBank needs at least one physical engine");
+        let opts = BatchOpts { max_batch: opts.max_batch.max(1), ..opts };
         let (tx, rx) = channel::<DriftRequest>();
         let rx = Arc::new(Mutex::new(rx));
         let stop = Arc::new(AtomicBool::new(false));
@@ -242,6 +282,47 @@ impl EngineBank {
             dims: self.dims.clone(),
             name: self.client_name.clone(),
         })
+    }
+
+    /// Name client engines report (`batched:<inner engine name>`); the
+    /// engine-host handshake advertises this to remote clients.
+    pub fn client_name(&self) -> &str {
+        &self.client_name
+    }
+
+    /// Latent dims the bank's engines accept.
+    pub fn dims(&self) -> Vec<usize> {
+        self.dims.clone()
+    }
+}
+
+impl DriftBank for EngineBank {
+    fn client_factory(&self) -> Arc<dyn EngineFactory> {
+        EngineBank::client_factory(self)
+    }
+
+    fn stats(&self) -> Arc<BatchStats> {
+        EngineBank::stats(self)
+    }
+
+    fn tuning(&self) -> Option<Arc<BatchTuning>> {
+        Some(EngineBank::tuning(self))
+    }
+
+    fn engines(&self) -> usize {
+        self.opts.engines
+    }
+
+    fn snapshots(&self) -> Vec<Json> {
+        vec![Json::obj(vec![
+            ("bank", Json::str("local")),
+            ("kind", Json::str("local")),
+            ("bank_healthy", Json::Bool(true)),
+            ("engines", Json::num(self.opts.engines as f64)),
+            ("remote_rtt_us", Json::num(0.0)),
+            ("waves", Json::num(self.stats.batches.load(Ordering::Relaxed) as f64)),
+            ("wave_failures", Json::num(0.0)),
+        ])]
     }
 }
 
@@ -541,6 +622,35 @@ mod tests {
         let b = bank(3, 4, 100);
         let _client = b.client_factory().create().unwrap();
         drop(b); // must not hang even with a live (idle) client handle
+    }
+
+    /// Regression for the reply-routing teardown contract: a client that
+    /// enqueues a request and disconnects during the linger window (its
+    /// reply receiver is already gone when the batch dispatches) must not
+    /// leak a route, poison the wave it fused into, or wedge teardown.
+    #[test]
+    fn dropped_client_mid_linger_leaks_no_routes() {
+        let b = bank(1, 4, 50_000); // long linger: both requests share a wave
+        let tx = b.tx.as_ref().unwrap().clone();
+        // Orphan: the reply receiver is dropped before the request is even
+        // collected — exactly a client dying mid-batch.
+        let (orphan_tx, orphan_rx) = channel::<(usize, Tensor)>();
+        drop(orphan_rx);
+        tx.send(DriftRequest { x: Tensor::full(&[8], 1.0), t: 0.4, tag: 0, reply: orphan_tx })
+            .unwrap();
+        // A live client joins the same lingering wave and must be served.
+        let mut live = b.client_factory().create().unwrap();
+        let x = Tensor::full(&[8], 0.25);
+        let out = live.drift(&x, 0.4);
+        assert_eq!(out.dims(), &[8]);
+        let stats = b.stats();
+        assert_eq!(stats.batches.load(Ordering::Relaxed), 1, "orphan and live fused");
+        assert_eq!(stats.batched_drifts.load(Ordering::Relaxed), 2);
+        // The orphaned route was disposed with the wave: the bank keeps
+        // serving and tears down cleanly instead of hanging on a dead route.
+        assert_eq!(live.drift(&x, 0.5).dims(), &[8]);
+        drop(live);
+        drop(b);
     }
 
     #[test]

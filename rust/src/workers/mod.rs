@@ -4,11 +4,17 @@
 //! thread-affinity (PJRT handles are created and used on the worker's own
 //! thread).
 //!
-//! Three layers:
+//! Five layers:
 //! - [`pool`] — [`CorePool`]: elastic worker threads, per-job [`PoolView`]
 //!   routing, and the executor-facing [`WorkerSet`] trait;
 //! - [`batcher`] — [`EngineBank`]: logical cores multiplexed onto shared
-//!   physical engines with live-retunable fusion knobs ([`BatchTuning`]);
+//!   physical engines with live-retunable fusion knobs ([`BatchTuning`]),
+//!   plus the [`DriftBank`] abstraction a pool drives its engines through;
+//! - [`remote`] — [`RemoteBank`]/[`FailoverBank`]: drift waves executed on
+//!   remote engine-host processes with health tracking, reconnection, and
+//!   requeue-on-failure across banks;
+//! - [`transport`]/[`wire`] — the engine-host protocol: in-process
+//!   loopback and TCP message transports and the bit-exact tensor codec;
 //! - [`taskgraph`] — a K-core list scheduler used by the SRDS baseline's
 //!   pipelined-makespan accounting.
 
@@ -16,8 +22,13 @@
 
 pub mod batcher;
 pub mod pool;
+pub mod remote;
 pub mod taskgraph;
+pub mod transport;
+pub mod wire;
 
 pub use batcher::*;
 pub use pool::*;
+pub use remote::*;
 pub use taskgraph::*;
+pub use transport::*;

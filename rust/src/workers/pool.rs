@@ -15,11 +15,12 @@
 //! - the [`WorkerSet`] trait, the executor-facing abstraction implemented by
 //!   both the whole pool and a view.
 
-use super::batcher::{BatchOpts, BatchTuning, EngineBank};
+use super::batcher::{BatchOpts, BatchTuning, DriftBank, EngineBank};
 use crate::engine::EngineFactory;
 use crate::metrics::BatchStats;
 use crate::solvers::StepRule;
 use crate::tensor::Tensor;
+use crate::util::json::Json;
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
@@ -99,10 +100,12 @@ pub struct CorePool {
     factory: Arc<dyn EngineFactory>,
     rule: Arc<dyn StepRule>,
     dims: Vec<usize>,
-    /// Shared physical engines when the pool is batched; `None` means every
-    /// worker owns a dedicated engine (the classic layout). Dropped after
-    /// `Drop` joins the workers, so the bank always outlives its clients.
-    bank: Option<EngineBank>,
+    /// Shared engine bank when the pool is batched — in-process
+    /// ([`EngineBank`]), remote, or a failover mix (see
+    /// [`super::remote::FailoverBank`]); `None` means every worker owns a
+    /// dedicated engine (the classic layout). Dropped after `Drop` joins
+    /// the workers, so the bank always outlives its clients.
+    bank: Option<Box<dyn DriftBank>>,
 }
 
 impl CorePool {
@@ -146,14 +149,27 @@ impl CorePool {
     ) -> anyhow::Result<CorePool> {
         let bank = EngineBank::new(factory, opts, stats)?;
         let client_factory = bank.client_factory();
-        Self::build(k, client_factory, rule, Some(bank))
+        Self::build(k, client_factory, rule, Some(Box::new(bank)))
+    }
+
+    /// Build a pool of `k` logical workers over an already-constructed
+    /// bank — the serving dispatcher's path for models whose engines are
+    /// (partly) remote: pass a [`super::remote::FailoverBank`] and the
+    /// executor drives it exactly like a local batched pool.
+    pub fn new_with_bank(
+        k: usize,
+        bank: Box<dyn DriftBank>,
+        rule: Arc<dyn StepRule>,
+    ) -> anyhow::Result<CorePool> {
+        let factory = bank.client_factory();
+        Self::build(k, factory, rule, Some(bank))
     }
 
     fn build(
         k: usize,
         factory: Arc<dyn EngineFactory>,
         rule: Arc<dyn StepRule>,
-        bank: Option<EngineBank>,
+        bank: Option<Box<dyn DriftBank>>,
     ) -> anyhow::Result<CorePool> {
         let (reply_tx, reply_rx) = channel::<Reply>();
         let dims = factory.dims();
@@ -175,20 +191,27 @@ impl CorePool {
         self.bank.is_some()
     }
 
-    /// Batch counters of the underlying [`EngineBank`], when batched.
+    /// Batch counters of the underlying bank, when batched.
     pub fn batch_stats(&self) -> Option<Arc<BatchStats>> {
         self.bank.as_ref().map(|b| b.stats())
     }
 
-    /// Live fusion knobs of the underlying [`EngineBank`], when batched —
-    /// the adaptive controller's write handle.
+    /// Live fusion knobs of the underlying bank, when batched and
+    /// retunable — the adaptive controller's write handle.
     pub fn batch_tuning(&self) -> Option<Arc<BatchTuning>> {
-        self.bank.as_ref().map(|b| b.tuning())
+        self.bank.as_ref().and_then(|b| b.tuning())
     }
 
-    /// Physical engine count of the underlying [`EngineBank`], when batched.
+    /// Physical engine count of the underlying bank, when batched (for a
+    /// failover bank: local engines plus the hosts' reported counts).
     pub fn bank_engines(&self) -> Option<usize> {
-        self.bank.as_ref().map(|b| b.opts().engines)
+        self.bank.as_ref().map(|b| b.engines())
+    }
+
+    /// Per-member bank health/latency entries for `queue_stats` (empty in
+    /// the dedicated-engine layout).
+    pub fn bank_snapshots(&self) -> Vec<Json> {
+        self.bank.as_ref().map(|b| b.snapshots()).unwrap_or_default()
     }
 
     /// Live worker count.

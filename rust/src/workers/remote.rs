@@ -1,0 +1,806 @@
+//! Remote engine banks: drift evaluation farmed out to engine-host
+//! processes, with client-side wave fusion, health tracking, reconnection,
+//! and failover across banks.
+//!
+//! CHORDS separates *logical* solver cores from the *physical* engines
+//! that evaluate `f_θ` ([`super::batcher`]); this module separates the
+//! engines from the serving host. A [`RemoteBank`] looks like an
+//! [`super::EngineBank`] to the pool — workers hold cheap [`DriftEngine`]
+//! client handles — but its pump thread groups queued drift requests into
+//! *waves* (same `max_batch`/linger fusion discipline, read from a live
+//! [`BatchTuning`]) and executes each wave as one `drift_batch` RPC on an
+//! engine host over a [`Transport`]. Placement never changes numerics: the
+//! wire format is bit-exact ([`super::wire`]) and the host executes the
+//! same `drift_batch` contract, so remote results are bitwise identical to
+//! local ones (`rust/tests/remote_bank.rs`).
+//!
+//! A [`FailoverBank`] composes members — any mix of one local
+//! [`EngineBank`] and remote banks — behind a single
+//! [`super::DriftBank`] face. Each worker's [`FailoverEngine`] is placed
+//! on a member round-robin and sticks to it; when a member's wave fails
+//! (host death, send error, wave timeout), the in-flight requests are
+//! requeued onto the next healthy member and the dead bank's pump redials
+//! with exponential backoff. Because drifts are pure functions,
+//! re-executing a failed wave elsewhere is output-identical.
+
+use super::batcher::{BatchTuning, DriftBank, DriftRequest, EngineBank};
+use super::transport::{Connector, Transport};
+use super::wire;
+use crate::engine::{DriftEngine, EngineFactory};
+use crate::metrics::{BatchStats, RemoteBankStats};
+use crate::tensor::Tensor;
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Result};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender, TryRecvError};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Pump-thread tick: bounds reconnect-retry latency while idle and
+/// teardown latency always.
+const PUMP_TICK: Duration = Duration::from_millis(20);
+
+/// How long a [`FailoverEngine`] keeps retrying when *every* member is
+/// unhealthy before giving up (the pumps keep redialling underneath; this
+/// only fires when all hosts stay dead).
+const ALL_DEAD_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// Client-side policy knobs of a [`RemoteBank`].
+#[derive(Clone, Debug)]
+pub struct RemoteBankOpts {
+    /// Most drift requests fused into one wire wave (≥ 1).
+    pub max_batch: usize,
+    /// How long a filling wave waits for stragglers after its first
+    /// request (same bounded-latency contract as [`super::BatchOpts`]).
+    pub linger: Duration,
+    /// Reply deadline per wave; exceeded ⇒ the bank is marked unhealthy
+    /// and the wave's requests fail over to surviving banks.
+    pub wave_timeout: Duration,
+    /// Initial redial delay after a connection dies.
+    pub backoff: Duration,
+    /// Redial delay doubles per failure up to this cap.
+    pub backoff_cap: Duration,
+    /// Preset the host must advertise in its `hello` (`None` = accept
+    /// any). Dims alone cannot identify a model — every analytic preset
+    /// shares `[1, 16]` — so the dispatcher always sets this; a mismatch
+    /// poisons the bank permanently, exactly like a dims mismatch.
+    pub expect_model: Option<String>,
+}
+
+impl Default for RemoteBankOpts {
+    fn default() -> Self {
+        RemoteBankOpts {
+            max_batch: 8,
+            linger: Duration::from_micros(150),
+            wave_timeout: Duration::from_secs(5),
+            backoff: Duration::from_millis(50),
+            backoff_cap: Duration::from_secs(2),
+            expect_model: None,
+        }
+    }
+}
+
+struct RemoteShared {
+    label: String,
+    dims: Vec<usize>,
+    /// Connected and handshaken; flipped false the moment a wave fails.
+    healthy: AtomicBool,
+    /// Permanent failure (dims mismatch at handshake): never redialled.
+    poisoned: AtomicBool,
+    stop: AtomicBool,
+    /// Requests accepted but not yet answered or disposed — the
+    /// reply-routing leak guard pinned by `tests/remote_bank.rs`.
+    in_flight: AtomicUsize,
+    /// Engine count the host reported at the last handshake.
+    remote_engines: AtomicUsize,
+    stats: Arc<BatchStats>,
+    rstats: Arc<RemoteBankStats>,
+    tuning: Arc<BatchTuning>,
+}
+
+/// Client side of one remote engine bank: queue + pump thread speaking the
+/// engine-host protocol over a [`Connector`]'s connections.
+pub struct RemoteBank {
+    shared: Arc<RemoteShared>,
+    tx: Mutex<Option<Sender<DriftRequest>>>,
+    pump: Option<JoinHandle<()>>,
+}
+
+impl RemoteBank {
+    /// Stand up the client: the pump thread dials immediately and keeps
+    /// redialling with backoff, so construction never blocks on the
+    /// network — the bank just reports unhealthy until the handshake
+    /// lands. `dims` is the latent shape the host must serve (checked
+    /// against its `hello`; a mismatch poisons the bank permanently).
+    pub fn connect(
+        connector: Arc<dyn Connector>,
+        dims: Vec<usize>,
+        opts: RemoteBankOpts,
+        stats: Arc<BatchStats>,
+        rstats: Arc<RemoteBankStats>,
+    ) -> RemoteBank {
+        let tuning = BatchTuning::new(&super::BatchOpts {
+            engines: 1,
+            max_batch: opts.max_batch.max(1),
+            linger: opts.linger,
+        });
+        Self::connect_with_tuning(connector, dims, opts, tuning, stats, rstats)
+    }
+
+    /// [`RemoteBank::connect`] with a caller-supplied [`BatchTuning`]: the
+    /// dispatcher shares one tuning across a failover set's members so an
+    /// adaptive retune regroups waves on every bank, not just the first.
+    pub(crate) fn connect_with_tuning(
+        connector: Arc<dyn Connector>,
+        dims: Vec<usize>,
+        opts: RemoteBankOpts,
+        tuning: Arc<BatchTuning>,
+        stats: Arc<BatchStats>,
+        rstats: Arc<RemoteBankStats>,
+    ) -> RemoteBank {
+        let shared = Arc::new(RemoteShared {
+            label: connector.label(),
+            dims,
+            healthy: AtomicBool::new(false),
+            poisoned: AtomicBool::new(false),
+            stop: AtomicBool::new(false),
+            in_flight: AtomicUsize::new(0),
+            remote_engines: AtomicUsize::new(0),
+            stats,
+            rstats,
+            tuning,
+        });
+        let (tx, rx) = channel::<DriftRequest>();
+        let shared2 = shared.clone();
+        let pump = std::thread::Builder::new()
+            .name("chords-remote".into())
+            .spawn(move || pump_main(shared2, rx, connector, opts))
+            .expect("spawn remote-bank pump");
+        RemoteBank { shared, tx: Mutex::new(Some(tx)), pump: Some(pump) }
+    }
+
+    /// Connected, handshaken, and not mid-failure.
+    pub fn healthy(&self) -> bool {
+        self.shared.healthy.load(Ordering::Relaxed)
+    }
+
+    /// The connector's stable label (e.g. `tcp:10.0.0.2:7078`).
+    pub fn label(&self) -> &str {
+        &self.shared.label
+    }
+
+    /// Latent dims this bank serves.
+    pub fn dims(&self) -> Vec<usize> {
+        self.shared.dims.clone()
+    }
+
+    /// Requests accepted but not yet answered or disposed. Returns to 0
+    /// between waves — a leaked reply route would pin it above zero.
+    pub fn in_flight(&self) -> usize {
+        self.shared.in_flight.load(Ordering::Relaxed)
+    }
+
+    /// Physical engines the host reported at the last handshake.
+    pub fn remote_engines(&self) -> usize {
+        self.shared.remote_engines.load(Ordering::Relaxed)
+    }
+
+    /// Client-side wave fusion counters (waves ↦ batches, RTT ↦ exec).
+    pub fn stats(&self) -> Arc<BatchStats> {
+        self.shared.stats.clone()
+    }
+
+    /// RTT/serialization/failure counters for this bank.
+    pub fn rstats(&self) -> Arc<RemoteBankStats> {
+        self.shared.rstats.clone()
+    }
+
+    /// Live wave-fusion knobs (retunable like a local bank's).
+    pub fn tuning(&self) -> Arc<BatchTuning> {
+        self.shared.tuning.clone()
+    }
+
+    /// Submit one wave and block for its results. Multiple concurrent
+    /// callers fuse into shared wire waves (the pump re-splits by reply
+    /// route). Fails — without panicking — when the bank drops the wave
+    /// (host death / timeout), so callers can retry on another bank.
+    pub fn try_wave(&self, xs: &[Tensor], ts: &[f32]) -> Result<Vec<Tensor>> {
+        assert_eq!(xs.len(), ts.len(), "try_wave length mismatch");
+        let (reply_tx, reply_rx) = channel::<(usize, Tensor)>();
+        {
+            let guard = self.tx.lock().unwrap();
+            let Some(tx) = guard.as_ref() else {
+                bail!("remote bank '{}' is shut down", self.shared.label);
+            };
+            for (i, (x, &t)) in xs.iter().zip(ts).enumerate() {
+                self.shared.in_flight.fetch_add(1, Ordering::Relaxed);
+                if tx
+                    .send(DriftRequest { x: x.clone(), t, tag: i, reply: reply_tx.clone() })
+                    .is_err()
+                {
+                    self.shared.in_flight.fetch_sub(1, Ordering::Relaxed);
+                    bail!("remote bank '{}' pump is gone", self.shared.label);
+                }
+            }
+        }
+        // Drop our own sender so a disposed route surfaces as disconnect
+        // instead of a hang.
+        drop(reply_tx);
+        let mut out: Vec<Option<Tensor>> = (0..xs.len()).map(|_| None).collect();
+        for _ in 0..xs.len() {
+            match reply_rx.recv() {
+                Ok((tag, f)) => out[tag] = Some(f),
+                Err(_) => bail!(
+                    "remote bank '{}' dropped the wave (host unreachable)",
+                    self.shared.label
+                ),
+            }
+        }
+        Ok(out.into_iter().map(|f| f.expect("duplicate wave tag")).collect())
+    }
+
+    /// Test support: enqueue a request whose reply receiver is already
+    /// dropped — a client dying mid-batch. The pump must dispose the route
+    /// without leaking it or failing the wave it fused into.
+    #[doc(hidden)]
+    pub fn inject_orphan(&self, x: &Tensor, t: f32) {
+        let (orphan_tx, orphan_rx) = channel::<(usize, Tensor)>();
+        drop(orphan_rx);
+        let guard = self.tx.lock().unwrap();
+        if let Some(tx) = guard.as_ref() {
+            self.shared.in_flight.fetch_add(1, Ordering::Relaxed);
+            if tx.send(DriftRequest { x: x.clone(), t, tag: 0, reply: orphan_tx }).is_err() {
+                self.shared.in_flight.fetch_sub(1, Ordering::Relaxed);
+            }
+        }
+    }
+}
+
+impl Drop for RemoteBank {
+    fn drop(&mut self) {
+        self.shared.stop.store(true, Ordering::Relaxed);
+        *self.tx.lock().unwrap() = None; // queue disconnects once drained
+        if let Some(p) = self.pump.take() {
+            let _ = p.join();
+        }
+    }
+}
+
+/// Gather one wave: the caller supplies the first request; drain/linger up
+/// to the live `max_batch`. Mirrors the local bank's `collect_batch`
+/// discipline (arrivals during the window join this wave) without the
+/// shared-queue lock — the pump is the queue's only consumer.
+fn fill_wave(
+    first: DriftRequest,
+    rx: &Receiver<DriftRequest>,
+    tuning: &BatchTuning,
+) -> (Vec<DriftRequest>, u64) {
+    let max_batch = tuning.max_batch();
+    let linger = tuning.linger();
+    let t0 = Instant::now();
+    let deadline = t0 + linger;
+    let mut wave = vec![first];
+    while wave.len() < max_batch {
+        match rx.try_recv() {
+            Ok(r) => {
+                wave.push(r);
+                continue;
+            }
+            Err(TryRecvError::Disconnected) => break,
+            Err(TryRecvError::Empty) => {}
+        }
+        let now = Instant::now();
+        if now >= deadline {
+            break;
+        }
+        match rx.recv_timeout(deadline - now) {
+            Ok(r) => wave.push(r),
+            Err(_) => break,
+        }
+    }
+    (wave, t0.elapsed().as_micros() as u64)
+}
+
+/// Drop a wave's routes without answering them (bank unhealthy): each
+/// caller's `recv` fails and the request fails over to a surviving bank.
+/// Always balances `in_flight`, so no reply-routing entry can leak.
+fn dispose(wave: Vec<DriftRequest>, shared: &RemoteShared) {
+    shared.in_flight.fetch_sub(wave.len(), Ordering::Relaxed);
+    // Dropping the requests drops their reply senders.
+}
+
+/// Dial + `hello` handshake. A dims mismatch poisons the bank (the host
+/// serves a different model — redialling cannot fix it).
+fn establish(
+    connector: &dyn Connector,
+    opts: &RemoteBankOpts,
+    shared: &RemoteShared,
+) -> Result<Arc<dyn Transport>> {
+    let t = connector.connect()?;
+    t.send(&wire::hello_request())?;
+    let deadline = Instant::now() + opts.wave_timeout;
+    loop {
+        if shared.stop.load(Ordering::Relaxed) {
+            t.close();
+            bail!("bank stopping");
+        }
+        let left = deadline.saturating_duration_since(Instant::now());
+        if left.is_zero() {
+            t.close();
+            bail!("hello handshake with '{}' timed out", shared.label);
+        }
+        let Some(msg) = t.recv_timeout(left.min(PUMP_TICK))? else { continue };
+        if msg.get("type").and_then(|v| v.as_str()) != Some("hello") {
+            continue; // stray message from a previous connection's buffers
+        }
+        let dims: Vec<usize> = msg
+            .get("dims")
+            .and_then(|d| d.as_arr())
+            .map(|a| a.iter().filter_map(|v| v.as_usize()).collect())
+            .unwrap_or_default();
+        if dims != shared.dims {
+            shared.poisoned.store(true, Ordering::Relaxed);
+            t.close();
+            bail!(
+                "engine host '{}' serves dims {dims:?}, expected {:?} — bank poisoned",
+                shared.label,
+                shared.dims
+            );
+        }
+        if let Some(want) = &opts.expect_model {
+            let got = msg.get("model").and_then(|v| v.as_str()).unwrap_or("");
+            if got != want {
+                shared.poisoned.store(true, Ordering::Relaxed);
+                t.close();
+                bail!(
+                    "engine host '{}' serves model '{got}', expected '{want}' — bank poisoned",
+                    shared.label
+                );
+            }
+        }
+        let engines = msg.get("engines").and_then(|v| v.as_usize()).unwrap_or(0);
+        shared.remote_engines.store(engines, Ordering::Relaxed);
+        return Ok(t);
+    }
+}
+
+/// Execute one wave as a `drift_batch` RPC. Consumes the wave's routes on
+/// every path: replied on success, disposed (callers fail over) on error.
+/// Returns serialization time (µs) on success.
+fn run_wave(
+    t: &dyn Transport,
+    id: u64,
+    wave: Vec<DriftRequest>,
+    opts: &RemoteBankOpts,
+    shared: &RemoteShared,
+) -> Result<u64> {
+    let mut xs = Vec::with_capacity(wave.len());
+    let mut ts = Vec::with_capacity(wave.len());
+    let mut routes = Vec::with_capacity(wave.len());
+    for req in wave {
+        xs.push(req.x);
+        ts.push(req.t);
+        routes.push((req.tag, req.reply));
+    }
+    let n = routes.len();
+    let result: Result<(Vec<Tensor>, u64)> = (|| {
+        let t_ser = Instant::now();
+        let req = wire::drift_batch_request(id, &shared.dims, &xs, &ts);
+        let mut ser_us = t_ser.elapsed().as_micros() as u64;
+        t.send(&req)?;
+        let deadline = Instant::now() + opts.wave_timeout;
+        loop {
+            if shared.stop.load(Ordering::Relaxed) {
+                bail!("bank stopping");
+            }
+            let left = deadline.saturating_duration_since(Instant::now());
+            if left.is_zero() {
+                bail!("wave {id} to '{}' timed out", shared.label);
+            }
+            let Some(msg) = t.recv_timeout(left.min(Duration::from_millis(50)))? else {
+                continue;
+            };
+            match msg.get("type").and_then(|v| v.as_str()) {
+                Some("drift_batch") => {
+                    let t_de = Instant::now();
+                    let (got_id, outs) = wire::parse_drift_batch_response(&msg, &shared.dims)
+                        .map_err(|e| anyhow!("bad wave reply from '{}': {e}", shared.label))?;
+                    if got_id != id {
+                        continue; // stale reply from a pre-failure wave
+                    }
+                    if outs.len() != n {
+                        bail!("wave {id}: host answered {} of {n} items", outs.len());
+                    }
+                    ser_us += t_de.elapsed().as_micros() as u64;
+                    return Ok((outs, ser_us));
+                }
+                Some("error") => {
+                    let for_us =
+                        msg.get("id").and_then(|v| v.as_f64()).map(|v| v as u64) == Some(id)
+                            || msg.get("id").is_none();
+                    if for_us {
+                        let m = msg
+                            .get("message")
+                            .and_then(|v| v.as_str())
+                            .unwrap_or("unknown host error");
+                        bail!("wave {id} failed on '{}': {m}", shared.label);
+                    }
+                }
+                _ => {} // pong / stray hello: ignore
+            }
+        }
+    })();
+    match result {
+        Ok((outs, ser_us)) => {
+            for ((tag, reply), out) in routes.into_iter().zip(outs) {
+                // A dropped client (disconnected mid-batch) is fine; its
+                // route is consumed here either way.
+                let _ = reply.send((tag, out));
+            }
+            shared.in_flight.fetch_sub(n, Ordering::Relaxed);
+            Ok(ser_us)
+        }
+        Err(e) => {
+            // Unhealthy *before* the routes drop, so failing callers see a
+            // consistent member state when they pick the next bank.
+            shared.healthy.store(false, Ordering::Relaxed);
+            drop(routes);
+            shared.in_flight.fetch_sub(n, Ordering::Relaxed);
+            Err(e)
+        }
+    }
+}
+
+fn pump_main(
+    shared: Arc<RemoteShared>,
+    rx: Receiver<DriftRequest>,
+    connector: Arc<dyn Connector>,
+    opts: RemoteBankOpts,
+) {
+    let mut conn: Option<Arc<dyn Transport>> = None;
+    let mut backoff = opts.backoff;
+    let mut next_attempt = Instant::now();
+    let mut wave_id = 0u64;
+    let mut ever_connected = false;
+    loop {
+        if shared.stop.load(Ordering::Relaxed) {
+            break;
+        }
+        if conn.is_none()
+            && !shared.poisoned.load(Ordering::Relaxed)
+            && Instant::now() >= next_attempt
+        {
+            match establish(&*connector, &opts, &shared) {
+                Ok(t) => {
+                    conn = Some(t);
+                    backoff = opts.backoff;
+                    if ever_connected {
+                        shared.rstats.on_reconnect();
+                    }
+                    ever_connected = true;
+                    shared.healthy.store(true, Ordering::Relaxed);
+                }
+                Err(_) => {
+                    next_attempt = Instant::now() + backoff;
+                    backoff = (backoff * 2).min(opts.backoff_cap);
+                }
+            }
+        }
+        let first = match rx.recv_timeout(PUMP_TICK) {
+            Ok(r) => r,
+            Err(RecvTimeoutError::Timeout) => continue,
+            Err(RecvTimeoutError::Disconnected) => break,
+        };
+        let (wave, fill_us) = fill_wave(first, &rx, &shared.tuning);
+        let Some(t) = conn.clone() else {
+            // Disconnected: bounce immediately so callers fail over
+            // instead of stacking up behind a dead link.
+            dispose(wave, &shared);
+            continue;
+        };
+        wave_id += 1;
+        let n = wave.len();
+        let t0 = Instant::now();
+        match run_wave(&*t, wave_id, wave, &opts, &shared) {
+            Ok(ser_us) => {
+                let rtt_us = t0.elapsed().as_micros() as u64;
+                shared.stats.on_batch(n, fill_us, rtt_us);
+                shared.rstats.on_wave(n, rtt_us, ser_us);
+            }
+            Err(_) => {
+                shared.rstats.on_wave_failure();
+                t.close();
+                conn = None;
+                next_attempt = Instant::now() + backoff;
+                backoff = (backoff * 2).min(opts.backoff_cap);
+            }
+        }
+    }
+    shared.healthy.store(false, Ordering::Relaxed);
+    if let Some(t) = conn {
+        t.close();
+    }
+    // Drain anything still queued so no caller blocks on a dead pump.
+    while let Ok(req) = rx.try_recv() {
+        dispose(vec![req], &shared);
+    }
+}
+
+// ------------------------------------------------------------- failover
+
+enum Member {
+    Local {
+        factory: Arc<dyn EngineFactory>,
+        engines: usize,
+        /// The local bank's own counters, so its `queue_stats` entry
+        /// reports real activity (the dispatcher gives each member a
+        /// per-member child of the model aggregate).
+        stats: Arc<BatchStats>,
+    },
+    Remote(Arc<RemoteBank>),
+}
+
+impl Member {
+    fn healthy(&self) -> bool {
+        match self {
+            Member::Local { .. } => true,
+            Member::Remote(r) => r.healthy(),
+        }
+    }
+}
+
+struct FailoverShared {
+    members: Vec<Member>,
+    /// Round-robin engine placement across members.
+    next: AtomicUsize,
+    dims: Vec<usize>,
+    name: String,
+    stats: Arc<BatchStats>,
+    rstats: Arc<RemoteBankStats>,
+    tuning: Option<Arc<BatchTuning>>,
+}
+
+/// A set of engine banks — at most one local [`EngineBank`] plus any
+/// number of [`RemoteBank`]s — served as one [`DriftBank`]. Worker engines
+/// are spread round-robin across healthy members and fail over between
+/// them; the dispatcher builds one per model that has remote banks
+/// configured, so local and remote capacity mix transparently.
+pub struct FailoverBank {
+    shared: Arc<FailoverShared>,
+    /// Keeps the local physical engines alive; members only borrow its
+    /// client factory.
+    _local: Option<EngineBank>,
+}
+
+impl FailoverBank {
+    /// Compose `remotes` and an optional local bank. All members must
+    /// serve the same latent dims; at least one member is required.
+    /// `stats` aggregates wave fusion across members; `rstats` counts the
+    /// set's failover events (each remote also keeps its own
+    /// [`RemoteBankStats`]).
+    pub fn new(
+        remotes: Vec<Arc<RemoteBank>>,
+        local: Option<EngineBank>,
+        stats: Arc<BatchStats>,
+        rstats: Arc<RemoteBankStats>,
+    ) -> Result<FailoverBank> {
+        if remotes.is_empty() && local.is_none() {
+            bail!("FailoverBank needs at least one member bank");
+        }
+        let dims = local
+            .as_ref()
+            .map(|b| b.dims())
+            .unwrap_or_else(|| remotes[0].dims());
+        for r in &remotes {
+            if r.dims() != dims {
+                bail!(
+                    "remote bank '{}' serves dims {:?}, expected {dims:?}",
+                    r.label(),
+                    r.dims()
+                );
+            }
+        }
+        let name = match &local {
+            Some(b) => format!("failover:{}", b.client_name()),
+            None => format!("failover:{}", remotes[0].label()),
+        };
+        let tuning = local
+            .as_ref()
+            .map(|b| b.tuning())
+            .or_else(|| remotes.first().map(|r| r.tuning()));
+        let mut members = Vec::new();
+        if let Some(b) = &local {
+            members.push(Member::Local {
+                factory: b.client_factory(),
+                engines: DriftBank::engines(b),
+                stats: b.stats(),
+            });
+        }
+        members.extend(remotes.into_iter().map(Member::Remote));
+        Ok(FailoverBank {
+            shared: Arc::new(FailoverShared {
+                members,
+                next: AtomicUsize::new(0),
+                dims,
+                name,
+                stats,
+                rstats,
+                tuning,
+            }),
+            _local: local,
+        })
+    }
+
+    /// Member count (local + remote).
+    pub fn members(&self) -> usize {
+        self.shared.members.len()
+    }
+
+    /// The set-level counters: `failovers` increments every time a wave's
+    /// requests are requeued onto another member after a failure.
+    pub fn rstats(&self) -> Arc<RemoteBankStats> {
+        self.shared.rstats.clone()
+    }
+
+    /// Per-member health, in member order (local first when present).
+    pub fn member_health(&self) -> Vec<bool> {
+        self.shared.members.iter().map(|m| m.healthy()).collect()
+    }
+}
+
+impl DriftBank for FailoverBank {
+    fn client_factory(&self) -> Arc<dyn EngineFactory> {
+        Arc::new(FailoverFactory { shared: self.shared.clone() })
+    }
+
+    fn stats(&self) -> Arc<BatchStats> {
+        self.shared.stats.clone()
+    }
+
+    fn tuning(&self) -> Option<Arc<BatchTuning>> {
+        self.shared.tuning.clone()
+    }
+
+    fn engines(&self) -> usize {
+        self.shared
+            .members
+            .iter()
+            .map(|m| match m {
+                Member::Local { engines, .. } => *engines,
+                Member::Remote(r) => r.remote_engines(),
+            })
+            .sum()
+    }
+
+    fn snapshots(&self) -> Vec<Json> {
+        self.shared
+            .members
+            .iter()
+            .map(|m| match m {
+                Member::Local { engines, stats, .. } => Json::obj(vec![
+                    ("bank", Json::str("local")),
+                    ("kind", Json::str("local")),
+                    ("bank_healthy", Json::Bool(true)),
+                    ("engines", Json::num(*engines as f64)),
+                    ("remote_rtt_us", Json::num(0.0)),
+                    ("waves", Json::num(stats.batches.load(Ordering::Relaxed) as f64)),
+                    ("wave_failures", Json::num(0.0)),
+                ]),
+                Member::Remote(r) => {
+                    let rs = r.rstats();
+                    Json::obj(vec![
+                        ("bank", Json::str(r.label())),
+                        ("kind", Json::str("remote")),
+                        ("bank_healthy", Json::Bool(r.healthy())),
+                        ("engines", Json::num(r.remote_engines() as f64)),
+                        ("remote_rtt_us", Json::num(rs.mean_rtt_us())),
+                        ("waves", Json::num(rs.waves.load(Ordering::Relaxed) as f64)),
+                        (
+                            "wave_failures",
+                            Json::num(rs.wave_failures.load(Ordering::Relaxed) as f64),
+                        ),
+                    ])
+                }
+            })
+            .collect()
+    }
+}
+
+/// One worker's engine handle over a [`FailoverBank`]: sticky member,
+/// advancing (and counting a failover) whenever a wave fails.
+struct FailoverEngine {
+    shared: Arc<FailoverShared>,
+    member: usize,
+    /// Lazily-built client engines for local members, indexed by member.
+    local_clients: Vec<Option<Box<dyn DriftEngine>>>,
+    name: String,
+}
+
+impl FailoverEngine {
+    fn wave(&mut self, xs: &[Tensor], ts: &[f32]) -> Vec<Tensor> {
+        let n = self.shared.members.len();
+        let t0 = Instant::now();
+        loop {
+            let chosen = (0..n)
+                .map(|off| (self.member + off) % n)
+                .find(|&i| self.shared.members[i].healthy());
+            match chosen {
+                None => {
+                    // Every member down: the pumps keep redialling; wait
+                    // for one to come back rather than corrupting the job.
+                    assert!(
+                        t0.elapsed() < ALL_DEAD_TIMEOUT,
+                        "{}: every engine bank is unreachable",
+                        self.name
+                    );
+                    std::thread::sleep(Duration::from_millis(5));
+                }
+                Some(i) => {
+                    self.member = i;
+                    let attempt = match &self.shared.members[i] {
+                        Member::Remote(r) => r.try_wave(xs, ts),
+                        Member::Local { factory, .. } => {
+                            if self.local_clients[i].is_none() {
+                                let client = factory
+                                    .create()
+                                    .expect("local bank client handles are infallible");
+                                self.local_clients[i] = Some(client);
+                            }
+                            Ok(self.local_clients[i].as_mut().unwrap().drift_batch(xs, ts))
+                        }
+                    };
+                    match attempt {
+                        Ok(outs) => return outs,
+                        Err(_) => {
+                            // Requeue onto the next member; the failed
+                            // bank's pump is already redialling.
+                            self.shared.rstats.on_failover();
+                            self.member = (i + 1) % n;
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+impl DriftEngine for FailoverEngine {
+    fn dims(&self) -> Vec<usize> {
+        self.shared.dims.clone()
+    }
+
+    fn drift(&mut self, x: &Tensor, t: f32) -> Tensor {
+        self.wave(std::slice::from_ref(x), &[t]).pop().expect("wave returns its items")
+    }
+
+    fn drift_batch(&mut self, xs: &[Tensor], ts: &[f32]) -> Vec<Tensor> {
+        assert_eq!(xs.len(), ts.len(), "drift_batch length mismatch");
+        self.wave(xs, ts)
+    }
+
+    fn name(&self) -> &str {
+        &self.name
+    }
+}
+
+struct FailoverFactory {
+    shared: Arc<FailoverShared>,
+}
+
+impl EngineFactory for FailoverFactory {
+    fn create(&self) -> Result<Box<dyn DriftEngine>> {
+        let n = self.shared.members.len();
+        let member = self.shared.next.fetch_add(1, Ordering::Relaxed) % n;
+        Ok(Box::new(FailoverEngine {
+            shared: self.shared.clone(),
+            member,
+            local_clients: (0..n).map(|_| None).collect(),
+            name: self.shared.name.clone(),
+        }))
+    }
+
+    fn dims(&self) -> Vec<usize> {
+        self.shared.dims.clone()
+    }
+}

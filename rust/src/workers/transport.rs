@@ -1,0 +1,513 @@
+//! Message transports for the engine-host protocol: in-process loopback
+//! for tests, TCP for production, plus a fault-injection wrapper.
+//!
+//! A [`Transport`] is one bidirectional connection carrying JSON-line
+//! messages ([`super::wire`]). Both the client ([`super::remote`]) and the
+//! host ([`crate::server::EngineHost`]) are written against the trait, so
+//! every behavior — wave fusion, failover, reconnection, the host's
+//! concurrent wave execution — is exercised hermetically over
+//! [`loopback_pair`] and only one smoke test needs a real socket.
+//!
+//! Semantics shared by all implementations:
+//! - `send` is thread-safe and non-blocking in the common case; it fails
+//!   once the connection is closed (either side).
+//! - `recv_timeout` is a single-consumer blocking read with a bounded
+//!   wait; `Ok(None)` means "nothing yet", `Err` means the connection is
+//!   gone. Callers poll with short ticks so stop flags stay responsive.
+//! - `close` kills both directions: the peer's next `send`/`recv` fails.
+//!   This models connection death, which is exactly what the failover
+//!   machinery needs to observe.
+
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Result};
+use std::io::{BufRead, BufReader, Write};
+use std::net::{Shutdown, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// One bidirectional JSON-line connection (see the module docs for the
+/// contract shared by the loopback and TCP implementations).
+pub trait Transport: Send + Sync {
+    /// Write one message. Thread-safe; fails once the connection is closed.
+    fn send(&self, msg: &Json) -> Result<()>;
+
+    /// Block up to `timeout` for the next message. `Ok(None)` = timed out
+    /// with the connection still healthy; `Err` = connection closed/failed.
+    /// Single consumer: concurrent callers serialize on an internal lock.
+    fn recv_timeout(&self, timeout: Duration) -> Result<Option<Json>>;
+
+    /// Close both directions, failing the peer's pending and future I/O.
+    fn close(&self);
+
+    /// Human-readable peer description (for logs and `queue_stats`).
+    fn peer(&self) -> String;
+}
+
+/// A factory of connections to one engine host; the client's reconnect
+/// path calls it again after a connection dies.
+pub trait Connector: Send + Sync {
+    /// Establish a fresh connection.
+    fn connect(&self) -> Result<Arc<dyn Transport>>;
+
+    /// Stable label identifying the target (e.g. `tcp:127.0.0.1:7078`).
+    fn label(&self) -> String;
+}
+
+// ------------------------------------------------------------- loopback
+
+/// In-process [`Transport`]: two mpsc channels glued back to back. Either
+/// side's [`Transport::close`] kills the pair (connection-death semantics,
+/// matching TCP). The default transport for tests.
+pub struct LoopbackTransport {
+    tx: Mutex<Option<Sender<Json>>>,
+    rx: Mutex<Receiver<Json>>,
+    /// Shared by both sides: one `close` fails the whole connection.
+    closed: Arc<AtomicBool>,
+    side: &'static str,
+}
+
+/// Build a connected pair of in-process transports.
+pub fn loopback_pair() -> (Arc<LoopbackTransport>, Arc<LoopbackTransport>) {
+    let (a2b_tx, a2b_rx) = channel();
+    let (b2a_tx, b2a_rx) = channel();
+    let closed = Arc::new(AtomicBool::new(false));
+    let a = Arc::new(LoopbackTransport {
+        tx: Mutex::new(Some(a2b_tx)),
+        rx: Mutex::new(b2a_rx),
+        closed: closed.clone(),
+        side: "loopback:client",
+    });
+    let b = Arc::new(LoopbackTransport {
+        tx: Mutex::new(Some(b2a_tx)),
+        rx: Mutex::new(a2b_rx),
+        closed,
+        side: "loopback:host",
+    });
+    (a, b)
+}
+
+impl Transport for LoopbackTransport {
+    fn send(&self, msg: &Json) -> Result<()> {
+        if self.closed.load(Ordering::Relaxed) {
+            bail!("{} closed", self.side);
+        }
+        match self.tx.lock().unwrap().as_ref() {
+            Some(tx) => tx.send(msg.clone()).map_err(|_| anyhow!("{} peer hung up", self.side)),
+            None => bail!("{} closed", self.side),
+        }
+    }
+
+    fn recv_timeout(&self, timeout: Duration) -> Result<Option<Json>> {
+        if self.closed.load(Ordering::Relaxed) {
+            bail!("{} closed", self.side);
+        }
+        match self.rx.lock().unwrap().recv_timeout(timeout) {
+            Ok(m) => Ok(Some(m)),
+            Err(RecvTimeoutError::Timeout) => {
+                if self.closed.load(Ordering::Relaxed) {
+                    bail!("{} closed", self.side)
+                }
+                Ok(None)
+            }
+            Err(RecvTimeoutError::Disconnected) => bail!("{} peer hung up", self.side),
+        }
+    }
+
+    fn close(&self) {
+        self.closed.store(true, Ordering::Relaxed);
+        *self.tx.lock().unwrap() = None;
+    }
+
+    fn peer(&self) -> String {
+        self.side.to_string()
+    }
+}
+
+// ------------------------------------------------------------------ tcp
+
+/// [`Transport`] over a TCP stream: JSON lines with `TCP_NODELAY` (waves
+/// are small and RTT-sensitive) and read timeouts mapped to the bounded
+/// `recv_timeout` contract.
+pub struct TcpTransport {
+    writer: Mutex<TcpStream>,
+    /// Reader plus a persistent partial-line buffer — a read timeout may
+    /// land mid-line and already-consumed bytes must survive to the next
+    /// attempt (same discipline as the serving connection handler).
+    reader: Mutex<(BufReader<TcpStream>, String)>,
+    /// Independent handle used only to shut the socket down from `close`.
+    shutdown: TcpStream,
+    closed: AtomicBool,
+    peer: String,
+}
+
+/// Bound on one blocking socket write. Without it a stalled peer with a
+/// full send buffer would wedge the pump thread forever — `wave_timeout`
+/// only bounds the receive side, in the same thread, *after* send returns.
+/// A timed-out (possibly partial) write fails the wave; the caller closes
+/// the connection, so a torn line can never be followed by more data.
+const TCP_WRITE_TIMEOUT: Duration = Duration::from_secs(5);
+
+impl TcpTransport {
+    /// Wrap an accepted or connected stream.
+    pub fn from_stream(stream: TcpStream) -> Result<TcpTransport> {
+        stream.set_nodelay(true)?;
+        stream.set_write_timeout(Some(TCP_WRITE_TIMEOUT))?;
+        let peer = stream
+            .peer_addr()
+            .map(|a| format!("tcp:{a}"))
+            .unwrap_or_else(|_| "tcp:?".to_string());
+        let writer = stream.try_clone()?;
+        let shutdown = stream.try_clone()?;
+        Ok(TcpTransport {
+            writer: Mutex::new(writer),
+            reader: Mutex::new((BufReader::new(stream), String::new())),
+            shutdown,
+            closed: AtomicBool::new(false),
+            peer,
+        })
+    }
+
+    /// Dial `addr` (`host:port`).
+    pub fn connect(addr: &str) -> Result<TcpTransport> {
+        let stream = TcpStream::connect(addr)?;
+        Self::from_stream(stream)
+    }
+}
+
+impl Transport for TcpTransport {
+    fn send(&self, msg: &Json) -> Result<()> {
+        if self.closed.load(Ordering::Relaxed) {
+            bail!("tcp transport to {} closed", self.peer);
+        }
+        let mut w = self.writer.lock().unwrap();
+        w.write_all(msg.to_string_compact().as_bytes())?;
+        w.write_all(b"\n")?;
+        Ok(())
+    }
+
+    fn recv_timeout(&self, timeout: Duration) -> Result<Option<Json>> {
+        if self.closed.load(Ordering::Relaxed) {
+            bail!("tcp transport to {} closed", self.peer);
+        }
+        let deadline = Instant::now() + timeout;
+        let mut guard = self.reader.lock().unwrap();
+        let (reader, buf) = &mut *guard;
+        loop {
+            let left = deadline.saturating_duration_since(Instant::now());
+            if left.is_zero() {
+                return Ok(None);
+            }
+            // Read timeouts of zero are rejected by the socket API.
+            reader.get_ref().set_read_timeout(Some(left.max(Duration::from_millis(1))))?;
+            match reader.read_line(buf) {
+                Ok(0) => bail!("tcp peer {} hung up", self.peer),
+                Ok(_) if buf.ends_with('\n') => {
+                    let line = std::mem::take(buf);
+                    let line = line.trim();
+                    if line.is_empty() {
+                        continue;
+                    }
+                    return Json::parse(line)
+                        .map(Some)
+                        .map_err(|e| anyhow!("bad message from {}: {e}", self.peer));
+                }
+                Ok(_) => continue, // partial line; keep accumulating
+                Err(e)
+                    if matches!(
+                        e.kind(),
+                        std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                    ) =>
+                {
+                    if self.closed.load(Ordering::Relaxed) {
+                        bail!("tcp transport to {} closed", self.peer);
+                    }
+                    continue;
+                }
+                Err(e) => bail!("tcp read from {} failed: {e}", self.peer),
+            }
+        }
+    }
+
+    fn close(&self) {
+        self.closed.store(true, Ordering::Relaxed);
+        let _ = self.shutdown.shutdown(Shutdown::Both);
+    }
+
+    fn peer(&self) -> String {
+        self.peer.clone()
+    }
+}
+
+/// [`Connector`] dialing a fixed `host:port` — the production path behind
+/// `--remote-bank` and `EngineBudget::remote`.
+pub struct TcpConnector {
+    addr: String,
+}
+
+impl TcpConnector {
+    /// A connector for `addr` (`host:port`).
+    pub fn new(addr: &str) -> TcpConnector {
+        TcpConnector { addr: addr.to_string() }
+    }
+}
+
+impl Connector for TcpConnector {
+    fn connect(&self) -> Result<Arc<dyn Transport>> {
+        Ok(Arc::new(TcpTransport::connect(&self.addr)?))
+    }
+
+    fn label(&self) -> String {
+        format!("tcp:{}", self.addr)
+    }
+}
+
+// ------------------------------------------------------------- testutil
+
+/// Fault injection for the remote-bank test harness: scripted drops,
+/// delays, and disconnects keyed by *wave index*, so engine-host-death
+/// scenarios are reproducible instead of timing-dependent.
+pub mod testutil {
+    use super::*;
+    use std::collections::HashMap;
+    use std::sync::atomic::AtomicU64;
+
+    /// What happens to the scripted wave (see [`FaultyTransport`]).
+    #[derive(Clone, Debug)]
+    pub enum Fault {
+        /// The wave's `send` fails and the connection closes — the host
+        /// became unreachable before the wave left.
+        FailSend,
+        /// The wave's `send` reports success but the message is swallowed
+        /// (packet loss); the connection stays up, so only the client's
+        /// wave timeout can detect it.
+        SwallowSend,
+        /// The wave is delivered, then the connection drops before the
+        /// reply can arrive — mid-wave engine-host death.
+        CloseAfterSend,
+        /// The wave's `send` is delayed by this long, then proceeds.
+        Delay(Duration),
+    }
+
+    /// A [`Transport`] wrapper applying scripted [`Fault`]s. Only
+    /// `drift_batch` sends count as waves (index 0 = the connection's
+    /// first wave); everything else passes through untouched.
+    pub struct FaultyTransport {
+        inner: Arc<dyn Transport>,
+        faults: Mutex<HashMap<u64, Fault>>,
+        waves: AtomicU64,
+    }
+
+    impl FaultyTransport {
+        /// Wrap `inner`, applying each `(wave_index, fault)` pair once.
+        pub fn wrap(inner: Arc<dyn Transport>, script: Vec<(u64, Fault)>) -> Arc<FaultyTransport> {
+            Arc::new(FaultyTransport {
+                inner,
+                faults: Mutex::new(script.into_iter().collect()),
+                waves: AtomicU64::new(0),
+            })
+        }
+
+        /// Waves this connection has attempted to send.
+        pub fn waves_sent(&self) -> u64 {
+            self.waves.load(Ordering::Relaxed)
+        }
+    }
+
+    impl Transport for FaultyTransport {
+        fn send(&self, msg: &Json) -> Result<()> {
+            if msg.get("op").and_then(|o| o.as_str()) == Some("drift_batch") {
+                let wave = self.waves.fetch_add(1, Ordering::Relaxed);
+                let fault = self.faults.lock().unwrap().remove(&wave);
+                if let Some(fault) = fault {
+                    match fault {
+                        Fault::FailSend => {
+                            self.inner.close();
+                            bail!("injected send failure at wave {wave}");
+                        }
+                        Fault::SwallowSend => return Ok(()),
+                        Fault::CloseAfterSend => {
+                            let r = self.inner.send(msg);
+                            self.inner.close();
+                            return r;
+                        }
+                        Fault::Delay(d) => {
+                            std::thread::sleep(d);
+                            return self.inner.send(msg);
+                        }
+                    }
+                }
+            }
+            self.inner.send(msg)
+        }
+
+        fn recv_timeout(&self, timeout: Duration) -> Result<Option<Json>> {
+            self.inner.recv_timeout(timeout)
+        }
+
+        fn close(&self) {
+            self.inner.close()
+        }
+
+        fn peer(&self) -> String {
+            format!("faulty:{}", self.inner.peer())
+        }
+    }
+
+    /// A [`Connector`] wrapper scripting connection-level faults: refuse
+    /// the first `fail_first` dials (backoff tests), cap the total number
+    /// of successful connections (permanent-death tests), and wrap each
+    /// successful connection with the next [`FaultyTransport`] script.
+    pub struct FaultyConnector {
+        inner: Arc<dyn Connector>,
+        fail_first: u64,
+        max_connects: Option<u64>,
+        /// Scripts applied to successive successful connections (front
+        /// first); connections beyond the list run clean.
+        scripts: Mutex<Vec<Vec<(u64, Fault)>>>,
+        attempts: AtomicU64,
+        successes: AtomicU64,
+    }
+
+    impl FaultyConnector {
+        /// Wrap `inner` with the given connection scripts.
+        pub fn wrap(
+            inner: Arc<dyn Connector>,
+            fail_first: u64,
+            max_connects: Option<u64>,
+            scripts: Vec<Vec<(u64, Fault)>>,
+        ) -> Arc<FaultyConnector> {
+            Arc::new(FaultyConnector {
+                inner,
+                fail_first,
+                max_connects,
+                scripts: Mutex::new(scripts),
+                attempts: AtomicU64::new(0),
+                successes: AtomicU64::new(0),
+            })
+        }
+
+        /// Dial attempts so far (including refused ones).
+        pub fn attempts(&self) -> u64 {
+            self.attempts.load(Ordering::Relaxed)
+        }
+
+        /// Successful connections so far.
+        pub fn successes(&self) -> u64 {
+            self.successes.load(Ordering::Relaxed)
+        }
+    }
+
+    impl Connector for FaultyConnector {
+        fn connect(&self) -> Result<Arc<dyn Transport>> {
+            let attempt = self.attempts.fetch_add(1, Ordering::Relaxed);
+            if attempt < self.fail_first {
+                bail!("injected connect refusal (attempt {attempt})");
+            }
+            if let Some(max) = self.max_connects {
+                if self.successes.load(Ordering::Relaxed) >= max {
+                    bail!("injected permanent host death");
+                }
+            }
+            let t = self.inner.connect()?;
+            self.successes.fetch_add(1, Ordering::Relaxed);
+            let script = {
+                let mut scripts = self.scripts.lock().unwrap();
+                if scripts.is_empty() {
+                    Vec::new()
+                } else {
+                    scripts.remove(0)
+                }
+            };
+            Ok(FaultyTransport::wrap(t, script) as Arc<dyn Transport>)
+        }
+
+        fn label(&self) -> String {
+            format!("faulty:{}", self.inner.label())
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::testutil::{Fault, FaultyTransport};
+    use super::*;
+
+    #[test]
+    fn loopback_delivers_both_directions() {
+        let (a, b) = loopback_pair();
+        a.send(&Json::obj(vec![("op", Json::str("ping"))])).unwrap();
+        let m = b.recv_timeout(Duration::from_millis(100)).unwrap().unwrap();
+        assert_eq!(m.get("op").unwrap().as_str().unwrap(), "ping");
+        b.send(&Json::obj(vec![("type", Json::str("pong"))])).unwrap();
+        let m = a.recv_timeout(Duration::from_millis(100)).unwrap().unwrap();
+        assert_eq!(m.get("type").unwrap().as_str().unwrap(), "pong");
+    }
+
+    #[test]
+    fn loopback_timeout_is_not_an_error() {
+        let (a, _b) = loopback_pair();
+        assert!(a.recv_timeout(Duration::from_millis(5)).unwrap().is_none());
+    }
+
+    #[test]
+    fn loopback_close_fails_both_sides() {
+        let (a, b) = loopback_pair();
+        a.close();
+        assert!(a.send(&Json::Null).is_err());
+        assert!(b.send(&Json::Null).is_err());
+        assert!(b.recv_timeout(Duration::from_millis(5)).is_err());
+    }
+
+    #[test]
+    fn tcp_roundtrip_on_ephemeral_port() {
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let server = std::thread::spawn(move || {
+            let (stream, _) = listener.accept().unwrap();
+            let t = TcpTransport::from_stream(stream).unwrap();
+            let m = t.recv_timeout(Duration::from_secs(2)).unwrap().unwrap();
+            t.send(&Json::obj(vec![("echo", m.get("n").unwrap().clone())])).unwrap();
+            // Hold until the client closes so the client sees a clean EOF.
+            let _ = t.recv_timeout(Duration::from_secs(2));
+        });
+        let c = TcpConnector::new(&addr.to_string());
+        assert!(c.label().starts_with("tcp:"));
+        let t = c.connect().unwrap();
+        t.send(&Json::obj(vec![("n", Json::num(5.0))])).unwrap();
+        let m = t.recv_timeout(Duration::from_secs(2)).unwrap().unwrap();
+        assert_eq!(m.get("echo").unwrap().as_usize().unwrap(), 5);
+        t.close();
+        server.join().unwrap();
+    }
+
+    #[test]
+    fn faulty_transport_swallows_and_closes_on_script() {
+        let (a, b) = loopback_pair();
+        let f = FaultyTransport::wrap(
+            a.clone() as Arc<dyn Transport>,
+            vec![(1, Fault::SwallowSend), (2, Fault::CloseAfterSend)],
+        );
+        let wave =
+            |id: f64| Json::obj(vec![("op", Json::str("drift_batch")), ("id", Json::num(id))]);
+        // Wave 0: clean. Wave 1: swallowed. Wave 2: delivered, then closed.
+        f.send(&wave(0.0)).unwrap();
+        f.send(&wave(1.0)).unwrap();
+        f.send(&wave(2.0)).unwrap();
+        let got0 = b.recv_timeout(Duration::from_millis(100)).unwrap().unwrap();
+        assert_eq!(got0.get("id").unwrap().as_usize().unwrap(), 0);
+        let got2 = b.recv_timeout(Duration::from_millis(100)).unwrap().unwrap();
+        assert_eq!(got2.get("id").unwrap().as_usize().unwrap(), 2, "wave 1 swallowed");
+        assert!(b.recv_timeout(Duration::from_millis(5)).is_err(), "closed after wave 2");
+        assert_eq!(f.waves_sent(), 3);
+    }
+
+    #[test]
+    fn non_wave_messages_bypass_fault_scripts() {
+        let (a, b) = loopback_pair();
+        let f = FaultyTransport::wrap(a as Arc<dyn Transport>, vec![(0, Fault::FailSend)]);
+        f.send(&Json::obj(vec![("op", Json::str("hello"))])).unwrap();
+        assert!(b.recv_timeout(Duration::from_millis(100)).unwrap().is_some());
+    }
+}

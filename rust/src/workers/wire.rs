@@ -1,0 +1,265 @@
+//! Wire format of the engine-host protocol (JSON lines, shared with the
+//! serving protocol's framing).
+//!
+//! A remote engine bank moves drift evaluations between hosts, and the
+//! serving stack's contract is that placement must never change numerics:
+//! a wave executed on a remote host has to be **bitwise identical** to the
+//! same wave executed in-process (`rust/tests/remote_bank.rs` pins this
+//! across the transport boundary). Floats therefore never pass through a
+//! decimal round-trip: tensor payloads are hex-encoded little-endian f32
+//! bit patterns (8 hex chars per element), exact by construction for every
+//! value including negative zero, subnormals, infinities, and NaNs. Step
+//! times `t` ride as JSON numbers — an f32 widens to f64 exactly and the
+//! JSON writer prints round-trip-exact doubles.
+//!
+//! Ops (client → host, one JSON object per line):
+//!
+//! | op            | reply type    | purpose                                |
+//! |---------------|---------------|----------------------------------------|
+//! | `hello`       | `hello`       | model name/dims/engine count handshake |
+//! | `ping`        | `pong`        | liveness probe                         |
+//! | `bank_stats`  | `bank_stats`  | host-side fusion counters              |
+//! | `drift_batch` | `drift_batch` | execute one wave of drift evaluations  |
+//!
+//! Failures reply `{"type":"error","id":…,"message":…}`; the `id` echoes
+//! the request's wave id so a client can fail exactly the wave that died.
+
+use crate::tensor::Tensor;
+use crate::util::json::Json;
+use std::fmt::Write as _;
+
+/// Encode a tensor's payload as lowercase hex of little-endian f32 bit
+/// patterns — 8 chars per element, bitwise exact for every value. Writes
+/// straight into one preallocated buffer: this is the per-wave
+/// serialization hot path the `ser_us` counter prices.
+pub fn encode_tensor(t: &Tensor) -> String {
+    let mut s = String::with_capacity(t.numel() * 8);
+    for v in t.data() {
+        let _ = write!(s, "{:08x}", v.to_bits());
+    }
+    s
+}
+
+/// Decode [`encode_tensor`] output back into a tensor of shape `dims`.
+pub fn decode_tensor(dims: &[usize], hex: &str) -> Result<Tensor, String> {
+    let n: usize = dims.iter().product();
+    if hex.len() != n * 8 {
+        return Err(format!(
+            "tensor payload for dims {dims:?} wants {} hex chars, got {}",
+            n * 8,
+            hex.len()
+        ));
+    }
+    let mut data = Vec::with_capacity(n);
+    let bytes = hex.as_bytes();
+    for i in 0..n {
+        let chunk = std::str::from_utf8(&bytes[i * 8..(i + 1) * 8])
+            .map_err(|_| "non-ascii tensor payload".to_string())?;
+        let bits = u32::from_str_radix(chunk, 16)
+            .map_err(|_| format!("bad tensor payload chunk '{chunk}'"))?;
+        data.push(f32::from_bits(bits));
+    }
+    Ok(Tensor::from_vec(dims, data))
+}
+
+/// Dims as a JSON array of numbers.
+fn dims_json(dims: &[usize]) -> Json {
+    Json::arr(dims.iter().map(|&d| Json::num(d as f64)))
+}
+
+/// Parse a JSON array of numbers into dims.
+fn parse_dims(j: &Json) -> Option<Vec<usize>> {
+    j.as_arr().map(|a| a.iter().filter_map(|v| v.as_usize()).collect())
+}
+
+/// The `hello` handshake request.
+pub fn hello_request() -> Json {
+    Json::obj(vec![("op", Json::str("hello"))])
+}
+
+/// The host's `hello` reply: engine name, latent dims, physical engine
+/// count, and the preset the host serves.
+pub fn hello_response(name: &str, dims: &[usize], engines: usize, model: &str) -> Json {
+    Json::obj(vec![
+        ("type", Json::str("hello")),
+        ("name", Json::str(name)),
+        ("dims", dims_json(dims)),
+        ("engines", Json::num(engines as f64)),
+        ("model", Json::str(model)),
+    ])
+}
+
+/// One parsed `drift_batch` request: wave id plus the wave's inputs.
+pub struct DriftWave {
+    /// Client-assigned wave id, echoed in the reply.
+    pub id: u64,
+    /// Latent dims shared by every item of the wave.
+    pub dims: Vec<usize>,
+    /// Wave states.
+    pub xs: Vec<Tensor>,
+    /// Wave times (one per state).
+    pub ts: Vec<f32>,
+}
+
+/// Build a `drift_batch` request for one wave.
+pub fn drift_batch_request(id: u64, dims: &[usize], xs: &[Tensor], ts: &[f32]) -> Json {
+    Json::obj(vec![
+        ("op", Json::str("drift_batch")),
+        ("id", Json::num(id as f64)),
+        ("dims", dims_json(dims)),
+        ("xs", Json::arr(xs.iter().map(|x| Json::str(&encode_tensor(x))))),
+        ("ts", Json::arr(ts.iter().map(|&t| Json::num(f64::from(t))))),
+    ])
+}
+
+/// Parse a `drift_batch` request (host side).
+pub fn parse_drift_batch_request(j: &Json) -> Result<DriftWave, String> {
+    let id = j
+        .get("id")
+        .and_then(|v| v.as_f64())
+        .ok_or("drift_batch: missing id")? as u64;
+    let dims = j
+        .get("dims")
+        .and_then(parse_dims)
+        .ok_or("drift_batch: missing dims")?;
+    let xs_raw = j
+        .get("xs")
+        .and_then(|v| v.as_arr())
+        .ok_or("drift_batch: missing xs")?;
+    let ts_raw = j
+        .get("ts")
+        .and_then(|v| v.as_arr())
+        .ok_or("drift_batch: missing ts")?;
+    if xs_raw.len() != ts_raw.len() {
+        return Err(format!(
+            "drift_batch: {} states but {} times",
+            xs_raw.len(),
+            ts_raw.len()
+        ));
+    }
+    let mut xs = Vec::with_capacity(xs_raw.len());
+    for x in xs_raw {
+        let hex = x.as_str().ok_or("drift_batch: non-string tensor payload")?;
+        xs.push(decode_tensor(&dims, hex)?);
+    }
+    let ts = ts_raw
+        .iter()
+        .map(|t| t.as_f64().map(|v| v as f32).ok_or("drift_batch: non-numeric t".to_string()))
+        .collect::<Result<Vec<f32>, String>>()?;
+    Ok(DriftWave { id, dims, xs, ts })
+}
+
+/// Build the host's reply carrying the wave's outputs.
+pub fn drift_batch_response(id: u64, outs: &[Tensor]) -> Json {
+    Json::obj(vec![
+        ("type", Json::str("drift_batch")),
+        ("id", Json::num(id as f64)),
+        ("outs", Json::arr(outs.iter().map(|o| Json::str(&encode_tensor(o))))),
+    ])
+}
+
+/// Parse a `drift_batch` reply (client side); outputs have shape `dims`.
+pub fn parse_drift_batch_response(j: &Json, dims: &[usize]) -> Result<(u64, Vec<Tensor>), String> {
+    let id = j
+        .get("id")
+        .and_then(|v| v.as_f64())
+        .ok_or("drift_batch reply: missing id")? as u64;
+    let outs_raw = j
+        .get("outs")
+        .and_then(|v| v.as_arr())
+        .ok_or("drift_batch reply: missing outs")?;
+    let mut outs = Vec::with_capacity(outs_raw.len());
+    for o in outs_raw {
+        let hex = o.as_str().ok_or("drift_batch reply: non-string tensor payload")?;
+        outs.push(decode_tensor(dims, hex)?);
+    }
+    Ok((id, outs))
+}
+
+/// A structured error reply; `id` ties it to the failed wave when known.
+pub fn error_response(id: Option<u64>, message: &str) -> Json {
+    let mut fields = vec![("type", Json::str("error")), ("message", Json::str(message))];
+    if let Some(id) = id {
+        fields.push(("id", Json::num(id as f64)));
+    }
+    Json::obj(fields)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn tensor_codec_is_bitwise_exact() {
+        let mut rng = Rng::seeded(0x31E);
+        for _ in 0..20 {
+            let t = Tensor::randn(&[3, 5], &mut rng);
+            let back = decode_tensor(&[3, 5], &encode_tensor(&t)).unwrap();
+            assert_eq!(back, t);
+        }
+        // Special values survive exactly (a decimal round trip would not).
+        let specials = Tensor::from_vec(
+            &[6],
+            vec![0.0, -0.0, f32::INFINITY, f32::NEG_INFINITY, f32::NAN, 1e-42],
+        );
+        let back = decode_tensor(&[6], &encode_tensor(&specials)).unwrap();
+        for (a, b) in specials.data().iter().zip(back.data()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn tensor_codec_rejects_bad_payloads() {
+        assert!(decode_tensor(&[2], "deadbeef").is_err(), "length mismatch");
+        assert!(decode_tensor(&[1], "zzzzzzzz").is_err(), "non-hex chunk");
+    }
+
+    #[test]
+    fn drift_batch_request_roundtrip() {
+        let mut rng = Rng::seeded(7);
+        let xs: Vec<Tensor> = (0..3).map(|_| Tensor::randn(&[4], &mut rng)).collect();
+        let ts = vec![0.1f32, 0.5, 0.925];
+        let j = drift_batch_request(42, &[4], &xs, &ts);
+        // Through the actual wire representation.
+        let j = Json::parse(&j.to_string_compact()).unwrap();
+        let wave = parse_drift_batch_request(&j).unwrap();
+        assert_eq!(wave.id, 42);
+        assert_eq!(wave.dims, vec![4]);
+        assert_eq!(wave.xs, xs);
+        assert_eq!(wave.ts, ts);
+    }
+
+    #[test]
+    fn drift_batch_response_roundtrip() {
+        let mut rng = Rng::seeded(8);
+        let outs: Vec<Tensor> = (0..2).map(|_| Tensor::randn(&[2, 3], &mut rng)).collect();
+        let j = drift_batch_response(9, &outs);
+        let j = Json::parse(&j.to_string_compact()).unwrap();
+        let (id, back) = parse_drift_batch_response(&j, &[2, 3]).unwrap();
+        assert_eq!(id, 9);
+        assert_eq!(back, outs);
+    }
+
+    #[test]
+    fn malformed_requests_error() {
+        let j = Json::obj(vec![("op", Json::str("drift_batch"))]);
+        assert!(parse_drift_batch_request(&j).is_err());
+        let j = Json::obj(vec![
+            ("op", Json::str("drift_batch")),
+            ("id", Json::num(1.0)),
+            ("dims", Json::arr(vec![Json::num(2.0)])),
+            ("xs", Json::arr(vec![Json::str("0000000000000000")])),
+            ("ts", Json::arr(vec![Json::num(0.1), Json::num(0.2)])),
+        ]);
+        assert!(parse_drift_batch_request(&j).is_err(), "xs/ts length mismatch");
+    }
+
+    #[test]
+    fn error_response_carries_wave_id() {
+        let j = error_response(Some(5), "boom");
+        assert_eq!(j.get("type").unwrap().as_str().unwrap(), "error");
+        assert_eq!(j.get("id").unwrap().as_usize().unwrap(), 5);
+        assert!(error_response(None, "x").get("id").is_none());
+    }
+}

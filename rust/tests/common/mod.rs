@@ -1,0 +1,21 @@
+//! Polling helpers shared by the e2e suites (`tests/sched_elastic.rs`,
+//! `tests/remote_bank.rs`): bounded waits instead of fixed sleeps, so a
+//! regression surfaces as a *named* failure instead of a hung CI job, and
+//! heavy CI load gets a generous window instead of a race.
+
+use std::time::{Duration, Instant};
+
+/// Poll `cond` every 2ms for up to 10s; panic with `what` on timeout.
+pub fn wait_for(what: &str, cond: impl FnMut() -> bool) {
+    wait_for_within(what, Duration::from_secs(10), cond);
+}
+
+/// [`wait_for`] with an explicit deadline, for waits that must stay tight
+/// (e.g. proving a fault is *detected* quickly, not just eventually).
+pub fn wait_for_within(what: &str, limit: Duration, mut cond: impl FnMut() -> bool) {
+    let t0 = Instant::now();
+    while !cond() {
+        assert!(t0.elapsed() < limit, "timed out waiting for {what}");
+        std::thread::sleep(Duration::from_millis(2));
+    }
+}

@@ -1,0 +1,441 @@
+//! End-to-end tests for remote engine banks: drift evaluation farmed out
+//! to engine-host processes must be **bitwise identical** to local
+//! execution — across engines, bank shapes, fusion on/off, and step rules
+//! (extending `tests/batch_equivalence.rs`'s invariants across the
+//! transport boundary) — and must survive scripted engine-host death by
+//! requeueing in-flight waves onto surviving banks with unchanged output.
+//!
+//! Deflake discipline: everything runs over the in-process loopback
+//! transport with scripted faults ([`chords::workers::transport::testutil`])
+//! except one real-TCP smoke test on an ephemeral port, so the suite is
+//! parallel-safe; CI additionally re-runs it with `--test-threads=1` to
+//! exercise the fault timings without cross-test scheduling noise. Every
+//! state poll goes through the bounded [`common::wait_for`] helpers shared
+//! with `tests/sched_elastic.rs` — no fixed sleeps on the success path.
+
+mod common;
+
+use chords::config::ServeConfig;
+use chords::coordinator::{ChordsConfig, ChordsExecutor};
+use chords::engine::{EngineFactory, ExpOdeFactory, GaussMixtureFactory};
+use chords::metrics::{BatchStats, RemoteBankStats};
+use chords::server::{EngineHost, GenRequest, Router};
+use chords::solvers::{Euler, Heun, StepRule, TimeGrid};
+use chords::tensor::Tensor;
+use chords::util::rng::Rng;
+use chords::workers::transport::testutil::{Fault, FaultyConnector};
+use chords::workers::{
+    BatchOpts, Connector, CorePool, DriftBank, EngineBank, FailoverBank, RemoteBank,
+    RemoteBankOpts,
+};
+use common::{wait_for, wait_for_within};
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn mix_factory() -> Arc<dyn EngineFactory> {
+    Arc::new(GaussMixtureFactory::standard(vec![8], 3, 0))
+}
+
+fn host(
+    factory: Arc<dyn EngineFactory>,
+    engines: usize,
+    max_batch: usize,
+    linger_us: u64,
+) -> EngineHost {
+    EngineHost::new(
+        factory,
+        "test-model",
+        BatchOpts { engines, max_batch, linger: Duration::from_micros(linger_us) },
+    )
+    .unwrap()
+}
+
+/// Client-side wave policy tuned for tests: short timeouts and backoff so
+/// scripted failures are detected in milliseconds, not seconds.
+fn ropts(max_batch: usize, linger_us: u64) -> RemoteBankOpts {
+    RemoteBankOpts {
+        max_batch,
+        linger: Duration::from_micros(linger_us),
+        wave_timeout: Duration::from_millis(400),
+        backoff: Duration::from_millis(5),
+        backoff_cap: Duration::from_millis(50),
+        expect_model: None,
+    }
+}
+
+fn remote_bank(connector: Arc<dyn Connector>, opts: RemoteBankOpts) -> Arc<RemoteBank> {
+    Arc::new(RemoteBank::connect(
+        connector,
+        vec![8],
+        opts,
+        BatchStats::new(),
+        RemoteBankStats::new(),
+    ))
+}
+
+/// A remote-only failover bank plus its set-level counters.
+fn remote_only(banks: Vec<Arc<RemoteBank>>) -> (FailoverBank, Arc<RemoteBankStats>) {
+    let rstats = RemoteBankStats::new();
+    let fb = FailoverBank::new(banks, None, BatchStats::new(), rstats.clone()).unwrap();
+    (fb, rstats)
+}
+
+/// One CHORDS run over `pool` (k=4, 30 steps): the per-core streamed
+/// outputs, the values every placement must reproduce bitwise.
+fn run_chords(pool: &CorePool, rule_steps: usize, seed: u64) -> Vec<(usize, Tensor)> {
+    let x0 = {
+        let mut rng = Rng::seeded(seed);
+        Tensor::randn(&[8], &mut rng)
+    };
+    let cfg = ChordsConfig::new(vec![0, 6, 12, 20], TimeGrid::uniform(rule_steps));
+    let res = ChordsExecutor::new(pool, cfg).run(&x0);
+    res.outputs.into_iter().map(|o| (o.core, o.output)).collect()
+}
+
+#[test]
+fn remote_drift_is_bitwise_identical_to_direct() {
+    let factories: Vec<(Arc<dyn EngineFactory>, &str)> = vec![
+        (mix_factory(), "mixture"),
+        (Arc::new(ExpOdeFactory::new(vec![8], 0)), "exp"),
+    ];
+    for (factory, name) in factories {
+        let h = host(factory.clone(), 2, 4, 100);
+        let (fb, _) = remote_only(vec![remote_bank(h.connector(), ropts(4, 100))]);
+        let mut remote = DriftBank::client_factory(&fb).create().unwrap();
+        let mut direct = factory.create().unwrap();
+        let mut rng = Rng::seeded(0xC0DE);
+        for i in 0..12 {
+            let x = Tensor::randn(&[8], &mut rng);
+            let t = i as f32 / 12.0;
+            assert_eq!(remote.drift(&x, t), direct.drift(&x, t), "{name} diverged at t={t}");
+        }
+    }
+}
+
+/// The transport-boundary extension of `batch_equivalence`: full CHORDS
+/// runs on remote engines match local runs bitwise for Euler *and* the
+/// 2-NFE Heun rule, across host bank shapes and with wave fusion off
+/// (`max_batch` 1) and on.
+#[test]
+fn remote_chords_run_matches_local_across_shapes_and_rules() {
+    let rules: Vec<(Arc<dyn StepRule>, &str)> =
+        vec![(Arc::new(Euler), "euler"), (Arc::new(Heun), "heun")];
+    for (rule, rname) in rules {
+        let local = CorePool::new(4, mix_factory(), rule.clone()).unwrap();
+        let want = run_chords(&local, 30, 9);
+        for (engines, max_batch, linger) in [(1usize, 1usize, 0u64), (2, 4, 200), (3, 8, 500)] {
+            let h = host(mix_factory(), engines, max_batch, linger);
+            let bank = remote_bank(h.connector(), ropts(max_batch, linger));
+            let wave_stats = bank.stats();
+            let (fb, rstats) = remote_only(vec![bank]);
+            let pool = CorePool::new_with_bank(4, Box::new(fb), rule.clone()).unwrap();
+            let got = run_chords(&pool, 30, 9);
+            assert_eq!(
+                got, want,
+                "remote run diverged: rule={rname} engines={engines} max_batch={max_batch}"
+            );
+            assert!(
+                wave_stats.batches.load(Ordering::Relaxed) > 0,
+                "drifts actually crossed the wire"
+            );
+            assert_eq!(rstats.failovers.load(Ordering::Relaxed), 0, "clean run, no failover");
+        }
+    }
+}
+
+/// The acceptance scenario: an engine host dies mid-wave (the wave is
+/// delivered, the connection drops before the reply). The in-flight
+/// requests must requeue onto the surviving bank and the job must complete
+/// with output identical to an all-local run.
+#[test]
+fn host_crash_mid_wave_fails_over_with_identical_output() {
+    let local = CorePool::new(4, mix_factory(), Arc::new(Euler)).unwrap();
+    let want = run_chords(&local, 30, 21);
+
+    let h_dying = host(mix_factory(), 1, 8, 100);
+    let h_alive = host(mix_factory(), 1, 8, 100);
+    // Wave 2 on the dying host is delivered, then the link drops before
+    // the reply; every redial is refused (permanent host death).
+    let dying_conn = FaultyConnector::wrap(
+        h_dying.connector(),
+        0,
+        Some(1),
+        vec![vec![(2, Fault::CloseAfterSend)]],
+    );
+    let dying = remote_bank(dying_conn as Arc<dyn Connector>, ropts(8, 100));
+    let alive = remote_bank(h_alive.connector(), ropts(8, 100));
+    let (fb, set_rstats) = remote_only(vec![dying.clone(), alive.clone()]);
+    // Both members must be up before workers place, so the dying bank
+    // actually receives waves.
+    wait_for("both banks to handshake", || dying.healthy() && alive.healthy());
+    let pool = CorePool::new_with_bank(4, Box::new(fb), Arc::new(Euler)).unwrap();
+    let got = run_chords(&pool, 30, 21);
+    assert_eq!(got, want, "failover changed the output");
+    assert!(
+        set_rstats.failovers.load(Ordering::Relaxed) >= 1,
+        "the killed wave must requeue onto the survivor"
+    );
+    assert!(dying.rstats().wave_failures.load(Ordering::Relaxed) >= 1);
+    assert!(!dying.healthy(), "a dead host's bank stays unhealthy");
+    assert!(alive.rstats().waves.load(Ordering::Relaxed) >= 1, "survivor carried the job");
+    wait_for("in-flight routes to drain", || dying.in_flight() == 0 && alive.in_flight() == 0);
+}
+
+/// Silent packet loss: the wave's send "succeeds" but the message never
+/// arrives, so only the client-side wave timeout can detect it. The
+/// request must still complete — correctly — on the surviving bank.
+#[test]
+fn swallowed_wave_times_out_and_fails_over() {
+    let h_lossy = host(mix_factory(), 1, 4, 50);
+    let h_ok = host(mix_factory(), 1, 4, 50);
+    let lossy_conn =
+        FaultyConnector::wrap(h_lossy.connector(), 0, Some(1), vec![vec![(0, Fault::SwallowSend)]]);
+    let lossy = remote_bank(lossy_conn as Arc<dyn Connector>, ropts(4, 0));
+    let ok_bank = remote_bank(h_ok.connector(), ropts(4, 0));
+    let (fb, set_rstats) = remote_only(vec![lossy.clone(), ok_bank]);
+    wait_for("both banks to handshake", || fb.member_health().iter().all(|h| *h));
+    // The first engine places on the lossy member (round-robin from 0).
+    let mut e = DriftBank::client_factory(&fb).create().unwrap();
+    let x = Tensor::full(&[8], 0.5);
+    let mut direct = mix_factory().create().unwrap();
+    assert_eq!(e.drift(&x, 0.3), direct.drift(&x, 0.3), "result correct despite the loss");
+    assert!(set_rstats.failovers.load(Ordering::Relaxed) >= 1);
+    assert!(lossy.rstats().wave_failures.load(Ordering::Relaxed) >= 1, "timeout counted");
+}
+
+/// Mixing placements: a model with a *local* engine bank plus a remote one
+/// keeps serving (bitwise-identically) when the remote host dies.
+#[test]
+fn dead_remote_fails_over_onto_local_bank() {
+    let want = {
+        let p = CorePool::new(4, mix_factory(), Arc::new(Euler)).unwrap();
+        run_chords(&p, 30, 33)
+    };
+    let h = host(mix_factory(), 1, 8, 100);
+    let conn = FaultyConnector::wrap(h.connector(), 0, Some(1), vec![vec![(1, Fault::FailSend)]]);
+    let remote = remote_bank(conn as Arc<dyn Connector>, ropts(8, 100));
+    let local_bank = EngineBank::new(
+        mix_factory(),
+        BatchOpts { engines: 1, max_batch: 8, linger: Duration::from_micros(100) },
+        BatchStats::new(),
+    )
+    .unwrap();
+    let set_rstats = RemoteBankStats::new();
+    let fb = FailoverBank::new(
+        vec![remote.clone()],
+        Some(local_bank),
+        BatchStats::new(),
+        set_rstats.clone(),
+    )
+    .unwrap();
+    assert_eq!(fb.members(), 2);
+    wait_for("remote member to handshake", || remote.healthy());
+    let pool = CorePool::new_with_bank(4, Box::new(fb), Arc::new(Euler)).unwrap();
+    assert_eq!(run_chords(&pool, 30, 33), want, "local+remote mix changed the output");
+    assert!(set_rstats.failovers.load(Ordering::Relaxed) >= 1, "remote waves requeued locally");
+}
+
+/// Reconnection: refused dials back off and retry until the host accepts;
+/// the bank then serves normally and counts the recovery.
+#[test]
+fn bank_reconnects_with_backoff_after_refused_dials() {
+    let h = host(mix_factory(), 1, 4, 50);
+    let conn = FaultyConnector::wrap(h.connector(), 2, None, vec![]);
+    let bank = remote_bank(conn.clone() as Arc<dyn Connector>, ropts(4, 50));
+    wait_for("bank to come up after refused dials", || bank.healthy());
+    assert!(conn.attempts() >= 3, "two refusals then a success");
+    assert_eq!(conn.successes(), 1);
+    let out = bank.try_wave(&[Tensor::full(&[8], 1.0)], &[0.5]).unwrap();
+    let mut direct = mix_factory().create().unwrap();
+    assert_eq!(out[0], direct.drift(&Tensor::full(&[8], 1.0), 0.5));
+}
+
+/// A host serving the wrong model (dims mismatch at handshake) poisons the
+/// bank permanently: no amount of redialling can fix it, so the pump must
+/// not retry, and queued requests bounce instead of hanging.
+#[test]
+fn dims_mismatch_poisons_the_bank_permanently() {
+    let h = host(mix_factory(), 1, 4, 50); // serves dims [8]
+    let conn = FaultyConnector::wrap(h.connector(), 0, None, vec![]);
+    let bank = Arc::new(RemoteBank::connect(
+        conn.clone() as Arc<dyn Connector>,
+        vec![4], // expects dims [4] — permanent mismatch
+        ropts(4, 50),
+        BatchStats::new(),
+        RemoteBankStats::new(),
+    ));
+    wait_for("the poisoning dial", || conn.attempts() >= 1);
+    assert!(bank.try_wave(&[Tensor::full(&[4], 1.0)], &[0.5]).is_err(), "waves bounce");
+    assert!(!bank.healthy());
+    // Absence check: well past several backoff periods, still exactly one
+    // dial — a poisoned bank must never redial.
+    std::thread::sleep(Duration::from_millis(100));
+    assert_eq!(conn.attempts(), 1, "poisoned banks must not redial");
+    assert_eq!(bank.in_flight(), 0, "bounced requests leave no routes behind");
+}
+
+/// Dims cannot identify a model (every analytic preset shares a latent
+/// shape), so the handshake also checks the host's advertised model when
+/// the client declares an expectation — a mismatch poisons the bank
+/// exactly like a dims mismatch instead of silently serving wrong drifts.
+#[test]
+fn model_mismatch_poisons_the_bank_permanently() {
+    let h = host(mix_factory(), 1, 4, 50); // advertises model "test-model"
+    let conn = FaultyConnector::wrap(h.connector(), 0, None, vec![]);
+    let bank = Arc::new(RemoteBank::connect(
+        conn.clone() as Arc<dyn Connector>,
+        vec![8], // dims match; only the model name differs
+        RemoteBankOpts { expect_model: Some("other-model".into()), ..ropts(4, 50) },
+        BatchStats::new(),
+        RemoteBankStats::new(),
+    ));
+    wait_for("the poisoning dial", || conn.attempts() >= 1);
+    assert!(bank.try_wave(&[Tensor::full(&[8], 1.0)], &[0.5]).is_err(), "waves bounce");
+    assert!(!bank.healthy());
+    std::thread::sleep(Duration::from_millis(100));
+    assert_eq!(conn.attempts(), 1, "model-poisoned banks must not redial");
+    assert_eq!(bank.in_flight(), 0);
+}
+
+/// Regression (EngineBank teardown contract, extended over the wire): a
+/// client that enqueues a request and disconnects during the linger window
+/// must not leak a reply-routing entry, poison the wire wave it fused
+/// into, or wedge teardown.
+#[test]
+fn client_disconnect_mid_linger_leaks_no_reply_routes() {
+    let h = host(mix_factory(), 1, 8, 100);
+    // Long client-side linger so the orphan and the live request fuse into
+    // one wire wave.
+    let bank = remote_bank(h.connector(), ropts(8, 200_000));
+    wait_for("handshake", || bank.healthy());
+    // A client dies mid-batch: its reply receiver is gone before the wave
+    // dispatches.
+    bank.inject_orphan(&Tensor::full(&[8], 1.0), 0.4);
+    let out = bank.try_wave(&[Tensor::full(&[8], 0.25)], &[0.4]).unwrap();
+    let mut direct = mix_factory().create().unwrap();
+    assert_eq!(out[0], direct.drift(&Tensor::full(&[8], 0.25), 0.4), "live client served");
+    wait_for("orphaned route to be disposed with its wave", || bank.in_flight() == 0);
+    let stats = bank.stats();
+    assert_eq!(stats.batches.load(Ordering::Relaxed), 1, "orphan and live fused into one wave");
+    assert_eq!(stats.batched_drifts.load(Ordering::Relaxed), 2);
+    // The bank keeps serving and tears down cleanly.
+    assert!(bank.try_wave(&[Tensor::full(&[8], 0.5)], &[0.6]).is_ok());
+    wait_for("routes drained before teardown", || bank.in_flight() == 0);
+}
+
+/// Scripted delay: a slow wave (well within the timeout) completes
+/// normally — latency faults alone never trigger failover.
+#[test]
+fn delayed_wave_succeeds_without_failover() {
+    let h = host(mix_factory(), 1, 4, 0);
+    let conn = FaultyConnector::wrap(
+        h.connector(),
+        0,
+        None,
+        vec![vec![(0, Fault::Delay(Duration::from_millis(50)))]],
+    );
+    let bank = remote_bank(conn as Arc<dyn Connector>, ropts(4, 0));
+    wait_for("handshake", || bank.healthy());
+    let out = bank.try_wave(&[Tensor::full(&[8], 2.0)], &[0.7]).unwrap();
+    let mut direct = mix_factory().create().unwrap();
+    assert_eq!(out[0], direct.drift(&Tensor::full(&[8], 2.0), 0.7));
+    assert_eq!(bank.rstats().wave_failures.load(Ordering::Relaxed), 0);
+    // The measured RTT includes the injected delay.
+    wait_for_within("rtt recorded", Duration::from_secs(2), || bank.rstats().mean_rtt_us() > 0.0);
+}
+
+/// The one real-TCP test (ephemeral port 0): a `chords engine-serve`
+/// process-equivalent on localhost, attached to a full serving stack via
+/// `--remote-bank`, serves a generation bitwise-identically to an
+/// all-local server — and `queue_stats` reports the per-bank health/RTT
+/// fields the acceptance criteria name.
+#[test]
+fn real_tcp_smoke_serving_via_remote_bank() {
+    let req = GenRequest {
+        model: "gauss-mix".into(),
+        steps: 30,
+        cores: 2,
+        seed: 5,
+        ..Default::default()
+    };
+    let want = {
+        let local = Router::with_opts(
+            "artifacts",
+            ServeConfig { total_cores: 4, ..ServeConfig::default() },
+        );
+        local.generate(&req, |_, _, _| {}).unwrap().final_output
+    };
+
+    let p = chords::config::preset("gauss-mix").unwrap();
+    let factory = chords::engine::factory_for(p, "artifacts").unwrap();
+    let mut engine_host = EngineHost::new(
+        factory,
+        "gauss-mix",
+        BatchOpts { engines: 2, max_batch: 8, linger: Duration::from_micros(100) },
+    )
+    .unwrap();
+    let addr = engine_host.serve_tcp("127.0.0.1", 0).unwrap();
+
+    let mut cfg = ServeConfig { total_cores: 4, ..ServeConfig::default() };
+    cfg.set("remote_bank", &format!("{addr}=gauss-mix")).unwrap();
+    // Remote-only placement: every drift must cross the socket.
+    cfg.set("model_budget", "gauss-mix=2:8:100:remote").unwrap();
+    let router = Router::with_opts("artifacts", cfg);
+    let got = router.generate(&req, |_, _, _| {}).unwrap().final_output;
+    assert_eq!(got, want, "remote drift over real TCP changed the output");
+
+    let j = router.queue_stats();
+    let banks = j.get("banks").unwrap().as_arr().unwrap();
+    let remote = banks
+        .iter()
+        .find(|b| b.get("kind").unwrap().as_str() == Some("remote"))
+        .expect("queue_stats lists the remote bank");
+    assert_eq!(remote.get("model").unwrap().as_str().unwrap(), "gauss-mix");
+    assert_eq!(remote.get("bank_healthy").unwrap().as_bool(), Some(true));
+    assert!(remote.get("remote_rtt_us").unwrap().as_f64().unwrap() > 0.0);
+    assert!(remote.get("waves").unwrap().as_usize().unwrap() >= 1);
+    assert_eq!(remote.get("engines").unwrap().as_usize().unwrap(), 2, "host-reported engines");
+    assert_eq!(j.get("remote_failovers").unwrap().as_usize().unwrap(), 0);
+    let set_rstats = router.dispatcher().model_remote_stats("gauss-mix").unwrap();
+    assert_eq!(set_rstats.wave_failures.load(Ordering::Relaxed), 0);
+    // The remote waves chained into the server-wide fusion aggregate.
+    assert!(j.get("drift_batches").unwrap().as_usize().unwrap() >= 1);
+
+    // Same host, attached as a model-less *wildcard* bank: for a model the
+    // host does not serve (exp-ode — identical dims, different model), the
+    // handshake's model check poisons that member and the always-present
+    // local bank keeps the model serving, bitwise-identically.
+    let exp_req =
+        GenRequest { model: "exp-ode".into(), steps: 20, cores: 2, seed: 6, ..Default::default() };
+    let want_exp = {
+        let local = Router::with_opts(
+            "artifacts",
+            ServeConfig { total_cores: 4, ..ServeConfig::default() },
+        );
+        local.generate(&exp_req, |_, _, _| {}).unwrap().final_output
+    };
+    let mut cfg2 = ServeConfig { total_cores: 4, ..ServeConfig::default() };
+    cfg2.set("remote_bank", &addr.to_string()).unwrap(); // wildcard
+    let router2 = Router::with_opts("artifacts", cfg2);
+    let got_exp = router2.generate(&exp_req, |_, _, _| {}).unwrap().final_output;
+    assert_eq!(got_exp, want_exp, "local fallback must keep a mismatched model serving");
+    let j2 = router2.queue_stats();
+    let banks2 = j2.get("banks").unwrap().as_arr().unwrap();
+    let poisoned = banks2
+        .iter()
+        .find(|b| {
+            b.get("kind").unwrap().as_str() == Some("remote")
+                && b.get("model").unwrap().as_str() == Some("exp-ode")
+        })
+        .expect("wildcard bank listed for exp-ode");
+    assert_eq!(poisoned.get("bank_healthy").unwrap().as_bool(), Some(false), "model mismatch");
+    let local_member = banks2
+        .iter()
+        .find(|b| {
+            b.get("kind").unwrap().as_str() == Some("local")
+                && b.get("model").unwrap().as_str() == Some("exp-ode")
+        })
+        .expect("local fallback member listed");
+    assert_eq!(local_member.get("bank_healthy").unwrap().as_bool(), Some(true));
+}

@@ -9,15 +9,18 @@
 //!
 //! Synchronization discipline (CI-load-proof): ordering claims are proved
 //! with channels or held grants — never with wall-clock timestamps — and
-//! every state poll goes through [`wait_for`], which bounds its retries.
+//! every state poll goes through [`common::wait_for`] (shared with
+//! `tests/remote_bank.rs`), which bounds its retries.
+
+mod common;
 
 use chords::config::ServeConfig;
+use common::wait_for;
 use chords::sched::JobSpec;
 use chords::server::{Client, GenRequest, Router, Server};
 use chords::util::json::Json;
 use std::sync::atomic::Ordering;
 use std::sync::{Arc, Barrier};
-use std::time::{Duration, Instant};
 
 fn start(opts: ServeConfig) -> (Server, Arc<Router>) {
     let router = Arc::new(Router::with_opts("artifacts", opts));
@@ -38,17 +41,6 @@ fn gen_req(cores: usize, steps: usize, seed: u64) -> Json {
 
 fn job_spec(cores: usize, priority: i32, deadline_ms: Option<u64>) -> JobSpec {
     JobSpec { model: "exp-ode-slow".into(), cores, min_cores: 0, priority, deadline_ms }
-}
-
-/// Poll `cond` every 2ms for up to 10s; panic with `what` on timeout.
-/// Bounded retries: a regression surfaces as a named failure, not a hung
-/// CI job, and heavy CI load gets a generous window instead of a race.
-fn wait_for(what: &str, mut cond: impl FnMut() -> bool) {
-    let t0 = Instant::now();
-    while !cond() {
-        assert!(t0.elapsed() < Duration::from_secs(10), "timed out waiting for {what}");
-        std::thread::sleep(Duration::from_millis(2));
-    }
 }
 
 /// The acceptance scenario: budget 8, four concurrent 4-core requests to
