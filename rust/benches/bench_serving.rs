@@ -27,18 +27,29 @@
 //! 127.0.0.1 — the wire cost of a remote engine bank made visible next to
 //! the in-process baseline. Rows append with `"bench":"serving_remote"`.
 //!
+//! Part 5 is the multi-tenant fairness soak: three tenants with quotas and
+//! weights (`gold` latency-class, `silver` and `hot` throughput-class) offer
+//! *open-loop* Poisson load through [`chords::harness::run_soak`], with the
+//! `hot` tenant offered ~5× what its quota can serve. Each tenant is first
+//! run alone for an isolated-p99 baseline; the combined run must shed the
+//! hot tenant with the `overloaded` code while the in-quota tenants' p99
+//! stays near isolated and served-core share tracks weights. Rows append
+//! with `"bench":"serving_soak"`.
+//!
 //! One JSON object per configuration (the repo's JSON bench-table
 //! convention), preceded by a human-readable line; the full table is also
 //! written to `BENCH_serving.json` as the perf-trajectory baseline.
 //! Run with `cargo bench --bench bench_serving`.
 
 use chords::config::ServeConfig;
+use chords::harness::{run_soak, TenantLoad};
+use chords::sched::TenantQuota;
 use chords::server::{EngineHost, GenRequest, Router};
 use chords::workers::BatchOpts;
 use chords::util::json::Json;
 use chords::util::stats::Summary;
 use std::sync::{Arc, Barrier};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 const TOTAL_CORES: usize = 8;
 const REQS_PER_CLIENT: usize = 3;
@@ -319,6 +330,100 @@ fn sweep_remote(remote: bool) -> Json {
     ])
 }
 
+/// Part 5's tenant roster: `gold` (weight 4, 4 cores, 250ms p99 target),
+/// `silver` (weight 2, 2 cores), `hot` (weight 1, 2 cores) — `hot` is the
+/// abuser, offered ~5× its quota in [`soak_loads`].
+const SOAK_QUOTAS: &str = "gold=4:4:latency:250,silver=2:2,hot=1:2";
+
+fn soak_cfg() -> ServeConfig {
+    let mut cfg = ServeConfig {
+        total_cores: TOTAL_CORES,
+        queue_cap: 64,
+        ..ServeConfig::default()
+    };
+    cfg.set("tenant_quota", SOAK_QUOTAS).unwrap();
+    cfg
+}
+
+fn soak_loads() -> Vec<TenantLoad> {
+    let template = GenRequest {
+        model: "exp-ode-slow".into(),
+        steps: 40,
+        cores: 2,
+        min_cores: 1,
+        ..GenRequest::default()
+    };
+    vec![
+        TenantLoad { tenant: "gold".into(), rate_hz: 25.0, template: template.clone() },
+        TenantLoad { tenant: "silver".into(), rate_hz: 15.0, template: template.clone() },
+        // A 2-core quota serves ~80 of these jobs/s (40 × 300µs simulated
+        // NFEs each); 400/s offers ~5× that, so most must be shed.
+        TenantLoad { tenant: "hot".into(), rate_hz: 400.0, template },
+    ]
+}
+
+/// Multi-tenant fairness soak: isolated-p99 baseline per tenant, then the
+/// combined open-loop run. One row per tenant.
+fn sweep_soak() -> Vec<Json> {
+    let loads = soak_loads();
+    let mut isolated_p99 = std::collections::HashMap::new();
+    for load in &loads {
+        let router = Arc::new(Router::with_opts("artifacts", soak_cfg()));
+        let out = run_soak(&router, std::slice::from_ref(load), Duration::from_secs(2), 0xB0A7);
+        isolated_p99.insert(load.tenant.clone(), out.tenants[0].latency.p99 * 1e3);
+    }
+    let router = Arc::new(Router::with_opts("artifacts", soak_cfg()));
+    let out = run_soak(&router, &loads, Duration::from_secs(3), 0xB0A7);
+    let quotas = TenantQuota::parse_list(SOAK_QUOTAS).unwrap();
+    let total_w: f64 = quotas.iter().map(|q| q.weight).sum();
+    let mut rows = Vec::new();
+    for t in &out.tenants {
+        let q = quotas.iter().find(|q| q.name == t.tenant).unwrap();
+        let iso = isolated_p99[&t.tenant];
+        println!(
+            "tenant {:<6} offered {:>4} served {:>4} shed {:>4} | p50 {:7.1}ms p99 {:7.1}ms p999 {:7.1}ms (isolated p99 {:7.1}ms) | share {:.2} vs weight share {:.2}",
+            t.tenant,
+            t.offered,
+            t.served,
+            t.shed,
+            t.latency.median * 1e3,
+            t.latency.p99 * 1e3,
+            t.latency.p999 * 1e3,
+            iso,
+            out.served_share(&t.tenant),
+            q.weight / total_w,
+        );
+        rows.push(Json::obj(vec![
+            ("bench", Json::str("serving_soak")),
+            ("model", Json::str("exp-ode-slow")),
+            ("total_cores", Json::num(TOTAL_CORES as f64)),
+            ("tenant", Json::str(&t.tenant)),
+            ("weight", Json::num(q.weight)),
+            ("core_quota", Json::num(q.core_quota as f64)),
+            ("slo", Json::str(&q.slo.as_wire())),
+            ("rate_hz", Json::num(loads.iter().find(|l| l.tenant == t.tenant).unwrap().rate_hz)),
+            ("offered", Json::num(t.offered as f64)),
+            ("served", Json::num(t.served as f64)),
+            ("shed", Json::num(t.shed as f64)),
+            ("failed", Json::num(t.failed as f64)),
+            ("p50_ms", Json::num(t.latency.median * 1e3)),
+            ("p99_ms", Json::num(t.latency.p99 * 1e3)),
+            ("p999_ms", Json::num(t.latency.p999 * 1e3)),
+            ("isolated_p99_ms", Json::num(iso)),
+            ("served_core_secs", Json::num(t.served_core_secs)),
+            ("served_share", Json::num(out.served_share(&t.tenant))),
+            ("weight_share", Json::num(q.weight / total_w)),
+            ("fairness_max_min", Json::num(out.fairness_max_min())),
+            ("wall_s", Json::num(out.wall_s)),
+        ]));
+    }
+    println!(
+        "fairness (max/min weight-normalized served share): {:.2} | acceptance: hot shed > 0, in-quota tenants' p99 ≤ 2× isolated",
+        out.fairness_max_min()
+    );
+    rows
+}
+
 fn main() {
     println!("== serving benches: offered-load sweep over the elastic scheduler ==");
     let mut rows = Vec::new();
@@ -380,6 +485,9 @@ fn main() {
             remote_rps / local_rps
         );
     }
+
+    println!("\n== soak benches: multi-tenant fairness under open-loop overload ==");
+    rows.extend(sweep_soak());
 
     println!("-- JSON bench table --");
     for row in &rows {

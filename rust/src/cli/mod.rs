@@ -89,7 +89,7 @@ pub fn help_text() -> String {
         ("reward-sweep", "verify Thm 2.5 / Def 2.4 on the exponential-ODE reward"),
         (
             "serve",
-            "start the generation server (--port 7077 --total-cores 8 --queue-cap 64 [--no-reclaim] [--engines-per-model E --max-batch B --batch-linger-us U] [--adaptive-batching] [--model-budget m=E:B:L[:adaptive][:remote]] [--remote-bank host:port[=model]]; see README \"Tuning & adaptive batching\")",
+            "start the generation server (--port 7077 --total-cores 8 --queue-cap 64 [--no-reclaim] [--engines-per-model E --max-batch B --batch-linger-us U] [--adaptive-batching] [--model-budget m=E:B:L[:adaptive][:remote]] [--remote-bank host:port[=model]] [--tenant-quota t=W:C[:slo]]; see README \"Tuning & adaptive batching\" and \"Multi-tenant fairness\")",
         ),
         (
             "engine-serve",

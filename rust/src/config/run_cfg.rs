@@ -2,6 +2,7 @@
 
 use super::presets::EngineBudget;
 use crate::coordinator::init_seq::InitStrategy;
+use crate::sched::tenant::TenantQuota;
 
 /// Which parallel sampling method to run.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -183,6 +184,10 @@ pub struct ServeConfig {
     /// every model; the dispatcher mixes matching banks with the model's
     /// local engines behind a failover set.
     pub remote_banks: Vec<RemoteBankSpec>,
+    /// Per-tenant weights/quotas/SLO classes (`--tenant-quota
+    /// t=W:C[:slo]`, comma-separated / repeatable). Empty = single-tenant
+    /// mode: no quotas, no tenant-aware shedding, legacy admission order.
+    pub tenant_quotas: Vec<TenantQuota>,
 }
 
 impl Default for ServeConfig {
@@ -199,6 +204,7 @@ impl Default for ServeConfig {
             adaptive_batching: false,
             model_budgets: Vec::new(),
             remote_banks: Vec::new(),
+            tenant_quotas: Vec::new(),
         }
     }
 }
@@ -268,6 +274,14 @@ impl ServeConfig {
                     if !self.remote_banks.contains(&s) {
                         self.remote_banks.push(s);
                     }
+                }
+            }
+            "tenant_quota" | "tenant-quota" => {
+                // Comma-separated list of t=W:C[:slo] specs; a repeated
+                // tenant replaces its earlier entry (across calls too).
+                for q in TenantQuota::parse_list(value)? {
+                    self.tenant_quotas.retain(|t| t.name != q.name);
+                    self.tenant_quotas.push(q);
                 }
             }
             _ => return Err(format!("unknown serve config key '{key}'")),
@@ -360,6 +374,29 @@ mod tests {
         assert!(s.set("remote_bank", "host:notaport").is_err());
         assert!(s.set("remote_bank", "host:7078=").is_err());
         assert!(RemoteBankSpec::parse("127.0.0.1:0").is_ok(), "ephemeral ports allowed");
+    }
+
+    #[test]
+    fn serve_config_tenant_quota_knob() {
+        use crate::sched::tenant::SloClass;
+        let s = ServeConfig::default();
+        assert!(s.tenant_quotas.is_empty(), "multi-tenancy is opt-in");
+        let mut s = ServeConfig::default();
+        s.set("tenant-quota", "vid=3:8:latency:250,batch=1:4").unwrap();
+        assert_eq!(s.tenant_quotas.len(), 2);
+        assert_eq!(s.tenant_quotas[0].name, "vid");
+        assert_eq!(s.tenant_quotas[0].weight, 3.0);
+        assert_eq!(s.tenant_quotas[0].core_quota, 8);
+        assert_eq!(s.tenant_quotas[0].slo, SloClass::LatencyTarget { p99_ms: 250 });
+        assert_eq!(s.tenant_quotas[1].slo, SloClass::Throughput);
+        // A later call replaces the earlier spec for the same tenant.
+        s.set("tenant_quota", "batch=2:6:throughput").unwrap();
+        assert_eq!(s.tenant_quotas.len(), 2);
+        let b = s.tenant_quotas.iter().find(|t| t.name == "batch").unwrap();
+        assert_eq!(b.weight, 2.0);
+        assert_eq!(b.core_quota, 6);
+        assert!(s.set("tenant_quota", "bad=0:1").is_err(), "zero weight rejected");
+        assert!(s.set("tenant_quota", "noeq").is_err());
     }
 
     #[test]

@@ -153,9 +153,26 @@ impl<'a> ChordsExecutor<'a> {
     pub fn run_streaming_with_retire(
         &self,
         x0: &Tensor,
+        on_output: impl FnMut(&CoreOutput),
+        on_retire: impl FnMut(usize),
+    ) -> ChordsResult {
+        self.try_run_streaming_with_retire(x0, on_output, on_retire)
+            .expect("engine failed mid-run")
+    }
+
+    /// Fallible [`Self::run_streaming_with_retire`]: when a worker reports
+    /// an engine failure (a remote bank with every host dead or poisoned —
+    /// [`crate::workers::Reply::err`]), the run stops at that wave and the
+    /// error is returned instead of panicking a worker thread. The failing
+    /// wave is fully collected first, so no stray replies leak into the
+    /// pool's next job. Local engines never fail, so for them this is
+    /// exactly the infallible path.
+    pub fn try_run_streaming_with_retire(
+        &self,
+        x0: &Tensor,
         mut on_output: impl FnMut(&CoreOutput),
         mut on_retire: impl FnMut(usize),
-    ) -> ChordsResult {
+    ) -> Result<ChordsResult, String> {
         let k = self.sched.cores();
         let n = self.sched.steps();
         let grid = &self.cfg.grid;
@@ -203,9 +220,20 @@ impl<'a> ChordsExecutor<'a> {
                 break;
             }
             self.pool.submit_batch(wave);
+            // Drain the whole wave even if a reply carries an error —
+            // returning early would leave replies to be misattributed to
+            // the pool's next job.
+            let mut wave_err: Option<String> = None;
             for reply in self.pool.collect(submitted) {
                 total_nfes += 1;
+                if let Some(e) = reply.err {
+                    wave_err.get_or_insert(e);
+                    continue;
+                }
                 stepped[reply.worker] = Some((reply.out, reply.drift));
+            }
+            if let Some(e) = wave_err {
+                return Err(e);
             }
 
             // ---- Snapshots: anchor states are the *pre-commit* (x, f) ----
@@ -296,7 +324,7 @@ impl<'a> ChordsExecutor<'a> {
         }
 
         let last = outputs.last().expect("no outputs produced");
-        ChordsResult {
+        Ok(ChordsResult {
             final_output: last.output.clone(),
             nfe_depth: last.nfe_depth,
             outputs,
@@ -306,7 +334,7 @@ impl<'a> ChordsExecutor<'a> {
             rectifications,
             comm_bytes,
             trace,
-        }
+        })
     }
 
     /// Run without a streaming callback.

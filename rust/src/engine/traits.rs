@@ -46,6 +46,21 @@ pub trait DriftEngine: Send {
         xs.iter().zip(ts).map(|(x, &t)| self.drift(x, t)).collect()
     }
 
+    /// Fallible [`DriftEngine::drift`]. Local engines never fail, so the
+    /// default just wraps `drift`; engines backed by the network (a remote
+    /// bank with every host dead or poisoned) override this to surface the
+    /// failure as an `Err` instead of panicking inside a worker thread —
+    /// the serving path reports it as a structured `bank_unavailable`.
+    fn try_drift(&mut self, x: &Tensor, t: f32) -> anyhow::Result<Tensor> {
+        Ok(self.drift(x, t))
+    }
+
+    /// Fallible [`DriftEngine::drift_batch`] (same contract, same default
+    /// relationship as [`DriftEngine::try_drift`] to `drift`).
+    fn try_drift_batch(&mut self, xs: &[Tensor], ts: &[f32]) -> anyhow::Result<Vec<Tensor>> {
+        Ok(self.drift_batch(xs, ts))
+    }
+
     /// Human-readable backend name.
     fn name(&self) -> &str;
 }

@@ -1,0 +1,295 @@
+//! Open-loop Poisson load generator for multi-tenant soak runs.
+//!
+//! Closed-loop clients (the bench_serving parts 1–4 pattern) slow down when
+//! the server slows down, which hides overload: a tenant that should be shed
+//! simply offers less. A soak run needs the opposite — arrivals keep coming
+//! at the *offered* rate no matter what the server does, so queue pressure,
+//! shedding, and cross-tenant interference become visible. This module
+//! schedules seeded Poisson arrivals per tenant against an in-process
+//! [`Router`] and reports, per tenant, latency percentiles, shed counts, and
+//! the served-core share realized by the scheduler's weighted-fair queue.
+
+use crate::server::{GenRequest, Router};
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+use crate::util::stats::Summary;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Backstop on arrivals per tenant so a typo'd rate cannot spawn an
+/// unbounded number of request threads.
+const MAX_ARRIVALS_PER_TENANT: usize = 100_000;
+
+/// One tenant's offered load: a mean arrival rate plus the request template
+/// every arrival clones (the `tenant` and `seed` fields are overwritten).
+#[derive(Clone, Debug)]
+pub struct TenantLoad {
+    /// Tenant name stamped onto every request.
+    pub tenant: String,
+    /// Mean Poisson arrival rate in requests per second.
+    pub rate_hz: f64,
+    /// Template for each request; `tenant` / `seed` are filled in per arrival.
+    pub template: GenRequest,
+}
+
+/// What happened to one open-loop request.
+enum ReqOutcome {
+    /// Served end-to-end; payload is client-observed latency in seconds.
+    Served(f64),
+    /// Rejected with the stable `overloaded` code (quota / watermark shed).
+    Shed,
+    /// Any other failure (deadline, bank_unavailable, ...).
+    Failed,
+}
+
+/// Per-tenant results of a soak run.
+#[derive(Clone, Debug)]
+pub struct TenantOutcome {
+    /// Tenant name (as offered; `""` reads back as `"default"` in stats).
+    pub tenant: String,
+    /// Fair-queuing weight the scheduler applied (1.0 when unregistered).
+    pub weight: f64,
+    /// Requests actually issued during the window.
+    pub offered: usize,
+    /// Requests served end-to-end.
+    pub served: usize,
+    /// Requests rejected with the `overloaded` code.
+    pub shed: usize,
+    /// Requests that failed for any other reason.
+    pub failed: usize,
+    /// Client-observed latency of served requests, in seconds.
+    pub latency: Summary,
+    /// Core-seconds this tenant consumed, from the scheduler's own counters.
+    pub served_core_secs: f64,
+}
+
+/// Whole-run results: per-tenant outcomes plus the raw `queue_stats`
+/// snapshot taken after the last request drained.
+#[derive(Clone, Debug)]
+pub struct SoakOutcome {
+    /// One entry per [`TenantLoad`], in input order.
+    pub tenants: Vec<TenantOutcome>,
+    /// Wall-clock of the whole run (arrival window + drain), seconds.
+    pub wall_s: f64,
+    /// The router's `queue_stats` snapshot at the end of the run.
+    pub stats: Json,
+}
+
+impl SoakOutcome {
+    /// The outcome row for `tenant`, if it was part of the run.
+    pub fn outcome(&self, tenant: &str) -> Option<&TenantOutcome> {
+        self.tenants.iter().find(|t| t.tenant == tenant)
+    }
+
+    /// Fraction of all served core-seconds that went to `tenant`.
+    pub fn served_share(&self, tenant: &str) -> f64 {
+        let total: f64 = self.tenants.iter().map(|t| t.served_core_secs).sum();
+        if total <= 0.0 {
+            return 0.0;
+        }
+        self.outcome(tenant).map_or(0.0, |t| t.served_core_secs / total)
+    }
+
+    /// Max/min ratio of *weight-normalized* served shares across tenants
+    /// with nonzero offered load and usage. A weight-fair scheduler scores
+    /// 1.0 when every tenant keeps its lane backlogged. Under-offered
+    /// tenants drag the ratio above 1.0 harmlessly: work-conserving DRR
+    /// donates their idle share to whoever is backlogged, so read this
+    /// together with per-tenant shed/served counts.
+    pub fn fairness_max_min(&self) -> f64 {
+        let total_w: f64 = self.tenants.iter().map(|t| t.weight).sum();
+        let mut lo = f64::INFINITY;
+        let mut hi = 0.0f64;
+        for t in &self.tenants {
+            if t.offered == 0 || t.served_core_secs <= 0.0 || t.weight <= 0.0 {
+                continue;
+            }
+            let norm = self.served_share(&t.tenant) / (t.weight / total_w);
+            lo = lo.min(norm);
+            hi = hi.max(norm);
+        }
+        if lo.is_finite() && lo > 0.0 { hi / lo } else { 1.0 }
+    }
+}
+
+/// Seeded Poisson arrival offsets (seconds from window start), ascending,
+/// truncated to `duration`. Inter-arrivals are exponential with mean
+/// `1 / rate_hz`; the sequence is a pure function of the `rng` state.
+pub fn poisson_arrivals(rng: &mut Rng, rate_hz: f64, duration: Duration) -> Vec<f64> {
+    assert!(rate_hz > 0.0, "arrival rate must be positive");
+    let horizon = duration.as_secs_f64();
+    let mut t = 0.0;
+    let mut out = Vec::new();
+    while out.len() < MAX_ARRIVALS_PER_TENANT {
+        // Inverse-CDF sample; 1 - u avoids ln(0) since next_f64 ∈ [0, 1).
+        t += -(1.0 - rng.next_f64()).ln() / rate_hz;
+        if t >= horizon {
+            break;
+        }
+        out.push(t);
+    }
+    out
+}
+
+/// Run an open-loop soak: every tenant in `loads` offers Poisson arrivals at
+/// its own rate for `duration`, each arrival fired at its scheduled time
+/// regardless of how the previous ones are faring. Blocks until every
+/// in-flight request resolves, then snapshots `queue_stats`. Arrival
+/// schedules and per-request seeds are deterministic in `seed`; completion
+/// order and latencies of course are not.
+pub fn run_soak(
+    router: &Arc<Router>,
+    loads: &[TenantLoad],
+    duration: Duration,
+    seed: u64,
+) -> SoakOutcome {
+    let t0 = Instant::now();
+    let mut tenant_threads = Vec::with_capacity(loads.len());
+    for (ti, load) in loads.iter().enumerate() {
+        let mut rng = Rng::seeded(seed).fork(ti as u64 + 1);
+        let arrivals = poisson_arrivals(&mut rng, load.rate_hz, duration);
+        let router = router.clone();
+        let load = load.clone();
+        let start = t0;
+        tenant_threads.push(std::thread::spawn(move || {
+            let mut inflight = Vec::with_capacity(arrivals.len());
+            for (k, at) in arrivals.iter().enumerate() {
+                let due = start + Duration::from_secs_f64(*at);
+                if let Some(wait) = due.checked_duration_since(Instant::now()) {
+                    std::thread::sleep(wait);
+                }
+                let router = router.clone();
+                let req = GenRequest {
+                    tenant: load.tenant.clone(),
+                    seed: seed ^ ((ti as u64) << 32) ^ k as u64,
+                    ..load.template.clone()
+                };
+                inflight.push(std::thread::spawn(move || {
+                    let t = Instant::now();
+                    match router.generate(&req, |_, _, _| {}) {
+                        Ok(_) => ReqOutcome::Served(t.elapsed().as_secs_f64()),
+                        Err(e) if e.code() == "overloaded" => ReqOutcome::Shed,
+                        Err(_) => ReqOutcome::Failed,
+                    }
+                }));
+            }
+            inflight
+                .into_iter()
+                .map(|h| h.join().expect("soak request thread panicked"))
+                .collect::<Vec<_>>()
+        }));
+    }
+
+    let per_tenant: Vec<Vec<ReqOutcome>> = tenant_threads
+        .into_iter()
+        .map(|h| h.join().expect("soak tenant thread panicked"))
+        .collect();
+    let wall_s = t0.elapsed().as_secs_f64();
+    let stats = router.queue_stats();
+
+    let tenants = loads
+        .iter()
+        .zip(per_tenant)
+        .map(|(load, outcomes)| {
+            let mut lats = Vec::new();
+            let (mut shed, mut failed) = (0usize, 0usize);
+            for o in &outcomes {
+                match o {
+                    ReqOutcome::Served(s) => lats.push(*s),
+                    ReqOutcome::Shed => shed += 1,
+                    ReqOutcome::Failed => failed += 1,
+                }
+            }
+            let row = tenant_stats_row(&stats, &load.tenant);
+            TenantOutcome {
+                tenant: load.tenant.clone(),
+                weight: row
+                    .and_then(|r| r.get("weight"))
+                    .and_then(|v| v.as_f64())
+                    .unwrap_or(1.0),
+                offered: outcomes.len(),
+                served: lats.len(),
+                shed,
+                failed,
+                latency: Summary::of(&lats),
+                served_core_secs: row
+                    .and_then(|r| r.get("served_core_secs"))
+                    .and_then(|v| v.as_f64())
+                    .unwrap_or(0.0),
+            }
+        })
+        .collect();
+
+    SoakOutcome { tenants, wall_s, stats }
+}
+
+/// The `queue_stats` "tenants" row for `name` (`""` is published as
+/// `"default"`), if the registry exported one.
+fn tenant_stats_row<'a>(stats: &'a Json, name: &str) -> Option<&'a Json> {
+    let name = if name.is_empty() { "default" } else { name };
+    let rows = stats.get("tenants").and_then(|t| t.as_arr())?;
+    rows.iter().find(|r| r.get("tenant").and_then(|v| v.as_str()) == Some(name))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn arrivals_are_deterministic_in_seed() {
+        let dur = Duration::from_secs(10);
+        let a = poisson_arrivals(&mut Rng::seeded(7).fork(1), 50.0, dur);
+        let b = poisson_arrivals(&mut Rng::seeded(7).fork(1), 50.0, dur);
+        assert_eq!(a, b);
+        let c = poisson_arrivals(&mut Rng::seeded(8).fork(1), 50.0, dur);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn arrivals_are_sorted_and_bounded() {
+        let dur = Duration::from_secs(5);
+        let a = poisson_arrivals(&mut Rng::seeded(3).fork(1), 20.0, dur);
+        assert!(a.windows(2).all(|w| w[0] < w[1]));
+        assert!(a.iter().all(|&t| (0.0..5.0).contains(&t)));
+    }
+
+    #[test]
+    fn arrival_count_matches_offered_rate() {
+        // 1 kHz over 20s → 20k expected, σ ≈ 141; ±10% is a > 14σ margin.
+        let n = poisson_arrivals(
+            &mut Rng::seeded(11).fork(1),
+            1_000.0,
+            Duration::from_secs(20),
+        )
+        .len() as f64;
+        assert!((18_000.0..=22_000.0).contains(&n), "count {n} off the offered rate");
+    }
+
+    #[test]
+    fn fairness_is_one_for_weight_proportional_shares() {
+        let mk = |tenant: &str, weight: f64, core_secs: f64| TenantOutcome {
+            tenant: tenant.into(),
+            weight,
+            offered: 10,
+            served: 10,
+            shed: 0,
+            failed: 0,
+            latency: Summary::of(&[0.01]),
+            served_core_secs: core_secs,
+        };
+        let out = SoakOutcome {
+            tenants: vec![mk("a", 3.0, 30.0), mk("b", 1.0, 10.0)],
+            wall_s: 1.0,
+            stats: Json::obj(vec![]),
+        };
+        assert!((out.served_share("a") - 0.75).abs() < 1e-12);
+        assert!((out.fairness_max_min() - 1.0).abs() < 1e-9);
+        // Skew tenant b to 2× its entitlement → ratio 2.
+        let out2 = SoakOutcome {
+            tenants: vec![mk("a", 3.0, 30.0), mk("b", 1.0, 20.0)],
+            wall_s: 1.0,
+            stats: Json::obj(vec![]),
+        };
+        assert!(out2.fairness_max_min() > 1.49);
+    }
+}

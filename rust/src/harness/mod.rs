@@ -2,11 +2,13 @@
 //! evaluation (see DESIGN.md §5 for the experiment index).
 
 mod ablation;
+mod loadgen;
 mod runner;
 mod tables;
 mod workload;
 
 pub use ablation::*;
+pub use loadgen::*;
 pub use runner::*;
 pub use tables::*;
 pub use workload::*;

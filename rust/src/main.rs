@@ -222,6 +222,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         ("adaptive-batching", "adaptive_batching"),
         ("model-budget", "model_budget"),
         ("remote-bank", "remote_bank"),
+        ("tenant-quota", "tenant_quota"),
     ] {
         if let Some(v) = args.flag(flag) {
             cfg.set(key, v).map_err(|e| anyhow!("--{flag}: {e}"))?;
@@ -260,6 +261,15 @@ fn cmd_serve(args: &Args) -> Result<()> {
         let scope =
             s.model.as_deref().map(|m| format!(" → {m}")).unwrap_or_else(|| " → all models".into());
         println!("remote bank: {}{scope} (health/RTT in queue_stats \"banks\")", s.addr);
+    }
+    for q in &cfg.tenant_quotas {
+        println!(
+            "tenant: {} weight {} quota {} slo {} (per-tenant counters in queue_stats \"tenants\")",
+            q.name,
+            q.weight,
+            if q.core_quota == 0 { "unlimited".to_string() } else { q.core_quota.to_string() },
+            q.slo.as_wire()
+        );
     }
     println!("protocol: JSON lines; ops: ping | stats | queue_stats | generate");
     // Serve until killed.

@@ -169,6 +169,77 @@ impl RemoteBankStats {
     }
 }
 
+/// Lock-free log-bucketed latency histogram: power-of-two microsecond
+/// buckets, so `record` is one atomic increment and quantile estimates are
+/// accurate to within a factor of 2 across nine decades (1µs … ~35min).
+/// Used for the per-tenant achieved-latency distributions exported in
+/// `queue_stats` — a tenant's p99 must be observable without storing every
+/// sample server-side.
+pub struct LatencyHistogram {
+    /// `buckets[i]` counts samples in `[2^i, 2^(i+1))` microseconds.
+    buckets: [AtomicU64; 32],
+    count: AtomicU64,
+    sum_us: AtomicU64,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        LatencyHistogram {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            count: AtomicU64::new(0),
+            sum_us: AtomicU64::new(0),
+        }
+    }
+}
+
+impl LatencyHistogram {
+    /// A fresh, empty histogram.
+    pub fn new() -> LatencyHistogram {
+        LatencyHistogram::default()
+    }
+
+    /// Record one latency sample of `us` microseconds.
+    pub fn record_us(&self, us: u64) {
+        let idx = (63 - us.max(1).leading_zeros() as u64).min(31) as usize;
+        self.buckets[idx].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add(us, Ordering::Relaxed);
+    }
+
+    /// Samples recorded.
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Mean latency in milliseconds (0 when empty).
+    pub fn mean_ms(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            return 0.0;
+        }
+        self.sum_us.load(Ordering::Relaxed) as f64 / n as f64 / 1e3
+    }
+
+    /// Quantile estimate in milliseconds: the upper bound of the bucket
+    /// containing the `q`-quantile sample (conservative — never understates
+    /// by more than the 2× bucket width). 0 when empty.
+    pub fn quantile_ms(&self, q: f64) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            return 0.0;
+        }
+        let target = ((q.clamp(0.0, 1.0) * n as f64).ceil() as u64).max(1);
+        let mut seen = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            seen += b.load(Ordering::Relaxed);
+            if seen >= target {
+                return (1u64 << (i + 1)) as f64 / 1e3;
+            }
+        }
+        (1u64 << 32) as f64 / 1e3
+    }
+}
+
 /// Shared counters/gauges for the serving path. All methods are lock-free;
 /// gauges are best-effort (exact under the dispatcher's own serialization).
 pub struct ServingMetrics {
@@ -487,6 +558,31 @@ mod tests {
         assert_eq!(r.wave_failures.load(Ordering::Relaxed), 1);
         assert_eq!(r.reconnects.load(Ordering::Relaxed), 1);
         assert_eq!(r.failovers.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn latency_histogram_quantiles_bracket_samples() {
+        let h = LatencyHistogram::new();
+        assert_eq!(h.quantile_ms(0.99), 0.0, "empty histogram reports 0");
+        for _ in 0..99 {
+            h.record_us(1_000); // ~1ms
+        }
+        h.record_us(900_000); // one ~900ms outlier
+        assert_eq!(h.count(), 100);
+        let p50 = h.quantile_ms(0.50);
+        assert!((1.0..=2.1).contains(&p50), "p50 ≈ 1–2ms, got {p50}");
+        let p999 = h.quantile_ms(0.999);
+        assert!(p999 >= 900.0, "p999 must reach the outlier bucket, got {p999}");
+        assert!(h.mean_ms() > 0.0);
+    }
+
+    #[test]
+    fn latency_histogram_extremes_do_not_panic() {
+        let h = LatencyHistogram::new();
+        h.record_us(0);
+        h.record_us(u64::MAX);
+        assert_eq!(h.count(), 2);
+        assert!(h.quantile_ms(1.0) > 0.0);
     }
 
     #[test]

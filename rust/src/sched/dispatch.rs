@@ -19,7 +19,8 @@
 use super::adaptive::{AdaptiveController, AdaptiveOpts};
 use super::budget::{CoreBudget, Notify};
 use super::lease::CoreLease;
-use super::queue::{AdmissionQueue, Reject, Ticket};
+use super::queue::{Reject, Ticket};
+use super::tenant::{FairQueue, TenantQuota, TenantRegistry, TenantState};
 use crate::config::{preset, EngineBudget, ModelPreset, RemoteBankSpec};
 use crate::engine::factory_for;
 use crate::metrics::{BatchStats, RemoteBankStats, ServingMetrics};
@@ -89,10 +90,17 @@ pub struct DispatchOpts {
     /// across healthy members and requeue failed waves onto survivors;
     /// dead hosts are redialled with backoff. An explicit `engines = 0`
     /// budget override opts the model out of remote attachment entirely.
-    /// Caveat: under remote-only placement with *every* host dead past the
-    /// all-dead timeout, in-flight jobs fail by worker panic — keep a
-    /// local member unless the model truly cannot run locally.
+    /// Under remote-only placement with *every* host dead or poisoned, the
+    /// job fails with a structured `bank_unavailable` error through the
+    /// router — still, keep a local member unless the model truly cannot
+    /// run locally.
     pub remote_banks: Vec<RemoteBankSpec>,
+    /// Per-tenant weights, core quotas, and SLO classes
+    /// (`--tenant-quota t=W:C[:slo]`). Empty = multi-tenant fairness still
+    /// applies per lane (equal weights), but quota enforcement and load
+    /// shedding stay off — the single-tenant path behaves exactly as
+    /// before.
+    pub tenant_quotas: Vec<TenantQuota>,
 }
 
 impl Default for DispatchOpts {
@@ -109,6 +117,7 @@ impl Default for DispatchOpts {
             adaptive_opts: AdaptiveOpts::default(),
             model_budgets: HashMap::new(),
             remote_banks: Vec::new(),
+            tenant_quotas: Vec::new(),
         }
     }
 }
@@ -152,6 +161,9 @@ fn budget_opts(b: &EngineBudget) -> BatchOpts {
 /// An admission request.
 #[derive(Clone, Debug)]
 pub struct JobSpec {
+    /// Tenant the request belongs to (`""` = the default tenant). Selects
+    /// the weighted-fair lane and the quota/SLO applied to the request.
+    pub tenant: String,
     /// Preset name of the model to run.
     pub model: String,
     /// Cores wanted.
@@ -188,7 +200,8 @@ impl ModelSlot {
 
 struct Shared {
     budget: Arc<CoreBudget>,
-    queue: AdmissionQueue<JobGrant>,
+    queue: FairQueue<JobGrant>,
+    tenants: Arc<TenantRegistry>,
     models: Mutex<HashMap<String, Arc<ModelSlot>>>,
     metrics: Arc<ServingMetrics>,
     notify: Arc<Notify>,
@@ -266,9 +279,11 @@ impl Dispatcher {
         budget.set_notify(notify.clone());
         let controller =
             Mutex::new(AdaptiveController::new(opts.adaptive_opts.clone(), metrics.clone()));
+        let tenants = TenantRegistry::new(&opts.tenant_quotas);
         let shared = Arc::new(Shared {
             budget,
-            queue: AdmissionQueue::new(opts.queue_cap, metrics.clone()),
+            queue: FairQueue::new(opts.queue_cap, tenants.clone(), metrics.clone()),
+            tenants,
             models: Mutex::new(HashMap::new()),
             metrics,
             notify,
@@ -379,12 +394,21 @@ impl Dispatcher {
         if let Json::Obj(m) = &mut j {
             m.insert("banks".into(), Json::Arr(banks));
             m.insert("remote_failovers".into(), Json::num(failovers as f64));
+            m.insert("tenants".into(), self.shared.tenants.snapshot());
         }
         j
     }
 
-    /// Admit a job: enqueue, then block until the scheduler grants cores or
-    /// rejects the ticket (queue full, deadline, shutdown, engine failure).
+    /// The tenant table: per-tenant weights, quotas, SLO classes, and live
+    /// counters (also exported as `queue_stats.tenants`).
+    pub fn tenant_registry(&self) -> Arc<TenantRegistry> {
+        self.shared.tenants.clone()
+    }
+
+    /// Admit a job: enqueue into the tenant's fair lane, then block until
+    /// the scheduler grants cores or rejects the ticket (shed by the
+    /// overload controller, queue full, deadline, shutdown, engine
+    /// failure).
     pub fn submit(&self, spec: JobSpec) -> Result<JobGrant, Reject> {
         let shared = &self.shared;
         if shared.stop.load(Ordering::Relaxed) {
@@ -395,10 +419,21 @@ impl Dispatcher {
         model_slot(shared, &spec.model).map_err(|e| Reject::Failed(format!("{e:#}")))?;
         let want = spec.cores.max(1).min(shared.budget.total());
         let min = if spec.min_cores == 0 { want } else { spec.min_cores.clamp(1, want) };
+        let tstate = shared.tenants.resolve(&spec.tenant);
+        // Overload controller: shed at the door (tenant backlog past its
+        // quota bound, or global pressure past the SLO-class watermark)
+        // with a structured `overloaded` code and retry-after hint. Only
+        // active when tenant quotas are explicitly configured.
+        if let Some(retry_after_ms) = shared.queue.shed_check(&tstate, want) {
+            tstate.on_shed();
+            shared.metrics.rejected_overloaded.fetch_add(1, Ordering::Relaxed);
+            return Err(Reject::Overloaded { retry_after_ms });
+        }
         let (tx, rx) = channel();
         let now = Instant::now();
         let ticket = Ticket {
             id: shared.next_id.fetch_add(1, Ordering::Relaxed),
+            tenant: spec.tenant.clone(),
             model: spec.model.clone(),
             want_cores: want,
             min_cores: min,
@@ -410,6 +445,7 @@ impl Dispatcher {
         match shared.queue.push(ticket) {
             Ok(()) => {}
             Err(super::queue::PushError::Full(_)) => {
+                tstate.on_shed();
                 shared.metrics.rejected_overloaded.fetch_add(1, Ordering::Relaxed);
                 return Err(Reject::QueueFull { cap: shared.queue.cap() });
             }
@@ -628,7 +664,16 @@ fn pass(shared: &Arc<Shared>) {
         let Some(ticket) = shared.queue.pop_admissible(available) else {
             break;
         };
-        let Some(lease) = shared.budget.try_lease(ticket.min_cores, ticket.want_cores) else {
+        // Under configured quotas, clamp the grant's upper bound to the
+        // tenant's remaining quota room (the fair queue already guaranteed
+        // room for at least `min_cores`).
+        let want = if shared.tenants.enabled() {
+            let room = shared.tenants.resolve(&ticket.tenant).quota_room();
+            ticket.want_cores.min(room.max(ticket.min_cores))
+        } else {
+            ticket.want_cores
+        };
+        let Some(lease) = shared.budget.try_lease(ticket.min_cores, want) else {
             // Transient race with an out-of-band lease (CoreBudget is a
             // public API): the ticket keeps waiting instead of failing.
             if let Some(t) = shared.queue.requeue(ticket) {
@@ -777,6 +822,8 @@ fn assign_workers(
     }
     let view = slot.pool.lock().unwrap().view(&ids);
     let retired = vec![false; granted];
+    let tenant = shared.tenants.resolve(&ticket.tenant);
+    tenant.on_grant(granted);
     Ok(JobGrant {
         model: ticket.model.clone(),
         granted,
@@ -786,8 +833,10 @@ fn assign_workers(
         retired,
         slot,
         metrics: shared.metrics.clone(),
+        tenant,
         elastic: shared.elastic,
         t_grant: Instant::now(),
+        t_enqueued: ticket.enqueued,
         ended: false,
     })
 }
@@ -806,8 +855,15 @@ pub struct JobGrant {
     retired: Vec<bool>,
     slot: Arc<ModelSlot>,
     metrics: Arc<ServingMetrics>,
+    /// Per-tenant accounting: quota cores, served core-time, achieved
+    /// latency. Always present (the default tenant is a registry entry).
+    tenant: Arc<TenantState>,
     elastic: bool,
     t_grant: Instant,
+    /// When the ticket entered the queue — the achieved-latency histogram
+    /// measures enqueue → job end, so queueing delay counts against the
+    /// tenant's SLO.
+    t_enqueued: Instant,
     ended: bool,
 }
 
@@ -842,7 +898,9 @@ impl JobGrant {
         // core's retirement coincides with job completion and re-leases
         // nothing, so it must not inflate the mid-job reclamation metric.
         let mid_job = self.retired.iter().filter(|r| **r).count() < self.granted;
-        self.metrics.on_release(1, self.t_grant.elapsed().as_micros() as u64, mid_job);
+        let busy_us = self.t_grant.elapsed().as_micros() as u64;
+        self.metrics.on_release(1, busy_us, mid_job);
+        self.tenant.on_release(1, busy_us);
     }
 
     fn end(&mut self) {
@@ -863,6 +921,8 @@ impl JobGrant {
         }
         self.slot.touch();
         self.metrics.on_release(left, busy_us, false);
+        self.tenant.on_release(left, busy_us);
+        self.tenant.on_served(self.t_enqueued.elapsed().as_micros() as u64);
         self.lease = None; // drop → remaining cores return to the budget
         self.metrics.on_job_end();
     }
@@ -883,7 +943,14 @@ mod tests {
     use crate::util::rng::Rng;
 
     fn spec(model: &str, cores: usize) -> JobSpec {
-        JobSpec { model: model.into(), cores, min_cores: 0, priority: 0, deadline_ms: None }
+        JobSpec {
+            tenant: String::new(),
+            model: model.into(),
+            cores,
+            min_cores: 0,
+            priority: 0,
+            deadline_ms: None,
+        }
     }
 
     fn dispatcher(total: usize, cap: usize) -> Dispatcher {
@@ -1196,6 +1263,63 @@ mod tests {
         );
         assert_eq!(d.model_bank_engines("gauss-mix"), Some(2));
         assert_eq!(d.metrics().adaptive_models.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn hot_tenant_is_shed_with_retry_hint_and_counted() {
+        let d = Dispatcher::new(
+            "artifacts",
+            DispatchOpts {
+                total_cores: 2,
+                queue_cap: 16,
+                tenant_quotas: TenantQuota::parse_list("hot=1:1,cool=1:2").unwrap(),
+                ..DispatchOpts::default()
+            },
+        );
+        let tspec = |tenant: &str| JobSpec {
+            tenant: tenant.into(),
+            deadline_ms: Some(5_000),
+            ..spec("gauss-mix", 1)
+        };
+        let d = Arc::new(d);
+        // Holds hot's entire quota (1 core), so further hot jobs queue.
+        let grant = d.submit(tspec("hot")).unwrap();
+        assert_eq!(grant.cores(), 1);
+        let mut waiters = Vec::new();
+        for _ in 0..2 {
+            let d2 = d.clone();
+            waiters.push(std::thread::spawn(move || d2.submit(tspec("hot"))));
+            // Backlog of 2 = 2× quota: at the bound, still admitted.
+        }
+        while d.queue_depth() < 2 {
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        // Past the bound: shed with code `overloaded` and a retry hint.
+        let err = d.submit(tspec("hot")).unwrap_err();
+        assert_eq!(err.code(), "overloaded");
+        assert!(matches!(err, Reject::Overloaded { .. }));
+        assert!(err.retry_after_ms().unwrap() >= 50);
+        // The cool tenant is untouched: quota room and queue both open.
+        let cool = d.submit(tspec("cool")).expect("cool tenant admitted during hot flood");
+        drop(cool);
+        drop(grant);
+        for w in waiters {
+            let mut g = w.join().unwrap().expect("queued hot job granted after release");
+            assert_eq!(g.cores(), 1, "grant clamped to the quota");
+            run_job(&mut g, 10, 7);
+        }
+        let snap = d.snapshot();
+        let tenants = snap.get("tenants").unwrap();
+        let Json::Arr(items) = tenants else { panic!("tenants must be an array") };
+        let hot = items
+            .iter()
+            .find(|t| t.get("tenant").unwrap().as_str() == Some("hot"))
+            .expect("hot tenant exported");
+        assert_eq!(hot.get("shed").unwrap().as_usize().unwrap(), 1);
+        assert_eq!(hot.get("admitted").unwrap().as_usize().unwrap(), 3);
+        assert!(hot.get("served").unwrap().as_usize().unwrap() >= 2);
+        assert!(hot.get("latency_p99_ms").unwrap().as_f64().unwrap() > 0.0);
+        assert_eq!(hot.get("slo").unwrap().as_str(), Some("throughput"));
     }
 
     #[test]

@@ -19,6 +19,11 @@
 //! - [`queue`] — [`queue::AdmissionQueue`], bounded and priority-aware,
 //!   with per-request deadlines; a full queue rejects with a structured
 //!   `overloaded` error instead of blocking;
+//! - [`tenant`] — [`tenant::TenantRegistry`] and [`tenant::FairQueue`],
+//!   the multi-tenant admission layer: per-tenant weighted-fair lanes
+//!   served by deficit round-robin, core quotas, SLO classes, and the
+//!   overload controller that sheds with a structured `overloaded` code
+//!   and retry-after hint;
 //! - [`dispatch`] — [`dispatch::Dispatcher`], the scheduler thread that
 //!   grants tickets against the budget, assigns workers from elastically
 //!   grown per-model pools (shaped by per-model
@@ -35,9 +40,11 @@ pub mod budget;
 pub mod dispatch;
 pub mod lease;
 pub mod queue;
+pub mod tenant;
 
 pub use adaptive::{AdaptiveController, AdaptiveOpts, ModelTuner, Retune, WindowSample};
 pub use budget::{CoreBudget, Notify};
 pub use dispatch::{DispatchOpts, Dispatcher, JobGrant, JobSpec};
 pub use lease::CoreLease;
 pub use queue::{AdmissionQueue, PushError, Reject, Ticket};
+pub use tenant::{FairQueue, SloClass, TenantQuota, TenantRegistry, TenantState};

@@ -22,6 +22,14 @@ pub enum Reject {
         /// The queue capacity that was hit.
         cap: usize,
     },
+    /// The overload controller shed the request before it was queued
+    /// (tenant over its backlog bound, or global queue pressure past the
+    /// SLO-class watermark). Same wire code as [`Reject::QueueFull`]
+    /// (`overloaded`) plus a retry-after hint.
+    Overloaded {
+        /// Suggested client backoff before retrying, in milliseconds.
+        retry_after_ms: u64,
+    },
     /// The ticket's deadline passed while it was queued.
     DeadlineExceeded,
     /// The dispatcher is shutting down.
@@ -34,10 +42,18 @@ impl Reject {
     /// Stable wire-protocol error code.
     pub fn code(&self) -> &'static str {
         match self {
-            Reject::QueueFull { .. } => "overloaded",
+            Reject::QueueFull { .. } | Reject::Overloaded { .. } => "overloaded",
             Reject::DeadlineExceeded => "deadline",
             Reject::Shutdown => "shutdown",
             Reject::Failed(_) => "internal",
+        }
+    }
+
+    /// Client backoff hint attached to shed rejections (None otherwise).
+    pub fn retry_after_ms(&self) -> Option<u64> {
+        match self {
+            Reject::Overloaded { retry_after_ms } => Some(*retry_after_ms),
+            _ => None,
         }
     }
 }
@@ -47,6 +63,9 @@ impl std::fmt::Display for Reject {
         match self {
             Reject::QueueFull { cap } => {
                 write!(f, "admission queue full ({cap} waiting); retry with backoff")
+            }
+            Reject::Overloaded { retry_after_ms } => {
+                write!(f, "load shed by the overload controller; retry after {retry_after_ms}ms")
             }
             Reject::DeadlineExceeded => write!(f, "deadline exceeded while queued"),
             Reject::Shutdown => write!(f, "server shutting down"),
@@ -60,6 +79,10 @@ impl std::fmt::Display for Reject {
 pub struct Ticket<G> {
     /// Arrival id (FIFO order within a priority).
     pub id: u64,
+    /// Tenant the request belongs to (`""` = the default tenant). Drives
+    /// the weighted-fair lane choice in [`super::tenant::FairQueue`];
+    /// ignored by the plain [`AdmissionQueue`] ordering.
+    pub tenant: String,
     /// Preset name of the model the job wants.
     pub model: String,
     /// Cores the request wants.
@@ -99,8 +122,10 @@ pub struct AdmissionQueue<G> {
 }
 
 /// Ordered-insert position keeping (priority desc, id asc): the single
-/// definition of queue order, shared by `push` and `requeue`.
-fn insert_pos<G>(items: &[Ticket<G>], ticket: &Ticket<G>) -> usize {
+/// definition of queue order, shared by `push` and `requeue` — and by the
+/// per-tenant lanes of [`super::tenant::FairQueue`], so within-tenant
+/// ordering is *by construction* the same as this queue's.
+pub(crate) fn insert_pos<G>(items: &[Ticket<G>], ticket: &Ticket<G>) -> usize {
     items
         .iter()
         .position(|t| {
@@ -204,8 +229,20 @@ impl<G> AdmissionQueue<G> {
     /// (`min_cores ≤ available`). Strict head-of-line within the order: a
     /// non-fitting higher-priority ticket is *not* bypassed, so large jobs
     /// cannot be starved by a stream of small ones.
+    ///
+    /// Expiry is re-checked *here*, not only in the dispatcher's
+    /// [`Self::take_expired`] sweep: a ticket whose deadline passed between
+    /// the sweep and this pop is rejected with code `deadline` instead of
+    /// being granted (the sweep/pop race fix).
     pub fn pop_admissible(&self, available: usize) -> Option<Ticket<G>> {
+        let now = Instant::now();
         let mut q = self.inner.lock().unwrap();
+        while q.items.first().is_some_and(|h| h.deadline.is_some_and(|d| d <= now)) {
+            let t = q.items.remove(0);
+            self.metrics.set_queue_depth(q.items.len());
+            self.metrics.rejected_deadline.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            let _ = t.outcome.send(Err(Reject::DeadlineExceeded));
+        }
         let fits = q.items.first().map(|h| h.min_cores <= available).unwrap_or(false);
         if !fits {
             return None;
@@ -237,6 +274,7 @@ mod tests {
         (
             Ticket {
                 id,
+                tenant: String::new(),
                 model: "gauss-mix".into(),
                 want_cores: 4,
                 min_cores: min,
@@ -315,9 +353,31 @@ mod tests {
     #[test]
     fn reject_codes_are_stable() {
         assert_eq!(Reject::QueueFull { cap: 4 }.code(), "overloaded");
+        assert_eq!(Reject::Overloaded { retry_after_ms: 50 }.code(), "overloaded");
         assert_eq!(Reject::DeadlineExceeded.code(), "deadline");
         assert_eq!(Reject::Shutdown.code(), "shutdown");
         assert_eq!(Reject::Failed("x".into()).code(), "internal");
+        assert_eq!(Reject::Overloaded { retry_after_ms: 50 }.retry_after_ms(), Some(50));
+        assert_eq!(Reject::QueueFull { cap: 4 }.retry_after_ms(), None);
+    }
+
+    #[test]
+    fn expired_head_is_rejected_at_pop_not_granted() {
+        // A ticket whose deadline passes *between* take_expired sweeps must
+        // never be granted: pop_admissible re-checks expiry itself.
+        let q = queue(8);
+        let (mut t1, rx1) = ticket(1, 1, 1);
+        t1.deadline = Some(Instant::now() - Duration::from_millis(1));
+        let (t2, _rx2) = ticket(2, 0, 1);
+        q.push(t1).unwrap();
+        q.push(t2).unwrap();
+        let popped = q.pop_admissible(8).expect("live ticket behind the expired head");
+        assert_eq!(popped.id, 2, "expired head must be skipped, not granted");
+        match rx1.try_recv() {
+            Ok(Err(Reject::DeadlineExceeded)) => {}
+            other => panic!("expired head must see a deadline reject, got {other:?}"),
+        }
+        assert_eq!(q.depth(), 0);
     }
 
     #[test]

@@ -1,0 +1,840 @@
+//! Multi-tenant fair admission: tenant registry, deficit-round-robin
+//! weighted fair queuing, SLO classes, and graceful load shedding.
+//!
+//! CHORDS spends many cores per job, so a shared server is acutely
+//! vulnerable to one hot tenant monopolizing the core budget — the plain
+//! [`super::queue::AdmissionQueue`] orders by priority and deadline but has
+//! no notion of *who* is asking. This module adds that notion:
+//!
+//! - [`TenantRegistry`] — per-tenant weight, core quota, and SLO class
+//!   ([`SloClass::LatencyTarget`] vs [`SloClass::Throughput`]), configured
+//!   via `--tenant-quota t=W:C[:slo]`;
+//! - [`FairQueue`] — one (priority desc, id asc) lane per tenant, served
+//!   by deficit round-robin: each contending lane accrues credit in
+//!   proportion to its weight and pays its head ticket's core demand to
+//!   pop, so served core-share tracks configured weights while priority /
+//!   FIFO order is preserved *within* a tenant. With a single tenant the
+//!   lane degenerates to exactly today's queue — same order, same timing
+//!   (pinned by `rust/tests/tenant_fairness.rs`);
+//! - an overload controller ([`FairQueue::shed_check`]) that rejects with
+//!   a structured `overloaded` code and a retry-after hint when a tenant's
+//!   queued backlog exceeds its quota bound or global queue pressure
+//!   crosses a watermark — shedding throughput-class work at a lower
+//!   watermark than latency-class work, so latency SLOs degrade last.
+//!
+//! Mid-job core retirement (the CHORDS early-exit reclamation signal) is
+//! what makes fairness *responsive* here: a retired core rejoins the
+//! budget immediately and the next [`FairQueue::pop_admissible`] can hand
+//! it to whichever tenant the deficit counters favor.
+
+use super::queue::{insert_pos, PushError, Reject, Ticket};
+use crate::metrics::{LatencyHistogram, ServingMetrics};
+use crate::util::json::Json;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+/// Deficit credit (in cores) granted per contending lane per refill round,
+/// scaled by the lane's weight.
+const QUANTUM: f64 = 1.0;
+
+/// A tenant may queue up to this multiple of its core quota in outstanding
+/// core demand before the overload controller sheds further requests.
+pub const BACKLOG_FACTOR: f64 = 2.0;
+
+/// Queue-pressure watermark (fraction of capacity) past which
+/// throughput-class work is shed.
+pub const SHED_WATERMARK_THROUGHPUT: f64 = 0.75;
+
+/// Queue-pressure watermark past which even latency-class work is shed.
+pub const SHED_WATERMARK_LATENCY: f64 = 0.90;
+
+/// Scheduler-pass heuristic used to size retry-after hints (the dispatcher
+/// drains the queue at least once per pass period).
+const RETRY_HINT_PER_ITEM_MS: u64 = 25;
+
+/// What a tenant is promised: a latency target or best-effort throughput.
+/// Under overload, throughput-class work is shed first.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum SloClass {
+    /// The tenant cares about tail latency; keep p99 near this target and
+    /// shed its work only at the higher pressure watermark.
+    LatencyTarget {
+        /// Target p99 latency in milliseconds (advisory; exported next to
+        /// the achieved histogram so operators can compare).
+        p99_ms: u64,
+    },
+    /// Best-effort batch work: first to be shed under pressure.
+    Throughput,
+}
+
+impl SloClass {
+    /// Stable wire string (`"throughput"` or `"latency:<p99_ms>"`).
+    pub fn as_wire(&self) -> String {
+        match self {
+            SloClass::LatencyTarget { p99_ms } => format!("latency:{p99_ms}"),
+            SloClass::Throughput => "throughput".to_string(),
+        }
+    }
+}
+
+/// One tenant's configured share: fair-queuing weight, core quota, and SLO
+/// class. Parsed from `--tenant-quota t=W:C[:slo]`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TenantQuota {
+    /// Tenant name as carried by requests (`tenant` field).
+    pub name: String,
+    /// Fair-queuing weight (> 0): served core-share tracks weights among
+    /// backlogged tenants.
+    pub weight: f64,
+    /// Most cores the tenant may hold concurrently (0 = unlimited).
+    pub core_quota: usize,
+    /// What the tenant is promised; drives shed ordering under overload.
+    pub slo: SloClass,
+}
+
+impl TenantQuota {
+    /// Parse one `name=W:C[:slo]` spec, where `slo` is `latency:<p99_ms>`
+    /// or `throughput` (default). Examples: `team-a=3:8`,
+    /// `interactive=2:4:latency:500`, `batch=1:12:throughput`.
+    pub fn parse(spec: &str) -> Result<TenantQuota, String> {
+        let (name, rest) = spec
+            .split_once('=')
+            .ok_or_else(|| format!("tenant quota '{spec}' must look like name=W:C[:slo]"))?;
+        let name = name.trim();
+        if name.is_empty() {
+            return Err(format!("tenant quota '{spec}' has an empty tenant name"));
+        }
+        let parts: Vec<&str> = rest.split(':').collect();
+        if parts.len() < 2 {
+            return Err(format!("tenant quota '{spec}' must carry weight and cores as W:C"));
+        }
+        let weight: f64 = parts[0]
+            .trim()
+            .parse()
+            .map_err(|_| format!("tenant quota '{spec}': bad weight '{}'", parts[0]))?;
+        if !(weight > 0.0) || !weight.is_finite() {
+            return Err(format!("tenant quota '{spec}': weight must be a positive number"));
+        }
+        let core_quota: usize = parts[1]
+            .trim()
+            .parse()
+            .map_err(|_| format!("tenant quota '{spec}': bad core quota '{}'", parts[1]))?;
+        let slo = match &parts[2..] {
+            [] => SloClass::Throughput,
+            ["throughput"] => SloClass::Throughput,
+            ["latency", ms] => SloClass::LatencyTarget {
+                p99_ms: ms
+                    .trim()
+                    .parse()
+                    .map_err(|_| format!("tenant quota '{spec}': bad latency target '{ms}'"))?,
+            },
+            _ => {
+                return Err(format!(
+                    "tenant quota '{spec}': slo must be 'throughput' or 'latency:<p99_ms>'"
+                ))
+            }
+        };
+        Ok(TenantQuota { name: name.to_string(), weight, core_quota, slo })
+    }
+
+    /// Parse a comma-separated list of specs; a later spec for the same
+    /// tenant replaces the earlier one (same discipline as
+    /// [`crate::config::ServeConfig`]'s `model_budget` key).
+    pub fn parse_list(specs: &str) -> Result<Vec<TenantQuota>, String> {
+        let mut out: Vec<TenantQuota> = Vec::new();
+        for spec in specs.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+            let q = TenantQuota::parse(spec)?;
+            out.retain(|e| e.name != q.name);
+            out.push(q);
+        }
+        Ok(out)
+    }
+}
+
+/// Live per-tenant accounting: the configured quota plus the counters and
+/// achieved-latency histogram exported through `queue_stats`.
+pub struct TenantState {
+    /// The configured (or defaulted) share.
+    pub quota: TenantQuota,
+    /// Cores currently leased to this tenant's jobs (gauge).
+    pub cores_in_use: AtomicU64,
+    /// Tickets currently queued in this tenant's lane (gauge).
+    pub depth: AtomicU64,
+    /// Outstanding queued core demand — `want_cores` summed over the lane
+    /// (gauge; the overload controller's backlog signal).
+    pub queued_cores: AtomicU64,
+    /// Tickets granted a lease.
+    pub admitted: AtomicU64,
+    /// Requests shed with code `overloaded` (controller or full queue).
+    pub shed: AtomicU64,
+    /// Jobs completed (lease fully returned).
+    pub served: AtomicU64,
+    /// Integrated served core-time (µs·cores) — the fairness numerator:
+    /// served-core-share per tenant should track weight share.
+    pub served_core_us: AtomicU64,
+    /// Achieved end-to-end latency (enqueue → job end), log-bucketed.
+    pub latency: LatencyHistogram,
+}
+
+impl TenantState {
+    fn new(quota: TenantQuota) -> Arc<TenantState> {
+        Arc::new(TenantState {
+            quota,
+            cores_in_use: AtomicU64::new(0),
+            depth: AtomicU64::new(0),
+            queued_cores: AtomicU64::new(0),
+            admitted: AtomicU64::new(0),
+            shed: AtomicU64::new(0),
+            served: AtomicU64::new(0),
+            served_core_us: AtomicU64::new(0),
+            latency: LatencyHistogram::new(),
+        })
+    }
+
+    /// Cores still grantable under the quota (`usize::MAX` when unlimited).
+    pub fn quota_room(&self) -> usize {
+        if self.quota.core_quota == 0 {
+            return usize::MAX;
+        }
+        let used = self.cores_in_use.load(Ordering::Relaxed) as usize;
+        self.quota.core_quota.saturating_sub(used)
+    }
+
+    /// Record a shed rejection.
+    pub fn on_shed(&self) {
+        self.shed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record a grant of `cores`.
+    pub fn on_grant(&self, cores: usize) {
+        self.admitted.fetch_add(1, Ordering::Relaxed);
+        self.cores_in_use.fetch_add(cores as u64, Ordering::Relaxed);
+    }
+
+    /// Record `cores` released after `busy_us` microseconds of service each.
+    pub fn on_release(&self, cores: usize, busy_us: u64) {
+        self.cores_in_use.fetch_sub(cores as u64, Ordering::Relaxed);
+        self.served_core_us.fetch_add(cores as u64 * busy_us, Ordering::Relaxed);
+    }
+
+    /// Record a completed job and its achieved enqueue→end latency.
+    pub fn on_served(&self, latency_us: u64) {
+        self.served.fetch_add(1, Ordering::Relaxed);
+        self.latency.record_us(latency_us);
+    }
+
+    /// Wire-format entry for the `queue_stats` `tenants` array.
+    pub fn snapshot(&self) -> Json {
+        let name = if self.quota.name.is_empty() { "default" } else { &self.quota.name };
+        Json::obj(vec![
+            ("tenant", Json::str(name)),
+            ("weight", Json::num(self.quota.weight)),
+            ("core_quota", Json::num(self.quota.core_quota as f64)),
+            ("slo", Json::str(&self.quota.slo.as_wire())),
+            ("depth", Json::num(self.depth.load(Ordering::Relaxed) as f64)),
+            ("queued_cores", Json::num(self.queued_cores.load(Ordering::Relaxed) as f64)),
+            ("cores_in_use", Json::num(self.cores_in_use.load(Ordering::Relaxed) as f64)),
+            ("admitted", Json::num(self.admitted.load(Ordering::Relaxed) as f64)),
+            ("shed", Json::num(self.shed.load(Ordering::Relaxed) as f64)),
+            ("served", Json::num(self.served.load(Ordering::Relaxed) as f64)),
+            (
+                "served_core_secs",
+                Json::num(self.served_core_us.load(Ordering::Relaxed) as f64 / 1e6),
+            ),
+            ("latency_mean_ms", Json::num(self.latency.mean_ms())),
+            ("latency_p50_ms", Json::num(self.latency.quantile_ms(0.50))),
+            ("latency_p99_ms", Json::num(self.latency.quantile_ms(0.99))),
+            ("latency_p999_ms", Json::num(self.latency.quantile_ms(0.999))),
+        ])
+    }
+}
+
+/// The tenant table: configured quotas plus lazily-created default entries
+/// for tenants that show up without configuration (weight 1, no quota,
+/// throughput class). Shedding and quota enforcement are active only when
+/// at least one quota was *explicitly configured* — a server started
+/// without `--tenant-quota` behaves exactly as before.
+pub struct TenantRegistry {
+    tenants: Mutex<HashMap<String, Arc<TenantState>>>,
+    configured: bool,
+}
+
+impl TenantRegistry {
+    /// Build the registry from the configured quotas (possibly empty).
+    pub fn new(quotas: &[TenantQuota]) -> Arc<TenantRegistry> {
+        let mut tenants = HashMap::new();
+        for q in quotas {
+            tenants.insert(q.name.clone(), TenantState::new(q.clone()));
+        }
+        Arc::new(TenantRegistry { tenants: Mutex::new(tenants), configured: !quotas.is_empty() })
+    }
+
+    /// Whether quotas were explicitly configured — the master switch for
+    /// quota enforcement and load shedding.
+    pub fn enabled(&self) -> bool {
+        self.configured
+    }
+
+    /// Look up (or lazily create with defaults) the tenant's state.
+    pub fn resolve(&self, name: &str) -> Arc<TenantState> {
+        let mut t = self.tenants.lock().unwrap();
+        t.entry(name.to_string())
+            .or_insert_with(|| {
+                TenantState::new(TenantQuota {
+                    name: name.to_string(),
+                    weight: 1.0,
+                    core_quota: 0,
+                    slo: SloClass::Throughput,
+                })
+            })
+            .clone()
+    }
+
+    /// The tenant's state, if it has been seen or configured.
+    pub fn get(&self, name: &str) -> Option<Arc<TenantState>> {
+        self.tenants.lock().unwrap().get(name).cloned()
+    }
+
+    /// Wire-format `tenants` array, sorted by name for stable output.
+    pub fn snapshot(&self) -> Json {
+        let mut entries: Vec<(String, Arc<TenantState>)> = self
+            .tenants
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(k, v)| (k.clone(), v.clone()))
+            .collect();
+        entries.sort_by(|a, b| a.0.cmp(&b.0));
+        Json::Arr(entries.into_iter().map(|(_, s)| s.snapshot()).collect())
+    }
+}
+
+struct Lane<G> {
+    tenant: String,
+    weight: f64,
+    items: Vec<Ticket<G>>,
+    /// DRR credit in cores; a lane pays its head's `want_cores` to pop.
+    deficit: f64,
+}
+
+struct FairState<G> {
+    lanes: Vec<Lane<G>>,
+    /// Total tickets across lanes (the bounded-capacity gauge).
+    total: usize,
+    /// Round-robin start lane for the next pop scan.
+    cursor: usize,
+    closed: bool,
+}
+
+/// The weighted-fair admission queue: per-tenant (priority desc, id asc)
+/// lanes served by deficit round-robin, with the same bounded-capacity /
+/// deadline / shutdown surface as [`super::queue::AdmissionQueue`]. The
+/// dispatcher holds one of these instead of the plain queue; with a single
+/// tenant the behavior is bit-compatible with the plain queue's ordering.
+pub struct FairQueue<G> {
+    cap: usize,
+    registry: Arc<TenantRegistry>,
+    metrics: Arc<ServingMetrics>,
+    inner: Mutex<FairState<G>>,
+}
+
+impl<G> FairQueue<G> {
+    /// A bounded fair queue over `registry`'s tenants, reporting depth
+    /// changes to `metrics`.
+    pub fn new(
+        cap: usize,
+        registry: Arc<TenantRegistry>,
+        metrics: Arc<ServingMetrics>,
+    ) -> FairQueue<G> {
+        assert!(cap >= 1, "queue capacity must be at least 1");
+        FairQueue {
+            cap,
+            registry,
+            metrics,
+            inner: Mutex::new(FairState {
+                lanes: Vec::new(),
+                total: 0,
+                cursor: 0,
+                closed: false,
+            }),
+        }
+    }
+
+    /// Capacity (backpressure bound), summed across lanes.
+    pub fn cap(&self) -> usize {
+        self.cap
+    }
+
+    /// Tickets currently queued across all lanes.
+    pub fn depth(&self) -> usize {
+        self.inner.lock().unwrap().total
+    }
+
+    /// Queued-ticket count per model (the adaptive controller's backlog
+    /// signal), summed across lanes.
+    pub fn depths_by_model(&self) -> HashMap<String, usize> {
+        let s = self.inner.lock().unwrap();
+        let mut depths = HashMap::new();
+        for lane in &s.lanes {
+            for t in &lane.items {
+                *depths.entry(t.model.clone()).or_insert(0) += 1;
+            }
+        }
+        depths
+    }
+
+    /// Outstanding queued core demand (`want_cores` summed) of a tenant's
+    /// lane — the overload controller's per-tenant backlog signal.
+    pub fn tenant_backlog_cores(&self, tenant: &str) -> usize {
+        let s = self.inner.lock().unwrap();
+        s.lanes
+            .iter()
+            .find(|l| l.tenant == tenant)
+            .map(|l| l.items.iter().map(|t| t.want_cores).sum())
+            .unwrap_or(0)
+    }
+
+    /// Overload-controller admission check, run *before* a ticket is built:
+    /// returns `Some(retry_after_ms)` when the request should be shed with
+    /// code `overloaded`. Inactive (always `None`) unless tenant quotas
+    /// were explicitly configured. Sheds when
+    ///
+    /// 1. the tenant's queued core demand would exceed
+    ///    [`BACKLOG_FACTOR`] × its core quota (a hot tenant's flood is
+    ///    bounced at the door instead of starving everyone's queue slots), or
+    /// 2. global queue pressure crossed the SLO-class watermark —
+    ///    throughput-class work sheds at [`SHED_WATERMARK_THROUGHPUT`],
+    ///    latency-class only at [`SHED_WATERMARK_LATENCY`].
+    pub fn shed_check(&self, state: &TenantState, want_cores: usize) -> Option<u64> {
+        if !self.registry.enabled() {
+            return None;
+        }
+        if state.quota.core_quota > 0 {
+            let backlog = self.tenant_backlog_cores(&state.quota.name);
+            let bound = (BACKLOG_FACTOR * state.quota.core_quota as f64).ceil() as usize;
+            if backlog + want_cores > bound {
+                let hint = (backlog as u64 * RETRY_HINT_PER_ITEM_MS
+                    / state.quota.core_quota.max(1) as u64)
+                    .clamp(50, 5_000);
+                return Some(hint);
+            }
+        }
+        let depth = self.depth();
+        let watermark = match state.quota.slo {
+            SloClass::LatencyTarget { .. } => SHED_WATERMARK_LATENCY,
+            SloClass::Throughput => SHED_WATERMARK_THROUGHPUT,
+        };
+        if (depth as f64) >= watermark * self.cap as f64 {
+            return Some(((depth as u64) * RETRY_HINT_PER_ITEM_MS).clamp(50, 5_000));
+        }
+        None
+    }
+
+    fn lane_index<'a>(s: &'a mut FairState<G>, registry: &TenantRegistry, tenant: &str) -> usize {
+        if let Some(i) = s.lanes.iter().position(|l| l.tenant == tenant) {
+            return i;
+        }
+        let weight = registry.resolve(tenant).quota.weight;
+        s.lanes.push(Lane {
+            tenant: tenant.to_string(),
+            weight,
+            items: Vec::new(),
+            deficit: 0.0,
+        });
+        s.lanes.len() - 1
+    }
+
+    fn note_queued(&self, t: &Ticket<G>) {
+        let state = self.registry.resolve(&t.tenant);
+        state.depth.fetch_add(1, Ordering::Relaxed);
+        state.queued_cores.fetch_add(t.want_cores as u64, Ordering::Relaxed);
+    }
+
+    fn note_dequeued(&self, t: &Ticket<G>) {
+        let state = self.registry.resolve(&t.tenant);
+        state.depth.fetch_sub(1, Ordering::Relaxed);
+        state.queued_cores.fetch_sub(t.want_cores as u64, Ordering::Relaxed);
+    }
+
+    /// Enqueue a ticket into its tenant's lane, keeping (priority desc,
+    /// id asc) order within the lane. Fails with the ticket when the queue
+    /// is full (global capacity) or closed.
+    pub fn push(&self, ticket: Ticket<G>) -> Result<(), PushError<G>> {
+        let mut s = self.inner.lock().unwrap();
+        if s.closed {
+            return Err(PushError::Closed(ticket));
+        }
+        if s.total >= self.cap {
+            return Err(PushError::Full(ticket));
+        }
+        self.note_queued(&ticket);
+        let li = Self::lane_index(&mut s, &self.registry, &ticket.tenant);
+        let pos = insert_pos(&s.lanes[li].items, &ticket);
+        s.lanes[li].items.insert(pos, ticket);
+        s.total += 1;
+        self.metrics.queued_total.fetch_add(1, Ordering::Relaxed);
+        self.metrics.set_queue_depth(s.total);
+        Ok(())
+    }
+
+    /// Refuse all future pushes (shutdown). Follow with [`Self::drain`].
+    pub fn close(&self) {
+        self.inner.lock().unwrap().closed = true;
+    }
+
+    /// Put a previously-popped ticket back at its lane position (transient
+    /// budget race). Ignores the capacity bound — the ticket already held a
+    /// slot. Returns the ticket when the queue has closed.
+    pub fn requeue(&self, ticket: Ticket<G>) -> Option<Ticket<G>> {
+        let mut s = self.inner.lock().unwrap();
+        if s.closed {
+            return Some(ticket);
+        }
+        self.note_queued(&ticket);
+        let li = Self::lane_index(&mut s, &self.registry, &ticket.tenant);
+        let pos = insert_pos(&s.lanes[li].items, &ticket);
+        s.lanes[li].items.insert(pos, ticket);
+        s.total += 1;
+        self.metrics.set_queue_depth(s.total);
+        None
+    }
+
+    /// Remove and return every ticket whose deadline has passed (the
+    /// dispatcher sends the `deadline` rejections).
+    pub fn take_expired(&self, now: Instant) -> Vec<Ticket<G>> {
+        let mut s = self.inner.lock().unwrap();
+        let mut expired = Vec::new();
+        for li in 0..s.lanes.len() {
+            let mut i = 0;
+            while i < s.lanes[li].items.len() {
+                if s.lanes[li].items[i].deadline.is_some_and(|d| d <= now) {
+                    expired.push(s.lanes[li].items.remove(i));
+                } else {
+                    i += 1;
+                }
+            }
+        }
+        if !expired.is_empty() {
+            s.total -= expired.len();
+            self.metrics.set_queue_depth(s.total);
+            for t in &expired {
+                self.note_dequeued(t);
+            }
+        }
+        expired
+    }
+
+    /// Pop the next ticket under deficit round-robin: scan lanes from the
+    /// cursor; a lane whose head fits `available` cores (and whose tenant
+    /// has quota room, when quotas are configured) pops once its deficit
+    /// covers the head's `want_cores`; contending lanes accrue
+    /// weight-proportional credit each refill round. Strict head-of-line
+    /// *within* a lane (a tenant's large job is never starved by its own
+    /// small ones); *across* lanes, one tenant's oversized head does not
+    /// block others. Expired heads are rejected here too, not only in the
+    /// [`Self::take_expired`] sweep, closing the sweep/pop race.
+    pub fn pop_admissible(&self, available: usize) -> Option<Ticket<G>> {
+        let now = Instant::now();
+        let mut s = self.inner.lock().unwrap();
+        loop {
+            if s.total == 0 {
+                return None;
+            }
+            let nlanes = s.lanes.len();
+            let mut contenders: Vec<usize> = Vec::new();
+            for off in 0..nlanes {
+                let i = (s.cursor + off) % nlanes;
+                // Pop-time expiry: never grant a ticket whose deadline
+                // passed since the last sweep.
+                while s.lanes[i]
+                    .items
+                    .first()
+                    .is_some_and(|h| h.deadline.is_some_and(|d| d <= now))
+                {
+                    let t = s.lanes[i].items.remove(0);
+                    s.total -= 1;
+                    self.metrics.set_queue_depth(s.total);
+                    self.metrics.rejected_deadline.fetch_add(1, Ordering::Relaxed);
+                    self.note_dequeued(&t);
+                    let _ = t.outcome.send(Err(Reject::DeadlineExceeded));
+                }
+                let Some(head) = s.lanes[i].items.first() else {
+                    // Classic DRR: an emptied lane forfeits its credit.
+                    s.lanes[i].deficit = 0.0;
+                    continue;
+                };
+                if head.min_cores > available {
+                    continue;
+                }
+                if self.registry.enabled() {
+                    let state = self.registry.resolve(&s.lanes[i].tenant);
+                    if head.min_cores > state.quota_room() {
+                        continue; // over quota: skip the lane, not the pass
+                    }
+                }
+                let cost = head.want_cores as f64;
+                if s.lanes[i].deficit + 1e-9 >= cost {
+                    let t = s.lanes[i].items.remove(0);
+                    s.lanes[i].deficit -= cost;
+                    if s.lanes[i].items.is_empty() {
+                        s.lanes[i].deficit = 0.0;
+                    }
+                    s.total -= 1;
+                    // Resume the scan at this lane so it keeps serving
+                    // while its credit lasts (DRR visit semantics).
+                    s.cursor = i;
+                    self.metrics.set_queue_depth(s.total);
+                    self.note_dequeued(&t);
+                    return Some(t);
+                }
+                contenders.push(i);
+            }
+            if contenders.is_empty() {
+                // Nothing fits the available cores (or everything is over
+                // quota): the caller's grant loop stops here.
+                return None;
+            }
+            // Refill one weight-scaled quantum per *contending* lane —
+            // skipped and empty lanes accrue nothing, so credit cannot
+            // build up into a burst while a tenant is idle or over quota.
+            for i in contenders {
+                s.lanes[i].deficit += s.lanes[i].weight * QUANTUM;
+            }
+        }
+    }
+
+    /// Drain everything (shutdown path).
+    pub fn drain(&self) -> Vec<Ticket<G>> {
+        let mut s = self.inner.lock().unwrap();
+        let mut all = Vec::new();
+        for lane in &mut s.lanes {
+            all.append(&mut lane.items);
+            lane.deficit = 0.0;
+        }
+        for t in &all {
+            self.note_dequeued(t);
+        }
+        s.total = 0;
+        self.metrics.set_queue_depth(0);
+        all
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc::channel;
+    use std::time::Duration;
+
+    type Outcome = std::sync::mpsc::Receiver<Result<u32, Reject>>;
+
+    fn ticket(id: u64, tenant: &str, priority: i32, want: usize) -> (Ticket<u32>, Outcome) {
+        let (tx, rx) = channel();
+        (
+            Ticket {
+                id,
+                tenant: tenant.into(),
+                model: "gauss-mix".into(),
+                want_cores: want,
+                min_cores: want,
+                priority,
+                enqueued: Instant::now(),
+                deadline: None,
+                outcome: tx,
+            },
+            rx,
+        )
+    }
+
+    fn fair(cap: usize, quotas: &[TenantQuota]) -> FairQueue<u32> {
+        FairQueue::new(cap, TenantRegistry::new(quotas), Arc::new(ServingMetrics::new()))
+    }
+
+    fn quota(name: &str, weight: f64, cores: usize) -> TenantQuota {
+        TenantQuota { name: name.into(), weight, core_quota: cores, slo: SloClass::Throughput }
+    }
+
+    #[test]
+    fn parse_quota_specs() {
+        let q = TenantQuota::parse("team-a=3:8").unwrap();
+        assert_eq!(q.name, "team-a");
+        assert_eq!(q.weight, 3.0);
+        assert_eq!(q.core_quota, 8);
+        assert_eq!(q.slo, SloClass::Throughput);
+        let q = TenantQuota::parse("ui=2:4:latency:500").unwrap();
+        assert_eq!(q.slo, SloClass::LatencyTarget { p99_ms: 500 });
+        assert_eq!(q.slo.as_wire(), "latency:500");
+        let q = TenantQuota::parse("batch=1.5:0:throughput").unwrap();
+        assert_eq!(q.weight, 1.5);
+        assert_eq!(q.core_quota, 0, "0 = unlimited");
+        for bad in ["x", "=1:2", "a=0:2", "a=-1:2", "a=1", "a=1:b", "a=1:2:fast", "a=1:2:latency:x"]
+        {
+            assert!(TenantQuota::parse(bad).is_err(), "'{bad}' must fail");
+        }
+        let list = TenantQuota::parse_list("a=1:2, b=2:4:latency:100, a=3:6").unwrap();
+        assert_eq!(list.len(), 2);
+        assert_eq!(list.iter().find(|q| q.name == "a").unwrap().weight, 3.0, "later spec wins");
+    }
+
+    #[test]
+    fn single_lane_preserves_priority_fifo_order() {
+        let q = fair(8, &[]);
+        q.push(ticket(1, "", 0, 1).0).unwrap();
+        q.push(ticket(2, "", 5, 1).0).unwrap();
+        q.push(ticket(3, "", 5, 1).0).unwrap();
+        q.push(ticket(4, "", -1, 1).0).unwrap();
+        let order: Vec<u64> = std::iter::from_fn(|| q.pop_admissible(8).map(|t| t.id)).collect();
+        assert_eq!(order, vec![2, 3, 1, 4], "same order as the plain queue");
+    }
+
+    #[test]
+    fn weighted_lanes_share_in_proportion() {
+        // Two backlogged tenants, weight 2:1, all jobs cost 2 cores. Over
+        // 12 pops, served share must track weights (8 vs 4).
+        let q = fair(64, &[quota("heavy", 2.0, 0), quota("light", 1.0, 0)]);
+        for i in 0..8 {
+            q.push(ticket(i, "heavy", 0, 2).0).unwrap();
+        }
+        for i in 8..16 {
+            q.push(ticket(i, "light", 0, 2).0).unwrap();
+        }
+        let mut heavy = 0;
+        let mut light = 0;
+        for _ in 0..12 {
+            let t = q.pop_admissible(16).unwrap();
+            if t.tenant == "heavy" {
+                heavy += 1;
+            } else {
+                light += 1;
+            }
+        }
+        assert_eq!(heavy + light, 12);
+        assert_eq!(heavy, 8, "weight-2 tenant drains its lane at 2× rate");
+        assert_eq!(light, 4);
+    }
+
+    #[test]
+    fn head_of_line_within_lane_but_not_across_lanes() {
+        let q = fair(8, &[]);
+        q.push(ticket(1, "a", 1, 6).0).unwrap(); // a's big head
+        q.push(ticket(2, "a", 0, 1).0).unwrap(); // a's small job waits behind it
+        q.push(ticket(3, "b", 0, 1).0).unwrap(); // b is not blocked by a's head
+        let t = q.pop_admissible(2).expect("b proceeds past a's oversized head");
+        assert_eq!(t.id, 3);
+        assert!(q.pop_admissible(2).is_none(), "a's small job must not bypass a's head");
+        assert_eq!(q.pop_admissible(6).unwrap().id, 1);
+        assert_eq!(q.pop_admissible(6).unwrap().id, 2);
+    }
+
+    #[test]
+    fn quota_gates_pops_when_configured() {
+        let reg = TenantRegistry::new(&[quota("capped", 1.0, 4)]);
+        let q: FairQueue<u32> =
+            FairQueue::new(8, reg.clone(), Arc::new(ServingMetrics::new()));
+        let state = reg.resolve("capped");
+        state.on_grant(3); // 3 of 4 quota cores in use
+        q.push(ticket(1, "capped", 0, 2).0).unwrap();
+        assert!(q.pop_admissible(8).is_none(), "2 more cores would breach the quota of 4");
+        state.on_release(2, 1_000);
+        let t = q.pop_admissible(8).expect("released cores reopen the quota");
+        assert_eq!(t.id, 1);
+    }
+
+    #[test]
+    fn expired_head_rejected_at_pop() {
+        let q = fair(8, &[]);
+        let (mut t1, rx1) = ticket(1, "", 1, 1);
+        t1.deadline = Some(Instant::now() - Duration::from_millis(1));
+        q.push(t1).unwrap();
+        q.push(ticket(2, "", 0, 1).0).unwrap();
+        assert_eq!(q.pop_admissible(8).unwrap().id, 2);
+        match rx1.try_recv() {
+            Ok(Err(Reject::DeadlineExceeded)) => {}
+            other => panic!("expired head must be rejected with deadline, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn shed_check_bounds_tenant_backlog() {
+        let q = fair(64, &[quota("hot", 1.0, 4)]);
+        let reg = q.registry.clone();
+        let hot = reg.resolve("hot");
+        assert_eq!(q.shed_check(&hot, 4), None, "empty lane admits");
+        // Backlog 8 (= 2×quota) queued: the next request must shed.
+        q.push(ticket(1, "hot", 0, 4).0).unwrap();
+        q.push(ticket(2, "hot", 0, 4).0).unwrap();
+        let hint = q.shed_check(&hot, 4).expect("backlog past 2× quota sheds");
+        assert!(hint >= 50);
+        // An unconfigured registry never sheds.
+        let q2 = fair(64, &[]);
+        let t = q2.registry.resolve("hot");
+        for i in 0..20 {
+            q2.push(ticket(i, "hot", 0, 4).0).unwrap();
+        }
+        assert_eq!(q2.shed_check(&t, 4), None);
+    }
+
+    #[test]
+    fn watermark_sheds_throughput_before_latency() {
+        let quotas = [
+            TenantQuota {
+                name: "ui".into(),
+                weight: 1.0,
+                core_quota: 0,
+                slo: SloClass::LatencyTarget { p99_ms: 250 },
+            },
+            quota("batch", 1.0, 0),
+        ];
+        let q = fair(10, &quotas);
+        let (ui, batch) = (q.registry.resolve("ui"), q.registry.resolve("batch"));
+        for i in 0..8 {
+            // depth 8 of cap 10 = 0.8: past the throughput watermark
+            // (0.75), below the latency one (0.9).
+            q.push(ticket(i, "filler", 0, 1).0).unwrap();
+        }
+        assert!(q.shed_check(&batch, 1).is_some(), "throughput work sheds at 0.75");
+        assert!(q.shed_check(&ui, 1).is_none(), "latency work still admitted");
+        q.push(ticket(100, "filler", 0, 1).0).unwrap();
+        assert!(q.shed_check(&ui, 1).is_some(), "latency work sheds at 0.9");
+    }
+
+    #[test]
+    fn registry_snapshot_lists_tenants() {
+        let reg = TenantRegistry::new(&[quota("a", 2.0, 4)]);
+        reg.resolve("a").on_grant(2);
+        reg.resolve("a").on_served(5_000);
+        let j = reg.snapshot();
+        let Json::Arr(items) = &j else { panic!("snapshot must be an array") };
+        assert_eq!(items.len(), 1);
+        let a = &items[0];
+        assert_eq!(a.get("tenant").unwrap().as_str().unwrap(), "a");
+        assert_eq!(a.get("cores_in_use").unwrap().as_usize().unwrap(), 2);
+        assert_eq!(a.get("served").unwrap().as_usize().unwrap(), 1);
+        assert!(a.get("latency_p99_ms").unwrap().as_f64().unwrap() > 0.0);
+        // The default tenant renders as "default".
+        reg.resolve("");
+        let j = reg.snapshot();
+        let Json::Arr(items) = &j else { panic!() };
+        assert_eq!(items[0].get("tenant").unwrap().as_str().unwrap(), "default");
+    }
+
+    #[test]
+    fn drain_and_requeue_keep_gauges_balanced() {
+        let q = fair(8, &[]);
+        let reg = q.registry.clone();
+        q.push(ticket(1, "a", 0, 2).0).unwrap();
+        q.push(ticket(2, "b", 0, 3).0).unwrap();
+        assert_eq!(reg.resolve("a").depth.load(Ordering::Relaxed), 1);
+        let t = q.pop_admissible(8).unwrap();
+        assert_eq!(reg.resolve(&t.tenant).depth.load(Ordering::Relaxed), 0);
+        assert!(q.requeue(t).is_none());
+        assert_eq!(q.depth(), 2);
+        let drained = q.drain();
+        assert_eq!(drained.len(), 2);
+        assert_eq!(reg.resolve("a").depth.load(Ordering::Relaxed), 0);
+        assert_eq!(reg.resolve("b").queued_cores.load(Ordering::Relaxed), 0);
+        assert_eq!(q.depth(), 0);
+    }
+}

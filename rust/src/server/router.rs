@@ -20,6 +20,8 @@ use std::sync::atomic::{AtomicU64, Ordering};
 #[derive(Clone, Debug)]
 pub struct GenRequest {
     pub model: String,
+    /// Tenant this request bills against (`""` = the default tenant).
+    pub tenant: String,
     pub seed: u64,
     /// Cores wanted (0 = the preset's serving default).
     pub cores: usize,
@@ -39,6 +41,7 @@ impl Default for GenRequest {
     fn default() -> Self {
         GenRequest {
             model: "sd35-sim".into(),
+            tenant: String::new(),
             seed: 0,
             cores: 4,
             steps: 50,
@@ -60,6 +63,10 @@ pub enum GenError {
     BadRequest(String),
     /// The scheduler refused the job (overloaded/deadline/shutdown/internal).
     Sched(Reject),
+    /// Every engine bank backing the model is dead or poisoned; the job was
+    /// admitted but could not run. Distinct from `overloaded`: retrying will
+    /// not help until a bank recovers.
+    BankUnavailable(String),
 }
 
 impl GenError {
@@ -67,6 +74,16 @@ impl GenError {
         match self {
             GenError::BadRequest(_) => "bad_request",
             GenError::Sched(r) => r.code(),
+            GenError::BankUnavailable(_) => "bank_unavailable",
+        }
+    }
+
+    /// For `overloaded` rejections carrying a shed hint: how long the
+    /// client should wait before retrying, in milliseconds.
+    pub fn retry_after_ms(&self) -> Option<u64> {
+        match self {
+            GenError::Sched(r) => r.retry_after_ms(),
+            _ => None,
         }
     }
 }
@@ -76,6 +93,7 @@ impl std::fmt::Display for GenError {
         match self {
             GenError::BadRequest(m) => write!(f, "{m}"),
             GenError::Sched(r) => write!(f, "{r}"),
+            GenError::BankUnavailable(m) => write!(f, "{m}"),
         }
     }
 }
@@ -128,6 +146,7 @@ impl Router {
                 adaptive: cfg.adaptive_batching,
                 model_budgets: cfg.model_budgets.iter().cloned().collect(),
                 remote_banks: cfg.remote_banks.clone(),
+                tenant_quotas: cfg.tenant_quotas.clone(),
                 ..DispatchOpts::default()
             },
         );
@@ -162,6 +181,7 @@ impl Router {
             )));
         }
         let mut grant = self.dispatcher.submit(JobSpec {
+            tenant: req.tenant.clone(),
             model: req.model.clone(),
             cores: want,
             min_cores: req.min_cores,
@@ -177,14 +197,19 @@ impl Router {
         let exec = ChordsExecutor::new(&view, cfg);
         let mut rng = Rng::seeded(req.seed);
         let x0 = Tensor::randn(&p.latent_dims(), &mut rng);
-        let res = exec.run_streaming_with_retire(
-            &x0,
-            |out| {
-                self.stats.outputs_streamed.fetch_add(1, Ordering::Relaxed);
-                on_partial(out.core, out.nfe_depth, req.steps as f64 / out.nfe_depth as f64);
-            },
-            |core_idx| grant.retire_core(core_idx),
-        );
+        // Engine failures (e.g. an all-remote model whose hosts are all
+        // dead/poisoned) surface as a structured `bank_unavailable` error,
+        // not a worker panic; the grant's cores are released on drop.
+        let res = exec
+            .try_run_streaming_with_retire(
+                &x0,
+                |out| {
+                    self.stats.outputs_streamed.fetch_add(1, Ordering::Relaxed);
+                    on_partial(out.core, out.nfe_depth, req.steps as f64 / out.nfe_depth as f64);
+                },
+                |core_idx| grant.retire_core(core_idx),
+            )
+            .map_err(GenError::BankUnavailable)?;
         self.stats.total_nfes.fetch_add(res.total_nfes, Ordering::Relaxed);
         Ok(res)
     }
@@ -277,6 +302,7 @@ mod tests {
         let _hold = r
             .dispatcher()
             .submit(JobSpec {
+                tenant: String::new(),
                 model: "gauss-mix".into(),
                 cores: 2,
                 min_cores: 0,

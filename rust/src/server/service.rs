@@ -197,12 +197,15 @@ fn handle_conn(stream: TcpStream, router: Arc<Router>, stop: Arc<AtomicBool>) ->
                             response_stream(&mut writer, &j)?;
                         }
                         Err(e) => {
-                            let j = Json::obj(vec![
+                            let mut fields = vec![
                                 ("type", Json::str("error")),
                                 ("code", Json::str(e.code())),
                                 ("message", Json::str(&e.to_string())),
-                            ]);
-                            response_stream(&mut writer, &j)?;
+                            ];
+                            if let Some(ms) = e.retry_after_ms() {
+                                fields.push(("retry_after_ms", Json::num(ms as f64)));
+                            }
+                            response_stream(&mut writer, &Json::obj(fields))?;
                         }
                     }
                 }
@@ -227,6 +230,9 @@ fn parse_gen_request(req: &Json) -> GenRequest {
     let mut g = GenRequest::default();
     if let Some(m) = req.get("model").and_then(|v| v.as_str()) {
         g.model = m.to_string();
+    }
+    if let Some(t) = req.get("tenant").and_then(|v| v.as_str()) {
+        g.tenant = t.to_string();
     }
     if let Some(s) = req.get("seed").and_then(|v| v.as_f64()) {
         g.seed = s as u64;

@@ -14,8 +14,23 @@ pub trait StepRule: Send + Sync {
     /// NFEs consumed per step (1 for Euler/DDIM, 2 for Heun/midpoint).
     fn nfe_per_step(&self) -> usize;
 
-    /// Advance `x` from `t` to `t2`; returns `(x', f_θ(x, t))`.
-    fn step(&self, eng: &mut dyn DriftEngine, x: &Tensor, t: f32, t2: f32) -> (Tensor, Tensor);
+    /// Advance `x` from `t` to `t2`; returns `(x', f_θ(x, t))`. Fails only
+    /// when the engine's drift fails ([`DriftEngine::try_drift`]) — e.g. a
+    /// remote bank with every host dead — so worker threads can carry the
+    /// error back to the coordinator instead of panicking.
+    fn try_step(
+        &self,
+        eng: &mut dyn DriftEngine,
+        x: &Tensor,
+        t: f32,
+        t2: f32,
+    ) -> anyhow::Result<(Tensor, Tensor)>;
+
+    /// Infallible [`StepRule::try_step`] for local engines, which never
+    /// fail. Panics on engine failure.
+    fn step(&self, eng: &mut dyn DriftEngine, x: &Tensor, t: f32, t2: f32) -> (Tensor, Tensor) {
+        self.try_step(eng, x, t, t2).expect("engine failed mid-step")
+    }
 }
 
 /// Euler / DDIM: `x' = x + (t'−t)·f(x,t)`. The paper's default solver for
@@ -32,10 +47,16 @@ impl StepRule for Euler {
         1
     }
 
-    fn step(&self, eng: &mut dyn DriftEngine, x: &Tensor, t: f32, t2: f32) -> (Tensor, Tensor) {
-        let f = eng.drift(x, t);
+    fn try_step(
+        &self,
+        eng: &mut dyn DriftEngine,
+        x: &Tensor,
+        t: f32,
+        t2: f32,
+    ) -> anyhow::Result<(Tensor, Tensor)> {
+        let f = eng.try_drift(x, t)?;
         let x2 = ops::axpy(x, t2 - t, &f);
-        (x2, f)
+        Ok((x2, f))
     }
 }
 
@@ -51,15 +72,21 @@ impl StepRule for Heun {
         2
     }
 
-    fn step(&self, eng: &mut dyn DriftEngine, x: &Tensor, t: f32, t2: f32) -> (Tensor, Tensor) {
+    fn try_step(
+        &self,
+        eng: &mut dyn DriftEngine,
+        x: &Tensor,
+        t: f32,
+        t2: f32,
+    ) -> anyhow::Result<(Tensor, Tensor)> {
         let h = t2 - t;
-        let f1 = eng.drift(x, t);
+        let f1 = eng.try_drift(x, t)?;
         let pred = ops::axpy(x, h, &f1);
-        let f2 = eng.drift(&pred, t2);
+        let f2 = eng.try_drift(&pred, t2)?;
         let mut x2 = x.clone();
         ops::axpy_into(&mut x2, 0.5 * h, &f1);
         ops::axpy_into(&mut x2, 0.5 * h, &f2);
-        (x2, f1)
+        Ok((x2, f1))
     }
 }
 
@@ -75,13 +102,19 @@ impl StepRule for Midpoint {
         2
     }
 
-    fn step(&self, eng: &mut dyn DriftEngine, x: &Tensor, t: f32, t2: f32) -> (Tensor, Tensor) {
+    fn try_step(
+        &self,
+        eng: &mut dyn DriftEngine,
+        x: &Tensor,
+        t: f32,
+        t2: f32,
+    ) -> anyhow::Result<(Tensor, Tensor)> {
         let h = t2 - t;
-        let f1 = eng.drift(x, t);
+        let f1 = eng.try_drift(x, t)?;
         let half = ops::axpy(x, 0.5 * h, &f1);
-        let fm = eng.drift(&half, t + 0.5 * h);
+        let fm = eng.try_drift(&half, t + 0.5 * h)?;
         let x2 = ops::axpy(x, h, &fm);
-        (x2, f1)
+        Ok((x2, f1))
     }
 }
 

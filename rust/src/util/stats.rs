@@ -1,6 +1,6 @@
 //! Summary statistics over timing / metric samples.
 
-/// Summary of a sample set: n, mean, std, min, median, p90, p99, max.
+/// Summary of a sample set: n, mean, std, min, median, p90, p99, p999, max.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Summary {
     pub n: usize,
@@ -10,6 +10,7 @@ pub struct Summary {
     pub median: f64,
     pub p90: f64,
     pub p99: f64,
+    pub p999: f64,
     pub max: f64,
 }
 
@@ -17,7 +18,17 @@ impl Summary {
     /// Compute a summary; returns all-zeros for an empty slice.
     pub fn of(xs: &[f64]) -> Summary {
         if xs.is_empty() {
-            return Summary { n: 0, mean: 0.0, std: 0.0, min: 0.0, median: 0.0, p90: 0.0, p99: 0.0, max: 0.0 };
+            return Summary {
+                n: 0,
+                mean: 0.0,
+                std: 0.0,
+                min: 0.0,
+                median: 0.0,
+                p90: 0.0,
+                p99: 0.0,
+                p999: 0.0,
+                max: 0.0,
+            };
         }
         let n = xs.len();
         let mean = xs.iter().sum::<f64>() / n as f64;
@@ -32,6 +43,7 @@ impl Summary {
             median: percentile_sorted(&sorted, 50.0),
             p90: percentile_sorted(&sorted, 90.0),
             p99: percentile_sorted(&sorted, 99.0),
+            p999: percentile_sorted(&sorted, 99.9),
             max: sorted[n - 1],
         }
     }
@@ -89,6 +101,14 @@ mod tests {
         assert!((percentile_sorted(&v, 50.0) - 5.0).abs() < 1e-12);
         assert_eq!(percentile_sorted(&v, 0.0), 0.0);
         assert_eq!(percentile_sorted(&v, 100.0), 10.0);
+    }
+
+    #[test]
+    fn p999_sits_between_p99_and_max() {
+        let xs: Vec<f64> = (0..1000).map(|i| i as f64).collect();
+        let s = Summary::of(&xs);
+        assert!(s.p99 <= s.p999 && s.p999 <= s.max);
+        assert!(s.p999 > 990.0);
     }
 
     #[test]

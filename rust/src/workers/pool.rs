@@ -60,6 +60,10 @@ pub struct Reply {
     pub drift: Tensor,
     /// Wall-clock seconds the engine call took (excludes queueing).
     pub secs: f64,
+    /// Engine failure, when the job could not be computed (e.g. a remote
+    /// bank with every host dead/poisoned). `out`/`drift` then carry the
+    /// job's input `x` as placeholders and must not be used numerically.
+    pub err: Option<String>,
 }
 
 /// The executor-facing abstraction over "a set of workers I may drive":
@@ -457,17 +461,29 @@ fn worker_main(
             Job::Route(tx) => routed = Some(tx),
             Job::Step { x, t, t2 } => {
                 let t0 = std::time::Instant::now();
-                let (out, drift) = rule.step(engine.as_mut(), &x, t, t2);
+                // Engine failures ride back in the reply (placeholder
+                // tensors, `err` set) — the coordinator decides whether to
+                // fail the job; the worker itself never panics.
+                let (out, drift, err) = match rule.try_step(engine.as_mut(), &x, t, t2) {
+                    Ok((out, drift)) => (out, drift, None),
+                    Err(e) => (x.clone(), x, Some(format!("{e:#}"))),
+                };
                 let secs = t0.elapsed().as_secs_f64();
-                if !send_reply(&mut routed, Reply { worker: id, out, drift, secs }) {
+                if !send_reply(&mut routed, Reply { worker: id, out, drift, secs, err }) {
                     break;
                 }
             }
             Job::Drift { x, t } => {
                 let t0 = std::time::Instant::now();
-                let f = engine.drift(&x, t);
+                let (f, err) = match engine.try_drift(&x, t) {
+                    Ok(f) => (f, None),
+                    Err(e) => (x, Some(format!("{e:#}"))),
+                };
                 let secs = t0.elapsed().as_secs_f64();
-                if !send_reply(&mut routed, Reply { worker: id, out: f.clone(), drift: f, secs }) {
+                if !send_reply(
+                    &mut routed,
+                    Reply { worker: id, out: f.clone(), drift: f, secs, err },
+                ) {
                     break;
                 }
             }

@@ -165,6 +165,14 @@ impl RemoteBank {
         self.shared.healthy.load(Ordering::Relaxed)
     }
 
+    /// Permanently disabled by a handshake mismatch (wrong model or dims).
+    /// A poisoned bank never becomes healthy again, so a failover set made
+    /// entirely of poisoned members fails jobs fast instead of waiting out
+    /// the redial timeout.
+    pub fn poisoned(&self) -> bool {
+        self.shared.poisoned.load(Ordering::Relaxed)
+    }
+
     /// The connector's stable label (e.g. `tcp:10.0.0.2:7078`).
     pub fn label(&self) -> &str {
         &self.shared.label
@@ -548,6 +556,13 @@ impl Member {
             Member::Remote(r) => r.healthy(),
         }
     }
+
+    fn poisoned(&self) -> bool {
+        match self {
+            Member::Local { .. } => false,
+            Member::Remote(r) => r.poisoned(),
+        }
+    }
 }
 
 struct FailoverShared {
@@ -718,7 +733,7 @@ struct FailoverEngine {
 }
 
 impl FailoverEngine {
-    fn wave(&mut self, xs: &[Tensor], ts: &[f32]) -> Vec<Tensor> {
+    fn try_wave(&mut self, xs: &[Tensor], ts: &[f32]) -> Result<Vec<Tensor>> {
         let n = self.shared.members.len();
         let t0 = Instant::now();
         loop {
@@ -727,13 +742,20 @@ impl FailoverEngine {
                 .find(|&i| self.shared.members[i].healthy());
             match chosen {
                 None => {
-                    // Every member down: the pumps keep redialling; wait
-                    // for one to come back rather than corrupting the job.
-                    assert!(
-                        t0.elapsed() < ALL_DEAD_TIMEOUT,
-                        "{}: every engine bank is unreachable",
-                        self.name
-                    );
+                    // Handshake-poisoned members never recover, so an
+                    // all-poisoned set fails immediately; otherwise the
+                    // pumps keep redialling — wait for one to come back,
+                    // bounded so a dead fleet fails the job rather than
+                    // wedging its worker forever.
+                    if self.shared.members.iter().all(|m| m.poisoned()) {
+                        bail!(
+                            "{}: every engine bank is poisoned (model/dims handshake mismatch)",
+                            self.name
+                        );
+                    }
+                    if t0.elapsed() >= ALL_DEAD_TIMEOUT {
+                        bail!("{}: every engine bank is unreachable", self.name);
+                    }
                     std::thread::sleep(Duration::from_millis(5));
                 }
                 Some(i) => {
@@ -751,7 +773,7 @@ impl FailoverEngine {
                         }
                     };
                     match attempt {
-                        Ok(outs) => return outs,
+                        Ok(outs) => return Ok(outs),
                         Err(_) => {
                             // Requeue onto the next member; the failed
                             // bank's pump is already redialling.
@@ -771,12 +793,23 @@ impl DriftEngine for FailoverEngine {
     }
 
     fn drift(&mut self, x: &Tensor, t: f32) -> Tensor {
-        self.wave(std::slice::from_ref(x), &[t]).pop().expect("wave returns its items")
+        self.try_drift(x, t).expect("every engine bank unavailable")
     }
 
     fn drift_batch(&mut self, xs: &[Tensor], ts: &[f32]) -> Vec<Tensor> {
+        self.try_drift_batch(xs, ts).expect("every engine bank unavailable")
+    }
+
+    fn try_drift(&mut self, x: &Tensor, t: f32) -> Result<Tensor> {
+        Ok(self
+            .try_wave(std::slice::from_ref(x), &[t])?
+            .pop()
+            .expect("wave returns its items"))
+    }
+
+    fn try_drift_batch(&mut self, xs: &[Tensor], ts: &[f32]) -> Result<Vec<Tensor>> {
         assert_eq!(xs.len(), ts.len(), "drift_batch length mismatch");
-        self.wave(xs, ts)
+        self.try_wave(xs, ts)
     }
 
     fn name(&self) -> &str {

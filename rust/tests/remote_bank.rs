@@ -345,6 +345,54 @@ fn delayed_wave_succeeds_without_failover() {
     wait_for_within("rtt recorded", Duration::from_secs(2), || bank.rstats().mean_rtt_us() > 0.0);
 }
 
+/// Regression: an all-remote model whose every bank is dead/poisoned must
+/// fail the request with the structured `bank_unavailable` code through
+/// the router — the worker carries the engine failure back in its reply
+/// ([`chords::workers::Reply::err`]) instead of panicking, and the job's
+/// core lease is released.
+#[test]
+fn all_banks_poisoned_fails_with_bank_unavailable() {
+    // The host serves exp-ode (same dims as gauss-mix); attaching it as a
+    // gauss-mix bank poisons it permanently at the model handshake.
+    let p = chords::config::preset("exp-ode").unwrap();
+    let factory = chords::engine::factory_for(p, "artifacts").unwrap();
+    let mut engine_host = EngineHost::new(
+        factory,
+        "exp-ode",
+        BatchOpts { engines: 1, max_batch: 8, linger: Duration::from_micros(100) },
+    )
+    .unwrap();
+    let addr = engine_host.serve_tcp("127.0.0.1", 0).unwrap();
+    let mut cfg = ServeConfig { total_cores: 4, ..ServeConfig::default() };
+    cfg.set("remote_bank", &format!("{addr}=gauss-mix")).unwrap();
+    // Remote-only placement: the poisoned bank is the model's only engine
+    // source, so the job cannot fall back to local capacity.
+    cfg.set("model_budget", "gauss-mix=1:8:100:remote").unwrap();
+    let router = Router::with_opts("artifacts", cfg);
+    let req = GenRequest {
+        model: "gauss-mix".into(),
+        steps: 30,
+        cores: 2,
+        seed: 7,
+        ..Default::default()
+    };
+    let t0 = std::time::Instant::now();
+    let err = router.generate(&req, |_, _, _| {}).unwrap_err();
+    assert_eq!(err.code(), "bank_unavailable");
+    assert!(err.to_string().contains("poisoned"), "error names the cause: {err}");
+    assert!(
+        t0.elapsed() < Duration::from_secs(10),
+        "all-poisoned sets fail fast, not after the redial timeout"
+    );
+    // The failed job released its lease and the server keeps serving
+    // models with working engines.
+    let j = router.queue_stats();
+    assert_eq!(j.get("cores_in_use").unwrap().as_usize().unwrap(), 0);
+    let ok_req =
+        GenRequest { model: "exp-ode".into(), steps: 20, cores: 2, ..Default::default() };
+    router.generate(&ok_req, |_, _, _| {}).expect("unaffected models keep serving");
+}
+
 /// The one real-TCP test (ephemeral port 0): a `chords engine-serve`
 /// process-equivalent on localhost, attached to a full serving stack via
 /// `--remote-bank`, serves a generation bitwise-identically to an

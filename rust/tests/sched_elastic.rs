@@ -40,7 +40,14 @@ fn gen_req(cores: usize, steps: usize, seed: u64) -> Json {
 }
 
 fn job_spec(cores: usize, priority: i32, deadline_ms: Option<u64>) -> JobSpec {
-    JobSpec { model: "exp-ode-slow".into(), cores, min_cores: 0, priority, deadline_ms }
+    JobSpec {
+        tenant: String::new(),
+        model: "exp-ode-slow".into(),
+        cores,
+        min_cores: 0,
+        priority,
+        deadline_ms,
+    }
 }
 
 /// The acceptance scenario: budget 8, four concurrent 4-core requests to

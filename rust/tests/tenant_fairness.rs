@@ -1,0 +1,196 @@
+//! Multi-tenant fair admission: the compatibility property (one tenant, no
+//! quotas ⇒ the weighted-fair queue is indistinguishable from the plain
+//! admission queue), deterministic weighted-share properties at the queue
+//! level, and a short open-loop soak smoke through the full router stack.
+//!
+//! The soak smoke is the CI-sized version of bench_serving part 5: a hot
+//! tenant offered several times its quota must be shed with the structured
+//! `overloaded` code while in-quota tenants see zero shed and quota
+//! enforcement bounds the hot tenant's core consumption.
+
+use chords::config::ServeConfig;
+use chords::harness::{run_soak, TenantLoad};
+use chords::metrics::ServingMetrics;
+use chords::sched::{AdmissionQueue, FairQueue, Reject, TenantQuota, TenantRegistry, Ticket};
+use chords::server::{GenRequest, Router};
+use chords::util::rng::Rng;
+use std::sync::mpsc::channel;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+type Rx = std::sync::mpsc::Receiver<Result<u32, Reject>>;
+
+fn ticket(id: u64, tenant: &str, priority: i32, want: usize) -> (Ticket<u32>, Rx) {
+    let (tx, rx) = channel();
+    (
+        Ticket {
+            id,
+            tenant: tenant.into(),
+            model: "gauss-mix".into(),
+            want_cores: want,
+            min_cores: want,
+            priority,
+            enqueued: Instant::now(),
+            deadline: None,
+            outcome: tx,
+        },
+        rx,
+    )
+}
+
+/// The satellite compatibility property: with a single tenant and no
+/// configured quotas, [`FairQueue`] must grant in *exactly* the plain
+/// [`AdmissionQueue`]'s order — (priority desc, arrival id asc), strict
+/// head-of-line on core fit — across randomized interleaved push/pop
+/// traces with randomized priorities, widths, and available-core counts.
+#[test]
+fn single_tenant_fair_queue_matches_plain_queue_order() {
+    for seed in 0..20u64 {
+        let mut rng = Rng::seeded(0xFA17 ^ (seed * 0x9E37));
+        let plain: AdmissionQueue<u32> = AdmissionQueue::new(32, Arc::new(ServingMetrics::new()));
+        let fair: FairQueue<u32> =
+            FairQueue::new(32, TenantRegistry::new(&[]), Arc::new(ServingMetrics::new()));
+        let mut rxs = Vec::new();
+        let mut next_id = 0u64;
+        for _ in 0..400 {
+            if rng.next_f64() < 0.6 {
+                next_id += 1;
+                let priority = rng.next_below(7) as i32 - 3;
+                let want = 1 + rng.next_below(8);
+                let (t1, rx1) = ticket(next_id, "", priority, want);
+                let (t2, rx2) = ticket(next_id, "", priority, want);
+                let a = plain.push(t1).is_ok();
+                let b = fair.push(t2).is_ok();
+                assert_eq!(a, b, "push outcome diverged at id {next_id} (seed {seed})");
+                rxs.push((rx1, rx2));
+            } else {
+                let available = 1 + rng.next_below(8);
+                let a = plain.pop_admissible(available).map(|t| t.id);
+                let b = fair.pop_admissible(available).map(|t| t.id);
+                assert_eq!(a, b, "pop diverged at {available} cores (seed {seed})");
+            }
+        }
+        loop {
+            let a = plain.pop_admissible(8).map(|t| t.id);
+            let b = fair.pop_admissible(8).map(|t| t.id);
+            assert_eq!(a, b, "drain diverged (seed {seed})");
+            if a.is_none() {
+                break;
+            }
+        }
+    }
+}
+
+/// Deterministic weighted-share property over randomized weights: two
+/// always-backlogged lanes with equal-cost jobs must be served in weight
+/// proportion (exact, since DRR with integer-ratio weights and uniform
+/// cost has no remainder to round).
+#[test]
+fn drr_share_tracks_randomized_integer_weights() {
+    for seed in 0..10u64 {
+        let mut rng = Rng::seeded(0xD1F ^ seed);
+        let wa = 1.0 + rng.next_below(4) as f64;
+        let wb = 1.0 + rng.next_below(4) as f64;
+        let quotas = [
+            TenantQuota {
+                name: "a".into(),
+                weight: wa,
+                core_quota: 0,
+                slo: chords::sched::SloClass::Throughput,
+            },
+            TenantQuota {
+                name: "b".into(),
+                weight: wb,
+                core_quota: 0,
+                slo: chords::sched::SloClass::Throughput,
+            },
+        ];
+        let q: FairQueue<u32> = FairQueue::new(
+            256,
+            TenantRegistry::new(&quotas),
+            Arc::new(ServingMetrics::new()),
+        );
+        // Deep equal-cost backlogs, then pop a whole number of DRR rounds.
+        let per_lane = 60;
+        let mut rxs = Vec::new();
+        for i in 0..per_lane {
+            let (t, rx) = ticket(i as u64, "a", 0, 2);
+            q.push(t).unwrap();
+            rxs.push(rx);
+            let (t, rx) = ticket((per_lane + i) as u64, "b", 0, 2);
+            q.push(t).unwrap();
+            rxs.push(rx);
+        }
+        // One full weight cycle serves wa + wb jobs of cost 2 per 2 rounds
+        // per unit weight; pop enough for several cycles, none near drain.
+        let pops = (2.0 * (wa + wb)) as usize * 5;
+        let (mut a, mut b) = (0usize, 0usize);
+        for _ in 0..pops {
+            match q.pop_admissible(16).unwrap().tenant.as_str() {
+                "a" => a += 1,
+                _ => b += 1,
+            }
+        }
+        // Deficit carry-over can skew a mid-cycle measurement by at most
+        // ~(cost + max weight)/2 pops; 2.0 covers every weight pair here.
+        let expect_a = pops as f64 * wa / (wa + wb);
+        assert!(
+            (a as f64 - expect_a).abs() <= 2.0,
+            "weights {wa}:{wb} → {a}:{b} over {pops} pops (seed {seed})"
+        );
+    }
+}
+
+/// CI-sized open-loop soak: three quota'd tenants on `exp-ode-slow` (300µs
+/// simulated NFE floor, so service rates are CPU-load-independent), with
+/// `hot` offered well past what its 2-core quota can serve. Fixed seed,
+/// ~1.5s arrival window.
+#[test]
+fn soak_smoke_sheds_hot_tenant_only() {
+    let mut cfg = ServeConfig { total_cores: 8, queue_cap: 64, ..ServeConfig::default() };
+    cfg.set("tenant_quota", "gold=4:4:latency:250,silver=2:2,hot=1:2").unwrap();
+    let router = Arc::new(Router::with_opts("artifacts", cfg));
+    let template = GenRequest {
+        model: "exp-ode-slow".into(),
+        steps: 30,
+        cores: 2,
+        min_cores: 1,
+        ..GenRequest::default()
+    };
+    let loads = vec![
+        TenantLoad { tenant: "gold".into(), rate_hz: 10.0, template: template.clone() },
+        TenantLoad { tenant: "silver".into(), rate_hz: 8.0, template: template.clone() },
+        // ≥ 9ms of simulated work per job on a 2-core quota cannot sustain
+        // 200 req/s: the backlog bound (2× quota) must shed the excess.
+        TenantLoad { tenant: "hot".into(), rate_hz: 200.0, template },
+    ];
+    let out = run_soak(&router, &loads, Duration::from_millis(1500), 0x50AC);
+
+    let hot = out.outcome("hot").unwrap();
+    assert!(hot.shed > 0, "hot tenant over quota must be shed: {hot:?}");
+    assert!(hot.served > 0, "hot tenant must still be served within quota: {hot:?}");
+    // Quota enforcement bounds hot's core consumption: at most its 2-core
+    // quota for the whole wall clock (slack for accounting granularity).
+    assert!(
+        hot.served_core_secs <= 2.0 * out.wall_s * 1.3,
+        "hot used {} core-secs in {}s against a 2-core quota",
+        hot.served_core_secs,
+        out.wall_s
+    );
+    for name in ["gold", "silver"] {
+        let t = out.outcome(name).unwrap();
+        assert_eq!(t.shed, 0, "in-quota tenant {name} must never be shed: {t:?}");
+        assert_eq!(t.failed, 0, "in-quota tenant {name} must not fail: {t:?}");
+        assert_eq!(t.served, t.offered, "in-quota tenant {name} must be fully served: {t:?}");
+    }
+    // The stats snapshot exports the per-tenant rows the operator sees.
+    let rows = out.stats.get("tenants").and_then(|t| t.as_arr()).expect("tenants array");
+    assert_eq!(rows.len(), 3, "{rows:?}");
+    let hot_row = rows
+        .iter()
+        .find(|r| r.get("tenant").and_then(|v| v.as_str()) == Some("hot"))
+        .unwrap();
+    assert!(hot_row.get("shed").unwrap().as_f64().unwrap() >= 1.0);
+    assert_eq!(hot_row.get("slo").unwrap().as_str().unwrap(), "throughput");
+    assert!(hot_row.get("latency_p99_ms").unwrap().as_f64().unwrap() > 0.0);
+}
