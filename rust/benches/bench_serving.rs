@@ -36,6 +36,14 @@
 //! stays near isolated and served-core share tracks weights. Rows append
 //! with `"bench":"serving_soak"`.
 //!
+//! Part 6 prices the wire codec itself: the retired v1 JSON-hex dialect
+//! (kept as `wire::legacy`) against the v2 length-prefixed binary frames,
+//! on one representative drift wave — serialize+parse round trip
+//! (`ser_us`, `bytes_per_wave`) and the same serialized wave through a TCP
+//! echo on 127.0.0.1 (`wave_rtt_us`), the identical socket path for both
+//! codecs so the comparison isolates the codec, not the host. Rows append
+//! with `"bench":"serving_wire"`.
+//!
 //! One JSON object per configuration (the repo's JSON bench-table
 //! convention), preceded by a human-readable line; the full table is also
 //! written to `BENCH_serving.json` as the perf-trajectory baseline.
@@ -330,6 +338,121 @@ fn sweep_remote(remote: bool) -> Json {
     ])
 }
 
+/// One representative drift wave for the codec bench: 8 logical-core
+/// states of 256 f32s each (a full `max_batch = 8` fusion on a
+/// mid-sized latent), seeded so both codecs serialize identical bits.
+fn wire_wave() -> (Vec<usize>, Vec<chords::tensor::Tensor>, Vec<f32>) {
+    let dims = vec![256usize];
+    let count = 8usize;
+    let mut rng = chords::util::rng::Rng::seeded(7);
+    let xs = (0..count)
+        .map(|_| {
+            chords::tensor::Tensor::from_vec(
+                &dims,
+                (0..dims[0]).map(|_| rng.next_f32() * 2.0 - 1.0).collect(),
+            )
+        })
+        .collect();
+    let ts = (0..count).map(|i| i as f32 / count as f32).collect();
+    (dims, xs, ts)
+}
+
+/// Wire-codec sweep: serialize+parse one drift wave (`ser_us`), then push
+/// the same serialized bytes through a TCP echo on 127.0.0.1 and parse
+/// them on return (`wave_rtt_us`) — the identical socket path for both
+/// codecs, so the delta is the codec, not the host. `codec` is
+/// `"json-hex"` (the retired v1 dialect, kept as `wire::legacy`) or
+/// `"binary"` (the v2 frames the transport actually speaks).
+fn sweep_wire(codec: &str) -> Json {
+    use chords::workers::wire;
+    use std::io::{Read, Write};
+
+    let (dims, xs, ts) = wire_wave();
+    let serialize = |id: u64| -> Vec<u8> {
+        if codec == "binary" {
+            wire::drift_batch_request(id, &dims, &xs, &ts).encode()
+        } else {
+            let mut line =
+                wire::legacy::drift_batch_request(id, &dims, &xs, &ts).to_string_compact();
+            line.push('\n');
+            line.into_bytes()
+        }
+    };
+    let parse = |buf: &[u8]| {
+        let wave = if codec == "binary" {
+            let (frame, _) = wire::Frame::decode(buf).expect("frame decode");
+            wire::parse_drift_batch_request(&frame, Some(&dims)).expect("wave parse")
+        } else {
+            let line = std::str::from_utf8(buf).expect("utf8 wave");
+            wire::legacy::parse_drift_batch_request(&Json::parse(line.trim()).expect("json"))
+                .expect("wave parse")
+        };
+        assert_eq!(wave.xs.len(), xs.len(), "round trip dropped states");
+    };
+
+    // Hermetic serialize+parse round trip.
+    let ser_iters = 200u64;
+    let mut bytes_per_wave = 0usize;
+    let t0 = Instant::now();
+    for i in 0..ser_iters {
+        let buf = serialize(i + 1);
+        bytes_per_wave = buf.len();
+        parse(&buf);
+    }
+    let ser_us = t0.elapsed().as_secs_f64() * 1e6 / ser_iters as f64;
+
+    // The same wave over a real socket: one echo thread, blocking reads.
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").expect("bind echo");
+    let addr = listener.local_addr().expect("echo addr");
+    let echo = std::thread::spawn(move || {
+        let (mut s, _) = listener.accept().expect("accept echo");
+        let mut buf = vec![0u8; 64 * 1024];
+        loop {
+            match s.read(&mut buf) {
+                Ok(0) | Err(_) => break,
+                Ok(n) => {
+                    if s.write_all(&buf[..n]).is_err() {
+                        break;
+                    }
+                }
+            }
+        }
+    });
+    let mut conn = std::net::TcpStream::connect(addr).expect("connect echo");
+    conn.set_nodelay(true).expect("nodelay");
+    let rtt_iters = 50u64;
+    let t0 = Instant::now();
+    for i in 0..rtt_iters {
+        let buf = serialize(i + 1);
+        conn.write_all(&buf).expect("echo send");
+        let mut back = vec![0u8; buf.len()];
+        conn.read_exact(&mut back).expect("echo recv");
+        parse(&back);
+    }
+    let wave_rtt_us = t0.elapsed().as_secs_f64() * 1e6 / rtt_iters as f64;
+    drop(conn);
+    echo.join().expect("echo thread");
+
+    println!(
+        "{codec:<8} wave {}×{} → {:>7} bytes | ser {:8.1}µs | echo rtt {:8.1}µs",
+        xs.len(),
+        dims[0],
+        bytes_per_wave,
+        ser_us,
+        wave_rtt_us,
+    );
+    Json::obj(vec![
+        ("bench", Json::str("serving_wire")),
+        ("model", Json::str("synthetic")),
+        ("codec", Json::str(codec)),
+        ("wave_count", Json::num(xs.len() as f64)),
+        ("dim", Json::num(dims[0] as f64)),
+        ("bytes_per_wave", Json::num(bytes_per_wave as f64)),
+        ("ser_us", Json::num(ser_us)),
+        ("wave_rtt_us", Json::num(wave_rtt_us)),
+    ])
+}
+
 /// Part 5's tenant roster: `gold` (weight 4, 4 cores, 250ms p99 target),
 /// `silver` (weight 2, 2 cores), `hot` (weight 1, 2 cores) — `hot` is the
 /// abuser, offered ~5× its quota in [`soak_loads`].
@@ -488,6 +611,20 @@ fn main() {
 
     println!("\n== soak benches: multi-tenant fairness under open-loop overload ==");
     rows.extend(sweep_soak());
+
+    println!("\n== wire benches: JSON-hex (v1) vs binary frames (v2) per wave ==");
+    let hex_row = sweep_wire("json-hex");
+    let hex_ser = hex_row.get("ser_us").and_then(|v| v.as_f64()).unwrap_or(0.0);
+    rows.push(hex_row);
+    let bin_row = sweep_wire("binary");
+    let bin_ser = bin_row.get("ser_us").and_then(|v| v.as_f64()).unwrap_or(0.0);
+    rows.push(bin_row);
+    if bin_ser > 0.0 {
+        println!(
+            "binary vs JSON-hex serialization: {:.2}x faster per wave (and no format/parse step to audit for exactness)",
+            hex_ser / bin_ser
+        );
+    }
 
     println!("-- JSON bench table --");
     for row in &rows {

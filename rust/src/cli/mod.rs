@@ -89,11 +89,11 @@ pub fn help_text() -> String {
         ("reward-sweep", "verify Thm 2.5 / Def 2.4 on the exponential-ODE reward"),
         (
             "serve",
-            "start the generation server (--port 7077 --total-cores 8 --queue-cap 64 [--no-reclaim] [--engines-per-model E --max-batch B --batch-linger-us U] [--adaptive-batching] [--model-budget m=E:B:L[:adaptive][:remote]] [--remote-bank host:port[=model]] [--tenant-quota t=W:C[:slo]]; see README \"Tuning & adaptive batching\" and \"Multi-tenant fairness\")",
+            "start the generation server (--port 7077 --total-cores 8 --queue-cap 64 [--no-reclaim] [--engines-per-model E --max-batch B --batch-linger-us U] [--adaptive-batching] [--model-budget m=E:B:L[:adaptive][:remote]] [--remote-bank host:port[=model]] [--register-port P] [--tenant-quota t=W:C[:slo]]; see README \"Tuning & adaptive batching\" and \"Multi-tenant fairness\")",
         ),
         (
             "engine-serve",
-            "start an engine-host process: a bank of physical engines served over TCP for --remote-bank attachment (--port 7078 --model gauss-mix --engines 2 --max-batch 8 --linger-us 150; see README \"Multi-host serving\")",
+            "start an engine-host process: a bank of physical engines served over binary wave frames for --remote-bank attachment or scheduler-dial registration (--port 7078 --model gauss-mix --engines 2 --max-batch 8 --linger-us 150 [--register host:port [--advertise host:port]]; see README \"Multi-host serving\")",
         ),
         ("inspect-artifacts", "list AOT artifacts and validate the manifest"),
         ("help", "this message"),

@@ -188,6 +188,12 @@ pub struct ServeConfig {
     /// t=W:C[:slo]`, comma-separated / repeatable). Empty = single-tenant
     /// mode: no quotas, no tenant-aware shedding, legacy admission order.
     pub tenant_quotas: Vec<TenantQuota>,
+    /// Registration port for elastic engine hosts (`--register-port`).
+    /// When set, the server binds a second listener where `chords
+    /// engine-serve --register` processes dial in and join their model's
+    /// failover set without a restart; `None` (the default) disables the
+    /// listener and hosts can only be pinned via `--remote-bank`.
+    pub register_port: Option<u16>,
 }
 
 impl Default for ServeConfig {
@@ -205,6 +211,7 @@ impl Default for ServeConfig {
             model_budgets: Vec::new(),
             remote_banks: Vec::new(),
             tenant_quotas: Vec::new(),
+            register_port: None,
         }
     }
 }
@@ -275,6 +282,10 @@ impl ServeConfig {
                         self.remote_banks.push(s);
                     }
                 }
+            }
+            "register_port" | "register-port" => {
+                self.register_port =
+                    Some(value.parse().map_err(|e| format!("register_port: {e}"))?)
             }
             "tenant_quota" | "tenant-quota" => {
                 // Comma-separated list of t=W:C[:slo] specs; a repeated
@@ -374,6 +385,19 @@ mod tests {
         assert!(s.set("remote_bank", "host:notaport").is_err());
         assert!(s.set("remote_bank", "host:7078=").is_err());
         assert!(RemoteBankSpec::parse("127.0.0.1:0").is_ok(), "ephemeral ports allowed");
+    }
+
+    #[test]
+    fn serve_config_register_port_knob() {
+        let s = ServeConfig::default();
+        assert_eq!(s.register_port, None, "host registration is opt-in");
+        let mut s = ServeConfig::default();
+        s.set("register-port", "7079").unwrap();
+        assert_eq!(s.register_port, Some(7079));
+        s.set("register_port", "0").unwrap();
+        assert_eq!(s.register_port, Some(0), "port 0 = ephemeral");
+        assert!(s.set("register_port", "notaport").is_err());
+        assert!(s.set("register_port", "70000").is_err());
     }
 
     #[test]

@@ -222,6 +222,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         ("adaptive-batching", "adaptive_batching"),
         ("model-budget", "model_budget"),
         ("remote-bank", "remote_bank"),
+        ("register-port", "register_port"),
         ("tenant-quota", "tenant_quota"),
     ] {
         if let Some(v) = args.flag(flag) {
@@ -262,6 +263,25 @@ fn cmd_serve(args: &Args) -> Result<()> {
             s.model.as_deref().map(|m| format!(" → {m}")).unwrap_or_else(|| " → all models".into());
         println!("remote bank: {}{scope} (health/RTT in queue_stats \"banks\")", s.addr);
     }
+    // Elastic host registration: engine hosts dial this port, register, and
+    // join their model's failover set; their registration connection dying
+    // detaches them again. Kept alive for the life of the process.
+    let _registration = match cfg.register_port {
+        Some(rp) => {
+            let reg = chords::server::RegistrationServer::serve(
+                Arc::new(router.dispatcher().host_registry()),
+                "0.0.0.0",
+                rp,
+            )?;
+            println!(
+                "host registration on {} (dial in with: chords engine-serve --register <this-host>:{}; live table in queue_stats \"hosts\")",
+                reg.addr(),
+                reg.addr().port()
+            );
+            Some(reg)
+        }
+        None => None,
+    };
     for q in &cfg.tenant_quotas {
         println!(
             "tenant: {} weight {} quota {} slo {} (per-tenant counters in queue_stats \"tenants\")",
@@ -279,8 +299,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
 }
 
 /// `chords engine-serve`: stand up a bank of physical engines for one
-/// preset and serve the engine-host protocol over TCP, so a `chords serve`
-/// process on another machine can attach it with `--remote-bank`.
+/// preset and serve the engine-host protocol over TCP. A `chords serve`
+/// process can pin it with `--remote-bank`, or — with `--register
+/// scheduler:port` — this host dials the scheduler's registration port and
+/// joins its model's failover set elastically.
 fn cmd_engine_serve(args: &Args) -> Result<()> {
     let port: u16 = args.flag_parsed("port", 7078).map_err(|e| anyhow!(e))?;
     let bind = args.flag("host").unwrap_or("0.0.0.0");
@@ -308,11 +330,31 @@ fn cmd_engine_serve(args: &Args) -> Result<()> {
         max_batch.max(1),
         linger_us
     );
+    if let Some(scheduler) = args.flag("register") {
+        // The address the scheduler dials back for waves. `0.0.0.0` is a
+        // bind address, not a reachable one — default to loopback and let
+        // the operator override with --advertise for real multi-host runs.
+        let advertise = match args.flag("advertise") {
+            Some(a) => a.to_string(),
+            None => {
+                let reach = if bind == "0.0.0.0" { "127.0.0.1" } else { bind };
+                format!("{reach}:{}", addr.port())
+            }
+        };
+        host.register_with(scheduler, &advertise);
+        println!(
+            "registering with scheduler {scheduler} as {advertise} (redials with backoff; leaving the set on disconnect)"
+        );
+    } else {
+        println!(
+            "attach from a serving host with: chords serve --remote-bank <this-host>:{}={model}",
+            addr.port()
+        );
+    }
     println!(
-        "attach from a serving host with: chords serve --remote-bank <this-host>:{}={model}",
-        addr.port()
+        "protocol: binary wave frames v{}; ops: hello | ping | bank_stats | drift_batch",
+        chords::workers::wire::VERSION
     );
-    println!("protocol: JSON lines; ops: hello | ping | bank_stats | drift_batch");
     // Serve until killed.
     loop {
         std::thread::sleep(std::time::Duration::from_secs(3600));

@@ -291,6 +291,12 @@ pub struct ServingMetrics {
     pub adaptive_batch_grow: AtomicU64,
     /// Adaptive `max_batch` decreases (persistently idle fusion headroom).
     pub adaptive_batch_shrink: AtomicU64,
+    /// Engine hosts accepted by the registration port (re-registrations of
+    /// the same host count again — each is a fresh lease).
+    pub hosts_registered: AtomicU64,
+    /// Engine hosts dropped from their failover sets after their
+    /// registration connection died or they explicitly left.
+    pub hosts_deregistered: AtomicU64,
     started: Instant,
 }
 
@@ -319,6 +325,8 @@ impl Default for ServingMetrics {
             adaptive_linger_shrink: AtomicU64::new(0),
             adaptive_batch_grow: AtomicU64::new(0),
             adaptive_batch_shrink: AtomicU64::new(0),
+            hosts_registered: AtomicU64::new(0),
+            hosts_deregistered: AtomicU64::new(0),
             started: Instant::now(),
         }
     }
@@ -456,6 +464,14 @@ impl ServingMetrics {
                 "adaptive_batch_shrink",
                 Json::num(self.adaptive_batch_shrink.load(Ordering::Relaxed) as f64),
             ),
+            (
+                "hosts_registered",
+                Json::num(self.hosts_registered.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "hosts_deregistered",
+                Json::num(self.hosts_deregistered.load(Ordering::Relaxed) as f64),
+            ),
         ])
     }
 }
@@ -539,6 +555,8 @@ mod tests {
         assert!((j.get("mean_exec_us").unwrap().as_f64().unwrap() - 300.0).abs() < 1e-9);
         assert_eq!(j.get("adaptive_retunes").unwrap().as_usize().unwrap(), 0);
         assert_eq!(j.get("adaptive_models").unwrap().as_usize().unwrap(), 0);
+        assert_eq!(j.get("hosts_registered").unwrap().as_usize().unwrap(), 0);
+        assert_eq!(j.get("hosts_deregistered").unwrap().as_usize().unwrap(), 0);
     }
 
     #[test]

@@ -27,8 +27,8 @@ use crate::metrics::{BatchStats, RemoteBankStats, ServingMetrics};
 use crate::solvers::Euler;
 use crate::util::json::Json;
 use crate::workers::{
-    BatchOpts, BatchTuning, CorePool, EngineBank, FailoverBank, PoolView, RemoteBank,
-    RemoteBankOpts, TcpConnector,
+    wire, BatchOpts, BatchTuning, Connector, CorePool, EngineBank, FailoverBank, FailoverControl,
+    PoolView, RemoteBank, RemoteBankOpts, TcpConnector,
 };
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -93,7 +93,9 @@ pub struct DispatchOpts {
     /// Under remote-only placement with *every* host dead or poisoned, the
     /// job fails with a structured `bank_unavailable` error through the
     /// router — still, keep a local member unless the model truly cannot
-    /// run locally.
+    /// run locally. Engine hosts that dial the scheduler's registration
+    /// port ([`Dispatcher::host_registry`]) join the same failover sets
+    /// elastically, without appearing here.
     pub remote_banks: Vec<RemoteBankSpec>,
     /// Per-tenant weights, core quotas, and SLO classes
     /// (`--tenant-quota t=W:C[:slo]`). Empty = multi-tenant fairness still
@@ -190,6 +192,10 @@ struct ModelSlot {
     /// Failover-set counters when the model has remote banks attached
     /// (`failovers` aggregates into `queue_stats.remote_failovers`).
     remote: Option<Arc<RemoteBankStats>>,
+    /// Live membership control over the slot's failover set, when it has
+    /// one — the attach point for engine hosts registering (or vanishing)
+    /// while the slot serves traffic.
+    failover: Option<FailoverControl>,
 }
 
 impl ModelSlot {
@@ -213,6 +219,12 @@ struct Shared {
     batch: Option<BatchOpts>,
     /// Remote engine banks to attach, matched per model at slot build.
     remote_banks: Vec<RemoteBankSpec>,
+    /// Engine hosts currently registered through the scheduler's
+    /// registration port ([`HostRegistry`]), keyed by (model, connector
+    /// label). Matched per model at slot build exactly like
+    /// [`Shared::remote_banks`]; loaded slots with a failover control are
+    /// additionally edited live.
+    registrations: Mutex<Vec<HostRegistration>>,
     /// Enable adaptive control for every batched model.
     adaptive_default: bool,
     /// Per-model bank overrides (highest precedence).
@@ -260,6 +272,44 @@ impl Shared {
             remote_only: false,
         })
     }
+
+    /// The registered-host table (the `queue_stats.hosts` array): one entry
+    /// per live registration with the model it serves, its connector label,
+    /// and the capacity it advertised at handshake.
+    fn host_snapshot(&self) -> Json {
+        Json::Arr(
+            self.registrations
+                .lock()
+                .unwrap()
+                .iter()
+                .map(|r| {
+                    Json::obj(vec![
+                        ("model", Json::str(&r.model)),
+                        ("host", Json::str(&r.label)),
+                        (
+                            "dims",
+                            Json::Arr(r.dims.iter().map(|d| Json::num(*d as f64)).collect()),
+                        ),
+                        ("engines", Json::num(r.engines as f64)),
+                        ("capacity", Json::num(r.capacity as f64)),
+                    ])
+                })
+                .collect(),
+        )
+    }
+}
+
+/// One engine host's live registration: everything its `register` frame
+/// advertised, plus the connector the failover set dials it back through.
+#[derive(Clone)]
+struct HostRegistration {
+    model: String,
+    /// Connector label — the member identity inside the failover set.
+    label: String,
+    dims: Vec<usize>,
+    engines: usize,
+    capacity: usize,
+    connector: Arc<dyn Connector>,
 }
 
 /// The elastic serving scheduler. Owns the budget, the queue, the per-model
@@ -292,6 +342,7 @@ impl Dispatcher {
             idle_ttl: Duration::from_millis(opts.idle_ttl_ms),
             batch: opts.batch_opts(),
             remote_banks: opts.remote_banks,
+            registrations: Mutex::new(Vec::new()),
             adaptive_default: opts.adaptive,
             model_budgets: opts.model_budgets,
             controller,
@@ -395,8 +446,19 @@ impl Dispatcher {
             m.insert("banks".into(), Json::Arr(banks));
             m.insert("remote_failovers".into(), Json::num(failovers as f64));
             m.insert("tenants".into(), self.shared.tenants.snapshot());
+            m.insert("hosts".into(), self.shared.host_snapshot());
         }
         j
+    }
+
+    /// A clonable [`crate::server::RegistrationSink`] over this dispatcher,
+    /// to be served by a [`crate::server::RegistrationServer`]: engine
+    /// hosts that dial the scheduler's registration port join their model's
+    /// failover set the moment they register and leave it when their
+    /// registration connection dies — no `--remote-bank` pinning, no
+    /// restart.
+    pub fn host_registry(&self) -> HostRegistry {
+        HostRegistry { shared: self.shared.clone() }
     }
 
     /// The tenant table: per-tenant weights, quotas, SLO classes, and live
@@ -479,6 +541,105 @@ impl Drop for Dispatcher {
     }
 }
 
+/// The dispatcher's end of elastic host registration: a cheaply cloneable
+/// [`crate::server::RegistrationSink`] handed to the
+/// [`crate::server::RegistrationServer`] listening on `--register-port`.
+///
+/// `register` validates the host's advertised model and dims against the
+/// preset, records the registration, and — when the model is already loaded
+/// — edits the live failover set through its [`FailoverControl`], so waves
+/// start weighing the new member without a restart. A model loaded with a
+/// purely local pool is dropped from the registry instead (in-flight jobs
+/// keep their own `Arc<ModelSlot>`); the next request rebuilds it as a
+/// failover set including the host. `deregister` (driven by the host's
+/// registration connection dying) detaches the member; sticky engines
+/// re-place on their next wave.
+#[derive(Clone)]
+pub struct HostRegistry {
+    shared: Arc<Shared>,
+}
+
+impl crate::server::RegistrationSink for HostRegistry {
+    fn register(
+        &self,
+        reg: &wire::Registration,
+        connector: Arc<dyn Connector>,
+    ) -> anyhow::Result<()> {
+        let p = preset(&reg.model)
+            .ok_or_else(|| anyhow::anyhow!("unknown model '{}'", reg.model))?;
+        if reg.dims != p.latent_dims() {
+            anyhow::bail!(
+                "model '{}' has latent dims {:?}, host advertised {:?}",
+                reg.model,
+                p.latent_dims(),
+                reg.dims
+            );
+        }
+        let label = connector.label();
+        {
+            // Re-registration (a bounced host redialling) replaces the old
+            // record rather than duplicating it.
+            let mut regs = self.shared.registrations.lock().unwrap();
+            regs.retain(|r| !(r.model == reg.model && r.label == label));
+            regs.push(HostRegistration {
+                model: reg.model.clone(),
+                label: label.clone(),
+                dims: reg.dims.clone(),
+                engines: reg.engines,
+                capacity: reg.capacity,
+                connector: connector.clone(),
+            });
+        }
+        let slot = self.shared.models.lock().unwrap().get(&reg.model).cloned();
+        if let Some(slot) = slot {
+            if let Some(ctl) = &slot.failover {
+                // Live attach. Drop any stale member with the same label
+                // first so a redialling host gets a fresh pump instead of a
+                // duplicate-label refusal.
+                ctl.remove_remote(&label);
+                let ropts = RemoteBankOpts {
+                    expect_model: Some(reg.model.clone()),
+                    ..RemoteBankOpts::default()
+                };
+                ctl.add_remote(connector, reg.dims.clone(), ropts)?;
+            } else {
+                // Loaded without a failover set (purely local pool): the
+                // bank composition is fixed at slot build, so retire this
+                // slot and let the next request rebuild it with the host.
+                let mut models = self.shared.models.lock().unwrap();
+                if let Some(cur) = models.get(&reg.model) {
+                    if Arc::ptr_eq(cur, &slot) {
+                        models.remove(&reg.model);
+                        self.shared.controller.lock().unwrap().unregister(&reg.model);
+                    }
+                }
+            }
+        }
+        self.shared.metrics.hosts_registered.fetch_add(1, Ordering::Relaxed);
+        Ok(())
+    }
+
+    fn deregister(&self, model: &str, label: &str) -> bool {
+        let removed = {
+            let mut regs = self.shared.registrations.lock().unwrap();
+            let before = regs.len();
+            regs.retain(|r| !(r.model == model && r.label == label));
+            regs.len() != before
+        };
+        if !removed {
+            return false;
+        }
+        let slot = self.shared.models.lock().unwrap().get(model).cloned();
+        if let Some(slot) = slot {
+            if let Some(ctl) = &slot.failover {
+                ctl.remove_remote(label);
+            }
+        }
+        self.shared.metrics.hosts_deregistered.fetch_add(1, Ordering::Relaxed);
+        true
+    }
+}
+
 /// Get-or-create the model's pool slot, resolving its per-model bank shape
 /// and putting adaptive banks under the controller.
 fn model_slot(shared: &Shared, model: &str) -> anyhow::Result<Arc<ModelSlot>> {
@@ -512,13 +673,30 @@ fn model_slot(shared: &Shared, model: &str) -> anyhow::Result<Arc<ModelSlot>> {
             }
         }
     }
+    // Engine hosts that registered for this model join the same failover
+    // set as `--remote-bank` members (a forced-dedicated override opts the
+    // model out of both).
+    let regs: Vec<HostRegistration> = if forced_dedicated {
+        Vec::new()
+    } else {
+        shared
+            .registrations
+            .lock()
+            .unwrap()
+            .iter()
+            .filter(|r| r.model == model)
+            .cloned()
+            .collect()
+    };
     let mut pinned = false;
     let mut register: Option<(Arc<BatchTuning>, Arc<BatchStats>)> = None;
     let mut remote_stats = None;
-    let pool = if remotes.is_empty() {
+    let mut failover = None;
+    let pool = if remotes.is_empty() && regs.is_empty() {
         if resolved.as_ref().map(|r| r.remote_only).unwrap_or(false) {
             anyhow::bail!(
-                "model '{model}' budget is remote-only but no --remote-bank matches it"
+                "model '{model}' budget is remote-only but no --remote-bank or \
+                 registered engine host matches it"
             );
         }
         match &resolved {
@@ -585,7 +763,7 @@ fn model_slot(shared: &Shared, model: &str) -> anyhow::Result<Arc<ModelSlot>> {
             expect_model: Some(model.to_string()),
             ..RemoteBankOpts::default()
         };
-        let banks: Vec<Arc<RemoteBank>> = remotes
+        let mut banks: Vec<Arc<RemoteBank>> = remotes
             .iter()
             .map(|addr| {
                 Arc::new(RemoteBank::connect_with_tuning(
@@ -598,8 +776,25 @@ fn model_slot(shared: &Shared, model: &str) -> anyhow::Result<Arc<ModelSlot>> {
                 ))
             })
             .collect();
+        // Registered hosts join through the connector captured at
+        // registration; a host whose label a `--remote-bank` spec already
+        // covers is not attached (and counted) twice.
+        for reg in &regs {
+            if banks.iter().any(|b| reg.label == b.label()) {
+                continue;
+            }
+            banks.push(Arc::new(RemoteBank::connect_with_tuning(
+                reg.connector.clone(),
+                reg.dims.clone(),
+                ropts.clone(),
+                tuning.clone(),
+                BatchStats::with_parent(stats.clone()),
+                RemoteBankStats::new(),
+            )));
+        }
         let set_rstats = RemoteBankStats::new();
         let fb = FailoverBank::new(banks, local, stats.clone(), set_rstats.clone())?;
+        failover = Some(fb.controller());
         let pool = CorePool::new_with_bank(0, Box::new(fb), Arc::new(Euler))?;
         // Remote connections are the model's expensive floor: pin the slot
         // so idle reaping detaches warm workers but keeps the banks warm.
@@ -618,6 +813,7 @@ fn model_slot(shared: &Shared, model: &str) -> anyhow::Result<Arc<ModelSlot>> {
         last_activity: Mutex::new(Instant::now()),
         pinned,
         remote: remote_stats,
+        failover,
     });
     models.insert(model.to_string(), slot.clone());
     drop(models);
@@ -1339,6 +1535,128 @@ mod tests {
             .submit(JobSpec { min_cores: 1, deadline_ms: Some(2000), ..spec("gauss-mix", 4) })
             .unwrap();
         assert_eq!(g2.cores(), 1);
+    }
+
+    #[test]
+    fn registered_host_joins_failover_and_detaches() {
+        use crate::server::{EngineHost, RegistrationSink};
+        let d = dispatcher(2, 4);
+        let registry = d.host_registry();
+        let p = preset("gauss-mix").unwrap();
+        let factory = factory_for(p, "artifacts").unwrap();
+        let host = EngineHost::new(
+            factory,
+            "gauss-mix",
+            BatchOpts { engines: 1, max_batch: 4, linger: Duration::from_micros(50) },
+        )
+        .unwrap();
+        let label = host.connector().label();
+        let reg = wire::Registration {
+            model: "gauss-mix".into(),
+            dims: p.latent_dims(),
+            engines: 1,
+            capacity: 4,
+            advertise: "loopback".into(),
+        };
+        registry.register(&reg, host.connector()).unwrap();
+        assert_eq!(d.metrics().hosts_registered.load(Ordering::Relaxed), 1);
+        // The model loads as a failover set that includes the registered
+        // host — no --remote-bank, no restart.
+        let mut g = d.submit(spec("gauss-mix", 2)).unwrap();
+        assert_eq!(run_job(&mut g, 20, 1), 2);
+        drop(g);
+        assert!(
+            d.model_remote_stats("gauss-mix").is_some(),
+            "registration forced the failover path"
+        );
+        let snap = d.snapshot();
+        let Json::Arr(hosts) = snap.get("hosts").unwrap() else {
+            panic!("hosts must be an array")
+        };
+        assert_eq!(hosts.len(), 1);
+        assert_eq!(hosts[0].get("host").unwrap().as_str(), Some(label.as_str()));
+        assert_eq!(hosts[0].get("capacity").unwrap().as_usize().unwrap(), 4);
+        let Json::Arr(banks) = snap.get("banks").unwrap() else {
+            panic!("banks must be an array")
+        };
+        let member = banks
+            .iter()
+            .find(|b| b.get("bank").unwrap().as_str() == Some(label.as_str()))
+            .expect("registered host appears as a bank member");
+        assert_eq!(member.get("kind").unwrap().as_str(), Some("remote"));
+        assert!(
+            member.get("waves").unwrap().as_usize().unwrap() >= 1,
+            "waves landed on the registered host"
+        );
+        // Deregistration detaches the member; the model keeps serving from
+        // its local engines.
+        assert!(registry.deregister("gauss-mix", &label));
+        assert!(!registry.deregister("gauss-mix", &label), "second deregister is a no-op");
+        assert_eq!(d.metrics().hosts_deregistered.load(Ordering::Relaxed), 1);
+        let mut g = d.submit(spec("gauss-mix", 2)).unwrap();
+        assert_eq!(run_job(&mut g, 20, 2), 2);
+        let snap = d.snapshot();
+        let Json::Arr(hosts) = snap.get("hosts").unwrap() else {
+            panic!("hosts must be an array")
+        };
+        assert!(hosts.is_empty(), "deregistered host left the table");
+    }
+
+    #[test]
+    fn late_registration_reaches_an_already_loaded_model() {
+        use crate::server::{EngineHost, RegistrationSink};
+        let d = dispatcher(2, 4);
+        let mut g = d.submit(spec("gauss-mix", 2)).unwrap();
+        run_job(&mut g, 20, 1);
+        drop(g);
+        assert!(d.model_remote_stats("gauss-mix").is_none(), "purely local slot");
+        let p = preset("gauss-mix").unwrap();
+        let host = EngineHost::new(
+            factory_for(p, "artifacts").unwrap(),
+            "gauss-mix",
+            BatchOpts { engines: 1, max_batch: 4, linger: Duration::from_micros(50) },
+        )
+        .unwrap();
+        let reg = wire::Registration {
+            model: "gauss-mix".into(),
+            dims: p.latent_dims(),
+            engines: 1,
+            capacity: 4,
+            advertise: "loopback".into(),
+        };
+        d.host_registry().register(&reg, host.connector()).unwrap();
+        // The local-only slot was retired; the next job rebuilds the model
+        // as a failover set including the late host.
+        let mut g = d.submit(spec("gauss-mix", 2)).unwrap();
+        assert_eq!(run_job(&mut g, 20, 2), 2);
+        assert!(d.model_remote_stats("gauss-mix").is_some());
+    }
+
+    #[test]
+    fn registration_validates_model_and_dims() {
+        use crate::server::RegistrationSink;
+        let d = dispatcher(2, 4);
+        let registry = d.host_registry();
+        let conn: Arc<dyn Connector> = Arc::new(TcpConnector::new("127.0.0.1:9"));
+        let reg = wire::Registration {
+            model: "nope".into(),
+            dims: vec![8],
+            engines: 1,
+            capacity: 8,
+            advertise: "x".into(),
+        };
+        let err = registry.register(&reg, conn.clone()).unwrap_err();
+        assert!(err.to_string().contains("unknown model"));
+        let reg = wire::Registration {
+            model: "gauss-mix".into(),
+            dims: vec![8],
+            engines: 1,
+            capacity: 8,
+            advertise: "x".into(),
+        };
+        let err = registry.register(&reg, conn).unwrap_err();
+        assert!(err.to_string().contains("latent dims"));
+        assert_eq!(d.metrics().hosts_registered.load(Ordering::Relaxed), 0);
     }
 
     #[test]

@@ -1,37 +1,76 @@
 //! The engine-host process: a bank of physical engines exposed over the
-//! engine-host protocol (`chords engine-serve`).
+//! engine-host protocol (`chords engine-serve`), plus the scheduler-side
+//! registration listener that lets hosts join and leave a running server.
 //!
 //! CHORDS decouples logical solver cores from the engines that evaluate
 //! `f_θ`; this module decouples the engines from the *serving host*. An
 //! [`EngineHost`] owns an [`EngineBank`] of physical engines and answers
-//! `hello` / `ping` / `bank_stats` / `drift_batch` requests
-//! ([`crate::workers::wire`]) over any [`Transport`] — real TCP in
-//! production, in-process loopback in tests (via [`EngineHost::connector`]),
-//! so every client behavior is exercised hermetically and only one smoke
-//! test needs a socket.
+//! `hello` / `ping` / `bank_stats` / `drift_batch` frames
+//! ([`crate::workers::wire`], protocol v2) over any [`Transport`] — real
+//! TCP in production, in-process loopback in tests (via
+//! [`EngineHost::connector`]), so every client behavior is exercised
+//! hermetically and only one smoke test needs a socket. A frame whose
+//! version byte this host does not speak is answered with an `error`
+//! frame naming both versions, then the connection closes — the
+//! application-layer half of version negotiation (the transport itself
+//! rejects peers that are not speaking frames at all).
 //!
-//! Placement never changes numerics: a wave is decoded with the bit-exact
-//! tensor codec, executed through the same `drift_batch` contract as a
-//! local bank (each connection holds one client engine onto the bank, so
-//! concurrent connections' waves fuse exactly like concurrent local cores),
-//! and encoded back bit-exactly. `rust/tests/remote_bank.rs` pins
+//! Placement never changes numerics: a wave is decoded from raw
+//! little-endian f32 payloads (bit-exact by construction), validated
+//! against the host's served dims *before* any tensor is allocated,
+//! executed through the same `drift_batch` contract as a local bank (each
+//! connection holds one client engine onto the bank, so concurrent
+//! connections' waves fuse exactly like concurrent local cores), and
+//! encoded back bit-exactly. `rust/tests/remote_bank.rs` pins
 //! remote == local across engines, bank shapes, and step rules.
+//!
+//! ## Elastic registration (scheduler-dial topology)
+//!
+//! Instead of pinning engine hosts at server start with `--remote-bank`,
+//! a host can *dial the scheduler* and register:
+//!
+//! 1. the scheduler runs a [`RegistrationServer`] (`chords serve
+//!    --register-port`), accepting `register` frames;
+//! 2. `chords engine-serve --register scheduler:port` starts a
+//!    [`HostRegistrar`] thread that dials it, announces what the host
+//!    serves (model, dims, engine count, capacity) and where to dial back
+//!    for waves (`advertise`), and waits for `register_ok`;
+//! 3. the scheduler attaches the host to the model's failover set through
+//!    a [`RegistrationSink`] (the dispatcher's host registry) — live, no
+//!    restart — and dials the advertised address for wave traffic;
+//! 4. the registrar keeps the registration connection warm with pings;
+//!    when it drops (host death, network partition), the scheduler
+//!    deregisters the host and waves fail over to surviving members. The
+//!    registrar meanwhile redials with exponential backoff, so a bounced
+//!    scheduler re-learns its fleet automatically.
 
 use crate::engine::{DriftEngine, EngineFactory};
 use crate::metrics::BatchStats;
 use crate::util::json::Json;
-use crate::workers::wire;
-use crate::workers::{loopback_pair, BatchOpts, Connector, EngineBank, TcpTransport, Transport};
-use anyhow::Result;
+use crate::workers::wire::{self, op};
+use crate::workers::{
+    loopback_pair, BatchOpts, Connector, EngineBank, TcpConnector, TcpTransport, Transport,
+};
+use anyhow::{bail, Result};
 use std::net::{SocketAddr, TcpListener};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 /// Connection handlers and the accept loop poll the stop flag at this
 /// period, bounding shutdown latency.
 const HOST_TICK: Duration = Duration::from_millis(100);
+
+/// How often a [`HostRegistrar`] pings its registration connection.
+const REGISTRAR_PING: Duration = Duration::from_secs(1);
+
+/// How long a registrar waits for `register_ok` before redialling.
+const REGISTRAR_HANDSHAKE: Duration = Duration::from_secs(5);
+
+/// Initial registrar redial delay; doubles per failure up to the cap.
+const REGISTRAR_BACKOFF: Duration = Duration::from_millis(200);
+const REGISTRAR_BACKOFF_CAP: Duration = Duration::from_secs(5);
 
 /// Everything a connection handler needs — deliberately *not* the bank
 /// itself (handlers only hold cheap client engines onto it), so the shared
@@ -45,6 +84,9 @@ struct HostShared {
     /// Preset the host serves (advertised in `hello`).
     model: String,
     engines: usize,
+    /// The bank's fusion cap — `engines × max_batch` is the wave capacity
+    /// advertised when registering with a scheduler.
+    max_batch: usize,
     stats: Arc<BatchStats>,
     stop: AtomicBool,
     conns: Mutex<Vec<JoinHandle<()>>>,
@@ -54,10 +96,13 @@ struct HostShared {
 /// with [`EngineHost::new`], then either [`EngineHost::serve_tcp`] (the
 /// `chords engine-serve` path) or hand connections in directly with
 /// [`EngineHost::serve_transport`] / [`EngineHost::connector`] (tests).
+/// [`EngineHost::register_with`] additionally announces the host to a
+/// scheduler's registration port and keeps the registration alive.
 pub struct EngineHost {
     shared: Arc<HostShared>,
     accept: Option<JoinHandle<()>>,
     addr: Option<SocketAddr>,
+    registrar: Option<HostRegistrar>,
     /// Owns the physical engines. Declared after `shared` and dropped after
     /// the [`Drop`] body joins every handler, so in-flight waves finish
     /// against a live bank.
@@ -81,11 +126,12 @@ impl EngineHost {
             name: bank.client_name().to_string(),
             model: model.to_string(),
             engines: opts.engines,
+            max_batch: opts.max_batch.max(1),
             stats,
             stop: AtomicBool::new(false),
             conns: Mutex::new(Vec::new()),
         });
-        Ok(EngineHost { shared, accept: None, addr: None, _bank: bank })
+        Ok(EngineHost { shared, accept: None, addr: None, registrar: None, _bank: bank })
     }
 
     /// Host-side fusion counters (what `bank_stats` reports).
@@ -154,10 +200,31 @@ impl EngineHost {
     pub fn connector(&self) -> Arc<dyn Connector> {
         Arc::new(LoopbackConnector { shared: self.shared.clone() })
     }
+
+    /// Dial `scheduler` (`host:port`, a [`RegistrationServer`]) and keep
+    /// this host registered until drop: announce model, dims, engine count,
+    /// and wave capacity, with `advertise` as the address the scheduler
+    /// dials back for wave traffic (normally the [`EngineHost::serve_tcp`]
+    /// address as reachable from the scheduler). The registrar redials with
+    /// exponential backoff whenever the registration connection drops.
+    pub fn register_with(&mut self, scheduler: &str, advertise: &str) {
+        assert!(self.registrar.is_none(), "register_with called twice");
+        let reg = wire::Registration {
+            model: self.shared.model.clone(),
+            dims: self.shared.dims.clone(),
+            engines: self.shared.engines,
+            capacity: self.shared.engines * self.shared.max_batch,
+            advertise: advertise.to_string(),
+        };
+        self.registrar = Some(HostRegistrar::spawn(scheduler.to_string(), reg));
+    }
 }
 
 impl Drop for EngineHost {
     fn drop(&mut self) {
+        // The registrar goes first so the scheduler sees the registration
+        // connection die (and deregisters) before the wave port closes.
+        self.registrar.take();
         self.shared.stop.store(true, Ordering::Relaxed);
         if let Some(h) = self.accept.take() {
             let _ = h.join();
@@ -179,7 +246,7 @@ struct LoopbackConnector {
 impl Connector for LoopbackConnector {
     fn connect(&self) -> Result<Arc<dyn Transport>> {
         if self.shared.stop.load(Ordering::Relaxed) {
-            anyhow::bail!("engine host '{}' is shut down", self.shared.model);
+            bail!("engine host '{}' is shut down", self.shared.model);
         }
         let (client, host_side) = loopback_pair();
         spawn_handler(&self.shared, host_side as Arc<dyn Transport>);
@@ -207,8 +274,8 @@ fn spawn_handler(shared: &Arc<HostShared>, t: Arc<dyn Transport>) {
     conns.push(h);
 }
 
-/// One connection: serve protocol ops until the peer hangs up or the host
-/// stops. The client engine is built lazily on this thread (the PJRT
+/// One connection: serve protocol frames until the peer hangs up or the
+/// host stops. The client engine is built lazily on this thread (the PJRT
 /// thread-affinity contract) and reused across waves.
 fn handle_conn(shared: &HostShared, t: &dyn Transport) {
     let mut engine: Option<Box<dyn DriftEngine>> = None;
@@ -221,16 +288,32 @@ fn handle_conn(shared: &HostShared, t: &dyn Transport) {
             Ok(None) => continue,
             Err(_) => return, // peer hung up
         };
-        let reply = match msg.get("op").and_then(|o| o.as_str()) {
-            Some("hello") => {
+        if msg.version != wire::VERSION {
+            // Version negotiation: name both versions, then hang up — the
+            // peer cannot change what it speaks mid-connection.
+            let _ = t.send(&wire::error_frame(
+                msg.id,
+                &format!(
+                    "unsupported wire version {} (this host speaks v{})",
+                    msg.version,
+                    wire::VERSION
+                ),
+            ));
+            return;
+        }
+        let reply = match msg.op {
+            op::HELLO => {
                 wire::hello_response(&shared.name, &shared.dims, shared.engines, &shared.model)
             }
-            Some("ping") => Json::obj(vec![("type", Json::str("pong"))]),
-            Some("bank_stats") => bank_stats(shared),
-            Some("drift_batch") => run_wave(shared, &mut engine, &msg),
-            _ => wire::error_response(
-                None,
-                "unknown op (expected hello|ping|bank_stats|drift_batch)",
+            op::PING => wire::pong(),
+            op::BANK_STATS => bank_stats(shared),
+            op::DRIFT_BATCH => run_wave(shared, &mut engine, &msg),
+            other => wire::error_frame(
+                msg.id,
+                &format!(
+                    "unknown op {} (expected hello|ping|bank_stats|drift_batch)",
+                    wire::op_name(other)
+                ),
             ),
         };
         if t.send(&reply).is_err() {
@@ -239,40 +322,42 @@ fn handle_conn(shared: &HostShared, t: &dyn Transport) {
     }
 }
 
-fn bank_stats(shared: &HostShared) -> Json {
+fn bank_stats(shared: &HostShared) -> wire::Frame {
     let s = &shared.stats;
-    Json::obj(vec![
-        ("type", Json::str("bank_stats")),
-        ("model", Json::str(&shared.model)),
-        ("engines", Json::num(shared.engines as f64)),
-        ("batches", Json::num(s.batches.load(Ordering::Relaxed) as f64)),
-        ("batched_drifts", Json::num(s.batched_drifts.load(Ordering::Relaxed) as f64)),
-        ("mean_occupancy", Json::num(s.mean_occupancy())),
-        ("mean_exec_us", Json::num(s.mean_exec_us())),
-        ("peak_batch", Json::num(s.peak_batch.load(Ordering::Relaxed) as f64)),
-    ])
+    wire::Frame::control(
+        op::BANK_STATS_REPLY,
+        0,
+        &Json::obj(vec![
+            ("model", Json::str(&shared.model)),
+            ("engines", Json::num(shared.engines as f64)),
+            ("batches", Json::num(s.batches.load(Ordering::Relaxed) as f64)),
+            ("batched_drifts", Json::num(s.batched_drifts.load(Ordering::Relaxed) as f64)),
+            ("mean_occupancy", Json::num(s.mean_occupancy())),
+            ("mean_exec_us", Json::num(s.mean_exec_us())),
+            ("peak_batch", Json::num(s.peak_batch.load(Ordering::Relaxed) as f64)),
+        ]),
+    )
 }
 
-/// Execute one `drift_batch` wave. Every failure answers a structured
-/// error carrying the wave id when it could be parsed, so the client fails
-/// exactly the wave that died instead of the whole connection.
-fn run_wave(shared: &HostShared, engine: &mut Option<Box<dyn DriftEngine>>, msg: &Json) -> Json {
-    let id = msg.get("id").and_then(|v| v.as_f64()).map(|v| v as u64);
-    let wave = match wire::parse_drift_batch_request(msg) {
+/// Execute one `drift_batch` wave. Every failure answers an `error` frame
+/// whose header id echoes the request's wave id, so the client fails
+/// exactly the wave that died instead of the whole connection. Dims are
+/// validated against the host's served shape inside the parse — before
+/// any tensor allocation.
+fn run_wave(
+    shared: &HostShared,
+    engine: &mut Option<Box<dyn DriftEngine>>,
+    msg: &wire::Frame,
+) -> wire::Frame {
+    let wave = match wire::parse_drift_batch_request(msg, Some(&shared.dims)) {
         Ok(w) => w,
-        Err(e) => return wire::error_response(id, &e),
+        Err(e) => return wire::error_frame(msg.id, &e),
     };
-    if wave.dims != shared.dims {
-        return wire::error_response(
-            Some(wave.id),
-            &format!("wave dims {:?} do not match host dims {:?}", wave.dims, shared.dims),
-        );
-    }
     if engine.is_none() {
         match shared.factory.create() {
             Ok(e) => *engine = Some(e),
             Err(e) => {
-                return wire::error_response(Some(wave.id), &format!("engine build failed: {e:#}"))
+                return wire::error_frame(wave.id, &format!("engine build failed: {e:#}"));
             }
         }
     }
@@ -280,11 +365,299 @@ fn run_wave(shared: &HostShared, engine: &mut Option<Box<dyn DriftEngine>>, msg:
     wire::drift_batch_response(wave.id, &outs)
 }
 
+// --------------------------------------------------- scheduler-side listener
+
+/// Scheduler-side sink for engine-host registrations. Implemented by the
+/// dispatcher's host registry ([`crate::sched::HostRegistry`]); a stub in
+/// tests. `register` attaches the host (dialing back `connector` for wave
+/// traffic); `deregister` detaches it when its registration connection
+/// dies.
+pub trait RegistrationSink: Send + Sync {
+    /// Attach a registered host to the model's failover set.
+    fn register(&self, reg: &wire::Registration, connector: Arc<dyn Connector>) -> Result<()>;
+
+    /// Detach a previously registered host; returns whether it was
+    /// attached.
+    fn deregister(&self, model: &str, label: &str) -> bool;
+}
+
+struct RegServerShared {
+    sink: Arc<dyn RegistrationSink>,
+    stop: AtomicBool,
+    conns: Mutex<Vec<JoinHandle<()>>>,
+}
+
+/// The scheduler's registration listener (`chords serve --register-port`):
+/// accepts `register` frames from engine hosts, attaches each to the
+/// dispatcher through a [`RegistrationSink`], answers keepalive pings, and
+/// deregisters a host the moment its registration connection dies.
+pub struct RegistrationServer {
+    shared: Arc<RegServerShared>,
+    accept: Option<JoinHandle<()>>,
+    addr: SocketAddr,
+}
+
+impl RegistrationServer {
+    /// Bind `host:port` (port 0 = ephemeral) and accept registrations
+    /// until drop.
+    pub fn serve(sink: Arc<dyn RegistrationSink>, host: &str, port: u16) -> Result<Self> {
+        let listener = TcpListener::bind((host, port))?;
+        let addr = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let shared =
+            Arc::new(RegServerShared { sink, stop: AtomicBool::new(false), conns: Mutex::new(Vec::new()) });
+        let shared2 = shared.clone();
+        let accept = std::thread::Builder::new()
+            .name("chords-register-accept".into())
+            .spawn(move || {
+                while !shared2.stop.load(Ordering::Relaxed) {
+                    match listener.accept() {
+                        Ok((stream, _)) => {
+                            if let Ok(t) = TcpTransport::from_stream(stream) {
+                                spawn_registration_handler(&shared2, Arc::new(t));
+                            }
+                        }
+                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                            std::thread::sleep(Duration::from_millis(5));
+                        }
+                        Err(e)
+                            if matches!(
+                                e.kind(),
+                                std::io::ErrorKind::ConnectionAborted
+                                    | std::io::ErrorKind::ConnectionReset
+                                    | std::io::ErrorKind::Interrupted
+                            ) => {}
+                        Err(_) => break,
+                    }
+                }
+            })?;
+        Ok(RegistrationServer { shared, accept: Some(accept), addr })
+    }
+
+    /// Bound listener address.
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+}
+
+impl Drop for RegistrationServer {
+    fn drop(&mut self) {
+        self.shared.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        let conns: Vec<JoinHandle<()>> =
+            std::mem::take(&mut *self.shared.conns.lock().unwrap());
+        for h in conns {
+            let _ = h.join();
+        }
+    }
+}
+
+fn spawn_registration_handler(shared: &Arc<RegServerShared>, t: Arc<dyn Transport>) {
+    let shared2 = shared.clone();
+    let h = std::thread::Builder::new()
+        .name("chords-register-conn".into())
+        .spawn(move || {
+            handle_registration(&shared2, &*t);
+            t.close();
+        })
+        .expect("spawn registration conn handler");
+    let mut conns = shared.conns.lock().unwrap();
+    conns.retain(|h| !h.is_finished());
+    conns.push(h);
+}
+
+/// One registration connection. The connection *is* the host's liveness
+/// lease: when it dies — however it dies — any registration it carried is
+/// revoked.
+fn handle_registration(shared: &RegServerShared, t: &dyn Transport) {
+    let mut active: Option<(String, String)> = None; // (model, label)
+    loop {
+        if shared.stop.load(Ordering::Relaxed) {
+            break;
+        }
+        let msg = match t.recv_timeout(HOST_TICK) {
+            Ok(Some(m)) => m,
+            Ok(None) => continue,
+            Err(_) => break, // host hung up / died
+        };
+        if msg.version != wire::VERSION {
+            let _ = t.send(&wire::error_frame(
+                0,
+                &format!(
+                    "unsupported wire version {} (this scheduler speaks v{})",
+                    msg.version,
+                    wire::VERSION
+                ),
+            ));
+            break;
+        }
+        match msg.op {
+            op::REGISTER => {
+                let reg = match wire::parse_register_request(&msg) {
+                    Ok(r) => r,
+                    Err(e) => {
+                        let _ = t.send(&wire::error_frame(0, &e));
+                        continue;
+                    }
+                };
+                let connector = Arc::new(TcpConnector::new(&reg.advertise));
+                let label = connector.label();
+                match shared.sink.register(&reg, connector) {
+                    Ok(()) => {
+                        active = Some((reg.model.clone(), label));
+                        if t.send(&wire::register_ok()).is_err() {
+                            break;
+                        }
+                    }
+                    Err(e) => {
+                        let _ = t
+                            .send(&wire::error_frame(0, &format!("registration refused: {e:#}")));
+                    }
+                }
+            }
+            op::PING => {
+                if t.send(&wire::pong()).is_err() {
+                    break;
+                }
+            }
+            other => {
+                let _ = t.send(&wire::error_frame(
+                    0,
+                    &format!(
+                        "unknown op {} on the registration port (expected register|ping)",
+                        wire::op_name(other)
+                    ),
+                ));
+            }
+        }
+    }
+    if let Some((model, label)) = active {
+        shared.sink.deregister(&model, &label);
+    }
+}
+
+// ------------------------------------------------------ host-side registrar
+
+/// The engine-host side of scheduler-dial registration: a thread that
+/// keeps this host registered with one scheduler — dial, `register`, wait
+/// for `register_ok`, then keepalive pings; on any failure, redial with
+/// exponential backoff. Dropped (from [`EngineHost`]'s drop) it closes the
+/// registration connection, which is what tells the scheduler to
+/// deregister.
+pub struct HostRegistrar {
+    stop: Arc<AtomicBool>,
+    thread: Option<JoinHandle<()>>,
+}
+
+impl HostRegistrar {
+    fn spawn(scheduler: String, reg: wire::Registration) -> HostRegistrar {
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
+        let thread = std::thread::Builder::new()
+            .name("chords-registrar".into())
+            .spawn(move || registrar_main(&stop2, &scheduler, &reg))
+            .expect("spawn host registrar");
+        HostRegistrar { stop, thread: Some(thread) }
+    }
+}
+
+impl Drop for HostRegistrar {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.thread.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Interruptible sleep: returns early (true) if `stop` was raised.
+fn sleep_unless_stopped(d: Duration, stop: &AtomicBool) -> bool {
+    let deadline = Instant::now() + d;
+    while Instant::now() < deadline {
+        if stop.load(Ordering::Relaxed) {
+            return true;
+        }
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    stop.load(Ordering::Relaxed)
+}
+
+fn registrar_main(stop: &AtomicBool, scheduler: &str, reg: &wire::Registration) {
+    let mut backoff = REGISTRAR_BACKOFF;
+    while !stop.load(Ordering::Relaxed) {
+        let t = match TcpTransport::connect(scheduler) {
+            Ok(t) => t,
+            Err(_) => {
+                if sleep_unless_stopped(backoff, stop) {
+                    return;
+                }
+                backoff = (backoff * 2).min(REGISTRAR_BACKOFF_CAP);
+                continue;
+            }
+        };
+        if register_once(&t, reg, stop).is_ok() {
+            backoff = REGISTRAR_BACKOFF;
+            keepalive(&t, stop);
+        }
+        t.close();
+        if sleep_unless_stopped(backoff, stop) {
+            return;
+        }
+        backoff = (backoff * 2).min(REGISTRAR_BACKOFF_CAP);
+    }
+}
+
+/// Send the registration and wait for `register_ok`.
+fn register_once(t: &dyn Transport, reg: &wire::Registration, stop: &AtomicBool) -> Result<()> {
+    t.send(&wire::register_request(reg))?;
+    let deadline = Instant::now() + REGISTRAR_HANDSHAKE;
+    loop {
+        if stop.load(Ordering::Relaxed) {
+            bail!("registrar stopping");
+        }
+        let left = deadline.saturating_duration_since(Instant::now());
+        if left.is_zero() {
+            bail!("registration with '{scheduler}' timed out", scheduler = t.peer());
+        }
+        match t.recv_timeout(left.min(HOST_TICK))? {
+            None => continue,
+            Some(m) => match m.op {
+                op::REGISTER_OK => return Ok(()),
+                op::ERROR => bail!("scheduler refused registration: {}", m.text()),
+                _ => continue, // stray pong etc.
+            },
+        }
+    }
+}
+
+/// Ping until the connection dies or the registrar stops.
+fn keepalive(t: &dyn Transport, stop: &AtomicBool) {
+    let mut last_ping = Instant::now();
+    loop {
+        if stop.load(Ordering::Relaxed) {
+            return;
+        }
+        if last_ping.elapsed() >= REGISTRAR_PING {
+            if t.send(&wire::ping()).is_err() {
+                return;
+            }
+            last_ping = Instant::now();
+        }
+        match t.recv_timeout(HOST_TICK) {
+            Ok(_) => {} // pong (or stray frame): connection is alive
+            Err(_) => return,
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::engine::GaussMixtureFactory;
     use crate::tensor::Tensor;
+    use crate::workers::wire::Frame;
 
     fn host(engines: usize) -> EngineHost {
         EngineHost::new(
@@ -295,7 +668,7 @@ mod tests {
         .unwrap()
     }
 
-    fn call(t: &dyn Transport, req: &Json) -> Json {
+    fn call(t: &dyn Transport, req: &Frame) -> Frame {
         t.send(req).unwrap();
         loop {
             if let Some(m) = t.recv_timeout(Duration::from_secs(5)).unwrap() {
@@ -310,10 +683,12 @@ mod tests {
         let (client, server_side) = loopback_pair();
         h.serve_transport(server_side);
         let r = call(&*client, &wire::hello_request());
-        assert_eq!(r.get("type").unwrap().as_str().unwrap(), "hello");
-        assert_eq!(r.get("model").unwrap().as_str().unwrap(), "gm-test");
-        assert_eq!(r.get("engines").unwrap().as_usize().unwrap(), 2);
-        assert_eq!(r.get("name").unwrap().as_str().unwrap(), "batched:gauss-mixture");
+        assert_eq!(r.op, op::HELLO_OK);
+        let info = wire::parse_hello_response(&r).unwrap();
+        assert_eq!(info.model, "gm-test");
+        assert_eq!(info.engines, 2);
+        assert_eq!(info.dims, vec![8]);
+        assert_eq!(info.name, "batched:gauss-mixture");
     }
 
     #[test]
@@ -325,14 +700,16 @@ mod tests {
         let xs = vec![Tensor::full(&[8], 0.5), Tensor::full(&[8], -1.25)];
         let ts = vec![0.3f32, 0.8];
         let r = call(&*client, &wire::drift_batch_request(11, &[8], &xs, &ts));
-        let (id, outs) = wire::parse_drift_batch_response(&r, &[8]).unwrap();
-        assert_eq!(id, 11);
+        assert_eq!(r.op, op::DRIFT_BATCH_REPLY);
+        assert_eq!(r.id, 11);
+        let outs = wire::parse_drift_batch_response(&r, &[8]).unwrap();
         for ((x, &t), out) in xs.iter().zip(&ts).zip(&outs) {
             assert_eq!(out, &direct.drift(x, t));
         }
-        let stats = call(&*client, &Json::obj(vec![("op", Json::str("bank_stats"))]));
-        assert_eq!(stats.get("type").unwrap().as_str().unwrap(), "bank_stats");
-        assert!(stats.get("batched_drifts").unwrap().as_usize().unwrap() >= 2);
+        let stats = call(&*client, &wire::bank_stats_request());
+        assert_eq!(stats.op, op::BANK_STATS_REPLY);
+        let j = stats.json().unwrap();
+        assert!(j.get("batched_drifts").unwrap().as_usize().unwrap() >= 2);
     }
 
     #[test]
@@ -340,17 +717,46 @@ mod tests {
         let h = host(1);
         let (client, server_side) = loopback_pair();
         h.serve_transport(server_side);
-        // Dims mismatch carries the wave id.
+        // Dims mismatch carries the wave id and is refused before any
+        // tensor is allocated.
         let r = call(
             &*client,
             &wire::drift_batch_request(9, &[4], &[Tensor::full(&[4], 1.0)], &[0.1]),
         );
-        assert_eq!(r.get("type").unwrap().as_str().unwrap(), "error");
-        assert_eq!(r.get("id").unwrap().as_usize().unwrap(), 9);
-        // Unknown op errors without one.
-        let r = call(&*client, &Json::obj(vec![("op", Json::str("frobnicate"))]));
-        assert_eq!(r.get("type").unwrap().as_str().unwrap(), "error");
-        assert!(r.get("id").is_none());
+        assert_eq!(r.op, op::ERROR);
+        assert_eq!(r.id, 9);
+        assert!(r.text().contains("match"), "{}", r.text());
+        // Unknown op errors with id 0 (no wave).
+        let r = call(&*client, &Frame::new(42, 0, Vec::new()));
+        assert_eq!(r.op, op::ERROR);
+        assert_eq!(r.id, 0);
+        assert!(r.text().contains("unknown op"), "{}", r.text());
+    }
+
+    #[test]
+    fn unsupported_wire_versions_are_refused_by_name() {
+        let h = host(1);
+        let (client, server_side) = loopback_pair();
+        h.serve_transport(server_side);
+        let mut hello = wire::hello_request();
+        hello.version = 1;
+        let r = call(&*client, &hello);
+        assert_eq!(r.op, op::ERROR);
+        assert!(r.text().contains("version 1"), "{}", r.text());
+        assert!(r.text().contains("v2"), "{}", r.text());
+        // The host hangs up after refusing: the connection is dead.
+        common_wait_closed(&*client);
+    }
+
+    /// The handler closes asynchronously; poll until the client sees it.
+    fn common_wait_closed(t: &dyn Transport) {
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while Instant::now() < deadline {
+            if t.recv_timeout(Duration::from_millis(10)).is_err() {
+                return;
+            }
+        }
+        panic!("connection not closed after version refusal");
     }
 
     #[test]
@@ -360,5 +766,52 @@ mod tests {
         assert!(c.connect().is_ok());
         drop(h);
         assert!(c.connect().is_err(), "a dropped host models host death");
+    }
+
+    #[test]
+    fn registrar_registers_and_pings_until_dropped() {
+        // A bare frame-speaking listener standing in for the scheduler.
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let server = std::thread::spawn(move || {
+            let (stream, _) = listener.accept().unwrap();
+            let t = TcpTransport::from_stream(stream).unwrap();
+            let m = t.recv_timeout(Duration::from_secs(5)).unwrap().unwrap();
+            assert_eq!(m.op, op::REGISTER);
+            let reg = wire::parse_register_request(&m).unwrap();
+            assert_eq!(reg.model, "gm-test");
+            assert_eq!(reg.dims, vec![8]);
+            assert_eq!(reg.engines, 1);
+            assert_eq!(reg.capacity, 4, "engines × max_batch");
+            assert_eq!(reg.advertise, "127.0.0.1:9999");
+            t.send(&wire::register_ok()).unwrap();
+            // The registrar keeps the lease warm with pings.
+            let deadline = Instant::now() + Duration::from_secs(10);
+            loop {
+                assert!(Instant::now() < deadline, "no keepalive ping arrived");
+                match t.recv_timeout(Duration::from_millis(100)) {
+                    Ok(Some(m)) if m.op == op::PING => {
+                        let _ = t.send(&wire::pong());
+                        break;
+                    }
+                    Ok(_) => {}
+                    Err(_) => panic!("registrar hung up before pinging"),
+                }
+            }
+            // Host drop closes the registration connection — the
+            // scheduler's deregistration signal.
+            let deadline = Instant::now() + Duration::from_secs(10);
+            loop {
+                assert!(Instant::now() < deadline, "registration connection never closed");
+                match t.recv_timeout(Duration::from_millis(100)) {
+                    Ok(_) => {}
+                    Err(_) => break,
+                }
+            }
+        });
+        let mut h = host(1);
+        h.register_with(&addr.to_string(), "127.0.0.1:9999");
+        drop(h);
+        server.join().unwrap();
     }
 }

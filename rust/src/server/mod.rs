@@ -41,11 +41,15 @@
 //! Multi-host serving: the serving host above can also farm drift
 //! evaluation out to **engine hosts** — separate processes (started with
 //! `chords engine-serve`, [`EngineHost`]) that expose a bank of physical
-//! engines over the same JSON-lines framing (`hello` / `ping` /
-//! `bank_stats` / `drift_batch` ops, see [`crate::workers::wire`]). The
-//! dispatcher attaches them via `--remote-bank host:port[=model]` and mixes
-//! them with local engines behind a failover bank
-//! ([`crate::workers::FailoverBank`]); placement never changes numerics.
+//! engines over length-prefixed binary frames (`hello` / `ping` /
+//! `bank_stats` / `drift_batch` ops with raw little-endian f32 tensor
+//! payloads, see [`crate::workers::wire`]). The dispatcher attaches hosts
+//! two ways: pinned at startup via `--remote-bank host:port[=model]`, or
+//! elastically — hosts started with `--register scheduler:port` dial the
+//! scheduler's [`RegistrationServer`] and join their model's failover bank
+//! ([`crate::workers::FailoverBank`]) while it serves traffic, leaving it
+//! again when their registration connection dies. Placement never changes
+//! numerics.
 
 mod engine_host;
 mod router;

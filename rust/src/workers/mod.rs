@@ -14,7 +14,8 @@
 //!   remote engine-host processes with health tracking, reconnection, and
 //!   requeue-on-failure across banks;
 //! - [`transport`]/[`wire`] — the engine-host protocol: in-process
-//!   loopback and TCP message transports and the bit-exact tensor codec;
+//!   loopback and TCP frame transports and the length-prefixed binary wire
+//!   format (raw little-endian f32 payloads — bit-exact by construction);
 //! - [`taskgraph`] — a K-core list scheduler used by the SRDS baseline's
 //!   pipelined-makespan accounting.
 

@@ -10,28 +10,36 @@
 //! *waves* (same `max_batch`/linger fusion discipline, read from a live
 //! [`BatchTuning`]) and executes each wave as one `drift_batch` RPC on an
 //! engine host over a [`Transport`]. Placement never changes numerics: the
-//! wire format is bit-exact ([`super::wire`]) and the host executes the
-//! same `drift_batch` contract, so remote results are bitwise identical to
-//! local ones (`rust/tests/remote_bank.rs`).
+//! binary frame format is bit-exact ([`super::wire`]) and the host
+//! executes the same `drift_batch` contract, so remote results are bitwise
+//! identical to local ones (`rust/tests/remote_bank.rs`).
 //!
 //! A [`FailoverBank`] composes members — any mix of one local
 //! [`EngineBank`] and remote banks — behind a single
-//! [`super::DriftBank`] face. Each worker's [`FailoverEngine`] is placed
-//! on a member round-robin and sticks to it; when a member's wave fails
-//! (host death, send error, wave timeout), the in-flight requests are
-//! requeued onto the next healthy member and the dead bank's pump redials
-//! with exponential backoff. Because drifts are pure functions,
-//! re-executing a failed wave elsewhere is output-identical.
+//! [`super::DriftBank`] face. Membership is *elastic*: a
+//! [`FailoverControl`] handle can attach and detach remote members while
+//! the bank serves traffic, which is how scheduler-dial registration adds
+//! engine hosts without a restart. Each worker's [`FailoverEngine`] picks
+//! the healthy member minimizing `(engines placed + 1) × observed
+//! latency` — remote members are priced by their measured wave RTT
+//! (`remote_rtt_us`), local members by mean engine exec time, and members
+//! with no signal yet tie-break in round-robin order so cold sets still
+//! spread evenly. An engine sticks to its member until a wave fails (host
+//! death, send error, wave timeout); then its in-flight requests requeue
+//! onto the best surviving member and the dead bank's pump redials with
+//! exponential backoff. Because drifts are pure functions, re-executing a
+//! failed wave elsewhere is output-identical.
 
 use super::batcher::{BatchTuning, DriftBank, DriftRequest, EngineBank};
 use super::transport::{Connector, Transport};
-use super::wire;
+use super::wire::{self, op};
 use crate::engine::{DriftEngine, EngineFactory};
 use crate::metrics::{BatchStats, RemoteBankStats};
 use crate::tensor::Tensor;
 use crate::util::json::Json;
 use anyhow::{anyhow, bail, Result};
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender, TryRecvError};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
@@ -86,7 +94,8 @@ struct RemoteShared {
     dims: Vec<usize>,
     /// Connected and handshaken; flipped false the moment a wave fails.
     healthy: AtomicBool,
-    /// Permanent failure (dims mismatch at handshake): never redialled.
+    /// Permanent failure (dims/model/protocol mismatch at handshake):
+    /// never redialled.
     poisoned: AtomicBool,
     stop: AtomicBool,
     /// Requests accepted but not yet answered or disposed — the
@@ -165,10 +174,10 @@ impl RemoteBank {
         self.shared.healthy.load(Ordering::Relaxed)
     }
 
-    /// Permanently disabled by a handshake mismatch (wrong model or dims).
-    /// A poisoned bank never becomes healthy again, so a failover set made
-    /// entirely of poisoned members fails jobs fast instead of waiting out
-    /// the redial timeout.
+    /// Permanently disabled by a handshake mismatch (wrong model, dims, or
+    /// wire protocol). A poisoned bank never becomes healthy again, so a
+    /// failover set made entirely of poisoned members fails jobs fast
+    /// instead of waiting out the redial timeout.
     pub fn poisoned(&self) -> bool {
         self.shared.poisoned.load(Ordering::Relaxed)
     }
@@ -318,8 +327,10 @@ fn dispose(wave: Vec<DriftRequest>, shared: &RemoteShared) {
     // Dropping the requests drops their reply senders.
 }
 
-/// Dial + `hello` handshake. A dims mismatch poisons the bank (the host
-/// serves a different model — redialling cannot fix it).
+/// Dial + `hello` handshake. Permanent mismatches poison the bank: wrong
+/// dims or model (the host serves a different preset), a wire-version the
+/// host refuses, or a peer speaking the legacy v1 JSON-line protocol —
+/// redialling cannot fix any of them.
 fn establish(
     connector: &dyn Connector,
     opts: &RemoteBankOpts,
@@ -338,38 +349,67 @@ fn establish(
             t.close();
             bail!("hello handshake with '{}' timed out", shared.label);
         }
-        let Some(msg) = t.recv_timeout(left.min(PUMP_TICK))? else { continue };
-        if msg.get("type").and_then(|v| v.as_str()) != Some("hello") {
-            continue; // stray message from a previous connection's buffers
-        }
-        let dims: Vec<usize> = msg
-            .get("dims")
-            .and_then(|d| d.as_arr())
-            .map(|a| a.iter().filter_map(|v| v.as_usize()).collect())
-            .unwrap_or_default();
-        if dims != shared.dims {
-            shared.poisoned.store(true, Ordering::Relaxed);
-            t.close();
-            bail!(
-                "engine host '{}' serves dims {dims:?}, expected {:?} — bank poisoned",
-                shared.label,
-                shared.dims
-            );
-        }
-        if let Some(want) = &opts.expect_model {
-            let got = msg.get("model").and_then(|v| v.as_str()).unwrap_or("");
-            if got != want {
-                shared.poisoned.store(true, Ordering::Relaxed);
+        let msg = match t.recv_timeout(left.min(PUMP_TICK)) {
+            Ok(Some(m)) => m,
+            Ok(None) => continue,
+            Err(e) => {
+                if e.to_string().contains("legacy JSON-line") {
+                    shared.poisoned.store(true, Ordering::Relaxed);
+                }
                 t.close();
-                bail!(
-                    "engine host '{}' serves model '{got}', expected '{want}' — bank poisoned",
-                    shared.label
-                );
+                return Err(e);
             }
+        };
+        match msg.op {
+            op::HELLO_OK => {
+                if msg.version != wire::VERSION {
+                    shared.poisoned.store(true, Ordering::Relaxed);
+                    t.close();
+                    bail!(
+                        "engine host '{}' speaks wire v{}, this build requires v{} — bank poisoned",
+                        shared.label,
+                        msg.version,
+                        wire::VERSION
+                    );
+                }
+                let hello = wire::parse_hello_response(&msg)
+                    .map_err(|e| anyhow!("bad hello from '{}': {e}", shared.label))?;
+                if hello.dims != shared.dims {
+                    shared.poisoned.store(true, Ordering::Relaxed);
+                    t.close();
+                    bail!(
+                        "engine host '{}' serves dims {:?}, expected {:?} — bank poisoned",
+                        shared.label,
+                        hello.dims,
+                        shared.dims
+                    );
+                }
+                if let Some(want) = &opts.expect_model {
+                    if &hello.model != want {
+                        shared.poisoned.store(true, Ordering::Relaxed);
+                        t.close();
+                        bail!(
+                            "engine host '{}' serves model '{}', expected '{want}' — bank poisoned",
+                            shared.label,
+                            hello.model
+                        );
+                    }
+                }
+                shared.remote_engines.store(hello.engines, Ordering::Relaxed);
+                return Ok(t);
+            }
+            op::ERROR => {
+                let m = msg.text();
+                if m.contains("version") {
+                    // The host refused our protocol version; a redial
+                    // cannot change what we speak.
+                    shared.poisoned.store(true, Ordering::Relaxed);
+                }
+                t.close();
+                bail!("handshake with '{}' refused: {m}", shared.label);
+            }
+            _ => {} // stray frame from a previous connection's buffers
         }
-        let engines = msg.get("engines").and_then(|v| v.as_usize()).unwrap_or(0);
-        shared.remote_engines.store(engines, Ordering::Relaxed);
-        return Ok(t);
     }
 }
 
@@ -409,33 +449,28 @@ fn run_wave(
             let Some(msg) = t.recv_timeout(left.min(Duration::from_millis(50)))? else {
                 continue;
             };
-            match msg.get("type").and_then(|v| v.as_str()) {
-                Some("drift_batch") => {
-                    let t_de = Instant::now();
-                    let (got_id, outs) = wire::parse_drift_batch_response(&msg, &shared.dims)
-                        .map_err(|e| anyhow!("bad wave reply from '{}': {e}", shared.label))?;
-                    if got_id != id {
+            match msg.op {
+                op::DRIFT_BATCH_REPLY => {
+                    if msg.id != id {
                         continue; // stale reply from a pre-failure wave
                     }
+                    let t_de = Instant::now();
+                    let outs = wire::parse_drift_batch_response(&msg, &shared.dims)
+                        .map_err(|e| anyhow!("bad wave reply from '{}': {e}", shared.label))?;
                     if outs.len() != n {
                         bail!("wave {id}: host answered {} of {n} items", outs.len());
                     }
                     ser_us += t_de.elapsed().as_micros() as u64;
                     return Ok((outs, ser_us));
                 }
-                Some("error") => {
-                    let for_us =
-                        msg.get("id").and_then(|v| v.as_f64()).map(|v| v as u64) == Some(id)
-                            || msg.get("id").is_none();
-                    if for_us {
-                        let m = msg
-                            .get("message")
-                            .and_then(|v| v.as_str())
-                            .unwrap_or("unknown host error");
-                        bail!("wave {id} failed on '{}': {m}", shared.label);
+                op::ERROR => {
+                    // Header id 0 = "no specific wave" (live ids start at
+                    // 1), so a connection-level error also fails us.
+                    if msg.id == id || msg.id == 0 {
+                        bail!("wave {id} failed on '{}': {}", shared.label, msg.text());
                     }
                 }
-                _ => {} // pong / stray hello: ignore
+                _ => {} // pong / stray hello_ok: ignore
             }
         }
     })();
@@ -563,11 +598,34 @@ impl Member {
             Member::Remote(r) => r.poisoned(),
         }
     }
+
+    /// Observed per-wave latency in µs (0.0 = no signal yet): measured
+    /// wave RTT for remote members, mean engine exec time for local ones.
+    fn latency_us(&self) -> f64 {
+        match self {
+            Member::Local { stats, .. } => stats.mean_exec_us(),
+            Member::Remote(r) => r.rstats().mean_rtt_us(),
+        }
+    }
+}
+
+/// One failover-set member plus its placement bookkeeping.
+struct MemberSlot {
+    /// Stable id — engines track their sticky member by id, so membership
+    /// edits (elastic attach/detach) can never redirect an engine to an
+    /// unrelated member that happened to reuse a vector index.
+    id: u64,
+    inner: Member,
+    /// Worker engines currently sticky on this member.
+    placed: AtomicUsize,
 }
 
 struct FailoverShared {
-    members: Vec<Member>,
-    /// Round-robin engine placement across members.
+    /// Live members. Mutated by [`FailoverControl`]; readers snapshot
+    /// under the lock and work on clones, so waves never hold it.
+    members: Mutex<Vec<Arc<MemberSlot>>>,
+    next_member_id: AtomicU64,
+    /// Tie-break rotation for placement when latency signals are equal.
     next: AtomicUsize,
     dims: Vec<usize>,
     name: String,
@@ -576,11 +634,35 @@ struct FailoverShared {
     tuning: Option<Arc<BatchTuning>>,
 }
 
+/// Pick the healthy member minimizing `(placed + 1) × latency`, scanning
+/// in round-robin order from a rotating start so exact ties (e.g. a cold
+/// set with no latency signal) spread engines evenly.
+fn pick_member(members: &[Arc<MemberSlot>], rr: &AtomicUsize) -> Option<Arc<MemberSlot>> {
+    let healthy: Vec<&Arc<MemberSlot>> =
+        members.iter().filter(|m| m.inner.healthy()).collect();
+    if healthy.is_empty() {
+        return None;
+    }
+    let start = rr.fetch_add(1, Ordering::Relaxed) % healthy.len();
+    let mut best: Option<(&Arc<MemberSlot>, f64)> = None;
+    for off in 0..healthy.len() {
+        let m = healthy[(start + off) % healthy.len()];
+        let lat = m.inner.latency_us().max(1.0);
+        let score = (m.placed.load(Ordering::Relaxed) + 1) as f64 * lat;
+        if best.map_or(true, |(_, s)| score < s) {
+            best = Some((m, score));
+        }
+    }
+    best.map(|(m, _)| m.clone())
+}
+
 /// A set of engine banks — at most one local [`EngineBank`] plus any
 /// number of [`RemoteBank`]s — served as one [`DriftBank`]. Worker engines
-/// are spread round-robin across healthy members and fail over between
-/// them; the dispatcher builds one per model that has remote banks
-/// configured, so local and remote capacity mix transparently.
+/// are placed on the healthy member with the best `(placed + 1) ×
+/// observed latency` score and fail over between members; the dispatcher
+/// builds one per model that has remote capacity configured or
+/// registered, so local and remote engines mix transparently. Members can
+/// be attached and detached live through [`FailoverBank::controller`].
 pub struct FailoverBank {
     shared: Arc<FailoverShared>,
     /// Keeps the local physical engines alive; members only borrow its
@@ -633,9 +715,18 @@ impl FailoverBank {
             });
         }
         members.extend(remotes.into_iter().map(Member::Remote));
+        let slots: Vec<Arc<MemberSlot>> = members
+            .into_iter()
+            .enumerate()
+            .map(|(i, inner)| {
+                Arc::new(MemberSlot { id: i as u64, inner, placed: AtomicUsize::new(0) })
+            })
+            .collect();
+        let next_member_id = AtomicU64::new(slots.len() as u64);
         Ok(FailoverBank {
             shared: Arc::new(FailoverShared {
-                members,
+                members: Mutex::new(slots),
+                next_member_id,
                 next: AtomicUsize::new(0),
                 dims,
                 name,
@@ -647,9 +738,9 @@ impl FailoverBank {
         })
     }
 
-    /// Member count (local + remote).
+    /// Current member count (local + remote).
     pub fn members(&self) -> usize {
-        self.shared.members.len()
+        self.shared.members.lock().unwrap().len()
     }
 
     /// The set-level counters: `failovers` increments every time a wave's
@@ -660,7 +751,99 @@ impl FailoverBank {
 
     /// Per-member health, in member order (local first when present).
     pub fn member_health(&self) -> Vec<bool> {
-        self.shared.members.iter().map(|m| m.healthy()).collect()
+        self.shared.members.lock().unwrap().iter().map(|m| m.inner.healthy()).collect()
+    }
+
+    /// A handle for editing this set's membership while it serves traffic
+    /// — the attach point for scheduler-dial host registration. The handle
+    /// stays valid after the bank itself moves into a core pool.
+    pub fn controller(&self) -> FailoverControl {
+        FailoverControl { shared: self.shared.clone() }
+    }
+}
+
+/// Live membership control over a [`FailoverBank`] (cheaply cloneable).
+/// Obtained from [`FailoverBank::controller`] before the bank is handed to
+/// a pool; used by the dispatcher's host registry to attach engine hosts
+/// the moment they register and detach them when they disconnect.
+#[derive(Clone)]
+pub struct FailoverControl {
+    shared: Arc<FailoverShared>,
+}
+
+impl FailoverControl {
+    /// Latent dims every member of the set must serve.
+    pub fn dims(&self) -> Vec<usize> {
+        self.shared.dims.clone()
+    }
+
+    /// Attach a new remote member. The bank dials in the background (the
+    /// member reports unhealthy until its handshake lands) and new waves
+    /// start weighing it immediately. Refuses dims mismatches and
+    /// duplicate labels. Returns the new member's stable id.
+    pub fn add_remote(
+        &self,
+        connector: Arc<dyn Connector>,
+        dims: Vec<usize>,
+        opts: RemoteBankOpts,
+    ) -> Result<u64> {
+        if dims != self.shared.dims {
+            bail!(
+                "cannot attach '{}': serves dims {dims:?}, failover set wants {:?}",
+                connector.label(),
+                self.shared.dims
+            );
+        }
+        let label = connector.label();
+        let mut members = self.shared.members.lock().unwrap();
+        if members
+            .iter()
+            .any(|m| matches!(&m.inner, Member::Remote(r) if r.label() == label))
+        {
+            bail!("remote bank '{label}' is already a member");
+        }
+        let stats = BatchStats::with_parent(self.shared.stats.clone());
+        let rstats = RemoteBankStats::new();
+        let bank = match &self.shared.tuning {
+            Some(t) => {
+                RemoteBank::connect_with_tuning(connector, dims, opts, t.clone(), stats, rstats)
+            }
+            None => RemoteBank::connect(connector, dims, opts, stats, rstats),
+        };
+        let id = self.shared.next_member_id.fetch_add(1, Ordering::Relaxed);
+        members.push(Arc::new(MemberSlot {
+            id,
+            inner: Member::Remote(Arc::new(bank)),
+            placed: AtomicUsize::new(0),
+        }));
+        Ok(id)
+    }
+
+    /// Detach the remote member with this label (e.g. `tcp:host:port`).
+    /// Engines sticky on it re-place on the next wave; its pump shuts down
+    /// once in-flight handles drain. Returns whether a member was removed.
+    pub fn remove_remote(&self, label: &str) -> bool {
+        let mut members = self.shared.members.lock().unwrap();
+        let before = members.len();
+        members.retain(|m| match &m.inner {
+            Member::Remote(r) => r.label() != label,
+            Member::Local { .. } => true,
+        });
+        members.len() != before
+    }
+
+    /// Labels of the current remote members.
+    pub fn remote_labels(&self) -> Vec<String> {
+        self.shared
+            .members
+            .lock()
+            .unwrap()
+            .iter()
+            .filter_map(|m| match &m.inner {
+                Member::Remote(r) => Some(r.label().to_string()),
+                Member::Local { .. } => None,
+            })
+            .collect()
     }
 }
 
@@ -680,8 +863,10 @@ impl DriftBank for FailoverBank {
     fn engines(&self) -> usize {
         self.shared
             .members
+            .lock()
+            .unwrap()
             .iter()
-            .map(|m| match m {
+            .map(|m| match &m.inner {
                 Member::Local { engines, .. } => *engines,
                 Member::Remote(r) => r.remote_engines(),
             })
@@ -689,15 +874,16 @@ impl DriftBank for FailoverBank {
     }
 
     fn snapshots(&self) -> Vec<Json> {
-        self.shared
-            .members
+        let members: Vec<Arc<MemberSlot>> = self.shared.members.lock().unwrap().clone();
+        members
             .iter()
-            .map(|m| match m {
+            .map(|slot| match &slot.inner {
                 Member::Local { engines, stats, .. } => Json::obj(vec![
                     ("bank", Json::str("local")),
                     ("kind", Json::str("local")),
                     ("bank_healthy", Json::Bool(true)),
                     ("engines", Json::num(*engines as f64)),
+                    ("placed", Json::num(slot.placed.load(Ordering::Relaxed) as f64)),
                     ("remote_rtt_us", Json::num(0.0)),
                     ("waves", Json::num(stats.batches.load(Ordering::Relaxed) as f64)),
                     ("wave_failures", Json::num(0.0)),
@@ -709,6 +895,7 @@ impl DriftBank for FailoverBank {
                         ("kind", Json::str("remote")),
                         ("bank_healthy", Json::Bool(r.healthy())),
                         ("engines", Json::num(r.remote_engines() as f64)),
+                        ("placed", Json::num(slot.placed.load(Ordering::Relaxed) as f64)),
                         ("remote_rtt_us", Json::num(rs.mean_rtt_us())),
                         ("waves", Json::num(rs.waves.load(Ordering::Relaxed) as f64)),
                         (
@@ -722,68 +909,118 @@ impl DriftBank for FailoverBank {
     }
 }
 
-/// One worker's engine handle over a [`FailoverBank`]: sticky member,
-/// advancing (and counting a failover) whenever a wave fails.
+/// One worker's engine handle over a [`FailoverBank`]: latency-weighted
+/// sticky placement, advancing (and counting a failover) whenever a wave
+/// fails. Tracks its member by stable id so elastic membership edits are
+/// safe under it.
 struct FailoverEngine {
     shared: Arc<FailoverShared>,
-    member: usize,
-    /// Lazily-built client engines for local members, indexed by member.
-    local_clients: Vec<Option<Box<dyn DriftEngine>>>,
+    member_id: Option<u64>,
+    /// Lazily-built client engines for local members, keyed by member id.
+    local_clients: HashMap<u64, Box<dyn DriftEngine>>,
     name: String,
 }
 
 impl FailoverEngine {
+    /// Drop stickiness, balancing the member's `placed` count (no-op if
+    /// the member has already been detached).
+    fn release(&mut self) {
+        if let Some(id) = self.member_id.take() {
+            let members = self.shared.members.lock().unwrap();
+            if let Some(m) = members.iter().find(|m| m.id == id) {
+                m.placed.fetch_sub(1, Ordering::Relaxed);
+            }
+        }
+    }
+
     fn try_wave(&mut self, xs: &[Tensor], ts: &[f32]) -> Result<Vec<Tensor>> {
-        let n = self.shared.members.len();
         let t0 = Instant::now();
         loop {
-            let chosen = (0..n)
-                .map(|off| (self.member + off) % n)
-                .find(|&i| self.shared.members[i].healthy());
-            match chosen {
-                None => {
-                    // Handshake-poisoned members never recover, so an
-                    // all-poisoned set fails immediately; otherwise the
-                    // pumps keep redialling — wait for one to come back,
-                    // bounded so a dead fleet fails the job rather than
-                    // wedging its worker forever.
-                    if self.shared.members.iter().all(|m| m.poisoned()) {
-                        bail!(
-                            "{}: every engine bank is poisoned (model/dims handshake mismatch)",
-                            self.name
-                        );
-                    }
-                    if t0.elapsed() >= ALL_DEAD_TIMEOUT {
-                        bail!("{}: every engine bank is unreachable", self.name);
-                    }
-                    std::thread::sleep(Duration::from_millis(5));
+            let members: Vec<Arc<MemberSlot>> = self.shared.members.lock().unwrap().clone();
+            if members.is_empty() {
+                self.member_id = None;
+                if t0.elapsed() >= ALL_DEAD_TIMEOUT {
+                    bail!("{}: no member banks attached", self.name);
                 }
-                Some(i) => {
-                    self.member = i;
-                    let attempt = match &self.shared.members[i] {
-                        Member::Remote(r) => r.try_wave(xs, ts),
-                        Member::Local { factory, .. } => {
-                            if self.local_clients[i].is_none() {
-                                let client = factory
-                                    .create()
-                                    .expect("local bank client handles are infallible");
-                                self.local_clients[i] = Some(client);
-                            }
-                            Ok(self.local_clients[i].as_mut().unwrap().drift_batch(xs, ts))
+                std::thread::sleep(Duration::from_millis(5));
+                continue;
+            }
+            // Keep the sticky member while it exists and stays healthy.
+            let sticky = self
+                .member_id
+                .and_then(|id| members.iter().find(|m| m.id == id).cloned())
+                .filter(|m| m.inner.healthy());
+            let slot = match sticky {
+                Some(m) => m,
+                None => {
+                    self.release();
+                    match pick_member(&members, &self.shared.next) {
+                        Some(m) => {
+                            m.placed.fetch_add(1, Ordering::Relaxed);
+                            self.member_id = Some(m.id);
+                            m
                         }
-                    };
-                    match attempt {
-                        Ok(outs) => return Ok(outs),
-                        Err(_) => {
-                            // Requeue onto the next member; the failed
-                            // bank's pump is already redialling.
-                            self.shared.rstats.on_failover();
-                            self.member = (i + 1) % n;
+                        None => {
+                            // Handshake-poisoned members never recover, so
+                            // an all-poisoned set fails immediately;
+                            // otherwise the pumps keep redialling — wait
+                            // for one to come back, bounded so a dead
+                            // fleet fails the job rather than wedging its
+                            // worker forever.
+                            if members.iter().all(|m| m.inner.poisoned()) {
+                                bail!(
+                                    "{}: every engine bank is poisoned (model/dims handshake mismatch)",
+                                    self.name
+                                );
+                            }
+                            if t0.elapsed() >= ALL_DEAD_TIMEOUT {
+                                bail!("{}: every engine bank is unreachable", self.name);
+                            }
+                            std::thread::sleep(Duration::from_millis(5));
+                            continue;
                         }
                     }
+                }
+            };
+            let attempt = match &slot.inner {
+                Member::Remote(r) => r.try_wave(xs, ts),
+                Member::Local { factory, .. } => {
+                    use std::collections::hash_map::Entry;
+                    let client = match self.local_clients.entry(slot.id) {
+                        Entry::Occupied(e) => e.into_mut(),
+                        Entry::Vacant(e) => match factory.create() {
+                            Ok(c) => e.insert(c),
+                            Err(err) => {
+                                // A local bank that cannot even hand out
+                                // client handles is not coming back;
+                                // failing over to it forever would spin.
+                                self.release();
+                                return Err(anyhow!(
+                                    "{}: local engine build failed: {err:#}",
+                                    self.name
+                                ));
+                            }
+                        },
+                    };
+                    Ok(client.drift_batch(xs, ts))
+                }
+            };
+            match attempt {
+                Ok(outs) => return Ok(outs),
+                Err(_) => {
+                    // Re-place onto the best surviving member; the failed
+                    // bank's pump is already redialling.
+                    self.shared.rstats.on_failover();
+                    self.release();
                 }
             }
         }
+    }
+}
+
+impl Drop for FailoverEngine {
+    fn drop(&mut self) {
+        self.release();
     }
 }
 
@@ -823,12 +1060,12 @@ struct FailoverFactory {
 
 impl EngineFactory for FailoverFactory {
     fn create(&self) -> Result<Box<dyn DriftEngine>> {
-        let n = self.shared.members.len();
-        let member = self.shared.next.fetch_add(1, Ordering::Relaxed) % n;
+        // Placement is deferred to the first wave, when health and
+        // latency signals exist; a fresh engine carries no member yet.
         Ok(Box::new(FailoverEngine {
             shared: self.shared.clone(),
-            member,
-            local_clients: (0..n).map(|_| None).collect(),
+            member_id: None,
+            local_clients: HashMap::new(),
             name: self.shared.name.clone(),
         }))
     }

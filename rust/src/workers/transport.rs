@@ -1,11 +1,11 @@
 //! Message transports for the engine-host protocol: in-process loopback
 //! for tests, TCP for production, plus a fault-injection wrapper.
 //!
-//! A [`Transport`] is one bidirectional connection carrying JSON-line
-//! messages ([`super::wire`]). Both the client ([`super::remote`]) and the
-//! host ([`crate::server::EngineHost`]) are written against the trait, so
-//! every behavior — wave fusion, failover, reconnection, the host's
-//! concurrent wave execution — is exercised hermetically over
+//! A [`Transport`] is one bidirectional connection carrying binary
+//! protocol frames ([`super::wire`]). Both the client ([`super::remote`])
+//! and the host ([`crate::server::EngineHost`]) are written against the
+//! trait, so every behavior — wave fusion, failover, reconnection, the
+//! host's concurrent wave execution — is exercised hermetically over
 //! [`loopback_pair`] and only one smoke test needs a real socket.
 //!
 //! Semantics shared by all implementations:
@@ -17,26 +17,33 @@
 //! - `close` kills both directions: the peer's next `send`/`recv` fails.
 //!   This models connection death, which is exactly what the failover
 //!   machinery needs to observe.
+//!
+//! The TCP implementation writes each frame's header and payload with one
+//! vectored write (no concatenation copy) and enforces the frame payload
+//! cap at header-decode time, before any allocation. A peer that is not
+//! speaking frames at all — e.g. a legacy v1 JSON-line client, whose
+//! every message starts with `{` — is detected from the first byte and
+//! rejected with a targeted error.
 
-use crate::util::json::Json;
+use super::wire::{self, Frame};
 use anyhow::{anyhow, bail, Result};
-use std::io::{BufRead, BufReader, Write};
+use std::io::{IoSlice, Read, Write};
 use std::net::{Shutdown, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
-/// One bidirectional JSON-line connection (see the module docs for the
+/// One bidirectional frame connection (see the module docs for the
 /// contract shared by the loopback and TCP implementations).
 pub trait Transport: Send + Sync {
-    /// Write one message. Thread-safe; fails once the connection is closed.
-    fn send(&self, msg: &Json) -> Result<()>;
+    /// Write one frame. Thread-safe; fails once the connection is closed.
+    fn send(&self, msg: &Frame) -> Result<()>;
 
-    /// Block up to `timeout` for the next message. `Ok(None)` = timed out
+    /// Block up to `timeout` for the next frame. `Ok(None)` = timed out
     /// with the connection still healthy; `Err` = connection closed/failed.
     /// Single consumer: concurrent callers serialize on an internal lock.
-    fn recv_timeout(&self, timeout: Duration) -> Result<Option<Json>>;
+    fn recv_timeout(&self, timeout: Duration) -> Result<Option<Frame>>;
 
     /// Close both directions, failing the peer's pending and future I/O.
     fn close(&self);
@@ -61,8 +68,8 @@ pub trait Connector: Send + Sync {
 /// side's [`Transport::close`] kills the pair (connection-death semantics,
 /// matching TCP). The default transport for tests.
 pub struct LoopbackTransport {
-    tx: Mutex<Option<Sender<Json>>>,
-    rx: Mutex<Receiver<Json>>,
+    tx: Mutex<Option<Sender<Frame>>>,
+    rx: Mutex<Receiver<Frame>>,
     /// Shared by both sides: one `close` fails the whole connection.
     closed: Arc<AtomicBool>,
     side: &'static str,
@@ -89,7 +96,7 @@ pub fn loopback_pair() -> (Arc<LoopbackTransport>, Arc<LoopbackTransport>) {
 }
 
 impl Transport for LoopbackTransport {
-    fn send(&self, msg: &Json) -> Result<()> {
+    fn send(&self, msg: &Frame) -> Result<()> {
         if self.closed.load(Ordering::Relaxed) {
             bail!("{} closed", self.side);
         }
@@ -99,7 +106,7 @@ impl Transport for LoopbackTransport {
         }
     }
 
-    fn recv_timeout(&self, timeout: Duration) -> Result<Option<Json>> {
+    fn recv_timeout(&self, timeout: Duration) -> Result<Option<Frame>> {
         if self.closed.load(Ordering::Relaxed) {
             bail!("{} closed", self.side);
         }
@@ -127,15 +134,15 @@ impl Transport for LoopbackTransport {
 
 // ------------------------------------------------------------------ tcp
 
-/// [`Transport`] over a TCP stream: JSON lines with `TCP_NODELAY` (waves
-/// are small and RTT-sensitive) and read timeouts mapped to the bounded
-/// `recv_timeout` contract.
+/// [`Transport`] over a TCP stream: length-prefixed binary frames with
+/// `TCP_NODELAY` (waves are small and RTT-sensitive) and read timeouts
+/// mapped to the bounded `recv_timeout` contract.
 pub struct TcpTransport {
     writer: Mutex<TcpStream>,
-    /// Reader plus a persistent partial-line buffer — a read timeout may
-    /// land mid-line and already-consumed bytes must survive to the next
-    /// attempt (same discipline as the serving connection handler).
-    reader: Mutex<(BufReader<TcpStream>, String)>,
+    /// Reader plus a persistent byte buffer — a read timeout may land
+    /// mid-frame and already-consumed bytes must survive to the next
+    /// attempt.
+    reader: Mutex<(TcpStream, Vec<u8>)>,
     /// Independent handle used only to shut the socket down from `close`.
     shutdown: TcpStream,
     closed: AtomicBool,
@@ -146,8 +153,26 @@ pub struct TcpTransport {
 /// full send buffer would wedge the pump thread forever — `wave_timeout`
 /// only bounds the receive side, in the same thread, *after* send returns.
 /// A timed-out (possibly partial) write fails the wave; the caller closes
-/// the connection, so a torn line can never be followed by more data.
+/// the connection, so a torn frame can never be followed by more data.
 const TCP_WRITE_TIMEOUT: Duration = Duration::from_secs(5);
+
+/// Fail fast on a peer that is not speaking frames: corruption (and the
+/// legacy JSON-line protocol) is detectable from the very first bytes,
+/// before a full header arrives.
+fn check_magic(buf: &[u8], peer: &str) -> Result<()> {
+    let n = buf.len().min(wire::MAGIC.len());
+    if n > 0 && buf[..n] != wire::MAGIC[..n] {
+        if buf[0] == b'{' {
+            bail!(
+                "peer {peer} speaks the legacy JSON-line engine-host protocol; \
+                 this build requires binary frames (v{})",
+                wire::VERSION
+            );
+        }
+        bail!("bad frame magic from {peer}: {:02x?}", &buf[..n]);
+    }
+    Ok(())
+}
 
 impl TcpTransport {
     /// Wrap an accepted or connected stream.
@@ -162,7 +187,7 @@ impl TcpTransport {
         let shutdown = stream.try_clone()?;
         Ok(TcpTransport {
             writer: Mutex::new(writer),
-            reader: Mutex::new((BufReader::new(stream), String::new())),
+            reader: Mutex::new((stream, Vec::new())),
             shutdown,
             closed: AtomicBool::new(false),
             peer,
@@ -177,43 +202,63 @@ impl TcpTransport {
 }
 
 impl Transport for TcpTransport {
-    fn send(&self, msg: &Json) -> Result<()> {
+    fn send(&self, msg: &Frame) -> Result<()> {
         if self.closed.load(Ordering::Relaxed) {
             bail!("tcp transport to {} closed", self.peer);
         }
+        let header = msg.header();
         let mut w = self.writer.lock().unwrap();
-        w.write_all(msg.to_string_compact().as_bytes())?;
-        w.write_all(b"\n")?;
+        // One vectored write covers the whole frame in the common case;
+        // the loop completes rare partial writes without copying header
+        // and payload into a contiguous buffer first.
+        let total = header.len() + msg.payload.len();
+        let mut written = 0usize;
+        while written < total {
+            let bufs = if written < header.len() {
+                [IoSlice::new(&header[written..]), IoSlice::new(&msg.payload)]
+            } else {
+                [IoSlice::new(&msg.payload[written - header.len()..]), IoSlice::new(&[])]
+            };
+            let n = w.write_vectored(&bufs)?;
+            if n == 0 {
+                bail!("tcp write to {} made no progress", self.peer);
+            }
+            written += n;
+        }
         Ok(())
     }
 
-    fn recv_timeout(&self, timeout: Duration) -> Result<Option<Json>> {
+    fn recv_timeout(&self, timeout: Duration) -> Result<Option<Frame>> {
         if self.closed.load(Ordering::Relaxed) {
             bail!("tcp transport to {} closed", self.peer);
         }
         let deadline = Instant::now() + timeout;
         let mut guard = self.reader.lock().unwrap();
-        let (reader, buf) = &mut *guard;
+        let (stream, buf) = &mut *guard;
         loop {
+            check_magic(buf, &self.peer)?;
+            if buf.len() >= wire::HEADER_LEN {
+                // The header decode enforces the payload cap before any
+                // allocation happens.
+                let h = wire::decode_header(buf)
+                    .map_err(|e| anyhow!("bad frame from {}: {e}", self.peer))?;
+                let need = wire::HEADER_LEN + h.payload_len as usize;
+                if buf.len() >= need {
+                    let payload = buf[wire::HEADER_LEN..need].to_vec();
+                    buf.drain(..need);
+                    return Ok(Some(Frame { version: h.version, op: h.op, id: h.id, payload }));
+                }
+            }
             let left = deadline.saturating_duration_since(Instant::now());
             if left.is_zero() {
                 return Ok(None);
             }
             // Read timeouts of zero are rejected by the socket API.
-            reader.get_ref().set_read_timeout(Some(left.max(Duration::from_millis(1))))?;
-            match reader.read_line(buf) {
+            stream.set_read_timeout(Some(left.max(Duration::from_millis(1))))?;
+            let mut chunk = [0u8; 16 * 1024];
+            match stream.read(&mut chunk) {
                 Ok(0) => bail!("tcp peer {} hung up", self.peer),
-                Ok(_) if buf.ends_with('\n') => {
-                    let line = std::mem::take(buf);
-                    let line = line.trim();
-                    if line.is_empty() {
-                        continue;
-                    }
-                    return Json::parse(line)
-                        .map(Some)
-                        .map_err(|e| anyhow!("bad message from {}: {e}", self.peer));
-                }
-                Ok(_) => continue, // partial line; keep accumulating
+                Ok(n) => buf.extend_from_slice(&chunk[..n]),
                 Err(e)
                     if matches!(
                         e.kind(),
@@ -241,7 +286,8 @@ impl Transport for TcpTransport {
 }
 
 /// [`Connector`] dialing a fixed `host:port` — the production path behind
-/// `--remote-bank` and `EngineBudget::remote`.
+/// `--remote-bank`, `EngineBudget::remote`, and the scheduler's dial-back
+/// to registered engine hosts.
 pub struct TcpConnector {
     addr: String,
 }
@@ -270,6 +316,7 @@ impl Connector for TcpConnector {
 /// scenarios are reproducible instead of timing-dependent.
 pub mod testutil {
     use super::*;
+    use crate::workers::wire::op;
     use std::collections::HashMap;
     use std::sync::atomic::AtomicU64;
 
@@ -279,7 +326,7 @@ pub mod testutil {
         /// The wave's `send` fails and the connection closes — the host
         /// became unreachable before the wave left.
         FailSend,
-        /// The wave's `send` reports success but the message is swallowed
+        /// The wave's `send` reports success but the frame is swallowed
         /// (packet loss); the connection stays up, so only the client's
         /// wave timeout can detect it.
         SwallowSend,
@@ -316,8 +363,8 @@ pub mod testutil {
     }
 
     impl Transport for FaultyTransport {
-        fn send(&self, msg: &Json) -> Result<()> {
-            if msg.get("op").and_then(|o| o.as_str()) == Some("drift_batch") {
+        fn send(&self, msg: &Frame) -> Result<()> {
+            if msg.op == op::DRIFT_BATCH {
                 let wave = self.waves.fetch_add(1, Ordering::Relaxed);
                 let fault = self.faults.lock().unwrap().remove(&wave);
                 if let Some(fault) = fault {
@@ -342,7 +389,7 @@ pub mod testutil {
             self.inner.send(msg)
         }
 
-        fn recv_timeout(&self, timeout: Duration) -> Result<Option<Json>> {
+        fn recv_timeout(&self, timeout: Duration) -> Result<Option<Frame>> {
             self.inner.recv_timeout(timeout)
         }
 
@@ -433,16 +480,17 @@ pub mod testutil {
 mod tests {
     use super::testutil::{Fault, FaultyTransport};
     use super::*;
+    use crate::workers::wire::op;
 
     #[test]
     fn loopback_delivers_both_directions() {
         let (a, b) = loopback_pair();
-        a.send(&Json::obj(vec![("op", Json::str("ping"))])).unwrap();
+        a.send(&wire::ping()).unwrap();
         let m = b.recv_timeout(Duration::from_millis(100)).unwrap().unwrap();
-        assert_eq!(m.get("op").unwrap().as_str().unwrap(), "ping");
-        b.send(&Json::obj(vec![("type", Json::str("pong"))])).unwrap();
+        assert_eq!(m.op, op::PING);
+        b.send(&wire::pong()).unwrap();
         let m = a.recv_timeout(Duration::from_millis(100)).unwrap().unwrap();
-        assert_eq!(m.get("type").unwrap().as_str().unwrap(), "pong");
+        assert_eq!(m.op, op::PONG);
     }
 
     #[test]
@@ -455,8 +503,8 @@ mod tests {
     fn loopback_close_fails_both_sides() {
         let (a, b) = loopback_pair();
         a.close();
-        assert!(a.send(&Json::Null).is_err());
-        assert!(b.send(&Json::Null).is_err());
+        assert!(a.send(&wire::ping()).is_err());
+        assert!(b.send(&wire::ping()).is_err());
         assert!(b.recv_timeout(Duration::from_millis(5)).is_err());
     }
 
@@ -468,17 +516,38 @@ mod tests {
             let (stream, _) = listener.accept().unwrap();
             let t = TcpTransport::from_stream(stream).unwrap();
             let m = t.recv_timeout(Duration::from_secs(2)).unwrap().unwrap();
-            t.send(&Json::obj(vec![("echo", m.get("n").unwrap().clone())])).unwrap();
+            t.send(&Frame::new(op::PONG, m.id, m.payload.clone())).unwrap();
             // Hold until the client closes so the client sees a clean EOF.
             let _ = t.recv_timeout(Duration::from_secs(2));
         });
         let c = TcpConnector::new(&addr.to_string());
         assert!(c.label().starts_with("tcp:"));
         let t = c.connect().unwrap();
-        t.send(&Json::obj(vec![("n", Json::num(5.0))])).unwrap();
+        // The id exercises the full u64 width over a real socket.
+        t.send(&Frame::new(op::PING, u64::MAX, vec![0xAB; 100])).unwrap();
         let m = t.recv_timeout(Duration::from_secs(2)).unwrap().unwrap();
-        assert_eq!(m.get("echo").unwrap().as_usize().unwrap(), 5);
+        assert_eq!(m.op, op::PONG);
+        assert_eq!(m.id, u64::MAX);
+        assert_eq!(m.payload, vec![0xAB; 100]);
         t.close();
+        server.join().unwrap();
+    }
+
+    #[test]
+    fn tcp_rejects_legacy_json_peer() {
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let server = std::thread::spawn(move || {
+            let (mut stream, _) = listener.accept().unwrap();
+            // A v1 peer opens with a JSON line, not a frame header.
+            stream.write_all(b"{\"op\":\"hello\"}\n").unwrap();
+            stream.flush().unwrap();
+            // Hold the socket open; the client must not need EOF to react.
+            std::thread::sleep(Duration::from_millis(200));
+        });
+        let t = TcpTransport::connect(&addr.to_string()).unwrap();
+        let err = t.recv_timeout(Duration::from_secs(2)).unwrap_err();
+        assert!(err.to_string().contains("legacy"), "{err}");
         server.join().unwrap();
     }
 
@@ -489,16 +558,15 @@ mod tests {
             a.clone() as Arc<dyn Transport>,
             vec![(1, Fault::SwallowSend), (2, Fault::CloseAfterSend)],
         );
-        let wave =
-            |id: f64| Json::obj(vec![("op", Json::str("drift_batch")), ("id", Json::num(id))]);
+        let wave = |id: u64| Frame::new(op::DRIFT_BATCH, id, Vec::new());
         // Wave 0: clean. Wave 1: swallowed. Wave 2: delivered, then closed.
-        f.send(&wave(0.0)).unwrap();
-        f.send(&wave(1.0)).unwrap();
-        f.send(&wave(2.0)).unwrap();
+        f.send(&wave(0)).unwrap();
+        f.send(&wave(1)).unwrap();
+        f.send(&wave(2)).unwrap();
         let got0 = b.recv_timeout(Duration::from_millis(100)).unwrap().unwrap();
-        assert_eq!(got0.get("id").unwrap().as_usize().unwrap(), 0);
+        assert_eq!(got0.id, 0);
         let got2 = b.recv_timeout(Duration::from_millis(100)).unwrap().unwrap();
-        assert_eq!(got2.get("id").unwrap().as_usize().unwrap(), 2, "wave 1 swallowed");
+        assert_eq!(got2.id, 2, "wave 1 swallowed");
         assert!(b.recv_timeout(Duration::from_millis(5)).is_err(), "closed after wave 2");
         assert_eq!(f.waves_sent(), 3);
     }
@@ -507,7 +575,7 @@ mod tests {
     fn non_wave_messages_bypass_fault_scripts() {
         let (a, b) = loopback_pair();
         let f = FaultyTransport::wrap(a as Arc<dyn Transport>, vec![(0, Fault::FailSend)]);
-        f.send(&Json::obj(vec![("op", Json::str("hello"))])).unwrap();
+        f.send(&wire::hello_request()).unwrap();
         assert!(b.recv_timeout(Duration::from_millis(100)).unwrap().is_some());
     }
 }

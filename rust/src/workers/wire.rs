@@ -1,97 +1,302 @@
-//! Wire format of the engine-host protocol (JSON lines, shared with the
-//! serving protocol's framing).
+//! Wire format of the engine-host protocol: length-prefixed binary
+//! frames (protocol version 2).
 //!
 //! A remote engine bank moves drift evaluations between hosts, and the
 //! serving stack's contract is that placement must never change numerics:
 //! a wave executed on a remote host has to be **bitwise identical** to the
 //! same wave executed in-process (`rust/tests/remote_bank.rs` pins this
-//! across the transport boundary). Floats therefore never pass through a
-//! decimal round-trip: tensor payloads are hex-encoded little-endian f32
-//! bit patterns (8 hex chars per element), exact by construction for every
-//! value including negative zero, subnormals, infinities, and NaNs. Step
-//! times `t` ride as JSON numbers — an f32 widens to f64 exactly and the
-//! JSON writer prints round-trip-exact doubles.
+//! across the transport boundary). Tensor payloads are therefore raw
+//! little-endian f32 bit patterns — exact by construction for every value
+//! including negative zero, subnormals, infinities, and NaNs, and 4 bytes
+//! per element instead of the 9+ the old JSON-hex codec paid.
 //!
-//! Ops (client → host, one JSON object per line):
+//! Every frame is a fixed 20-byte header followed by `payload len` bytes:
 //!
-//! | op            | reply type    | purpose                                |
-//! |---------------|---------------|----------------------------------------|
-//! | `hello`       | `hello`       | model name/dims/engine count handshake |
-//! | `ping`        | `pong`        | liveness probe                         |
-//! | `bank_stats`  | `bank_stats`  | host-side fusion counters              |
-//! | `drift_batch` | `drift_batch` | execute one wave of drift evaluations  |
+//! | offset | size | field                                                |
+//! |--------|------|------------------------------------------------------|
+//! | 0      | 4    | magic `"CHOR"` (`0x43 0x48 0x4F 0x52`)               |
+//! | 4      | 1    | protocol version ([`VERSION`] = 2)                   |
+//! | 5      | 1    | opcode (see [`op`])                                  |
+//! | 6      | 2    | flags (reserved; zero on write, ignored on read)     |
+//! | 8      | 8    | wave id, native `u64` little-endian                  |
+//! | 16     | 4    | payload length, `u32` little-endian ([`MAX_PAYLOAD`])|
 //!
-//! Failures reply `{"type":"error","id":…,"message":…}`; the `id` echoes
-//! the request's wave id so a client can fail exactly the wave that died.
+//! Ops (requests flow client → host; each names its reply op):
+//!
+//! | op            | code | payload                          | reply                 |
+//! |---------------|------|----------------------------------|-----------------------|
+//! | `hello`       | 1    | empty                            | `hello_ok` (2)        |
+//! | `ping`        | 3    | empty                            | `pong` (4)            |
+//! | `bank_stats`  | 5    | empty                            | `bank_stats_reply` (6)|
+//! | `drift_batch` | 7    | binary wave (below)              | `drift_batch_reply` (8)|
+//! | `register`    | 10   | JSON registration                | `register_ok` (11)    |
+//! | `error`       | 9    | UTF-8 message                    | —                     |
+//!
+//! Control payloads (`hello_ok`, `bank_stats_reply`, `register`) are
+//! compact JSON objects — they are rare, tiny, and benefit from being
+//! self-describing. The hot path is `drift_batch`, whose payload is pure
+//! binary: `u32 ndims | ndims×u32 dims | u32 count | count×f32 ts |
+//! count×numel×f32 xs`, all little-endian; the reply carries `u32 count |
+//! count×numel×f32 outs`. Wave ids ride in the header as native `u64` —
+//! never through a JSON `f64`, which silently loses precision above 2^53.
+//!
+//! Version negotiation happens at the `hello`/`register` handshake: a host
+//! receiving a frame with a version it does not speak replies an `error`
+//! frame naming the versions, and a peer that is not speaking frames at
+//! all (the legacy v1 JSON-line protocol starts every message with `{`) is
+//! detected from the first bytes and rejected with a clear error. Failures
+//! reply an `error` frame whose header id echoes the request's wave id so
+//! a client can fail exactly the wave that died; id 0 means "no specific
+//! wave" (live wave ids start at 1).
+//!
+//! The v1 JSON-hex codec survives as [`legacy`] — only so
+//! `bench_serving` part 6 can price the two codecs against each other.
 
 use crate::tensor::Tensor;
 use crate::util::json::Json;
-use std::fmt::Write as _;
 
-/// Encode a tensor's payload as lowercase hex of little-endian f32 bit
-/// patterns — 8 chars per element, bitwise exact for every value. Writes
-/// straight into one preallocated buffer: this is the per-wave
-/// serialization hot path the `ser_us` counter prices.
-pub fn encode_tensor(t: &Tensor) -> String {
-    let mut s = String::with_capacity(t.numel() * 8);
-    for v in t.data() {
-        let _ = write!(s, "{:08x}", v.to_bits());
-    }
-    s
+/// First four bytes of every frame.
+pub const MAGIC: [u8; 4] = *b"CHOR";
+/// Protocol version this build speaks (and the only one it accepts).
+pub const VERSION: u8 = 2;
+/// Fixed frame header size in bytes.
+pub const HEADER_LEN: usize = 20;
+/// Hard cap on one frame's payload: a hostile or corrupt length field can
+/// never make a peer allocate unbounded memory. 64 MiB comfortably fits
+/// the largest supported wave (`MAX_DIMS` dims × batch cap).
+pub const MAX_PAYLOAD: u32 = 64 * 1024 * 1024;
+/// Most dims entries a wave's tensor shape may carry.
+pub const MAX_DIMS: usize = 8;
+
+/// Frame opcodes (header byte 5).
+pub mod op {
+    /// Client handshake probe; empty payload.
+    pub const HELLO: u8 = 1;
+    /// Host handshake reply; JSON `{name, dims, engines, model}`.
+    pub const HELLO_OK: u8 = 2;
+    /// Liveness probe; empty payload.
+    pub const PING: u8 = 3;
+    /// Liveness reply; empty payload.
+    pub const PONG: u8 = 4;
+    /// Host-side fusion counter request; empty payload.
+    pub const BANK_STATS: u8 = 5;
+    /// Fusion counter reply; JSON counters object.
+    pub const BANK_STATS_REPLY: u8 = 6;
+    /// Execute one wave of drift evaluations; binary wave payload.
+    pub const DRIFT_BATCH: u8 = 7;
+    /// Wave outputs; binary payload.
+    pub const DRIFT_BATCH_REPLY: u8 = 8;
+    /// Structured failure; UTF-8 message payload, header id = failed wave.
+    pub const ERROR: u8 = 9;
+    /// Engine host announcing itself to a scheduler; JSON registration.
+    pub const REGISTER: u8 = 10;
+    /// Scheduler accepting a registration; empty payload.
+    pub const REGISTER_OK: u8 = 11;
 }
 
-/// Decode [`encode_tensor`] output back into a tensor of shape `dims`.
-pub fn decode_tensor(dims: &[usize], hex: &str) -> Result<Tensor, String> {
-    let n: usize = dims.iter().product();
-    if hex.len() != n * 8 {
+/// Human-readable opcode name for logs and error replies.
+pub fn op_name(code: u8) -> &'static str {
+    match code {
+        op::HELLO => "hello",
+        op::HELLO_OK => "hello_ok",
+        op::PING => "ping",
+        op::PONG => "pong",
+        op::BANK_STATS => "bank_stats",
+        op::BANK_STATS_REPLY => "bank_stats_reply",
+        op::DRIFT_BATCH => "drift_batch",
+        op::DRIFT_BATCH_REPLY => "drift_batch_reply",
+        op::ERROR => "error",
+        op::REGISTER => "register",
+        op::REGISTER_OK => "register_ok",
+        _ => "unknown",
+    }
+}
+
+/// One protocol frame: the decoded header fields plus the raw payload.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Frame {
+    /// Protocol version from the header. [`Frame::new`] stamps
+    /// [`VERSION`]; receivers check it at the handshake and answer
+    /// mismatches with an `error` frame (version negotiation lives at the
+    /// application layer, not in the transport).
+    pub version: u8,
+    /// Opcode (see [`op`]).
+    pub op: u8,
+    /// Wave id; 0 for frames not tied to a wave.
+    pub id: u64,
+    /// Raw payload bytes (length ≤ [`MAX_PAYLOAD`]).
+    pub payload: Vec<u8>,
+}
+
+impl Frame {
+    /// A frame at the current [`VERSION`].
+    pub fn new(op: u8, id: u64, payload: Vec<u8>) -> Frame {
+        Frame { version: VERSION, op, id, payload }
+    }
+
+    /// A control frame whose payload is a compact JSON object.
+    pub fn control(op: u8, id: u64, body: &Json) -> Frame {
+        Frame::new(op, id, body.to_string_compact().into_bytes())
+    }
+
+    /// Parse the payload as JSON (control frames).
+    pub fn json(&self) -> Result<Json, String> {
+        let s = std::str::from_utf8(&self.payload)
+            .map_err(|_| format!("{} payload is not UTF-8", op_name(self.op)))?;
+        Json::parse(s).map_err(|e| format!("{} payload is not JSON: {e}", op_name(self.op)))
+    }
+
+    /// The payload as text (lossy UTF-8) — error messages.
+    pub fn text(&self) -> String {
+        String::from_utf8_lossy(&self.payload).into_owned()
+    }
+
+    /// Encode this frame's 20-byte header.
+    pub fn header(&self) -> [u8; HEADER_LEN] {
+        let mut h = [0u8; HEADER_LEN];
+        h[0..4].copy_from_slice(&MAGIC);
+        h[4] = self.version;
+        h[5] = self.op;
+        // h[6..8]: reserved flags, zero.
+        h[8..16].copy_from_slice(&self.id.to_le_bytes());
+        h[16..20].copy_from_slice(&(self.payload.len() as u32).to_le_bytes());
+        h
+    }
+
+    /// Encode header + payload into one buffer (tests and benches; the
+    /// TCP transport writes header and payload with vectored I/O instead
+    /// of concatenating).
+    pub fn encode(&self) -> Vec<u8> {
+        let mut v = Vec::with_capacity(HEADER_LEN + self.payload.len());
+        v.extend_from_slice(&self.header());
+        v.extend_from_slice(&self.payload);
+        v
+    }
+
+    /// Decode one frame from the front of `buf`; returns the frame and
+    /// the number of bytes consumed. Errors on truncation (streaming
+    /// receivers use [`decode_header`] directly to distinguish "need more
+    /// bytes" from corruption).
+    pub fn decode(buf: &[u8]) -> Result<(Frame, usize), String> {
+        let h = decode_header(buf)?;
+        let need = HEADER_LEN + h.payload_len as usize;
+        if buf.len() < need {
+            return Err(format!(
+                "truncated frame: header promises {} payload bytes, got {}",
+                h.payload_len,
+                buf.len() - HEADER_LEN
+            ));
+        }
+        let payload = buf[HEADER_LEN..need].to_vec();
+        Ok((Frame { version: h.version, op: h.op, id: h.id, payload }, need))
+    }
+}
+
+/// A decoded frame header (payload not yet read).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FrameHeader {
+    /// Protocol version byte (any value decodes; receivers negotiate).
+    pub version: u8,
+    /// Opcode (see [`op`]).
+    pub op: u8,
+    /// Wave id.
+    pub id: u64,
+    /// Payload length, already checked against [`MAX_PAYLOAD`].
+    pub payload_len: u32,
+}
+
+/// Decode a frame header from the first [`HEADER_LEN`] bytes of `buf`.
+/// Rejects bad magic (with a targeted message when the peer is speaking
+/// the legacy v1 JSON-line protocol) and payload lengths over
+/// [`MAX_PAYLOAD`] — *before* any allocation happens.
+pub fn decode_header(buf: &[u8]) -> Result<FrameHeader, String> {
+    if buf.len() < HEADER_LEN {
+        return Err(format!("truncated frame header ({} of {HEADER_LEN} bytes)", buf.len()));
+    }
+    if buf[0..4] != MAGIC {
+        if buf[0] == b'{' {
+            return Err(
+                "peer speaks the legacy JSON-line engine-host protocol; \
+                 this build requires binary frames (v2)"
+                    .to_string(),
+            );
+        }
+        return Err(format!("bad frame magic {:02x?} (want {MAGIC:02x?})", &buf[0..4]));
+    }
+    let version = buf[4];
+    let opcode = buf[5];
+    let id = u64::from_le_bytes(buf[8..16].try_into().unwrap());
+    let payload_len = u32::from_le_bytes(buf[16..20].try_into().unwrap());
+    if payload_len > MAX_PAYLOAD {
         return Err(format!(
-            "tensor payload for dims {dims:?} wants {} hex chars, got {}",
-            n * 8,
-            hex.len()
+            "frame payload of {payload_len} bytes exceeds the {MAX_PAYLOAD}-byte cap"
         ));
     }
-    let mut data = Vec::with_capacity(n);
-    let bytes = hex.as_bytes();
-    for i in 0..n {
-        let chunk = std::str::from_utf8(&bytes[i * 8..(i + 1) * 8])
-            .map_err(|_| "non-ascii tensor payload".to_string())?;
-        let bits = u32::from_str_radix(chunk, 16)
-            .map_err(|_| format!("bad tensor payload chunk '{chunk}'"))?;
-        data.push(f32::from_bits(bits));
+    Ok(FrameHeader { version, op: opcode, id, payload_len })
+}
+
+// --------------------------------------------------------- payload codecs
+
+fn push_u32(buf: &mut Vec<u8>, v: u32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn push_f32(buf: &mut Vec<u8>, v: f32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+/// Bounded little-endian reader over a payload.
+struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn new(buf: &'a [u8]) -> Cursor<'a> {
+        Cursor { buf, pos: 0 }
     }
-    Ok(Tensor::from_vec(dims, data))
+
+    fn u32(&mut self, what: &str) -> Result<u32, String> {
+        let end = self.pos + 4;
+        if end > self.buf.len() {
+            return Err(format!("truncated payload reading {what}"));
+        }
+        let v = u32::from_le_bytes(self.buf[self.pos..end].try_into().unwrap());
+        self.pos = end;
+        Ok(v)
+    }
+
+    /// Read `n` f32s. Callers have already proven the payload length, so
+    /// the allocation here is bounded by the frame cap.
+    fn f32s(&mut self, n: usize, what: &str) -> Result<Vec<f32>, String> {
+        let bytes = n.checked_mul(4).ok_or_else(|| format!("{what} length overflow"))?;
+        let end = self
+            .pos
+            .checked_add(bytes)
+            .filter(|&e| e <= self.buf.len())
+            .ok_or_else(|| format!("truncated payload reading {what}"))?;
+        let mut out = Vec::with_capacity(n);
+        for c in self.buf[self.pos..end].chunks_exact(4) {
+            out.push(f32::from_le_bytes(c.try_into().unwrap()));
+        }
+        self.pos = end;
+        Ok(out)
+    }
 }
 
-/// Dims as a JSON array of numbers.
-fn dims_json(dims: &[usize]) -> Json {
-    Json::arr(dims.iter().map(|&d| Json::num(d as f64)))
-}
-
-/// Parse a JSON array of numbers into dims.
-fn parse_dims(j: &Json) -> Option<Vec<usize>> {
-    j.as_arr().map(|a| a.iter().filter_map(|v| v.as_usize()).collect())
-}
-
-/// The `hello` handshake request.
-pub fn hello_request() -> Json {
-    Json::obj(vec![("op", Json::str("hello"))])
-}
-
-/// The host's `hello` reply: engine name, latent dims, physical engine
-/// count, and the preset the host serves.
-pub fn hello_response(name: &str, dims: &[usize], engines: usize, model: &str) -> Json {
-    Json::obj(vec![
-        ("type", Json::str("hello")),
-        ("name", Json::str(name)),
-        ("dims", dims_json(dims)),
-        ("engines", Json::num(engines as f64)),
-        ("model", Json::str(model)),
-    ])
+/// Product of `dims` with overflow checking, capped so the implied tensor
+/// payload always fits under [`MAX_PAYLOAD`].
+fn checked_numel(dims: &[usize]) -> Result<usize, String> {
+    dims.iter()
+        .try_fold(1usize, |a, &d| a.checked_mul(d))
+        .filter(|&n| n.checked_mul(4).map(|b| b <= MAX_PAYLOAD as usize).unwrap_or(false))
+        .ok_or_else(|| format!("tensor dims {dims:?} overflow the frame payload cap"))
 }
 
 /// One parsed `drift_batch` request: wave id plus the wave's inputs.
 pub struct DriftWave {
-    /// Client-assigned wave id, echoed in the reply.
+    /// Client-assigned wave id (from the frame header), echoed in the
+    /// reply.
     pub id: u64,
     /// Latent dims shared by every item of the wave.
     pub dims: Vec<usize>,
@@ -101,88 +306,379 @@ pub struct DriftWave {
     pub ts: Vec<f32>,
 }
 
-/// Build a `drift_batch` request for one wave.
-pub fn drift_batch_request(id: u64, dims: &[usize], xs: &[Tensor], ts: &[f32]) -> Json {
-    Json::obj(vec![
-        ("op", Json::str("drift_batch")),
-        ("id", Json::num(id as f64)),
-        ("dims", dims_json(dims)),
-        ("xs", Json::arr(xs.iter().map(|x| Json::str(&encode_tensor(x))))),
-        ("ts", Json::arr(ts.iter().map(|&t| Json::num(f64::from(t))))),
-    ])
+/// Build a `drift_batch` request frame for one wave. This is the per-wave
+/// serialization hot path the `ser_us` counter prices: raw f32 copies,
+/// no per-element formatting.
+pub fn drift_batch_request(id: u64, dims: &[usize], xs: &[Tensor], ts: &[f32]) -> Frame {
+    debug_assert_eq!(xs.len(), ts.len());
+    let numel: usize = dims.iter().product();
+    let mut p = Vec::with_capacity(8 + dims.len() * 4 + ts.len() * 4 + xs.len() * numel * 4);
+    push_u32(&mut p, dims.len() as u32);
+    for &d in dims {
+        push_u32(&mut p, d as u32);
+    }
+    push_u32(&mut p, xs.len() as u32);
+    for &t in ts {
+        push_f32(&mut p, t);
+    }
+    for x in xs {
+        for &v in x.data() {
+            push_f32(&mut p, v);
+        }
+    }
+    Frame::new(op::DRIFT_BATCH, id, p)
 }
 
-/// Parse a `drift_batch` request (host side).
-pub fn parse_drift_batch_request(j: &Json) -> Result<DriftWave, String> {
-    let id = j
-        .get("id")
-        .and_then(|v| v.as_f64())
-        .ok_or("drift_batch: missing id")? as u64;
-    let dims = j
-        .get("dims")
-        .and_then(parse_dims)
-        .ok_or("drift_batch: missing dims")?;
-    let xs_raw = j
-        .get("xs")
-        .and_then(|v| v.as_arr())
-        .ok_or("drift_batch: missing xs")?;
-    let ts_raw = j
-        .get("ts")
-        .and_then(|v| v.as_arr())
-        .ok_or("drift_batch: missing ts")?;
-    if xs_raw.len() != ts_raw.len() {
+/// Parse a `drift_batch` request (host side). Peer-supplied dims are
+/// hostile input: the dim count, the overflow-checked element product,
+/// and the exact payload length are all validated — and the dims compared
+/// against `served_dims` when given — *before* any tensor is allocated.
+pub fn parse_drift_batch_request(
+    frame: &Frame,
+    served_dims: Option<&[usize]>,
+) -> Result<DriftWave, String> {
+    if frame.op != op::DRIFT_BATCH {
+        return Err(format!("expected a drift_batch frame, got {}", op_name(frame.op)));
+    }
+    let mut c = Cursor::new(&frame.payload);
+    let ndims = c.u32("ndims")? as usize;
+    if ndims == 0 || ndims > MAX_DIMS {
+        return Err(format!("drift_batch: {ndims} dims (limit {MAX_DIMS})"));
+    }
+    let mut dims = Vec::with_capacity(ndims);
+    for _ in 0..ndims {
+        let d = c.u32("dims")? as usize;
+        if d == 0 {
+            return Err("drift_batch: zero-sized dim".to_string());
+        }
+        dims.push(d);
+    }
+    let numel = checked_numel(&dims)?;
+    if let Some(served) = served_dims {
+        if dims != served {
+            return Err(format!("drift wave dims {dims:?} do not match served dims {served:?}"));
+        }
+    }
+    let count = c.u32("count")? as usize;
+    // Exact-length check (u128: immune to overflow) before the bulk reads;
+    // together with the header cap this bounds every allocation below.
+    let want = 8 + 4 * (ndims as u128) + 4 * (count as u128) * (1 + numel as u128);
+    if want != frame.payload.len() as u128 {
         return Err(format!(
-            "drift_batch: {} states but {} times",
-            xs_raw.len(),
-            ts_raw.len()
+            "drift_batch: payload is {} bytes but dims/count imply {want}",
+            frame.payload.len()
         ));
     }
-    let mut xs = Vec::with_capacity(xs_raw.len());
-    for x in xs_raw {
-        let hex = x.as_str().ok_or("drift_batch: non-string tensor payload")?;
-        xs.push(decode_tensor(&dims, hex)?);
+    let ts = c.f32s(count, "ts")?;
+    let mut xs = Vec::with_capacity(count);
+    for _ in 0..count {
+        xs.push(Tensor::from_vec(&dims, c.f32s(numel, "xs")?));
     }
-    let ts = ts_raw
-        .iter()
-        .map(|t| t.as_f64().map(|v| v as f32).ok_or("drift_batch: non-numeric t".to_string()))
-        .collect::<Result<Vec<f32>, String>>()?;
-    Ok(DriftWave { id, dims, xs, ts })
+    Ok(DriftWave { id: frame.id, dims, xs, ts })
 }
 
-/// Build the host's reply carrying the wave's outputs.
-pub fn drift_batch_response(id: u64, outs: &[Tensor]) -> Json {
-    Json::obj(vec![
-        ("type", Json::str("drift_batch")),
-        ("id", Json::num(id as f64)),
-        ("outs", Json::arr(outs.iter().map(|o| Json::str(&encode_tensor(o))))),
-    ])
+/// Build the host's reply frame carrying the wave's outputs.
+pub fn drift_batch_response(id: u64, outs: &[Tensor]) -> Frame {
+    let numel = outs.first().map(|o| o.numel()).unwrap_or(0);
+    let mut p = Vec::with_capacity(4 + outs.len() * numel * 4);
+    push_u32(&mut p, outs.len() as u32);
+    for o in outs {
+        for &v in o.data() {
+            push_f32(&mut p, v);
+        }
+    }
+    Frame::new(op::DRIFT_BATCH_REPLY, id, p)
 }
 
-/// Parse a `drift_batch` reply (client side); outputs have shape `dims`.
-pub fn parse_drift_batch_response(j: &Json, dims: &[usize]) -> Result<(u64, Vec<Tensor>), String> {
-    let id = j
-        .get("id")
-        .and_then(|v| v.as_f64())
-        .ok_or("drift_batch reply: missing id")? as u64;
-    let outs_raw = j
-        .get("outs")
-        .and_then(|v| v.as_arr())
-        .ok_or("drift_batch reply: missing outs")?;
-    let mut outs = Vec::with_capacity(outs_raw.len());
-    for o in outs_raw {
-        let hex = o.as_str().ok_or("drift_batch reply: non-string tensor payload")?;
-        outs.push(decode_tensor(dims, hex)?);
+/// Parse a `drift_batch` reply (client side); outputs have shape `dims`
+/// (the client knows its own wave's shape — the reply does not repeat it).
+pub fn parse_drift_batch_response(frame: &Frame, dims: &[usize]) -> Result<Vec<Tensor>, String> {
+    if frame.op != op::DRIFT_BATCH_REPLY {
+        return Err(format!("expected a drift_batch reply, got {}", op_name(frame.op)));
     }
-    Ok((id, outs))
+    let numel = checked_numel(dims)?;
+    let mut c = Cursor::new(&frame.payload);
+    let count = c.u32("count")? as usize;
+    let want = 4 + 4 * (count as u128) * (numel as u128);
+    if want != frame.payload.len() as u128 {
+        return Err(format!(
+            "drift_batch reply: payload is {} bytes but count implies {want}",
+            frame.payload.len()
+        ));
+    }
+    let mut outs = Vec::with_capacity(count);
+    for _ in 0..count {
+        outs.push(Tensor::from_vec(dims, c.f32s(numel, "outs")?));
+    }
+    Ok(outs)
 }
 
-/// A structured error reply; `id` ties it to the failed wave when known.
-pub fn error_response(id: Option<u64>, message: &str) -> Json {
-    let mut fields = vec![("type", Json::str("error")), ("message", Json::str(message))];
-    if let Some(id) = id {
-        fields.push(("id", Json::num(id as f64)));
+// ------------------------------------------------------- control payloads
+
+/// Dims as a JSON array of numbers.
+fn dims_json(dims: &[usize]) -> Json {
+    Json::arr(dims.iter().map(|&d| Json::num(d as f64)))
+}
+
+/// Parse a JSON array into dims, rejecting any non-numeric entry — a
+/// malformed `[8, "x", 2]` must error, not silently decode as `[8, 2]`
+/// with the wrong shape.
+fn parse_dims(j: &Json) -> Result<Vec<usize>, String> {
+    let arr = j.as_arr().ok_or("dims is not an array")?;
+    arr.iter()
+        .map(|v| v.as_usize().ok_or_else(|| "non-numeric dims entry".to_string()))
+        .collect()
+}
+
+/// The `hello` handshake request.
+pub fn hello_request() -> Frame {
+    Frame::new(op::HELLO, 0, Vec::new())
+}
+
+/// The host's `hello_ok` reply: engine name, latent dims, physical engine
+/// count, and the preset the host serves.
+pub fn hello_response(name: &str, dims: &[usize], engines: usize, model: &str) -> Frame {
+    Frame::control(
+        op::HELLO_OK,
+        0,
+        &Json::obj(vec![
+            ("name", Json::str(name)),
+            ("dims", dims_json(dims)),
+            ("engines", Json::num(engines as f64)),
+            ("model", Json::str(model)),
+        ]),
+    )
+}
+
+/// A parsed `hello_ok` reply.
+pub struct HelloInfo {
+    /// Host-side engine name.
+    pub name: String,
+    /// Latent dims the host serves.
+    pub dims: Vec<usize>,
+    /// Physical engine count behind the host.
+    pub engines: usize,
+    /// Preset the host serves.
+    pub model: String,
+}
+
+/// Parse a `hello_ok` reply (client side).
+pub fn parse_hello_response(frame: &Frame) -> Result<HelloInfo, String> {
+    if frame.op != op::HELLO_OK {
+        return Err(format!("expected a hello_ok frame, got {}", op_name(frame.op)));
     }
-    Json::obj(fields)
+    let j = frame.json()?;
+    let name = j
+        .get("name")
+        .and_then(|v| v.as_str().map(str::to_string))
+        .ok_or("hello_ok: missing name")?;
+    let dims = parse_dims(j.get("dims").ok_or("hello_ok: missing dims")?)
+        .map_err(|e| format!("hello_ok: {e}"))?;
+    let engines = j.get("engines").and_then(|v| v.as_usize()).ok_or("hello_ok: missing engines")?;
+    let model = j
+        .get("model")
+        .and_then(|v| v.as_str().map(str::to_string))
+        .ok_or("hello_ok: missing model")?;
+    Ok(HelloInfo { name, dims, engines, model })
+}
+
+/// An engine host's registration announcement: what it serves and where
+/// the scheduler should dial back for waves.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Registration {
+    /// Preset the host serves.
+    pub model: String,
+    /// Latent dims the host serves.
+    pub dims: Vec<usize>,
+    /// Physical engine count behind the host.
+    pub engines: usize,
+    /// Advertised wave capacity (engines × max fused batch) — placement
+    /// metadata, not an enforced limit.
+    pub capacity: usize,
+    /// `host:port` the scheduler dials back for wave traffic.
+    pub advertise: String,
+}
+
+/// Build a `register` request frame.
+pub fn register_request(r: &Registration) -> Frame {
+    Frame::control(
+        op::REGISTER,
+        0,
+        &Json::obj(vec![
+            ("model", Json::str(&r.model)),
+            ("dims", dims_json(&r.dims)),
+            ("engines", Json::num(r.engines as f64)),
+            ("capacity", Json::num(r.capacity as f64)),
+            ("advertise", Json::str(&r.advertise)),
+        ]),
+    )
+}
+
+/// Parse a `register` request (scheduler side).
+pub fn parse_register_request(frame: &Frame) -> Result<Registration, String> {
+    if frame.op != op::REGISTER {
+        return Err(format!("expected a register frame, got {}", op_name(frame.op)));
+    }
+    let j = frame.json()?;
+    let model = j
+        .get("model")
+        .and_then(|v| v.as_str().map(str::to_string))
+        .ok_or("register: missing model")?;
+    let dims = parse_dims(j.get("dims").ok_or("register: missing dims")?)
+        .map_err(|e| format!("register: {e}"))?;
+    if dims.is_empty() || dims.len() > MAX_DIMS {
+        return Err(format!("register: {} dims (limit {MAX_DIMS})", dims.len()));
+    }
+    let engines = j.get("engines").and_then(|v| v.as_usize()).ok_or("register: missing engines")?;
+    let capacity =
+        j.get("capacity").and_then(|v| v.as_usize()).ok_or("register: missing capacity")?;
+    let advertise = j
+        .get("advertise")
+        .and_then(|v| v.as_str().map(str::to_string))
+        .ok_or("register: missing advertise")?;
+    Ok(Registration { model, dims, engines, capacity, advertise })
+}
+
+/// The scheduler's `register_ok` acknowledgement.
+pub fn register_ok() -> Frame {
+    Frame::new(op::REGISTER_OK, 0, Vec::new())
+}
+
+/// A liveness probe.
+pub fn ping() -> Frame {
+    Frame::new(op::PING, 0, Vec::new())
+}
+
+/// The liveness reply.
+pub fn pong() -> Frame {
+    Frame::new(op::PONG, 0, Vec::new())
+}
+
+/// A host-side fusion counter request.
+pub fn bank_stats_request() -> Frame {
+    Frame::new(op::BANK_STATS, 0, Vec::new())
+}
+
+/// A structured error frame; the header `id` ties it to the failed wave
+/// when known (0 = no specific wave; live wave ids start at 1).
+pub fn error_frame(id: u64, message: &str) -> Frame {
+    Frame::new(op::ERROR, id, message.as_bytes().to_vec())
+}
+
+// ------------------------------------------------------------ legacy (v1)
+
+/// The v1 JSON-line codec: hex-encoded f32 bit patterns inside JSON
+/// objects, one per line. Retained **only** so `bench_serving` part 6 can
+/// price it against the binary framing — production traffic speaks v2
+/// frames, and hosts reject JSON-line peers at the handshake. The
+/// correctness fixes (strict dims parsing, overflow-checked element
+/// products) are applied here too; the one hole this codec cannot fix is
+/// structural: wave ids ride as JSON `f64` and lose precision above 2^53.
+pub mod legacy {
+    use super::{dims_json, parse_dims};
+    use crate::tensor::Tensor;
+    use crate::util::json::Json;
+    use std::fmt::Write as _;
+
+    /// Encode a tensor's payload as lowercase hex of little-endian f32
+    /// bit patterns — 8 chars per element, bitwise exact for every value.
+    pub fn encode_tensor(t: &Tensor) -> String {
+        let mut s = String::with_capacity(t.numel() * 8);
+        for v in t.data() {
+            let _ = write!(s, "{:08x}", v.to_bits());
+        }
+        s
+    }
+
+    /// Decode [`encode_tensor`] output back into a tensor of shape `dims`.
+    pub fn decode_tensor(dims: &[usize], hex: &str) -> Result<Tensor, String> {
+        let n = dims
+            .iter()
+            .try_fold(1usize, |a, &d| a.checked_mul(d))
+            .filter(|n| n.checked_mul(8).is_some())
+            .ok_or_else(|| format!("tensor dims {dims:?} overflow"))?;
+        if hex.len() != n * 8 {
+            return Err(format!(
+                "tensor payload for dims {dims:?} wants {} hex chars, got {}",
+                n * 8,
+                hex.len()
+            ));
+        }
+        let mut data = Vec::with_capacity(n);
+        let bytes = hex.as_bytes();
+        for i in 0..n {
+            let chunk = std::str::from_utf8(&bytes[i * 8..(i + 1) * 8])
+                .map_err(|_| "non-ascii tensor payload".to_string())?;
+            let bits = u32::from_str_radix(chunk, 16)
+                .map_err(|_| format!("bad tensor payload chunk '{chunk}'"))?;
+            data.push(f32::from_bits(bits));
+        }
+        Ok(Tensor::from_vec(dims, data))
+    }
+
+    /// Build a v1 `drift_batch` request. The id narrows through `f64` —
+    /// exact only below 2^53, the defect that motivated the v2 header.
+    pub fn drift_batch_request(id: u64, dims: &[usize], xs: &[Tensor], ts: &[f32]) -> Json {
+        Json::obj(vec![
+            ("op", Json::str("drift_batch")),
+            ("id", Json::num(id as f64)),
+            ("dims", dims_json(dims)),
+            ("xs", Json::arr(xs.iter().map(|x| Json::str(&encode_tensor(x))))),
+            ("ts", Json::arr(ts.iter().map(|&t| Json::num(f64::from(t))))),
+        ])
+    }
+
+    /// Parse a v1 `drift_batch` request.
+    pub fn parse_drift_batch_request(j: &Json) -> Result<super::DriftWave, String> {
+        let id = j.get("id").and_then(|v| v.as_f64()).ok_or("drift_batch: missing id")? as u64;
+        let dims = parse_dims(j.get("dims").ok_or("drift_batch: missing dims")?)
+            .map_err(|e| format!("drift_batch: {e}"))?;
+        let xs_raw = j.get("xs").and_then(|v| v.as_arr()).ok_or("drift_batch: missing xs")?;
+        let ts_raw = j.get("ts").and_then(|v| v.as_arr()).ok_or("drift_batch: missing ts")?;
+        if xs_raw.len() != ts_raw.len() {
+            return Err(format!(
+                "drift_batch: {} states but {} times",
+                xs_raw.len(),
+                ts_raw.len()
+            ));
+        }
+        let mut xs = Vec::with_capacity(xs_raw.len());
+        for x in xs_raw {
+            let hex = x.as_str().ok_or("drift_batch: non-string tensor payload")?;
+            xs.push(decode_tensor(&dims, hex)?);
+        }
+        let ts = ts_raw
+            .iter()
+            .map(|t| t.as_f64().map(|v| v as f32).ok_or("drift_batch: non-numeric t".to_string()))
+            .collect::<Result<Vec<f32>, String>>()?;
+        Ok(super::DriftWave { id, dims, xs, ts })
+    }
+
+    /// Build the v1 reply carrying the wave's outputs.
+    pub fn drift_batch_response(id: u64, outs: &[Tensor]) -> Json {
+        Json::obj(vec![
+            ("type", Json::str("drift_batch")),
+            ("id", Json::num(id as f64)),
+            ("outs", Json::arr(outs.iter().map(|o| Json::str(&encode_tensor(o))))),
+        ])
+    }
+
+    /// Parse a v1 `drift_batch` reply; outputs have shape `dims`.
+    pub fn parse_drift_batch_response(
+        j: &Json,
+        dims: &[usize],
+    ) -> Result<(u64, Vec<Tensor>), String> {
+        let id =
+            j.get("id").and_then(|v| v.as_f64()).ok_or("drift_batch reply: missing id")? as u64;
+        let outs_raw =
+            j.get("outs").and_then(|v| v.as_arr()).ok_or("drift_batch reply: missing outs")?;
+        let mut outs = Vec::with_capacity(outs_raw.len());
+        for o in outs_raw {
+            let hex = o.as_str().ok_or("drift_batch reply: non-string tensor payload")?;
+            outs.push(decode_tensor(dims, hex)?);
+        }
+        Ok((id, outs))
+    }
 }
 
 #[cfg(test)]
@@ -190,61 +686,216 @@ mod tests {
     use super::*;
     use crate::util::rng::Rng;
 
-    #[test]
-    fn tensor_codec_is_bitwise_exact() {
-        let mut rng = Rng::seeded(0x31E);
-        for _ in 0..20 {
-            let t = Tensor::randn(&[3, 5], &mut rng);
-            let back = decode_tensor(&[3, 5], &encode_tensor(&t)).unwrap();
-            assert_eq!(back, t);
-        }
-        // Special values survive exactly (a decimal round trip would not).
-        let specials = Tensor::from_vec(
+    fn specials() -> Tensor {
+        Tensor::from_vec(
             &[6],
             vec![0.0, -0.0, f32::INFINITY, f32::NEG_INFINITY, f32::NAN, 1e-42],
-        );
-        let back = decode_tensor(&[6], &encode_tensor(&specials)).unwrap();
-        for (a, b) in specials.data().iter().zip(back.data()) {
+        )
+    }
+
+    #[test]
+    fn header_roundtrip() {
+        let f = Frame::new(op::DRIFT_BATCH, 0xDEAD_BEEF_CAFE_F00D, vec![1, 2, 3]);
+        let bytes = f.encode();
+        assert_eq!(bytes.len(), HEADER_LEN + 3);
+        let h = decode_header(&bytes).unwrap();
+        assert_eq!(h.version, VERSION);
+        assert_eq!(h.op, op::DRIFT_BATCH);
+        assert_eq!(h.id, 0xDEAD_BEEF_CAFE_F00D);
+        assert_eq!(h.payload_len, 3);
+        let (back, used) = Frame::decode(&bytes).unwrap();
+        assert_eq!(used, bytes.len());
+        assert_eq!(back, f);
+    }
+
+    #[test]
+    fn wave_ids_survive_u64_max() {
+        // Regression: the v1 codec narrowed ids through JSON f64, losing
+        // precision above 2^53. The v2 header carries native u64.
+        let xs = vec![Tensor::from_vec(&[2], vec![1.0, 2.0])];
+        let f = drift_batch_request(u64::MAX, &[2], &xs, &[0.5]);
+        let (back, _) = Frame::decode(&f.encode()).unwrap();
+        assert_eq!(back.id, u64::MAX);
+        let wave = parse_drift_batch_request(&back, Some(&[2])).unwrap();
+        assert_eq!(wave.id, u64::MAX);
+        let reply = drift_batch_response(u64::MAX, &wave.xs);
+        let (back, _) = Frame::decode(&reply.encode()).unwrap();
+        assert_eq!(back.id, u64::MAX);
+    }
+
+    #[test]
+    fn binary_wave_roundtrip_is_bitwise_exact() {
+        let mut rng = Rng::seeded(0x31E);
+        for _ in 0..20 {
+            let xs: Vec<Tensor> = (0..3).map(|_| Tensor::randn(&[3, 5], &mut rng)).collect();
+            let ts = vec![0.1f32, 0.5, 0.925];
+            let f = drift_batch_request(42, &[3, 5], &xs, &ts);
+            let (f, _) = Frame::decode(&f.encode()).unwrap();
+            let wave = parse_drift_batch_request(&f, Some(&[3, 5])).unwrap();
+            assert_eq!(wave.id, 42);
+            assert_eq!(wave.dims, vec![3, 5]);
+            assert_eq!(wave.xs, xs);
+            assert_eq!(wave.ts, ts);
+        }
+        // Special values survive exactly (reusing the v1 corpus: negative
+        // zero, infinities, NaN, a subnormal).
+        let sp = specials();
+        let f = drift_batch_request(7, &[6], std::slice::from_ref(&sp), &[0.25]);
+        let wave = parse_drift_batch_request(&f, None).unwrap();
+        for (a, b) in sp.data().iter().zip(wave.xs[0].data()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        let reply = drift_batch_response(7, &wave.xs);
+        let outs = parse_drift_batch_response(&reply, &[6]).unwrap();
+        for (a, b) in sp.data().iter().zip(outs[0].data()) {
             assert_eq!(a.to_bits(), b.to_bits());
         }
     }
 
     #[test]
-    fn tensor_codec_rejects_bad_payloads() {
-        assert!(decode_tensor(&[2], "deadbeef").is_err(), "length mismatch");
-        assert!(decode_tensor(&[1], "zzzzzzzz").is_err(), "non-hex chunk");
+    fn corrupt_frames_are_rejected_without_panic() {
+        let good = drift_batch_request(1, &[2], &[Tensor::from_vec(&[2], vec![1.0, 2.0])], &[0.5])
+            .encode();
+        // Truncated header and truncated payload.
+        assert!(decode_header(&good[..10]).is_err());
+        assert!(Frame::decode(&good[..good.len() - 1]).is_err());
+        // Bad magic.
+        let mut bad = good.clone();
+        bad[0] = b'X';
+        assert!(decode_header(&bad).unwrap_err().contains("magic"));
+        // Legacy JSON peer gets a targeted error.
+        let legacy = b"{\"op\":\"hello\"}\n                ";
+        assert!(decode_header(legacy).unwrap_err().contains("legacy"));
+        // Oversized payload length rejected before any allocation.
+        let mut oversized = good.clone();
+        oversized[16..20].copy_from_slice(&(MAX_PAYLOAD + 1).to_le_bytes());
+        assert!(decode_header(&oversized).unwrap_err().contains("cap"));
+        // Unknown versions still decode — negotiation is app-layer.
+        let mut old = good;
+        old[4] = 1;
+        assert_eq!(decode_header(&old).unwrap().version, 1);
     }
 
     #[test]
-    fn drift_batch_request_roundtrip() {
-        let mut rng = Rng::seeded(7);
-        let xs: Vec<Tensor> = (0..3).map(|_| Tensor::randn(&[4], &mut rng)).collect();
-        let ts = vec![0.1f32, 0.5, 0.925];
-        let j = drift_batch_request(42, &[4], &xs, &ts);
-        // Through the actual wire representation.
-        let j = Json::parse(&j.to_string_compact()).unwrap();
-        let wave = parse_drift_batch_request(&j).unwrap();
-        assert_eq!(wave.id, 42);
-        assert_eq!(wave.dims, vec![4]);
-        assert_eq!(wave.xs, xs);
-        assert_eq!(wave.ts, ts);
+    fn hostile_drift_payloads_are_rejected_before_allocating() {
+        // Dims product overflow.
+        let mut p = Vec::new();
+        push_u32(&mut p, 4);
+        for _ in 0..4 {
+            push_u32(&mut p, u32::MAX);
+        }
+        push_u32(&mut p, 1);
+        let err =
+            parse_drift_batch_request(&Frame::new(op::DRIFT_BATCH, 1, p), None).unwrap_err();
+        assert!(err.contains("overflow"), "{err}");
+        // Too many dims.
+        let mut p = Vec::new();
+        push_u32(&mut p, MAX_DIMS as u32 + 1);
+        let err =
+            parse_drift_batch_request(&Frame::new(op::DRIFT_BATCH, 1, p), None).unwrap_err();
+        assert!(err.contains("dims"), "{err}");
+        // Shape differing from the host's served dims is rejected up front.
+        let f = drift_batch_request(9, &[4], &[Tensor::from_vec(&[4], vec![0.0; 4])], &[0.1]);
+        let err = parse_drift_batch_request(&f, Some(&[8])).unwrap_err();
+        assert!(err.contains("match"), "{err}");
+        // Count promising more data than the payload carries.
+        let mut p = Vec::new();
+        push_u32(&mut p, 1);
+        push_u32(&mut p, 8);
+        push_u32(&mut p, u32::MAX); // count
+        let err =
+            parse_drift_batch_request(&Frame::new(op::DRIFT_BATCH, 1, p), None).unwrap_err();
+        assert!(err.contains("payload"), "{err}");
+        // Reply with a short payload.
+        let mut p = Vec::new();
+        push_u32(&mut p, 3);
+        let err = parse_drift_batch_response(&Frame::new(op::DRIFT_BATCH_REPLY, 1, p), &[8])
+            .unwrap_err();
+        assert!(err.contains("payload"), "{err}");
     }
 
     #[test]
-    fn drift_batch_response_roundtrip() {
-        let mut rng = Rng::seeded(8);
-        let outs: Vec<Tensor> = (0..2).map(|_| Tensor::randn(&[2, 3], &mut rng)).collect();
-        let j = drift_batch_response(9, &outs);
-        let j = Json::parse(&j.to_string_compact()).unwrap();
-        let (id, back) = parse_drift_batch_response(&j, &[2, 3]).unwrap();
-        assert_eq!(id, 9);
-        assert_eq!(back, outs);
+    fn hello_and_register_roundtrip() {
+        let f = hello_response("batched:mix", &[1, 16], 3, "gauss-mix");
+        let (f, _) = Frame::decode(&f.encode()).unwrap();
+        let h = parse_hello_response(&f).unwrap();
+        assert_eq!(h.name, "batched:mix");
+        assert_eq!(h.dims, vec![1, 16]);
+        assert_eq!(h.engines, 3);
+        assert_eq!(h.model, "gauss-mix");
+        let r = Registration {
+            model: "gauss-mix".into(),
+            dims: vec![1, 16],
+            engines: 2,
+            capacity: 16,
+            advertise: "127.0.0.1:7078".into(),
+        };
+        let f = register_request(&r);
+        let (f, _) = Frame::decode(&f.encode()).unwrap();
+        assert_eq!(parse_register_request(&f).unwrap(), r);
+        assert_eq!(hello_request().op, op::HELLO);
+        assert_eq!(register_ok().op, op::REGISTER_OK);
+        assert_eq!(ping().op, op::PING);
+        assert_eq!(pong().op, op::PONG);
+        assert_eq!(bank_stats_request().op, op::BANK_STATS);
     }
 
     #[test]
-    fn malformed_requests_error() {
+    fn strict_dims_reject_non_numeric_entries() {
+        // A malformed dims array must error, not silently drop entries.
+        let j = Json::obj(vec![
+            ("name", Json::str("n")),
+            ("dims", Json::arr(vec![Json::num(8.0), Json::str("x"), Json::num(2.0)])),
+            ("engines", Json::num(1.0)),
+            ("model", Json::str("m")),
+        ]);
+        let f = Frame::control(op::HELLO_OK, 0, &j);
+        assert!(parse_hello_response(&f).unwrap_err().contains("non-numeric"));
+        let j = Json::obj(vec![
+            ("op", Json::str("drift_batch")),
+            ("id", Json::num(1.0)),
+            ("dims", Json::arr(vec![Json::num(8.0), Json::str("x"), Json::num(2.0)])),
+            ("xs", Json::arr(vec![Json::str("00000000")])),
+            ("ts", Json::arr(vec![Json::num(0.1)])),
+        ]);
+        assert!(legacy::parse_drift_batch_request(&j).unwrap_err().contains("non-numeric"));
+    }
+
+    #[test]
+    fn error_frames_carry_wave_ids() {
+        let f = error_frame(5, "boom");
+        let (f, _) = Frame::decode(&f.encode()).unwrap();
+        assert_eq!(f.op, op::ERROR);
+        assert_eq!(f.id, 5);
+        assert_eq!(f.text(), "boom");
+        assert_eq!(error_frame(0, "x").id, 0, "0 = no specific wave");
+    }
+
+    #[test]
+    fn legacy_tensor_codec_is_bitwise_exact() {
+        let mut rng = Rng::seeded(0x31E);
+        for _ in 0..20 {
+            let t = Tensor::randn(&[3, 5], &mut rng);
+            let back = legacy::decode_tensor(&[3, 5], &legacy::encode_tensor(&t)).unwrap();
+            assert_eq!(back, t);
+        }
+        let sp = specials();
+        let back = legacy::decode_tensor(&[6], &legacy::encode_tensor(&sp)).unwrap();
+        for (a, b) in sp.data().iter().zip(back.data()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn legacy_codec_rejects_bad_payloads() {
+        assert!(legacy::decode_tensor(&[2], "deadbeef").is_err(), "length mismatch");
+        assert!(legacy::decode_tensor(&[1], "zzzzzzzz").is_err(), "non-hex chunk");
+        assert!(
+            legacy::decode_tensor(&[usize::MAX, usize::MAX], "").is_err(),
+            "product overflow"
+        );
         let j = Json::obj(vec![("op", Json::str("drift_batch"))]);
-        assert!(parse_drift_batch_request(&j).is_err());
+        assert!(legacy::parse_drift_batch_request(&j).is_err());
         let j = Json::obj(vec![
             ("op", Json::str("drift_batch")),
             ("id", Json::num(1.0)),
@@ -252,14 +903,26 @@ mod tests {
             ("xs", Json::arr(vec![Json::str("0000000000000000")])),
             ("ts", Json::arr(vec![Json::num(0.1), Json::num(0.2)])),
         ]);
-        assert!(parse_drift_batch_request(&j).is_err(), "xs/ts length mismatch");
+        assert!(legacy::parse_drift_batch_request(&j).is_err(), "xs/ts length mismatch");
     }
 
     #[test]
-    fn error_response_carries_wave_id() {
-        let j = error_response(Some(5), "boom");
-        assert_eq!(j.get("type").unwrap().as_str().unwrap(), "error");
-        assert_eq!(j.get("id").unwrap().as_usize().unwrap(), 5);
-        assert!(error_response(None, "x").get("id").is_none());
+    fn legacy_drift_batch_roundtrip() {
+        let mut rng = Rng::seeded(7);
+        let xs: Vec<Tensor> = (0..3).map(|_| Tensor::randn(&[4], &mut rng)).collect();
+        let ts = vec![0.1f32, 0.5, 0.925];
+        let j = legacy::drift_batch_request(42, &[4], &xs, &ts);
+        // Through the actual v1 wire representation.
+        let j = Json::parse(&j.to_string_compact()).unwrap();
+        let wave = legacy::parse_drift_batch_request(&j).unwrap();
+        assert_eq!(wave.id, 42);
+        assert_eq!(wave.dims, vec![4]);
+        assert_eq!(wave.xs, xs);
+        assert_eq!(wave.ts, ts);
+        let j = legacy::drift_batch_response(9, &xs);
+        let j = Json::parse(&j.to_string_compact()).unwrap();
+        let (id, back) = legacy::parse_drift_batch_response(&j, &[4]).unwrap();
+        assert_eq!(id, 9);
+        assert_eq!(back, xs);
     }
 }

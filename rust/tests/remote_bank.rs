@@ -19,7 +19,7 @@ use chords::config::ServeConfig;
 use chords::coordinator::{ChordsConfig, ChordsExecutor};
 use chords::engine::{EngineFactory, ExpOdeFactory, GaussMixtureFactory};
 use chords::metrics::{BatchStats, RemoteBankStats};
-use chords::server::{EngineHost, GenRequest, Router};
+use chords::server::{EngineHost, GenRequest, RegistrationServer, Router};
 use chords::solvers::{Euler, Heun, StepRule, TimeGrid};
 use chords::tensor::Tensor;
 use chords::util::rng::Rng;
@@ -486,4 +486,146 @@ fn real_tcp_smoke_serving_via_remote_bank() {
         })
         .expect("local fallback member listed");
     assert_eq!(local_member.get("bank_healthy").unwrap().as_bool(), Some(true));
+}
+
+/// Elastic host registration, end to end over real TCP: a scheduler starts
+/// with **no** `--remote-bank` pinning; engine hosts dial its registration
+/// port and join the model's failover set — one before the model first
+/// loads, one while the slot is live (the mid-run live-attach path) — and
+/// a host leaving (process death) detaches it, with every generation
+/// bitwise identical to an all-local run throughout.
+#[test]
+fn registration_e2e_hosts_join_and_leave_elastically() {
+    let req2 = GenRequest {
+        model: "gauss-mix".into(),
+        steps: 30,
+        cores: 2,
+        seed: 11,
+        ..Default::default()
+    };
+    let req4 = GenRequest { cores: 4, ..req2.clone() };
+    let (want2, want4) = {
+        let local = Router::with_opts(
+            "artifacts",
+            ServeConfig { total_cores: 4, ..ServeConfig::default() },
+        );
+        (
+            local.generate(&req2, |_, _, _| {}).unwrap().final_output,
+            local.generate(&req4, |_, _, _| {}).unwrap().final_output,
+        )
+    };
+
+    // Scheduler side: router + registration listener, zero remote banks.
+    let router = Router::with_opts(
+        "artifacts",
+        ServeConfig { total_cores: 4, ..ServeConfig::default() },
+    );
+    let reg_server = RegistrationServer::serve(
+        Arc::new(router.dispatcher().host_registry()),
+        "127.0.0.1",
+        0,
+    )
+    .unwrap();
+    let scheduler_addr = reg_server.addr().to_string();
+    let metrics = router.dispatcher().metrics().clone();
+    let member = |label: &str| {
+        let j = router.queue_stats();
+        j.get("banks")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .find(|b| b.get("bank").unwrap().as_str() == Some(label))
+            .cloned()
+    };
+
+    // Host 1 starts AFTER the server and dials in — no restart, no
+    // --remote-bank flag.
+    let p = chords::config::preset("gauss-mix").unwrap();
+    let mut h1 = EngineHost::new(
+        chords::engine::factory_for(p, "artifacts").unwrap(),
+        "gauss-mix",
+        BatchOpts { engines: 2, max_batch: 8, linger: Duration::from_micros(100) },
+    )
+    .unwrap();
+    let addr1 = h1.serve_tcp("127.0.0.1", 0).unwrap();
+    let label1 = format!("tcp:{addr1}");
+    h1.register_with(&scheduler_addr, &addr1.to_string());
+    wait_for("host 1 to register", || metrics.hosts_registered.load(Ordering::Relaxed) >= 1);
+
+    // First generation loads the model as a failover set that includes the
+    // registered host; output must match the all-local run bitwise no
+    // matter where waves landed.
+    let got = router.generate(&req2, |_, _, _| {}).unwrap().final_output;
+    assert_eq!(got, want2, "registered-host serving changed the output");
+    let j = router.queue_stats();
+    let hosts = j.get("hosts").unwrap().as_arr().unwrap();
+    assert_eq!(hosts.len(), 1, "registration table exported");
+    assert_eq!(hosts[0].get("model").unwrap().as_str(), Some("gauss-mix"));
+    assert_eq!(hosts[0].get("engines").unwrap().as_usize().unwrap(), 2);
+    member(&label1).expect("registered host listed as a bank member");
+
+    // The slot exists now, so the host's bank is observable: once its
+    // handshake lands, a wider job (cores=4) forces fresh worker
+    // placements, and the lowest-score member — the idle registered host —
+    // deterministically receives waves.
+    wait_for("host 1 bank to go healthy", || {
+        member(&label1)
+            .map(|m| m.get("bank_healthy").unwrap().as_bool() == Some(true))
+            .unwrap_or(false)
+    });
+    let got = router.generate(&req4, |_, _, _| {}).unwrap().final_output;
+    assert_eq!(got, want4, "mixed local/registered placement changed the output");
+    let m1 = member(&label1).unwrap();
+    assert!(
+        m1.get("waves").unwrap().as_usize().unwrap() >= 1,
+        "waves landed on the registered host"
+    );
+
+    // Host 2 joins while the model slot is live: the registry edits the
+    // failover set in place (FailoverControl), no slot rebuild, no restart.
+    let mut h2 = EngineHost::new(
+        chords::engine::factory_for(p, "artifacts").unwrap(),
+        "gauss-mix",
+        BatchOpts { engines: 1, max_batch: 8, linger: Duration::from_micros(100) },
+    )
+    .unwrap();
+    let addr2 = h2.serve_tcp("127.0.0.1", 0).unwrap();
+    let label2 = format!("tcp:{addr2}");
+    h2.register_with(&scheduler_addr, &addr2.to_string());
+    wait_for("host 2 to register", || metrics.hosts_registered.load(Ordering::Relaxed) >= 2);
+    wait_for("host 2 bank to go healthy", || {
+        member(&label2)
+            .map(|m| m.get("bank_healthy").unwrap().as_bool() == Some(true))
+            .unwrap_or(false)
+    });
+
+    // Host 1 dies (process drop kills its registration connection and wave
+    // port); the scheduler detaches it, and workers that were sticky on it
+    // re-place onto the late joiner — output still bitwise identical.
+    drop(h1);
+    wait_for("host 1 to deregister", || {
+        metrics.hosts_deregistered.load(Ordering::Relaxed) >= 1
+    });
+    let got = router.generate(&req4, |_, _, _| {}).unwrap().final_output;
+    assert_eq!(got, want4, "host departure changed the output");
+    let j = router.queue_stats();
+    let hosts = j.get("hosts").unwrap().as_arr().unwrap();
+    assert_eq!(hosts.len(), 1, "only the live host remains registered");
+    assert_eq!(hosts[0].get("host").unwrap().as_str(), Some(label2.as_str()));
+    assert!(member(&label1).is_none(), "departed host left the failover set");
+    let m2 = member(&label2).expect("live-attached host listed as a bank member");
+    assert!(
+        m2.get("waves").unwrap().as_usize().unwrap() >= 1,
+        "waves re-placed onto the late joiner"
+    );
+
+    // With every host gone the always-present local member keeps serving.
+    drop(h2);
+    wait_for("host 2 to deregister", || {
+        metrics.hosts_deregistered.load(Ordering::Relaxed) >= 2
+    });
+    let got = router.generate(&req4, |_, _, _| {}).unwrap().final_output;
+    assert_eq!(got, want4, "all-hosts-gone fallback changed the output");
+    assert!(router.queue_stats().get("hosts").unwrap().as_arr().unwrap().is_empty());
 }
