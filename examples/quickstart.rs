@@ -30,7 +30,7 @@ fn main() -> anyhow::Result<()> {
 
     // One engine per core, built inside its worker thread.
     let factory = factory_for(p, "artifacts")?;
-    let pool = CorePool::new(cores, factory, Arc::new(Euler))?;
+    let pool = CorePool::builder(cores).factory(factory).rule(Arc::new(Euler)).build()?;
     let grid = TimeGrid::uniform(steps);
 
     // The initial latent: pure Gaussian noise (t=0 in the paper's convention).

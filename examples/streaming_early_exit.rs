@@ -25,7 +25,7 @@ fn main() -> anyhow::Result<()> {
     let steps = 50;
 
     let factory = factory_for(p, "artifacts")?;
-    let pool = CorePool::new(cores, factory, Arc::new(Euler))?;
+    let pool = CorePool::builder(cores).factory(factory).rule(Arc::new(Euler)).build()?;
     let grid = TimeGrid::uniform(steps);
     let mut rng = Rng::seeded(7);
     let x0 = Tensor::randn(&p.latent_dims(), &mut rng);

@@ -48,7 +48,10 @@ fn main() {
     });
 
     // Worker round-trip: the per-step coordination overhead per core.
-    let pool = CorePool::new(1, Arc::new(ExpOdeFactory::new(vec![16384], 0)), Arc::new(Euler))
+    let pool = CorePool::builder(1)
+        .factory(Arc::new(ExpOdeFactory::new(vec![16384], 0)))
+        .rule(Arc::new(Euler))
+        .build()
         .expect("pool");
     let x = Tensor::randn(&[16384], &mut rng);
     bench("worker_roundtrip_step/16384", 0.5, || {

@@ -44,6 +44,18 @@
 //! codecs so the comparison isolates the codec, not the host. Rows append
 //! with `"bench":"serving_wire"`.
 //!
+//! Part 7 prices preemption and drains. 7a runs the same contended
+//! scenario three ways — a low-priority batch job alone (baseline), with a
+//! latency-class request arriving mid-run under preemption off (the
+//! request waits the batch job out), and under preemption on (the batch
+//! job checkpoints, the request jumps in, the batch job resumes) — so the
+//! latency win and the batch-side checkpoint/resume overhead are both
+//! visible. Rows append with `"bench":"serving_preempt"`. 7b compares
+//! `chords drain` against abrupt host death with a job in flight on a
+//! remote engine bank: drain migrates the in-flight waves to survivors
+//! (zero failures), a kill forces the failover machinery to recover them
+//! the hard way. Rows append with `"bench":"serving_drain"`.
+//!
 //! One JSON object per configuration (the repo's JSON bench-table
 //! convention), preceded by a human-readable line; the full table is also
 //! written to `BENCH_serving.json` as the perf-trajectory baseline.
@@ -547,6 +559,165 @@ fn sweep_soak() -> Vec<Json> {
     rows
 }
 
+/// Part 7a: what one preemption costs. `mode` is `"alone"` (the batch job
+/// with the budget to itself), `"wait"` (a latency-class request arrives
+/// mid-run but preemption is off, so it queues until the batch job
+/// finishes), or `"preempt"` (preemption on: the batch job checkpoints at
+/// its next lockstep boundary, the latency request runs, the batch job
+/// resumes from the checkpoint). `batch_ms` vs the baseline prices the
+/// checkpoint/resume overhead; `ui_ms` across `wait`/`preempt` prices the
+/// latency win.
+fn sweep_preempt(mode: &str) -> Json {
+    let mut cfg = ServeConfig { total_cores: 4, queue_cap: 64, ..ServeConfig::default() };
+    cfg.set("tenant_quota", "ui=2:0:latency:200").unwrap();
+    if mode == "preempt" {
+        cfg.set("preemption", "true").unwrap();
+    }
+    let router = Arc::new(Router::with_opts("artifacts", cfg));
+    let batch_req = GenRequest {
+        model: "exp-ode-slow".into(),
+        steps: 120,
+        cores: 4,
+        seed: 3,
+        priority: -1,
+        ..GenRequest::default()
+    };
+    let r2 = router.clone();
+    let req2 = batch_req.clone();
+    let batch = std::thread::spawn(move || {
+        let t = Instant::now();
+        r2.generate(&req2, |_, _, _| {}).expect("batch job failed");
+        t.elapsed().as_secs_f64()
+    });
+    // Let the batch job take the whole budget before the latency request.
+    while stat(&router.queue_stats(), "cores_in_use") < 4.0 {
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    let ui_ms = if mode == "alone" {
+        0.0
+    } else {
+        let ui_req = GenRequest {
+            model: "exp-ode-slow".into(),
+            tenant: "ui".into(),
+            steps: 30,
+            cores: 4,
+            seed: 4,
+            deadline_ms: Some(30_000),
+            ..GenRequest::default()
+        };
+        let t = Instant::now();
+        router.generate(&ui_req, |_, _, _| {}).expect("latency request failed");
+        t.elapsed().as_secs_f64() * 1e3
+    };
+    let batch_ms = batch.join().expect("batch thread panicked") * 1e3;
+    let stats = router.queue_stats();
+    println!(
+        "{mode:<8} batch {batch_ms:7.1}ms | latency req {ui_ms:7.1}ms | preemptions {} resume {:7.1}µs",
+        stat(&stats, "preemptions"),
+        stat(&stats, "resume_latency_us"),
+    );
+    Json::obj(vec![
+        ("bench", Json::str("serving_preempt")),
+        ("model", Json::str("exp-ode-slow")),
+        ("total_cores", Json::num(4.0)),
+        ("mode", Json::str(mode)),
+        ("batch_steps", Json::num(120.0)),
+        ("ui_steps", Json::num(30.0)),
+        ("batch_ms", Json::num(batch_ms)),
+        ("ui_ms", Json::num(ui_ms)),
+        ("preemptions", Json::num(stat(&stats, "preemptions"))),
+        ("resume_latency_us", Json::num(stat(&stats, "resume_latency_us"))),
+    ])
+}
+
+/// Part 7b: drain vs kill. A job runs on a model whose failover set spans
+/// the local bank plus one pinned remote engine host; once waves land on
+/// the remote member, `mode` either leaves it alone (`"none"`), detaches
+/// it gracefully (`"drain"` — in-flight waves migrate to the survivors,
+/// zero failures), or drops the host outright (`"kill"` — the failover
+/// machinery recovers the lost waves the hard way, priced in
+/// `wave_failures`/`remote_failovers` and wall time).
+fn sweep_drain(mode: &str) -> Json {
+    let mut cfg = ServeConfig { total_cores: 4, queue_cap: 64, ..ServeConfig::default() };
+    let p = chords::config::preset("gauss-mix-slow").unwrap();
+    let h = EngineHost::new(
+        chords::engine::factory_for(p, "artifacts").unwrap(),
+        "gauss-mix-slow",
+        BatchOpts { engines: 2, max_batch: 8, linger: Duration::from_micros(200) },
+    )
+    .expect("engine host");
+    let mut host = Some(h);
+    let addr = host.as_mut().unwrap().serve_tcp("127.0.0.1", 0).expect("bind engine host");
+    let label = format!("tcp:{addr}");
+    cfg.set("remote_bank", &format!("{addr}=gauss-mix-slow")).unwrap();
+    let router = Arc::new(Router::with_opts("artifacts", cfg));
+    let req = GenRequest {
+        model: "gauss-mix-slow".into(),
+        steps: 120,
+        cores: 4,
+        seed: 5,
+        ..GenRequest::default()
+    };
+    let r2 = router.clone();
+    let req2 = req.clone();
+    let t0 = Instant::now();
+    let job = std::thread::spawn(move || {
+        r2.generate(&req2, |_, _, _| {}).expect("job across the drain failed");
+    });
+    if mode != "none" {
+        // Disrupt only once waves have landed on the remote member.
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while Instant::now() < deadline {
+            let waves = router
+                .queue_stats()
+                .get("banks")
+                .and_then(|b| b.as_arr())
+                .and_then(|a| {
+                    a.iter()
+                        .find(|b| b.get("bank").and_then(|l| l.as_str()) == Some(label.as_str()))
+                        .and_then(|b| b.get("waves"))
+                        .and_then(|v| v.as_f64())
+                })
+                .unwrap_or(0.0);
+            if waves >= 1.0 {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        if mode == "drain" {
+            router.drain_host(&label);
+        } else {
+            host.take();
+        }
+    }
+    job.join().expect("job thread panicked");
+    let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+    let stats = router.queue_stats();
+    let wave_failures: f64 = stats
+        .get("banks")
+        .and_then(|b| b.as_arr())
+        .map(|a| a.iter().filter_map(|b| b.get("wave_failures")?.as_f64()).sum())
+        .unwrap_or(0.0);
+    println!(
+        "{mode:<6} job {wall_ms:7.1}ms | migrations {} failovers {} wave_failures {}",
+        stat(&stats, "migrations"),
+        stat(&stats, "remote_failovers"),
+        wave_failures,
+    );
+    drop(host);
+    Json::obj(vec![
+        ("bench", Json::str("serving_drain")),
+        ("model", Json::str("gauss-mix-slow")),
+        ("total_cores", Json::num(4.0)),
+        ("mode", Json::str(mode)),
+        ("steps", Json::num(120.0)),
+        ("wall_ms", Json::num(wall_ms)),
+        ("migrations", Json::num(stat(&stats, "migrations"))),
+        ("remote_failovers", Json::num(stat(&stats, "remote_failovers"))),
+        ("wave_failures", Json::num(wave_failures)),
+    ])
+}
+
 fn main() {
     println!("== serving benches: offered-load sweep over the elastic scheduler ==");
     let mut rows = Vec::new();
@@ -624,6 +795,44 @@ fn main() {
             "binary vs JSON-hex serialization: {:.2}x faster per wave (and no format/parse step to audit for exactness)",
             hex_ser / bin_ser
         );
+    }
+
+    println!("\n== preemption benches: checkpoint/restore under contention ==");
+    let mut batch_alone_ms = 0.0f64;
+    let mut wait_ui_ms = 0.0f64;
+    for mode in ["alone", "wait", "preempt"] {
+        let row = sweep_preempt(mode);
+        let batch_ms = row.get("batch_ms").and_then(|v| v.as_f64()).unwrap_or(0.0);
+        let ui_ms = row.get("ui_ms").and_then(|v| v.as_f64()).unwrap_or(0.0);
+        match mode {
+            "alone" => batch_alone_ms = batch_ms,
+            "wait" => wait_ui_ms = ui_ms,
+            _ if batch_alone_ms > 0.0 && wait_ui_ms > 0.0 => println!(
+                "preemption: latency req {wait_ui_ms:.1}ms → {ui_ms:.1}ms; batch pays +{:.1}ms over its uncontended baseline",
+                batch_ms - batch_alone_ms
+            ),
+            _ => {}
+        }
+        rows.push(row);
+    }
+
+    println!("\n== drain benches: graceful host drain vs abrupt death ==");
+    let mut undisturbed_ms = 0.0f64;
+    let mut drain_ms = 0.0f64;
+    for mode in ["none", "drain", "kill"] {
+        let row = sweep_drain(mode);
+        let wall = row.get("wall_ms").and_then(|v| v.as_f64()).unwrap_or(0.0);
+        match mode {
+            "none" => undisturbed_ms = wall,
+            "drain" => drain_ms = wall,
+            _ if undisturbed_ms > 0.0 => println!(
+                "vs the undisturbed baseline: drain +{:.1}ms (zero failures), kill +{:.1}ms (failover recovery)",
+                drain_ms - undisturbed_ms,
+                wall - undisturbed_ms
+            ),
+            _ => {}
+        }
+        rows.push(row);
     }
 
     println!("-- JSON bench table --");

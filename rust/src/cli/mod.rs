@@ -5,8 +5,16 @@
 use std::collections::BTreeMap;
 
 /// Boolean flags that never consume the following token as a value.
-const BARE_FLAGS: &[&str] =
-    &["trace", "verbose", "quiet", "markdown", "json", "no-reclaim", "adaptive-batching"];
+const BARE_FLAGS: &[&str] = &[
+    "trace",
+    "verbose",
+    "quiet",
+    "markdown",
+    "json",
+    "no-reclaim",
+    "adaptive-batching",
+    "preemption",
+];
 
 /// Parsed command line: a subcommand, positional args, `--flags`, and
 /// `key=value` overrides.
@@ -89,7 +97,11 @@ pub fn help_text() -> String {
         ("reward-sweep", "verify Thm 2.5 / Def 2.4 on the exponential-ODE reward"),
         (
             "serve",
-            "start the generation server (--port 7077 --total-cores 8 --queue-cap 64 [--no-reclaim] [--engines-per-model E --max-batch B --batch-linger-us U] [--adaptive-batching] [--model-budget m=E:B:L[:adaptive][:remote]] [--remote-bank host:port[=model]] [--register-port P] [--tenant-quota t=W:C[:slo]]; see README \"Tuning & adaptive batching\" and \"Multi-tenant fairness\")",
+            "start the generation server (--port 7077 --total-cores 8 --queue-cap 64 [--no-reclaim] [--engines-per-model E --max-batch B --batch-linger-us U] [--adaptive-batching] [--model-budget m=E:B:L[:adaptive][:remote]] [--remote-bank host:port[=model]] [--register-port P] [--tenant-quota t=W:C[:slo]] [--preemption]; see README \"Tuning & adaptive batching\" and \"Multi-tenant fairness\")",
+        ),
+        (
+            "drain",
+            "migrate in-flight waves off one engine host and detach it from every failover set (chords drain <host-label> --addr 127.0.0.1:7077); in-flight jobs fail over to surviving bank members, parked checkpoints stay pullable via state_pull",
         ),
         (
             "engine-serve",
@@ -158,6 +170,18 @@ mod tests {
         let a = parse(&["serve", "--adaptive-batching", "positional"]);
         assert!(a.has_flag("adaptive-batching"));
         assert_eq!(a.positional, vec!["positional".to_string()]);
+    }
+
+    #[test]
+    fn preemption_is_a_bare_flag() {
+        // `--preemption` must not swallow a following value token.
+        let a = parse(&["serve", "--preemption", "--tenant-quota", "ui=2:4:latency:250"]);
+        assert!(a.has_flag("preemption"));
+        assert_eq!(a.flag("preemption"), Some("true"));
+        assert_eq!(a.flag("tenant-quota"), Some("ui=2:4:latency:250"));
+        let h = help_text();
+        assert!(h.contains("--preemption"));
+        assert!(h.contains("drain"));
     }
 
     #[test]

@@ -194,6 +194,13 @@ pub struct ServeConfig {
     /// failover set without a restart; `None` (the default) disables the
     /// listener and hosts can only be pinned via `--remote-bank`.
     pub register_port: Option<u16>,
+    /// Allow the scheduler to preempt running jobs (`--preemption`): when
+    /// a latency-class tenant's request cannot be admitted, the
+    /// lowest-priority running job with strictly lower priority is asked
+    /// to pause at its next lockstep boundary, checkpointed, and requeued
+    /// at its original priority. Off by default — without it, jobs run to
+    /// completion exactly as before.
+    pub preemption: bool,
 }
 
 impl Default for ServeConfig {
@@ -212,6 +219,7 @@ impl Default for ServeConfig {
             remote_banks: Vec::new(),
             tenant_quotas: Vec::new(),
             register_port: None,
+            preemption: false,
         }
     }
 }
@@ -286,6 +294,9 @@ impl ServeConfig {
             "register_port" | "register-port" => {
                 self.register_port =
                     Some(value.parse().map_err(|e| format!("register_port: {e}"))?)
+            }
+            "preemption" => {
+                self.preemption = value.parse().map_err(|e| format!("preemption: {e}"))?
             }
             "tenant_quota" | "tenant-quota" => {
                 // Comma-separated list of t=W:C[:slo] specs; a repeated
@@ -398,6 +409,16 @@ mod tests {
         assert_eq!(s.register_port, Some(0), "port 0 = ephemeral");
         assert!(s.set("register_port", "notaport").is_err());
         assert!(s.set("register_port", "70000").is_err());
+    }
+
+    #[test]
+    fn serve_config_preemption_knob() {
+        let s = ServeConfig::default();
+        assert!(!s.preemption, "preemption is opt-in");
+        let mut s = ServeConfig::default();
+        s.set("preemption", "true").unwrap();
+        assert!(s.preemption);
+        assert!(s.set("preemption", "sometimes").is_err());
     }
 
     #[test]

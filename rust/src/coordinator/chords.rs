@@ -6,6 +6,14 @@
 //! coordinator thread, using drifts cached from phase 1 — zero extra NFEs),
 //! then states commit. Streaming outputs: core K emits first, core 1 last;
 //! core 1's output is bit-identical to the sequential solver.
+//!
+//! Checkpointing: the coordinator owns every piece of mutable run state
+//! (workers are stateless drift evaluators), and the schedule is a pure
+//! function of (seq, N, step). A [`JobCheckpoint`] — the step index plus one
+//! [`CoreState`] per logical core — therefore captures a run completely at
+//! any lockstep boundary; [`ChordsExecutor::run_from`] resumes it on *any*
+//! worker set with bitwise-identical results. This is the substrate for
+//! preemption and cross-host migration ([`crate::sched::dispatch`]).
 
 use super::events::TraceEvent;
 use super::rectify::apply_rectification;
@@ -14,6 +22,8 @@ use crate::solvers::TimeGrid;
 use crate::tensor::{ops, Tensor};
 use crate::util::timer::Timer;
 use crate::workers::{Job, WorkerSet};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
 
 /// Configuration for one CHORDS run.
 #[derive(Clone, Debug)]
@@ -98,16 +108,268 @@ impl ChordsResult {
     }
 }
 
-/// Per-core mutable state owned by the coordinator thread.
-struct CoreState {
+/// Per-core solver state at a lockstep boundary — the explicit, serializable
+/// form of what used to live in the executor's loop locals. Together with the
+/// step index (held by [`JobCheckpoint`]) this is the *entire* story of a
+/// logical core: its grid position is `scheduler.slot(step + 1, core)`, so it
+/// needs no separate field.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CoreState {
+    /// 1-based core id (matches the scheduler's numbering).
+    pub core: usize,
     /// Committed latent (at grid index `cur` of the upcoming step).
-    x: Tensor,
-    /// Anchor snapshot: the core's latent and drift at its last anchor
-    /// (Algorithm 1's `x^k_prev` plus the cached drift that makes
-    /// rectification free).
-    snap_x: Option<Tensor>,
-    snap_f: Option<Tensor>,
-    active: bool,
+    pub x: Tensor,
+    /// Anchor snapshot: the core's latent at its last anchor (Algorithm 1's
+    /// `x^k_prev`). `None` until the core first passes an anchor.
+    pub snap_x: Option<Tensor>,
+    /// The drift cached alongside `snap_x` (makes rectification free).
+    pub snap_f: Option<Tensor>,
+    /// Whether the core is still stepping (`false` once it emitted).
+    pub active: bool,
+}
+
+/// A complete run snapshot at a lockstep boundary: `checkpoint` of every
+/// core plus the streamed-output / accounting prefix. Produced by
+/// [`ChordsExecutor::run_from`] when a [`PauseFlag`] is raised; consumed by
+/// the same method to resume — on the same pool, a different [`WorkerSet`],
+/// or (via the `state_push`/`state_pull` wire ops) a different host.
+#[derive(Clone, Debug)]
+pub struct JobCheckpoint {
+    /// Lockstep steps already completed; resumption begins at `step + 1`.
+    pub step: usize,
+    /// One [`CoreState`] per logical core, core 1 first.
+    pub cores: Vec<CoreState>,
+    /// Outputs already streamed before the checkpoint was taken.
+    pub outputs: Vec<CoreOutput>,
+    /// NFEs spent so far across all cores.
+    pub total_nfes: u64,
+    /// Rectification events applied so far.
+    pub rectifications: usize,
+    /// Bytes moved core→core by rectifications so far.
+    pub comm_bytes: u64,
+    /// Trace events recorded so far. Carried across in-process resumes but
+    /// **not** by the wire codec ([`Self::to_bytes`]) — traces are a local
+    /// debugging aid, not solver state.
+    pub trace: Vec<TraceEvent>,
+}
+
+/// Checkpoint wire codec version (`to_bytes` / `from_bytes`).
+const CKPT_VERSION: u32 = 1;
+
+impl JobCheckpoint {
+    /// The checkpoint of a job that has not run yet: every core at `x0`,
+    /// step 0. `run_from` on this is exactly a fresh run.
+    pub fn fresh(x0: &Tensor, k: usize) -> JobCheckpoint {
+        JobCheckpoint {
+            step: 0,
+            cores: (1..=k)
+                .map(|core| CoreState {
+                    core,
+                    x: x0.clone(),
+                    snap_x: None,
+                    snap_f: None,
+                    active: true,
+                })
+                .collect(),
+            outputs: Vec::new(),
+            total_nfes: 0,
+            rectifications: 0,
+            comm_bytes: 0,
+            trace: Vec::new(),
+        }
+    }
+
+    /// State of one core, by 1-based id.
+    pub fn core_state(&self, core: usize) -> Option<&CoreState> {
+        self.cores.iter().find(|c| c.core == core)
+    }
+
+    /// Serialize to the binary checkpoint codec (little-endian, raw f32
+    /// payloads — bitwise exact, like the drift wire frames). Trace events
+    /// are intentionally dropped; everything the solver needs survives.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let dims: &[usize] = self.cores.first().map(|c| c.x.dims()).unwrap_or(&[]);
+        let mut out = Vec::new();
+        push_u32(&mut out, CKPT_VERSION);
+        push_u32(&mut out, self.step as u32);
+        push_u32(&mut out, self.cores.len() as u32);
+        push_u32(&mut out, dims.len() as u32);
+        for d in dims {
+            push_u32(&mut out, *d as u32);
+        }
+        for c in &self.cores {
+            push_u32(&mut out, c.core as u32);
+            out.push(c.active as u8);
+            out.push(c.snap_x.is_some() as u8);
+            push_f32s(&mut out, c.x.data());
+            if let (Some(sx), Some(sf)) = (&c.snap_x, &c.snap_f) {
+                push_f32s(&mut out, sx.data());
+                push_f32s(&mut out, sf.data());
+            }
+        }
+        push_u32(&mut out, self.outputs.len() as u32);
+        for o in &self.outputs {
+            push_u32(&mut out, o.core as u32);
+            push_u32(&mut out, o.nfe_depth as u32);
+            push_u32(&mut out, o.step as u32);
+            out.extend_from_slice(&o.wall_s.to_le_bytes());
+            push_f32s(&mut out, o.output.data());
+        }
+        out.extend_from_slice(&self.total_nfes.to_le_bytes());
+        push_u32(&mut out, self.rectifications as u32);
+        out.extend_from_slice(&self.comm_bytes.to_le_bytes());
+        out
+    }
+
+    /// Decode a checkpoint produced by [`Self::to_bytes`]. Every read is
+    /// bounds-checked so truncated or corrupt payloads fail cleanly.
+    pub fn from_bytes(buf: &[u8]) -> Result<JobCheckpoint, String> {
+        let mut cur = CkptCursor { buf, pos: 0 };
+        let version = cur.u32()?;
+        if version != CKPT_VERSION {
+            return Err(format!("checkpoint version {version} (expected {CKPT_VERSION})"));
+        }
+        let step = cur.u32()? as usize;
+        let k = cur.u32()? as usize;
+        let ndims = cur.u32()? as usize;
+        if ndims > 8 {
+            return Err(format!("checkpoint has {ndims} dims (max 8)"));
+        }
+        let mut dims = Vec::with_capacity(ndims);
+        for _ in 0..ndims {
+            dims.push(cur.u32()? as usize);
+        }
+        let numel: usize = dims.iter().try_fold(1usize, |acc, d| acc.checked_mul(*d)).ok_or(
+            "checkpoint dims overflow".to_string(),
+        )?;
+        if k == 0 || k > 4096 {
+            return Err(format!("checkpoint has {k} cores"));
+        }
+        let mut cores = Vec::with_capacity(k);
+        for _ in 0..k {
+            let core = cur.u32()? as usize;
+            let active = cur.u8()? != 0;
+            let has_snap = cur.u8()? != 0;
+            let x = Tensor::from_vec(&dims, cur.f32s(numel)?);
+            let (snap_x, snap_f) = if has_snap {
+                (
+                    Some(Tensor::from_vec(&dims, cur.f32s(numel)?)),
+                    Some(Tensor::from_vec(&dims, cur.f32s(numel)?)),
+                )
+            } else {
+                (None, None)
+            };
+            cores.push(CoreState { core, x, snap_x, snap_f, active });
+        }
+        let n_out = cur.u32()? as usize;
+        if n_out > k {
+            return Err(format!("checkpoint has {n_out} outputs for {k} cores"));
+        }
+        let mut outputs = Vec::with_capacity(n_out);
+        for _ in 0..n_out {
+            let core = cur.u32()? as usize;
+            let nfe_depth = cur.u32()? as usize;
+            let ostep = cur.u32()? as usize;
+            let wall_s = f64::from_le_bytes(cur.bytes(8)?.try_into().unwrap());
+            let output = Tensor::from_vec(&dims, cur.f32s(numel)?);
+            outputs.push(CoreOutput { core, output, nfe_depth, wall_s, step: ostep });
+        }
+        let total_nfes = u64::from_le_bytes(cur.bytes(8)?.try_into().unwrap());
+        let rectifications = cur.u32()? as usize;
+        let comm_bytes = u64::from_le_bytes(cur.bytes(8)?.try_into().unwrap());
+        if cur.pos != buf.len() {
+            return Err(format!("{} trailing bytes after checkpoint", buf.len() - cur.pos));
+        }
+        Ok(JobCheckpoint {
+            step,
+            cores,
+            outputs,
+            total_nfes,
+            rectifications,
+            comm_bytes,
+            trace: Vec::new(),
+        })
+    }
+}
+
+fn push_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn push_f32s(out: &mut Vec<u8>, vals: &[f32]) {
+    out.reserve(vals.len() * 4);
+    for v in vals {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+}
+
+/// Bounds-checked reader over a checkpoint payload.
+struct CkptCursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> CkptCursor<'a> {
+    fn bytes(&mut self, n: usize) -> Result<&'a [u8], String> {
+        let end = self.pos.checked_add(n).filter(|e| *e <= self.buf.len()).ok_or_else(|| {
+            format!("checkpoint truncated at byte {} (need {n} more)", self.pos)
+        })?;
+        let s = &self.buf[self.pos..end];
+        self.pos = end;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8, String> {
+        Ok(self.bytes(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32, String> {
+        Ok(u32::from_le_bytes(self.bytes(4)?.try_into().unwrap()))
+    }
+
+    fn f32s(&mut self, n: usize) -> Result<Vec<f32>, String> {
+        let raw = self.bytes(n.checked_mul(4).ok_or("checkpoint numel overflow")?)?;
+        Ok(raw.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect())
+    }
+}
+
+/// Cooperative pause signal checked by [`ChordsExecutor::run_from`] at every
+/// lockstep boundary. Cloneable; raising any clone pauses the run at the next
+/// boundary, after the in-flight wave fully drains (so no stray replies leak
+/// into the pool's next job).
+#[derive(Clone, Debug, Default)]
+pub struct PauseFlag(Arc<AtomicBool>);
+
+impl PauseFlag {
+    /// A fresh, un-raised flag.
+    pub fn new() -> PauseFlag {
+        PauseFlag::default()
+    }
+
+    /// Ask the run to pause at the next lockstep boundary.
+    pub fn raise(&self) {
+        self.0.store(true, Ordering::SeqCst);
+    }
+
+    /// Clear the flag (done before resuming from the checkpoint).
+    pub fn clear(&self) {
+        self.0.store(false, Ordering::SeqCst);
+    }
+
+    /// Whether the flag is currently raised.
+    pub fn is_raised(&self) -> bool {
+        self.0.load(Ordering::SeqCst)
+    }
+}
+
+/// What [`ChordsExecutor::run_from`] produced: a finished result, or a
+/// checkpoint taken because the [`PauseFlag`] was raised mid-run.
+#[derive(Debug)]
+pub enum RunOutcome {
+    /// The run completed (or early-exited).
+    Done(ChordsResult),
+    /// The run paused; resume by passing the checkpoint back to `run_from`.
+    Paused(JobCheckpoint),
 }
 
 /// The Algorithm 1 executor. Drives any [`WorkerSet`] — a whole
@@ -170,30 +432,56 @@ impl<'a> ChordsExecutor<'a> {
     pub fn try_run_streaming_with_retire(
         &self,
         x0: &Tensor,
+        on_output: impl FnMut(&CoreOutput),
+        on_retire: impl FnMut(usize),
+    ) -> Result<ChordsResult, String> {
+        let ckpt = JobCheckpoint::fresh(x0, self.sched.cores());
+        match self.run_from(ckpt, on_output, on_retire, None)? {
+            RunOutcome::Done(res) => Ok(res),
+            RunOutcome::Paused(_) => unreachable!("paused without a pause flag"),
+        }
+    }
+
+    /// The preemptible core of the executor: run from a [`JobCheckpoint`]
+    /// (use [`JobCheckpoint::fresh`] for a new job), pausing at the next
+    /// lockstep boundary if `pause` is raised. Because the schedule is a pure
+    /// function of (seq, N, step) and workers are stateless, resuming the
+    /// returned checkpoint — on this pool or any other [`WorkerSet`] of
+    /// sufficient size — produces bitwise-identical outputs to an
+    /// uninterrupted run. `on_output`/`on_retire` fire only for outputs
+    /// produced in *this* segment, not ones replayed from the checkpoint.
+    pub fn run_from(
+        &self,
+        ckpt: JobCheckpoint,
         mut on_output: impl FnMut(&CoreOutput),
         mut on_retire: impl FnMut(usize),
-    ) -> Result<ChordsResult, String> {
+        pause: Option<&PauseFlag>,
+    ) -> Result<RunOutcome, String> {
         let k = self.sched.cores();
         let n = self.sched.steps();
         let grid = &self.cfg.grid;
         let timer = Timer::start();
+        let ck = ckpt.cores.len();
+        assert_eq!(ck, k, "checkpoint has {ck} cores, executor has {k}");
+        assert!(ckpt.step <= n, "checkpoint step {} beyond grid ({n} steps)", ckpt.step);
 
-        let mut cores: Vec<CoreState> = (0..k)
-            .map(|_| CoreState { x: x0.clone(), snap_x: None, snap_f: None, active: true })
-            .collect();
-        let mut outputs: Vec<CoreOutput> = Vec::with_capacity(k);
-        let mut trace: Vec<TraceEvent> = Vec::new();
-        let mut total_nfes = 0u64;
-        let mut rectifications = 0usize;
-        let mut comm_bytes = 0u64;
+        let JobCheckpoint {
+            step: done,
+            mut cores,
+            mut outputs,
+            mut total_nfes,
+            mut rectifications,
+            mut comm_bytes,
+            mut trace,
+        } = ckpt;
         let mut early_exited = false;
-        let elem_bytes = (x0.numel() * 4) as u64;
+        let elem_bytes = (cores[0].x.numel() * 4) as u64;
 
         // Phase-1 result slots, indexed by 0-based core.
         let mut stepped: Vec<Option<(Tensor, Tensor)>> = (0..k).map(|_| None).collect();
         let mut slots: Vec<Option<(usize, usize)>> = vec![None; k];
 
-        'steps: for step in 1..=n {
+        'steps: for step in done + 1..=n {
             // ---- Phase 1: all active cores advance in parallel ----
             // The wave goes out through one submit_batch call so a batched
             // pool can fuse the K drift evaluations into shared-engine
@@ -321,10 +609,26 @@ impl<'a> ChordsExecutor<'a> {
                     }
                 }
             }
+
+            // ---- Pause point: the wave is fully committed and nothing is
+            // in flight, so the loop locals *are* the whole run state.
+            // Checked after commit, so every `run_from` call makes at least
+            // one step of progress even with a permanently-raised flag.
+            if step < n && pause.map(|p| p.is_raised()).unwrap_or(false) {
+                return Ok(RunOutcome::Paused(JobCheckpoint {
+                    step,
+                    cores,
+                    outputs,
+                    total_nfes,
+                    rectifications,
+                    comm_bytes,
+                    trace,
+                }));
+            }
         }
 
         let last = outputs.last().expect("no outputs produced");
-        Ok(ChordsResult {
+        Ok(RunOutcome::Done(ChordsResult {
             final_output: last.output.clone(),
             nfe_depth: last.nfe_depth,
             outputs,
@@ -334,7 +638,7 @@ impl<'a> ChordsExecutor<'a> {
             rectifications,
             comm_bytes,
             trace,
-        })
+        }))
     }
 
     /// Run without a streaming callback.
@@ -354,7 +658,11 @@ mod tests {
     use std::sync::Arc;
 
     fn exp_pool(k: usize) -> CorePool {
-        CorePool::new(k, Arc::new(ExpOdeFactory::new(vec![4], 0)), Arc::new(Euler)).unwrap()
+        CorePool::builder(k)
+            .factory(Arc::new(ExpOdeFactory::new(vec![4], 0)))
+            .rule(Arc::new(Euler))
+            .build()
+            .unwrap()
     }
 
     fn x0() -> Tensor {
@@ -495,7 +803,7 @@ mod tests {
     #[test]
     fn works_on_mixture_engine() {
         let factory = Arc::new(GaussMixtureFactory::standard(vec![8], 3, 0));
-        let pool = CorePool::new(4, factory, Arc::new(Euler)).unwrap();
+        let pool = CorePool::builder(4).factory(factory).rule(Arc::new(Euler)).build().unwrap();
         let grid = TimeGrid::uniform(40);
         let mut rng = Rng::seeded(1);
         let x0 = Tensor::randn(&[8], &mut rng);
@@ -563,5 +871,157 @@ mod tests {
         assert_eq!(res.final_output, seq.output);
         assert_eq!(res.outputs.len(), 1);
         assert_eq!(res.rectifications, 0);
+    }
+
+    /// Drive a run one lockstep at a time with a permanently-raised pause
+    /// flag, resuming each checkpoint on the executor `pick` selects.
+    fn single_step_run(
+        execs: &[&ChordsExecutor],
+        mut ckpt: JobCheckpoint,
+        mut pick: impl FnMut(usize) -> usize,
+    ) -> (ChordsResult, usize) {
+        let pause = PauseFlag::new();
+        pause.raise();
+        let mut segments = 0usize;
+        loop {
+            let exec = execs[pick(segments) % execs.len()];
+            match exec.run_from(ckpt, |_| {}, |_| {}, Some(&pause)).unwrap() {
+                RunOutcome::Done(res) => return (res, segments),
+                RunOutcome::Paused(next) => {
+                    segments += 1;
+                    ckpt = next;
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn pause_at_every_step_is_bitwise_identical() {
+        // Pausing after every single lockstep and resuming — each time on a
+        // *different* pool — must reproduce the uninterrupted run exactly.
+        let pool_a = exp_pool(4);
+        let pool_b = exp_pool(4);
+        let grid = TimeGrid::uniform(50);
+        let cfg = ChordsConfig::new(vec![0, 8, 16, 32], grid);
+        let exec_a = ChordsExecutor::new(&pool_a, cfg.clone());
+        let exec_b = ChordsExecutor::new(&pool_b, cfg);
+        let baseline = exec_a.run(&x0());
+
+        let ckpt = JobCheckpoint::fresh(&x0(), 4);
+        let (res, segments) = single_step_run(&[&exec_a, &exec_b], ckpt, |i| i);
+        assert_eq!(segments, 49, "one pause per non-final step");
+        assert_eq!(res.final_output, baseline.final_output, "bitwise identity violated");
+        assert_eq!(res.outputs.len(), baseline.outputs.len());
+        for (a, b) in res.outputs.iter().zip(&baseline.outputs) {
+            assert_eq!(a.output, b.output, "core {} output differs", a.core);
+            assert_eq!(a.nfe_depth, b.nfe_depth);
+        }
+        assert_eq!(res.total_nfes, baseline.total_nfes);
+        assert_eq!(res.rectifications, baseline.rectifications);
+    }
+
+    #[test]
+    fn checkpoint_codec_roundtrips_mid_run() {
+        let pool = exp_pool(4);
+        let grid = TimeGrid::uniform(50);
+        let cfg = ChordsConfig::new(vec![0, 8, 16, 32], grid);
+        let exec = ChordsExecutor::new(&pool, cfg);
+        let baseline = exec.run(&x0());
+
+        // Pause mid-run (after the first emission has happened), serialize,
+        // deserialize, and resume from the decoded bytes.
+        let pause = PauseFlag::new();
+        pause.raise();
+        let mut ckpt = JobCheckpoint::fresh(&x0(), 4);
+        for _ in 0..25 {
+            match exec.run_from(ckpt, |_| {}, |_| {}, Some(&pause)).unwrap() {
+                RunOutcome::Paused(next) => ckpt = next,
+                RunOutcome::Done(_) => panic!("run finished before step 25"),
+            }
+        }
+        assert_eq!(ckpt.step, 25);
+        assert!(!ckpt.outputs.is_empty(), "core 4 emits at depth 21");
+        let decoded = JobCheckpoint::from_bytes(&ckpt.to_bytes()).unwrap();
+        assert_eq!(decoded.step, ckpt.step);
+        assert_eq!(decoded.cores, ckpt.cores);
+        assert_eq!(decoded.total_nfes, ckpt.total_nfes);
+        assert_eq!(decoded.outputs.len(), ckpt.outputs.len());
+        pause.clear();
+        let res = match exec.run_from(decoded, |_| {}, |_| {}, None).unwrap() {
+            RunOutcome::Done(res) => res,
+            RunOutcome::Paused(_) => unreachable!(),
+        };
+        assert_eq!(res.final_output, baseline.final_output, "bitwise identity violated");
+        assert_eq!(res.total_nfes, baseline.total_nfes);
+    }
+
+    #[test]
+    fn checkpoint_codec_rejects_corrupt_payloads() {
+        let ckpt = JobCheckpoint::fresh(&x0(), 4);
+        let bytes = ckpt.to_bytes();
+        assert!(JobCheckpoint::from_bytes(&bytes[..bytes.len() - 1]).is_err(), "truncated");
+        let mut extra = bytes.clone();
+        extra.push(0);
+        assert!(JobCheckpoint::from_bytes(&extra).is_err(), "trailing bytes");
+        let mut bad_version = bytes;
+        bad_version[0] = 99;
+        assert!(JobCheckpoint::from_bytes(&bad_version).is_err(), "version");
+        assert!(JobCheckpoint::from_bytes(&[]).is_err(), "empty");
+    }
+
+    #[test]
+    fn retire_and_output_hooks_fire_only_for_new_segments() {
+        // A resumed run must not replay emissions from before the pause.
+        let pool = exp_pool(4);
+        let grid = TimeGrid::uniform(50);
+        let cfg = ChordsConfig::new(vec![0, 8, 16, 32], grid);
+        let exec = ChordsExecutor::new(&pool, cfg);
+        let pause = PauseFlag::new();
+        pause.raise();
+        let mut ckpt = JobCheckpoint::fresh(&x0(), 4);
+        for _ in 0..30 {
+            match exec.run_from(ckpt, |_| {}, |_| {}, Some(&pause)).unwrap() {
+                RunOutcome::Paused(next) => ckpt = next,
+                RunOutcome::Done(_) => panic!("run finished before step 30"),
+            }
+        }
+        // Cores 4 (depth 21) and 3 (depth 28) already emitted.
+        assert_eq!(ckpt.outputs.iter().map(|o| o.core).collect::<Vec<_>>(), vec![4, 3]);
+        pause.clear();
+        let mut streamed = Vec::new();
+        let mut retired = Vec::new();
+        let res = match exec
+            .run_from(ckpt, |o| streamed.push(o.core), |c| retired.push(c), Some(&pause))
+            .unwrap()
+        {
+            RunOutcome::Done(res) => res,
+            RunOutcome::Paused(_) => unreachable!(),
+        };
+        assert_eq!(streamed, vec![2, 1], "only post-resume emissions stream");
+        assert_eq!(retired, vec![1, 0]);
+        assert_eq!(res.outputs.len(), 4, "result still carries the full set");
+    }
+
+    #[test]
+    fn pause_after_final_step_still_completes() {
+        // A flag raised during the last lockstep must not strand the job.
+        let pool = exp_pool(1);
+        let grid = TimeGrid::uniform(5);
+        let cfg = ChordsConfig::new(vec![0], grid);
+        let exec = ChordsExecutor::new(&pool, cfg);
+        let pause = PauseFlag::new();
+        let mut ckpt = JobCheckpoint::fresh(&x0(), 1);
+        pause.raise();
+        for _ in 0..4 {
+            match exec.run_from(ckpt, |_| {}, |_| {}, Some(&pause)).unwrap() {
+                RunOutcome::Paused(next) => ckpt = next,
+                RunOutcome::Done(_) => panic!("finished early"),
+            }
+        }
+        assert_eq!(ckpt.step, 4);
+        match exec.run_from(ckpt, |_| {}, |_| {}, Some(&pause)).unwrap() {
+            RunOutcome::Done(res) => assert_eq!(res.nfe_depth, 5),
+            RunOutcome::Paused(_) => panic!("paused on the final step"),
+        }
     }
 }

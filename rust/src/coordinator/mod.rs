@@ -25,7 +25,10 @@ pub mod scheduler;
 pub mod sequential;
 pub mod srds;
 
-pub use chords::{ChordsConfig, ChordsExecutor, ChordsResult, CoreOutput};
+pub use chords::{
+    ChordsConfig, ChordsExecutor, ChordsResult, CoreOutput, CoreState, JobCheckpoint, PauseFlag,
+    RunOutcome,
+};
 pub use init_seq::{continuous_init_sequence, discrete_init_sequence, InitStrategy};
 pub use paradigms::{ParaDigms, ParaDigmsResult};
 pub use scheduler::Scheduler;

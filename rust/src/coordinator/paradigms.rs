@@ -127,7 +127,11 @@ mod tests {
     use std::sync::Arc;
 
     fn pool(k: usize) -> CorePool {
-        CorePool::new(k, Arc::new(ExpOdeFactory::new(vec![4], 0)), Arc::new(Euler)).unwrap()
+        CorePool::builder(k)
+            .factory(Arc::new(ExpOdeFactory::new(vec![4], 0)))
+            .rule(Arc::new(Euler))
+            .build()
+            .unwrap()
     }
 
     fn x0() -> Tensor {
@@ -179,7 +183,7 @@ mod tests {
     #[test]
     fn runs_on_mixture() {
         let factory = Arc::new(GaussMixtureFactory::standard(vec![8], 3, 0));
-        let p = CorePool::new(6, factory, Arc::new(Euler)).unwrap();
+        let p = CorePool::builder(6).factory(factory).rule(Arc::new(Euler)).build().unwrap();
         let grid = TimeGrid::uniform(40);
         let mut rng = Rng::seeded(2);
         let x0 = Tensor::randn(&[8], &mut rng);

@@ -60,8 +60,11 @@ mod tests {
 
     #[test]
     fn converges_to_exact() {
-        let pool =
-            CorePool::new(1, Arc::new(ExpOdeFactory::new(vec![2], 0)), Arc::new(Euler)).unwrap();
+        let pool = CorePool::builder(1)
+            .factory(Arc::new(ExpOdeFactory::new(vec![2], 0)))
+            .rule(Arc::new(Euler))
+            .build()
+            .unwrap();
         let x0 = Tensor::from_vec(&[2], vec![1.0, 2.0]);
         let exact = ExpOde::new(vec![2], 0).exact(&x0, 1.0);
         let coarse = sequential_solve(&pool, &TimeGrid::uniform(25), &x0);
@@ -72,8 +75,11 @@ mod tests {
 
     #[test]
     fn trajectory_has_n_plus_one_states() {
-        let pool =
-            CorePool::new(1, Arc::new(ExpOdeFactory::new(vec![2], 0)), Arc::new(Euler)).unwrap();
+        let pool = CorePool::builder(1)
+            .factory(Arc::new(ExpOdeFactory::new(vec![2], 0)))
+            .rule(Arc::new(Euler))
+            .build()
+            .unwrap();
         let x0 = Tensor::from_vec(&[2], vec![1.0, 0.0]);
         let r = sequential_solve_with_trajectory(&pool, &TimeGrid::uniform(10), &x0);
         let tr = r.trajectory.unwrap();

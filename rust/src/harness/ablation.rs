@@ -82,7 +82,7 @@ pub fn ablate_step_rule(
     for rule_name in ["euler", "heun", "midpoint"] {
         let factory = factory_for(preset, artifacts_dir)?;
         let rule = rule_by_name(rule_name).unwrap();
-        let pool = CorePool::new(k, factory, Arc::from(rule))?;
+        let pool = CorePool::builder(k).factory(factory).rule(Arc::from(rule)).build()?;
         let grid = crate::solvers::TimeGrid::uniform(steps);
         let workload = Workload::new(preset.latent_dims(), seed, samples);
         let seq = discrete_init_sequence(&InitStrategy::Paper, k, steps);

@@ -56,7 +56,7 @@ impl Bench {
     pub fn new(model: &str, steps: usize, max_cores: usize, artifacts_dir: &str) -> Result<Bench> {
         let p = preset(model).ok_or_else(|| anyhow!("unknown preset '{model}'"))?;
         let factory = factory_for(p, artifacts_dir)?;
-        let pool = CorePool::new(max_cores, factory, Arc::new(Euler))?;
+        let pool = CorePool::builder(max_cores).factory(factory).rule(Arc::new(Euler)).build()?;
         Ok(Bench {
             preset: p,
             pool,

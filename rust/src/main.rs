@@ -101,6 +101,7 @@ fn dispatch(args: &Args) -> Result<()> {
         "reward-sweep" => cmd_reward_sweep()?,
         "serve" => cmd_serve(args)?,
         "engine-serve" => cmd_engine_serve(args)?,
+        "drain" => cmd_drain(args)?,
         "inspect-artifacts" => cmd_inspect(args)?,
         other => {
             eprintln!("unknown command '{other}'\n\n{}", help_text());
@@ -224,6 +225,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         ("remote-bank", "remote_bank"),
         ("register-port", "register_port"),
         ("tenant-quota", "tenant_quota"),
+        ("preemption", "preemption"),
     ] {
         if let Some(v) = args.flag(flag) {
             cfg.set(key, v).map_err(|e| anyhow!("--{flag}: {e}"))?;
@@ -291,7 +293,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
             q.slo.as_wire()
         );
     }
-    println!("protocol: JSON lines; ops: ping | stats | queue_stats | generate");
+    if cfg.preemption {
+        println!(
+            "preemption: starved latency-class tenants pause lower-priority jobs at lockstep boundaries (counters: preemptions / resume_latency_us in queue_stats)"
+        );
+    }
+    println!("protocol: JSON lines; ops: ping | stats | queue_stats | generate | drain");
     // Serve until killed.
     loop {
         std::thread::sleep(std::time::Duration::from_secs(3600));
@@ -358,6 +365,39 @@ fn cmd_engine_serve(args: &Args) -> Result<()> {
     // Serve until killed.
     loop {
         std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}
+
+/// `chords drain <host-label>`: ask a running server to migrate in-flight
+/// waves off one engine host and detach it from every model's failover
+/// set. The label is the connector label shown in `queue_stats` "banks" /
+/// "hosts" (e.g. `tcp:10.0.0.2:7078`). Safe to run with jobs in flight:
+/// failover requeues their outstanding waves onto surviving members, so
+/// drains complete with zero failed jobs.
+fn cmd_drain(args: &Args) -> Result<()> {
+    use chords::util::json::Json;
+    let host = args
+        .positional
+        .first()
+        .ok_or_else(|| anyhow!("usage: chords drain <host-label> [--addr 127.0.0.1:7077]"))?;
+    let addr = args.flag("addr").unwrap_or("127.0.0.1:7077");
+    let sock = std::net::ToSocketAddrs::to_socket_addrs(addr)?
+        .next()
+        .ok_or_else(|| anyhow!("--addr '{addr}' resolved to no address"))?;
+    let mut client = chords::server::Client::connect(sock)?;
+    let req = Json::obj(vec![("op", Json::str("drain")), ("host", Json::str(host))]);
+    let responses = client.call(&req)?;
+    let last = responses.last().ok_or_else(|| anyhow!("no response from server"))?;
+    match last.get("type").and_then(|t| t.as_str()) {
+        Some("drain_ok") => {
+            let migrated = last.get("migrated").and_then(|m| m.as_usize()).unwrap_or(0);
+            println!("drained '{host}': {migrated} attachment(s) detached, waves migrated");
+            Ok(())
+        }
+        _ => Err(anyhow!(
+            "drain failed: {}",
+            last.get("message").and_then(|m| m.as_str()).unwrap_or("unexpected reply")
+        )),
     }
 }
 

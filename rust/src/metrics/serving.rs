@@ -297,6 +297,15 @@ pub struct ServingMetrics {
     /// Engine hosts dropped from their failover sets after their
     /// registration connection died or they explicitly left.
     pub hosts_deregistered: AtomicU64,
+    /// Jobs paused mid-run so their cores could be re-leased to a
+    /// latency-class tenant (each later resumes from its checkpoint).
+    pub preemptions: AtomicU64,
+    /// Checkpoints moved to a different engine host via `state_push` (host
+    /// drains and cross-host resumes).
+    pub migrations: AtomicU64,
+    /// Total microseconds preempted jobs spent between pausing and their
+    /// resumed run's first wave.
+    pub resume_latency_us: AtomicU64,
     started: Instant,
 }
 
@@ -327,6 +336,9 @@ impl Default for ServingMetrics {
             adaptive_batch_shrink: AtomicU64::new(0),
             hosts_registered: AtomicU64::new(0),
             hosts_deregistered: AtomicU64::new(0),
+            preemptions: AtomicU64::new(0),
+            migrations: AtomicU64::new(0),
+            resume_latency_us: AtomicU64::new(0),
             started: Instant::now(),
         }
     }
@@ -472,6 +484,12 @@ impl ServingMetrics {
                 "hosts_deregistered",
                 Json::num(self.hosts_deregistered.load(Ordering::Relaxed) as f64),
             ),
+            ("preemptions", Json::num(self.preemptions.load(Ordering::Relaxed) as f64)),
+            ("migrations", Json::num(self.migrations.load(Ordering::Relaxed) as f64)),
+            (
+                "resume_latency_us",
+                Json::num(self.resume_latency_us.load(Ordering::Relaxed) as f64),
+            ),
         ])
     }
 }
@@ -557,6 +575,9 @@ mod tests {
         assert_eq!(j.get("adaptive_models").unwrap().as_usize().unwrap(), 0);
         assert_eq!(j.get("hosts_registered").unwrap().as_usize().unwrap(), 0);
         assert_eq!(j.get("hosts_deregistered").unwrap().as_usize().unwrap(), 0);
+        assert_eq!(j.get("preemptions").unwrap().as_usize().unwrap(), 0);
+        assert_eq!(j.get("migrations").unwrap().as_usize().unwrap(), 0);
+        assert_eq!(j.get("resume_latency_us").unwrap().as_usize().unwrap(), 0);
     }
 
     #[test]

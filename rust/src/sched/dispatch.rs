@@ -22,6 +22,7 @@ use super::lease::CoreLease;
 use super::queue::{Reject, Ticket};
 use super::tenant::{FairQueue, TenantQuota, TenantRegistry, TenantState};
 use crate::config::{preset, EngineBudget, ModelPreset, RemoteBankSpec};
+use crate::coordinator::PauseFlag;
 use crate::engine::factory_for;
 use crate::metrics::{BatchStats, RemoteBankStats, ServingMetrics};
 use crate::solvers::Euler;
@@ -103,6 +104,15 @@ pub struct DispatchOpts {
     /// shedding stay off — the single-tenant path behaves exactly as
     /// before.
     pub tenant_quotas: Vec<TenantQuota>,
+    /// Let the scheduler preempt running jobs (`--preemption`): when a
+    /// latency-class tenant's ticket is starved of cores, the
+    /// lowest-priority running job with *strictly lower* priority is asked
+    /// to pause at its next lockstep boundary ([`JobGrant::pause_flag`]).
+    /// The runner checkpoints, releases every core through
+    /// [`JobGrant::preempt`] (refunding the tenant's core-seconds), and
+    /// re-enters the queue at its original priority to resume — on
+    /// whatever workers the next grant hands it.
+    pub preemption: bool,
 }
 
 impl Default for DispatchOpts {
@@ -120,6 +130,7 @@ impl Default for DispatchOpts {
             model_budgets: HashMap::new(),
             remote_banks: Vec::new(),
             tenant_quotas: Vec::new(),
+            preemption: false,
         }
     }
 }
@@ -178,6 +189,15 @@ pub struct JobSpec {
     pub deadline_ms: Option<u64>,
 }
 
+/// One running job's preemption handle: enough for the scheduler to pick a
+/// victim and ask it to pause. Registered by [`assign_workers`], removed by
+/// [`JobGrant::end`] / [`JobGrant::preempt`].
+struct RunningJob {
+    id: u64,
+    priority: i32,
+    pause: PauseFlag,
+}
+
 /// One model's shared worker pool plus the ids currently idle. The pool
 /// grows on demand ([`CorePool::attach`]) up to whatever the budget grants;
 /// retired/finished workers park on `free` as warm replicas.
@@ -234,6 +254,12 @@ struct Shared {
     controller: Mutex<AdaptiveController>,
     artifacts_dir: String,
     next_id: AtomicU64,
+    /// Jobs currently holding a grant, with the pause flags the scheduler
+    /// raises to preempt them. Shared with every [`JobGrant`] so ends and
+    /// preemptions deregister without a `Shared` reference.
+    running: Arc<Mutex<Vec<RunningJob>>>,
+    /// Preemption enabled ([`DispatchOpts::preemption`]).
+    preemption: bool,
 }
 
 impl Shared {
@@ -348,6 +374,8 @@ impl Dispatcher {
             controller,
             artifacts_dir: artifacts_dir.to_string(),
             next_id: AtomicU64::new(1),
+            running: Arc::new(Mutex::new(Vec::new())),
+            preemption: opts.preemption,
         });
         let shared2 = shared.clone();
         let thread = std::thread::Builder::new()
@@ -465,6 +493,44 @@ impl Dispatcher {
     /// counters (also exported as `queue_stats.tenants`).
     pub fn tenant_registry(&self) -> Arc<TenantRegistry> {
         self.shared.tenants.clone()
+    }
+
+    /// Drain an engine host by connector label: detach every failover-set
+    /// membership it holds — elastic registrations and `--remote-bank`
+    /// members alike. The failover bank requeues the departing member's
+    /// in-flight waves onto the surviving members, so running jobs finish
+    /// with zero failures; each detached membership counts one
+    /// `migrations`. Returns how many memberships were detached.
+    pub fn drain_host(&self, host: &str) -> usize {
+        let regs: Vec<(String, String)> = self
+            .shared
+            .registrations
+            .lock()
+            .unwrap()
+            .iter()
+            .filter(|r| r.label == host)
+            .map(|r| (r.model.clone(), r.label.clone()))
+            .collect();
+        let registry = self.host_registry();
+        let mut drained = 0usize;
+        for (model, label) in regs {
+            if crate::server::RegistrationSink::deregister(&registry, &model, &label) {
+                drained += 1;
+            }
+        }
+        // `--remote-bank` members never registered, so the sweep above
+        // missed them; edit the live failover sets directly.
+        let slots: Vec<Arc<ModelSlot>> =
+            self.shared.models.lock().unwrap().values().cloned().collect();
+        for slot in slots {
+            if let Some(ctl) = &slot.failover {
+                if ctl.remove_remote(host) {
+                    drained += 1;
+                }
+            }
+        }
+        self.shared.metrics.migrations.fetch_add(drained as u64, Ordering::Relaxed);
+        drained
     }
 
     /// Admit a job: enqueue into the tenant's fair lane, then block until
@@ -702,13 +768,12 @@ fn model_slot(shared: &Shared, model: &str) -> anyhow::Result<Arc<ModelSlot>> {
         match &resolved {
             Some(r) => {
                 let stats = BatchStats::with_parent(shared.metrics.batch.clone());
-                let pool = CorePool::new_batched_with_stats(
-                    0,
-                    factory,
-                    Arc::new(Euler),
-                    r.opts.clone(),
-                    stats.clone(),
-                )?;
+                let pool = CorePool::builder(0)
+                    .factory(factory)
+                    .rule(Arc::new(Euler))
+                    .batched(r.opts.clone())
+                    .batch_stats(stats.clone())
+                    .build()?;
                 pinned = r.pinned;
                 if r.adaptive {
                     register =
@@ -716,7 +781,7 @@ fn model_slot(shared: &Shared, model: &str) -> anyhow::Result<Arc<ModelSlot>> {
                 }
                 pool
             }
-            None => CorePool::new(0, factory, Arc::new(Euler))?,
+            None => CorePool::builder(0).factory(factory).rule(Arc::new(Euler)).build()?,
         }
     } else {
         // Remote capacity configured for this model: compose a failover
@@ -795,7 +860,7 @@ fn model_slot(shared: &Shared, model: &str) -> anyhow::Result<Arc<ModelSlot>> {
         let set_rstats = RemoteBankStats::new();
         let fb = FailoverBank::new(banks, local, stats.clone(), set_rstats.clone())?;
         failover = Some(fb.controller());
-        let pool = CorePool::new_with_bank(0, Box::new(fb), Arc::new(Euler))?;
+        let pool = CorePool::builder(0).bank(Box::new(fb)).rule(Arc::new(Euler)).build()?;
         // Remote connections are the model's expensive floor: pin the slot
         // so idle reaping detaches warm workers but keeps the banks warm.
         pinned = true;
@@ -897,6 +962,7 @@ fn pass(shared: &Arc<Shared>) {
                 .expect("spawn grant thread");
         }
     }
+    maybe_preempt(shared);
     reap_idle(shared);
     // Adaptive batching: fold the window's batch counters into each
     // registered model's tuner. Self-rate-limited per model; a no-op when
@@ -906,6 +972,34 @@ fn pass(shared: &Arc<Shared>) {
         if !ctl.is_empty() {
             ctl.tick(&shared.queue.depths_by_model(), Instant::now());
         }
+    }
+}
+
+/// The preemption trigger, run once per scheduling pass: when a
+/// latency-class tenant's ticket is starved (queued but needing more cores
+/// than the budget has free) and preemption is enabled, raise the pause
+/// flag of the lowest-priority running job whose priority is *strictly
+/// below* the starved ticket's. The victim's run loop observes the flag at
+/// its next lockstep boundary, checkpoints, and releases its cores through
+/// [`JobGrant::preempt`]; the freed cores let a subsequent pass grant the
+/// latency ticket. One victim per pass — preempting is expensive enough
+/// that the scheduler escalates gradually instead of flushing every
+/// low-priority job at once.
+fn maybe_preempt(shared: &Arc<Shared>) {
+    if !shared.preemption {
+        return;
+    }
+    let available = shared.budget.available();
+    let Some(starved) = shared.queue.starved_latency_priority(available) else {
+        return;
+    };
+    let running = shared.running.lock().unwrap();
+    if let Some(victim) = running
+        .iter()
+        .filter(|r| r.priority < starved && !r.pause.is_raised())
+        .min_by_key(|r| r.priority)
+    {
+        victim.pause.raise();
     }
 }
 
@@ -1020,6 +1114,12 @@ fn assign_workers(
     let retired = vec![false; granted];
     let tenant = shared.tenants.resolve(&ticket.tenant);
     tenant.on_grant(granted);
+    let pause = PauseFlag::new();
+    shared.running.lock().unwrap().push(RunningJob {
+        id: ticket.id,
+        priority: ticket.priority,
+        pause: pause.clone(),
+    });
     Ok(JobGrant {
         model: ticket.model.clone(),
         granted,
@@ -1034,6 +1134,9 @@ fn assign_workers(
         t_grant: Instant::now(),
         t_enqueued: ticket.enqueued,
         ended: false,
+        job_id: ticket.id,
+        pause,
+        running: shared.running.clone(),
     })
 }
 
@@ -1061,6 +1164,14 @@ pub struct JobGrant {
     /// tenant's SLO.
     t_enqueued: Instant,
     ended: bool,
+    /// Ticket id, the job's identity in the running registry (and the wire
+    /// id for checkpoints parked on an engine host).
+    job_id: u64,
+    /// Raised by the scheduler to ask this job to pause and checkpoint.
+    pause: PauseFlag,
+    /// The dispatcher's running-job registry, for deregistration on
+    /// end/preempt.
+    running: Arc<Mutex<Vec<RunningJob>>>,
 }
 
 impl JobGrant {
@@ -1099,11 +1210,44 @@ impl JobGrant {
         self.tenant.on_release(1, busy_us);
     }
 
-    fn end(&mut self) {
+    /// This grant's scheduler-raised pause request. A runner that honours
+    /// preemption threads this into
+    /// [`crate::coordinator::ChordsExecutor::run_from`]; one that ignores
+    /// it simply runs to completion.
+    pub fn pause_flag(&self) -> PauseFlag {
+        self.pause.clone()
+    }
+
+    /// The job's ticket id — stable across preempt/resume cycles is *not*
+    /// guaranteed (each resume is a fresh ticket); used as the wire id when
+    /// parking checkpoints on an engine host.
+    pub fn job_id(&self) -> u64 {
+        self.job_id
+    }
+
+    /// Preempt the job: return every unretired worker and the remaining
+    /// lease to the budget *without* recording the job as served — the
+    /// caller holds a [`crate::coordinator::JobCheckpoint`] and re-enters
+    /// the queue at its original priority to resume. The tenant's
+    /// core-seconds are refunded exactly like a normal release, so fairness
+    /// accounting charges the preempted tenure that was actually used.
+    pub fn preempt(mut self) {
         if self.ended {
             return;
         }
         self.ended = true;
+        let (left, busy_us) = self.release_workers();
+        self.metrics.on_release(left, busy_us, false);
+        self.tenant.on_release(left, busy_us);
+        self.lease = None; // drop → remaining cores return to the budget
+        self.metrics.preemptions.fetch_add(1, Ordering::Relaxed);
+        self.metrics.on_job_end();
+        self.running.lock().unwrap().retain(|r| r.id != self.job_id);
+    }
+
+    /// Park every unretired worker on the model's warm list. Returns the
+    /// count parked and the grant's busy time in microseconds.
+    fn release_workers(&mut self) -> (usize, u64) {
         let busy_us = self.t_grant.elapsed().as_micros() as u64;
         let mut left = 0usize;
         {
@@ -1116,11 +1260,21 @@ impl JobGrant {
             }
         }
         self.slot.touch();
+        (left, busy_us)
+    }
+
+    fn end(&mut self) {
+        if self.ended {
+            return;
+        }
+        self.ended = true;
+        let (left, busy_us) = self.release_workers();
         self.metrics.on_release(left, busy_us, false);
         self.tenant.on_release(left, busy_us);
         self.tenant.on_served(self.t_enqueued.elapsed().as_micros() as u64);
         self.lease = None; // drop → remaining cores return to the budget
         self.metrics.on_job_end();
+        self.running.lock().unwrap().retain(|r| r.id != self.job_id);
     }
 }
 
@@ -1194,6 +1348,43 @@ mod tests {
         assert_eq!(d.metrics().lease_churn.load(Ordering::Relaxed), 2);
         drop(grant);
         assert_eq!(d.shared.budget.available(), 4);
+    }
+
+    #[test]
+    fn starved_latency_tenant_triggers_preemption() {
+        let d = Dispatcher::new(
+            "artifacts",
+            DispatchOpts {
+                total_cores: 4,
+                queue_cap: 8,
+                preemption: true,
+                tenant_quotas: TenantQuota::parse_list("ui=1:0:latency:200").unwrap(),
+                ..DispatchOpts::default()
+            },
+        );
+        let batch = d.submit(JobSpec { priority: -1, ..spec("gauss-mix", 4) }).unwrap();
+        let pause = batch.pause_flag();
+        assert!(!pause.is_raised());
+        let d = Arc::new(d);
+        let d2 = d.clone();
+        let waiter = std::thread::spawn(move || {
+            d2.submit(JobSpec { tenant: "ui".into(), ..spec("gauss-mix", 4) })
+        });
+        // The scheduler must ask the strictly-lower-priority holder to
+        // pause once the latency-class ticket is starved.
+        let t0 = Instant::now();
+        while !pause.is_raised() {
+            assert!(t0.elapsed() < Duration::from_secs(5), "victim was never asked to pause");
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        // Simulate the victim's run loop reaching a lockstep boundary.
+        batch.preempt();
+        assert_eq!(d.metrics().preemptions.load(Ordering::Relaxed), 1);
+        let mut ui = waiter.join().unwrap().expect("latency job granted after preemption");
+        assert_eq!(run_job(&mut ui, 20, 7), 4);
+        drop(ui);
+        assert_eq!(d.shared.budget.available(), 4);
+        assert_eq!(d.metrics().active_jobs.load(Ordering::Relaxed), 0, "gauge balanced");
     }
 
     #[test]

@@ -396,6 +396,28 @@ impl<G> FairQueue<G> {
             .unwrap_or(0)
     }
 
+    /// The preemption trigger signal: the highest priority among queued
+    /// tickets of *latency-class* tenants that are starved — needing more
+    /// cores than the budget has `available`. `None` when no latency-class
+    /// work is starved (throughput-class lanes never trigger preemption;
+    /// they wait their turn).
+    pub fn starved_latency_priority(&self, available: usize) -> Option<i32> {
+        let s = self.inner.lock().unwrap();
+        let mut best: Option<i32> = None;
+        for lane in &s.lanes {
+            let state = self.registry.resolve(&lane.tenant);
+            if !matches!(state.quota.slo, SloClass::LatencyTarget { .. }) {
+                continue;
+            }
+            for t in &lane.items {
+                if t.min_cores > available {
+                    best = Some(best.map_or(t.priority, |b| b.max(t.priority)));
+                }
+            }
+        }
+        best
+    }
+
     /// Overload-controller admission check, run *before* a ticket is built:
     /// returns `Some(retry_after_ms)` when the request should be shed with
     /// code `overloaded`. Inactive (always `None`) unless tenant quotas
@@ -798,6 +820,22 @@ mod tests {
         assert!(q.shed_check(&ui, 1).is_none(), "latency work still admitted");
         q.push(ticket(100, "filler", 0, 1).0).unwrap();
         assert!(q.shed_check(&ui, 1).is_some(), "latency work sheds at 0.9");
+    }
+
+    #[test]
+    fn starved_latency_priority_flags_only_latency_lanes() {
+        let quotas = [TenantQuota {
+            name: "ui".into(),
+            weight: 1.0,
+            core_quota: 0,
+            slo: SloClass::LatencyTarget { p99_ms: 100 },
+        }];
+        let q = fair(8, &quotas);
+        q.push(ticket(1, "batch", 5, 4).0).unwrap();
+        assert_eq!(q.starved_latency_priority(0), None, "throughput lanes never trigger");
+        q.push(ticket(2, "ui", 2, 4).0).unwrap();
+        assert_eq!(q.starved_latency_priority(0), Some(2));
+        assert_eq!(q.starved_latency_priority(4), None, "enough free cores = not starved");
     }
 
     #[test]

@@ -52,6 +52,7 @@ use crate::workers::{
     loopback_pair, BatchOpts, Connector, EngineBank, TcpConnector, TcpTransport, Transport,
 };
 use anyhow::{bail, Result};
+use std::collections::HashMap;
 use std::net::{SocketAddr, TcpListener};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
@@ -88,6 +89,11 @@ struct HostShared {
     /// advertised when registering with a scheduler.
     max_batch: usize,
     stats: Arc<BatchStats>,
+    /// Job checkpoints parked on this host by `state_push` (key = job id),
+    /// awaiting a `state_pull` from whichever scheduler resumes the job —
+    /// the cross-host migration hand-off point. Payloads are opaque
+    /// checkpoint-codec bytes; the host never decodes them.
+    states: Mutex<HashMap<u64, Vec<u8>>>,
     stop: AtomicBool,
     conns: Mutex<Vec<JoinHandle<()>>>,
 }
@@ -128,6 +134,7 @@ impl EngineHost {
             engines: opts.engines,
             max_batch: opts.max_batch.max(1),
             stats,
+            states: Mutex::new(HashMap::new()),
             stop: AtomicBool::new(false),
             conns: Mutex::new(Vec::new()),
         });
@@ -308,10 +315,23 @@ fn handle_conn(shared: &HostShared, t: &dyn Transport) {
             op::PING => wire::pong(),
             op::BANK_STATS => bank_stats(shared),
             op::DRIFT_BATCH => run_wave(shared, &mut engine, &msg),
+            op::STATE_PUSH => {
+                // Park the checkpoint under its job id; ack with an empty
+                // push. A duplicate push overwrites (last writer wins —
+                // the scheduler serializes pushes per job).
+                shared.states.lock().unwrap().insert(msg.id, msg.payload);
+                wire::state_push_ok(msg.id)
+            }
+            op::STATE_PULL => match shared.states.lock().unwrap().remove(&msg.id) {
+                Some(state) => wire::state_push(msg.id, state),
+                None => {
+                    wire::error_frame(msg.id, &format!("no parked state for job {}", msg.id))
+                }
+            },
             other => wire::error_frame(
                 msg.id,
                 &format!(
-                    "unknown op {} (expected hello|ping|bank_stats|drift_batch)",
+                    "unknown op {} (expected hello|ping|bank_stats|drift_batch|state_push|state_pull)",
                     wire::op_name(other)
                 ),
             ),
@@ -363,6 +383,70 @@ fn run_wave(
     }
     let outs = engine.as_mut().expect("engine built above").drift_batch(&wave.xs, &wave.ts);
     wire::drift_batch_response(wave.id, &outs)
+}
+
+// ------------------------------------------------- cross-host state transfer
+
+/// Deadline for one state push/pull round trip. Checkpoints are small
+/// (per-core latents plus counters), so transfer time is dominated by one
+/// network round trip, not payload size.
+const STATE_IO_DEADLINE: Duration = Duration::from_secs(10);
+
+/// Park a job checkpoint on the engine host behind `connector` — the
+/// sending half of cross-host migration. The payload is opaque
+/// checkpoint-codec bytes ([`crate::coordinator::JobCheckpoint::to_bytes`]);
+/// the host stores them under `job_id` until a [`pull_state`] claims them.
+pub fn push_state(connector: &dyn Connector, job_id: u64, state: Vec<u8>) -> Result<()> {
+    let t = connector.connect()?;
+    t.send(&wire::state_push(job_id, state))?;
+    let reply = state_reply(&*t, connector);
+    t.close();
+    match reply? {
+        m if m.op == op::STATE_PUSH && m.id == job_id => Ok(()),
+        m if m.op == op::ERROR => {
+            bail!("state push to '{}' refused: {}", connector.label(), m.text())
+        }
+        m => bail!(
+            "state push to '{}': unexpected {} reply",
+            connector.label(),
+            wire::op_name(m.op)
+        ),
+    }
+}
+
+/// Claim a parked checkpoint back from the engine host behind `connector`
+/// — the receiving half of cross-host migration. Consumes the host's
+/// copy: a second pull for the same job answers a structured error, so
+/// two schedulers can never both resume one job.
+pub fn pull_state(connector: &dyn Connector, job_id: u64) -> Result<Vec<u8>> {
+    let t = connector.connect()?;
+    t.send(&wire::state_pull(job_id))?;
+    let reply = state_reply(&*t, connector);
+    t.close();
+    match reply? {
+        m if m.op == op::STATE_PUSH && m.id == job_id => Ok(m.payload),
+        m if m.op == op::ERROR => {
+            bail!("state pull from '{}' failed: {}", connector.label(), m.text())
+        }
+        m => bail!(
+            "state pull from '{}': unexpected {} reply",
+            connector.label(),
+            wire::op_name(m.op)
+        ),
+    }
+}
+
+fn state_reply(t: &dyn Transport, connector: &dyn Connector) -> Result<wire::Frame> {
+    let deadline = Instant::now() + STATE_IO_DEADLINE;
+    loop {
+        let left = deadline.saturating_duration_since(Instant::now());
+        if left.is_zero() {
+            bail!("state transfer with '{}' timed out", connector.label());
+        }
+        if let Some(m) = t.recv_timeout(left.min(HOST_TICK))? {
+            return Ok(m);
+        }
+    }
 }
 
 // --------------------------------------------------- scheduler-side listener
@@ -689,6 +773,43 @@ mod tests {
         assert_eq!(info.engines, 2);
         assert_eq!(info.dims, vec![8]);
         assert_eq!(info.name, "batched:gauss-mixture");
+    }
+
+    #[test]
+    fn state_park_and_pull_roundtrip() {
+        let h = host(1);
+        let (client, server_side) = loopback_pair();
+        h.serve_transport(server_side);
+        let state: Vec<u8> = (0..=255u8).cycle().take(513).collect();
+        // Park, ack echoes the job id with an empty payload.
+        let ack = call(&*client, &wire::state_push(42, state.clone()));
+        assert_eq!((ack.op, ack.id, ack.payload.len()), (op::STATE_PUSH, 42, 0));
+        // A second connection (a different scheduler) can pull it back.
+        let (client2, server2) = loopback_pair();
+        h.serve_transport(server2);
+        let got = call(&*client2, &wire::state_pull(42));
+        assert_eq!((got.op, got.id), (op::STATE_PUSH, 42));
+        assert_eq!(got.payload, state);
+        // The pull consumed the entry; pulling again is a structured error.
+        let gone = call(&*client2, &wire::state_pull(42));
+        assert_eq!(gone.op, op::ERROR);
+        assert!(gone.text().contains("no parked state"), "{}", gone.text());
+        // Unknown-op errors now name the state ops.
+        let err = call(&*client, &Frame::new(200, 0, Vec::new()));
+        assert!(err.text().contains("state_push"), "{}", err.text());
+    }
+
+    #[test]
+    fn state_helpers_roundtrip_via_connector() {
+        let h = host(1);
+        let c = h.connector();
+        let state: Vec<u8> = (0..1024u32).map(|i| (i % 251) as u8).collect();
+        push_state(&*c, 99, state.clone()).unwrap();
+        assert_eq!(pull_state(&*c, 99).unwrap(), state);
+        // The pull consumed the host's copy: a second scheduler cannot
+        // also resume the job.
+        let err = pull_state(&*c, 99).unwrap_err();
+        assert!(err.to_string().contains("no parked state"), "{err:#}");
     }
 
     #[test]

@@ -30,7 +30,13 @@
 //! Errors are structured: {"type":"error","code":…,"message":…} with codes
 //! `bad_request` | `overloaded` (admission queue full — backpressure;
 //! retry with backoff) | `deadline` | `shutdown` | `unknown_op` |
-//! `internal`.
+//! `internal` | `bank_unavailable` | `preempted` | `migrating` (the full
+//! set lives in [`ErrorCode`]; every code is serialized through one wire
+//! shape, and `preempted`/`migrating` also appear as non-terminal
+//! {"type":"status",…} lines on streaming generates when the scheduler
+//! pauses a job). `{"op":"drain","host":…}` detaches one engine host from
+//! every failover set, migrating its in-flight waves to surviving members
+//! (`chords drain <host-label>`).
 //!
 //! Built on std::net + threads (no tokio in the offline registry); one
 //! handler thread per connection (tracked and joined on shutdown), one

@@ -8,13 +8,17 @@
 //! whenever the budget allows; nothing serializes on a per-model lock.
 
 use crate::config::{preset, ServeConfig};
-use crate::coordinator::{discrete_init_sequence, ChordsConfig, ChordsExecutor, ChordsResult, InitStrategy};
+use crate::coordinator::{
+    discrete_init_sequence, ChordsConfig, ChordsExecutor, ChordsResult, InitStrategy,
+    JobCheckpoint, RunOutcome,
+};
 use crate::sched::{DispatchOpts, Dispatcher, JobSpec, Reject};
 use crate::solvers::TimeGrid;
 use crate::tensor::Tensor;
 use crate::util::json::Json;
 use crate::util::rng::Rng;
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
 
 /// A parsed generation request.
 #[derive(Clone, Debug)]
@@ -147,6 +151,7 @@ impl Router {
                 model_budgets: cfg.model_budgets.iter().cloned().collect(),
                 remote_banks: cfg.remote_banks.clone(),
                 tenant_quotas: cfg.tenant_quotas.clone(),
+                preemption: cfg.preemption,
                 ..DispatchOpts::default()
             },
         );
@@ -162,7 +167,22 @@ impl Router {
     pub fn generate(
         &self,
         req: &GenRequest,
+        on_partial: impl FnMut(usize, usize, f64),
+    ) -> Result<ChordsResult, GenError> {
+        self.generate_with_status(req, on_partial, |_| {})
+    }
+
+    /// [`Router::generate`] with a lifecycle callback: `on_status` fires
+    /// with `"preempted"` each time the scheduler pauses the job to serve a
+    /// latency-class tenant. The pause is otherwise transparent — the job
+    /// checkpoints, re-enters the queue at its original priority, resumes
+    /// on whatever workers the next grant hands it, and produces bitwise
+    /// the same outputs as an uninterrupted run.
+    pub fn generate_with_status(
+        &self,
+        req: &GenRequest,
         mut on_partial: impl FnMut(usize, usize, f64),
+        mut on_status: impl FnMut(&'static str),
     ) -> Result<ChordsResult, GenError> {
         self.stats.requests.fetch_add(1, Ordering::Relaxed);
         let p = preset(&req.model)
@@ -191,27 +211,71 @@ impl Router {
         let k = grant.cores();
         let seq = discrete_init_sequence(&req.init, k, req.steps);
         let grid = TimeGrid::uniform(req.steps);
-        let mut cfg = ChordsConfig::new(seq, grid);
-        cfg.early_exit_tol = req.early_exit_tol;
-        let view = grant.take_view();
-        let exec = ChordsExecutor::new(&view, cfg);
         let mut rng = Rng::seeded(req.seed);
         let x0 = Tensor::randn(&p.latent_dims(), &mut rng);
-        // Engine failures (e.g. an all-remote model whose hosts are all
-        // dead/poisoned) surface as a structured `bank_unavailable` error,
-        // not a worker panic; the grant's cores are released on drop.
-        let res = exec
-            .try_run_streaming_with_retire(
-                &x0,
-                |out| {
-                    self.stats.outputs_streamed.fetch_add(1, Ordering::Relaxed);
-                    on_partial(out.core, out.nfe_depth, req.steps as f64 / out.nfe_depth as f64);
-                },
-                |core_idx| grant.retire_core(core_idx),
-            )
-            .map_err(GenError::BankUnavailable)?;
-        self.stats.total_nfes.fetch_add(res.total_nfes, Ordering::Relaxed);
-        Ok(res)
+        let mut ckpt = JobCheckpoint::fresh(&x0, k);
+        loop {
+            let pause = grant.pause_flag();
+            let view = grant.take_view();
+            let mut cfg = ChordsConfig::new(seq.clone(), grid.clone());
+            cfg.early_exit_tol = req.early_exit_tol;
+            let exec = ChordsExecutor::new(&view, cfg);
+            // Cores that finished before a preemption hold a worker on the
+            // resumed grant but have no work left; release them up front so
+            // the budget only carries the active remainder.
+            let done: Vec<usize> =
+                ckpt.cores.iter().filter(|c| !c.active).map(|c| c.core - 1).collect();
+            for idx in done {
+                grant.retire_core(idx);
+            }
+            // Engine failures (e.g. an all-remote model whose hosts are all
+            // dead/poisoned) surface as a structured `bank_unavailable`
+            // error, not a worker panic; the grant's cores are released on
+            // drop.
+            let outcome = exec
+                .run_from(
+                    ckpt,
+                    |out| {
+                        self.stats.outputs_streamed.fetch_add(1, Ordering::Relaxed);
+                        on_partial(
+                            out.core,
+                            out.nfe_depth,
+                            req.steps as f64 / out.nfe_depth as f64,
+                        );
+                    },
+                    |core_idx| grant.retire_core(core_idx),
+                    Some(&pause),
+                )
+                .map_err(GenError::BankUnavailable)?;
+            match outcome {
+                RunOutcome::Done(res) => {
+                    self.stats.total_nfes.fetch_add(res.total_nfes, Ordering::Relaxed);
+                    return Ok(res);
+                }
+                RunOutcome::Paused(c) => {
+                    ckpt = c;
+                    grant.preempt();
+                    on_status("preempted");
+                    let t_paused = Instant::now();
+                    // Re-enter the queue at the original priority. The
+                    // resumed run needs exactly the checkpoint's core count
+                    // (retired cores are released again right after the
+                    // grant, above).
+                    grant = self.dispatcher.submit(JobSpec {
+                        tenant: req.tenant.clone(),
+                        model: req.model.clone(),
+                        cores: k,
+                        min_cores: 0,
+                        priority: req.priority,
+                        deadline_ms: req.deadline_ms.or(self.default_deadline_ms),
+                    })?;
+                    self.dispatcher
+                        .metrics()
+                        .resume_latency_us
+                        .fetch_add(t_paused.elapsed().as_micros() as u64, Ordering::Relaxed);
+                }
+            }
+        }
     }
 
     /// Models currently loaded.
@@ -228,6 +292,13 @@ impl Router {
     /// `shutdown` (in-flight jobs finish). The server's drain path.
     pub fn drain_admissions(&self) {
         self.dispatcher.shutdown_admissions();
+    }
+
+    /// Drain an engine host (the `drain` op / `chords drain`): detach every
+    /// failover membership labelled `host`; in-flight waves migrate to the
+    /// surviving members. Returns the membership count detached.
+    pub fn drain_host(&self, host: &str) -> usize {
+        self.dispatcher.drain_host(host)
     }
 
     /// The underlying dispatcher (benches/tests).

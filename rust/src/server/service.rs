@@ -10,6 +10,87 @@ use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 
+/// Every status/error code the JSON wire protocol can carry, with its one
+/// stable wire string. Serialization happens in exactly one place
+/// ([`error_body`] / [`status_body`]), so `retry_after_ms` hints and the
+/// preemption-lifecycle statuses share one wire shape instead of each call
+/// site hand-rolling fields.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ErrorCode {
+    /// Malformed or unsatisfiable request.
+    BadRequest,
+    /// The `op` field named no known operation.
+    UnknownOp,
+    /// Shed by the overload controller or a full queue; retry later.
+    Overloaded,
+    /// The admission deadline passed before cores were granted.
+    Deadline,
+    /// The server is shutting down.
+    Shutdown,
+    /// Internal failure (engine build, worker panic surrogate).
+    Internal,
+    /// Every engine bank backing the model is dead or poisoned.
+    BankUnavailable,
+    /// Status, not an error: the job was paused by the scheduler and will
+    /// resume from its checkpoint.
+    Preempted,
+    /// Status, not an error: the job's state is moving to another host.
+    Migrating,
+}
+
+impl ErrorCode {
+    /// The stable wire string.
+    pub fn as_wire(self) -> &'static str {
+        match self {
+            ErrorCode::BadRequest => "bad_request",
+            ErrorCode::UnknownOp => "unknown_op",
+            ErrorCode::Overloaded => "overloaded",
+            ErrorCode::Deadline => "deadline",
+            ErrorCode::Shutdown => "shutdown",
+            ErrorCode::Internal => "internal",
+            ErrorCode::BankUnavailable => "bank_unavailable",
+            ErrorCode::Preempted => "preempted",
+            ErrorCode::Migrating => "migrating",
+        }
+    }
+
+    /// Parse a wire string back into the enum (client side, and the bridge
+    /// from [`super::router::GenError::code`]).
+    pub fn parse(s: &str) -> Option<ErrorCode> {
+        Some(match s {
+            "bad_request" => ErrorCode::BadRequest,
+            "unknown_op" => ErrorCode::UnknownOp,
+            "overloaded" => ErrorCode::Overloaded,
+            "deadline" => ErrorCode::Deadline,
+            "shutdown" => ErrorCode::Shutdown,
+            "internal" => ErrorCode::Internal,
+            "bank_unavailable" => ErrorCode::BankUnavailable,
+            "preempted" => ErrorCode::Preempted,
+            "migrating" => ErrorCode::Migrating,
+            _ => return None,
+        })
+    }
+}
+
+/// The single coded-response serializer: every `error` frame and every
+/// preemption `status` frame the service writes is built here.
+fn status_body(ty: &str, code: ErrorCode, message: &str, retry_after_ms: Option<u64>) -> Json {
+    let mut fields = vec![
+        ("type", Json::str(ty)),
+        ("code", Json::str(code.as_wire())),
+        ("message", Json::str(message)),
+    ];
+    if let Some(ms) = retry_after_ms {
+        fields.push(("retry_after_ms", Json::num(ms as f64)));
+    }
+    Json::obj(fields)
+}
+
+/// An `error`-typed [`status_body`].
+fn error_body(code: ErrorCode, message: &str, retry_after_ms: Option<u64>) -> Json {
+    status_body("error", code, message, retry_after_ms)
+}
+
 /// A running server instance.
 pub struct Server {
     pub addr: std::net::SocketAddr,
@@ -123,12 +204,7 @@ fn handle_conn(stream: TcpStream, router: Arc<Router>, stop: Arc<AtomicBool>) ->
         };
         match Json::parse(&line) {
             Err(e) => {
-                let err = Json::obj(vec![
-                    ("type", Json::str("error")),
-                    ("code", Json::str("bad_request")),
-                    ("message", Json::str(&e)),
-                ]);
-                response_stream(&mut writer, &err)?;
+                response_stream(&mut writer, &error_body(ErrorCode::BadRequest, &e, None))?;
             }
             Ok(req) => match req.get("op").and_then(|o| o.as_str()) {
                 Some("ping") => {
@@ -164,21 +240,40 @@ fn handle_conn(stream: TcpStream, router: Arc<Router>, stop: Arc<AtomicBool>) ->
                     let gen = parse_gen_request(&req);
                     let stream_partials =
                         req.get("stream").and_then(|v| v.as_bool()).unwrap_or(false);
-                    // Streamed partials are written as they are produced.
+                    // Streamed partials and preemption statuses are written
+                    // as they are produced.
                     let result = {
                         let mut w2 = writer.try_clone()?;
-                        router.generate(&gen, |core, depth, speedup| {
-                            if stream_partials {
-                                let j = Json::obj(vec![
-                                    ("type", Json::str("partial")),
-                                    ("core", Json::num(core as f64)),
-                                    ("nfe_depth", Json::num(depth as f64)),
-                                    ("speedup", Json::num(speedup)),
-                                ]);
-                                let _ = w2.write_all(j.to_string_compact().as_bytes());
-                                let _ = w2.write_all(b"\n");
-                            }
-                        })
+                        let mut w3 = writer.try_clone()?;
+                        router.generate_with_status(
+                            &gen,
+                            |core, depth, speedup| {
+                                if stream_partials {
+                                    let j = Json::obj(vec![
+                                        ("type", Json::str("partial")),
+                                        ("core", Json::num(core as f64)),
+                                        ("nfe_depth", Json::num(depth as f64)),
+                                        ("speedup", Json::num(speedup)),
+                                    ]);
+                                    let _ = w2.write_all(j.to_string_compact().as_bytes());
+                                    let _ = w2.write_all(b"\n");
+                                }
+                            },
+                            |code| {
+                                if stream_partials {
+                                    let code =
+                                        ErrorCode::parse(code).unwrap_or(ErrorCode::Preempted);
+                                    let j = status_body(
+                                        "status",
+                                        code,
+                                        "job paused by the scheduler; resuming from checkpoint",
+                                        None,
+                                    );
+                                    let _ = w3.write_all(j.to_string_compact().as_bytes());
+                                    let _ = w3.write_all(b"\n");
+                                }
+                            },
+                        )
                     };
                     match result {
                         Ok(res) => {
@@ -197,28 +292,35 @@ fn handle_conn(stream: TcpStream, router: Arc<Router>, stop: Arc<AtomicBool>) ->
                             response_stream(&mut writer, &j)?;
                         }
                         Err(e) => {
-                            let mut fields = vec![
-                                ("type", Json::str("error")),
-                                ("code", Json::str(e.code())),
-                                ("message", Json::str(&e.to_string())),
-                            ];
-                            if let Some(ms) = e.retry_after_ms() {
-                                fields.push(("retry_after_ms", Json::num(ms as f64)));
-                            }
-                            response_stream(&mut writer, &Json::obj(fields))?;
+                            let code = ErrorCode::parse(e.code()).unwrap_or(ErrorCode::Internal);
+                            let body = error_body(code, &e.to_string(), e.retry_after_ms());
+                            response_stream(&mut writer, &body)?;
                         }
                     }
                 }
+                Some("drain") => {
+                    let host = req.get("host").and_then(|v| v.as_str()).unwrap_or("");
+                    if host.is_empty() {
+                        let body =
+                            error_body(ErrorCode::BadRequest, "drain needs a 'host' label", None);
+                        response_stream(&mut writer, &body)?;
+                    } else {
+                        let migrated = router.drain_host(host);
+                        let j = Json::obj(vec![
+                            ("type", Json::str("drain_ok")),
+                            ("host", Json::str(host)),
+                            ("migrated", Json::num(migrated as f64)),
+                        ]);
+                        response_stream(&mut writer, &j)?;
+                    }
+                }
                 _ => {
-                    let j = Json::obj(vec![
-                        ("type", Json::str("error")),
-                        ("code", Json::str("unknown_op")),
-                        (
-                            "message",
-                            Json::str("unknown op (expected ping|stats|queue_stats|generate)"),
-                        ),
-                    ]);
-                    response_stream(&mut writer, &j)?;
+                    let body = error_body(
+                        ErrorCode::UnknownOp,
+                        "unknown op (expected ping|stats|queue_stats|generate|drain)",
+                        None,
+                    );
+                    response_stream(&mut writer, &body)?;
                 }
             },
         }
@@ -277,8 +379,8 @@ impl Client {
     }
 
     /// Send one request object and read responses until a terminal type
-    /// (`result`, `error`, `stats`, `queue_stats`, `pong`) arrives.
-    /// Returns all responses.
+    /// (`result`, `error`, `stats`, `queue_stats`, `pong`, `drain_ok`)
+    /// arrives. Returns all responses.
     pub fn call(&mut self, req: &Json) -> Result<Vec<Json>> {
         self.stream.write_all(req.to_string_compact().as_bytes())?;
         self.stream.write_all(b"\n")?;
@@ -292,7 +394,10 @@ impl Client {
             let j = Json::parse(line.trim()).map_err(|e| anyhow::anyhow!(e))?;
             let ty = j.get("type").and_then(|t| t.as_str()).unwrap_or("").to_string();
             responses.push(j);
-            if matches!(ty.as_str(), "result" | "error" | "stats" | "queue_stats" | "pong") {
+            if matches!(
+                ty.as_str(),
+                "result" | "error" | "stats" | "queue_stats" | "pong" | "drain_ok"
+            ) {
                 return Ok(responses);
             }
         }
@@ -379,6 +484,50 @@ mod tests {
         assert_eq!(r.last().unwrap().get("code").unwrap().as_str().unwrap(), "bad_request");
         let r = c.call(&Json::obj(vec![("op", Json::str("frobnicate"))])).unwrap();
         assert_eq!(r.last().unwrap().get("code").unwrap().as_str().unwrap(), "unknown_op");
+        server.shutdown();
+    }
+
+    #[test]
+    fn error_codes_roundtrip_the_wire_strings() {
+        for code in [
+            ErrorCode::BadRequest,
+            ErrorCode::UnknownOp,
+            ErrorCode::Overloaded,
+            ErrorCode::Deadline,
+            ErrorCode::Shutdown,
+            ErrorCode::Internal,
+            ErrorCode::BankUnavailable,
+            ErrorCode::Preempted,
+            ErrorCode::Migrating,
+        ] {
+            assert_eq!(ErrorCode::parse(code.as_wire()), Some(code));
+        }
+        assert_eq!(ErrorCode::parse("frobnicated"), None);
+        // The serializer is the single wire shape: errors and statuses
+        // carry the same fields.
+        let j = error_body(ErrorCode::Overloaded, "busy", Some(250));
+        assert_eq!(j.get("type").unwrap().as_str().unwrap(), "error");
+        assert_eq!(j.get("code").unwrap().as_str().unwrap(), "overloaded");
+        assert_eq!(j.get("retry_after_ms").unwrap().as_usize().unwrap(), 250);
+        let j = status_body("status", ErrorCode::Preempted, "paused", None);
+        assert_eq!(j.get("type").unwrap().as_str().unwrap(), "status");
+        assert_eq!(j.get("code").unwrap().as_str().unwrap(), "preempted");
+        assert!(j.get("retry_after_ms").is_none());
+    }
+
+    #[test]
+    fn drain_op_over_the_wire() {
+        let (server, _) = start();
+        let mut c = Client::connect(server.addr).unwrap();
+        // No such host attached: still a clean drain_ok with zero moved.
+        let req = Json::obj(vec![("op", Json::str("drain")), ("host", Json::str("nowhere:1"))]);
+        let r = c.call(&req).unwrap();
+        let j = r.last().unwrap();
+        assert_eq!(j.get("type").unwrap().as_str().unwrap(), "drain_ok");
+        assert_eq!(j.get("migrated").unwrap().as_usize().unwrap(), 0);
+        // A drain without a host is a bad request.
+        let r = c.call(&Json::obj(vec![("op", Json::str("drain"))])).unwrap();
+        assert_eq!(r.last().unwrap().get("code").unwrap().as_str().unwrap(), "bad_request");
         server.shutdown();
     }
 

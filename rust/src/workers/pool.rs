@@ -112,61 +112,97 @@ pub struct CorePool {
     bank: Option<Box<dyn DriftBank>>,
 }
 
-impl CorePool {
-    /// Spawn `k` workers (`k = 0` builds an empty pool for elastic growth).
-    /// Each constructs its own engine from `factory` *inside its thread*
-    /// (required for PJRT-backed engines) and applies `rule` for `Step`
-    /// jobs. Fails if any engine fails to build.
-    pub fn new(
-        k: usize,
-        factory: Arc<dyn EngineFactory>,
-        rule: Arc<dyn StepRule>,
-    ) -> anyhow::Result<CorePool> {
-        Self::build(k, factory, rule, None)
+/// The one way to construct a [`CorePool`]: `CorePool::builder(k)` plus a
+/// `rule` and an engine source — a `factory` (dedicated engines, optionally
+/// `batched` onto a shared [`EngineBank`]) or an already-constructed `bank`
+/// (the dispatcher's remote/failover path). Replaces the former
+/// `new`/`new_batched`/`new_batched_with_stats`/`new_with_bank` zoo.
+pub struct CorePoolBuilder {
+    k: usize,
+    factory: Option<Arc<dyn EngineFactory>>,
+    rule: Option<Arc<dyn StepRule>>,
+    batch: Option<BatchOpts>,
+    stats: Option<Arc<BatchStats>>,
+    bank: Option<Box<dyn DriftBank>>,
+}
+
+impl CorePoolBuilder {
+    /// Engine factory: each dedicated worker constructs its own engine from
+    /// it *inside its thread* (required for PJRT-backed engines); with
+    /// [`Self::batched`], the bank's physical engines come from it instead.
+    /// Mutually exclusive with [`Self::bank`].
+    pub fn factory(mut self, factory: Arc<dyn EngineFactory>) -> Self {
+        self.factory = Some(factory);
+        self
     }
 
-    /// Like [`CorePool::new`], but the `k` workers are *logical* cores
-    /// multiplexed onto a shared [`EngineBank`] of `opts.engines` physical
-    /// engines: worker drift calls queue into fused `drift_batch`
-    /// invocations (see [`super::batcher`]). Worker count stays fully
-    /// elastic ([`CorePool::attach`]/[`CorePool::detach`] create and drop
-    /// cheap client handles); the physical engine count is fixed at
+    /// Step rule applied by every worker for `Step` jobs. Required.
+    pub fn rule(mut self, rule: Arc<dyn StepRule>) -> Self {
+        self.rule = Some(rule);
+        self
+    }
+
+    /// Multiplex the `k` *logical* workers onto a shared [`EngineBank`] of
+    /// `opts.engines` physical engines: worker drift calls queue into fused
+    /// `drift_batch` invocations (see [`super::batcher`]). Worker count
+    /// stays fully elastic ([`CorePool::attach`]/[`CorePool::detach`] create
+    /// and drop cheap client handles); the physical engine count is fixed at
     /// construction.
-    pub fn new_batched(
-        k: usize,
-        factory: Arc<dyn EngineFactory>,
-        rule: Arc<dyn StepRule>,
-        opts: BatchOpts,
-    ) -> anyhow::Result<CorePool> {
-        Self::new_batched_with_stats(k, factory, rule, opts, BatchStats::new())
+    pub fn batched(mut self, opts: BatchOpts) -> Self {
+        self.batch = Some(opts);
+        self
     }
 
-    /// [`CorePool::new_batched`] with caller-supplied batch counters (the
-    /// dispatcher threads [`crate::metrics::ServingMetrics::batch`] through
-    /// here so `queue_stats` reports occupancy/fill-wait).
-    pub fn new_batched_with_stats(
-        k: usize,
-        factory: Arc<dyn EngineFactory>,
-        rule: Arc<dyn StepRule>,
-        opts: BatchOpts,
-        stats: Arc<BatchStats>,
-    ) -> anyhow::Result<CorePool> {
-        let bank = EngineBank::new(factory, opts, stats)?;
-        let client_factory = bank.client_factory();
-        Self::build(k, client_factory, rule, Some(Box::new(bank)))
+    /// Caller-supplied batch counters for [`Self::batched`] (the dispatcher
+    /// threads [`crate::metrics::ServingMetrics::batch`] through here so
+    /// `queue_stats` reports occupancy/fill-wait).
+    pub fn batch_stats(mut self, stats: Arc<BatchStats>) -> Self {
+        self.stats = Some(stats);
+        self
     }
 
-    /// Build a pool of `k` logical workers over an already-constructed
-    /// bank — the serving dispatcher's path for models whose engines are
-    /// (partly) remote: pass a [`super::remote::FailoverBank`] and the
-    /// executor drives it exactly like a local batched pool.
-    pub fn new_with_bank(
-        k: usize,
-        bank: Box<dyn DriftBank>,
-        rule: Arc<dyn StepRule>,
-    ) -> anyhow::Result<CorePool> {
-        let factory = bank.client_factory();
-        Self::build(k, factory, rule, Some(bank))
+    /// Drive an already-constructed bank — the serving dispatcher's path for
+    /// models whose engines are (partly) remote: pass a
+    /// [`super::remote::FailoverBank`] and the executor drives it exactly
+    /// like a local batched pool. Mutually exclusive with [`Self::factory`]
+    /// and [`Self::batched`].
+    pub fn bank(mut self, bank: Box<dyn DriftBank>) -> Self {
+        self.bank = Some(bank);
+        self
+    }
+
+    /// Spawn the `k` workers (`k = 0` builds an empty pool for elastic
+    /// growth). Fails if any engine fails to build or the configuration is
+    /// contradictory.
+    pub fn build(self) -> anyhow::Result<CorePool> {
+        let rule = self.rule.ok_or_else(|| anyhow::anyhow!("CorePoolBuilder needs a rule"))?;
+        match (self.factory, self.bank) {
+            (factory, Some(bank)) => {
+                anyhow::ensure!(
+                    factory.is_none() && self.batch.is_none(),
+                    "CorePoolBuilder: bank is mutually exclusive with factory/batched"
+                );
+                let factory = bank.client_factory();
+                CorePool::build(self.k, factory, rule, Some(bank))
+            }
+            (Some(factory), None) => match self.batch {
+                Some(opts) => {
+                    let stats = self.stats.unwrap_or_else(BatchStats::new);
+                    let bank = EngineBank::new(factory, opts, stats)?;
+                    let client_factory = bank.client_factory();
+                    CorePool::build(self.k, client_factory, rule, Some(Box::new(bank)))
+                }
+                None => CorePool::build(self.k, factory, rule, None),
+            },
+            (None, None) => anyhow::bail!("CorePoolBuilder needs a factory or a bank"),
+        }
+    }
+}
+
+impl CorePool {
+    /// Start building a pool of `k` workers. See [`CorePoolBuilder`].
+    pub fn builder(k: usize) -> CorePoolBuilder {
+        CorePoolBuilder { k, factory: None, rule: None, batch: None, stats: None, bank: None }
     }
 
     fn build(
@@ -498,7 +534,20 @@ mod tests {
     use crate::solvers::Euler;
 
     fn pool(k: usize) -> CorePool {
-        CorePool::new(k, Arc::new(ExpOdeFactory::new(vec![2], 0)), Arc::new(Euler)).unwrap()
+        CorePool::builder(k)
+            .factory(Arc::new(ExpOdeFactory::new(vec![2], 0)))
+            .rule(Arc::new(Euler))
+            .build()
+            .unwrap()
+    }
+
+    #[test]
+    fn builder_rejects_contradictory_configs() {
+        assert!(CorePool::builder(1).rule(Arc::new(Euler)).build().is_err(), "no engine source");
+        assert!(
+            CorePool::builder(1).factory(Arc::new(ExpOdeFactory::new(vec![2], 0))).build().is_err(),
+            "no rule"
+        );
     }
 
     #[test]
@@ -622,13 +671,12 @@ mod tests {
         use crate::solvers::TimeGrid;
         use std::time::Duration;
         let dedicated = pool(4);
-        let batched = CorePool::new_batched(
-            4,
-            Arc::new(ExpOdeFactory::new(vec![2], 0)),
-            Arc::new(Euler),
-            BatchOpts { engines: 2, max_batch: 4, linger: Duration::from_micros(200) },
-        )
-        .unwrap();
+        let batched = CorePool::builder(4)
+            .factory(Arc::new(ExpOdeFactory::new(vec![2], 0)))
+            .rule(Arc::new(Euler))
+            .batched(BatchOpts { engines: 2, max_batch: 4, linger: Duration::from_micros(200) })
+            .build()
+            .unwrap();
         assert!(batched.is_batched() && !dedicated.is_batched());
         let x0 = Tensor::from_vec(&[2], vec![1.0, -0.5]);
         let grid = TimeGrid::uniform(30);

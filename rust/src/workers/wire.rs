@@ -30,6 +30,8 @@
 //! | `bank_stats`  | 5    | empty                            | `bank_stats_reply` (6)|
 //! | `drift_batch` | 7    | binary wave (below)              | `drift_batch_reply` (8)|
 //! | `register`    | 10   | JSON registration                | `register_ok` (11)    |
+//! | `state_push`  | 12   | binary job checkpoint            | `state_push` (12, empty)|
+//! | `state_pull`  | 13   | empty (header id = job)          | `state_push` (12)     |
 //! | `error`       | 9    | UTF-8 message                    | —                     |
 //!
 //! Control payloads (`hello_ok`, `bank_stats_reply`, `register`) are
@@ -92,6 +94,13 @@ pub mod op {
     pub const REGISTER: u8 = 10;
     /// Scheduler accepting a registration; empty payload.
     pub const REGISTER_OK: u8 = 11;
+    /// Park a job checkpoint on a host (payload = checkpoint codec bytes,
+    /// header id = job id), or carry one back as the `state_pull` reply.
+    /// An empty-payload `state_push` with the same id acknowledges a park.
+    pub const STATE_PUSH: u8 = 12;
+    /// Retrieve (and drop) a parked checkpoint; empty payload, header id =
+    /// job id. Replied to with a loaded `state_push`.
+    pub const STATE_PULL: u8 = 13;
 }
 
 /// Human-readable opcode name for logs and error replies.
@@ -108,6 +117,8 @@ pub fn op_name(code: u8) -> &'static str {
         op::ERROR => "error",
         op::REGISTER => "register",
         op::REGISTER_OK => "register_ok",
+        op::STATE_PUSH => "state_push",
+        op::STATE_PULL => "state_pull",
         _ => "unknown",
     }
 }
@@ -565,6 +576,25 @@ pub fn error_frame(id: u64, message: &str) -> Frame {
     Frame::new(op::ERROR, id, message.as_bytes().to_vec())
 }
 
+/// Park a job checkpoint on a host: `state` is the opaque checkpoint codec
+/// ([`crate::coordinator::JobCheckpoint::to_bytes`]) and the header `id`
+/// is the job id. The same frame shape (with a non-empty payload) answers
+/// a `state_pull`; an empty payload acknowledges a park.
+pub fn state_push(id: u64, state: Vec<u8>) -> Frame {
+    Frame::new(op::STATE_PUSH, id, state)
+}
+
+/// Acknowledge a `state_push` park (empty payload, echoed job id).
+pub fn state_push_ok(id: u64) -> Frame {
+    Frame::new(op::STATE_PUSH, id, Vec::new())
+}
+
+/// Request the checkpoint parked under job `id`; the host replies with a
+/// loaded `state_push` and forgets the entry.
+pub fn state_pull(id: u64) -> Frame {
+    Frame::new(op::STATE_PULL, id, Vec::new())
+}
+
 // ------------------------------------------------------------ legacy (v1)
 
 /// The v1 JSON-line codec: hex-encoded f32 bit patterns inside JSON
@@ -869,6 +899,25 @@ mod tests {
         assert_eq!(f.id, 5);
         assert_eq!(f.text(), "boom");
         assert_eq!(error_frame(0, "x").id, 0, "0 = no specific wave");
+    }
+
+    #[test]
+    fn state_frames_roundtrip_opaque_payloads() {
+        // The checkpoint bytes are opaque to the wire layer; they must
+        // survive the frame codec untouched, tied to their job id.
+        let state: Vec<u8> = (0..=255u8).cycle().take(1037).collect();
+        let f = state_push(77, state.clone());
+        let (f, _) = Frame::decode(&f.encode()).unwrap();
+        assert_eq!(f.op, op::STATE_PUSH);
+        assert_eq!(f.id, 77);
+        assert_eq!(f.payload, state);
+        let ack = state_push_ok(77);
+        assert_eq!((ack.op, ack.id, ack.payload.len()), (op::STATE_PUSH, 77, 0));
+        let pull = state_pull(77);
+        let (pull, _) = Frame::decode(&pull.encode()).unwrap();
+        assert_eq!((pull.op, pull.id, pull.payload.len()), (op::STATE_PULL, 77, 0));
+        assert_eq!(op_name(op::STATE_PUSH), "state_push");
+        assert_eq!(op_name(op::STATE_PULL), "state_pull");
     }
 
     #[test]

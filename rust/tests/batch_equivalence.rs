@@ -105,7 +105,11 @@ fn core1_bit_identity_across_sequential_unbatched_batched() {
         for &(seq, steps) in shapes {
             let k = seq.len();
             let x0 = Tensor::randn(&[6], &mut rng);
-            let dedicated = CorePool::new(k, factory(), Arc::new(Euler)).unwrap();
+            let dedicated = CorePool::builder(k)
+                .factory(factory())
+                .rule(Arc::new(Euler))
+                .build()
+                .unwrap();
             let oracle = sequential_solve(&dedicated, &TimeGrid::uniform(steps), &x0);
             let unbatched = chords_outputs(&dedicated, seq, steps, &x0);
             assert_eq!(
@@ -114,8 +118,12 @@ fn core1_bit_identity_across_sequential_unbatched_batched() {
                 "{engine}: unbatched core 1 vs sequential (seq {seq:?})"
             );
             for bank in &banks {
-                let batched_pool =
-                    CorePool::new_batched(k, factory(), Arc::new(Euler), bank.clone()).unwrap();
+                let batched_pool = CorePool::builder(k)
+                    .factory(factory())
+                    .rule(Arc::new(Euler))
+                    .batched(bank.clone())
+                    .build()
+                    .unwrap();
                 let batched = chords_outputs(&batched_pool, seq, steps, &x0);
                 assert_eq!(batched.len(), unbatched.len());
                 for (core_out, (b, u)) in batched.iter().zip(&unbatched).enumerate() {
@@ -136,15 +144,17 @@ fn heun_rule_exact_through_batched_pool() {
     let mut rng = Rng::seeded(29);
     let x0 = Tensor::randn(&[4], &mut rng);
     let seq = vec![0usize, 5, 11, 21];
-    let dedicated =
-        CorePool::new(4, Arc::new(ExpOdeFactory::new(vec![4], 0)), Arc::new(Heun)).unwrap();
-    let batched = CorePool::new_batched(
-        4,
-        Arc::new(ExpOdeFactory::new(vec![4], 0)),
-        Arc::new(Heun),
-        opts(2, 8, 200),
-    )
-    .unwrap();
+    let dedicated = CorePool::builder(4)
+        .factory(Arc::new(ExpOdeFactory::new(vec![4], 0)))
+        .rule(Arc::new(Heun))
+        .build()
+        .unwrap();
+    let batched = CorePool::builder(4)
+        .factory(Arc::new(ExpOdeFactory::new(vec![4], 0)))
+        .rule(Arc::new(Heun))
+        .batched(opts(2, 8, 200))
+        .build()
+        .unwrap();
     let oracle = sequential_solve(&dedicated, &TimeGrid::uniform(30), &x0);
     let a = chords_outputs(&dedicated, &seq, 30, &x0);
     let b = chords_outputs(&batched, &seq, 30, &x0);
@@ -158,14 +168,19 @@ fn heun_rule_exact_through_batched_pool() {
 #[test]
 fn concurrent_jobs_on_shared_batched_pool_stay_isolated() {
     let factory = || Arc::new(GaussMixtureFactory::standard(vec![8], 5, 0));
-    let shared = CorePool::new_batched(8, factory(), Arc::new(Euler), opts(2, 8, 300)).unwrap();
+    let shared = CorePool::builder(8)
+        .factory(factory())
+        .rule(Arc::new(Euler))
+        .batched(opts(2, 8, 300))
+        .build()
+        .unwrap();
     let seq = vec![0usize, 8, 16, 32];
     let mut rng = Rng::seeded(77);
     let x_a = Tensor::randn(&[8], &mut rng);
     let x_b = Tensor::randn(&[8], &mut rng);
 
     // References on private dedicated pools.
-    let private = CorePool::new(4, factory(), Arc::new(Euler)).unwrap();
+    let private = CorePool::builder(4).factory(factory()).rule(Arc::new(Euler)).build().unwrap();
     let ref_a = chords_outputs(&private, &seq, 50, &x_a);
     let ref_b = chords_outputs(&private, &seq, 50, &x_b);
 

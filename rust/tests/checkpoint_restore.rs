@@ -1,0 +1,254 @@
+//! Checkpoint/restore property tests: pausing a CHORDS run at *every*
+//! lockstep boundary and resuming — on the same pool, a different pool, a
+//! batched pool, or a remote engine bank, optionally round-tripping the
+//! checkpoint through the binary codec as a cross-host migration would —
+//! must reproduce the uninterrupted run **bitwise** (final output, every
+//! streamed output, NFE/rectification/communication accounting). This is
+//! the property the preemption scheduler leans on: a preempted job loses
+//! wall-clock time, never numerics.
+
+use chords::coordinator::{
+    discrete_init_sequence, ChordsConfig, ChordsExecutor, ChordsResult, InitStrategy,
+    JobCheckpoint, PauseFlag, RunOutcome,
+};
+use chords::engine::{EngineFactory, ExpOdeFactory, GaussMixtureFactory};
+use chords::metrics::{BatchStats, RemoteBankStats};
+use chords::server::EngineHost;
+use chords::solvers::{Euler, Heun, StepRule, TimeGrid};
+use chords::tensor::Tensor;
+use chords::util::rng::Rng;
+use chords::workers::{BatchOpts, CorePool, FailoverBank, RemoteBank, RemoteBankOpts};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Drive one job to completion pausing at every lockstep boundary: the
+/// flag stays raised, so each `run_from` segment makes exactly one step of
+/// progress — the worst-case preemption schedule. A fresh executor is
+/// built per segment (the serving path rebuilds one per grant), segments
+/// rotate across `pools`, and every other checkpoint round-trips the wire
+/// codec. Returns the final result and the number of segments run.
+fn run_single_stepped(
+    pools: &[&CorePool],
+    cfg: &ChordsConfig,
+    x0: &Tensor,
+    k: usize,
+) -> (ChordsResult, usize) {
+    let pause = PauseFlag::new();
+    pause.raise();
+    let mut ckpt = JobCheckpoint::fresh(x0, k);
+    let mut segments = 0usize;
+    loop {
+        let pool = pools[segments % pools.len()];
+        let exec = ChordsExecutor::new(pool, cfg.clone());
+        let outcome = exec
+            .run_from(ckpt, |_| {}, |_| {}, Some(&pause))
+            .expect("analytic engines never fail");
+        segments += 1;
+        match outcome {
+            RunOutcome::Done(res) => return (res, segments),
+            RunOutcome::Paused(c) => {
+                ckpt = if segments % 2 == 0 {
+                    JobCheckpoint::from_bytes(&c.to_bytes()).expect("codec roundtrip")
+                } else {
+                    c
+                };
+            }
+        }
+    }
+}
+
+/// Bitwise identity on everything except wall-clock time.
+fn assert_identical(got: &ChordsResult, want: &ChordsResult, ctx: &str) {
+    assert_eq!(got.final_output, want.final_output, "final output diverged: {ctx}");
+    assert_eq!(got.nfe_depth, want.nfe_depth, "nfe depth diverged: {ctx}");
+    assert_eq!(got.total_nfes, want.total_nfes, "total nfes diverged: {ctx}");
+    assert_eq!(got.rectifications, want.rectifications, "rectifications diverged: {ctx}");
+    assert_eq!(got.comm_bytes, want.comm_bytes, "comm bytes diverged: {ctx}");
+    assert_eq!(got.early_exited, want.early_exited, "early-exit flag diverged: {ctx}");
+    assert_eq!(got.outputs.len(), want.outputs.len(), "output count diverged: {ctx}");
+    for (g, w) in got.outputs.iter().zip(&want.outputs) {
+        assert_eq!(
+            (g.core, g.nfe_depth, g.step),
+            (w.core, w.nfe_depth, w.step),
+            "output metadata diverged: {ctx}"
+        );
+        assert_eq!(g.output, w.output, "core {} output diverged: {ctx}", g.core);
+    }
+}
+
+fn exp_factory() -> Arc<dyn EngineFactory> {
+    Arc::new(ExpOdeFactory::new(vec![6], 0))
+}
+
+fn mix_factory() -> Arc<dyn EngineFactory> {
+    Arc::new(GaussMixtureFactory::standard(vec![8], 3, 0))
+}
+
+fn dedicated(factory: Arc<dyn EngineFactory>, k: usize, rule: Arc<dyn StepRule>) -> CorePool {
+    CorePool::builder(k).factory(factory).rule(rule).build().unwrap()
+}
+
+/// Pause at every step on the same pool: identical across presets and K.
+#[test]
+fn prop_pause_every_step_is_bitwise_identical() {
+    let factories: Vec<(Arc<dyn EngineFactory>, &[usize], &str)> =
+        vec![(exp_factory(), &[6], "exp-ode"), (mix_factory(), &[8], "gauss-mix")];
+    for (factory, dims, name) in factories {
+        for k in [2usize, 4, 6] {
+            let n = 30;
+            let pool = dedicated(factory.clone(), k, Arc::new(Euler));
+            let grid = TimeGrid::uniform(n);
+            let seq = discrete_init_sequence(&InitStrategy::Calibrated, k, n);
+            let cfg = ChordsConfig::new(seq, grid);
+            let mut rng = Rng::seeded(0xD1CE + k as u64);
+            let x0 = Tensor::randn(dims, &mut rng);
+            let want = ChordsExecutor::new(&pool, cfg.clone()).run(&x0);
+            let (got, segments) = run_single_stepped(&[&pool], &cfg, &x0, k);
+            assert!(segments > 2, "pause flag never split the run ({name}, k={k})");
+            assert_identical(&got, &want, &format!("{name}, k={k}, {segments} segments"));
+        }
+    }
+}
+
+/// Resuming on a *different* pool (fresh workers, fresh engines) changes
+/// nothing — workers are stateless, the checkpoint is the whole job. Runs
+/// under both step rules, alternating pools every segment.
+#[test]
+fn prop_resume_on_different_pool_identical_across_rules() {
+    let rules: Vec<(Arc<dyn StepRule>, &str)> =
+        vec![(Arc::new(Euler), "euler"), (Arc::new(Heun), "heun")];
+    for (rule, rname) in rules {
+        let k = 4;
+        let n = 30;
+        let grid = TimeGrid::uniform(n);
+        let seq = discrete_init_sequence(&InitStrategy::Calibrated, k, n);
+        let cfg = ChordsConfig::new(seq, grid);
+        let mut rng = Rng::seeded(0xBEEF);
+        let x0 = Tensor::randn(&[8], &mut rng);
+        let a = dedicated(mix_factory(), k, rule.clone());
+        let b = dedicated(mix_factory(), k, rule.clone());
+        let want = ChordsExecutor::new(&a, cfg.clone()).run(&x0);
+        let (got, segments) = run_single_stepped(&[&a, &b], &cfg, &x0, k);
+        assert!(segments > 2, "rule {rname}: run never paused");
+        assert_identical(&got, &want, &format!("rule {rname}, pool-hopping"));
+    }
+}
+
+/// Early exit fires at the same step whether or not the run was paused:
+/// the tolerance check is part of the replayed output prefix.
+#[test]
+fn prop_early_exit_survives_checkpointing() {
+    let k = 6;
+    let n = 48;
+    let pool = dedicated(mix_factory(), k, Arc::new(Euler));
+    let grid = TimeGrid::uniform(n);
+    let seq = discrete_init_sequence(&InitStrategy::Calibrated, k, n);
+    let mut cfg = ChordsConfig::new(seq, grid);
+    cfg.early_exit_tol = Some(1e-3);
+    let mut rng = Rng::seeded(0xACE);
+    let x0 = Tensor::randn(&[8], &mut rng);
+    let want = ChordsExecutor::new(&pool, cfg.clone()).run(&x0);
+    let (got, _) = run_single_stepped(&[&pool], &cfg, &x0, k);
+    assert_identical(&got, &want, "early-exit run");
+}
+
+/// The same property across execution substrates: a batched shared-engine
+/// pool and a remote engine bank checkpoint/resume to the same bits as an
+/// uninterrupted dedicated-engine run.
+#[test]
+fn prop_batched_and_remote_pools_checkpoint_identically() {
+    let k = 4;
+    let n = 30;
+    let grid = TimeGrid::uniform(n);
+    let seq = discrete_init_sequence(&InitStrategy::Calibrated, k, n);
+    let cfg = ChordsConfig::new(seq, grid);
+    let mut rng = Rng::seeded(0xF00D);
+    let x0 = Tensor::randn(&[8], &mut rng);
+    let local = dedicated(mix_factory(), k, Arc::new(Euler));
+    let want = ChordsExecutor::new(&local, cfg.clone()).run(&x0);
+
+    // Batched: logical cores multiplexed onto 2 shared engines.
+    let batched = CorePool::builder(k)
+        .factory(mix_factory())
+        .rule(Arc::new(Euler))
+        .batched(BatchOpts { engines: 2, max_batch: 4, linger: Duration::from_micros(100) })
+        .build()
+        .unwrap();
+    let (got, _) = run_single_stepped(&[&batched], &cfg, &x0, k);
+    assert_identical(&got, &want, "batched pool");
+
+    // Remote: drift evaluation crosses the wire to an engine host.
+    let host = EngineHost::new(
+        mix_factory(),
+        "gauss-mix",
+        BatchOpts { engines: 2, max_batch: 4, linger: Duration::from_micros(100) },
+    )
+    .unwrap();
+    let bank = Arc::new(RemoteBank::connect(
+        host.connector(),
+        vec![8],
+        RemoteBankOpts {
+            max_batch: 4,
+            linger: Duration::from_micros(100),
+            wave_timeout: Duration::from_millis(400),
+            backoff: Duration::from_millis(5),
+            backoff_cap: Duration::from_millis(50),
+            expect_model: None,
+        },
+        BatchStats::new(),
+        RemoteBankStats::new(),
+    ));
+    let fb = FailoverBank::new(vec![bank], None, BatchStats::new(), RemoteBankStats::new())
+        .unwrap();
+    let remote = CorePool::builder(k).bank(Box::new(fb)).rule(Arc::new(Euler)).build().unwrap();
+    let (got, _) = run_single_stepped(&[&remote], &cfg, &x0, k);
+    assert_identical(&got, &want, "remote bank");
+}
+
+/// Codec properties on a mid-run checkpoint: the round trip is lossless
+/// (identical re-encoding, states and replayed outputs preserved) and
+/// corrupt payloads fail cleanly instead of resuming garbage.
+#[test]
+fn prop_codec_roundtrip_and_rejection() {
+    let k = 4;
+    let n = 30;
+    let pool = dedicated(mix_factory(), k, Arc::new(Euler));
+    let grid = TimeGrid::uniform(n);
+    let seq = discrete_init_sequence(&InitStrategy::Calibrated, k, n);
+    let cfg = ChordsConfig::new(seq, grid);
+    let mut rng = Rng::seeded(0xCAFE);
+    let x0 = Tensor::randn(&[8], &mut rng);
+
+    // Pause deep enough that a core has emitted and snapshots exist.
+    let pause = PauseFlag::new();
+    let mut ckpt = JobCheckpoint::fresh(&x0, k);
+    while ckpt.outputs.is_empty() {
+        pause.raise();
+        let exec = ChordsExecutor::new(&pool, cfg.clone());
+        match exec.run_from(ckpt, |_| {}, |_| {}, Some(&pause)).unwrap() {
+            RunOutcome::Paused(c) => ckpt = c,
+            RunOutcome::Done(_) => panic!("run finished before any pause with an output"),
+        }
+    }
+    let bytes = ckpt.to_bytes();
+    let back = JobCheckpoint::from_bytes(&bytes).unwrap();
+    assert_eq!(back.to_bytes(), bytes, "re-encoding is not canonical");
+    assert_eq!(back.step, ckpt.step);
+    assert_eq!(back.cores, ckpt.cores);
+    assert_eq!(back.total_nfes, ckpt.total_nfes);
+    assert_eq!(back.rectifications, ckpt.rectifications);
+    assert_eq!(back.comm_bytes, ckpt.comm_bytes);
+    assert_eq!(back.outputs.len(), ckpt.outputs.len());
+
+    // Truncations at every prefix length fail with an error, never panic.
+    for cut in [0, 3, 7, bytes.len() / 2, bytes.len() - 1] {
+        assert!(
+            JobCheckpoint::from_bytes(&bytes[..cut]).is_err(),
+            "truncation at {cut} bytes decoded"
+        );
+    }
+    let mut wrong_version = bytes.clone();
+    wrong_version[0] = 99;
+    let err = JobCheckpoint::from_bytes(&wrong_version).unwrap_err();
+    assert!(err.contains("version"), "{err}");
+}

@@ -73,8 +73,11 @@ fn prop_scheduler_coverage() {
 /// solve bit-for-bit for any valid initialization sequence.
 #[test]
 fn prop_final_output_exact() {
-    let pool =
-        CorePool::new(8, Arc::new(ExpOdeFactory::new(vec![6], 0)), Arc::new(Euler)).unwrap();
+    let pool = CorePool::builder(8)
+        .factory(Arc::new(ExpOdeFactory::new(vec![6], 0)))
+        .rule(Arc::new(Euler))
+        .build()
+        .unwrap();
     let mut rng = Rng::seeded(7);
     for (k, n, seq) in random_cases(25) {
         if k > 8 {
@@ -96,8 +99,11 @@ fn prop_final_output_exact() {
 /// (k−1) + N − i_k for every core, every sequence.
 #[test]
 fn prop_nfe_depths() {
-    let pool =
-        CorePool::new(8, Arc::new(ExpOdeFactory::new(vec![3], 0)), Arc::new(Euler)).unwrap();
+    let pool = CorePool::builder(8)
+        .factory(Arc::new(ExpOdeFactory::new(vec![3], 0)))
+        .rule(Arc::new(Euler))
+        .build()
+        .unwrap();
     let mut rng = Rng::seeded(11);
     for (k, n, seq) in random_cases(20) {
         if k > 8 {
@@ -124,7 +130,7 @@ fn prop_nfe_depths() {
 #[test]
 fn prop_streaming_errors_decrease_calibrated() {
     let factory = Arc::new(GaussMixtureFactory::standard(vec![12], 5, 0));
-    let pool = CorePool::new(8, factory, Arc::new(Euler)).unwrap();
+    let pool = CorePool::builder(8).factory(factory).rule(Arc::new(Euler)).build().unwrap();
     let mut rng = Rng::seeded(3);
     for n in [30usize, 50, 80] {
         for k in [2usize, 4, 8] {
@@ -151,8 +157,11 @@ fn prop_streaming_errors_decrease_calibrated() {
 #[test]
 fn prop_exactness_on_nonuniform_grids() {
     use chords::solvers::GridKind;
-    let pool =
-        CorePool::new(4, Arc::new(ExpOdeFactory::new(vec![4], 0)), Arc::new(Euler)).unwrap();
+    let pool = CorePool::builder(4)
+        .factory(Arc::new(ExpOdeFactory::new(vec![4], 0)))
+        .rule(Arc::new(Euler))
+        .build()
+        .unwrap();
     let mut rng = Rng::seeded(23);
     for kind in [GridKind::Shifted, GridKind::Cosine] {
         let grid = TimeGrid::new(kind, 40);
@@ -173,8 +182,11 @@ fn prop_exactness_on_nonuniform_grids() {
 #[test]
 fn prop_exactness_with_heun_rule() {
     use chords::solvers::Heun;
-    let pool =
-        CorePool::new(4, Arc::new(ExpOdeFactory::new(vec![4], 0)), Arc::new(Heun)).unwrap();
+    let pool = CorePool::builder(4)
+        .factory(Arc::new(ExpOdeFactory::new(vec![4], 0)))
+        .rule(Arc::new(Heun))
+        .build()
+        .unwrap();
     let mut rng = Rng::seeded(29);
     let grid = TimeGrid::uniform(30);
     let x0 = Tensor::randn(&[4], &mut rng);
@@ -191,7 +203,7 @@ fn prop_exactness_with_heun_rule() {
 #[test]
 fn prop_early_exit_monotone_in_tolerance() {
     let factory = Arc::new(GaussMixtureFactory::standard(vec![8], 9, 0));
-    let pool = CorePool::new(6, factory, Arc::new(Euler)).unwrap();
+    let pool = CorePool::builder(6).factory(factory).rule(Arc::new(Euler)).build().unwrap();
     let mut rng = Rng::seeded(5);
     let grid = TimeGrid::uniform(48);
     let x0 = Tensor::randn(&[8], &mut rng);

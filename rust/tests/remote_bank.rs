@@ -122,14 +122,14 @@ fn remote_chords_run_matches_local_across_shapes_and_rules() {
     let rules: Vec<(Arc<dyn StepRule>, &str)> =
         vec![(Arc::new(Euler), "euler"), (Arc::new(Heun), "heun")];
     for (rule, rname) in rules {
-        let local = CorePool::new(4, mix_factory(), rule.clone()).unwrap();
+        let local = CorePool::builder(4).factory(mix_factory()).rule(rule.clone()).build().unwrap();
         let want = run_chords(&local, 30, 9);
         for (engines, max_batch, linger) in [(1usize, 1usize, 0u64), (2, 4, 200), (3, 8, 500)] {
             let h = host(mix_factory(), engines, max_batch, linger);
             let bank = remote_bank(h.connector(), ropts(max_batch, linger));
             let wave_stats = bank.stats();
             let (fb, rstats) = remote_only(vec![bank]);
-            let pool = CorePool::new_with_bank(4, Box::new(fb), rule.clone()).unwrap();
+            let pool = CorePool::builder(4).bank(Box::new(fb)).rule(rule.clone()).build().unwrap();
             let got = run_chords(&pool, 30, 9);
             assert_eq!(
                 got, want,
@@ -150,7 +150,7 @@ fn remote_chords_run_matches_local_across_shapes_and_rules() {
 /// with output identical to an all-local run.
 #[test]
 fn host_crash_mid_wave_fails_over_with_identical_output() {
-    let local = CorePool::new(4, mix_factory(), Arc::new(Euler)).unwrap();
+    let local = CorePool::builder(4).factory(mix_factory()).rule(Arc::new(Euler)).build().unwrap();
     let want = run_chords(&local, 30, 21);
 
     let h_dying = host(mix_factory(), 1, 8, 100);
@@ -169,7 +169,7 @@ fn host_crash_mid_wave_fails_over_with_identical_output() {
     // Both members must be up before workers place, so the dying bank
     // actually receives waves.
     wait_for("both banks to handshake", || dying.healthy() && alive.healthy());
-    let pool = CorePool::new_with_bank(4, Box::new(fb), Arc::new(Euler)).unwrap();
+    let pool = CorePool::builder(4).bank(Box::new(fb)).rule(Arc::new(Euler)).build().unwrap();
     let got = run_chords(&pool, 30, 21);
     assert_eq!(got, want, "failover changed the output");
     assert!(
@@ -209,7 +209,7 @@ fn swallowed_wave_times_out_and_fails_over() {
 #[test]
 fn dead_remote_fails_over_onto_local_bank() {
     let want = {
-        let p = CorePool::new(4, mix_factory(), Arc::new(Euler)).unwrap();
+        let p = CorePool::builder(4).factory(mix_factory()).rule(Arc::new(Euler)).build().unwrap();
         run_chords(&p, 30, 33)
     };
     let h = host(mix_factory(), 1, 8, 100);
@@ -231,7 +231,7 @@ fn dead_remote_fails_over_onto_local_bank() {
     .unwrap();
     assert_eq!(fb.members(), 2);
     wait_for("remote member to handshake", || remote.healthy());
-    let pool = CorePool::new_with_bank(4, Box::new(fb), Arc::new(Euler)).unwrap();
+    let pool = CorePool::builder(4).bank(Box::new(fb)).rule(Arc::new(Euler)).build().unwrap();
     assert_eq!(run_chords(&pool, 30, 33), want, "local+remote mix changed the output");
     assert!(set_rstats.failovers.load(Ordering::Relaxed) >= 1, "remote waves requeued locally");
 }
