@@ -116,7 +116,7 @@ pub fn help_text() -> String {
     for (cmd, desc) in rows {
         out.push_str(&format!("    {cmd:<18} {desc}\n"));
     }
-    out.push_str("\nCOMMON KEYS:\n    model=<preset>  steps=N  cores=K  method=chords|srds|paradigms|seq\n    init=calibrated|paper|uniform|[0,8,16,32]  seed=S  artifacts=DIR\n");
+    out.push_str("\nCOMMON KEYS:\n    model=<preset>  steps=N  cores=K  method=chords|srds|paradigms|draft-refine|seq\n    paradigm=<method>  draft-stride=S  refine-window=W  draft-tol=T  (draft-refine knobs)\n    init=calibrated|paper|uniform|[0,8,16,32]  seed=S  artifacts=DIR\n");
     out
 }
 
@@ -202,5 +202,13 @@ mod tests {
         for t in ["table1", "table2", "table3", "table4", "fig4", "fig5"] {
             assert!(h.contains(t));
         }
+    }
+
+    #[test]
+    fn help_mentions_draft_refine_paradigm() {
+        let h = help_text();
+        assert!(h.contains("draft-refine"));
+        assert!(h.contains("draft-stride"));
+        assert!(h.contains("refine-window"));
     }
 }

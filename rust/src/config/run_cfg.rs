@@ -11,6 +11,7 @@ pub enum Method {
     Chords,
     ParaDigms,
     Srds,
+    DraftRefine,
 }
 
 impl Method {
@@ -20,6 +21,7 @@ impl Method {
             Method::Chords => "CHORDS",
             Method::ParaDigms => "ParaDIGMS",
             Method::Srds => "SRDS",
+            Method::DraftRefine => "DraftRefine",
         }
     }
 
@@ -29,6 +31,7 @@ impl Method {
             "chords" | "ours" => Some(Method::Chords),
             "paradigms" | "picard" => Some(Method::ParaDigms),
             "srds" | "parareal" => Some(Method::Srds),
+            "draft-refine" | "draftrefine" | "draft_refine" => Some(Method::DraftRefine),
             _ => None,
         }
     }
@@ -53,6 +56,15 @@ pub struct RunConfig {
     pub picard_tol: f32,
     /// SRDS parareal convergence tolerance.
     pub srds_tol: f32,
+    /// DraftRefine draft stride: the cheap drafter jumps this many fine
+    /// steps per coarse Euler step (draft cost ≈ N/stride NFEs).
+    pub draft_stride: usize,
+    /// DraftRefine refinement window (trajectory points speculatively
+    /// refined per sweep). 0 = one per granted core.
+    pub refine_window: usize,
+    /// DraftRefine Picard acceptance tolerance (per-element RMS between
+    /// successive boundary values). 0 = bitwise-sequential mode.
+    pub draft_tol: f32,
     /// CHORDS early-exit residual threshold (None = run to core 1).
     pub early_exit_tol: Option<f32>,
     /// Directory containing AOT artifacts.
@@ -74,6 +86,9 @@ impl Default for RunConfig {
             // see EXPERIMENTS.md §Calibration.
             picard_tol: 6e-2,
             srds_tol: 3e-2,
+            draft_stride: 4,
+            refine_window: 0,
+            draft_tol: 2e-2,
             early_exit_tol: None,
             artifacts_dir: "artifacts".to_string(),
         }
@@ -87,7 +102,7 @@ impl RunConfig {
             "model" => self.model = value.to_string(),
             "steps" | "n" => self.steps = value.parse().map_err(|e| format!("steps: {e}"))?,
             "cores" | "k" => self.cores = value.parse().map_err(|e| format!("cores: {e}"))?,
-            "method" => {
+            "method" | "paradigm" => {
                 self.method = Method::parse(value).ok_or_else(|| format!("unknown method '{value}'"))?
             }
             "init" => {
@@ -96,6 +111,19 @@ impl RunConfig {
             "seed" => self.seed = value.parse().map_err(|e| format!("seed: {e}"))?,
             "picard_tol" => self.picard_tol = value.parse().map_err(|e| format!("picard_tol: {e}"))?,
             "srds_tol" => self.srds_tol = value.parse().map_err(|e| format!("srds_tol: {e}"))?,
+            "draft_stride" | "draft-stride" => {
+                let v: usize = value.parse().map_err(|e| format!("draft_stride: {e}"))?;
+                if v == 0 {
+                    return Err("draft_stride must be ≥ 1".into());
+                }
+                self.draft_stride = v;
+            }
+            "refine_window" | "refine-window" => {
+                self.refine_window = value.parse().map_err(|e| format!("refine_window: {e}"))?
+            }
+            "draft_tol" | "draft-tol" => {
+                self.draft_tol = value.parse().map_err(|e| format!("draft_tol: {e}"))?
+            }
             "early_exit_tol" => {
                 self.early_exit_tol = Some(value.parse().map_err(|e| format!("early_exit_tol: {e}"))?)
             }
@@ -321,7 +349,29 @@ mod tests {
         assert_eq!(Method::parse("chords"), Some(Method::Chords));
         assert_eq!(Method::parse("OURS"), Some(Method::Chords));
         assert_eq!(Method::parse("srds"), Some(Method::Srds));
+        assert_eq!(Method::parse("draft-refine"), Some(Method::DraftRefine));
+        assert_eq!(Method::parse("DRAFT_REFINE"), Some(Method::DraftRefine));
+        assert_eq!(Method::parse("draftrefine"), Some(Method::DraftRefine));
         assert_eq!(Method::parse("x"), None);
+    }
+
+    #[test]
+    fn draft_refine_knobs() {
+        let c = RunConfig::default();
+        assert_eq!(c.draft_stride, 4);
+        assert_eq!(c.refine_window, 0, "0 = one point per granted core");
+        assert!(c.draft_tol > 0.0);
+        let mut c = RunConfig::default();
+        c.set("paradigm", "draft-refine").unwrap();
+        c.set("draft-stride", "8").unwrap();
+        c.set("refine_window", "3").unwrap();
+        c.set("draft_tol", "0").unwrap();
+        assert_eq!(c.method, Method::DraftRefine);
+        assert_eq!(c.draft_stride, 8);
+        assert_eq!(c.refine_window, 3);
+        assert_eq!(c.draft_tol, 0.0);
+        assert!(c.set("draft_stride", "0").is_err(), "stride 0 rejected");
+        assert!(c.set("paradigm", "bogus").is_err());
     }
 
     #[test]

@@ -1,0 +1,916 @@
+//! The speculative draft-and-refine coordinator — the complementary paradigm
+//! to CHORDS' hierarchy of solvers (DRiffusion / sliding-window Picard,
+//! Shih et al. 2023): core 0 *drafts* the whole trajectory with a cheap
+//! coarse solver (one step-rule jump per strided span, exactly the SRDS
+//! coarse propagator), then the cores *refine* a sliding window of the
+//! draft in parallel sweeps until successive boundary values converge.
+//!
+//! Every sweep submits **one** fused wave through
+//! [`crate::workers::WorkerSet::submit_batch`]: slot 0 carries a
+//! [`crate::workers::Job::Step`] advancing the converged front — the
+//! step-rule-certified move, bitwise identical to the sequential recurrence
+//! because its input is already converged — and the remaining slots carry
+//! [`crate::workers::Job::Drift`] evaluations of the window points, which
+//! feed a coordinator-side Picard update (cumulative `axpy` from the fresh
+//! front). Points whose Picard residual passes `tol` are accepted *past*
+//! the front, so converged prefixes can grow by several points per sweep;
+//! the extra acceptance is gated on `tol > 0`, which makes `tol = 0` an
+//! airtight bitwise-equality mode: every committed point is then a certified
+//! step output and the final state equals the sequential solver's bit for
+//! bit, under **any** step rule (Euler, Heun, …), any core count, any draft
+//! stride, and any worker substrate (dedicated, batched, remote).
+//!
+//! The executor exposes the same serving surface as
+//! [`super::chords::ChordsExecutor`]: streaming outputs (a speculative draft
+//! preview first, the refined result last), a retire hook releasing workers
+//! as the unconverged tail shrinks below the window, and a versioned binary
+//! checkpoint ([`DraftRefineCheckpoint`]) with `run_from`-style pause/resume
+//! so preemption and cross-host migration keep working. Each sweep also
+//! emits a [`StabilitySignal`] — draft-vs-refined residual, acceptance, and
+//! retire cadence — consumed by [`crate::sched::AdaptiveController`] to
+//! forecast load from solver behavior rather than queue telemetry alone.
+
+use super::chords::{ChordsResult, CoreOutput, PauseFlag};
+use crate::solvers::TimeGrid;
+use crate::tensor::{ops, Tensor};
+use crate::util::timer::Timer;
+use crate::workers::{Job, WorkerSet};
+
+/// Configuration for one draft-and-refine run.
+#[derive(Clone, Debug)]
+pub struct DraftRefineConfig {
+    /// Time grid (N fine steps).
+    pub grid: TimeGrid,
+    /// Logical cores granted to the job (slot 0 drafts and advances the
+    /// front; slots 1.. refine window points).
+    pub cores: usize,
+    /// Grid indices per draft jump: the drafter advances `0 → stride →
+    /// 2·stride → … → N` with one step-rule application per span. Clamped
+    /// to ≥ 1; `stride ≥ N` collapses the draft to a single jump.
+    pub draft_stride: usize,
+    /// Points examined per refinement sweep (the certified front step plus
+    /// `window − 1` Picard drift evaluations). `0` ⇒ use every granted
+    /// core. The effective window is locked into the checkpoint at the
+    /// first sweep so resumes stay bitwise-identical.
+    pub window: usize,
+    /// Picard acceptance tolerance on successive boundary values (RMSE).
+    /// `0` disables speculative acceptance entirely: only the certified
+    /// front step commits, and the output is bitwise-equal to the
+    /// sequential fine solver.
+    pub tol: f32,
+}
+
+impl DraftRefineConfig {
+    /// Config for `cores` cores over `grid`, defaults elsewhere
+    /// (stride 4, window = cores, `tol = 0`).
+    pub fn new(cores: usize, grid: TimeGrid) -> Self {
+        DraftRefineConfig { grid, cores, draft_stride: 4, window: 0, tol: 0.0 }
+    }
+}
+
+/// One sweep's stability telemetry, streamed to the scheduler so adaptive
+/// batching can forecast solver-driven load ([`crate::sched`]).
+#[derive(Clone, Debug, PartialEq)]
+pub struct StabilitySignal {
+    /// 1-based refinement sweep index.
+    pub sweep: usize,
+    /// Draft-vs-refined residual: RMSE between the certified front step and
+    /// the draft's prediction of that point.
+    pub residual: f32,
+    /// Grid points the converged front advanced this sweep (≥ 1; > 1 when
+    /// Picard acceptance extended the certified step).
+    pub accepted: usize,
+    /// Points examined this sweep (the wave size: front step + drifts).
+    pub window: usize,
+    /// Workers retired this sweep as the unconverged tail shrank.
+    pub retired: usize,
+}
+
+/// Result of a draft-and-refine run.
+#[derive(Debug)]
+pub struct DraftRefineResult {
+    /// Streamed outputs: the speculative draft preview first (core K, when
+    /// K ≥ 2), the refined result last (core 1).
+    pub outputs: Vec<CoreOutput>,
+    /// The refined latent at t = 1.
+    pub final_output: Tensor,
+    /// Sequential NFE depth: draft jumps + refinement sweeps.
+    pub nfe_depth: usize,
+    /// Total NFEs spent across all cores (work, not depth).
+    pub total_nfes: u64,
+    /// Wall-clock duration of the run (this segment, under resume).
+    pub wall_s: f64,
+    /// Refinement sweeps until the front reached t = 1.
+    pub sweeps: usize,
+    /// Draft jumps (the sequential prefix of the depth).
+    pub draft_depth: usize,
+    /// Per-sweep stability telemetry produced by this run segment.
+    pub signals: Vec<StabilitySignal>,
+}
+
+impl DraftRefineResult {
+    /// Speedup in sequential NFE depth vs an `n`-step sequential solve.
+    pub fn speedup(&self, n: usize) -> f64 {
+        n as f64 / self.nfe_depth as f64
+    }
+
+    /// Output of a specific core, if it emitted.
+    pub fn output_of(&self, core: usize) -> Option<&CoreOutput> {
+        self.outputs.iter().find(|o| o.core == core)
+    }
+
+    /// Reshape into the CHORDS result type, so the server's response path
+    /// (router → wire body) is paradigm-agnostic. Draft-refine has no
+    /// rectification events and never early-exits.
+    pub fn into_chords(self) -> ChordsResult {
+        ChordsResult {
+            final_output: self.final_output,
+            nfe_depth: self.nfe_depth,
+            outputs: self.outputs,
+            total_nfes: self.total_nfes,
+            wall_s: self.wall_s,
+            early_exited: false,
+            rectifications: 0,
+            comm_bytes: 0,
+            trace: Vec::new(),
+        }
+    }
+}
+
+/// A complete draft-refine run snapshot at a sweep boundary: the whole
+/// trajectory estimate plus the front/accounting prefix. Produced by
+/// [`DraftRefineExecutor::run_from`] when a [`PauseFlag`] is raised;
+/// consumed by the same method to resume — on the same pool, a different
+/// [`WorkerSet`], or (serialized) a different host.
+#[derive(Clone, Debug)]
+pub struct DraftRefineCheckpoint {
+    /// Whether the draft phase completed (the draft is atomic; pauses land
+    /// on sweep boundaries only).
+    pub drafted: bool,
+    /// Converged front: grid indices `0..=front` are final.
+    pub front: usize,
+    /// Refinement sweeps completed so far.
+    pub sweeps: usize,
+    /// Effective window locked at the first sweep (`0` until then), so a
+    /// resume on a different grant reproduces the same waves bitwise.
+    pub window: usize,
+    /// Draft jumps completed (the sequential prefix of the NFE depth).
+    pub draft_depth: usize,
+    /// Trajectory estimate: one state per grid index, `0..=N`.
+    pub xs: Vec<Tensor>,
+    /// Outputs already streamed before the checkpoint was taken.
+    pub outputs: Vec<CoreOutput>,
+    /// NFEs spent so far across all cores.
+    pub total_nfes: u64,
+}
+
+/// Checkpoint wire codec version ([`DraftRefineCheckpoint::to_bytes`]).
+const CKPT_VERSION: u32 = 1;
+
+impl DraftRefineCheckpoint {
+    /// The checkpoint of a job that has not run yet: the whole trajectory
+    /// initialized to `x0`, nothing drafted. `run_from` on this is exactly
+    /// a fresh run.
+    pub fn fresh(x0: &Tensor, n: usize) -> DraftRefineCheckpoint {
+        DraftRefineCheckpoint {
+            drafted: false,
+            front: 0,
+            sweeps: 0,
+            window: 0,
+            draft_depth: 0,
+            xs: vec![x0.clone(); n + 1],
+            outputs: Vec::new(),
+            total_nfes: 0,
+        }
+    }
+
+    /// Serialize to the binary checkpoint codec (little-endian, raw f32
+    /// payloads — bitwise exact, like [`super::chords::JobCheckpoint`]).
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let dims: &[usize] = self.xs.first().map(|x| x.dims()).unwrap_or(&[]);
+        let mut out = Vec::new();
+        push_u32(&mut out, CKPT_VERSION);
+        out.push(self.drafted as u8);
+        push_u32(&mut out, self.front as u32);
+        push_u32(&mut out, self.sweeps as u32);
+        push_u32(&mut out, self.window as u32);
+        push_u32(&mut out, self.draft_depth as u32);
+        push_u32(&mut out, self.xs.len() as u32);
+        push_u32(&mut out, dims.len() as u32);
+        for d in dims {
+            push_u32(&mut out, *d as u32);
+        }
+        for x in &self.xs {
+            push_f32s(&mut out, x.data());
+        }
+        push_u32(&mut out, self.outputs.len() as u32);
+        for o in &self.outputs {
+            push_u32(&mut out, o.core as u32);
+            push_u32(&mut out, o.nfe_depth as u32);
+            push_u32(&mut out, o.step as u32);
+            out.extend_from_slice(&o.wall_s.to_le_bytes());
+            push_f32s(&mut out, o.output.data());
+        }
+        out.extend_from_slice(&self.total_nfes.to_le_bytes());
+        out
+    }
+
+    /// Decode a checkpoint produced by [`Self::to_bytes`]. Every read is
+    /// bounds-checked so truncated or corrupt payloads fail cleanly.
+    pub fn from_bytes(buf: &[u8]) -> Result<DraftRefineCheckpoint, String> {
+        let mut cur = CkptCursor { buf, pos: 0 };
+        let version = cur.u32()?;
+        if version != CKPT_VERSION {
+            return Err(format!("checkpoint version {version} (expected {CKPT_VERSION})"));
+        }
+        let drafted = cur.u8()? != 0;
+        let front = cur.u32()? as usize;
+        let sweeps = cur.u32()? as usize;
+        let window = cur.u32()? as usize;
+        let draft_depth = cur.u32()? as usize;
+        let n_points = cur.u32()? as usize;
+        if n_points == 0 || n_points > 100_000 {
+            return Err(format!("checkpoint has {n_points} trajectory points"));
+        }
+        if front >= n_points {
+            return Err(format!("checkpoint front {front} beyond {n_points} points"));
+        }
+        let ndims = cur.u32()? as usize;
+        if ndims > 8 {
+            return Err(format!("checkpoint has {ndims} dims (max 8)"));
+        }
+        let mut dims = Vec::with_capacity(ndims);
+        for _ in 0..ndims {
+            dims.push(cur.u32()? as usize);
+        }
+        let numel: usize = dims
+            .iter()
+            .try_fold(1usize, |acc, d| acc.checked_mul(*d))
+            .ok_or("checkpoint dims overflow".to_string())?;
+        let mut xs = Vec::with_capacity(n_points);
+        for _ in 0..n_points {
+            xs.push(Tensor::from_vec(&dims, cur.f32s(numel)?));
+        }
+        let n_out = cur.u32()? as usize;
+        if n_out > 16 {
+            return Err(format!("checkpoint has {n_out} outputs"));
+        }
+        let mut outputs = Vec::with_capacity(n_out);
+        for _ in 0..n_out {
+            let core = cur.u32()? as usize;
+            let nfe_depth = cur.u32()? as usize;
+            let step = cur.u32()? as usize;
+            let wall_s = f64::from_le_bytes(cur.bytes(8)?.try_into().unwrap());
+            let output = Tensor::from_vec(&dims, cur.f32s(numel)?);
+            outputs.push(CoreOutput { core, output, nfe_depth, wall_s, step });
+        }
+        let total_nfes = u64::from_le_bytes(cur.bytes(8)?.try_into().unwrap());
+        if cur.pos != buf.len() {
+            return Err(format!("{} trailing bytes after checkpoint", buf.len() - cur.pos));
+        }
+        Ok(DraftRefineCheckpoint {
+            drafted,
+            front,
+            sweeps,
+            window,
+            draft_depth,
+            xs,
+            outputs,
+            total_nfes,
+        })
+    }
+}
+
+fn push_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn push_f32s(out: &mut Vec<u8>, vals: &[f32]) {
+    out.reserve(vals.len() * 4);
+    for v in vals {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+}
+
+/// Bounds-checked reader over a checkpoint payload.
+struct CkptCursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> CkptCursor<'a> {
+    fn bytes(&mut self, n: usize) -> Result<&'a [u8], String> {
+        let end = self.pos.checked_add(n).filter(|e| *e <= self.buf.len()).ok_or_else(|| {
+            format!("checkpoint truncated at byte {} (need {n} more)", self.pos)
+        })?;
+        let s = &self.buf[self.pos..end];
+        self.pos = end;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8, String> {
+        Ok(self.bytes(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32, String> {
+        Ok(u32::from_le_bytes(self.bytes(4)?.try_into().unwrap()))
+    }
+
+    fn f32s(&mut self, n: usize) -> Result<Vec<f32>, String> {
+        let raw = self.bytes(n.checked_mul(4).ok_or("checkpoint numel overflow")?)?;
+        Ok(raw.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect())
+    }
+}
+
+/// What [`DraftRefineExecutor::run_from`] produced: a finished result, or a
+/// checkpoint taken because the [`PauseFlag`] was raised mid-run.
+#[derive(Debug)]
+pub enum DraftRefineOutcome {
+    /// The run completed.
+    Done(DraftRefineResult),
+    /// The run paused; resume by passing the checkpoint back to `run_from`.
+    Paused(DraftRefineCheckpoint),
+}
+
+/// The draft-and-refine executor. Drives any [`WorkerSet`] — a whole
+/// [`crate::workers::CorePool`] or a leased [`crate::workers::PoolView`]
+/// subset when running under the elastic scheduler ([`crate::sched`]).
+pub struct DraftRefineExecutor<'a> {
+    pool: &'a dyn WorkerSet,
+    cfg: DraftRefineConfig,
+    on_signal: Option<Box<dyn Fn(&StabilitySignal) + 'a>>,
+}
+
+impl<'a> DraftRefineExecutor<'a> {
+    /// `pool.size()` must be ≥ `cfg.cores` (one worker per core).
+    pub fn new(pool: &'a dyn WorkerSet, cfg: DraftRefineConfig) -> Self {
+        let k = cfg.cores.max(1);
+        assert!(pool.size() >= k, "pool has {} workers, need {k}", pool.size());
+        assert!(cfg.grid.steps() >= 1, "draft-refine needs a non-empty grid");
+        DraftRefineExecutor { pool, cfg, on_signal: None }
+    }
+
+    /// Stream every [`StabilitySignal`] this executor produces into `hook`
+    /// as it is emitted (in addition to collecting them on the result) —
+    /// the live feed the router forwards to the scheduler's stability sink.
+    pub fn with_signal_hook(mut self, hook: impl Fn(&StabilitySignal) + 'a) -> Self {
+        self.on_signal = Some(Box::new(hook));
+        self
+    }
+
+    /// Run without streaming callbacks.
+    pub fn run(&self, x0: &Tensor) -> DraftRefineResult {
+        self.run_streaming(x0, |_| {})
+    }
+
+    /// Run from the initial latent `x0`, invoking `on_output` for the draft
+    /// preview and the refined result as each is produced.
+    pub fn run_streaming(
+        &self,
+        x0: &Tensor,
+        on_output: impl FnMut(&CoreOutput),
+    ) -> DraftRefineResult {
+        self.run_streaming_with_retire(x0, on_output, |_| {})
+    }
+
+    /// Like [`Self::run_streaming`], plus `on_retire` fired (with the
+    /// 0-based core index) the moment a worker can no longer receive jobs
+    /// from this run — immediately for slots beyond the configured window,
+    /// then progressively as the unconverged tail shrinks below the window
+    /// — so an elastic scheduler can re-lease those cores mid-run, exactly
+    /// like CHORDS' progressive capacity release.
+    pub fn run_streaming_with_retire(
+        &self,
+        x0: &Tensor,
+        on_output: impl FnMut(&CoreOutput),
+        on_retire: impl FnMut(usize),
+    ) -> DraftRefineResult {
+        self.try_run_streaming_with_retire(x0, on_output, on_retire)
+            .expect("engine failed mid-run")
+    }
+
+    /// Fallible [`Self::run_streaming_with_retire`]: when a worker reports
+    /// an engine failure ([`crate::workers::Reply::err`]), the run stops at
+    /// that wave and the error is returned instead of panicking. The
+    /// failing wave is fully collected first, so no stray replies leak into
+    /// the pool's next job.
+    pub fn try_run_streaming_with_retire(
+        &self,
+        x0: &Tensor,
+        on_output: impl FnMut(&CoreOutput),
+        on_retire: impl FnMut(usize),
+    ) -> Result<DraftRefineResult, String> {
+        let ckpt = DraftRefineCheckpoint::fresh(x0, self.cfg.grid.steps());
+        match self.run_from(ckpt, on_output, on_retire, None)? {
+            DraftRefineOutcome::Done(res) => Ok(res),
+            DraftRefineOutcome::Paused(_) => unreachable!("paused without a pause flag"),
+        }
+    }
+
+    /// The preemptible core of the executor: run from a
+    /// [`DraftRefineCheckpoint`] (use [`DraftRefineCheckpoint::fresh`] for a
+    /// new job), pausing at the next sweep boundary if `pause` is raised.
+    /// The sweep schedule is a pure function of (front, window, grid) and
+    /// workers are stateless, so resuming the returned checkpoint — on this
+    /// pool or any other [`WorkerSet`] of sufficient size — produces
+    /// bitwise-identical outputs to an uninterrupted run.
+    /// `on_output`/`on_retire` fire only for events produced in *this*
+    /// segment, not ones replayed from the checkpoint.
+    pub fn run_from(
+        &self,
+        ckpt: DraftRefineCheckpoint,
+        mut on_output: impl FnMut(&CoreOutput),
+        mut on_retire: impl FnMut(usize),
+        pause: Option<&PauseFlag>,
+    ) -> Result<DraftRefineOutcome, String> {
+        let grid = &self.cfg.grid;
+        let n = grid.steps();
+        let k = self.cfg.cores.max(1);
+        let timer = Timer::start();
+        assert_eq!(ckpt.xs.len(), n + 1, "checkpoint trajectory mismatches grid");
+
+        let DraftRefineCheckpoint {
+            mut drafted,
+            front: mut c,
+            mut sweeps,
+            window: ckpt_window,
+            mut draft_depth,
+            mut xs,
+            mut outputs,
+            mut total_nfes,
+        } = ckpt;
+        // Lock the effective window on the first segment so every later
+        // resume — possibly on a grant of a different size — replays the
+        // exact same wave schedule.
+        let w = if ckpt_window > 0 {
+            ckpt_window
+        } else if self.cfg.window == 0 {
+            k
+        } else {
+            self.cfg.window.clamp(1, k)
+        };
+        let mut signals: Vec<StabilitySignal> = Vec::new();
+        // Workers at slots ≥ `retired_above` have been handed back to this
+        // segment's grant. Per-segment, not checkpointed: each resume runs
+        // on a fresh grant with its own full complement of cores.
+        let mut retired_above = k;
+        let mut retire_to = |need: usize, above: &mut usize, hook: &mut dyn FnMut(usize)| {
+            let mut fired = 0usize;
+            while *above > need {
+                *above -= 1;
+                hook(*above);
+                fired += 1;
+            }
+            fired
+        };
+
+        // ---- Draft phase: coarse jumps on slot 0 over the strided grid ----
+        // One step-rule application per span — the SRDS coarse propagator G.
+        // The draft only seeds the Picard iterates beyond the front; it can
+        // never change a converged value, so it accelerates `tol > 0`
+        // convergence without touching the `tol = 0` bitwise guarantee.
+        if !drafted {
+            let stride = self.cfg.draft_stride.max(1);
+            let mut lo = 0usize;
+            while lo < n {
+                let hi = (lo + stride).min(n);
+                self.pool.submit(
+                    0,
+                    Job::Step { x: xs[lo].clone(), t: grid.t(lo), t2: grid.t(hi) },
+                );
+                let reply = self.pool.collect(1).pop().expect("draft reply");
+                total_nfes += 1;
+                draft_depth += 1;
+                if let Some(e) = reply.err {
+                    return Err(e);
+                }
+                // Seed the span: coarse endpoint at `hi`, time-interpolated
+                // iterates in between (a deterministic warm start for the
+                // Picard sweeps).
+                let span = grid.t(hi) - grid.t(lo);
+                for i in lo + 1..hi {
+                    let frac = if span > 0.0 { (grid.t(i) - grid.t(lo)) / span } else { 0.0 };
+                    xs[i] = ops::lerp(&xs[lo], &reply.out, frac);
+                }
+                xs[hi] = reply.out;
+                lo = hi;
+            }
+            drafted = true;
+            // Speculative preview: the draft's terminal state streams
+            // immediately (core K), long before refinement lands (core 1).
+            if k >= 2 {
+                let out = CoreOutput {
+                    core: k,
+                    output: xs[n].clone(),
+                    nfe_depth: draft_depth,
+                    wall_s: timer.elapsed_s(),
+                    step: 0,
+                };
+                on_output(&out);
+                outputs.push(out);
+            }
+            if c < n && pause.map(|p| p.is_raised()).unwrap_or(false) {
+                return Ok(DraftRefineOutcome::Paused(DraftRefineCheckpoint {
+                    drafted,
+                    front: c,
+                    sweeps,
+                    window: w,
+                    draft_depth,
+                    xs,
+                    outputs,
+                    total_nfes,
+                }));
+            }
+        }
+
+        // ---- Refinement sweeps ----
+        while c < n {
+            let hi = (c + w).min(n);
+            // One fused wave: the certified front step on slot 0, Picard
+            // drift evaluations of the window points on slots 1.. — all
+            // through a single submit_batch so a batched pool fuses them
+            // into shared-engine invocations.
+            let mut wave: Vec<(usize, Job)> = Vec::with_capacity(hi - c);
+            wave.push((0, Job::Step { x: xs[c].clone(), t: grid.t(c), t2: grid.t(c + 1) }));
+            for i in c + 1..hi {
+                wave.push((i - c, Job::Drift { x: xs[i].clone(), t: grid.t(i) }));
+            }
+            let submitted = wave.len();
+            self.pool.submit_batch(wave);
+            // Drain the whole wave even if a reply carries an error —
+            // returning early would leave replies to be misattributed to
+            // the pool's next job.
+            let mut fronted: Option<Tensor> = None;
+            let mut drifts: Vec<Option<Tensor>> = vec![None; hi - c];
+            let mut wave_err: Option<String> = None;
+            for reply in self.pool.collect(submitted) {
+                total_nfes += 1;
+                if let Some(e) = reply.err {
+                    wave_err.get_or_insert(e);
+                    continue;
+                }
+                if reply.worker == 0 {
+                    fronted = Some(reply.out);
+                } else {
+                    drifts[reply.worker] = Some(reply.drift);
+                }
+            }
+            if let Some(e) = wave_err {
+                return Err(e);
+            }
+            let fronted = fronted.expect("front step reply");
+            let residual = ops::rmse(&fronted, &xs[c + 1]);
+            // Commit the certified front point, then fold the window's
+            // drifts into a cumulative Picard update from it. Acceptance
+            // past the front requires `tol > 0`: at `tol = 0` every
+            // committed point is a certified step output, which is what
+            // makes the sequential bitwise equality airtight.
+            xs[c + 1] = fronted;
+            let mut acc = xs[c + 1].clone();
+            let mut advancing = self.cfg.tol > 0.0;
+            let mut accepted = 1usize;
+            for i in c + 1..hi {
+                let f = drifts[i - c].take().expect("window drift reply");
+                ops::axpy_into(&mut acc, grid.t(i + 1) - grid.t(i), &f);
+                let picard_residual = ops::rmse(&acc, &xs[i + 1]);
+                xs[i + 1] = acc.clone();
+                if advancing && picard_residual <= self.cfg.tol {
+                    accepted += 1;
+                } else {
+                    advancing = false;
+                }
+            }
+            c += accepted;
+            sweeps += 1;
+            // Hand back workers the shrinking tail will never need again.
+            let need = if c < n { (n - c).min(w) } else { 0 };
+            let retired = retire_to(need, &mut retired_above, &mut on_retire);
+            let signal = StabilitySignal {
+                sweep: sweeps,
+                residual,
+                accepted,
+                window: submitted,
+                retired,
+            };
+            if let Some(hook) = &self.on_signal {
+                hook(&signal);
+            }
+            signals.push(signal);
+            if c < n && pause.map(|p| p.is_raised()).unwrap_or(false) {
+                return Ok(DraftRefineOutcome::Paused(DraftRefineCheckpoint {
+                    drafted,
+                    front: c,
+                    sweeps,
+                    window: w,
+                    draft_depth,
+                    xs,
+                    outputs,
+                    total_nfes,
+                }));
+            }
+        }
+
+        let nfe_depth = draft_depth + sweeps;
+        let out = CoreOutput {
+            core: 1,
+            output: xs[n].clone(),
+            nfe_depth,
+            wall_s: timer.elapsed_s(),
+            step: sweeps,
+        };
+        on_output(&out);
+        outputs.push(out);
+        retire_to(0, &mut retired_above, &mut on_retire);
+        Ok(DraftRefineOutcome::Done(DraftRefineResult {
+            final_output: xs[n].clone(),
+            nfe_depth,
+            outputs,
+            total_nfes,
+            wall_s: timer.elapsed_s(),
+            sweeps,
+            draft_depth,
+            signals,
+        }))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::sequential::sequential_solve;
+    use crate::engine::{ExpOdeFactory, GaussMixtureFactory};
+    use crate::solvers::{Euler, Heun};
+    use crate::util::rng::Rng;
+    use crate::workers::CorePool;
+    use std::sync::Arc;
+
+    fn exp_pool(k: usize) -> CorePool {
+        CorePool::builder(k)
+            .factory(Arc::new(ExpOdeFactory::new(vec![4], 0)))
+            .rule(Arc::new(Euler))
+            .build()
+            .unwrap()
+    }
+
+    fn x0() -> Tensor {
+        Tensor::from_vec(&[4], vec![1.0, -0.5, 2.0, 0.25])
+    }
+
+    fn cfg(cores: usize, n: usize, tol: f32) -> DraftRefineConfig {
+        let mut c = DraftRefineConfig::new(cores, TimeGrid::uniform(n));
+        c.tol = tol;
+        c
+    }
+
+    #[test]
+    fn tol_zero_is_bitwise_sequential_euler() {
+        let pool = exp_pool(4);
+        let exec = DraftRefineExecutor::new(&pool, cfg(4, 30, 0.0));
+        let res = exec.run(&x0());
+        let seq = sequential_solve(&pool, &TimeGrid::uniform(30), &x0());
+        assert_eq!(res.final_output, seq.output, "bitwise identity violated");
+        assert_eq!(res.sweeps, 30, "tol=0 advances exactly one point per sweep");
+    }
+
+    #[test]
+    fn tol_zero_is_bitwise_sequential_heun() {
+        // The certified-front design is step-rule agnostic: the front
+        // advance is a real Job::Step, so Heun's two-stage update is
+        // reproduced exactly even though the Picard refinement is Euler.
+        let pool = CorePool::builder(4)
+            .factory(Arc::new(ExpOdeFactory::new(vec![4], 0)))
+            .rule(Arc::new(Heun))
+            .build()
+            .unwrap();
+        let exec = DraftRefineExecutor::new(&pool, cfg(4, 25, 0.0));
+        let res = exec.run(&x0());
+        let seq = sequential_solve(&pool, &TimeGrid::uniform(25), &x0());
+        assert_eq!(res.final_output, seq.output, "bitwise identity violated under Heun");
+    }
+
+    #[test]
+    fn positive_tol_cuts_depth_and_stays_close() {
+        let pool = exp_pool(4);
+        let n = 48;
+        let seq = sequential_solve(&pool, &TimeGrid::uniform(n), &x0());
+        let exec = DraftRefineExecutor::new(&pool, cfg(4, n, 5e-2));
+        let res = exec.run(&x0());
+        assert!(res.sweeps < n, "Picard acceptance should beat one-point-per-sweep");
+        let err = ops::rmse(&res.final_output, &seq.output);
+        assert!(err < 0.3, "refined output drifted: rmse {err}");
+    }
+
+    #[test]
+    fn draft_preview_streams_before_refined_output() {
+        let pool = exp_pool(4);
+        let exec = DraftRefineExecutor::new(&pool, cfg(4, 30, 0.0));
+        let mut order = Vec::new();
+        let res = exec.run_streaming(&x0(), |o| order.push(o.core));
+        assert_eq!(order, vec![4, 1], "preview (core K) first, refined (core 1) last");
+        assert_eq!(res.outputs.len(), 2);
+        let preview = res.output_of(4).unwrap();
+        let fin = res.output_of(1).unwrap();
+        assert_eq!(preview.nfe_depth, res.draft_depth);
+        assert!(preview.nfe_depth < fin.nfe_depth);
+        assert_eq!(fin.output, res.final_output);
+    }
+
+    #[test]
+    fn retire_hook_releases_tail_workers_exactly_once() {
+        // window 2 on a 4-core grant: slots 2 and 3 retire after the first
+        // sweep, slot 1 as the tail shrinks under the window, slot 0 last.
+        let pool = exp_pool(4);
+        let mut c = cfg(4, 12, 0.0);
+        c.window = 2;
+        let exec = DraftRefineExecutor::new(&pool, c);
+        let mut retired = Vec::new();
+        let res = exec.run_streaming_with_retire(&x0(), |_| {}, |i| retired.push(i));
+        assert_eq!(retired.len(), 4, "every slot retires exactly once");
+        assert_eq!(retired[0], 3, "highest unused slot first");
+        assert_eq!(*retired.last().unwrap(), 0, "the front slot last");
+        let mut sorted = retired.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted, vec![0, 1, 2, 3]);
+        assert_eq!(res.sweeps, 12);
+    }
+
+    #[test]
+    fn signals_track_sweeps_and_acceptance() {
+        let pool = exp_pool(4);
+        let exec = DraftRefineExecutor::new(&pool, cfg(4, 20, 3e-2));
+        let streamed = std::sync::Mutex::new(Vec::new());
+        let exec = exec.with_signal_hook(|s| streamed.lock().unwrap().push(s.clone()));
+        let res = exec.run(&x0());
+        assert_eq!(res.signals.len(), res.sweeps);
+        assert_eq!(*streamed.lock().unwrap(), res.signals, "hook sees the same stream");
+        let mut front = 0usize;
+        for (i, s) in res.signals.iter().enumerate() {
+            assert_eq!(s.sweep, i + 1);
+            assert!(s.accepted >= 1, "front always advances");
+            assert!((1..=4).contains(&s.window));
+            assert!(s.accepted <= s.window);
+            front += s.accepted;
+        }
+        assert_eq!(front, 20, "acceptances sum to the grid length");
+    }
+
+    #[test]
+    fn pause_at_every_sweep_is_bitwise_identical() {
+        // Pausing after every sweep and resuming — alternating between two
+        // pools — must reproduce the uninterrupted run exactly.
+        let pool_a = exp_pool(4);
+        let pool_b = exp_pool(4);
+        let c = cfg(4, 24, 4e-2);
+        let exec_a = DraftRefineExecutor::new(&pool_a, c.clone());
+        let exec_b = DraftRefineExecutor::new(&pool_b, c);
+        let baseline = exec_a.run(&x0());
+
+        let pause = PauseFlag::new();
+        pause.raise();
+        let mut ckpt = DraftRefineCheckpoint::fresh(&x0(), 24);
+        let mut segments = 0usize;
+        let res = loop {
+            let exec = if segments % 2 == 0 { &exec_a } else { &exec_b };
+            match exec.run_from(ckpt, |_| {}, |_| {}, Some(&pause)).unwrap() {
+                DraftRefineOutcome::Done(res) => break res,
+                DraftRefineOutcome::Paused(next) => {
+                    segments += 1;
+                    ckpt = next;
+                }
+            }
+        };
+        assert!(segments > 1, "the pause flag split the run");
+        assert_eq!(res.final_output, baseline.final_output, "bitwise identity violated");
+        assert_eq!(res.sweeps, baseline.sweeps);
+        assert_eq!(res.total_nfes, baseline.total_nfes);
+        assert_eq!(res.outputs.len(), baseline.outputs.len());
+        for (a, b) in res.outputs.iter().zip(&baseline.outputs) {
+            assert_eq!(a.output, b.output, "core {} output differs", a.core);
+        }
+    }
+
+    #[test]
+    fn checkpoint_codec_roundtrips_mid_run() {
+        let pool = exp_pool(4);
+        let exec = DraftRefineExecutor::new(&pool, cfg(4, 30, 0.0));
+        let baseline = exec.run(&x0());
+
+        let pause = PauseFlag::new();
+        pause.raise();
+        let mut ckpt = DraftRefineCheckpoint::fresh(&x0(), 30);
+        for _ in 0..10 {
+            match exec.run_from(ckpt, |_| {}, |_| {}, Some(&pause)).unwrap() {
+                DraftRefineOutcome::Paused(next) => ckpt = next,
+                DraftRefineOutcome::Done(_) => panic!("run finished before 10 segments"),
+            }
+        }
+        assert!(ckpt.drafted);
+        assert!(ckpt.front > 0);
+        let decoded = DraftRefineCheckpoint::from_bytes(&ckpt.to_bytes()).unwrap();
+        assert_eq!(decoded.front, ckpt.front);
+        assert_eq!(decoded.sweeps, ckpt.sweeps);
+        assert_eq!(decoded.window, ckpt.window);
+        assert_eq!(decoded.xs, ckpt.xs);
+        assert_eq!(decoded.outputs.len(), ckpt.outputs.len());
+        pause.clear();
+        let res = match exec.run_from(decoded, |_| {}, |_| {}, None).unwrap() {
+            DraftRefineOutcome::Done(res) => res,
+            DraftRefineOutcome::Paused(_) => unreachable!(),
+        };
+        assert_eq!(res.final_output, baseline.final_output, "bitwise identity violated");
+        assert_eq!(res.total_nfes, baseline.total_nfes);
+    }
+
+    #[test]
+    fn checkpoint_codec_rejects_corrupt_payloads() {
+        let ckpt = DraftRefineCheckpoint::fresh(&x0(), 8);
+        let bytes = ckpt.to_bytes();
+        let truncated = &bytes[..bytes.len() - 1];
+        assert!(DraftRefineCheckpoint::from_bytes(truncated).is_err(), "truncated");
+        let mut extra = bytes.clone();
+        extra.push(0);
+        assert!(DraftRefineCheckpoint::from_bytes(&extra).is_err(), "trailing bytes");
+        let mut bad_version = bytes;
+        bad_version[0] = 99;
+        assert!(DraftRefineCheckpoint::from_bytes(&bad_version).is_err(), "version");
+        assert!(DraftRefineCheckpoint::from_bytes(&[]).is_err(), "empty");
+    }
+
+    #[test]
+    fn hooks_fire_only_for_new_segments() {
+        // A resumed run must not replay the draft preview from before the
+        // pause.
+        let pool = exp_pool(4);
+        let exec = DraftRefineExecutor::new(&pool, cfg(4, 20, 0.0));
+        let pause = PauseFlag::new();
+        pause.raise();
+        let ckpt = DraftRefineCheckpoint::fresh(&x0(), 20);
+        let mut first = Vec::new();
+        let ckpt = match exec.run_from(ckpt, |o| first.push(o.core), |_| {}, Some(&pause)).unwrap()
+        {
+            DraftRefineOutcome::Paused(next) => next,
+            DraftRefineOutcome::Done(_) => panic!("finished in one segment"),
+        };
+        assert_eq!(first, vec![4], "draft preview streamed in the first segment");
+        pause.clear();
+        let mut second = Vec::new();
+        let res = match exec.run_from(ckpt, |o| second.push(o.core), |_| {}, None).unwrap() {
+            DraftRefineOutcome::Done(res) => res,
+            DraftRefineOutcome::Paused(_) => unreachable!(),
+        };
+        assert_eq!(second, vec![1], "only the refined output streams after resume");
+        assert_eq!(res.outputs.len(), 2, "result still carries the full set");
+    }
+
+    #[test]
+    fn executor_runs_over_a_pool_view() {
+        let pool = exp_pool(6);
+        let view = pool.view(&[4, 1, 5, 2]);
+        let exec = DraftRefineExecutor::new(&view, cfg(4, 30, 0.0));
+        let res = exec.run(&x0());
+        let seq = sequential_solve(&pool, &TimeGrid::uniform(30), &x0());
+        assert_eq!(res.final_output, seq.output);
+    }
+
+    #[test]
+    fn single_core_degenerates_to_sequential() {
+        let pool = exp_pool(1);
+        let exec = DraftRefineExecutor::new(&pool, cfg(1, 15, 0.0));
+        let res = exec.run(&x0());
+        let seq = sequential_solve(&pool, &TimeGrid::uniform(15), &x0());
+        assert_eq!(res.final_output, seq.output);
+        assert_eq!(res.outputs.len(), 1, "no preview on a single core");
+    }
+
+    #[test]
+    fn works_on_mixture_engine() {
+        let factory = Arc::new(GaussMixtureFactory::standard(vec![8], 3, 0));
+        let pool = CorePool::builder(4).factory(factory).rule(Arc::new(Euler)).build().unwrap();
+        let grid = TimeGrid::uniform(40);
+        let mut rng = Rng::seeded(1);
+        let x0 = Tensor::randn(&[8], &mut rng);
+        let seq = sequential_solve(&pool, &grid, &x0);
+        let mut c = DraftRefineConfig::new(4, grid);
+        c.tol = 0.0;
+        let exec = DraftRefineExecutor::new(&pool, c);
+        let res = exec.run(&x0);
+        assert_eq!(res.final_output, seq.output);
+    }
+
+    #[test]
+    fn into_chords_preserves_outputs() {
+        let pool = exp_pool(4);
+        let exec = DraftRefineExecutor::new(&pool, cfg(4, 20, 0.0));
+        let res = exec.run(&x0());
+        let depth = res.nfe_depth;
+        let nfes = res.total_nfes;
+        let fin = res.final_output.clone();
+        let ch = res.into_chords();
+        assert_eq!(ch.final_output, fin);
+        assert_eq!(ch.nfe_depth, depth);
+        assert_eq!(ch.total_nfes, nfes);
+        assert!(!ch.early_exited);
+        assert_eq!(ch.rectifications, 0);
+    }
+}

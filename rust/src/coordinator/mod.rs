@@ -10,12 +10,16 @@
 //! - [`sequential`]— the N-step oracle solver
 //! - [`paradigms`] — sliding-window Picard baseline (Shih et al.)
 //! - [`srds`]      — pipelined parareal baseline (Selvam et al.)
+//! - [`draft_refine`] — speculative draft-and-refine paradigm (draft on one
+//!   core, windowed Picard refinement on the rest) with per-sweep
+//!   [`StabilitySignal`] telemetry for the adaptive scheduler
 //! - [`reward`]    — surrogate reward theory (§2.3, Def. 2.3/2.4)
 //! - [`events`]    — pipeline trace events (Fig. 2-style visualization)
 
 #![warn(missing_docs)]
 
 pub mod chords;
+pub mod draft_refine;
 pub mod events;
 pub mod init_seq;
 pub mod paradigms;
@@ -28,6 +32,10 @@ pub mod srds;
 pub use chords::{
     ChordsConfig, ChordsExecutor, ChordsResult, CoreOutput, CoreState, JobCheckpoint, PauseFlag,
     RunOutcome,
+};
+pub use draft_refine::{
+    DraftRefineCheckpoint, DraftRefineConfig, DraftRefineExecutor, DraftRefineOutcome,
+    DraftRefineResult, StabilitySignal,
 };
 pub use init_seq::{continuous_init_sequence, discrete_init_sequence, InitStrategy};
 pub use paradigms::{ParaDigms, ParaDigmsResult};

@@ -4,7 +4,8 @@
 
 use crate::config::{preset, Method, ModelPreset, RunConfig};
 use crate::coordinator::{
-    discrete_init_sequence, sequential_solve, ChordsConfig, ChordsExecutor, ParaDigms, Srds,
+    discrete_init_sequence, sequential_solve, ChordsConfig, ChordsExecutor, DraftRefineConfig,
+    DraftRefineExecutor, ParaDigms, Srds,
 };
 use crate::engine::factory_for;
 use crate::metrics::{mean_quality, mean_rmse};
@@ -122,6 +123,15 @@ impl Bench {
                     let r = Srds::new(cfg.cores, cfg.srds_tol).run(&self.pool, &self.grid, x0);
                     (r.output, r.nfe_depth)
                 }
+                Method::DraftRefine => {
+                    let mut dcfg = DraftRefineConfig::new(cfg.cores, self.grid.clone());
+                    dcfg.draft_stride = cfg.draft_stride;
+                    dcfg.window = cfg.refine_window;
+                    dcfg.tol = cfg.draft_tol;
+                    let r = DraftRefineExecutor::new(&self.pool, dcfg).run(x0);
+                    let depth = r.nfe_depth;
+                    (r.final_output, depth)
+                }
             };
             out.push(SampleRun { output, nfe_depth: depth, wall_s: timer.elapsed_s() });
         }
@@ -217,7 +227,14 @@ mod tests {
         let w = Workload::new(b.preset.latent_dims(), 3, 1);
         let latents: Vec<Tensor> = w.iter().collect();
         let oracles = b.oracles(&latents);
-        for m in [Method::Sequential, Method::Chords, Method::ParaDigms, Method::Srds] {
+        let methods = [
+            Method::Sequential,
+            Method::Chords,
+            Method::ParaDigms,
+            Method::Srds,
+            Method::DraftRefine,
+        ];
+        for m in methods {
             let c = b.cell(&cfg_for(m), &latents, &oracles).unwrap();
             assert!(c.speedup >= 0.9, "{m:?} speedup {}", c.speedup);
         }

@@ -35,7 +35,13 @@ impl Default for TableOpts {
 }
 
 const TABLE_CORES: [usize; 3] = [4, 6, 8];
-const METHODS: [Method; 4] = [Method::Sequential, Method::ParaDigms, Method::Srds, Method::Chords];
+const METHODS: [Method; 5] = [
+    Method::Sequential,
+    Method::ParaDigms,
+    Method::Srds,
+    Method::DraftRefine,
+    Method::Chords,
+];
 
 /// Run the Table 1/2 grid for the given presets. Returns all cells.
 pub fn run_method_grid(presets: &[&str], opts: &TableOpts) -> Result<Vec<CellResult>> {
@@ -279,8 +285,8 @@ mod tests {
     #[test]
     fn grid_shape_on_analytic_preset() {
         let cells = run_method_grid(&["gauss-mix"], &opts()).unwrap();
-        // 3 K values × 4 methods.
-        assert_eq!(cells.len(), 12);
+        // 3 K values × 5 methods.
+        assert_eq!(cells.len(), 15);
         for &k in &TABLE_CORES {
             let get = |m: Method| cells.iter().find(|c| c.cores == k && c.method == m).unwrap();
             let chords = get(Method::Chords);
@@ -295,6 +301,10 @@ mod tests {
             // loose floor applies.
             assert!(get(Method::Srds).quality > 0.9, "K={k} SRDS");
             assert!(get(Method::ParaDigms).quality > 0.6, "K={k} ParaDIGMS");
+            // DraftRefine's default tolerance is calibrated between the
+            // two baselines; its Picard acceptance gate keeps it closer to
+            // the oracle than ParaDIGMS at the same window machinery.
+            assert!(get(Method::DraftRefine).quality > 0.6, "K={k} DraftRefine");
         }
     }
 

@@ -306,6 +306,18 @@ pub struct ServingMetrics {
     /// Total microseconds preempted jobs spent between pausing and their
     /// resumed run's first wave.
     pub resume_latency_us: AtomicU64,
+    /// Per-sweep solver stability signals received from draft-refine jobs
+    /// ([`crate::coordinator::StabilitySignal`]).
+    pub stability_signals: AtomicU64,
+    /// Trajectory points certified (accepted into the converged front)
+    /// across all observed stability signals.
+    pub stability_points_accepted: AtomicU64,
+    /// Trajectory points speculatively refined (wave width) across all
+    /// observed stability signals — the accepted/refined ratio is the
+    /// solver-convergence rate the adaptive controller forecasts from.
+    pub stability_points_refined: AtomicU64,
+    /// Workers retired early by draft-refine sweeps (retire cadence).
+    pub stability_retires: AtomicU64,
     started: Instant,
 }
 
@@ -339,6 +351,10 @@ impl Default for ServingMetrics {
             preemptions: AtomicU64::new(0),
             migrations: AtomicU64::new(0),
             resume_latency_us: AtomicU64::new(0),
+            stability_signals: AtomicU64::new(0),
+            stability_points_accepted: AtomicU64::new(0),
+            stability_points_refined: AtomicU64::new(0),
+            stability_retires: AtomicU64::new(0),
             started: Instant::now(),
         }
     }
@@ -490,6 +506,22 @@ impl ServingMetrics {
                 "resume_latency_us",
                 Json::num(self.resume_latency_us.load(Ordering::Relaxed) as f64),
             ),
+            (
+                "stability_signals",
+                Json::num(self.stability_signals.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "stability_points_accepted",
+                Json::num(self.stability_points_accepted.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "stability_points_refined",
+                Json::num(self.stability_points_refined.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "stability_retires",
+                Json::num(self.stability_retires.load(Ordering::Relaxed) as f64),
+            ),
         ])
     }
 }
@@ -578,6 +610,15 @@ mod tests {
         assert_eq!(j.get("preemptions").unwrap().as_usize().unwrap(), 0);
         assert_eq!(j.get("migrations").unwrap().as_usize().unwrap(), 0);
         assert_eq!(j.get("resume_latency_us").unwrap().as_usize().unwrap(), 0);
+        m.stability_signals.store(2, Ordering::Relaxed);
+        m.stability_points_accepted.store(5, Ordering::Relaxed);
+        m.stability_points_refined.store(8, Ordering::Relaxed);
+        m.stability_retires.store(3, Ordering::Relaxed);
+        let j = m.snapshot(8, 64);
+        assert_eq!(j.get("stability_signals").unwrap().as_usize().unwrap(), 2);
+        assert_eq!(j.get("stability_points_accepted").unwrap().as_usize().unwrap(), 5);
+        assert_eq!(j.get("stability_points_refined").unwrap().as_usize().unwrap(), 8);
+        assert_eq!(j.get("stability_retires").unwrap().as_usize().unwrap(), 3);
     }
 
     #[test]

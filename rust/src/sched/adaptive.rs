@@ -11,7 +11,10 @@
 //!
 //! - **Signals** — per-model [`BatchStats`] deltas over a sampling window
 //!   (mean occupancy, mean fill wait, mean engine exec time) plus the
-//!   model's own admission-queue backlog from the dispatcher.
+//!   model's own admission-queue backlog from the dispatcher. Draft-refine
+//!   jobs add a third, solver-side input: per-sweep [`StabilitySignal`]s
+//!   whose acceptance rate forecasts sustained wave pressure before it
+//!   shows up as queue depth.
 //! - **Policy** — AIMD with hysteresis ([`ModelTuner::decide`]): grow the
 //!   linger additively while occupancy is low and fill wait is cheap
 //!   relative to the NFE cost; shrink it multiplicatively the moment fill
@@ -28,6 +31,7 @@
 //! surface as `adaptive_*` counters in `queue_stats`
 //! ([`crate::metrics::ServingMetrics`]).
 
+use crate::coordinator::StabilitySignal;
 use crate::metrics::{BatchStats, ServingMetrics};
 use crate::workers::BatchTuning;
 use std::collections::HashMap;
@@ -84,6 +88,13 @@ impl Default for AdaptiveOpts {
         }
     }
 }
+
+/// EWMA smoothing factor for solver stability signals.
+const STAB_ALPHA: f64 = 0.2;
+/// Stability signals required before the load forecast may fire.
+const STAB_MIN_SWEEPS: u64 = 4;
+/// Accepted-fraction EWMA below which Picard convergence counts as slow.
+const STAB_SLOW_ACCEPT: f64 = 0.5;
 
 /// One sampling window's aggregated signals for a model's bank
 /// (deltas of [`BatchStats`] counters, plus the queue depth at sample
@@ -177,6 +188,13 @@ pub struct ModelTuner {
     grow_streak: u32,
     shrink_batch_streak: u32,
     cooldown: bool,
+    /// EWMA of draft-vs-refined residuals from [`StabilitySignal`]s.
+    stab_residual: f64,
+    /// EWMA of the per-sweep accepted fraction (front advance / window).
+    stab_accept: f64,
+    /// Stability signals folded so far; the forecast stays quiet until
+    /// [`STAB_MIN_SWEEPS`] have been observed.
+    stab_sweeps: u64,
 }
 
 impl ModelTuner {
@@ -197,6 +215,9 @@ impl ModelTuner {
             grow_streak: 0,
             shrink_batch_streak: 0,
             cooldown: false,
+            stab_residual: 0.0,
+            stab_accept: 1.0,
+            stab_sweeps: 0,
         }
     }
 
@@ -208,6 +229,38 @@ impl ModelTuner {
     /// The tuner's view of the current linger (µs).
     pub fn linger_us(&self) -> u64 {
         self.linger_us
+    }
+
+    /// Fold one solver-side stability signal (per-sweep telemetry from a
+    /// draft-refine job) into the tuner's EWMAs. High residuals with low
+    /// acceptance mean the solver will need many more refinement sweeps —
+    /// a load forecast that reaches [`ModelTuner::decide`] before the
+    /// extra waves show up as queue depth.
+    pub fn observe_stability(&mut self, s: &StabilitySignal) {
+        let frac = if s.window == 0 {
+            1.0
+        } else {
+            (s.accepted as f64 / s.window as f64).min(1.0)
+        };
+        self.stab_sweeps += 1;
+        if self.stab_sweeps == 1 {
+            self.stab_residual = s.residual as f64;
+            self.stab_accept = frac;
+        } else {
+            self.stab_residual =
+                (1.0 - STAB_ALPHA) * self.stab_residual + STAB_ALPHA * s.residual as f64;
+            self.stab_accept = (1.0 - STAB_ALPHA) * self.stab_accept + STAB_ALPHA * frac;
+        }
+    }
+
+    /// Whether recent solver behavior predicts sustained wave pressure:
+    /// enough sweeps observed, and the refinement front advancing slowly
+    /// (a low accepted fraction means each remaining trajectory point
+    /// costs many more fused waves). Quiet on stable traces, where
+    /// acceptance stays high — so a converging solver never loosens the
+    /// latency policy.
+    fn forecast_load(&self) -> bool {
+        self.stab_sweeps >= STAB_MIN_SWEEPS && self.stab_accept < STAB_SLOW_ACCEPT
     }
 
     /// Fold one window of observations and decide whether to retune.
@@ -245,10 +298,13 @@ impl ModelTuner {
             return Some(self.emit(Retune::ShrinkLinger(v)));
         }
 
-        // 3. Low occupancy with cheap fill (or a standing backlog, where
-        //    fusion is pure throughput): lengthen the linger — additively,
-        //    and only after `grow_hysteresis` consecutive windows agree.
-        let fill_cheap = fill <= 0.5 * self.opts.fill_dominates * exec || s.queue_depth > 0;
+        // 3. Low occupancy with cheap fill — or a standing backlog, or a
+        //    solver-side forecast of one, either of which makes fusion
+        //    pure throughput: lengthen the linger — additively, and only
+        //    after `grow_hysteresis` consecutive windows agree.
+        let fill_cheap = fill <= 0.5 * self.opts.fill_dominates * exec
+            || s.queue_depth > 0
+            || self.forecast_load();
         if occ < self.opts.low_occupancy * self.max_batch as f64
             && fill_cheap
             && self.linger_us < self.opts.max_linger_us
@@ -362,6 +418,23 @@ impl AdaptiveController {
         self.metrics.adaptive_models.store(self.models.len() as u64, Ordering::Relaxed);
     }
 
+    /// Fold one solver-side [`StabilitySignal`] into the model's tuner
+    /// (when its bank is registered) and the `stability_*` counters in
+    /// `queue_stats`. Counters advance even for models without a bank
+    /// under control — draft-refine jobs on dedicated pools still surface
+    /// in the stats. Called from the dispatcher's scheduler thread as
+    /// jobs stream per-sweep telemetry through the stability channel.
+    pub fn observe_stability(&mut self, model: &str, sig: &StabilitySignal) {
+        let m = &self.metrics;
+        m.stability_signals.fetch_add(1, Ordering::Relaxed);
+        m.stability_points_accepted.fetch_add(sig.accepted as u64, Ordering::Relaxed);
+        m.stability_points_refined.fetch_add(sig.window as u64, Ordering::Relaxed);
+        m.stability_retires.fetch_add(sig.retired as u64, Ordering::Relaxed);
+        if let Some(entry) = self.models.get_mut(model) {
+            entry.tuner.observe_stability(sig);
+        }
+    }
+
     /// One controller pass: for every model whose sampling window has
     /// elapsed, fold the counter delta into its tuner and apply any
     /// decision. `queued` is the per-model admission backlog
@@ -440,6 +513,18 @@ mod tests {
             exec_us: 300 * batches,
             queue_depth: 0,
         }
+    }
+
+    fn signal(sweep: usize, residual: f32, accepted: usize, window: usize) -> StabilitySignal {
+        StabilitySignal { sweep, residual, accepted, window, retired: 0 }
+    }
+
+    /// Deterministic xorshift for the randomized-trace tests.
+    fn next_rand(seed: &mut u64) -> u64 {
+        *seed ^= *seed << 13;
+        *seed ^= *seed >> 7;
+        *seed ^= *seed << 17;
+        *seed
     }
 
     #[test]
@@ -537,6 +622,82 @@ mod tests {
         // Linger above max_linger_us is kept, and shrink still works.
         let spiky = window(50, 100, 400);
         assert_eq!(t.decide(&spiky), Some(Retune::ShrinkLinger(2_500)));
+    }
+
+    #[test]
+    fn stable_solver_trace_never_perturbs_a_calm_tuner() {
+        let mut t = ModelTuner::new(AdaptiveOpts::default(), 8, 0);
+        // Fast convergence: every sweep accepts its whole window.
+        for i in 0..32 {
+            t.observe_stability(&signal(i, 1e-4, 4, 4));
+        }
+        // Fill 100µs vs exec 300µs is not cheap and there is no backlog:
+        // a stable trace must not manufacture a load forecast, so the
+        // tuner never retunes (and in particular never oscillates).
+        let calm = window(100, 200, 100);
+        for _ in 0..16 {
+            assert_eq!(t.decide(&calm), None);
+        }
+        assert_eq!(t.linger_us(), 0);
+        assert_eq!(t.max_batch(), 8);
+    }
+
+    #[test]
+    fn slow_convergence_forecasts_load_like_a_backlog() {
+        let mut t = ModelTuner::new(AdaptiveOpts::default(), 8, 0);
+        // Picard fronts crawling: 1 accepted point per 4-wide window means
+        // many more refinement waves are coming for every job in flight.
+        for i in 0..8 {
+            t.observe_stability(&signal(i, 0.3, 1, 4));
+        }
+        // Same not-cheap-fill trace as `backlog_relaxes_...` — without a
+        // queue, only the solver forecast can unlock linger growth.
+        let calm = window(100, 200, 100);
+        assert_eq!(t.decide(&calm), None, "hysteresis");
+        assert_eq!(t.decide(&calm), Some(Retune::GrowLinger(50)), "forecast relaxes cheap fill");
+    }
+
+    #[test]
+    fn randomized_stability_trace_respects_hysteresis_cooldown_and_caps() {
+        let opts = AdaptiveOpts::default();
+        let mut t = ModelTuner::new(opts.clone(), 8, 0);
+        let mut seed = 0x5eed_cafe_d00d_u64;
+        let mut cooling = false;
+        for step in 0_usize..500 {
+            // Interleave a random stability signal with a random window.
+            let accepted = 1 + (next_rand(&mut seed) % 4) as usize; // 1..=4
+            t.observe_stability(&signal(step, 0.1, accepted, 4));
+            let drifts = 50 + next_rand(&mut seed) % 600; // occupancy 0.5..6.5
+            let fill = next_rand(&mut seed) % 500;
+            let depth = (next_rand(&mut seed) % 4) as usize;
+            let s = WindowSample { queue_depth: depth, ..window(100, drifts, fill) };
+            let d = t.decide(&s);
+            if cooling {
+                assert_eq!(d, None, "first qualifying window after a retune is a cooldown");
+            }
+            cooling = d.is_some();
+            // Every decision lands inside the configured caps.
+            assert!(t.linger_us() <= opts.max_linger_us, "linger within cap at step {step}");
+            assert!(t.max_batch() <= opts.max_batch, "batch within cap at step {step}");
+            assert!(t.max_batch() >= opts.min_batch, "batch above floor at step {step}");
+        }
+    }
+
+    #[test]
+    fn controller_routes_stability_signals_into_queue_stats() {
+        let metrics = Arc::new(ServingMetrics::new());
+        let mut ctl = AdaptiveController::new(AdaptiveOpts::default(), metrics.clone());
+        // Counters advance even without a registered bank — draft-refine
+        // jobs on dedicated pools still surface in `queue_stats`.
+        ctl.observe_stability("exp-ode", &signal(0, 0.2, 3, 4));
+        ctl.observe_stability(
+            "exp-ode",
+            &StabilitySignal { sweep: 1, residual: 0.1, accepted: 2, window: 4, retired: 2 },
+        );
+        assert_eq!(metrics.stability_signals.load(Ordering::Relaxed), 2);
+        assert_eq!(metrics.stability_points_accepted.load(Ordering::Relaxed), 5);
+        assert_eq!(metrics.stability_points_refined.load(Ordering::Relaxed), 8);
+        assert_eq!(metrics.stability_retires.load(Ordering::Relaxed), 2);
     }
 
     #[test]

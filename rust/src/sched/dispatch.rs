@@ -22,7 +22,7 @@ use super::lease::CoreLease;
 use super::queue::{Reject, Ticket};
 use super::tenant::{FairQueue, TenantQuota, TenantRegistry, TenantState};
 use crate::config::{preset, EngineBudget, ModelPreset, RemoteBankSpec};
-use crate::coordinator::PauseFlag;
+use crate::coordinator::{PauseFlag, StabilitySignal};
 use crate::engine::factory_for;
 use crate::metrics::{BatchStats, RemoteBankStats, ServingMetrics};
 use crate::solvers::Euler;
@@ -33,7 +33,7 @@ use crate::workers::{
 };
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::mpsc::channel;
+use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
@@ -252,6 +252,12 @@ struct Shared {
     /// The adaptive batching controller; empty (and skipped by the
     /// scheduler loop) until an adaptive bank registers.
     controller: Mutex<AdaptiveController>,
+    /// Sending end of the solver stability channel, cloned into every
+    /// [`StabilitySink`] handed to draft-refine runners.
+    stability_tx: Mutex<Sender<(String, StabilitySignal)>>,
+    /// Receiving end of the solver stability channel; drained into the
+    /// adaptive controller once per scheduling pass.
+    stability_rx: Mutex<Receiver<(String, StabilitySignal)>>,
     artifacts_dir: String,
     next_id: AtomicU64,
     /// Jobs currently holding a grant, with the pause flags the scheduler
@@ -356,6 +362,7 @@ impl Dispatcher {
         let controller =
             Mutex::new(AdaptiveController::new(opts.adaptive_opts.clone(), metrics.clone()));
         let tenants = TenantRegistry::new(&opts.tenant_quotas);
+        let (stability_tx, stability_rx) = channel();
         let shared = Arc::new(Shared {
             budget,
             queue: FairQueue::new(opts.queue_cap, tenants.clone(), metrics.clone()),
@@ -372,6 +379,8 @@ impl Dispatcher {
             adaptive_default: opts.adaptive,
             model_budgets: opts.model_budgets,
             controller,
+            stability_tx: Mutex::new(stability_tx),
+            stability_rx: Mutex::new(stability_rx),
             artifacts_dir: artifacts_dir.to_string(),
             next_id: AtomicU64::new(1),
             running: Arc::new(Mutex::new(Vec::new())),
@@ -495,6 +504,15 @@ impl Dispatcher {
         self.shared.tenants.clone()
     }
 
+    /// A handle draft-refine runners use to stream per-sweep
+    /// [`StabilitySignal`]s into the adaptive controller. Signals are
+    /// drained on the scheduler thread once per pass, feed each registered
+    /// model's [`crate::sched::ModelTuner`] load forecast, and surface as
+    /// `stability_*` counters in `queue_stats`.
+    pub fn stability_sink(&self) -> StabilitySink {
+        StabilitySink { tx: self.shared.stability_tx.lock().unwrap().clone() }
+    }
+
     /// Drain an engine host by connector label: detach every failover-set
     /// membership it holds — elastic registrations and `--remote-bank`
     /// members alike. The failover bank requeues the departing member's
@@ -604,6 +622,24 @@ impl Drop for Dispatcher {
         if let Some(t) = self.thread.take() {
             let _ = t.join();
         }
+    }
+}
+
+/// A cheaply cloneable handle for streaming solver-side
+/// [`StabilitySignal`]s into the scheduler: draft-refine runners emit one
+/// per refinement sweep, and the scheduler thread drains them into the
+/// adaptive controller (and the `stability_*` counters in `queue_stats`)
+/// once per pass. Sends never block; signals emitted after the dispatcher
+/// stops are silently dropped.
+#[derive(Clone)]
+pub struct StabilitySink {
+    tx: Sender<(String, StabilitySignal)>,
+}
+
+impl StabilitySink {
+    /// Queue one per-sweep signal observed while running `model`.
+    pub fn emit(&self, model: &str, sig: &StabilitySignal) {
+        let _ = self.tx.send((model.to_string(), sig.clone()));
     }
 }
 
@@ -964,11 +1000,17 @@ fn pass(shared: &Arc<Shared>) {
     }
     maybe_preempt(shared);
     reap_idle(shared);
-    // Adaptive batching: fold the window's batch counters into each
-    // registered model's tuner. Self-rate-limited per model; a no-op when
-    // nothing is under adaptive control.
+    // Adaptive batching: drain queued solver stability signals (counters
+    // advance even with nothing under control), then fold the window's
+    // batch counters into each registered model's tuner. Self-rate-limited
+    // per model; cheap when nothing is under adaptive control.
     {
         let mut ctl = shared.controller.lock().unwrap();
+        let rx = shared.stability_rx.lock().unwrap();
+        while let Ok((model, sig)) = rx.try_recv() {
+            ctl.observe_stability(&model, &sig);
+        }
+        drop(rx);
         if !ctl.is_empty() {
             ctl.tick(&shared.queue.depths_by_model(), Instant::now());
         }

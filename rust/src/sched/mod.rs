@@ -31,7 +31,10 @@
 //!   concurrent same-model jobs over disjoint [`crate::workers::PoolView`]s;
 //! - [`adaptive`] — [`adaptive::AdaptiveController`], the feedback loop
 //!   that retunes each model's batching knobs online from observed
-//!   occupancy, fill wait, and queue depth.
+//!   occupancy, fill wait, and queue depth — plus solver-side
+//!   [`crate::coordinator::StabilitySignal`]s streamed through
+//!   [`dispatch::StabilitySink`] by draft-refine jobs, which forecast
+//!   wave pressure before it shows up as backlog.
 
 #![warn(missing_docs)]
 
@@ -44,7 +47,7 @@ pub mod tenant;
 
 pub use adaptive::{AdaptiveController, AdaptiveOpts, ModelTuner, Retune, WindowSample};
 pub use budget::{CoreBudget, Notify};
-pub use dispatch::{DispatchOpts, Dispatcher, JobGrant, JobSpec};
+pub use dispatch::{DispatchOpts, Dispatcher, JobGrant, JobSpec, StabilitySink};
 pub use lease::CoreLease;
 pub use queue::{AdmissionQueue, PushError, Reject, Ticket};
 pub use tenant::{FairQueue, SloClass, TenantQuota, TenantRegistry, TenantState};

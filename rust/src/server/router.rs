@@ -7,12 +7,13 @@
 //! Concurrent requests — including for the *same* model — run in parallel
 //! whenever the budget allows; nothing serializes on a per-model lock.
 
-use crate::config::{preset, ServeConfig};
+use crate::config::{preset, Method, ServeConfig};
 use crate::coordinator::{
-    discrete_init_sequence, ChordsConfig, ChordsExecutor, ChordsResult, InitStrategy,
-    JobCheckpoint, RunOutcome,
+    discrete_init_sequence, ChordsConfig, ChordsExecutor, ChordsResult, DraftRefineCheckpoint,
+    DraftRefineConfig, DraftRefineExecutor, DraftRefineOutcome, InitStrategy, JobCheckpoint,
+    RunOutcome,
 };
-use crate::sched::{DispatchOpts, Dispatcher, JobSpec, Reject};
+use crate::sched::{DispatchOpts, Dispatcher, JobGrant, JobSpec, Reject};
 use crate::solvers::TimeGrid;
 use crate::tensor::Tensor;
 use crate::util::json::Json;
@@ -39,6 +40,15 @@ pub struct GenRequest {
     pub priority: i32,
     /// Give up if not admitted within this many milliseconds.
     pub deadline_ms: Option<u64>,
+    /// Solver paradigm: [`Method::Chords`] (default) or
+    /// [`Method::DraftRefine`]; other methods are not servable.
+    pub paradigm: Method,
+    /// Draft-refine: fine steps per coarse draft jump.
+    pub draft_stride: usize,
+    /// Draft-refine: refinement window (0 = one point per granted core).
+    pub refine_window: usize,
+    /// Draft-refine: Picard acceptance tolerance (0 = bitwise-sequential).
+    pub draft_tol: f32,
 }
 
 impl Default for GenRequest {
@@ -54,6 +64,10 @@ impl Default for GenRequest {
             min_cores: 0,
             priority: 0,
             deadline_ms: None,
+            paradigm: Method::Chords,
+            draft_stride: 4,
+            refine_window: 0,
+            draft_tol: 2e-2,
         }
     }
 }
@@ -200,6 +214,12 @@ impl Router {
                 req.steps
             )));
         }
+        if !matches!(req.paradigm, Method::Chords | Method::DraftRefine) {
+            return Err(GenError::BadRequest(format!(
+                "paradigm '{}' is not servable; use chords or draft-refine",
+                req.paradigm.name()
+            )));
+        }
         let mut grant = self.dispatcher.submit(JobSpec {
             tenant: req.tenant.clone(),
             model: req.model.clone(),
@@ -209,10 +229,13 @@ impl Router {
             deadline_ms: req.deadline_ms.or(self.default_deadline_ms),
         })?;
         let k = grant.cores();
-        let seq = discrete_init_sequence(&req.init, k, req.steps);
         let grid = TimeGrid::uniform(req.steps);
         let mut rng = Rng::seeded(req.seed);
         let x0 = Tensor::randn(&p.latent_dims(), &mut rng);
+        if req.paradigm == Method::DraftRefine {
+            return self.drive_draft_refine(req, grant, k, grid, x0, on_partial, on_status);
+        }
+        let seq = discrete_init_sequence(&req.init, k, req.steps);
         let mut ckpt = JobCheckpoint::fresh(&x0, k);
         loop {
             let pause = grant.pause_flag();
@@ -261,6 +284,76 @@ impl Router {
                     // resumed run needs exactly the checkpoint's core count
                     // (retired cores are released again right after the
                     // grant, above).
+                    grant = self.dispatcher.submit(JobSpec {
+                        tenant: req.tenant.clone(),
+                        model: req.model.clone(),
+                        cores: k,
+                        min_cores: 0,
+                        priority: req.priority,
+                        deadline_ms: req.deadline_ms.or(self.default_deadline_ms),
+                    })?;
+                    self.dispatcher
+                        .metrics()
+                        .resume_latency_us
+                        .fetch_add(t_paused.elapsed().as_micros() as u64, Ordering::Relaxed);
+                }
+            }
+        }
+    }
+
+    /// Draft-refine analog of the chords resume loop in
+    /// [`Router::generate_with_status`]: the same grant/pause/checkpoint
+    /// lifecycle, but the job checkpoints at sweep boundaries and every
+    /// refinement sweep emits a [`crate::coordinator::StabilitySignal`]
+    /// into the dispatcher's stability channel, where the adaptive
+    /// controller folds it into its batching forecasts (`queue_stats`
+    /// exposes the aggregate counters).
+    fn drive_draft_refine(
+        &self,
+        req: &GenRequest,
+        mut grant: JobGrant,
+        k: usize,
+        grid: TimeGrid,
+        x0: Tensor,
+        mut on_partial: impl FnMut(usize, usize, f64),
+        mut on_status: impl FnMut(&'static str),
+    ) -> Result<ChordsResult, GenError> {
+        let sink = self.dispatcher.stability_sink();
+        let mut ckpt = DraftRefineCheckpoint::fresh(&x0, req.steps);
+        loop {
+            let pause = grant.pause_flag();
+            let view = grant.take_view();
+            let mut cfg = DraftRefineConfig::new(k, grid.clone());
+            cfg.draft_stride = req.draft_stride.max(1);
+            cfg.window = req.refine_window;
+            cfg.tol = req.draft_tol;
+            let exec = DraftRefineExecutor::new(&view, cfg)
+                .with_signal_hook(|s| sink.emit(&req.model, s));
+            let outcome = exec
+                .run_from(
+                    ckpt,
+                    |out| {
+                        self.stats.outputs_streamed.fetch_add(1, Ordering::Relaxed);
+                        on_partial(
+                            out.core,
+                            out.nfe_depth,
+                            req.steps as f64 / out.nfe_depth as f64,
+                        );
+                    },
+                    |core_idx| grant.retire_core(core_idx),
+                    Some(&pause),
+                )
+                .map_err(GenError::BankUnavailable)?;
+            match outcome {
+                DraftRefineOutcome::Done(res) => {
+                    self.stats.total_nfes.fetch_add(res.total_nfes, Ordering::Relaxed);
+                    return Ok(res.into_chords());
+                }
+                DraftRefineOutcome::Paused(c) => {
+                    ckpt = c;
+                    grant.preempt();
+                    on_status("preempted");
+                    let t_paused = Instant::now();
                     grant = self.dispatcher.submit(JobSpec {
                         tenant: req.tenant.clone(),
                         model: req.model.clone(),
@@ -384,6 +477,75 @@ mod tests {
         let req = GenRequest { model: "gauss-mix".into(), steps: 20, cores: 2, ..Default::default() };
         let err = r.generate(&req, |_, _, _| {}).unwrap_err();
         assert_eq!(err.code(), "deadline", "server-side default deadline enforced");
+    }
+
+    #[test]
+    fn draft_refine_paradigm_streams_and_surfaces_stability_signals() {
+        let r = Router::new("artifacts", 4);
+        let req = GenRequest {
+            model: "gauss-mix".into(),
+            steps: 30,
+            cores: 4,
+            paradigm: Method::DraftRefine,
+            ..Default::default()
+        };
+        let mut partials = Vec::new();
+        let res = r.generate(&req, |core, depth, s| partials.push((core, depth, s))).unwrap();
+        // The draft preview streams before the refined output, and the
+        // refined output's depth beats sequential at the calibrated default
+        // tolerance.
+        assert!(!partials.is_empty());
+        assert!(res.nfe_depth < 30, "depth {}", res.nfe_depth);
+        assert!(res.total_nfes > 0);
+        assert_eq!(r.stats.requests.load(Ordering::Relaxed), 1);
+        // Every sweep emitted a StabilitySignal into the dispatcher; the
+        // scheduler thread drains the channel on its next periodic pass.
+        let deadline = Instant::now() + std::time::Duration::from_secs(5);
+        loop {
+            let j = r.queue_stats();
+            let n = j.get("stability_signals").unwrap().as_usize().unwrap();
+            if n > 0 {
+                assert!(j.get("stability_points_refined").unwrap().as_usize().unwrap() >= n);
+                break;
+            }
+            assert!(Instant::now() < deadline, "stability signals never reached queue_stats");
+            std::thread::sleep(std::time::Duration::from_millis(2));
+        }
+    }
+
+    #[test]
+    fn draft_refine_zero_tol_matches_chords_oracle_output() {
+        // tol = 0 forces the step-certified front to retrace the sequential
+        // trajectory exactly — so the served final output must be bitwise
+        // the sequential solution, which chords' final core also produces.
+        let r = Router::new("artifacts", 4);
+        let base = GenRequest {
+            model: "exp-ode".into(),
+            steps: 24,
+            cores: 4,
+            seed: 7,
+            ..Default::default()
+        };
+        let chords = r.generate(&base, |_, _, _| {}).unwrap();
+        let dr = GenRequest { paradigm: Method::DraftRefine, draft_tol: 0.0, ..base };
+        let refined = r.generate(&dr, |_, _, _| {}).unwrap();
+        assert_eq!(
+            refined.final_output, chords.final_output,
+            "tol=0 draft-refine must equal the sequential (final chords) output"
+        );
+    }
+
+    #[test]
+    fn unservable_paradigm_is_bad_request() {
+        let r = Router::new("artifacts", 4);
+        let req = GenRequest {
+            model: "gauss-mix".into(),
+            steps: 30,
+            paradigm: Method::Srds,
+            ..Default::default()
+        };
+        let err = r.generate(&req, |_, _, _| {}).unwrap_err();
+        assert_eq!(err.code(), "bad_request");
     }
 
     #[test]

@@ -1,6 +1,7 @@
 //! TCP JSON-lines service over the [`Router`].
 
 use super::router::{GenRequest, Router};
+use crate::config::Method;
 use crate::coordinator::InitStrategy;
 use crate::tensor::ops;
 use crate::util::json::Json;
@@ -362,6 +363,20 @@ fn parse_gen_request(req: &Json) -> GenRequest {
     if let Some(d) = req.get("deadline_ms").and_then(|v| v.as_f64()) {
         g.deadline_ms = Some(d.max(0.0) as u64);
     }
+    if let Some(m) = req.get("paradigm").and_then(|v| v.as_str()) {
+        if let Some(method) = Method::parse(m) {
+            g.paradigm = method;
+        }
+    }
+    if let Some(s) = req.get("draft_stride").and_then(|v| v.as_usize()) {
+        g.draft_stride = s.max(1);
+    }
+    if let Some(w) = req.get("refine_window").and_then(|v| v.as_usize()) {
+        g.refine_window = w;
+    }
+    if let Some(t) = req.get("draft_tol").and_then(|v| v.as_f64()) {
+        g.draft_tol = t.max(0.0) as f32;
+    }
     g
 }
 
@@ -442,6 +457,49 @@ mod tests {
         assert_eq!(last.get("type").unwrap().as_str().unwrap(), "result");
         assert_eq!(last.get("nfe_depth").unwrap().as_usize().unwrap(), 30);
         server.shutdown();
+    }
+
+    #[test]
+    fn generate_accepts_draft_refine_paradigm_over_the_wire() {
+        let (server, _) = start();
+        let mut c = Client::connect(server.addr).unwrap();
+        let req = Json::obj(vec![
+            ("op", Json::str("generate")),
+            ("model", Json::str("gauss-mix")),
+            ("steps", Json::num(30.0)),
+            ("cores", Json::num(4.0)),
+            ("paradigm", Json::str("draft-refine")),
+            ("draft_stride", Json::num(5.0)),
+            ("draft_tol", Json::num(0.05)),
+            ("stream", Json::Bool(true)),
+        ]);
+        let r = c.call(&req).unwrap();
+        let partials =
+            r.iter().filter(|j| j.get("type").unwrap().as_str() == Some("partial")).count();
+        assert!(partials >= 1, "draft preview and/or refined output must stream");
+        let last = r.last().unwrap();
+        assert_eq!(last.get("type").unwrap().as_str().unwrap(), "result");
+        assert!(last.get("nfe_depth").unwrap().as_usize().unwrap() < 30);
+        server.shutdown();
+    }
+
+    #[test]
+    fn parse_gen_request_reads_draft_refine_knobs() {
+        let j = Json::obj(vec![
+            ("paradigm", Json::str("draft_refine")),
+            ("draft_stride", Json::num(0.0)),
+            ("refine_window", Json::num(3.0)),
+            ("draft_tol", Json::num(-1.0)),
+        ]);
+        let g = parse_gen_request(&j);
+        assert_eq!(g.paradigm, Method::DraftRefine);
+        assert_eq!(g.draft_stride, 1, "stride 0 clamps to 1");
+        assert_eq!(g.refine_window, 3);
+        assert_eq!(g.draft_tol, 0.0, "negative tolerance clamps to bitwise mode");
+        // Unknown paradigm strings keep the default rather than erroring at
+        // the parse layer; the router rejects unservable methods.
+        let g = parse_gen_request(&Json::obj(vec![("paradigm", Json::str("warp-drive"))]));
+        assert_eq!(g.paradigm, Method::Chords);
     }
 
     #[test]

@@ -8,7 +8,8 @@
 //! wall-clock time, never numerics.
 
 use chords::coordinator::{
-    discrete_init_sequence, ChordsConfig, ChordsExecutor, ChordsResult, InitStrategy,
+    discrete_init_sequence, ChordsConfig, ChordsExecutor, ChordsResult, DraftRefineCheckpoint,
+    DraftRefineConfig, DraftRefineExecutor, DraftRefineOutcome, DraftRefineResult, InitStrategy,
     JobCheckpoint, PauseFlag, RunOutcome,
 };
 use chords::engine::{EngineFactory, ExpOdeFactory, GaussMixtureFactory};
@@ -250,5 +251,146 @@ fn prop_codec_roundtrip_and_rejection() {
     let mut wrong_version = bytes.clone();
     wrong_version[0] = 99;
     let err = JobCheckpoint::from_bytes(&wrong_version).unwrap_err();
+    assert!(err.contains("version"), "{err}");
+}
+
+// ---- Draft-refine: the second paradigm upholds the same contract ----
+
+/// Worst-case preemption schedule for a draft-refine job: pause at every
+/// sweep boundary, rebuilding the executor per segment (the serving path
+/// rebuilds one per grant), rotating across `(pool, cores)` grants and
+/// round-tripping every other checkpoint through the binary codec.
+fn run_dr_single_stepped(
+    grants: &[(&CorePool, usize)],
+    cfg: &DraftRefineConfig,
+    x0: &Tensor,
+) -> (DraftRefineResult, usize) {
+    let pause = PauseFlag::new();
+    pause.raise();
+    let mut ckpt = DraftRefineCheckpoint::fresh(x0, cfg.grid.steps());
+    let mut segments = 0usize;
+    loop {
+        let (pool, cores) = grants[segments % grants.len()];
+        let mut seg_cfg = cfg.clone();
+        seg_cfg.cores = cores;
+        let exec = DraftRefineExecutor::new(pool, seg_cfg);
+        let outcome = exec
+            .run_from(ckpt, |_| {}, |_| {}, Some(&pause))
+            .expect("analytic engines never fail");
+        segments += 1;
+        match outcome {
+            DraftRefineOutcome::Done(res) => return (res, segments),
+            DraftRefineOutcome::Paused(c) => {
+                ckpt = if segments % 2 == 0 {
+                    DraftRefineCheckpoint::from_bytes(&c.to_bytes()).expect("codec roundtrip")
+                } else {
+                    c
+                };
+            }
+        }
+    }
+}
+
+/// Bitwise identity on everything except wall-clock time and per-segment
+/// telemetry (a resumed run's `signals` cover only its final segment).
+fn assert_dr_identical(got: &DraftRefineResult, want: &DraftRefineResult, ctx: &str) {
+    assert_eq!(got.final_output, want.final_output, "final output diverged: {ctx}");
+    assert_eq!(got.nfe_depth, want.nfe_depth, "nfe depth diverged: {ctx}");
+    assert_eq!(got.total_nfes, want.total_nfes, "total nfes diverged: {ctx}");
+    assert_eq!(got.sweeps, want.sweeps, "sweep count diverged: {ctx}");
+    assert_eq!(got.draft_depth, want.draft_depth, "draft depth diverged: {ctx}");
+    assert_eq!(got.outputs.len(), want.outputs.len(), "output count diverged: {ctx}");
+    for (g, w) in got.outputs.iter().zip(&want.outputs) {
+        assert_eq!((g.core, g.nfe_depth), (w.core, w.nfe_depth), "metadata diverged: {ctx}");
+        assert_eq!(g.output, w.output, "core {} output diverged: {ctx}", g.core);
+    }
+}
+
+/// Pausing a draft-refine run at every sweep boundary reproduces the
+/// uninterrupted run bitwise — in the certified (`tol = 0`) and the
+/// speculative (`tol > 0`) regime, across core counts.
+#[test]
+fn prop_draft_refine_pause_every_sweep_is_bitwise_identical() {
+    for tol in [0.0f32, 2e-2] {
+        for k in [2usize, 4] {
+            let n = 30;
+            let pool = dedicated(mix_factory(), k, Arc::new(Euler));
+            let mut cfg = DraftRefineConfig::new(k, TimeGrid::uniform(n));
+            cfg.tol = tol;
+            let mut rng = Rng::seeded(0xD12A + k as u64);
+            let x0 = Tensor::randn(&[8], &mut rng);
+            let want = DraftRefineExecutor::new(&pool, cfg.clone()).run(&x0);
+            let (got, segments) = run_dr_single_stepped(&[(&pool, k)], &cfg, &x0);
+            assert!(segments > 2, "pause flag never split the run (tol={tol}, k={k})");
+            assert_dr_identical(&got, &want, &format!("tol={tol}, k={k}, {segments} segments"));
+        }
+    }
+}
+
+/// The window locked into the checkpoint at the first sweep keeps resumes
+/// bitwise-identical even when later grants hand the job a *different*
+/// number of cores on a different pool: the wave schedule replays from the
+/// checkpoint, not from the new grant's size.
+#[test]
+fn prop_draft_refine_window_lock_survives_grant_resizes() {
+    let n = 30;
+    let small = dedicated(mix_factory(), 4, Arc::new(Euler));
+    let large = dedicated(mix_factory(), 8, Arc::new(Euler));
+    let mut cfg = DraftRefineConfig::new(4, TimeGrid::uniform(n));
+    cfg.tol = 2e-2;
+    let mut rng = Rng::seeded(0x10CC);
+    let x0 = Tensor::randn(&[8], &mut rng);
+    let want = DraftRefineExecutor::new(&small, cfg.clone()).run(&x0);
+    let (got, segments) = run_dr_single_stepped(&[(&small, 4), (&large, 8)], &cfg, &x0);
+    assert!(segments > 2, "run never paused");
+    assert_dr_identical(&got, &want, &format!("4↔8-core grant hopping, {segments} segments"));
+}
+
+/// Draft-refine checkpoints survive the wire like job checkpoints do: the
+/// codec round trip is canonical and lossless, truncation and version
+/// corruption fail cleanly.
+#[test]
+fn prop_draft_refine_codec_roundtrip_and_rejection() {
+    let k = 4;
+    let n = 30;
+    let pool = dedicated(mix_factory(), k, Arc::new(Euler));
+    let mut cfg = DraftRefineConfig::new(k, TimeGrid::uniform(n));
+    cfg.tol = 2e-2;
+    let mut rng = Rng::seeded(0xDADA);
+    let x0 = Tensor::randn(&[8], &mut rng);
+
+    // Pause deep enough that the draft preview streamed and sweeps ran.
+    let pause = PauseFlag::new();
+    let mut ckpt = DraftRefineCheckpoint::fresh(&x0, n);
+    while ckpt.front < 2 {
+        pause.raise();
+        let exec = DraftRefineExecutor::new(&pool, cfg.clone());
+        match exec.run_from(ckpt, |_| {}, |_| {}, Some(&pause)).unwrap() {
+            DraftRefineOutcome::Paused(c) => ckpt = c,
+            DraftRefineOutcome::Done(_) => panic!("run finished before the front advanced"),
+        }
+    }
+    assert!(ckpt.drafted);
+    assert!(!ckpt.outputs.is_empty(), "draft preview missing from the checkpoint");
+    let bytes = ckpt.to_bytes();
+    let back = DraftRefineCheckpoint::from_bytes(&bytes).unwrap();
+    assert_eq!(back.to_bytes(), bytes, "re-encoding is not canonical");
+    assert_eq!(back.front, ckpt.front);
+    assert_eq!(back.sweeps, ckpt.sweeps);
+    assert_eq!(back.window, ckpt.window);
+    assert_eq!(back.draft_depth, ckpt.draft_depth);
+    assert_eq!(back.total_nfes, ckpt.total_nfes);
+    assert_eq!(back.xs, ckpt.xs);
+    assert_eq!(back.outputs.len(), ckpt.outputs.len());
+
+    for cut in [0, 3, 7, bytes.len() / 2, bytes.len() - 1] {
+        assert!(
+            DraftRefineCheckpoint::from_bytes(&bytes[..cut]).is_err(),
+            "truncation at {cut} bytes decoded"
+        );
+    }
+    let mut wrong_version = bytes.clone();
+    wrong_version[0] = 99;
+    let err = DraftRefineCheckpoint::from_bytes(&wrong_version).unwrap_err();
     assert!(err.contains("version"), "{err}");
 }

@@ -1,0 +1,203 @@
+//! Paradigm equivalence properties for the draft-and-refine coordinator:
+//! `tol = 0` must reproduce the sequential fine solver **bitwise** under
+//! every step rule, grid size, and draft stride; with a fixed window the
+//! result must be invariant to the core count; and the execution substrate
+//! (dedicated engines, a batched shared-engine pool, a remote engine bank
+//! over the loopback wire) must never change a single bit — the same
+//! contract the CHORDS executor upholds, extended to the second paradigm.
+
+use chords::coordinator::{
+    sequential_solve, DraftRefineConfig, DraftRefineExecutor, DraftRefineResult,
+};
+use chords::engine::{EngineFactory, ExpOdeFactory, GaussMixtureFactory};
+use chords::metrics::{BatchStats, RemoteBankStats};
+use chords::server::EngineHost;
+use chords::solvers::{Euler, Heun, StepRule, TimeGrid};
+use chords::tensor::Tensor;
+use chords::util::rng::Rng;
+use chords::workers::{BatchOpts, CorePool, FailoverBank, RemoteBank, RemoteBankOpts};
+use std::sync::Arc;
+use std::time::Duration;
+
+fn exp_factory() -> Arc<dyn EngineFactory> {
+    Arc::new(ExpOdeFactory::new(vec![6], 0))
+}
+
+fn mix_factory() -> Arc<dyn EngineFactory> {
+    Arc::new(GaussMixtureFactory::standard(vec![8], 3, 0))
+}
+
+fn dedicated(factory: Arc<dyn EngineFactory>, k: usize, rule: Arc<dyn StepRule>) -> CorePool {
+    CorePool::builder(k).factory(factory).rule(rule).build().unwrap()
+}
+
+/// Everything except wall-clock time and the preview's core label (which is
+/// the granted core count by construction, so it may legitimately differ
+/// across grants of different sizes).
+fn assert_equivalent(got: &DraftRefineResult, want: &DraftRefineResult, ctx: &str) {
+    assert_eq!(got.final_output, want.final_output, "final output diverged: {ctx}");
+    assert_eq!(got.nfe_depth, want.nfe_depth, "nfe depth diverged: {ctx}");
+    assert_eq!(got.total_nfes, want.total_nfes, "total nfes diverged: {ctx}");
+    assert_eq!(got.sweeps, want.sweeps, "sweep count diverged: {ctx}");
+    assert_eq!(got.draft_depth, want.draft_depth, "draft depth diverged: {ctx}");
+    assert_eq!(got.signals, want.signals, "stability telemetry diverged: {ctx}");
+    assert_eq!(got.outputs.len(), want.outputs.len(), "output count diverged: {ctx}");
+    for (g, w) in got.outputs.iter().zip(&want.outputs) {
+        assert_eq!(g.output, w.output, "streamed output diverged: {ctx}");
+        assert_eq!(g.nfe_depth, w.nfe_depth, "output depth diverged: {ctx}");
+    }
+}
+
+/// `tol = 0` is an airtight bitwise-sequential mode: only the certified
+/// front step ever commits, so the final latent equals the sequential
+/// solver's bit for bit — under both step rules, across presets, odd and
+/// even grids, and any draft stride (including one that collapses the
+/// whole draft into a single jump).
+#[test]
+fn prop_zero_tol_is_bitwise_sequential() {
+    let rules: Vec<(Arc<dyn StepRule>, &str)> =
+        vec![(Arc::new(Euler), "euler"), (Arc::new(Heun), "heun")];
+    let presets: Vec<(Arc<dyn EngineFactory>, &[usize], &str)> =
+        vec![(exp_factory(), &[6], "exp-ode"), (mix_factory(), &[8], "gauss-mix")];
+    for (rule, rname) in &rules {
+        for (factory, dims, pname) in &presets {
+            for n in [12usize, 30, 47] {
+                for stride in [1usize, 4, 9, 64] {
+                    let k = 4;
+                    let pool = dedicated(factory.clone(), k, rule.clone());
+                    let grid = TimeGrid::uniform(n);
+                    let mut rng = Rng::seeded(0xEA51 ^ ((n as u64) << 8) ^ (stride as u64));
+                    let x0 = Tensor::randn(dims, &mut rng);
+                    let seq = sequential_solve(&pool, &grid, &x0);
+                    let mut cfg = DraftRefineConfig::new(k, grid.clone());
+                    cfg.draft_stride = stride;
+                    cfg.tol = 0.0;
+                    let r = DraftRefineExecutor::new(&pool, cfg).run(&x0);
+                    assert_eq!(
+                        r.final_output, seq.output,
+                        "bitwise identity violated: {pname}, {rname}, n={n}, stride={stride}"
+                    );
+                    assert_eq!(r.sweeps, n, "tol=0 must advance one certified step per sweep");
+                }
+            }
+        }
+    }
+}
+
+/// With a pinned window the sweep schedule is a pure function of (front,
+/// window, grid) — the number of granted cores changes only who executes
+/// the wave slots, never the wave contents. Speculative (`tol > 0`) runs
+/// on 2, 4, and 8 cores must therefore be bitwise identical.
+#[test]
+fn prop_results_invariant_to_core_count() {
+    let n = 40;
+    let grid = TimeGrid::uniform(n);
+    let mut rng = Rng::seeded(0xC0DE);
+    let x0 = Tensor::randn(&[8], &mut rng);
+    let run = |k: usize| {
+        let pool = dedicated(mix_factory(), k, Arc::new(Euler));
+        let mut cfg = DraftRefineConfig::new(k, grid.clone());
+        cfg.draft_stride = 3;
+        cfg.window = 2; // pinned ≤ every tested k, so the clamp never bites
+        cfg.tol = 0.25; // generous: the speculative path must actually fire
+
+        DraftRefineExecutor::new(&pool, cfg).run(&x0)
+    };
+    let want = run(2);
+    assert!(want.sweeps < n, "tolerance never accepted past the front");
+    for k in [4usize, 8] {
+        assert_equivalent(&run(k), &want, &format!("k={k} vs k=2"));
+    }
+}
+
+/// The same bits across execution substrates: dedicated per-core engines,
+/// logical cores multiplexed onto a batched shared-engine pool, and drift
+/// waves crossing the loopback wire to a remote engine bank. Runs in the
+/// speculative regime so the Picard acceptance path is exercised end to
+/// end, stability telemetry included.
+#[test]
+fn prop_substrates_are_bitwise_identical() {
+    let k = 4;
+    let n = 30;
+    let grid = TimeGrid::uniform(n);
+    let mut rng = Rng::seeded(0xFEED);
+    let x0 = Tensor::randn(&[8], &mut rng);
+    let cfg = {
+        let mut c = DraftRefineConfig::new(k, grid.clone());
+        c.draft_stride = 4;
+        c.tol = 2e-2;
+        c
+    };
+
+    let local = dedicated(mix_factory(), k, Arc::new(Euler));
+    let want = DraftRefineExecutor::new(&local, cfg.clone()).run(&x0);
+    assert!(!want.signals.is_empty(), "speculative run produced no telemetry");
+
+    let batched = CorePool::builder(k)
+        .factory(mix_factory())
+        .rule(Arc::new(Euler))
+        .batched(BatchOpts { engines: 2, max_batch: 4, linger: Duration::from_micros(100) })
+        .build()
+        .unwrap();
+    let got = DraftRefineExecutor::new(&batched, cfg.clone()).run(&x0);
+    assert_equivalent(&got, &want, "batched pool");
+
+    let host = EngineHost::new(
+        mix_factory(),
+        "gauss-mix",
+        BatchOpts { engines: 2, max_batch: 4, linger: Duration::from_micros(100) },
+    )
+    .unwrap();
+    let bank = Arc::new(RemoteBank::connect(
+        host.connector(),
+        vec![8],
+        RemoteBankOpts {
+            max_batch: 4,
+            linger: Duration::from_micros(100),
+            wave_timeout: Duration::from_millis(400),
+            backoff: Duration::from_millis(5),
+            backoff_cap: Duration::from_millis(50),
+            expect_model: None,
+        },
+        BatchStats::new(),
+        RemoteBankStats::new(),
+    ));
+    let fb =
+        FailoverBank::new(vec![bank], None, BatchStats::new(), RemoteBankStats::new()).unwrap();
+    let remote = CorePool::builder(k).bank(Box::new(fb)).rule(Arc::new(Euler)).build().unwrap();
+    let got = DraftRefineExecutor::new(&remote, cfg.clone()).run(&x0);
+    assert_equivalent(&got, &want, "remote bank");
+}
+
+/// Streaming and retirement contract: the draft preview (core K) streams
+/// before the refined result (core 1), every worker is retired exactly
+/// once, and the accepted counts in the stability telemetry account for
+/// the whole grid.
+#[test]
+fn prop_streaming_order_and_retire_accounting() {
+    let k = 4;
+    let n = 24;
+    let pool = dedicated(mix_factory(), k, Arc::new(Euler));
+    let mut rng = Rng::seeded(0xBEAD);
+    let x0 = Tensor::randn(&[8], &mut rng);
+    let mut cfg = DraftRefineConfig::new(k, TimeGrid::uniform(n));
+    cfg.tol = 1e-2;
+    let mut streamed = Vec::new();
+    let mut retired = Vec::new();
+    let res = DraftRefineExecutor::new(&pool, cfg)
+        .try_run_streaming_with_retire(&x0, |o| streamed.push(o.core), |i| retired.push(i))
+        .unwrap();
+    assert_eq!(streamed, vec![k, 1], "preview first, refined result last");
+    retired.sort_unstable();
+    assert_eq!(retired, (0..k).collect::<Vec<_>>(), "each worker retired exactly once");
+    assert_eq!(
+        res.signals.iter().map(|s| s.accepted).sum::<usize>(),
+        n,
+        "accepted counts must cover the grid"
+    );
+    assert_eq!(
+        res.signals.iter().map(|s| s.retired).sum::<usize>(),
+        k,
+        "retire telemetry must account for every worker"
+    );
+}

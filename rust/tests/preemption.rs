@@ -16,6 +16,11 @@
 //! CI runs this suite serially (`--test-threads=1`): the preemption test
 //! times a starvation window against the 25ms scheduler pass period, and
 //! cross-test scheduling noise would turn that timing into flakes.
+//!
+//! Scenario 4 repeats the preempt/refund/resume cycle for the draft-refine
+//! paradigm: its checkpoints land on sweep boundaries instead of lockstep
+//! boundaries, but the serving contract is the same — a preemption costs
+//! wall-clock time, never numerics.
 
 mod common;
 
@@ -119,6 +124,77 @@ fn preempted_job_resumes_with_identical_output() {
     // Original admission + ui + at least one re-admission of the paused
     // job: the resume really went back through the queue (and onto
     // whatever workers that later grant leased).
+    assert!(j.get("admitted").unwrap().as_usize().unwrap() >= 3, "{j:?}");
+}
+
+/// Scenario 4: a draft-refine job is preempted at a sweep boundary, refunds
+/// its cores to the latency tenant, resumes through the queue, and still
+/// produces bitwise the output of an uninterrupted run — with its stability
+/// telemetry surfacing in `queue_stats`.
+#[test]
+fn preempted_draft_refine_job_resumes_with_identical_output() {
+    let req = GenRequest {
+        model: "exp-ode-slow".into(),
+        steps: 60,
+        cores: 4,
+        seed: 13,
+        priority: -1,
+        paradigm: chords::config::Method::DraftRefine,
+        ..GenRequest::default()
+    };
+    let want = {
+        let idle = Router::with_opts(
+            "artifacts",
+            ServeConfig { total_cores: 4, ..ServeConfig::default() },
+        );
+        idle.generate(&req, |_, _, _| {}).unwrap()
+    };
+
+    let mut cfg = ServeConfig { total_cores: 4, ..ServeConfig::default() };
+    cfg.set("tenant_quota", "ui=2:0:latency:200").unwrap();
+    cfg.set("preemption", "true").unwrap();
+    let router = Arc::new(Router::with_opts("artifacts", cfg));
+
+    let r2 = router.clone();
+    let req2 = req.clone();
+    let batch = std::thread::spawn(move || {
+        let mut statuses = Vec::new();
+        let res = r2.generate_with_status(&req2, |_, _, _| {}, |s| statuses.push(s)).unwrap();
+        (res, statuses)
+    });
+    wait_for("draft-refine job to occupy the budget", || {
+        router.queue_stats().get("cores_in_use").unwrap().as_usize().unwrap() == 4
+    });
+
+    let ui_req = GenRequest {
+        model: "exp-ode-slow".into(),
+        tenant: "ui".into(),
+        steps: 30,
+        cores: 4,
+        seed: 5,
+        deadline_ms: Some(10_000),
+        ..GenRequest::default()
+    };
+    router.generate(&ui_req, |_, _, _| {}).expect("latency tenant must be served");
+
+    let (res, statuses) = batch.join().unwrap();
+    assert!(
+        statuses.iter().any(|s| *s == "preempted"),
+        "draft-refine job never saw a preempted status: {statuses:?}"
+    );
+    assert_identical(&res, &want, "preempted draft-refine job");
+
+    wait_for("budget to drain after both jobs", || {
+        router.queue_stats().get("cores_in_use").unwrap().as_usize().unwrap() == 0
+    });
+    // The sweeps that did run fed the stability channel; the scheduler
+    // thread drains it into the adaptive controller on its next pass.
+    wait_for("stability signals to surface in queue_stats", || {
+        router.queue_stats().get("stability_signals").unwrap().as_usize().unwrap() >= 1
+    });
+    let j = router.queue_stats();
+    assert!(j.get("preemptions").unwrap().as_usize().unwrap() >= 1, "{j:?}");
+    assert!(j.get("resume_latency_us").unwrap().as_usize().unwrap() >= 1, "{j:?}");
     assert!(j.get("admitted").unwrap().as_usize().unwrap() >= 3, "{j:?}");
 }
 
