@@ -56,6 +56,13 @@
 //! (zero failures), a kill forces the failover machinery to recover them
 //! the hard way. Rows append with `"bench":"serving_drain"`.
 //!
+//! Part 8 prices the spot-reclaim paths on a *registered* host carrying a
+//! parked checkpoint and in-flight waves: an operator drain
+//! (`drain_host`), a host-initiated self-drain (`drain_notice` — the
+//! scheduler rescues the parked bytes during the grace window), and an
+//! abrupt kill (the checkpoint is simply lost with the host). Rows append
+//! with `"bench":"serving_reclaim"`.
+//!
 //! One JSON object per configuration (the repo's JSON bench-table
 //! convention), preceded by a human-readable line; the full table is also
 //! written to `BENCH_serving.json` as the perf-trajectory baseline.
@@ -64,7 +71,7 @@
 use chords::config::ServeConfig;
 use chords::harness::{run_soak, TenantLoad};
 use chords::sched::TenantQuota;
-use chords::server::{EngineHost, GenRequest, Router};
+use chords::server::{push_state, EngineHost, GenRequest, RegistrationServer, Router};
 use chords::workers::BatchOpts;
 use chords::util::json::Json;
 use chords::util::stats::Summary;
@@ -718,6 +725,123 @@ fn sweep_drain(mode: &str) -> Json {
     ])
 }
 
+/// Part 8: spot-reclaim modes on a *registered* host. Unlike part 7b's
+/// pinned `--remote-bank` member, the host here joins through the
+/// registration port (so the self-drain handshake has a connection to
+/// travel on) and carries a parked checkpoint when the reclaim hits:
+/// `"drain"` is the operator path (`drain_host` — parked bytes stay on the
+/// live host), `"self-drain"` is the host-initiated path (`drain_notice` —
+/// the scheduler pulls the parked bytes off the dying host during the
+/// grace window), and `"kill"` drops the host outright (waves recovered by
+/// failover, the parked checkpoint lost with the process).
+fn sweep_reclaim(mode: &str) -> Json {
+    let cfg = ServeConfig { total_cores: 4, queue_cap: 64, ..ServeConfig::default() };
+    let router = Arc::new(Router::with_opts("artifacts", cfg));
+    let reg = RegistrationServer::serve(
+        Arc::new(router.dispatcher().host_registry()),
+        "127.0.0.1",
+        0,
+    )
+    .expect("registration listener");
+    let metrics = router.dispatcher().metrics().clone();
+    let p = chords::config::preset("gauss-mix-slow").unwrap();
+    let h = EngineHost::new(
+        chords::engine::factory_for(p, "artifacts").unwrap(),
+        "gauss-mix-slow",
+        BatchOpts { engines: 2, max_batch: 8, linger: Duration::from_micros(200) },
+    )
+    .expect("engine host");
+    let mut host = Some(h);
+    let addr = host.as_mut().unwrap().serve_tcp("127.0.0.1", 0).expect("bind engine host");
+    let label = format!("tcp:{addr}");
+    host.as_mut().unwrap().register_with(&reg.addr().to_string(), &addr.to_string());
+    let deadline = Instant::now() + Duration::from_secs(5);
+    while metrics.hosts_registered.load(std::sync::atomic::Ordering::Relaxed) < 1
+        && Instant::now() < deadline
+    {
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    // The parked checkpoint the reclaim has to carry (opaque bytes to the
+    // host and the scheduler alike): 4 KiB, roughly a small job's state.
+    push_state(&*host.as_ref().unwrap().connector(), 99, vec![7u8; 4096])
+        .expect("park checkpoint");
+    let req = GenRequest {
+        model: "gauss-mix-slow".into(),
+        steps: 120,
+        cores: 4,
+        seed: 5,
+        ..GenRequest::default()
+    };
+    let r2 = router.clone();
+    let req2 = req.clone();
+    let t0 = Instant::now();
+    let job = std::thread::spawn(move || {
+        r2.generate(&req2, |_, _, _| {}).expect("job across the reclaim failed");
+    });
+    // Disrupt only once waves have landed on the registered member.
+    let deadline = Instant::now() + Duration::from_secs(5);
+    while Instant::now() < deadline {
+        let waves = router
+            .queue_stats()
+            .get("banks")
+            .and_then(|b| b.as_arr())
+            .and_then(|a| {
+                a.iter()
+                    .find(|b| b.get("bank").and_then(|l| l.as_str()) == Some(label.as_str()))
+                    .and_then(|b| b.get("waves"))
+                    .and_then(|v| v.as_f64())
+            })
+            .unwrap_or(0.0);
+        if waves >= 1.0 {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    match mode {
+        "drain" => {
+            router.drain_host(&label);
+        }
+        "self-drain" => {
+            let h = host.as_ref().unwrap();
+            h.trigger_drain("bench-reclaim");
+            h.wait_drained(Duration::from_secs(10));
+        }
+        _ => {
+            host.take();
+        }
+    }
+    job.join().expect("job thread panicked");
+    let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+    let stats = router.queue_stats();
+    let wave_failures: f64 = stats
+        .get("banks")
+        .and_then(|b| b.as_arr())
+        .map(|a| a.iter().filter_map(|b| b.get("wave_failures")?.as_f64()).sum())
+        .unwrap_or(0.0);
+    println!(
+        "{mode:<10} job {wall_ms:7.1}ms | self_drains {} reclaims {} grace {:7.1}µs | migrations {} wave_failures {}",
+        stat(&stats, "self_drains"),
+        stat(&stats, "reclaims"),
+        stat(&stats, "drain_grace_us"),
+        stat(&stats, "migrations"),
+        wave_failures,
+    );
+    drop(host);
+    Json::obj(vec![
+        ("bench", Json::str("serving_reclaim")),
+        ("model", Json::str("gauss-mix-slow")),
+        ("total_cores", Json::num(4.0)),
+        ("mode", Json::str(mode)),
+        ("steps", Json::num(120.0)),
+        ("wall_ms", Json::num(wall_ms)),
+        ("self_drains", Json::num(stat(&stats, "self_drains"))),
+        ("reclaims", Json::num(stat(&stats, "reclaims"))),
+        ("drain_grace_us", Json::num(stat(&stats, "drain_grace_us"))),
+        ("migrations", Json::num(stat(&stats, "migrations"))),
+        ("wave_failures", Json::num(wave_failures)),
+    ])
+}
+
 fn main() {
     println!("== serving benches: offered-load sweep over the elastic scheduler ==");
     let mut rows = Vec::new();
@@ -829,6 +953,22 @@ fn main() {
                 "vs the undisturbed baseline: drain +{:.1}ms (zero failures), kill +{:.1}ms (failover recovery)",
                 drain_ms - undisturbed_ms,
                 wall - undisturbed_ms
+            ),
+            _ => {}
+        }
+        rows.push(row);
+    }
+
+    println!("\n== reclaim benches: operator drain vs self-drain vs kill on a registered host ==");
+    let mut op_drain_ms = 0.0f64;
+    for mode in ["drain", "self-drain", "kill"] {
+        let row = sweep_reclaim(mode);
+        let wall = row.get("wall_ms").and_then(|v| v.as_f64()).unwrap_or(0.0);
+        match mode {
+            "drain" => op_drain_ms = wall,
+            "self-drain" if op_drain_ms > 0.0 => println!(
+                "self-drain vs operator drain: {:+.1}ms wall (checkpoint rescued instead of stranded on the host)",
+                wall - op_drain_ms
             ),
             _ => {}
         }

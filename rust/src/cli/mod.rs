@@ -105,7 +105,7 @@ pub fn help_text() -> String {
         ),
         (
             "engine-serve",
-            "start an engine-host process: a bank of physical engines served over binary wave frames for --remote-bank attachment or scheduler-dial registration (--port 7078 --model gauss-mix --engines 2 --max-batch 8 --linger-us 150 [--register host:port [--advertise host:port]]; see README \"Multi-host serving\")",
+            "start an engine-host process: a bank of physical engines served over binary wave frames for --remote-bank attachment or scheduler-dial registration (--port 7078 --model gauss-mix --engines 2 --max-batch 8 --linger-us 150 [--register host:port [--advertise host:port]] [--reclaim-after MS] [--state-cap-mb MB --state-ttl-ms MS]; SIGTERM or the reclaim deadline triggers a self-drain that hands parked checkpoints back to the scheduler; see README \"Multi-host serving\")",
         ),
         ("inspect-artifacts", "list AOT artifacts and validate the manifest"),
         ("help", "this message"),
@@ -182,6 +182,29 @@ mod tests {
         let h = help_text();
         assert!(h.contains("--preemption"));
         assert!(h.contains("drain"));
+    }
+
+    #[test]
+    fn reclaim_flags_take_values() {
+        // Spot-capacity knobs are value-taking flags, so they must NOT be
+        // listed in BARE_FLAGS (which would make them swallow nothing and
+        // leave their values as positionals).
+        let a = parse(&[
+            "engine-serve",
+            "--reclaim-after",
+            "1500",
+            "--state-cap-mb",
+            "16",
+            "--state-ttl-ms",
+            "30000",
+        ]);
+        assert_eq!(a.flag_parsed("reclaim-after", 0u64).unwrap(), 1500);
+        assert_eq!(a.flag_parsed("state-cap-mb", 64u64).unwrap(), 16);
+        assert_eq!(a.flag_parsed("state-ttl-ms", 600_000u64).unwrap(), 30000);
+        assert!(a.positional.is_empty());
+        let h = help_text();
+        assert!(h.contains("--reclaim-after"));
+        assert!(h.contains("self-drain"));
     }
 
     #[test]

@@ -318,6 +318,12 @@ fn cmd_engine_serve(args: &Args) -> Result<()> {
     let max_batch: usize = args.flag_parsed("max-batch", 8usize).map_err(|e| anyhow!(e))?;
     let linger_us: u64 = args.flag_parsed("linger-us", 150u64).map_err(|e| anyhow!(e))?;
     let artifacts = args.flag("artifacts").unwrap_or("artifacts");
+    // Spot-capacity knobs: a nonzero --reclaim-after arms a wall-clock
+    // reclaim deadline (simulated spot notice), and the state knobs bound
+    // the parked-checkpoint store (see README "Riding spot capacity").
+    let reclaim_after_ms: u64 = args.flag_parsed("reclaim-after", 0u64).map_err(|e| anyhow!(e))?;
+    let state_cap_mb: u64 = args.flag_parsed("state-cap-mb", 64u64).map_err(|e| anyhow!(e))?;
+    let state_ttl_ms: u64 = args.flag_parsed("state-ttl-ms", 600_000u64).map_err(|e| anyhow!(e))?;
     let p = chords::config::preset(model).ok_or_else(|| anyhow!("unknown model '{model}'"))?;
     let factory = chords::engine::factory_for(p, artifacts)?;
     let mut host = chords::server::EngineHost::new(
@@ -329,6 +335,10 @@ fn cmd_engine_serve(args: &Args) -> Result<()> {
             linger: std::time::Duration::from_micros(linger_us),
         },
     )?;
+    host.set_state_policy(
+        (state_cap_mb as usize).saturating_mul(1 << 20),
+        std::time::Duration::from_millis(state_ttl_ms),
+    );
     let addr = host.serve_tcp(bind, port)?;
     println!(
         "chords engine host serving '{model}' (dims {:?}, {} engines, max batch {}, linger {}µs) on {addr}",
@@ -359,12 +369,34 @@ fn cmd_engine_serve(args: &Args) -> Result<()> {
         );
     }
     println!(
-        "protocol: binary wave frames v{}; ops: hello | ping | bank_stats | drift_batch",
+        "protocol: binary wave frames v{}; ops: hello | ping | bank_stats | drift_batch | state_push | state_pull",
         chords::workers::wire::VERSION
     );
-    // Serve until killed.
+    // Arm host-side pressure detection: SIGTERM (the spot-reclaim signal on
+    // most platforms) and, when --reclaim-after is set, a wall-clock
+    // deadline. Either triggers a self-drain: the registrar announces
+    // `drain_notice` so the scheduler rescues parked checkpoints and
+    // requeues in-flight waves, then this process exits.
+    chords::server::install_sigterm_drain();
+    let reclaim_after =
+        (reclaim_after_ms > 0).then(|| std::time::Duration::from_millis(reclaim_after_ms));
+    if let Some(d) = reclaim_after {
+        println!("reclaim deadline armed: self-drain after {}ms", d.as_millis());
+    }
+    host.monitor_pressure(reclaim_after, None);
+    // Serve until killed — or until pressure triggers a self-drain, in
+    // which case wait for the drain handshake to finish and exit cleanly.
     loop {
-        std::thread::sleep(std::time::Duration::from_secs(3600));
+        if host.draining() {
+            let graceful = host.wait_drained(std::time::Duration::from_secs(30));
+            println!(
+                "self-drain ({}): {}",
+                host.drain_reason(),
+                if graceful { "announced; exiting" } else { "announce timed out; exiting anyway" }
+            );
+            return Ok(());
+        }
+        std::thread::sleep(std::time::Duration::from_millis(200));
     }
 }
 

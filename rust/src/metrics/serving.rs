@@ -118,6 +118,11 @@ pub struct RemoteBankStats {
     /// Requests requeued onto another bank after a member failure (counted
     /// on the failover set's instance).
     pub failovers: AtomicU64,
+    /// Handshake-measured RTT (µs) recorded at connect time, used as the
+    /// latency signal until the first wave lands — an unmeasured host must
+    /// never score 0 in `(placed + 1) × latency` placement, which would
+    /// herd every fresh engine onto it.
+    pub seed_rtt_us: AtomicU64,
 }
 
 impl RemoteBankStats {
@@ -150,11 +155,21 @@ impl RemoteBankStats {
         self.failovers.fetch_add(1, Ordering::Relaxed);
     }
 
-    /// Mean round-trip microseconds per successful wave (0 when none ran).
+    /// Record the handshake round trip, seeding the latency signal for a
+    /// host that has served no waves yet. Re-seeded on every reconnect
+    /// (the network may have changed underneath).
+    pub fn seed_rtt(&self, us: u64) {
+        self.seed_rtt_us.store(us.max(1), Ordering::Relaxed);
+    }
+
+    /// Mean round-trip microseconds per successful wave. Before the first
+    /// wave lands this falls back to the handshake-measured seed RTT (and
+    /// only then to 0), so cold-start placement never scores a fresh host
+    /// at 0.
     pub fn mean_rtt_us(&self) -> f64 {
         let waves = self.waves.load(Ordering::Relaxed);
         if waves == 0 {
-            return 0.0;
+            return self.seed_rtt_us.load(Ordering::Relaxed) as f64;
         }
         self.rtt_us_total.load(Ordering::Relaxed) as f64 / waves as f64
     }
@@ -318,6 +333,15 @@ pub struct ServingMetrics {
     pub stability_points_refined: AtomicU64,
     /// Workers retired early by draft-refine sweeps (retire cadence).
     pub stability_retires: AtomicU64,
+    /// Host-initiated self-drains processed (`drain_notice` wire op: spot
+    /// reclaim, SIGTERM, reclaim deadline, probe).
+    pub self_drains: AtomicU64,
+    /// Parked checkpoints rescued off self-draining hosts (pulled during
+    /// the grace window and re-parked by placement score).
+    pub reclaims: AtomicU64,
+    /// Total microseconds spent inside drain grace windows — notice
+    /// received → host detached with its checkpoints rescued.
+    pub drain_grace_us: AtomicU64,
     started: Instant,
 }
 
@@ -355,6 +379,9 @@ impl Default for ServingMetrics {
             stability_points_accepted: AtomicU64::new(0),
             stability_points_refined: AtomicU64::new(0),
             stability_retires: AtomicU64::new(0),
+            self_drains: AtomicU64::new(0),
+            reclaims: AtomicU64::new(0),
+            drain_grace_us: AtomicU64::new(0),
             started: Instant::now(),
         }
     }
@@ -522,6 +549,12 @@ impl ServingMetrics {
                 "stability_retires",
                 Json::num(self.stability_retires.load(Ordering::Relaxed) as f64),
             ),
+            ("self_drains", Json::num(self.self_drains.load(Ordering::Relaxed) as f64)),
+            ("reclaims", Json::num(self.reclaims.load(Ordering::Relaxed) as f64)),
+            (
+                "drain_grace_us",
+                Json::num(self.drain_grace_us.load(Ordering::Relaxed) as f64),
+            ),
         ])
     }
 }
@@ -614,11 +647,17 @@ mod tests {
         m.stability_points_accepted.store(5, Ordering::Relaxed);
         m.stability_points_refined.store(8, Ordering::Relaxed);
         m.stability_retires.store(3, Ordering::Relaxed);
+        m.self_drains.store(1, Ordering::Relaxed);
+        m.reclaims.store(2, Ordering::Relaxed);
+        m.drain_grace_us.store(4500, Ordering::Relaxed);
         let j = m.snapshot(8, 64);
         assert_eq!(j.get("stability_signals").unwrap().as_usize().unwrap(), 2);
         assert_eq!(j.get("stability_points_accepted").unwrap().as_usize().unwrap(), 5);
         assert_eq!(j.get("stability_points_refined").unwrap().as_usize().unwrap(), 8);
         assert_eq!(j.get("stability_retires").unwrap().as_usize().unwrap(), 3);
+        assert_eq!(j.get("self_drains").unwrap().as_usize().unwrap(), 1);
+        assert_eq!(j.get("reclaims").unwrap().as_usize().unwrap(), 2);
+        assert_eq!(j.get("drain_grace_us").unwrap().as_usize().unwrap(), 4500);
     }
 
     #[test]
@@ -638,6 +677,18 @@ mod tests {
         assert_eq!(r.wave_failures.load(Ordering::Relaxed), 1);
         assert_eq!(r.reconnects.load(Ordering::Relaxed), 1);
         assert_eq!(r.failovers.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn seed_rtt_covers_cold_start_until_first_wave() {
+        let r = RemoteBankStats::default();
+        assert_eq!(r.mean_rtt_us(), 0.0, "no seed, no waves: still 0");
+        r.seed_rtt(800);
+        assert_eq!(r.mean_rtt_us(), 800.0, "unmeasured member reports the seeded handshake RTT");
+        r.seed_rtt(0);
+        assert_eq!(r.mean_rtt_us(), 1.0, "seed is floored to 1us so placement never scores 0");
+        r.on_wave(1, 200, 10);
+        assert_eq!(r.mean_rtt_us(), 200.0, "measured waves take over from the seed");
     }
 
     #[test]

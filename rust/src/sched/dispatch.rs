@@ -245,6 +245,11 @@ struct Shared {
     /// [`Shared::remote_banks`]; loaded slots with a failover control are
     /// additionally edited live.
     registrations: Mutex<Vec<HostRegistration>>,
+    /// Checkpoints rescued off a self-draining host when no surviving
+    /// same-model host could take them, keyed by job id. Held here until a
+    /// host registers for the model, then re-parked on it so the normal
+    /// `state_pull` resume path finds the bytes again.
+    rescued: Mutex<HashMap<u64, (String, Vec<u8>)>>,
     /// Enable adaptive control for every batched model.
     adaptive_default: bool,
     /// Per-model bank overrides (highest precedence).
@@ -376,6 +381,7 @@ impl Dispatcher {
             batch: opts.batch_opts(),
             remote_banks: opts.remote_banks,
             registrations: Mutex::new(Vec::new()),
+            rescued: Mutex::new(HashMap::new()),
             adaptive_default: opts.adaptive,
             model_budgets: opts.model_budgets,
             controller,
@@ -655,7 +661,11 @@ impl StabilitySink {
 /// keep their own `Arc<ModelSlot>`); the next request rebuilds it as a
 /// failover set including the host. `deregister` (driven by the host's
 /// registration connection dying) detaches the member; sticky engines
-/// re-place on their next wave.
+/// re-place on their next wave. `drain_notice` (a host-initiated spot
+/// reclaim) first rescues the parked checkpoints the notice names onto the
+/// best surviving same-model host — holding them scheduler-side until one
+/// registers if none can take them — then detaches the member like an
+/// operator drain.
 #[derive(Clone)]
 pub struct HostRegistry {
     shared: Arc<Shared>,
@@ -718,6 +728,27 @@ impl crate::server::RegistrationSink for HostRegistry {
             }
         }
         self.shared.metrics.hosts_registered.fetch_add(1, Ordering::Relaxed);
+        // A self-drained host may have left rescued checkpoints behind with
+        // no survivor to hold them; re-park them on the fresh host so the
+        // normal `state_pull` resume path finds the bytes again.
+        let orphans: Vec<(u64, Vec<u8>)> = {
+            let mut rescued = self.shared.rescued.lock().unwrap();
+            let ids: Vec<u64> = rescued
+                .iter()
+                .filter(|(_, (m, _))| m == &reg.model)
+                .map(|(id, _)| *id)
+                .collect();
+            ids.into_iter()
+                .filter_map(|id| rescued.remove(&id).map(|(_, bytes)| (id, bytes)))
+                .collect()
+        };
+        for (id, bytes) in orphans {
+            // A failed hand-off puts the bytes back for the next registrant
+            // instead of losing them.
+            if crate::server::push_state(connector.as_ref(), id, bytes.clone()).is_err() {
+                self.shared.rescued.lock().unwrap().insert(id, (reg.model.clone(), bytes));
+            }
+        }
         Ok(())
     }
 
@@ -739,6 +770,75 @@ impl crate::server::RegistrationSink for HostRegistry {
         }
         self.shared.metrics.hosts_deregistered.fetch_add(1, Ordering::Relaxed);
         true
+    }
+
+    fn drain_notice(&self, notice: &wire::DrainNotice) -> bool {
+        let t0 = Instant::now();
+        let label = TcpConnector::new(&notice.advertise).label();
+        // Snapshot the dying registration (for the connector to pull parked
+        // state through) and the same-model survivors before detaching
+        // anything, so the rescue window sees a consistent host table.
+        let (dying, mut survivors) = {
+            let regs = self.shared.registrations.lock().unwrap();
+            let dying =
+                regs.iter().find(|r| r.model == notice.model && r.label == label).cloned();
+            let survivors: Vec<HostRegistration> = regs
+                .iter()
+                .filter(|r| r.model == notice.model && r.label != label)
+                .cloned()
+                .collect();
+            (dying, survivors)
+        };
+        // Best survivor first. Per-member RTT lives inside the failover
+        // bank's placement scoring, not at registry level, so rank by the
+        // capacity each host advertised at handshake (ties: more engines).
+        survivors.sort_by(|a, b| {
+            b.capacity.cmp(&a.capacity).then(b.engines.cmp(&a.engines))
+        });
+        let mut rescued = 0usize;
+        if let Some(dying) = &dying {
+            for &job_id in &notice.parked_jobs {
+                let bytes = match crate::server::pull_state(dying.connector.as_ref(), job_id) {
+                    Ok(b) => b,
+                    Err(_) => {
+                        // Already claimed (a racing resume) or the host died
+                        // mid-grace; either way there is nothing to carry.
+                        continue;
+                    }
+                };
+                rescued += 1;
+                let mut parked = false;
+                for s in &survivors {
+                    if crate::server::push_state(s.connector.as_ref(), job_id, bytes.clone())
+                        .is_ok()
+                    {
+                        parked = true;
+                        break;
+                    }
+                }
+                if !parked {
+                    // No survivor can hold it: keep the bytes here and hand
+                    // them to the next host that registers for the model.
+                    self.shared
+                        .rescued
+                        .lock()
+                        .unwrap()
+                        .insert(job_id, (notice.model.clone(), bytes));
+                }
+            }
+        }
+        // Detach: stop placing waves on the host. The failover bank requeues
+        // its in-flight waves onto the surviving members, exactly like an
+        // operator-driven `drain_host`.
+        let was_attached = self.deregister(&notice.model, &label);
+        let m = &self.shared.metrics;
+        if was_attached {
+            m.migrations.fetch_add(1, Ordering::Relaxed);
+        }
+        m.self_drains.fetch_add(1, Ordering::Relaxed);
+        m.reclaims.fetch_add(rescued as u64, Ordering::Relaxed);
+        m.drain_grace_us.fetch_add(t0.elapsed().as_micros() as u64, Ordering::Relaxed);
+        was_attached
     }
 }
 

@@ -43,6 +43,23 @@
 //!    deregisters the host and waves fail over to surviving members. The
 //!    registrar meanwhile redials with exponential backoff, so a bounced
 //!    scheduler re-learns its fleet automatically.
+//!
+//! ## Self-drain (spot reclaim)
+//!
+//! A host that learns its machine is going away — SIGTERM from the
+//! platform ([`install_sigterm_drain`]), an operator-set
+//! `--reclaim-after` deadline, or a pluggable reclaim-notice probe (all
+//! polled by [`EngineHost::monitor_pressure`]) — initiates its *own*
+//! drain instead of waiting for an operator to run `chords drain`: the
+//! registrar sends a `drain_notice` frame on the registration connection
+//! naming the host, the trigger, and every parked checkpoint's job id.
+//! The scheduler stops placing waves on the host, requeues what is in
+//! flight onto survivors, pulls the parked checkpoints off before they
+//! die with the machine, deregisters the host, and acknowledges with
+//! `register_ok`. That acknowledgement closes the drain grace window:
+//! once it arrives (or the ack deadline passes),
+//! [`EngineHost::wait_drained`] unblocks and the process can exit with
+//! zero failed jobs.
 
 use crate::engine::{DriftEngine, EngineFactory};
 use crate::metrics::BatchStats;
@@ -54,7 +71,7 @@ use crate::workers::{
 use anyhow::{bail, Result};
 use std::collections::HashMap;
 use std::net::{SocketAddr, TcpListener};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
@@ -72,6 +89,71 @@ const REGISTRAR_HANDSHAKE: Duration = Duration::from_secs(5);
 /// Initial registrar redial delay; doubles per failure up to the cap.
 const REGISTRAR_BACKOFF: Duration = Duration::from_millis(200);
 const REGISTRAR_BACKOFF_CAP: Duration = Duration::from_secs(5);
+
+/// How long a draining registrar holds the grace window open waiting for
+/// the scheduler's `register_ok` acknowledgement (the scheduler rescues
+/// parked checkpoints before acking) before exiting anyway.
+const DRAIN_ACK_DEADLINE: Duration = Duration::from_secs(10);
+
+/// Default byte budget across checkpoints parked by `state_push`; the
+/// oldest parks are evicted past it.
+const STATE_CAP_BYTES: u64 = 64 * 1024 * 1024;
+
+/// Default time-to-live for a parked checkpoint. An abandoned migration
+/// (crashed scheduler, operator typo) must not leak its bytes forever.
+const STATE_TTL: Duration = Duration::from_secs(600);
+
+/// Raised by the process-wide handler installed by
+/// [`install_sigterm_drain`]; polled by [`EngineHost::monitor_pressure`].
+static SIGTERM_SEEN: AtomicBool = AtomicBool::new(false);
+
+/// Install a SIGTERM handler that requests a self-drain on the next
+/// pressure-monitor tick. The handler only stores into a static flag
+/// (async-signal-safe); [`EngineHost::monitor_pressure`] does the actual
+/// drain work on a normal thread.
+#[cfg(unix)]
+pub fn install_sigterm_drain() {
+    extern "C" fn on_sigterm(_sig: i32) {
+        SIGTERM_SEEN.store(true, Ordering::Relaxed);
+    }
+    // Declared by hand: the crate links no libc bindings, but every unix
+    // Rust binary links the platform C library that defines `signal`.
+    extern "C" {
+        fn signal(signum: i32, handler: extern "C" fn(i32)) -> usize;
+    }
+    const SIGTERM: i32 = 15;
+    unsafe {
+        signal(SIGTERM, on_sigterm);
+    }
+}
+
+/// Non-unix stand-in: platform reclaim signals are unavailable there; the
+/// `--reclaim-after` deadline and probe triggers still work.
+#[cfg(not(unix))]
+pub fn install_sigterm_drain() {}
+
+/// A pluggable reclaim-notice probe: return `Some(reason)` when the
+/// platform announces the machine is going away (e.g. a cloud metadata
+/// endpoint flagging a spot reclaim). Polled every tick by
+/// [`EngineHost::monitor_pressure`]; the string becomes the drain reason
+/// the scheduler sees.
+pub type ReclaimProbe = Box<dyn Fn() -> Option<String> + Send + Sync>;
+
+/// A checkpoint parked by `state_push`, timestamped for the TTL sweep.
+struct Parked {
+    bytes: Vec<u8>,
+    at: Instant,
+}
+
+/// The host's self-drain lifecycle: `requested` (a trigger fired) →
+/// `done` (the notice was delivered and acknowledged, or there was
+/// nothing to notify / the ack deadline passed — safe to exit).
+struct DrainState {
+    requested: AtomicBool,
+    /// Why the host is draining; the first trigger wins.
+    reason: Mutex<String>,
+    done: AtomicBool,
+}
 
 /// Everything a connection handler needs — deliberately *not* the bank
 /// itself (handlers only hold cheap client engines onto it), so the shared
@@ -92,10 +174,38 @@ struct HostShared {
     /// Job checkpoints parked on this host by `state_push` (key = job id),
     /// awaiting a `state_pull` from whichever scheduler resumes the job —
     /// the cross-host migration hand-off point. Payloads are opaque
-    /// checkpoint-codec bytes; the host never decodes them.
-    states: Mutex<HashMap<u64, Vec<u8>>>,
+    /// checkpoint-codec bytes; the host never decodes them. Bounded by
+    /// `state_cap_bytes` and aged out after `state_ttl_ms`.
+    states: Mutex<HashMap<u64, Parked>>,
+    /// Byte budget across parked checkpoints; oldest evicted past it.
+    state_cap_bytes: AtomicU64,
+    /// Parked-checkpoint TTL in milliseconds; expired entries are swept on
+    /// the next park.
+    state_ttl_ms: AtomicU64,
+    /// Checkpoints dropped by the cap or the TTL sweep.
+    state_evictions: AtomicU64,
+    drain: DrainState,
+    /// Whether a registrar is attached — i.e. whether a self-drain has a
+    /// scheduler to notify.
+    registered: AtomicBool,
     stop: AtomicBool,
     conns: Mutex<Vec<JoinHandle<()>>>,
+}
+
+impl HostShared {
+    /// Request a self-drain; the first trigger's reason wins. With no
+    /// registrar attached there is no scheduler to notify, so the drain
+    /// is immediately complete.
+    fn request_drain(&self, reason: &str) {
+        let mut r = self.drain.reason.lock().unwrap();
+        if self.drain.requested.swap(true, Ordering::Relaxed) {
+            return;
+        }
+        *r = reason.to_string();
+        if !self.registered.load(Ordering::Relaxed) {
+            self.drain.done.store(true, Ordering::Relaxed);
+        }
+    }
 }
 
 /// A bank of physical engines served over the engine-host protocol. Build
@@ -109,6 +219,7 @@ pub struct EngineHost {
     accept: Option<JoinHandle<()>>,
     addr: Option<SocketAddr>,
     registrar: Option<HostRegistrar>,
+    monitor: Option<JoinHandle<()>>,
     /// Owns the physical engines. Declared after `shared` and dropped after
     /// the [`Drop`] body joins every handler, so in-flight waves finish
     /// against a live bank.
@@ -135,10 +246,26 @@ impl EngineHost {
             max_batch: opts.max_batch.max(1),
             stats,
             states: Mutex::new(HashMap::new()),
+            state_cap_bytes: AtomicU64::new(STATE_CAP_BYTES),
+            state_ttl_ms: AtomicU64::new(STATE_TTL.as_millis() as u64),
+            state_evictions: AtomicU64::new(0),
+            drain: DrainState {
+                requested: AtomicBool::new(false),
+                reason: Mutex::new(String::new()),
+                done: AtomicBool::new(false),
+            },
+            registered: AtomicBool::new(false),
             stop: AtomicBool::new(false),
             conns: Mutex::new(Vec::new()),
         });
-        Ok(EngineHost { shared, accept: None, addr: None, registrar: None, _bank: bank })
+        Ok(EngineHost {
+            shared,
+            accept: None,
+            addr: None,
+            registrar: None,
+            monitor: None,
+            _bank: bank,
+        })
     }
 
     /// Host-side fusion counters (what `bank_stats` reports).
@@ -223,7 +350,93 @@ impl EngineHost {
             capacity: self.shared.engines * self.shared.max_batch,
             advertise: advertise.to_string(),
         };
-        self.registrar = Some(HostRegistrar::spawn(scheduler.to_string(), reg));
+        self.shared.registered.store(true, Ordering::Relaxed);
+        self.registrar = Some(HostRegistrar::spawn(scheduler.to_string(), reg, self.shared.clone()));
+    }
+
+    /// Cap and TTL for checkpoints parked by `state_push`. Oldest parks
+    /// evict past `cap_bytes`; entries older than `ttl` are swept on the
+    /// next park. Defaults: 64 MiB, 10 minutes.
+    pub fn set_state_policy(&self, cap_bytes: usize, ttl: Duration) {
+        self.shared.state_cap_bytes.store(cap_bytes as u64, Ordering::Relaxed);
+        self.shared.state_ttl_ms.store(ttl.as_millis() as u64, Ordering::Relaxed);
+    }
+
+    /// Parked checkpoints dropped so far by the byte cap or the TTL sweep.
+    pub fn state_evictions(&self) -> u64 {
+        self.shared.state_evictions.load(Ordering::Relaxed)
+    }
+
+    /// Request a self-drain (the manual face of the pressure triggers):
+    /// the registrar announces a `drain_notice` to its scheduler, which
+    /// stops placing waves here, rescues parked checkpoints, and
+    /// deregisters the host. The first trigger's reason wins.
+    pub fn trigger_drain(&self, reason: &str) {
+        self.shared.request_drain(reason);
+    }
+
+    /// Whether a self-drain has been requested (by any trigger).
+    pub fn draining(&self) -> bool {
+        self.shared.drain.requested.load(Ordering::Relaxed)
+    }
+
+    /// Why this host is draining; empty until a trigger fires.
+    pub fn drain_reason(&self) -> String {
+        self.shared.drain.reason.lock().unwrap().clone()
+    }
+
+    /// Block until the self-drain completes — the scheduler acknowledged
+    /// the notice (after rescuing parked checkpoints), the ack deadline
+    /// passed, or there was no registration to notify. Returns whether it
+    /// completed within `timeout`.
+    pub fn wait_drained(&self, timeout: Duration) -> bool {
+        let deadline = Instant::now() + timeout;
+        loop {
+            if self.shared.drain.done.load(Ordering::Relaxed) {
+                return true;
+            }
+            if Instant::now() >= deadline {
+                return false;
+            }
+            std::thread::sleep(Duration::from_millis(10));
+        }
+    }
+
+    /// Spawn the pressure monitor: polls the SIGTERM flag (see
+    /// [`install_sigterm_drain`]), the optional `reclaim_after` deadline
+    /// (the deterministic trigger `chords engine-serve --reclaim-after`
+    /// uses), and the optional reclaim probe. The first hit triggers the
+    /// self-drain and the monitor exits.
+    pub fn monitor_pressure(&mut self, reclaim_after: Option<Duration>, probe: Option<ReclaimProbe>) {
+        assert!(self.monitor.is_none(), "monitor_pressure called twice");
+        let shared = self.shared.clone();
+        let deadline = reclaim_after.map(|d| Instant::now() + d);
+        let monitor = std::thread::Builder::new()
+            .name("chords-engine-pressure".into())
+            .spawn(move || {
+                loop {
+                    if shared.stop.load(Ordering::Relaxed)
+                        || shared.drain.requested.load(Ordering::Relaxed)
+                    {
+                        return;
+                    }
+                    if SIGTERM_SEEN.load(Ordering::Relaxed) {
+                        shared.request_drain("sigterm");
+                        return;
+                    }
+                    if deadline.is_some_and(|d| Instant::now() >= d) {
+                        shared.request_drain("reclaim_deadline");
+                        return;
+                    }
+                    if let Some(reason) = probe.as_ref().and_then(|p| p()) {
+                        shared.request_drain(&reason);
+                        return;
+                    }
+                    std::thread::sleep(Duration::from_millis(20));
+                }
+            })
+            .expect("spawn engine-host pressure monitor");
+        self.monitor = Some(monitor);
     }
 }
 
@@ -233,6 +446,9 @@ impl Drop for EngineHost {
         // connection die (and deregisters) before the wave port closes.
         self.registrar.take();
         self.shared.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.monitor.take() {
+            let _ = h.join();
+        }
         if let Some(h) = self.accept.take() {
             let _ = h.join();
         }
@@ -319,11 +535,11 @@ fn handle_conn(shared: &HostShared, t: &dyn Transport) {
                 // Park the checkpoint under its job id; ack with an empty
                 // push. A duplicate push overwrites (last writer wins —
                 // the scheduler serializes pushes per job).
-                shared.states.lock().unwrap().insert(msg.id, msg.payload);
+                park_state(shared, msg.id, msg.payload);
                 wire::state_push_ok(msg.id)
             }
             op::STATE_PULL => match shared.states.lock().unwrap().remove(&msg.id) {
-                Some(state) => wire::state_push(msg.id, state),
+                Some(state) => wire::state_push(msg.id, state.bytes),
                 None => {
                     wire::error_frame(msg.id, &format!("no parked state for job {}", msg.id))
                 }
@@ -342,8 +558,37 @@ fn handle_conn(shared: &HostShared, t: &dyn Transport) {
     }
 }
 
+/// Park a checkpoint under `job_id`, sweeping expired entries and
+/// evicting oldest-first past the byte cap — an abandoned migration or a
+/// crashed scheduler must not leak checkpoints forever. A single
+/// over-budget checkpoint still parks (losing the newest writer's bytes
+/// is worse than a transiently over-cap map).
+fn park_state(shared: &HostShared, job_id: u64, bytes: Vec<u8>) {
+    let ttl = Duration::from_millis(shared.state_ttl_ms.load(Ordering::Relaxed));
+    let cap = shared.state_cap_bytes.load(Ordering::Relaxed) as usize;
+    let mut states = shared.states.lock().unwrap();
+    let before = states.len();
+    states.retain(|_, p| p.at.elapsed() < ttl);
+    let mut evicted = (before - states.len()) as u64;
+    let mut total: usize = states.values().map(|p| p.bytes.len()).sum();
+    while total + bytes.len() > cap && !states.is_empty() {
+        let oldest = states.iter().min_by_key(|(_, p)| p.at).map(|(id, _)| *id).unwrap();
+        total -= states.remove(&oldest).map(|p| p.bytes.len()).unwrap_or(0);
+        evicted += 1;
+    }
+    states.insert(job_id, Parked { bytes, at: Instant::now() });
+    drop(states);
+    if evicted > 0 {
+        shared.state_evictions.fetch_add(evicted, Ordering::Relaxed);
+    }
+}
+
 fn bank_stats(shared: &HostShared) -> wire::Frame {
     let s = &shared.stats;
+    let (parked, parked_bytes) = {
+        let states = shared.states.lock().unwrap();
+        (states.len(), states.values().map(|p| p.bytes.len()).sum::<usize>())
+    };
     wire::Frame::control(
         op::BANK_STATS_REPLY,
         0,
@@ -355,6 +600,12 @@ fn bank_stats(shared: &HostShared) -> wire::Frame {
             ("mean_occupancy", Json::num(s.mean_occupancy())),
             ("mean_exec_us", Json::num(s.mean_exec_us())),
             ("peak_batch", Json::num(s.peak_batch.load(Ordering::Relaxed) as f64)),
+            ("parked_states", Json::num(parked as f64)),
+            ("parked_bytes", Json::num(parked_bytes as f64)),
+            (
+                "state_evictions",
+                Json::num(shared.state_evictions.load(Ordering::Relaxed) as f64),
+            ),
         ]),
     )
 }
@@ -381,8 +632,13 @@ fn run_wave(
             }
         }
     }
-    let outs = engine.as_mut().expect("engine built above").drift_batch(&wave.xs, &wave.ts);
-    wire::drift_batch_response(wave.id, &outs)
+    // The fallible face: an engine bank torn down under a live connection
+    // (a drain race) answers the wave's error frame — which the client
+    // fails over to a surviving host — instead of panicking the handler.
+    match engine.as_mut().expect("engine built above").try_drift_batch(&wave.xs, &wave.ts) {
+        Ok(outs) => wire::drift_batch_response(wave.id, &outs),
+        Err(e) => wire::error_frame(wave.id, &format!("wave execution failed: {e:#}")),
+    }
 }
 
 // ------------------------------------------------- cross-host state transfer
@@ -463,6 +719,17 @@ pub trait RegistrationSink: Send + Sync {
     /// Detach a previously registered host; returns whether it was
     /// attached.
     fn deregister(&self, model: &str, label: &str) -> bool;
+
+    /// Handle a host-initiated self-drain: stop placing waves on the
+    /// host, requeue what is in flight onto survivors, rescue the parked
+    /// checkpoints the notice names, and detach it. The default just
+    /// detaches (deriving the connector label from `advertise` exactly
+    /// like `register` does), so stub sinks keep working; the
+    /// dispatcher's registry overrides it with the full rescue path.
+    /// Returns whether the host was attached.
+    fn drain_notice(&self, notice: &wire::DrainNotice) -> bool {
+        self.deregister(&notice.model, &TcpConnector::new(&notice.advertise).label())
+    }
 }
 
 struct RegServerShared {
@@ -606,11 +873,28 @@ fn handle_registration(shared: &RegServerShared, t: &dyn Transport) {
                     break;
                 }
             }
+            op::DRAIN_NOTICE => {
+                let notice = match wire::parse_drain_notice(&msg) {
+                    Ok(n) => n,
+                    Err(e) => {
+                        let _ = t.send(&wire::error_frame(0, &e));
+                        continue;
+                    }
+                };
+                // The sink rescues parked checkpoints and detaches the
+                // host; the ack releases the host to exit, and closing
+                // the connection ends its registration for good (the
+                // registrar never redials after a self-drain).
+                shared.sink.drain_notice(&notice);
+                active = None;
+                let _ = t.send(&wire::register_ok());
+                break;
+            }
             other => {
                 let _ = t.send(&wire::error_frame(
                     0,
                     &format!(
-                        "unknown op {} on the registration port (expected register|ping)",
+                        "unknown op {} on the registration port (expected register|ping|drain_notice)",
                         wire::op_name(other)
                     ),
                 ));
@@ -636,12 +920,16 @@ pub struct HostRegistrar {
 }
 
 impl HostRegistrar {
-    fn spawn(scheduler: String, reg: wire::Registration) -> HostRegistrar {
+    fn spawn(
+        scheduler: String,
+        reg: wire::Registration,
+        shared: Arc<HostShared>,
+    ) -> HostRegistrar {
         let stop = Arc::new(AtomicBool::new(false));
         let stop2 = stop.clone();
         let thread = std::thread::Builder::new()
             .name("chords-registrar".into())
-            .spawn(move || registrar_main(&stop2, &scheduler, &reg))
+            .spawn(move || registrar_main(&stop2, &scheduler, &reg, &shared))
             .expect("spawn host registrar");
         HostRegistrar { stop, thread: Some(thread) }
     }
@@ -668,9 +956,21 @@ fn sleep_unless_stopped(d: Duration, stop: &AtomicBool) -> bool {
     stop.load(Ordering::Relaxed)
 }
 
-fn registrar_main(stop: &AtomicBool, scheduler: &str, reg: &wire::Registration) {
+fn registrar_main(
+    stop: &AtomicBool,
+    scheduler: &str,
+    reg: &wire::Registration,
+    shared: &HostShared,
+) {
     let mut backoff = REGISTRAR_BACKOFF;
     while !stop.load(Ordering::Relaxed) {
+        if shared.drain.requested.load(Ordering::Relaxed) {
+            // Drain requested while disconnected: the dead registration
+            // connection already deregistered this host, so there is
+            // nothing left to announce — and never redial after a drain.
+            shared.drain.done.store(true, Ordering::Relaxed);
+            return;
+        }
         let t = match TcpTransport::connect(scheduler) {
             Ok(t) => t,
             Err(_) => {
@@ -683,7 +983,10 @@ fn registrar_main(stop: &AtomicBool, scheduler: &str, reg: &wire::Registration) 
         };
         if register_once(&t, reg, stop).is_ok() {
             backoff = REGISTRAR_BACKOFF;
-            keepalive(&t, stop);
+            if keepalive(&t, stop, shared, reg) == Keepalive::Drained {
+                t.close();
+                return;
+            }
         }
         t.close();
         if sleep_unless_stopped(backoff, stop) {
@@ -716,24 +1019,80 @@ fn register_once(t: &dyn Transport, reg: &wire::Registration, stop: &AtomicBool)
     }
 }
 
-/// Ping until the connection dies or the registrar stops.
-fn keepalive(t: &dyn Transport, stop: &AtomicBool) {
+/// Why [`keepalive`] returned: the connection died (redial), or the host
+/// self-drained (never redial).
+#[derive(PartialEq, Eq)]
+enum Keepalive {
+    Dead,
+    Drained,
+}
+
+/// Ping until the connection dies, the registrar stops, or a self-drain
+/// is requested (in which case the drain notice goes out on this — the
+/// registration — connection before returning).
+fn keepalive(
+    t: &dyn Transport,
+    stop: &AtomicBool,
+    shared: &HostShared,
+    reg: &wire::Registration,
+) -> Keepalive {
     let mut last_ping = Instant::now();
     loop {
         if stop.load(Ordering::Relaxed) {
-            return;
+            return Keepalive::Dead;
+        }
+        if shared.drain.requested.load(Ordering::Relaxed) {
+            announce_drain(t, stop, shared, reg);
+            return Keepalive::Drained;
         }
         if last_ping.elapsed() >= REGISTRAR_PING {
             if t.send(&wire::ping()).is_err() {
-                return;
+                return Keepalive::Dead;
             }
             last_ping = Instant::now();
         }
         match t.recv_timeout(HOST_TICK) {
             Ok(_) => {} // pong (or stray frame): connection is alive
-            Err(_) => return,
+            Err(_) => return Keepalive::Dead,
         }
     }
+}
+
+/// Send the drain notice and hold the grace window open until the
+/// scheduler acknowledges with `register_ok` — it rescues the parked
+/// checkpoints named in the notice before acking — or the ack deadline
+/// passes. Either way the drain is complete afterwards.
+fn announce_drain(
+    t: &dyn Transport,
+    stop: &AtomicBool,
+    shared: &HostShared,
+    reg: &wire::Registration,
+) {
+    let parked: Vec<u64> = shared.states.lock().unwrap().keys().copied().collect();
+    let notice = wire::DrainNotice {
+        model: reg.model.clone(),
+        advertise: reg.advertise.clone(),
+        reason: shared.drain.reason.lock().unwrap().clone(),
+        parked_jobs: parked,
+    };
+    if t.send(&wire::drain_notice(&notice)).is_ok() {
+        let deadline = Instant::now() + DRAIN_ACK_DEADLINE;
+        loop {
+            if stop.load(Ordering::Relaxed) {
+                break;
+            }
+            let left = deadline.saturating_duration_since(Instant::now());
+            if left.is_zero() {
+                break;
+            }
+            match t.recv_timeout(left.min(HOST_TICK)) {
+                Ok(Some(m)) if m.op == op::REGISTER_OK => break,
+                Ok(_) => {} // stray pong from before the notice
+                Err(_) => break, // scheduler hung up: notice landed or it died
+            }
+        }
+    }
+    shared.drain.done.store(true, Ordering::Relaxed);
 }
 
 #[cfg(test)]
@@ -932,6 +1291,115 @@ mod tests {
         });
         let mut h = host(1);
         h.register_with(&addr.to_string(), "127.0.0.1:9999");
+        drop(h);
+        server.join().unwrap();
+    }
+
+    #[test]
+    fn parked_states_are_capped_and_swept() {
+        let h = host(1);
+        h.set_state_policy(1300, Duration::from_millis(500));
+        let c = h.connector();
+        push_state(&*c, 1, vec![1u8; 600]).unwrap();
+        push_state(&*c, 2, vec![2u8; 600]).unwrap();
+        // A third 600-byte park blows the 1300-byte budget: the oldest
+        // entry (job 1) is evicted to make room.
+        push_state(&*c, 3, vec![3u8; 600]).unwrap();
+        assert_eq!(h.state_evictions(), 1);
+        assert!(pull_state(&*c, 1).unwrap_err().to_string().contains("no parked state"));
+        assert_eq!(pull_state(&*c, 2).unwrap(), vec![2u8; 600]);
+        // Job 3 outlives its TTL; the next park sweeps it.
+        std::thread::sleep(Duration::from_millis(700));
+        push_state(&*c, 4, vec![4u8; 10]).unwrap();
+        assert_eq!(h.state_evictions(), 2);
+        assert!(pull_state(&*c, 3).unwrap_err().to_string().contains("no parked state"));
+        assert_eq!(pull_state(&*c, 4).unwrap(), vec![4u8; 10]);
+    }
+
+    /// Poll until `cond` holds (5 s deadline).
+    fn wait_until(what: &str, cond: impl Fn() -> bool) {
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while !cond() {
+            assert!(Instant::now() < deadline, "timed out waiting for {what}");
+            std::thread::sleep(Duration::from_millis(10));
+        }
+    }
+
+    #[test]
+    fn pressure_triggers_request_self_drain() {
+        // The deterministic trigger: an operator-set reclaim deadline.
+        let mut h = host(1);
+        h.monitor_pressure(Some(Duration::from_millis(30)), None);
+        wait_until("reclaim deadline drain", || h.draining());
+        assert_eq!(h.drain_reason(), "reclaim_deadline");
+        // No registrar attached → nothing to announce → complete at once.
+        assert!(h.wait_drained(Duration::from_secs(1)));
+
+        // The pluggable probe supplies its own reason, and the first
+        // trigger wins over later manual requests.
+        let mut h2 = host(1);
+        h2.monitor_pressure(None, Some(Box::new(|| Some("spot-reclaim".into()))));
+        wait_until("probe drain", || h2.draining());
+        assert_eq!(h2.drain_reason(), "spot-reclaim");
+        h2.trigger_drain("manual");
+        assert_eq!(h2.drain_reason(), "spot-reclaim");
+    }
+
+    #[test]
+    fn self_drain_announces_parked_jobs_and_completes() {
+        // A bare frame-speaking listener standing in for the scheduler.
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let registered = Arc::new(AtomicBool::new(false));
+        let registered2 = registered.clone();
+        let server = std::thread::spawn(move || {
+            let (stream, _) = listener.accept().unwrap();
+            let t = TcpTransport::from_stream(stream).unwrap();
+            let m = t.recv_timeout(Duration::from_secs(5)).unwrap().unwrap();
+            assert_eq!(m.op, op::REGISTER);
+            t.send(&wire::register_ok()).unwrap();
+            registered2.store(true, Ordering::Relaxed);
+            // Pings until the drain notice lands.
+            let deadline = Instant::now() + Duration::from_secs(10);
+            loop {
+                assert!(Instant::now() < deadline, "no drain notice arrived");
+                match t.recv_timeout(Duration::from_millis(100)) {
+                    Ok(Some(m)) if m.op == op::PING => {
+                        let _ = t.send(&wire::pong());
+                    }
+                    Ok(Some(m)) if m.op == op::DRAIN_NOTICE => {
+                        let n = wire::parse_drain_notice(&m).unwrap();
+                        assert_eq!(n.model, "gm-test");
+                        assert_eq!(n.advertise, "127.0.0.1:9999");
+                        assert_eq!(n.reason, "test-reclaim");
+                        assert_eq!(n.parked_jobs, vec![7]);
+                        // The ack closes the grace window...
+                        t.send(&wire::register_ok()).unwrap();
+                        break;
+                    }
+                    Ok(_) => {}
+                    Err(_) => panic!("registrar hung up before draining"),
+                }
+            }
+            // ...and the registrar never redials after a self-drain.
+            let deadline = Instant::now() + Duration::from_secs(10);
+            loop {
+                assert!(Instant::now() < deadline, "connection never closed after drain");
+                match t.recv_timeout(Duration::from_millis(100)) {
+                    Ok(_) => {}
+                    Err(_) => break,
+                }
+            }
+        });
+        let mut h = host(1);
+        push_state(&*h.connector(), 7, vec![9u8; 64]).unwrap();
+        h.register_with(&addr.to_string(), "127.0.0.1:9999");
+        // Only trigger once the scheduler holds the registration — a drain
+        // requested while disconnected has nothing to announce.
+        wait_until("registration", || registered.load(Ordering::Relaxed));
+        h.trigger_drain("test-reclaim");
+        assert!(h.wait_drained(Duration::from_secs(10)), "drain never completed");
+        assert!(h.draining());
         drop(h);
         server.join().unwrap();
     }

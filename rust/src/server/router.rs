@@ -191,7 +191,11 @@ impl Router {
     /// latency-class tenant. The pause is otherwise transparent — the job
     /// checkpoints, re-enters the queue at its original priority, resumes
     /// on whatever workers the next grant hands it, and produces bitwise
-    /// the same outputs as an uninterrupted run.
+    /// the same outputs as an uninterrupted run. The same loop doubles as
+    /// the autoscaler for spot capacity: a resubmitted grant re-scores
+    /// remote placement from scratch, so jobs bounced by a host self-drain
+    /// ([`crate::workers::wire::DrainNotice`]) land on the best surviving —
+    /// or newly registered — host with no extra machinery.
     pub fn generate_with_status(
         &self,
         req: &GenRequest,

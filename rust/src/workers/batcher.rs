@@ -449,28 +449,47 @@ impl DriftEngine for RemoteEngine {
     }
 
     fn drift(&mut self, x: &Tensor, t: f32) -> Tensor {
+        self.try_drift(x, t).expect("engine bank closed")
+    }
+
+    fn drift_batch(&mut self, xs: &[Tensor], ts: &[f32]) -> Vec<Tensor> {
+        self.try_drift_batch(xs, ts).expect("engine bank closed")
+    }
+
+    /// The error-carrying face: a bank torn down under a live handle (a
+    /// drain race — the host is shutting down while a wave is in flight)
+    /// surfaces as an `Err` the caller can answer or fail over, instead
+    /// of panicking the thread that holds the handle.
+    fn try_drift(&mut self, x: &Tensor, t: f32) -> anyhow::Result<Tensor> {
         self.tx
             .send(DriftRequest { x: x.clone(), t, tag: 0, reply: self.reply_tx.clone() })
-            .expect("engine bank closed");
-        self.reply_rx.recv().expect("engine bank dropped in-flight request").1
+            .map_err(|_| anyhow::anyhow!("engine bank '{}' closed", self.name))?;
+        match self.reply_rx.recv() {
+            Ok((_, f)) => Ok(f),
+            Err(_) => {
+                Err(anyhow::anyhow!("engine bank '{}' dropped an in-flight request", self.name))
+            }
+        }
     }
 
     /// Pipelined client-side batch: enqueue everything first (so the bank
     /// can fuse the whole set), then reassemble replies by tag — the bank
     /// may split the set across physical engines and answer out of order.
-    fn drift_batch(&mut self, xs: &[Tensor], ts: &[f32]) -> Vec<Tensor> {
+    fn try_drift_batch(&mut self, xs: &[Tensor], ts: &[f32]) -> anyhow::Result<Vec<Tensor>> {
         assert_eq!(xs.len(), ts.len(), "drift_batch length mismatch");
         for (i, (x, &t)) in xs.iter().zip(ts).enumerate() {
             self.tx
                 .send(DriftRequest { x: x.clone(), t, tag: i, reply: self.reply_tx.clone() })
-                .expect("engine bank closed");
+                .map_err(|_| anyhow::anyhow!("engine bank '{}' closed", self.name))?;
         }
         let mut out: Vec<Option<Tensor>> = (0..xs.len()).map(|_| None).collect();
         for _ in 0..xs.len() {
-            let (tag, f) = self.reply_rx.recv().expect("engine bank dropped in-flight request");
+            let (tag, f) = self.reply_rx.recv().map_err(|_| {
+                anyhow::anyhow!("engine bank '{}' dropped an in-flight request", self.name)
+            })?;
             out[tag] = Some(f);
         }
-        out.into_iter().map(|f| f.expect("missing batched reply")).collect()
+        Ok(out.into_iter().map(|f| f.expect("missing batched reply")).collect())
     }
 
     fn name(&self) -> &str {

@@ -22,9 +22,10 @@
 //! engine hosts without a restart. Each worker's [`FailoverEngine`] picks
 //! the healthy member minimizing `(engines placed + 1) × observed
 //! latency` — remote members are priced by their measured wave RTT
-//! (`remote_rtt_us`), local members by mean engine exec time, and members
-//! with no signal yet tie-break in round-robin order so cold sets still
-//! spread evenly. An engine sticks to its member until a wave fails (host
+//! (`remote_rtt_us`, seeded from the hello-handshake round trip until the
+//! first wave lands so a fresh host never scores 0), local members by
+//! mean engine exec time, and exact ties tie-break in round-robin order
+//! so cold sets still spread evenly. An engine sticks to its member until a wave fails (host
 //! death, send error, wave timeout); then its in-flight requests requeue
 //! onto the best surviving member and the dead bank's pump redials with
 //! exponential backoff. Because drifts are pure functions, re-executing a
@@ -337,6 +338,7 @@ fn establish(
     shared: &RemoteShared,
 ) -> Result<Arc<dyn Transport>> {
     let t = connector.connect()?;
+    let t_hello = Instant::now();
     t.send(&wire::hello_request())?;
     let deadline = Instant::now() + opts.wave_timeout;
     loop {
@@ -396,6 +398,11 @@ fn establish(
                     }
                 }
                 shared.remote_engines.store(hello.engines, Ordering::Relaxed);
+                // The handshake round trip seeds the placement latency
+                // signal, so a host that has served no waves yet scores
+                // at a realistic network RTT instead of 0 (which would
+                // herd every fresh engine onto it).
+                shared.rstats.seed_rtt(t_hello.elapsed().as_micros() as u64);
                 return Ok(t);
             }
             op::ERROR => {
@@ -599,8 +606,11 @@ impl Member {
         }
     }
 
-    /// Observed per-wave latency in µs (0.0 = no signal yet): measured
-    /// wave RTT for remote members, mean engine exec time for local ones.
+    /// Observed per-wave latency in µs: measured wave RTT for remote
+    /// members (seeded from the handshake round trip until the first wave
+    /// lands, so an unmeasured host never scores 0 and herds placement),
+    /// mean engine exec time for local ones (0.0 until the first batch —
+    /// [`pick_member`] floors the term).
     fn latency_us(&self) -> f64 {
         match self {
             Member::Local { stats, .. } => stats.mean_exec_us(),
@@ -928,7 +938,12 @@ impl FailoverEngine {
         if let Some(id) = self.member_id.take() {
             let members = self.shared.members.lock().unwrap();
             if let Some(m) = members.iter().find(|m| m.id == id) {
-                m.placed.fetch_sub(1, Ordering::Relaxed);
+                // Saturating: a detach/reattach race that reuses the slot
+                // must not wrap the counter to usize::MAX and repel every
+                // future placement from this member.
+                let _ = m.placed.fetch_update(Ordering::Relaxed, Ordering::Relaxed, |p| {
+                    Some(p.saturating_sub(1))
+                });
             }
         }
     }
@@ -1002,16 +1017,28 @@ impl FailoverEngine {
                             }
                         },
                     };
-                    Ok(client.drift_batch(xs, ts))
+                    // The fallible face: a local bank torn down under a
+                    // live handle (a drain race) fails over like a dead
+                    // remote instead of panicking the worker.
+                    client.try_drift_batch(xs, ts)
                 }
             };
             match attempt {
                 Ok(outs) => return Ok(outs),
-                Err(_) => {
+                Err(e) => {
                     // Re-place onto the best surviving member; the failed
-                    // bank's pump is already redialling.
+                    // bank's pump is already redialling. Bounded: a set
+                    // whose every member keeps failing instantly (e.g. a
+                    // torn-down local bank) errors out instead of
+                    // spinning forever.
                     self.shared.rstats.on_failover();
                     self.release();
+                    if t0.elapsed() >= ALL_DEAD_TIMEOUT {
+                        return Err(anyhow!(
+                            "{}: every engine bank keeps failing (last: {e:#})",
+                            self.name
+                        ));
+                    }
                 }
             }
         }
@@ -1030,11 +1057,17 @@ impl DriftEngine for FailoverEngine {
     }
 
     fn drift(&mut self, x: &Tensor, t: f32) -> Tensor {
-        self.try_drift(x, t).expect("every engine bank unavailable")
+        // The infallible face exists for callers that cannot carry errors
+        // (theory code, unit tests). Every serving path — pool workers,
+        // engine-host wave handlers — uses `try_drift`, whose error rides
+        // the worker reply as a structured `bank_unavailable` instead.
+        self.try_drift(x, t)
+            .unwrap_or_else(|e| panic!("{}: {e:#} (serving paths use try_drift)", self.name))
     }
 
     fn drift_batch(&mut self, xs: &[Tensor], ts: &[f32]) -> Vec<Tensor> {
-        self.try_drift_batch(xs, ts).expect("every engine bank unavailable")
+        self.try_drift_batch(xs, ts)
+            .unwrap_or_else(|e| panic!("{}: {e:#} (serving paths use try_drift_batch)", self.name))
     }
 
     fn try_drift(&mut self, x: &Tensor, t: f32) -> Result<Tensor> {

@@ -32,6 +32,7 @@
 //! | `register`    | 10   | JSON registration                | `register_ok` (11)    |
 //! | `state_push`  | 12   | binary job checkpoint            | `state_push` (12, empty)|
 //! | `state_pull`  | 13   | empty (header id = job)          | `state_push` (12)     |
+//! | `drain_notice`| 14   | JSON reclaim notice              | `register_ok` (11)    |
 //! | `error`       | 9    | UTF-8 message                    | —                     |
 //!
 //! Control payloads (`hello_ok`, `bank_stats_reply`, `register`) are
@@ -101,6 +102,13 @@ pub mod op {
     /// Retrieve (and drop) a parked checkpoint; empty payload, header id =
     /// job id. Replied to with a loaded `state_push`.
     pub const STATE_PULL: u8 = 13;
+    /// An engine host announcing on its **registration** connection that it
+    /// is draining itself (spot reclaim, SIGTERM, operator deadline): the
+    /// scheduler must stop placing waves on it, requeue what is in flight,
+    /// pull any parked state it wants to keep, and deregister the host.
+    /// JSON payload; acknowledged with `register_ok` so pre-14 peers that
+    /// never send the op need no new reply path.
+    pub const DRAIN_NOTICE: u8 = 14;
 }
 
 /// Human-readable opcode name for logs and error replies.
@@ -119,6 +127,7 @@ pub fn op_name(code: u8) -> &'static str {
         op::REGISTER_OK => "register_ok",
         op::STATE_PUSH => "state_push",
         op::STATE_PULL => "state_pull",
+        op::DRAIN_NOTICE => "drain_notice",
         _ => "unknown",
     }
 }
@@ -555,6 +564,74 @@ pub fn register_ok() -> Frame {
     Frame::new(op::REGISTER_OK, 0, Vec::new())
 }
 
+/// A host-initiated self-drain announcement, sent on the registration
+/// connection when the host detects local pressure (spot reclaim notice,
+/// SIGTERM, or an operator-set deadline). Names the registration it ends
+/// and why, plus the job ids of every checkpoint the host still has
+/// parked, so the scheduler can `state_pull` each one off the dying host
+/// before the grace window closes.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct DrainNotice {
+    /// Preset the draining host was serving.
+    pub model: String,
+    /// The advertise address the host registered under (the scheduler
+    /// re-derives the connector label from it exactly like `register`).
+    pub advertise: String,
+    /// Why the host is draining: `"sigterm"`, `"reclaim_deadline"`,
+    /// `"probe"`, or any future probe-supplied string.
+    pub reason: String,
+    /// Job ids of checkpoints still parked on the host at notice time —
+    /// state the scheduler loses unless it pulls them before the host
+    /// exits.
+    pub parked_jobs: Vec<u64>,
+}
+
+/// Build a `drain_notice` frame.
+pub fn drain_notice(n: &DrainNotice) -> Frame {
+    Frame::control(
+        op::DRAIN_NOTICE,
+        0,
+        &Json::obj(vec![
+            ("model", Json::str(&n.model)),
+            ("advertise", Json::str(&n.advertise)),
+            ("reason", Json::str(&n.reason)),
+            (
+                "parked_jobs",
+                Json::arr(n.parked_jobs.iter().map(|&id| Json::num(id as f64)).collect()),
+            ),
+        ]),
+    )
+}
+
+/// Parse a `drain_notice` frame (scheduler side).
+pub fn parse_drain_notice(frame: &Frame) -> Result<DrainNotice, String> {
+    if frame.op != op::DRAIN_NOTICE {
+        return Err(format!("expected a drain_notice frame, got {}", op_name(frame.op)));
+    }
+    let j = frame.json()?;
+    let model = j
+        .get("model")
+        .and_then(|v| v.as_str().map(str::to_string))
+        .ok_or("drain_notice: missing model")?;
+    let advertise = j
+        .get("advertise")
+        .and_then(|v| v.as_str().map(str::to_string))
+        .ok_or("drain_notice: missing advertise")?;
+    let reason = j
+        .get("reason")
+        .and_then(|v| v.as_str().map(str::to_string))
+        .ok_or("drain_notice: missing reason")?;
+    let parked_jobs = match j.get("parked_jobs").and_then(|v| v.as_arr()) {
+        Some(arr) => arr
+            .iter()
+            .map(|v| v.as_f64().map(|n| n as u64).ok_or("drain_notice: non-numeric parked job id"))
+            .collect::<Result<Vec<u64>, _>>()
+            .map_err(str::to_string)?,
+        None => Vec::new(),
+    };
+    Ok(DrainNotice { model, advertise, reason, parked_jobs })
+}
+
 /// A liveness probe.
 pub fn ping() -> Frame {
     Frame::new(op::PING, 0, Vec::new())
@@ -868,6 +945,23 @@ mod tests {
         assert_eq!(ping().op, op::PING);
         assert_eq!(pong().op, op::PONG);
         assert_eq!(bank_stats_request().op, op::BANK_STATS);
+    }
+
+    #[test]
+    fn drain_notice_roundtrip() {
+        let n = DrainNotice {
+            model: "gauss-mix".into(),
+            advertise: "127.0.0.1:7078".into(),
+            reason: "sigterm".into(),
+            parked_jobs: vec![7, 42, 9001],
+        };
+        let f = drain_notice(&n);
+        assert_eq!(f.op, op::DRAIN_NOTICE);
+        let (f, _) = Frame::decode(&f.encode()).unwrap();
+        assert_eq!(parse_drain_notice(&f).unwrap(), n);
+        assert_eq!(op_name(op::DRAIN_NOTICE), "drain_notice");
+        // A wrong-op frame is rejected up front.
+        assert!(parse_drain_notice(&ping()).unwrap_err().contains("drain_notice"));
     }
 
     #[test]

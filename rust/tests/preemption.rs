@@ -21,6 +21,17 @@
 //! paradigm: its checkpoints land on sweep boundaries instead of lockstep
 //! boundaries, but the serving contract is the same — a preemption costs
 //! wall-clock time, never numerics.
+//!
+//! Scenarios 5–6 cover host-initiated self-drains (spot reclaim):
+//!
+//! 5. a reclaim notice on a host with in-flight waves *and* a parked
+//!    checkpoint completes with zero failed jobs — the scheduler rescues
+//!    the checkpoint onto the surviving host, waves migrate, and the
+//!    resumed checkpoint is bitwise identical (`self_drains` / `reclaims`
+//!    / `drain_grace_us` surface in `queue_stats`);
+//! 6. when every survivor refuses the rescued bytes (scripted
+//!    [`FaultyConnector`] faults), the scheduler holds them and flushes
+//!    them to the next host that registers for the model.
 
 mod common;
 
@@ -30,11 +41,14 @@ use chords::coordinator::{
     JobCheckpoint, PauseFlag, RunOutcome,
 };
 use chords::engine::{EngineFactory, GaussMixtureFactory};
-use chords::server::{pull_state, push_state, EngineHost, GenRequest, RegistrationServer, Router};
+use chords::server::{
+    pull_state, push_state, EngineHost, GenRequest, RegistrationServer, RegistrationSink, Router,
+};
 use chords::solvers::{Euler, TimeGrid};
 use chords::tensor::Tensor;
 use chords::util::rng::Rng;
-use chords::workers::{BatchOpts, CorePool};
+use chords::workers::transport::testutil::FaultyConnector;
+use chords::workers::{wire, BatchOpts, CorePool, TcpConnector};
 use common::wait_for;
 use std::sync::atomic::Ordering;
 use std::sync::Arc;
@@ -341,4 +355,266 @@ fn drain_host_migrates_in_flight_waves_with_zero_failures() {
     // Drain ≠ kill: the host process is still alive and could re-register;
     // dropping it here is a clean shutdown, not a crash recovery.
     drop(h);
+}
+
+/// Scenario 5: a spot reclaim hits a host that holds in-flight waves *and*
+/// a parked checkpoint. The host announces `drain_notice`; the scheduler
+/// rescues the checkpoint onto the surviving host and detaches the member,
+/// so the running job finishes with zero failures and the checkpoint
+/// resumes bitwise identical from its new home.
+#[test]
+fn self_drain_rescues_parked_checkpoint_with_zero_failures() {
+    let req = GenRequest {
+        model: "gauss-mix-slow".into(),
+        steps: 60,
+        cores: 4,
+        seed: 21,
+        ..GenRequest::default()
+    };
+    let want = {
+        let idle = Router::with_opts(
+            "artifacts",
+            ServeConfig { total_cores: 4, ..ServeConfig::default() },
+        );
+        idle.generate(&req, |_, _, _| {}).unwrap()
+    };
+
+    let router = Arc::new(Router::with_opts(
+        "artifacts",
+        ServeConfig { total_cores: 4, ..ServeConfig::default() },
+    ));
+    let reg = RegistrationServer::serve(
+        Arc::new(router.dispatcher().host_registry()),
+        "127.0.0.1",
+        0,
+    )
+    .unwrap();
+    let metrics = router.dispatcher().metrics().clone();
+    let p = chords::config::preset("gauss-mix-slow").unwrap();
+    let opts = BatchOpts { engines: 2, max_batch: 8, linger: Duration::from_micros(100) };
+    let mut h_a = EngineHost::new(
+        chords::engine::factory_for(p, "artifacts").unwrap(),
+        "gauss-mix-slow",
+        opts.clone(),
+    )
+    .unwrap();
+    let mut h_b = EngineHost::new(
+        chords::engine::factory_for(p, "artifacts").unwrap(),
+        "gauss-mix-slow",
+        opts,
+    )
+    .unwrap();
+    let addr_a = h_a.serve_tcp("127.0.0.1", 0).unwrap();
+    let addr_b = h_b.serve_tcp("127.0.0.1", 0).unwrap();
+    let label_a = format!("tcp:{addr_a}");
+    h_a.register_with(&reg.addr().to_string(), &addr_a.to_string());
+    h_b.register_with(&reg.addr().to_string(), &addr_b.to_string());
+    wait_for("both hosts to register", || {
+        metrics.hosts_registered.load(Ordering::Relaxed) >= 2
+    });
+
+    // Park a checkpoint on the doomed host: an unrelated half-run job whose
+    // owner intends to pull it back later (the host never decodes it).
+    let k = 4;
+    let n = 30;
+    let factory: Arc<dyn EngineFactory> = Arc::new(GaussMixtureFactory::standard(vec![8], 3, 0));
+    let pool = CorePool::builder(k).factory(factory).rule(Arc::new(Euler)).build().unwrap();
+    let cfg = ChordsConfig::new(
+        discrete_init_sequence(&InitStrategy::Calibrated, k, n),
+        TimeGrid::uniform(n),
+    );
+    let mut rng = Rng::seeded(77);
+    let x0 = Tensor::randn(&[8], &mut rng);
+    let ckpt_want = ChordsExecutor::new(&pool, cfg.clone()).run(&x0);
+    let pause = PauseFlag::new();
+    pause.raise();
+    let mut ckpt = JobCheckpoint::fresh(&x0, k);
+    for _ in 0..n / 2 {
+        let exec = ChordsExecutor::new(&pool, cfg.clone());
+        match exec.run_from(ckpt, |_| {}, |_| {}, Some(&pause)).unwrap() {
+            RunOutcome::Paused(c) => ckpt = c,
+            RunOutcome::Done(_) => panic!("job finished before the parking point"),
+        }
+    }
+    push_state(&*h_a.connector(), 7, ckpt.to_bytes()).unwrap();
+
+    let member = |label: &str| {
+        router
+            .queue_stats()
+            .get("banks")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .find(|b| b.get("bank").unwrap().as_str() == Some(label))
+            .cloned()
+    };
+
+    // Live traffic on the doomed host before the reclaim lands.
+    let r2 = router.clone();
+    let req2 = req.clone();
+    let job = std::thread::spawn(move || r2.generate(&req2, |_, _, _| {}).unwrap());
+    wait_for("waves to land on the doomed host", || {
+        member(&label_a)
+            .map(|m| m.get("waves").unwrap().as_usize().unwrap() >= 1)
+            .unwrap_or(false)
+    });
+
+    // The reclaim notice: host A detects pressure and drains itself.
+    h_a.trigger_drain("spot-reclaim");
+    assert!(h_a.wait_drained(Duration::from_secs(10)), "drain handshake never completed");
+    wait_for("rescue to surface in queue_stats", || {
+        let j = router.queue_stats();
+        j.get("self_drains").unwrap().as_usize().unwrap() >= 1
+            && j.get("reclaims").unwrap().as_usize().unwrap() >= 1
+    });
+
+    // Zero failed jobs: outstanding waves requeued onto the survivors.
+    let res = job.join().unwrap();
+    assert_identical(&res, &want, "job in flight across the reclaim");
+
+    let j = router.queue_stats();
+    assert!(j.get("drain_grace_us").unwrap().as_usize().unwrap() >= 1, "{j:?}");
+    assert!(member(&label_a).is_none(), "reclaimed host must leave the failover set");
+    assert!(
+        !j.get("hosts")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .any(|h| h.get("host").unwrap().as_str() == Some(&label_a)),
+        "reclaimed host must leave the registration table: {j:?}"
+    );
+
+    // The parked checkpoint moved: host A's copy is gone, the survivor
+    // serves it, and the resume is bitwise identical to the uninterrupted
+    // run.
+    assert!(pull_state(&*h_a.connector(), 7).is_err(), "rescue must consume host A's copy");
+    let bytes = pull_state(&*h_b.connector(), 7).expect("survivor must hold the rescued bytes");
+    let resumed = JobCheckpoint::from_bytes(&bytes).unwrap();
+    let pool_b = CorePool::builder(k)
+        .factory(Arc::new(GaussMixtureFactory::standard(vec![8], 3, 0)) as Arc<dyn EngineFactory>)
+        .rule(Arc::new(Euler))
+        .build()
+        .unwrap();
+    let outcome = ChordsExecutor::new(&pool_b, cfg).run_from(resumed, |_| {}, |_| {}, None).unwrap();
+    let RunOutcome::Done(got) = outcome else { panic!("resume leg must finish") };
+    assert_identical(&got, &ckpt_want, "checkpoint resumed after the rescue");
+}
+
+/// Scenario 6: every survivor refuses the rescued bytes (scripted connector
+/// faults), so the scheduler holds them and flushes them to the next host
+/// that registers for the model — the "newly registered host" leg of the
+/// rescue path.
+#[test]
+fn rescued_checkpoint_flushes_to_newly_registered_host() {
+    let k = 4;
+    let n = 30;
+    // Dims match the "gauss-mix" preset ([tokens, channels] = [1, 16]):
+    // `register` validates advertised dims against the preset.
+    let factory: Arc<dyn EngineFactory> =
+        Arc::new(GaussMixtureFactory::standard(vec![1, 16], 3, 0));
+    let pool = CorePool::builder(k)
+        .factory(factory.clone())
+        .rule(Arc::new(Euler))
+        .build()
+        .unwrap();
+    let cfg = ChordsConfig::new(
+        discrete_init_sequence(&InitStrategy::Calibrated, k, n),
+        TimeGrid::uniform(n),
+    );
+    let mut rng = Rng::seeded(88);
+    let x0 = Tensor::randn(&[1, 16], &mut rng);
+    let want = ChordsExecutor::new(&pool, cfg.clone()).run(&x0);
+    let pause = PauseFlag::new();
+    pause.raise();
+    let mut ckpt = JobCheckpoint::fresh(&x0, k);
+    for _ in 0..n / 2 {
+        let exec = ChordsExecutor::new(&pool, cfg.clone());
+        match exec.run_from(ckpt, |_| {}, |_| {}, Some(&pause)).unwrap() {
+            RunOutcome::Paused(c) => ckpt = c,
+            RunOutcome::Done(_) => panic!("job finished before the parking point"),
+        }
+    }
+
+    let router = Router::with_opts(
+        "artifacts",
+        ServeConfig { total_cores: 4, ..ServeConfig::default() },
+    );
+    let registry = router.dispatcher().host_registry();
+    let metrics = router.dispatcher().metrics().clone();
+    let opts = BatchOpts { engines: 1, max_batch: 4, linger: Duration::from_micros(50) };
+
+    // The doomed host, registered over real TCP, holding the checkpoint.
+    let mut h_a = EngineHost::new(factory.clone(), "gauss-mix", opts.clone()).unwrap();
+    let addr_a = h_a.serve_tcp("127.0.0.1", 0).unwrap().to_string();
+    push_state(&*h_a.connector(), 7, ckpt.to_bytes()).unwrap();
+    registry
+        .register(
+            &wire::Registration {
+                model: "gauss-mix".into(),
+                dims: vec![1, 16],
+                engines: 1,
+                capacity: 4,
+                advertise: addr_a.clone(),
+            },
+            Arc::new(TcpConnector::new(&addr_a)),
+        )
+        .unwrap();
+
+    // The only survivor refuses every connection (scripted permanent
+    // death), so the rescue cannot re-park the bytes anywhere.
+    let faulty = FaultyConnector::wrap(
+        Arc::new(TcpConnector::new("127.0.0.1:9")),
+        0,
+        Some(0),
+        Vec::new(),
+    );
+    registry
+        .register(
+            &wire::Registration {
+                model: "gauss-mix".into(),
+                dims: vec![1, 16],
+                engines: 1,
+                capacity: 8,
+                advertise: "127.0.0.1:9".into(),
+            },
+            faulty.clone(),
+        )
+        .unwrap();
+
+    let notice = wire::DrainNotice {
+        model: "gauss-mix".into(),
+        advertise: addr_a.clone(),
+        reason: "spot-reclaim".into(),
+        parked_jobs: vec![7],
+    };
+    assert!(registry.drain_notice(&notice), "the doomed host was registered");
+    assert_eq!(metrics.self_drains.load(Ordering::Relaxed), 1);
+    assert_eq!(metrics.reclaims.load(Ordering::Relaxed), 1);
+    assert!(faulty.attempts() >= 1, "the rescue must try the survivor first");
+    assert!(pull_state(&*h_a.connector(), 7).is_err(), "rescue must consume host A's copy");
+
+    // A fresh host registers for the model: the held bytes flush to it and
+    // the checkpoint resumes bitwise identical.
+    let mut h_c = EngineHost::new(factory.clone(), "gauss-mix", opts).unwrap();
+    let addr_c = h_c.serve_tcp("127.0.0.1", 0).unwrap().to_string();
+    registry
+        .register(
+            &wire::Registration {
+                model: "gauss-mix".into(),
+                dims: vec![1, 16],
+                engines: 1,
+                capacity: 4,
+                advertise: addr_c.clone(),
+            },
+            Arc::new(TcpConnector::new(&addr_c)),
+        )
+        .unwrap();
+    let bytes = pull_state(&*h_c.connector(), 7).expect("held bytes must flush on register");
+    let resumed = JobCheckpoint::from_bytes(&bytes).unwrap();
+    let pool_b = CorePool::builder(k).factory(factory).rule(Arc::new(Euler)).build().unwrap();
+    let outcome = ChordsExecutor::new(&pool_b, cfg).run_from(resumed, |_| {}, |_| {}, None).unwrap();
+    let RunOutcome::Done(got) = outcome else { panic!("resume leg must finish") };
+    assert_identical(&got, &want, "checkpoint flushed to the newly registered host");
 }
